@@ -1,0 +1,54 @@
+//! Regenerates the paper's efficiency figures (Figs. 4–6) at host scale:
+//! for each (C, K, Q, S, d) grid point, measure the BRGEMM kernel and the
+//! im2col library baseline, print host GFLOP/s + efficiency, and the
+//! machine-model projection onto the paper's CLX/CPX sockets.
+//!
+//! Run: `cargo run --release --example efficiency_sweep -- [fig4|fig5|fig6]`
+//! (A reduced grid by default; `dilconv sweep --figure fig4` runs the full
+//! one. Recorded output: EXPERIMENTS.md §FIG4–6.)
+
+use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
+use dilconv1d::conv1d::Backend;
+use dilconv1d::coordinator::experiment;
+use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
+
+fn main() {
+    let fig = std::env::args().nth(1).unwrap_or_else(|| "fig4".into());
+    let (grid, precision, machine) = match fig.as_str() {
+        "fig4" => (experiment::fig4_grid(), Precision::F32, MachineSpec::cascade_lake()),
+        "fig5" => (experiment::fig5_grid(), Precision::F32, MachineSpec::cascade_lake()),
+        "fig6" => (experiment::fig6_grid(), Precision::Bf16, MachineSpec::cooper_lake()),
+        other => panic!("unknown figure {other} (fig4|fig5|fig6)"),
+    };
+    // Reduced example grid: S ∈ {5, 51}, Q ≤ 20k (the full sweep is the
+    // `dilconv sweep` subcommand).
+    let grid: Vec<_> = grid
+        .into_iter()
+        .filter(|&(_, _, q, s, _)| (s == 5 || s == 51) && q <= 20_000)
+        .collect();
+    let host = calibrate_host();
+    println!("{fig}: host sustained ≈ {host:.2} GFLOP/s\n");
+    println!("  C   K      Q   S  d |   ours      GF/s   eff |  baseline  speedup | modeled eff (paper hw)");
+    let cfg = SweepConfig {
+        batch: 2,
+        reps: 3,
+        max_measured_q: 20_000,
+        host_gflops_peak: host,
+        threads: 1,
+    };
+    for (c, k, q, s, d) in grid {
+        let ours = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Brgemm, precision, &machine);
+        let base = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Im2col, Precision::F32, &machine);
+        println!(
+            "{c:>3} {k:>3} {q:>6} {s:>3} {d:>2} | {:>8.2}ms {:>7.2} {:>4.0}% | {:>8.2}ms  {:>5.2}x | ours {:>4.0}%  baseline {:>4.0}%",
+            ours.timing.median_secs * 1e3,
+            ours.host_gflops,
+            ours.host_eff * 100.0,
+            base.timing.median_secs * 1e3,
+            base.timing.median_secs / ours.timing.median_secs,
+            ours.modeled_eff * 100.0,
+            base.modeled_eff * 100.0,
+        );
+    }
+    println!("\nefficiency_sweep OK (paper shape: ours ≥ baseline whenever S≥5 ∧ Q≥1000 — eq. 4)");
+}

@@ -1,0 +1,104 @@
+//! Regenerates the paper's multi-socket scaling results (Figs. 8/9/10 and
+//! Table 2): measured data-parallel training over in-process "sockets"
+//! (real sharding + real ring all-reduce) at host scale, plus the machine
+//! model's projection of the paper-scale workload onto 1–16 CPX/CLX
+//! sockets and the 8×V100 comparison.
+//!
+//! Run: `cargo run --release --example multisocket_scaling`
+//! Recorded output: EXPERIMENTS.md §FIG8–10/T2.
+
+use dilconv1d::config::TrainConfig;
+use dilconv1d::coordinator::{experiment, Trainer};
+use dilconv1d::dist::{CommModel, Topology};
+use dilconv1d::machine::workload::{model_epoch, Workload};
+use dilconv1d::machine::{MachineSpec, Precision, Strategy};
+
+fn main() {
+    // ---- measured: real data-parallel replicas on this host ----
+    println!("== measured: in-process data-parallel training (scaled workload) ==");
+    println!("sockets | steps | train s | loss      | comm(model) s");
+    let mut params_per_socket = Vec::new();
+    for &sockets in &[1usize, 2, 4] {
+        let cfg = TrainConfig {
+            channels: 8,
+            n_blocks: 2,
+            filter_size: 15,
+            dilation: 4,
+            segment_width: 600,
+            segment_pad: 60,
+            train_segments: 16,
+            batch_size: 4,
+            epochs: 1,
+            sockets,
+            ..TrainConfig::default()
+        };
+        let mut t = Trainer::new(cfg).expect("trainer");
+        let r = t.run_epoch(0);
+        println!(
+            "{sockets:>7} | {:>5} | {:>7.2} | {:>9.5} | {:.4}",
+            r.steps, r.timing.train_secs, r.train_loss, r.modeled_comm_secs
+        );
+        params_per_socket.push(t.params().to_vec());
+    }
+    // Data-parallel correctness: identical trajectories regardless of P.
+    for (i, p) in params_per_socket.iter().enumerate().skip(1) {
+        let max_dev = p
+            .iter()
+            .zip(&params_per_socket[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_dev < 1e-3,
+            "socket count {} diverged from single-socket trajectory: {max_dev}",
+            [1, 2, 4][i]
+        );
+    }
+    println!("data-parallel trajectories identical across socket counts ✓\n");
+
+    // ---- modeled: paper-scale epoch on CPX, Figs. 8/9 ----
+    let w = Workload::paper();
+    let comm = CommModel::fabric();
+    for (label, prec) in [("Fig. 8 (FP32)", Precision::F32), ("Fig. 9 (BF16)", Precision::Bf16)] {
+        println!("== {label}: modeled CPX epoch, paper workload ==");
+        println!("sockets | batch | compute s | comm s | eval s | total s | speedup");
+        let t1 = model_epoch(&w, &MachineSpec::cooper_lake(), prec, Strategy::Brgemm, &Topology::xeon(1), &comm);
+        for &s in &[1usize, 2, 4, 8, 16] {
+            let t = model_epoch(&w, &MachineSpec::cooper_lake(), prec, Strategy::Brgemm, &Topology::xeon(s), &comm);
+            println!(
+                "{s:>7} | {:>5} | {:>9.1} | {:>6.2} | {:>6.1} | {:>7.1} | {:>5.2}x",
+                Topology::xeon(s).paper_batch_size(),
+                t.compute_secs,
+                t.comm_secs,
+                t.eval_secs,
+                t.total(),
+                t1.total() / t.total(),
+            );
+        }
+        println!();
+    }
+
+    // ---- Table 2 / Fig. 10: vs 8×V100 (162 s/epoch, AtacWorks paper) ----
+    println!("== Table 2: modeled vs paper (8 V100 = 162 s/epoch) ==");
+    println!("device   | prec | modeled s | modeled speedup | paper s | paper speedup");
+    for (dev, spec, prec, sockets) in [
+        ("16s CLX", MachineSpec::cascade_lake(), Precision::F32, 16usize),
+        ("16s CPX", MachineSpec::cooper_lake(), Precision::F32, 16),
+        ("8s CPX", MachineSpec::cooper_lake(), Precision::Bf16, 8),
+        ("16s CPX", MachineSpec::cooper_lake(), Precision::Bf16, 16),
+    ] {
+        let t = model_epoch(&w, &spec, prec, Strategy::Brgemm, &Topology::xeon(sockets), &comm);
+        let prec_s = if prec == Precision::F32 { "FP32" } else { "BF16" };
+        let paper = experiment::TABLE2
+            .iter()
+            .find(|r| r.device == dev && r.precision == prec_s)
+            .expect("paper row");
+        println!(
+            "{dev:<8} | {prec_s} | {:>9.1} | {:>14.2}x | {:>7.1} | {:>12.2}x",
+            t.total(),
+            162.0 / t.total(),
+            paper.time_per_epoch,
+            paper.speedup_vs_v100,
+        );
+    }
+    println!("\nmultisocket_scaling OK");
+}

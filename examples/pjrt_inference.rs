@@ -1,0 +1,75 @@
+//! AOT-artifact serving path: load the JAX-lowered HLO artifacts (L2/L1)
+//! from `artifacts/`, compile them on the PJRT CPU client, and run
+//! batched denoising + peak-calling inference from Rust — Python never
+//! runs here.
+//!
+//! Run `make artifacts` first, then:
+//! `cargo run --release --example pjrt_inference`
+
+use dilconv1d::data::atacseq::TrackConfig;
+use dilconv1d::data::make_batch;
+use dilconv1d::metrics::auroc;
+use dilconv1d::runtime::{Registry, Session, TrainState};
+
+fn main() -> anyhow::Result<()> {
+    let reg = match Registry::load("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping: {e:#}\n(run `make artifacts` first)");
+            return Ok(());
+        }
+    };
+    println!("artifact registry: {} entries", reg.artifacts.len());
+    let mut sess = Session::cpu()?;
+    println!("PJRT platform: {}", sess.platform());
+
+    let variant = if reg.artifacts.contains_key("eval_step_atacworks") {
+        "atacworks"
+    } else {
+        "tiny"
+    };
+    let mut st = TrainState::init(&reg, variant)?;
+    println!(
+        "model variant '{variant}': {} params, batch {}, width {}",
+        st.params.len(),
+        st.batch,
+        st.width
+    );
+    sess.load(&st.eval_key(), &reg.get(&st.eval_key())?.path)?;
+    sess.load(&st.train_key(), &reg.get(&st.train_key())?.path)?;
+
+    // Generate a synthetic batch at the artifact's width.
+    let mut track = TrackConfig::default().scaled(st.width);
+    track.pad = 0;
+    track.width = st.width;
+    let idx: Vec<u64> = (0..st.batch as u64).collect();
+    let b = make_batch(&track, 7, &idx);
+
+    // A few training steps through the AOT train_step (loss must drop)...
+    let mut first = None;
+    for i in 0..5 {
+        let l = st.step(&sess, &b.x, &b.clean, &b.peaks)?;
+        println!("train step {i}: loss {:.5} (mse {:.5}, bce {:.5})", l.total, l.mse, l.bce);
+        first.get_or_insert(l.total);
+    }
+
+    // ...then batched inference through the AOT eval_step.
+    let t0 = std::time::Instant::now();
+    let (denoised, probs) = st.eval(&sess, &b.x)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let a = auroc::auroc(&probs, &b.peaks);
+    println!(
+        "eval: {} tracks x {} bases in {:.1} ms  ({:.1} tracks/s)",
+        st.batch,
+        st.width,
+        dt * 1e3,
+        st.batch as f64 / dt
+    );
+    println!(
+        "denoised mean {:.3}, peak AUROC {}",
+        denoised.iter().sum::<f32>() / denoised.len() as f32,
+        a.map_or("n/a".into(), |v| format!("{v:.4}")),
+    );
+    println!("pjrt_inference OK");
+    Ok(())
+}

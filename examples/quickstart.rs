@@ -1,0 +1,64 @@
+//! Quickstart: build a 1D dilated convolution layer at the paper's
+//! AtacWorks shape (C=15, K=15, S=51, d=8), run forward + both backward
+//! passes, check the three backends agree, and print achieved GFLOP/s.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dilconv1d::bench_harness::time_fn;
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams};
+use dilconv1d::machine::gflops;
+
+fn main() {
+    // The paper's workhorse layer (Sec. 4.2): 15 channels, 15 filters,
+    // filter width 51, dilation 8, on a 10 000-wide padded input.
+    let (n, c, k, s, d, w) = (2, 15, 15, 51, 8, 10_000);
+    let p = ConvParams::new(n, c, k, w, s, d).expect("valid conv problem");
+    println!("problem: {p}  ({:.2} MFLOP/pass)", p.flops() as f64 / 1e6);
+
+    let weights = rnd(k * c * s, 1);
+    let x = rnd(n * c * w, 2);
+
+    let mut layer = Conv1dLayer::new(c, k, s, d, weights);
+    layer.backend = Backend::Brgemm;
+
+    // Forward (paper Algorithm 2).
+    let out = layer.forward(&x, n, w);
+    println!("forward: out ({n}, {k}, {})", p.q());
+
+    // Backends agree (BRGEMM vs im2col library-baseline vs direct oracle).
+    for backend in [Backend::Im2col, Backend::Direct] {
+        let mut alt = layer.clone();
+        alt.backend = backend;
+        let out2 = alt.forward(&x, n, w);
+        let max_err = out
+            .iter()
+            .zip(&out2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("{backend:?} agrees with BRGEMM: max abs err {max_err:.2e}");
+        assert!(max_err < 1e-3);
+    }
+
+    // Backward passes (Algorithms 3 and 4).
+    let gout = rnd(n * k * p.q(), 3);
+    let gin = layer.backward_data(&gout, n, w);
+    let gw = layer.backward_weight(&gout, &x, n, w);
+    println!("backward: grad_in {} elems, grad_w {} elems", gin.len(), gw.len());
+
+    // Timings per backend (the Fig. 4 story in miniature).
+    println!("\ntiming (median of 5):");
+    for backend in [Backend::Brgemm, Backend::Im2col, Backend::Direct] {
+        let mut l = layer.clone();
+        l.backend = backend;
+        let t = time_fn(1, 5, || {
+            std::hint::black_box(l.forward(&x, n, w));
+        });
+        println!(
+            "  {backend:?}: {:8.2} ms  ({:6.2} GFLOP/s)",
+            t.median_secs * 1e3,
+            gflops(p.flops(), t.median_secs),
+        );
+    }
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,249 @@
+"""AOT compile path: lower L2/L1 computations to HLO-text artifacts.
+
+Interchange format is HLO *text*, NOT `lowered.compile().serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the Rust
+`xla` crate's bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly.
+(See /opt/xla-example/README.md and gen_hlo.py there.)
+
+Emitted artifacts (artifacts/<name>.hlo.txt + artifacts/meta.json):
+
+  conv_fwd_<tag>        single dilated-conv forward at paper shapes
+  conv_bwd_data_<tag>   Algorithm-3 backward-data at the AtacWorks shape
+  conv_bwd_weight_<tag> Algorithm-4 backward-weight at the AtacWorks shape
+  eval_step_<model>     AtacWorks eval: (params, x) -> (denoised, peak_prob)
+  train_step_<model>    AtacWorks Adam step: full state in/out
+  grad_step_<model>     gradient-only step for the multi-socket coordinator
+  params_<model>        initial packed parameters (raw little-endian f32)
+
+`make artifacts` runs this once; the Rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.conv1d import conv1d_fwd
+from .kernels.conv1d_bwd import conv1d_bwd_data, conv1d_bwd_weight
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(shape, dtype="f32"):
+    return {"dtype": dtype, "shape": list(shape)}
+
+
+# ----------------------------------------------------------------- configs
+
+# Conv artifact shapes: (tag, N, C, K, Q, S, d) — paper-named corners.
+CONV_SHAPES = [
+    ("atac", 4, 15, 15, 1024, 51, 8),    # AtacWorks layer (width-scaled)
+    ("sq64", 2, 64, 64, 1024, 5, 1),     # Fig. 5 family
+    ("wide", 1, 32, 32, 4096, 9, 4),     # Fig. 6 family
+]
+
+# Model variants lowered for the Rust runtime. Width is scaled from the
+# paper's 60_000 so artifact compilation stays snappy; the native Rust
+# engine runs the full-width configuration.
+MODEL_VARIANTS = {
+    # name: (channels, n_blocks, filter, dilation, N, W)
+    "tiny": (15, 2, 51, 8, 2, 512),         # fast integration-test model
+    "atacworks": (15, 11, 51, 8, 2, 1024),  # full 25-layer architecture
+}
+
+
+def emit_conv_artifacts(outdir: Path, meta: dict) -> None:
+    for tag, n, c, k, q, s, d in CONV_SHAPES:
+        w_in = q + (s - 1) * d
+        x = _spec((n, c, w_in))
+        w_skc = _spec((s, k, c))
+        low = jax.jit(lambda xx, ww, dd=d: (conv1d_fwd(xx, ww, dd),)).lower(x, w_skc)
+        name = f"conv_fwd_{tag}"
+        (outdir / f"{name}.hlo.txt").write_text(to_hlo_text(low))
+        meta[name] = {
+            "kind": "conv_fwd",
+            "params": {"n": n, "c": c, "k": k, "q": q, "s": s, "d": d, "w": w_in},
+            "inputs": [_shape_entry((n, c, w_in)), _shape_entry((s, k, c))],
+            "outputs": [_shape_entry((n, k, q))],
+            "flops": ref.flops(n, c, k, q, s),
+        }
+
+    # Backward passes at the AtacWorks shape (runtime integration coverage;
+    # the parameter sweeps use the native Rust kernels).
+    tag, n, c, k, q, s, d = CONV_SHAPES[0]
+    w_in = q + (s - 1) * d
+    gout = _spec((n, k, q))
+    w_kcs = _spec((k, c, s))
+    x = _spec((n, c, w_in))
+
+    low = jax.jit(lambda g, w: (conv1d_bwd_data(g, w, d, w_in),)).lower(gout, w_kcs)
+    meta[f"conv_bwd_data_{tag}"] = {
+        "kind": "conv_bwd_data",
+        "params": {"n": n, "c": c, "k": k, "q": q, "s": s, "d": d, "w": w_in},
+        "inputs": [_shape_entry((n, k, q)), _shape_entry((k, c, s))],
+        "outputs": [_shape_entry((n, c, w_in))],
+        "flops": ref.flops(n, c, k, q, s),
+    }
+    (outdir / f"conv_bwd_data_{tag}.hlo.txt").write_text(to_hlo_text(low))
+
+    low = jax.jit(lambda g, xx: (conv1d_bwd_weight(g, xx, d, s),)).lower(gout, x)
+    meta[f"conv_bwd_weight_{tag}"] = {
+        "kind": "conv_bwd_weight",
+        "params": {"n": n, "c": c, "k": k, "q": q, "s": s, "d": d, "w": w_in},
+        "inputs": [_shape_entry((n, k, q)), _shape_entry((n, c, w_in))],
+        "outputs": [_shape_entry((k, c, s))],
+        "flops": ref.flops(n, c, k, q, s),
+    }
+    (outdir / f"conv_bwd_weight_{tag}.hlo.txt").write_text(to_hlo_text(low))
+
+
+def emit_model_artifacts(outdir: Path, meta: dict, variants=None) -> None:
+    for name, (ch, blocks, s, d, n, w) in MODEL_VARIANTS.items():
+        if variants and name not in variants:
+            continue
+        cfg = M.ModelConfig(channels=ch, n_blocks=blocks, filter_size=s, dilation=d)
+        spec, p_total = M.param_spec(cfg)
+        pvec = _spec((p_total,))
+        track = _spec((n, 1, w))
+        scalar = _spec(())
+
+        common = {
+            "model": {
+                "channels": ch,
+                "n_blocks": blocks,
+                "filter_size": s,
+                "dilation": d,
+                "n_conv_layers": cfg.n_conv_layers,
+                "param_count": p_total,
+                "param_spec": [
+                    {"name": nm, "shape": list(shp), "offset": off, "size": sz}
+                    for nm, shp, off, sz in spec
+                ],
+            },
+            "batch": n,
+            "width": w,
+        }
+
+        low = jax.jit(
+            lambda p, m, v, t, x, c_, pk: M.train_step(p, m, v, t, x, c_, pk, cfg)
+        ).lower(pvec, pvec, pvec, scalar, track, track, track)
+        meta[f"train_step_{name}"] = {
+            "kind": "train_step",
+            **common,
+            "inputs": [
+                _shape_entry((p_total,)),
+                _shape_entry((p_total,)),
+                _shape_entry((p_total,)),
+                _shape_entry(()),
+                _shape_entry((n, 1, w)),
+                _shape_entry((n, 1, w)),
+                _shape_entry((n, 1, w)),
+            ],
+            "outputs": [
+                _shape_entry((p_total,)),
+                _shape_entry((p_total,)),
+                _shape_entry((p_total,)),
+                _shape_entry(()),
+                _shape_entry(()),
+                _shape_entry(()),
+            ],
+        }
+        (outdir / f"train_step_{name}.hlo.txt").write_text(to_hlo_text(low))
+
+        low = jax.jit(lambda p, x: M.eval_step(p, x, cfg)).lower(pvec, track)
+        meta[f"eval_step_{name}"] = {
+            "kind": "eval_step",
+            **common,
+            "inputs": [_shape_entry((p_total,)), _shape_entry((n, 1, w))],
+            "outputs": [_shape_entry((n, 1, w)), _shape_entry((n, 1, w))],
+        }
+        (outdir / f"eval_step_{name}.hlo.txt").write_text(to_hlo_text(low))
+
+        low = jax.jit(
+            lambda p, x, c_, pk: M.grad_step(p, x, c_, pk, cfg)
+        ).lower(pvec, track, track, track)
+        meta[f"grad_step_{name}"] = {
+            "kind": "grad_step",
+            **common,
+            "inputs": [
+                _shape_entry((p_total,)),
+                _shape_entry((n, 1, w)),
+                _shape_entry((n, 1, w)),
+                _shape_entry((n, 1, w)),
+            ],
+            "outputs": [
+                _shape_entry((p_total,)),
+                _shape_entry(()),
+                _shape_entry(()),
+                _shape_entry(()),
+            ],
+        }
+        (outdir / f"grad_step_{name}.hlo.txt").write_text(to_hlo_text(low))
+
+        # Initial parameters for the Rust side (raw little-endian f32).
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        flat = M.pack(params, cfg)
+        np.asarray(flat, dtype="<f4").tofile(outdir / f"params_{name}.f32.bin")
+        meta[f"params_{name}"] = {
+            "kind": "params",
+            "file": f"params_{name}.f32.bin",
+            **common,
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=os.environ.get("ARTIFACTS_DIR", "../artifacts"))
+    ap.add_argument(
+        "--only",
+        choices=["conv", "model", "all"],
+        default="all",
+        help="restrict to conv or model artifacts",
+    )
+    ap.add_argument(
+        "--variants",
+        nargs="*",
+        default=None,
+        help="model variants to lower (default: all)",
+    )
+    args = ap.parse_args()
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    meta: dict = {}
+    meta_path = outdir / "meta.json"
+    if meta_path.exists():
+        meta = json.loads(meta_path.read_text())
+
+    if args.only in ("conv", "all"):
+        emit_conv_artifacts(outdir, meta)
+    if args.only in ("model", "all"):
+        emit_model_artifacts(outdir, meta, args.variants)
+
+    meta_path.write_text(json.dumps(meta, indent=2))
+    print(f"wrote {len(meta)} artifact entries to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Pallas forward kernel for the 1D dilated convolution layer.
+
+TPU re-think of the paper's BRGEMM algorithm (paper Sec. 3.1, Algorithm 2):
+
+  * The paper blocks the output width into 64-element panels so that one
+    GEMM dimension stays inside LIBXSMM's cache-friendly problem-size bound
+    ((m*n*k)^(1/3) <= 64) and the working set stays L2-resident.
+  * On TPU the analogous scratchpad is VMEM and the matmul engine is the
+    MXU systolic array.  The Pallas grid runs over (batch, width-blocks);
+    each grid step holds the whole (S, K, C) weight tensor plus one input
+    panel in VMEM and issues S MXU matmuls (K,C) x (C,WB) accumulated into
+    an f32 register/VMEM accumulator — literally BRGEMM with l_br = S
+    (paper eq. 3), where the A_i pointer array is the tap index s and the
+    B_i pointer array is the dilated panel offset q0 + s*d.
+  * The weight is relaid out (K,C,S) -> (S,K,C) exactly as the paper does,
+    so each tap's matmul is a contiguous (K,C) block.
+
+VMEM footprint per grid step (f32):
+    weight S*K*C*4  +  input panel C*(WB + (S-1)*d)*4  +  out block K*WB*4
+For the paper's AtacWorks shape (C=K=15, S=51, d=8, WB=64) that is
+~46 KB + ~28 KB + ~4 KB — far below the ~16 MB VMEM budget, leaving room
+for double buffering; see DESIGN.md §8.
+
+interpret=True throughout: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the Rust runtime
+can execute the same artifact (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 64  # paper's width block length (Sec. 3: "block length equal to 64")
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _fwd_kernel(x_ref, w_ref, o_ref, *, S: int, d: int, WB: int, acc_dtype):
+    """One (batch, width-block) grid step.
+
+    x_ref: (1, C, Wp)  — full padded input row for this batch element
+    w_ref: (S, K, C)   — relaid-out weight, fully VMEM-resident
+    o_ref: (1, K, WB)  — output block at width offset qb*WB
+    """
+    qb = pl.program_id(1)
+    q0 = qb * WB
+    k, c = w_ref.shape[1], w_ref.shape[2]
+    acc = jnp.zeros((k, WB), acc_dtype)
+    # BRGEMM with l_br = S: the s-loop is the batch-reduce dimension
+    # (paper Algorithm 2, lines 3-7). Unrolled: S is a compile-time constant,
+    # mirroring LIBXSMM's JIT specialization on the descriptor.
+    for s in range(S):
+        panel = pl.load(x_ref, (0, slice(None), pl.dslice(q0 + s * d, WB)))  # (C, WB)
+        acc += jax.lax.dot(
+            w_ref[s], panel, preferred_element_type=acc_dtype
+        )
+    o_ref[0, :, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block"))
+def conv1d_fwd(x: jnp.ndarray, w_skc: jnp.ndarray, d: int, block: int = DEFAULT_BLOCK):
+    """Valid dilated conv forward. x: (N, C, W) pre-padded; w_skc: (S, K, C).
+
+    Returns (N, K, Q) with Q = W - (S-1)*d.  Width is internally rounded up
+    to a multiple of `block`; the pad region is computed on zero input and
+    sliced away, so numerics match `ref.conv1d_ref` exactly.
+    """
+    n, c, w_in = x.shape
+    s, k, _ = w_skc.shape
+    q = ref.out_width(w_in, s, d)
+    qp = _cdiv(q, block) * block
+    wp = qp + (s - 1) * d
+    if wp > w_in:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w_in)))
+    grid = (n, qp // block)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, S=s, d=d, WB=block, acc_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, wp), lambda nb, qb: (nb, 0, 0)),
+            pl.BlockSpec((s, k, c), lambda nb, qb: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, block), lambda nb, qb: (nb, 0, qb)),
+        out_shape=jax.ShapeDtypeStruct((n, k, qp), x.dtype),
+        interpret=True,
+    )(x, w_skc)
+    return out[:, :, :q]
+
+
+def relayout_skc(w_kcs: jnp.ndarray) -> jnp.ndarray:
+    """Weight relayout (K, C, S) -> (S, K, C). Paper Sec. 3.1."""
+    return jnp.transpose(w_kcs, (2, 0, 1))
+
+
+def conv1d(x: jnp.ndarray, w_kcs: jnp.ndarray, d: int, block: int = DEFAULT_BLOCK):
+    """Convenience wrapper taking the framework-native (K, C, S) layout."""
+    return conv1d_fwd(x, relayout_skc(w_kcs), d, block)

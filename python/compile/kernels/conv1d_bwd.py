@@ -1,0 +1,118 @@
+"""Pallas backward kernels for the 1D dilated convolution layer.
+
+Backward-data (paper Sec. 3.2, Algorithm 3)
+-------------------------------------------
+The paper observes the backward-data pass "is very similar to the forward
+pass": relayout the weight from (K,C,S) to (S,C,K), zero-pad the output
+gradient, and run the same width-blocked BRGEMM with the tap pointers walked
+in reverse (B_ptrs[s] = &Grad_out[0, pos - (S-1-s)*d]).  We implement it
+exactly that way — by *reusing the forward Pallas kernel*:
+
+    dIn = conv1d_fwd( pad(Grad_out, (S-1)*d both sides),
+                      weight relaid out to (S, C, K) with taps reversed, d )
+
+which is algebraically identical to Algorithm 3 (substitute s' = S-1-s in
+the convolution sum; the (S-1)*d pad realizes the negative pointer offsets).
+
+Backward-weight (paper Sec. 3.3, Algorithm 4)
+---------------------------------------------
+A separate Pallas kernel: the grid runs over (batch, width-blocks) and every
+step accumulates S small GEMMs
+
+    Grad_w[s, :, :] += In[:, q0 + s*d : q0 + s*d + WB] @ Grad_out[:, q0:q0+WB]^T
+
+into a single VMEM-resident (S, C, K) accumulator block whose BlockSpec maps
+every grid step to the same block — the Pallas idiom for the paper's shared
+weight-gradient tensor (which it calls out as the efficiency-limiting pass
+because the accumulator must be shared across blocks/threads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .conv1d import DEFAULT_BLOCK, conv1d_fwd, _cdiv
+
+
+def relayout_sck_flipped(w_kcs: jnp.ndarray) -> jnp.ndarray:
+    """(K, C, S) -> (S, C, K) with the tap axis reversed.
+
+    This is the paper's Sec. 3.2 backward-data weight layout; the flip
+    realizes Algorithm 3's reversed pointer walk (S-1-s).
+    """
+    return jnp.transpose(w_kcs[:, :, ::-1], (2, 1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("d", "W", "block"))
+def conv1d_bwd_data(
+    gout: jnp.ndarray, w_kcs: jnp.ndarray, d: int, W: int, block: int = DEFAULT_BLOCK
+) -> jnp.ndarray:
+    """Data gradient. gout: (N, K, Q); w_kcs: (K, C, S); returns (N, C, W)."""
+    n, k, q = gout.shape
+    s = w_kcs.shape[2]
+    assert q == ref.out_width(W, s, d), (q, W, s, d)
+    pad = (s - 1) * d
+    gp = jnp.pad(gout, ((0, 0), (0, 0), (pad, pad)))
+    w_sck = relayout_sck_flipped(w_kcs)
+    return conv1d_fwd(gp, w_sck, d, block)
+
+
+def _bwd_w_kernel(x_ref, g_ref, gw_ref, *, S: int, d: int, WB: int):
+    """One (batch, width-block) grid step of Algorithm 4.
+
+    x_ref : (1, C, Wp)  — full padded input row for this batch element
+    g_ref : (1, K, WB)  — output-gradient block at offset qb*WB
+    gw_ref: (S, C, K)   — shared accumulator (same block for every step)
+    """
+    nb = pl.program_id(0)
+    qb = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(nb == 0, qb == 0))
+    def _init():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+
+    q0 = qb * WB
+    g_t = g_ref[0].T  # (WB, K)
+    for s in range(S):
+        panel = pl.load(x_ref, (0, slice(None), pl.dslice(q0 + s * d, WB)))  # (C, WB)
+        gw_ref[s, :, :] += jax.lax.dot(panel, g_t, preferred_element_type=gw_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "S", "block"))
+def conv1d_bwd_weight(
+    gout: jnp.ndarray, x: jnp.ndarray, d: int, S: int, block: int = DEFAULT_BLOCK
+) -> jnp.ndarray:
+    """Weight gradient. gout: (N, K, Q); x: (N, C, W) pre-padded.
+
+    Returns (K, C, S) — the framework-native layout; internally the
+    accumulator lives in the paper's (S, C, K) layout.
+    """
+    n, k, q = gout.shape
+    _, c, w_in = x.shape
+    assert q == ref.out_width(w_in, S, d)
+    qp = _cdiv(q, block) * block
+    wp = qp + (S - 1) * d
+    # Zero-pad both tensors: padded gradient columns are zero, so the extra
+    # blocks contribute nothing to the accumulator.
+    if qp > q:
+        gout = jnp.pad(gout, ((0, 0), (0, 0), (0, qp - q)))
+    if wp > w_in:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w_in)))
+    acc_dtype = jnp.float32  # f32 accumulation even for bf16 inputs
+    gw_sck = pl.pallas_call(
+        functools.partial(_bwd_w_kernel, S=S, d=d, WB=block),
+        grid=(n, qp // block),
+        in_specs=[
+            pl.BlockSpec((1, c, wp), lambda nb, qb: (nb, 0, 0)),
+            pl.BlockSpec((1, k, block), lambda nb, qb: (nb, 0, qb)),
+        ],
+        out_specs=pl.BlockSpec((S, c, k), lambda nb, qb: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, c, k), acc_dtype),
+        interpret=True,
+    )(x.astype(acc_dtype), gout.astype(acc_dtype))
+    return jnp.transpose(gw_sck, (2, 1, 0)).astype(x.dtype)  # (K, C, S)

@@ -1,0 +1,94 @@
+"""Pure-jnp/lax reference oracle for the 1D dilated convolution layer.
+
+These are the ground-truth implementations that the Pallas kernels
+(`conv1d.py`, `conv1d_bwd.py`) are validated against in pytest, and that the
+Rust native kernels are validated against through golden files.
+
+Conventions (paper, Sec. 2):
+  input   In     : (N, C, W)   -- batch, channels, width (ALREADY padded)
+  weight  Weight : (K, C, S)   -- filters, channels, filter width
+  output  Out    : (N, K, Q)   with Q = W - (S-1)*d   ("valid" convolution)
+  dilation d     : filter taps are applied to every d-th input element
+
+`same`-padding wrappers pad the input with (S-1)*d zeros split across both
+edges so that Q == W_unpadded, which is how the AtacWorks workload uses the
+layer (paper Sec. 4.2: 50_000-wide segments padded to 60_000).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "out_width",
+    "same_pad",
+    "conv1d_ref",
+    "conv1d_bwd_data_ref",
+    "conv1d_bwd_weight_ref",
+    "conv1d_vjp_ref",
+    "flops",
+]
+
+
+def out_width(w: int, s: int, d: int) -> int:
+    """Output width of a valid dilated 1D convolution. Paper eq. (2)."""
+    q = w - (s - 1) * d
+    if q <= 0:
+        raise ValueError(f"input width {w} too small for S={s}, d={d}")
+    return q
+
+
+def same_pad(s: int, d: int) -> tuple[int, int]:
+    """(left, right) zero padding so that Q == W."""
+    total = (s - 1) * d
+    return total // 2, total - total // 2
+
+
+def flops(n: int, c: int, k: int, q: int, s: int) -> int:
+    """MAC-based FLOP count of one pass (paper's efficiency denominator)."""
+    return 2 * n * c * k * q * s
+
+
+def conv1d_ref(x: jnp.ndarray, w: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Valid dilated 1D convolution via lax.conv_general_dilated.
+
+    x: (N, C, W) pre-padded input; w: (K, C, S); returns (N, K, Q).
+    Implements paper eq. (2): Out[k, q] = sum_c sum_s In[c, q + d*s] * W[k, c, s].
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1,),
+        padding="VALID",
+        rhs_dilation=(d,),
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+
+
+def conv1d_bwd_data_ref(gout: jnp.ndarray, w: jnp.ndarray, d: int, W: int) -> jnp.ndarray:
+    """Gradient of conv1d_ref w.r.t. x, computed with jax.vjp (exact oracle).
+
+    gout: (N, K, Q); w: (K, C, S); returns (N, C, W).
+    """
+    n, k, q = gout.shape
+    c = w.shape[1]
+    x0 = jnp.zeros((n, c, W), gout.dtype)
+    _, vjp = jax.vjp(lambda x: conv1d_ref(x, w, d), x0)
+    return vjp(gout)[0]
+
+
+def conv1d_bwd_weight_ref(gout: jnp.ndarray, x: jnp.ndarray, d: int, S: int) -> jnp.ndarray:
+    """Gradient of conv1d_ref w.r.t. w; returns (K, C, S)."""
+    k = gout.shape[1]
+    c = x.shape[1]
+    w0 = jnp.zeros((k, c, S), x.dtype)
+    _, vjp = jax.vjp(lambda w: conv1d_ref(x, w, d), w0)
+    return vjp(gout)[0]
+
+
+def conv1d_vjp_ref(x: jnp.ndarray, w: jnp.ndarray, gout: jnp.ndarray, d: int):
+    """(grad_x, grad_w) in one vjp call — used for end-to-end grad checks."""
+    _, vjp = jax.vjp(lambda x_, w_: conv1d_ref(x_, w_, d), x, w)
+    return vjp(gout)

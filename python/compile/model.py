@@ -1,0 +1,258 @@
+"""L2: AtacWorks-like 1D dilated-convolution ResNet in JAX.
+
+This is the end-to-end workload of the paper's Sec. 4.2/4.4: a 25-layer 1D
+CNN ("AtacWorks", Lal et al. 2019) that takes a noisy ATAC-seq coverage
+track segment (N, 1, W) and produces
+
+  * a denoised track      (N, 1, W)   — trained with MSE, and
+  * peak-call logits      (N, 1, W)   — trained with binary cross-entropy.
+
+Architecture (25 conv layers total, matching the paper's description that
+"most convolution layers have 15 channels, 15 filters, a filter size of 51,
+and a dilation of 8"):
+
+  stem:        conv 1 -> ch                                     (1 layer)
+  11 residual blocks: [conv ch->ch, ReLU, conv ch->ch] + skip   (22 layers)
+  reg head:    conv ch -> 1                                     (1 layer)
+  cls head:    conv ch -> 1                                     (1 layer)
+
+Every conv is the paper's 1D dilated convolution, evaluated through the L1
+Pallas kernels (conv1d.py / conv1d_bwd.py) wired up with jax.custom_vjp so
+the backward pass uses the paper's Algorithm 3/4 kernels rather than XLA's
+autodiff of the forward.
+
+All functions here are pure and jit-lowerable; `aot.py` lowers the train and
+eval steps to HLO text artifacts executed from the Rust runtime. Python
+never runs at training time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv1d import conv1d_fwd, relayout_skc
+from .kernels.conv1d_bwd import conv1d_bwd_data, conv1d_bwd_weight
+
+
+# --------------------------------------------------------------------------
+# Differentiable conv layer: Pallas forward, Pallas backward (Alg. 2/3/4)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv1d_layer(x: jnp.ndarray, w_kcs: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Valid dilated conv with paper-kernel forward AND backward passes."""
+    return conv1d_fwd(x, relayout_skc(w_kcs), d)
+
+
+def _conv1d_layer_fwd(x, w_kcs, d):
+    # custom_vjp fwd takes args in primal positions; nondiff args (d) are
+    # passed to the bwd rule as leading arguments.
+    return conv1d_layer(x, w_kcs, d), (x, w_kcs)
+
+
+def _conv1d_layer_bwd(d, res, gout):
+    x, w_kcs = res
+    s = w_kcs.shape[2]
+    gx = conv1d_bwd_data(gout, w_kcs, d, x.shape[2])
+    gw = conv1d_bwd_weight(gout, x, d, s)
+    return gx, gw
+
+
+conv1d_layer.defvjp(_conv1d_layer_fwd, _conv1d_layer_bwd)
+
+
+def conv1d_same(x: jnp.ndarray, w_kcs: jnp.ndarray, bias: jnp.ndarray, d: int):
+    """Same-padded conv + bias: Q == W. Bias add is the framework's job in
+    the paper (Sec. 3: "we do not implement the bias calculation ... but
+    instead use the framework's implementation"); here the framework is XLA."""
+    s = w_kcs.shape[2]
+    left, right = ref.same_pad(s, d)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (left, right)))
+    out = conv1d_layer(xp, w_kcs, d)
+    return out + bias[None, :, None]
+
+
+# --------------------------------------------------------------------------
+# Model definition
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """AtacWorks-like network hyperparameters (paper Sec. 4.2)."""
+
+    channels: int = 15       # 15 for FP32 runs, 16 for BF16 runs (Sec. 4.4)
+    n_blocks: int = 11       # 11 residual blocks -> 25 conv layers total
+    filter_size: int = 51
+    dilation: int = 8
+    dtype: Any = jnp.float32
+
+    @property
+    def n_conv_layers(self) -> int:
+        return 1 + 2 * self.n_blocks + 2  # stem + block convs + two heads
+
+    def layer_shapes(self):
+        """[(K, C, S)] for every conv layer, in parameter order."""
+        ch, s = self.channels, self.filter_size
+        shapes = [(ch, 1, s)]                        # stem
+        for _ in range(self.n_blocks):
+            shapes += [(ch, ch, s), (ch, ch, s)]     # residual block
+        shapes += [(1, ch, s), (1, ch, s)]           # reg head, cls head
+        return shapes
+
+
+def init_params(key, cfg: ModelConfig):
+    """He-initialised weights + zero biases, as a flat list of (w, b)."""
+    params = []
+    for shp in cfg.layer_shapes():
+        key, sub = jax.random.split(key)
+        k, c, s = shp
+        fan_in = c * s
+        w = jax.random.normal(sub, shp, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        params.append((w.astype(cfg.dtype), jnp.zeros((k,), cfg.dtype)))
+    return params
+
+
+def forward(params, x, cfg: ModelConfig):
+    """x: (N, 1, W) noisy track -> (denoised (N,1,W), peak logits (N,1,W))."""
+    d = cfg.dilation
+    it = iter(params)
+    w, b = next(it)
+    h = jax.nn.relu(conv1d_same(x, w, b, d))                 # stem
+    for _ in range(cfg.n_blocks):
+        w1, b1 = next(it)
+        w2, b2 = next(it)
+        r = jax.nn.relu(conv1d_same(h, w1, b1, d))
+        r = conv1d_same(r, w2, b2, d)
+        h = jax.nn.relu(h + r)                               # residual + ReLU
+    wr, br = next(it)
+    wc, bc = next(it)
+    denoised = conv1d_same(h, wr, br, d)
+    logits = conv1d_same(h, wc, bc, d)
+    return denoised, logits
+
+
+# --------------------------------------------------------------------------
+# Losses (paper Sec. 4.2: MSE for the denoised signal + BCE for peaks)
+# --------------------------------------------------------------------------
+
+
+def mse_loss(pred, target):
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))
+
+
+def bce_with_logits(logits, labels):
+    """Numerically-stable binary cross entropy on logits."""
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def loss_fn(params, batch, cfg: ModelConfig, mse_weight: float = 1.0, bce_weight: float = 1.0):
+    x, clean, peaks = batch
+    denoised, logits = forward(params, x, cfg)
+    l_mse = mse_loss(denoised, clean)
+    l_bce = bce_with_logits(logits, peaks)
+    return mse_weight * l_mse + bce_weight * l_bce, (l_mse, l_bce)
+
+
+# --------------------------------------------------------------------------
+# Flat parameter packing — the Rust runtime's ABI
+# --------------------------------------------------------------------------
+# The train/eval HLO artifacts take ONE flat f32 vector per state tensor
+# (params, adam m, adam v) so the Rust side never has to mirror the pytree.
+
+
+def param_spec(cfg: ModelConfig):
+    """([(name, shape, offset, size)], total) for the flat packing."""
+    spec = []
+    off = 0
+    for i, (k, c, s) in enumerate(cfg.layer_shapes()):
+        for suffix, shape in (("w", (k, c, s)), ("b", (k,))):
+            size = 1
+            for dim in shape:
+                size *= dim
+            spec.append((f"conv{i}.{suffix}", shape, off, size))
+            off += size
+    return spec, off
+
+
+def pack(params, cfg: ModelConfig) -> jnp.ndarray:
+    flat = []
+    for w, b in params:
+        flat.append(jnp.ravel(w).astype(jnp.float32))
+        flat.append(jnp.ravel(b).astype(jnp.float32))
+    return jnp.concatenate(flat)
+
+
+def unpack(flat: jnp.ndarray, cfg: ModelConfig):
+    spec, _total = param_spec(cfg)
+    params = []
+    i = 0
+    while i < len(spec):
+        _, wshape, woff, wsize = spec[i]
+        _, bshape, boff, bsize = spec[i + 1]
+        w = jnp.reshape(flat[woff : woff + wsize], wshape).astype(cfg.dtype)
+        b = jnp.reshape(flat[boff : boff + bsize], bshape).astype(cfg.dtype)
+        params.append((w, b))
+        i += 2
+    return params
+
+
+# --------------------------------------------------------------------------
+# Adam optimiser + train / eval steps (the AOT entry points)
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(flat_params, m, v, step, x, clean, peaks, cfg: ModelConfig, lr: float = 2e-4):
+    """One Adam step. All state is flat f32; returns new state + losses.
+
+    Signature (the Rust-side ABI, see runtime/step.rs):
+      in : params[f32 P], m[f32 P], v[f32 P], step[f32], x[N,1,W], clean[N,1,W], peaks[N,1,W]
+      out: (params', m', v', loss, mse, bce)
+    """
+
+    def packed_loss(flat):
+        l, aux = loss_fn(unpack(flat, cfg), (x, clean, peaks), cfg)
+        return l, aux
+
+    (loss, (l_mse, l_bce)), grads = jax.value_and_grad(packed_loss, has_aux=True)(
+        flat_params
+    )
+    t = step + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(grads)
+    mhat = m / (1.0 - jnp.power(ADAM_B1, t))
+    vhat = v / (1.0 - jnp.power(ADAM_B2, t))
+    new_params = flat_params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_params, m, v, loss, l_mse, l_bce
+
+
+def eval_step(flat_params, x, cfg: ModelConfig):
+    """Inference: returns (denoised, peak probabilities)."""
+    denoised, logits = forward(unpack(flat_params, cfg), x, cfg)
+    return denoised, jax.nn.sigmoid(logits.astype(jnp.float32))
+
+
+def grad_step(flat_params, x, clean, peaks, cfg: ModelConfig):
+    """Gradient-only step (no optimiser) — used by the multi-socket
+    coordinator, which all-reduces gradients across workers before applying
+    the optimiser centrally (paper Sec. 4.5 data-parallel training)."""
+
+    def packed_loss(flat):
+        l, aux = loss_fn(unpack(flat, cfg), (x, clean, peaks), cfg)
+        return l, aux
+
+    (loss, (l_mse, l_bce)), grads = jax.value_and_grad(packed_loss, has_aux=True)(
+        flat_params
+    )
+    return grads, loss, l_mse, l_bce

@@ -1,0 +1,238 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Covers the paper's parameter grid (Sec. 4.3): output width, channels,
+filters, filter width, and dilation, for f32 and bf16, via both a curated
+grid (paper-named shapes) and hypothesis-driven random sweeps.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv1d import conv1d, conv1d_fwd, relayout_skc
+from compile.kernels.conv1d_bwd import (
+    conv1d_bwd_data,
+    conv1d_bwd_weight,
+    relayout_sck_flipped,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _mk(n, c, k, w, s, d, dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (n, c, w), dtype)
+    wt = _rand(k2, (k, c, s), dtype) * (1.0 / np.sqrt(c * s))
+    q = ref.out_width(w, s, d)
+    g = _rand(k3, (n, k, q), dtype)
+    return x, wt, g, q
+
+
+# ---------------------------------------------------------------- shape math
+
+
+def test_out_width_valid():
+    assert ref.out_width(60000, 51, 8) == 60000 - 50 * 8
+    assert ref.out_width(17, 3, 3) == 11
+    assert ref.out_width(5, 1, 16) == 5  # S=1: dilation irrelevant
+
+
+def test_out_width_rejects_too_small():
+    with pytest.raises(ValueError):
+        ref.out_width(10, 5, 4)
+
+
+def test_same_pad_splits_total():
+    for s, d in [(51, 8), (5, 1), (9, 16), (1, 4), (2, 3)]:
+        l, r = ref.same_pad(s, d)
+        assert l + r == (s - 1) * d
+        assert 0 <= l <= r
+
+
+def test_flops_matches_paper_formula():
+    # 2*N*C*K*Q*S MACs->FLOPs
+    assert ref.flops(1, 15, 15, 1000, 51) == 2 * 15 * 15 * 1000 * 51
+
+
+# ---------------------------------------------------------------- relayouts
+
+
+def test_relayout_skc_roundtrip():
+    w = jnp.arange(4 * 3 * 5, dtype=jnp.float32).reshape(4, 3, 5)
+    skc = relayout_skc(w)
+    assert skc.shape == (5, 4, 3)
+    np.testing.assert_array_equal(np.transpose(skc, (1, 2, 0)), w)
+
+
+def test_relayout_sck_flip():
+    w = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4)
+    sck = relayout_sck_flipped(w)
+    assert sck.shape == (4, 3, 2)
+    for s in range(4):
+        np.testing.assert_array_equal(sck[s], np.asarray(w)[:, :, 3 - s].T)
+
+
+# ---------------------------------------------------------------- forward
+
+PAPER_GRID = [
+    # (n, c, k, q, s, d) — representative corners of Sec. 4.3's sweep sets
+    (2, 15, 15, 128, 51, 8),   # AtacWorks layer shape (scaled width)
+    (1, 64, 64, 256, 5, 1),    # Fig. 5 family
+    (2, 32, 32, 200, 9, 4),    # Fig. 6 family
+    (1, 1, 1, 64, 1, 1),       # degenerate minimum
+    (1, 4, 8, 100, 15, 2),     # non-square C/K, Q not multiple of 64
+    (3, 10, 16, 77, 21, 1),    # odd everything
+    (1, 8, 4, 640, 25, 16),    # large dilation
+    (2, 16, 16, 96, 2, 5),     # even-channel bf16-legal shape
+]
+
+
+@pytest.mark.parametrize("n,c,k,q,s,d", PAPER_GRID)
+def test_forward_matches_ref(n, c, k, q, s, d):
+    w_in = q + (s - 1) * d
+    x, wt, _, _ = _mk(n, c, k, w_in, s, d)
+    got = conv1d(x, wt, d)
+    want = ref.conv1d_ref(x, wt, d)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block", [16, 64, 128])
+def test_forward_block_size_invariance(block):
+    x, wt, _, _ = _mk(2, 6, 7, 150 + 4 * 4, 5, 4)
+    want = ref.conv1d_ref(x, wt, 4)
+    got = conv1d_fwd(x, relayout_skc(wt), 4, block=block)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_forward_bf16():
+    x, wt, _, _ = _mk(2, 16, 16, 128, 5, 2, dtype=jnp.bfloat16)
+    got = conv1d(x, wt, 2)
+    want = ref.conv1d_ref(x.astype(jnp.float32), wt.astype(jnp.float32), 2)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), want, rtol=3e-2, atol=3e-2
+    )
+
+
+def test_forward_identity_filter():
+    # S=1, single channel, unit weight: convolution is identity.
+    x = jnp.arange(96, dtype=jnp.float32).reshape(1, 1, 96)
+    wt = jnp.ones((1, 1, 1), jnp.float32)
+    np.testing.assert_allclose(conv1d(x, wt, 3), x)
+
+
+def test_forward_dilation_reach():
+    # A 2-tap dilated filter [1, 1] with dilation d computes x[q] + x[q+d].
+    d = 7
+    x = jnp.arange(80, dtype=jnp.float32).reshape(1, 1, 80)
+    wt = jnp.ones((1, 1, 2), jnp.float32)
+    got = conv1d(x, wt, d)
+    want = x[:, :, : 80 - d] + x[:, :, d:]
+    np.testing.assert_allclose(got, want)
+
+
+# ---------------------------------------------------------------- backward
+
+
+@pytest.mark.parametrize("n,c,k,q,s,d", PAPER_GRID)
+def test_bwd_data_matches_ref(n, c, k, q, s, d):
+    w_in = q + (s - 1) * d
+    x, wt, g, _ = _mk(n, c, k, w_in, s, d)
+    got = conv1d_bwd_data(g, wt, d, w_in)
+    want = ref.conv1d_bwd_data_ref(g, wt, d, w_in)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,c,k,q,s,d", PAPER_GRID)
+def test_bwd_weight_matches_ref(n, c, k, q, s, d):
+    w_in = q + (s - 1) * d
+    x, wt, g, _ = _mk(n, c, k, w_in, s, d)
+    got = conv1d_bwd_weight(g, x, d, s)
+    want = ref.conv1d_bwd_weight_ref(g, x, d, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bwd_matches_vjp_jointly():
+    x, wt, g, _ = _mk(2, 5, 6, 120, 9, 3, seed=7)
+    gx_ref, gw_ref = ref.conv1d_vjp_ref(x, wt, g, 3)
+    np.testing.assert_allclose(conv1d_bwd_data(g, wt, 3, 120), gx_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(conv1d_bwd_weight(g, x, 3, 9), gw_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_bwd_weight_accumulates_over_batch():
+    # grad_w of a batch == sum of per-sample grad_w
+    x, wt, g, _ = _mk(3, 4, 4, 100, 5, 2, seed=3)
+    full = conv1d_bwd_weight(g, x, 2, 5)
+    per = sum(
+        conv1d_bwd_weight(g[i : i + 1], x[i : i + 1], 2, 5) for i in range(3)
+    )
+    np.testing.assert_allclose(full, per, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- hypothesis sweeps
+
+shape_strategy = st.tuples(
+    st.integers(1, 3),       # n
+    st.integers(1, 12),      # c
+    st.integers(1, 12),      # k
+    st.integers(1, 150),     # q
+    st.integers(1, 9),       # s
+    st.integers(1, 8),       # d
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_forward_hypothesis(shape):
+    n, c, k, q, s, d = shape
+    w_in = q + (s - 1) * d
+    x, wt, _, _ = _mk(n, c, k, w_in, s, d, seed=q * 31 + s)
+    got = conv1d(x, wt, d)
+    want = ref.conv1d_ref(x, wt, d)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy)
+def test_backward_hypothesis(shape):
+    n, c, k, q, s, d = shape
+    w_in = q + (s - 1) * d
+    x, wt, g, _ = _mk(n, c, k, w_in, s, d, seed=q * 17 + d)
+    gx_ref, gw_ref = ref.conv1d_vjp_ref(x, wt, g, d)
+    np.testing.assert_allclose(
+        conv1d_bwd_data(g, wt, d, w_in), gx_ref, rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        conv1d_bwd_weight(g, x, d, s), gw_ref, rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 2),
+    st.sampled_from([2, 4, 8, 16]),
+    st.sampled_from([2, 4, 8, 16]),
+    st.integers(2, 60),
+    st.sampled_from([1, 3, 5]),
+    st.sampled_from([1, 2, 4]),
+)
+def test_forward_bf16_hypothesis(n, c, k, q, s, d):
+    # Paper Sec. 4.3: BF16 path requires even channels/filters/width.
+    q = q * 2
+    w_in = q + (s - 1) * d
+    x, wt, _, _ = _mk(n, c, k, w_in, s, d, dtype=jnp.bfloat16, seed=c * k + q)
+    got = np.asarray(conv1d(x, wt, d), np.float32)
+    want = ref.conv1d_ref(x.astype(jnp.float32), wt.astype(jnp.float32), d)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)

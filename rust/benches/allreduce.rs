@@ -1,0 +1,54 @@
+//! BENCH — Figs. 8/9 substrate: the ring all-reduce at the AtacWorks
+//! gradient size across rank counts, in-place and message-passing
+//! (threaded) variants, vs the naive reduce — plus the α–β model's
+//! prediction of the same collective between the paper's sockets.
+
+use dilconv1d::bench_harness::time_auto;
+use dilconv1d::dist::allreduce::{naive_allreduce, ring_allreduce, ring_allreduce_threaded};
+use dilconv1d::dist::CommModel;
+use dilconv1d::model::NetConfig;
+use dilconv1d::util::rng::Rng;
+
+fn bufs(p: usize, len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(7);
+    (0..p)
+        .map(|_| (0..len).map(|_| rng.normal(0.0, 1.0) as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let grad_len = NetConfig::default().param_count();
+    println!("allreduce bench: gradient length {grad_len} (the 25-layer AtacWorks model)");
+    println!(
+        "{:>5} | {:>12} | {:>12} | {:>12} | modeled fabric time",
+        "ranks", "ring (inproc)", "ring (threads)", "naive"
+    );
+    let comm = CommModel::fabric();
+    for &p in &[2usize, 4, 8, 16] {
+        let base = bufs(p, grad_len);
+        let mut b1 = base.clone();
+        let t_ring = time_auto(0.3, 5, || {
+            b1.clone_from(&base);
+            ring_allreduce(&mut b1);
+            std::hint::black_box(&b1);
+        });
+        let t_thr = time_auto(0.3, 3, || {
+            let out = ring_allreduce_threaded(base.clone());
+            std::hint::black_box(&out);
+        });
+        let mut b2 = base.clone();
+        let t_naive = time_auto(0.3, 5, || {
+            b2.clone_from(&base);
+            naive_allreduce(&mut b2);
+            std::hint::black_box(&b2);
+        });
+        println!(
+            "{p:>5} | {:>10.2}ms | {:>10.2}ms | {:>10.2}ms | {:>8.3}ms",
+            t_ring.median_secs * 1e3,
+            t_thr.median_secs * 1e3,
+            t_naive.median_secs * 1e3,
+            comm.ring_allreduce_secs(grad_len, p) * 1e3,
+        );
+    }
+    println!("\nallreduce bench done");
+}

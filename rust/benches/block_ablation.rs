@@ -1,0 +1,60 @@
+//! BENCH — ablation of the paper's design choices (DESIGN.md §6):
+//!
+//! 1. **Width-block length**: the paper fixes the cache block at 64
+//!    (Sec. 3, LIBXSMM's `(mnk)^{1/3} ≤ 64` heuristic). Sweep
+//!    WB ∈ {16..128} at the AtacWorks shape to show 64 is (near-)optimal
+//!    and that the register-resident specialisation at 64 matters.
+//! 2. **Batch-reduce vs serial GEMMs**: the BRGEMM accumulator-residency
+//!    advantage as a function of the tap count (covered in more depth by
+//!    `brgemm_kernel.rs`).
+
+use dilconv1d::bench_harness::time_fn;
+use dilconv1d::conv1d::forward::forward_single_wb;
+use dilconv1d::conv1d::layout::kcs_to_skc;
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::ConvParams;
+use dilconv1d::machine::gflops;
+
+fn main() {
+    let (c, k, s, d, q) = (15usize, 15usize, 51usize, 8usize, 10_000usize);
+    let p = ConvParams::new(1, c, k, q + (s - 1) * d, s, d).unwrap();
+    let x = rnd(p.c * p.w, 1);
+    let wt = rnd(k * c * s, 2);
+    let skc = kcs_to_skc(&wt, k, c, s);
+    let mut out = vec![0.0f32; k * p.q()];
+    println!("# width-block ablation at the AtacWorks shape ({p})");
+    println!("{:>4} | {:>10} | {:>8} | note", "WB", "median", "GF/s");
+    let mut best = (0usize, f64::INFINITY);
+    for &wb in &[16usize, 32, 48, 64, 96, 128] {
+        let t = time_fn(1, 5, || {
+            forward_single_wb(&p, &x, &skc, &mut out, wb);
+            std::hint::black_box(&out);
+        });
+        if t.median_secs < best.1 {
+            best = (wb, t.median_secs);
+        }
+        println!(
+            "{wb:>4} | {:>8.2}ms | {:>8.2} | {}",
+            t.median_secs * 1e3,
+            gflops(p.flops(), t.median_secs),
+            if wb == 64 { "paper's choice (+ n=64 fast path)" } else { "" },
+        );
+    }
+    println!("best WB = {} ({:.2}ms)", best.0, best.1 * 1e3);
+
+    // Sanity: all block sizes compute the same function.
+    let mut ref_out = vec![0.0f32; k * p.q()];
+    forward_single_wb(&p, &x, &skc, &mut ref_out, 64);
+    for &wb in &[16usize, 48, 128] {
+        let mut o = vec![0.0f32; k * p.q()];
+        forward_single_wb(&p, &x, &skc, &mut o, wb);
+        let max_err = o
+            .iter()
+            .zip(&ref_out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "WB={wb} diverged: {max_err}");
+    }
+    println!("all block sizes agree numerically ✓");
+    println!("\nblock_ablation bench done");
+}

@@ -1,0 +1,63 @@
+//! BENCH — the BRGEMM primitive itself (paper eq. 3 / Sec. 3):
+//! GFLOP/s of the micro-kernel across the (m=K, n=64, k=C) shapes the
+//! convolution produces, and the effect of the batch-reduce length l_br
+//! (= filter width S). This is the §Perf working bench: the hot path all
+//! three passes stand on.
+
+use dilconv1d::bench_harness::time_auto;
+use dilconv1d::conv1d::brgemm::brgemm_f32;
+use dilconv1d::conv1d::gemm::gemm_f32;
+use dilconv1d::conv1d::test_util::rnd;
+
+fn main() {
+    println!("# small-GEMM micro-kernel: C[m,64] += A[m,k] B[k,64]");
+    println!("{:>4} {:>4} | {:>9} | {:>8}", "m", "k", "time", "GF/s");
+    for &(m, k) in &[(1usize, 1usize), (4, 4), (8, 8), (15, 15), (16, 16), (32, 32), (64, 64)] {
+        let n = 64;
+        let a = rnd(m * k, 1);
+        let b = rnd(k * n, 2);
+        let mut c = vec![0.0f32; m * n];
+        let t = time_auto(0.2, 10, || {
+            gemm_f32(&a, k, &b, n, &mut c, n, m, n, k);
+            std::hint::black_box(&c);
+        });
+        let fl = 2.0 * (m * n * k) as f64;
+        println!(
+            "{m:>4} {k:>4} | {:>7.2}µs | {:>8.2}",
+            t.median_secs * 1e6,
+            fl / t.median_secs / 1e9
+        );
+    }
+
+    println!("\n# BRGEMM: l_br sweep at the AtacWorks shape (m=15, n=64, k=15)");
+    println!("{:>5} | {:>9} | {:>8} | vs l_br x single GEMMs", "l_br", "time", "GF/s");
+    let (m, n, k) = (15usize, 64usize, 15usize);
+    for &lbr in &[1usize, 5, 9, 21, 51] {
+        let a = rnd(lbr * m * k, 3);
+        let b = rnd(lbr * k * n, 4);
+        let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+        let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+        let mut c = vec![0.0f32; m * n];
+        let t = time_auto(0.2, 10, || {
+            brgemm_f32(&a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, true);
+            std::hint::black_box(&c);
+        });
+        // Serial-GEMM comparison (C re-loaded/stored l_br times).
+        let mut c2 = vec![0.0f32; m * n];
+        let t2 = time_auto(0.2, 10, || {
+            c2.fill(0.0);
+            for i in 0..lbr {
+                gemm_f32(&a[a_offs[i]..], k, &b[b_offs[i]..], n, &mut c2, n, m, n, k);
+            }
+            std::hint::black_box(&c2);
+        });
+        let fl = 2.0 * (m * n * k * lbr) as f64;
+        println!(
+            "{lbr:>5} | {:>7.2}µs | {:>8.2} | {:.2}x faster than serial GEMMs",
+            t.median_secs * 1e6,
+            fl / t.median_secs / 1e9,
+            t2.median_secs / t.median_secs,
+        );
+    }
+    println!("\nbrgemm_kernel bench done");
+}

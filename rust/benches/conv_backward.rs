@@ -1,0 +1,39 @@
+//! BENCH — Fig. 4/5 (backward passes): Algorithm 3 (backward-data,
+//! BRGEMM) and Algorithm 4 (backward-weight, small GEMMs) across the
+//! paper's width/filter grid. The paper notes backward-weight is the
+//! least efficient kernel — the printed efficiency gap reproduces that.
+
+use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
+use dilconv1d::conv1d::Backend;
+use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
+
+fn main() {
+    let quick = std::env::var("BENCH_FULL").is_err();
+    let host = calibrate_host();
+    println!("conv_backward: host ≈ {host:.2} GFLOP/s (1 core)");
+    let cfg = SweepConfig {
+        batch: 2,
+        reps: if quick { 2 } else { 5 },
+        max_measured_q: if quick { 10_000 } else { 60_000 },
+        host_gflops_peak: host,
+        threads: 1,
+    };
+    let clx = MachineSpec::cascade_lake();
+    let widths: &[usize] = if quick { &[1_000, 5_000, 10_000] } else { &[1_000, 5_000, 20_000, 60_000] };
+    println!("{:>6} {:>3} | {:>12} {:>7} | {:>12} {:>7} | bwd-w/bwd-d ratio", "Q", "S", "bwd-data", "eff", "bwd-weight", "eff");
+    for &s in &[5usize, 21, 51] {
+        for &q in widths {
+            let bd = run_point(&cfg, 15, 15, q, s, 8, Pass::BackwardData, Backend::Brgemm, Precision::F32, &clx);
+            let bw = run_point(&cfg, 15, 15, q, s, 8, Pass::BackwardWeight, Backend::Brgemm, Precision::F32, &clx);
+            println!(
+                "{q:>6} {s:>3} | {:>10.2}ms {:>6.1}% | {:>10.2}ms {:>6.1}% | {:.2}x",
+                bd.timing.median_secs * 1e3,
+                bd.host_eff * 100.0,
+                bw.timing.median_secs * 1e3,
+                bw.host_eff * 100.0,
+                bw.timing.median_secs / bd.timing.median_secs,
+            );
+        }
+    }
+    println!("\nconv_backward bench done");
+}

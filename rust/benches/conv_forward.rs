@@ -1,0 +1,72 @@
+//! BENCH — Fig. 4 / Fig. 5 (forward pass): efficiency of the BRGEMM
+//! forward kernel vs output width and filter size, FP32, plus the bf16
+//! path (Fig. 6 series). Prints paper-style rows: measured host GFLOP/s,
+//! host efficiency, and modeled efficiency on the paper's socket.
+//!
+//! Run: `cargo bench --bench conv_forward` (in `cargo bench` the binary
+//! runs with `--bench`, which we ignore).
+
+use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
+use dilconv1d::conv1d::Backend;
+use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
+
+fn main() {
+    let quick = std::env::var("BENCH_FULL").is_err();
+    let host = calibrate_host();
+    println!("conv_forward: host ≈ {host:.2} GFLOP/s (1 core); quick={quick}");
+    let cfg = SweepConfig {
+        batch: 2,
+        reps: if quick { 2 } else { 5 },
+        max_measured_q: if quick { 10_000 } else { 60_000 },
+        host_gflops_peak: host,
+        threads: 1,
+    };
+    let clx = MachineSpec::cascade_lake();
+    let cpx = MachineSpec::cooper_lake();
+
+    // Fig. 4 series: C=15 K=15 d=8.
+    println!("\n# Fig. 4 series (C=15 K=15 d=8, FP32)");
+    println!("{:>6} {:>3} | {:>10} {:>8} {:>6} | modeled CLX eff", "Q", "S", "median", "GF/s", "eff");
+    let widths: &[usize] = if quick { &[1_000, 5_000, 10_000] } else { &[1_000, 2_000, 5_000, 10_000, 20_000, 60_000] };
+    for &s in &[5usize, 21, 51] {
+        for &q in widths {
+            let r = run_point(&cfg, 15, 15, q, s, 8, Pass::Forward, Backend::Brgemm, Precision::F32, &clx);
+            println!(
+                "{q:>6} {s:>3} | {:>8.2}ms {:>8.2} {:>5.1}% | {:>5.1}%",
+                r.timing.median_secs * 1e3,
+                r.host_gflops,
+                r.host_eff * 100.0,
+                r.modeled_eff * 100.0,
+            );
+        }
+    }
+
+    // Fig. 5 series: C=64 K=64 d=1.
+    println!("\n# Fig. 5 series (C=64 K=64 d=1, FP32)");
+    for &s in &[5usize, 51] {
+        for &q in widths {
+            let r = run_point(&cfg, 64, 64, q, s, 1, Pass::Forward, Backend::Brgemm, Precision::F32, &clx);
+            println!(
+                "{q:>6} {s:>3} | {:>8.2}ms {:>8.2} {:>5.1}% | {:>5.1}%",
+                r.timing.median_secs * 1e3,
+                r.host_gflops,
+                r.host_eff * 100.0,
+                r.modeled_eff * 100.0,
+            );
+        }
+    }
+
+    // Fig. 6 series: C=32 K=32 d=4, bf16 vs f32.
+    println!("\n# Fig. 6 series (C=32 K=32 d=4): bf16 GFLOP/s vs f32");
+    for &q in widths {
+        let f = run_point(&cfg, 32, 32, q, 9, 4, Pass::Forward, Backend::Brgemm, Precision::F32, &cpx);
+        let b = run_point(&cfg, 32, 32, q, 9, 4, Pass::Forward, Backend::Brgemm, Precision::Bf16, &cpx);
+        println!(
+            "Q {q:>6}: f32 {:>8.2} GF/s | bf16-path {:>8.2} GF/s | modeled CPX bf16 {:>5.1}% of 9.32 TF peak",
+            f.host_gflops,
+            b.host_gflops,
+            b.modeled_eff * 100.0,
+        );
+    }
+    println!("\nconv_forward bench done");
+}

@@ -1,0 +1,64 @@
+//! BENCH — Table 1 / Fig. 7 (end-to-end training epoch): measured epoch
+//! time of the full 25-layer AtacWorks-like network at host scale under
+//! the BRGEMM backend vs the im2col library baseline, plus the machine
+//! model's paper-scale Table 1 projection.
+
+use dilconv1d::config::TrainConfig;
+use dilconv1d::conv1d::Backend;
+use dilconv1d::coordinator::{experiment, Trainer};
+use dilconv1d::dist::{CommModel, Topology};
+use dilconv1d::machine::workload::{model_epoch, Workload};
+use dilconv1d::machine::{MachineSpec, Precision, Strategy};
+
+fn main() {
+    println!("# measured: one epoch of the 25-layer network (scaled: W=1000, 16 segments)");
+    let mut measured = Vec::new();
+    for (label, backend) in [("BRGEMM (ours)", Backend::Brgemm), ("im2col (oneDNN-analog)", Backend::Im2col)] {
+        let cfg = TrainConfig {
+            segment_width: 1_000,
+            segment_pad: 100,
+            train_segments: 16,
+            batch_size: 4,
+            epochs: 1,
+            backend,
+            ..TrainConfig::default()
+        };
+        let mut t = Trainer::new(cfg).expect("trainer");
+        let r = t.run_epoch(0);
+        println!(
+            "{label:<24} epoch {:>7.2}s  (train {:.2}s eval {:.2}s, loss {:.4})",
+            r.timing.total(),
+            r.timing.train_secs,
+            r.timing.eval_secs,
+            r.train_loss
+        );
+        measured.push((label, r.timing.train_secs));
+    }
+    if measured.len() == 2 {
+        println!(
+            "measured train-epoch speedup BRGEMM vs baseline: {:.2}x (paper Table 1: 6.86x at full scale on 28-core CLX)",
+            measured[1].1 / measured[0].1
+        );
+    }
+
+    println!("\n# modeled: paper-scale Table 1 (single socket)");
+    let w = Workload::paper();
+    let comm = CommModel::upi();
+    for row in experiment::TABLE1 {
+        if row.device == "1 V100" {
+            continue;
+        }
+        let (spec, prec, strat) = match (row.device, row.code, row.precision) {
+            ("1s CLX", "oneDNN", _) => (MachineSpec::cascade_lake(), Precision::F32, Strategy::Im2col),
+            ("1s CLX", _, _) => (MachineSpec::cascade_lake(), Precision::F32, Strategy::Brgemm),
+            ("1s CPX", _, "BF16") => (MachineSpec::cooper_lake(), Precision::Bf16, Strategy::Brgemm),
+            _ => (MachineSpec::cooper_lake(), Precision::F32, Strategy::Brgemm),
+        };
+        let t = model_epoch(&w, &spec, prec, strat, &Topology::xeon(1), &comm);
+        println!(
+            "{} {} ({}): modeled {:>8.1}s | paper {:>8.1}s",
+            row.device, row.code, row.precision, t.total(), row.time_per_epoch
+        );
+    }
+    println!("\ne2e_epoch bench done");
+}

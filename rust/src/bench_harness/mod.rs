@@ -1,0 +1,11 @@
+//! Benchmark harness: timing runner ([`runner`]), paper-grid sweeps
+//! ([`sweep`]) and report emitters ([`tables`]). Each bench binary in
+//! `rust/benches/` and the `dilconv sweep`/`bench` subcommands build on
+//! these to regenerate the paper's tables and figures (DESIGN.md §6).
+
+pub mod runner;
+pub mod sweep;
+pub mod tables;
+
+pub use runner::{time_auto, time_fn, Timing};
+pub use sweep::{run_grid, run_point, Pass, SweepConfig, SweepRow};

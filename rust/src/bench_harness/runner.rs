@@ -1,0 +1,81 @@
+//! Benchmark runner: warmup + repeated timing with median/min reporting —
+//! the in-tree replacement for criterion (offline build), tuned for
+//! kernel-scale (µs–s) measurements.
+
+use crate::metrics::timing::Stats;
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub reps: usize,
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
+pub fn time_fn(warmup: usize, reps: usize, mut f: impl FnMut()) -> Timing {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    let mut stats = Stats::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        stats.push(dt);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if reps % 2 == 1 {
+        samples[reps / 2]
+    } else {
+        0.5 * (samples[reps / 2 - 1] + samples[reps / 2])
+    };
+    Timing {
+        median_secs: median,
+        min_secs: samples[0],
+        mean_secs: stats.mean(),
+        stddev_secs: stats.stddev(),
+        reps,
+    }
+}
+
+/// Auto-scaled timing: picks a repetition count so the total measured time
+/// stays near `budget_secs` (at least `min_reps`).
+pub fn time_auto(budget_secs: f64, min_reps: usize, mut f: impl FnMut()) -> Timing {
+    // One calibration run (also serves as warmup).
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let reps = ((budget_secs / once) as usize).clamp(min_reps, 10_000);
+    time_fn(0, reps, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_of_constant_work() {
+        let t = time_fn(1, 5, || {
+            std::hint::black_box((0..20_000).map(|i| i as f64).sum::<f64>());
+        });
+        assert_eq!(t.reps, 5);
+        assert!(t.median_secs > 0.0);
+        assert!(t.min_secs <= t.median_secs);
+        assert!(t.median_secs <= t.mean_secs + t.stddev_secs * 3.0 + 1e-3);
+    }
+
+    #[test]
+    fn auto_scaling_bounds_reps() {
+        let t = time_auto(0.01, 3, || {
+            std::hint::black_box((0..1_000).sum::<usize>());
+        });
+        assert!(t.reps >= 3);
+    }
+}

@@ -1,0 +1,239 @@
+//! Parameter sweeps over the paper's Sec. 4.3 grids: measure the native
+//! kernels on this host, compute host efficiency, and project onto the
+//! paper's machines at equal efficiency (the substitution contract of
+//! DESIGN.md §4).
+
+use crate::conv1d::backward_data::backward_data;
+use crate::conv1d::backward_weight::backward_weight;
+use crate::conv1d::bf16::to_bf16;
+use crate::conv1d::forward::{forward, forward_bf16};
+use crate::conv1d::im2col::forward_im2col;
+use crate::conv1d::layout::{kcs_to_sck_flipped, kcs_to_skc};
+use crate::conv1d::test_util::rnd;
+use crate::conv1d::{Backend, ConvParams};
+use crate::machine::{project, Measurement, Precision, Strategy};
+use crate::machine::spec::MachineSpec;
+
+use super::runner::{time_fn, Timing};
+
+/// Which pass to sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Forward,
+    BackwardData,
+    BackwardWeight,
+}
+
+/// One measured + projected sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub p: ConvParams,
+    pub pass: Pass,
+    pub backend: Backend,
+    pub precision: Precision,
+    pub timing: Timing,
+    /// Achieved GFLOP/s on this host.
+    pub host_gflops: f64,
+    /// Efficiency on this host (vs calibrated peak).
+    pub host_eff: f64,
+    /// Modelled efficiency on the paper machine (CLX for f32 figures,
+    /// CPX for bf16), from the roofline model at paper thread counts.
+    pub modeled_eff: f64,
+    /// Modelled seconds on the paper machine.
+    pub modeled_secs: f64,
+}
+
+/// Sweep configuration.
+pub struct SweepConfig {
+    /// Batch size for measured runs (paper uses 56; scaled here).
+    pub batch: usize,
+    /// Measured repetitions (median reported).
+    pub reps: usize,
+    /// Cap on measured Q (larger grid points are still *modeled*).
+    pub max_measured_q: usize,
+    /// Host peak GFLOP/s (from `machine::calibrate_host`).
+    pub host_gflops_peak: f64,
+    /// Threads for the measured runs.
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            batch: 2,
+            reps: 3,
+            max_measured_q: 60_000,
+            host_gflops_peak: 10.0,
+            threads: 1,
+        }
+    }
+}
+
+fn strategy_of(b: Backend) -> Strategy {
+    match b {
+        Backend::Brgemm => Strategy::Brgemm,
+        Backend::Im2col => Strategy::Im2col,
+        Backend::Direct => Strategy::Direct,
+    }
+}
+
+/// Measure one grid point. `(c, k, q, s, d)` are the paper's sweep axes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_point(
+    cfg: &SweepConfig,
+    c: usize,
+    k: usize,
+    q: usize,
+    s: usize,
+    d: usize,
+    pass: Pass,
+    backend: Backend,
+    precision: Precision,
+    paper_machine: &MachineSpec,
+) -> SweepRow {
+    let q_meas = q.min(cfg.max_measured_q);
+    let p = ConvParams::new(cfg.batch, c, k, q_meas + (s - 1) * d, s, d)
+        .expect("invalid sweep point");
+    let x = rnd(p.n * p.c * p.w, 0xC0 + q as u64);
+    let wt = rnd(p.k * p.c * p.s, 0xF1 + s as u64);
+
+    let timing = match (pass, backend, precision) {
+        (Pass::Forward, Backend::Brgemm, Precision::F32) => {
+            let skc = kcs_to_skc(&wt, k, c, s);
+            let mut out = vec![0.0f32; p.n * p.k * p.q()];
+            time_fn(1, cfg.reps, || {
+                forward(&p, &x, &skc, &mut out, cfg.threads);
+                std::hint::black_box(&out);
+            })
+        }
+        (Pass::Forward, Backend::Brgemm, Precision::Bf16) => {
+            let skc = to_bf16(&kcs_to_skc(&wt, k, c, s));
+            let xb = to_bf16(&x);
+            let mut out = vec![crate::conv1d::bf16::Bf16::ZERO; p.n * p.k * p.q()];
+            time_fn(1, cfg.reps, || {
+                forward_bf16(&p, &xb, &skc, &mut out, cfg.threads);
+                std::hint::black_box(&out);
+            })
+        }
+        (Pass::Forward, Backend::Im2col, _) => {
+            let mut out = vec![0.0f32; p.n * p.k * p.q()];
+            time_fn(1, cfg.reps, || {
+                forward_im2col(&p, &x, &wt, &mut out, cfg.threads);
+                std::hint::black_box(&out);
+            })
+        }
+        (Pass::Forward, Backend::Direct, _) => {
+            let mut out = vec![0.0f32; p.n * p.k * p.q()];
+            time_fn(1, cfg.reps, || {
+                crate::conv1d::direct::forward_direct(&p, &x, &wt, &mut out);
+                std::hint::black_box(&out);
+            })
+        }
+        (Pass::BackwardData, _, _) => {
+            let gout = rnd(p.n * p.k * p.q(), 0xAB);
+            let sck = kcs_to_sck_flipped(&wt, k, c, s);
+            let mut gin = vec![0.0f32; p.n * p.c * p.w];
+            time_fn(1, cfg.reps, || {
+                backward_data(&p, &gout, &sck, &mut gin, cfg.threads);
+                std::hint::black_box(&gin);
+            })
+        }
+        (Pass::BackwardWeight, _, _) => {
+            let gout = rnd(p.n * p.k * p.q(), 0xCD);
+            time_fn(1, cfg.reps, || {
+                std::hint::black_box(backward_weight(&p, &gout, &x, cfg.threads));
+            })
+        }
+    };
+
+    let meas = Measurement {
+        flops: p.flops(),
+        secs: timing.median_secs,
+        threads: cfg.threads,
+    };
+    let host = MachineSpec::host(cfg.host_gflops_peak);
+    let host_eff = meas.efficiency_on(&host, Precision::F32);
+    // Model at the *full* requested Q (q, not q_meas) and paper threads.
+    let p_full = ConvParams::new(56, c, k, q + (s - 1) * d, s, d).unwrap();
+    let proj = project(
+        &p_full,
+        strategy_of(backend),
+        paper_machine,
+        precision,
+        paper_machine.cores - 1,
+    );
+    SweepRow {
+        p,
+        pass,
+        backend,
+        precision,
+        timing,
+        host_gflops: meas.flops_per_sec() / 1e9,
+        host_eff,
+        modeled_eff: proj.efficiency,
+        modeled_secs: proj.secs,
+    }
+}
+
+/// Run a full grid (e.g. `experiment::fig4_grid()`) under both the BRGEMM
+/// and the baseline backends.
+pub fn run_grid(
+    cfg: &SweepConfig,
+    grid: &[(usize, usize, usize, usize, usize)],
+    pass: Pass,
+    precision: Precision,
+    paper_machine: &MachineSpec,
+) -> Vec<(SweepRow, SweepRow)> {
+    grid.iter()
+        .map(|&(c, k, q, s, d)| {
+            let ours = run_point(cfg, c, k, q, s, d, pass, Backend::Brgemm, precision, paper_machine);
+            let base = run_point(cfg, c, k, q, s, d, pass, Backend::Im2col, Precision::F32, paper_machine);
+            (ours, base)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_produces_sane_numbers() {
+        let cfg = SweepConfig {
+            batch: 1,
+            reps: 2,
+            max_measured_q: 2_000,
+            host_gflops_peak: 10.0,
+            threads: 1,
+        };
+        let clx = MachineSpec::cascade_lake();
+        let row = run_point(&cfg, 15, 15, 1_000, 9, 8, Pass::Forward, Backend::Brgemm, Precision::F32, &clx);
+        assert!(row.timing.median_secs > 0.0);
+        assert!(row.host_gflops > 0.0);
+        assert!(row.modeled_eff > 0.0 && row.modeled_eff <= 1.0);
+    }
+
+    #[test]
+    fn brgemm_beats_baseline_on_paper_region() {
+        // Measured, on this host: eq. 4's claim at a moderate size.
+        let cfg = SweepConfig {
+            batch: 1,
+            reps: 2,
+            max_measured_q: 4_000,
+            host_gflops_peak: 10.0,
+            threads: 1,
+        };
+        let clx = MachineSpec::cascade_lake();
+        let ours = run_point(&cfg, 15, 15, 4_000, 51, 8, Pass::Forward, Backend::Brgemm, Precision::F32, &clx);
+        let base = run_point(&cfg, 15, 15, 4_000, 51, 8, Pass::Forward, Backend::Im2col, Precision::F32, &clx);
+        // min-of-reps and a small slack: unit tests run in debug builds on
+        // a shared core, so guard against scheduler noise — the release
+        // benches assert the strict ordering.
+        assert!(
+            ours.timing.min_secs < base.timing.min_secs * 1.15,
+            "BRGEMM {} vs im2col {}",
+            ours.timing.min_secs,
+            base.timing.min_secs
+        );
+    }
+}

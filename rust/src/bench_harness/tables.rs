@@ -1,0 +1,83 @@
+//! Report emitters: markdown tables (paper-style rows) and CSV files for
+//! plotting, used by the CLI and the bench binaries.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render a markdown table.
+pub fn markdown(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "| {} |", headers.join(" | "));
+    let _ = writeln!(
+        out,
+        "|{}|",
+        headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        let _ = writeln!(out, "| {} |", row.join(" | "));
+    }
+    out
+}
+
+/// Write rows as CSV (naive quoting — our values never contain commas).
+pub fn write_csv(path: impl AsRef<Path>, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    let mut s = String::new();
+    let _ = writeln!(s, "{}", headers.join(","));
+    for row in rows {
+        let _ = writeln!(s, "{}", row.join(","));
+    }
+    std::fs::write(path, s)
+}
+
+/// Format an efficiency fraction as a percentage string.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Format seconds with 4 significant digits.
+pub fn secs(x: f64) -> String {
+    if x >= 1.0 {
+        format!("{x:.3}s")
+    } else {
+        format!("{:.3}ms", x * 1e3)
+    }
+}
+
+/// Format a speedup like the paper ("6.86x").
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let md = markdown(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "| a | b |");
+        assert_eq!(lines[1], "|---|---|");
+        assert_eq!(lines[3], "| 3 | 4 |");
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.8012), "80.1%");
+        assert_eq!(secs(2.5), "2.500s");
+        assert_eq!(secs(0.0021), "2.100ms");
+        assert_eq!(speedup(6.864), "6.86x");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join("dilconv_csv_test.csv");
+        write_csv(&p, &["x", "y"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "x,y\n1,2\n");
+    }
+}

@@ -1,0 +1,172 @@
+//! Configuration system: a TOML-subset reader ([`toml`]) plus the typed
+//! experiment/training configuration used by the launcher and coordinator.
+
+pub mod toml;
+
+use crate::conv1d::Backend;
+use crate::machine::Precision;
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Full training-run configuration (CLI defaults ≈ a width-scaled version
+/// of the paper's Sec. 4.2 setup that runs in seconds on this host).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    // Model (paper Sec. 4.2).
+    pub channels: usize,
+    pub n_blocks: usize,
+    pub filter_size: usize,
+    pub dilation: usize,
+    // Data.
+    pub segment_width: usize,
+    pub segment_pad: usize,
+    pub train_segments: usize,
+    pub seed: u64,
+    // Training.
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub precision: Precision,
+    pub backend: Backend,
+    // Topology.
+    pub sockets: usize,
+    pub threads_per_socket: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            channels: 15,
+            n_blocks: 11,
+            filter_size: 51,
+            dilation: 8,
+            segment_width: 2_000, // paper: 50_000 (scaled for this host)
+            segment_pad: 200,     // paper: 5_000
+            train_segments: 64,   // paper: 32_000
+            seed: 42,
+            batch_size: 4,        // paper: 54/64 per socket
+            epochs: 3,            // paper: 25
+            lr: 2e-4,
+            precision: Precision::F32,
+            backend: Backend::Brgemm,
+            sockets: 1,
+            threads_per_socket: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// The paper's full-scale configuration (Sec. 4.2) — hours of compute;
+    /// used by the machine-model projections, not for local runs.
+    pub fn paper_full() -> Self {
+        TrainConfig {
+            segment_width: 50_000,
+            segment_pad: 5_000,
+            train_segments: 32_000,
+            batch_size: 54,
+            epochs: 25,
+            threads_per_socket: 27,
+            ..Default::default()
+        }
+    }
+
+    /// Load from a TOML file, starting from `Default` and overriding any
+    /// key present.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let mut cfg = TrainConfig::default();
+        let u = |doc: &toml::Doc, sec: &str, key: &str, dst: &mut usize| {
+            if let Some(v) = toml::get_usize(doc, sec, key) {
+                *dst = v;
+            }
+        };
+        u(&doc, "model", "channels", &mut cfg.channels);
+        u(&doc, "model", "n_blocks", &mut cfg.n_blocks);
+        u(&doc, "model", "filter_size", &mut cfg.filter_size);
+        u(&doc, "model", "dilation", &mut cfg.dilation);
+        u(&doc, "data", "segment_width", &mut cfg.segment_width);
+        u(&doc, "data", "segment_pad", &mut cfg.segment_pad);
+        u(&doc, "data", "train_segments", &mut cfg.train_segments);
+        u(&doc, "train", "batch_size", &mut cfg.batch_size);
+        u(&doc, "train", "epochs", &mut cfg.epochs);
+        u(&doc, "topology", "sockets", &mut cfg.sockets);
+        u(&doc, "topology", "threads_per_socket", &mut cfg.threads_per_socket);
+        if let Some(v) = toml::get_usize(&doc, "data", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = toml::get_f64(&doc, "train", "lr") {
+            cfg.lr = v;
+        }
+        if let Some(s) = toml::get_str(&doc, "train", "precision") {
+            cfg.precision = match s.to_ascii_lowercase().as_str() {
+                "f32" | "fp32" => Precision::F32,
+                "bf16" | "bfloat16" => Precision::Bf16,
+                other => return Err(anyhow!("unknown precision '{other}'")),
+            };
+        }
+        if let Some(s) = toml::get_str(&doc, "train", "backend") {
+            cfg.backend = s.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Padded track width the network sees.
+    pub fn padded_width(&self) -> usize {
+        self.segment_width + 2 * self.segment_pad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.channels, 15);
+        assert_eq!(c.filter_size, 51);
+        assert_eq!(c.dilation, 8);
+        assert_eq!(c.padded_width(), 2_400);
+    }
+
+    #[test]
+    fn file_overrides() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(
+            &p,
+            r#"
+[model]
+channels = 16
+[train]
+lr = 0.001
+precision = "bf16"
+backend = "onednn"
+[topology]
+sockets = 4
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.channels, 16);
+        assert_eq!(c.lr, 0.001);
+        assert_eq!(c.precision, Precision::Bf16);
+        assert_eq!(c.backend, Backend::Im2col);
+        assert_eq!(c.sockets, 4);
+        // Untouched defaults survive.
+        assert_eq!(c.filter_size, 51);
+    }
+
+    #[test]
+    fn bad_precision_fails() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(&p, "[train]\nprecision = \"fp8\"\n").unwrap();
+        assert!(TrainConfig::from_file(&p).is_err());
+    }
+}

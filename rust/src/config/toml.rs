@@ -1,0 +1,182 @@
+//! Minimal TOML-subset parser — the config-file substrate (no `toml`
+//! crate offline). Supports exactly what our config files use:
+//!
+//! * `[section]` headers (one level),
+//! * `key = value` with string, integer, float and boolean values,
+//! * `#` comments and blank lines.
+//!
+//! Unknown syntax is an error, not silently ignored — config typos should
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+/// A scalar config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section → key → value. Top-level keys live under "".
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(src: &str) -> Result<Doc, String> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        // Strip trailing comments outside strings.
+        let val = val.trim();
+        let val = if val.starts_with('"') {
+            val
+        } else {
+            val.split('#').next().unwrap().trim()
+        };
+        let value = parse_value(val)
+            .ok_or_else(|| format!("line {}: cannot parse value '{val}'", lineno + 1))?;
+        doc.get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn parse_value(v: &str) -> Option<Value> {
+    if v.is_empty() {
+        return None;
+    }
+    if let Some(stripped) = v.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        return Some(Value::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Typed lookup helpers over a parsed document.
+pub fn get_usize(doc: &Doc, section: &str, key: &str) -> Option<usize> {
+    doc.get(section)?.get(key)?.as_usize()
+}
+
+pub fn get_f64(doc: &Doc, section: &str, key: &str) -> Option<f64> {
+    doc.get(section)?.get(key)?.as_f64()
+}
+
+pub fn get_str<'a>(doc: &'a Doc, section: &str, key: &str) -> Option<&'a str> {
+    doc.get(section)?.get(key)?.as_str()
+}
+
+pub fn get_bool(doc: &Doc, section: &str, key: &str) -> Option<bool> {
+    doc.get(section)?.get(key)?.as_bool()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            r#"
+# training config
+backend = "brgemm"
+
+[model]
+channels = 15
+filter_size = 51
+
+[train]
+lr = 0.0002      # adam
+epochs = 25
+bf16 = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(get_str(&doc, "", "backend"), Some("brgemm"));
+        assert_eq!(get_usize(&doc, "model", "channels"), Some(15));
+        assert_eq!(get_f64(&doc, "train", "lr"), Some(0.0002));
+        assert_eq!(get_bool(&doc, "train", "bf16"), Some(false));
+        assert_eq!(get_usize(&doc, "train", "missing"), None);
+    }
+
+    #[test]
+    fn ints_coerce_to_float() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(get_f64(&doc, "", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("keywithoutvalue\n").is_err());
+        assert!(parse("k = \n").is_err());
+        assert!(parse("k = what\n").is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Backward-data pass — paper Algorithm 3 (width-blocked BRGEMM).
+//!
+//! The paper relays the weight out to `(S, C, K)` and walks the output
+//! gradient with reversed tap pointers (`B_ptrs[s] = &Grad_out[0,
+//! pos − (S−1−s)·d]`), zero-padding `Grad_out` "wherever needed".
+//! Equivalently (substitute `s' = S−1−s`): pad `Grad_out` by `(S−1)·d`
+//! zeros on both sides and run the *forward* block loop over the
+//! tap-reversed `(S, C, K)` weight. That is exactly what this module does,
+//! so the backward-data pass shares the forward BRGEMM machinery — the
+//! same property the paper exploits ("very similar to the forward pass").
+
+use super::brgemm::brgemm_f32;
+use super::params::{ConvParams, WIDTH_BLOCK};
+use super::threading::par_batch_chunks;
+
+/// Backward-data for one batch element.
+///
+/// * `gout_padded`: `(K, Q + 2·(S−1)·d)` — output gradient padded with
+///   `(S−1)·d` zeros on each side (see [`pad_gout`]).
+/// * `w_sck`: weight relaid out to `(S, C, K)` with taps reversed
+///   ([`super::layout::kcs_to_sck_flipped`]).
+/// * `gin`: `(C, W)` data gradient, overwritten.
+pub fn backward_data_single(
+    p: &ConvParams,
+    gout_padded: &[f32],
+    w_sck: &[f32],
+    gin: &mut [f32],
+) {
+    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    let pad = (s - 1) * d;
+    let qp = q + 2 * pad;
+    debug_assert_eq!(gout_padded.len(), k * qp);
+    debug_assert_eq!(w_sck.len(), s * c * k);
+    debug_assert_eq!(gin.len(), c * w);
+    let a_offs: Vec<usize> = (0..s).map(|is| is * c * k).collect();
+    let mut b_offs = vec![0usize; s];
+    let mut pos = 0;
+    // The "output" of this pass is the data gradient of width W = Q + pad.
+    while pos < w {
+        let nb = WIDTH_BLOCK.min(w - pos);
+        for (is, bo) in b_offs.iter_mut().enumerate() {
+            *bo = pos + is * d; // into the padded gradient
+        }
+        brgemm_f32(
+            w_sck, &a_offs, k, gout_padded, &b_offs, qp, &mut gin[pos..], w, c, nb, k, true,
+        );
+        pos += nb;
+    }
+}
+
+/// Zero-pad `(N, K, Q)` output gradient by `(S−1)·d` on both width edges.
+pub fn pad_gout(p: &ConvParams, gout: &[f32]) -> Vec<f32> {
+    let (n, k, q) = (p.n, p.k, p.q());
+    let pad = (p.s - 1) * p.d;
+    super::layout::pad_width(gout, n, k, q, pad, pad)
+}
+
+/// Batched backward-data pass, threaded over the batch dimension.
+///
+/// * `gout`: `(N, K, Q)` (unpadded); `w_sck` as above; `gin`: `(N, C, W)`.
+pub fn backward_data(p: &ConvParams, gout: &[f32], w_sck: &[f32], gin: &mut [f32], threads: usize) {
+    let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
+    assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {p}");
+    assert_eq!(w_sck.len(), p.s * c * k, "weight shape mismatch for {p}");
+    assert_eq!(gin.len(), n * c * w, "grad-in shape mismatch for {p}");
+    let gp = pad_gout(p, gout);
+    let qp = q + 2 * (p.s - 1) * p.d;
+    par_batch_chunks(gin, c * w, threads, |i, gin_row| {
+        backward_data_single(p, &gp[i * k * qp..(i + 1) * k * qp], w_sck, gin_row);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::direct::backward_data_direct;
+    use crate::conv1d::layout::kcs_to_sck_flipped;
+    use crate::conv1d::test_util::rnd;
+
+    fn check(p: ConvParams) {
+        let gout = rnd(p.n * p.k * p.q(), 10);
+        let wt = rnd(p.k * p.c * p.s, 20);
+        let sck = kcs_to_sck_flipped(&wt, p.k, p.c, p.s);
+        let mut got = vec![0.0; p.n * p.c * p.w];
+        backward_data(&p, &gout, &sck, &mut got, 1);
+        let mut want = vec![0.0; p.n * p.c * p.w];
+        backward_data_direct(&p, &gout, &wt, &mut want);
+        for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w_).abs() < 1e-4 * (1.0 + w_.abs()),
+                "{p} idx {i}: {g} vs {w_}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_direct_paper_shapes() {
+        for &(n, c, k, q, s, d) in &[
+            (2, 15, 15, 128, 51, 8),
+            (1, 64, 64, 200, 5, 1),
+            (2, 32, 32, 130, 9, 4),
+            (1, 1, 1, 64, 1, 1),
+            (1, 4, 8, 100, 15, 2),
+            (3, 10, 16, 77, 21, 1),
+            (1, 8, 4, 640, 25, 16),
+        ] {
+            check(ConvParams::new(n, c, k, q + (s - 1) * d, s, d).unwrap());
+        }
+    }
+
+    #[test]
+    fn threaded_equals_single() {
+        let p = ConvParams::new(5, 6, 7, 300, 9, 3).unwrap();
+        let gout = rnd(p.n * p.k * p.q(), 30);
+        let wt = rnd(p.k * p.c * p.s, 40);
+        let sck = kcs_to_sck_flipped(&wt, p.k, p.c, p.s);
+        let mut g1 = vec![0.0; p.n * p.c * p.w];
+        let mut g3 = vec![0.0; p.n * p.c * p.w];
+        backward_data(&p, &gout, &sck, &mut g1, 1);
+        backward_data(&p, &gout, &sck, &mut g3, 3);
+        assert_eq!(g1, g3);
+    }
+
+    #[test]
+    fn s1_is_transpose_matmul() {
+        // With S=1 the data gradient is Wᵀ·gout, width-preserving.
+        let p = ConvParams::new(1, 2, 3, 50, 1, 4).unwrap();
+        let gout = rnd(p.k * p.q(), 50);
+        let wt = rnd(p.k * p.c, 60); // (K, C, 1)
+        let sck = kcs_to_sck_flipped(&wt, p.k, p.c, 1);
+        let mut gin = vec![0.0; p.c * p.w];
+        backward_data(&p, &gout, &sck, &mut gin, 1);
+        for ic in 0..p.c {
+            for iq in 0..p.q() {
+                let mut want = 0.0;
+                for ik in 0..p.k {
+                    want += wt[ik * p.c + ic] * gout[ik * p.q() + iq];
+                }
+                assert!((gin[ic * p.w + iq] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Backward-weight pass — paper Algorithm 4 (small GEMMs).
+//!
+//! For every width block and tap:
+//!
+//! ```text
+//! Grad_w[s, :, :] += GEMM( In[:, pos+s·d : pos+s·d+64],        # (C, 64)
+//!                          transpose(Grad_out[:, pos : pos+64]) )  # (64, K)
+//! ```
+//!
+//! The accumulator lives in the paper's `(S, C, K)` layout and is converted
+//! back to the framework's `(K, C, S)` at the end. The paper notes this
+//! kernel is the least efficient of the three: the input blocks stream
+//! through cache once and the accumulator is shared across the batch
+//! dimension — which is why the batch reduction here is serial per
+//! accumulator, with optional sharded accumulators merged at the end when
+//! threading is requested.
+
+use super::gemm::gemm_f32_bt;
+use super::layout::sck_to_kcs;
+use super::params::{ConvParams, WIDTH_BLOCK};
+
+/// Accumulate the weight gradient of one batch element into `gw_sck`
+/// (layout `(S, C, K)`, **not** zeroed by this function).
+pub fn backward_weight_single(p: &ConvParams, gout: &[f32], x: &[f32], gw_sck: &mut [f32]) {
+    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(gout.len(), k * q);
+    debug_assert_eq!(x.len(), c * w);
+    debug_assert_eq!(gw_sck.len(), s * c * k);
+    let mut pos = 0;
+    while pos < q {
+        let nb = WIDTH_BLOCK.min(q - pos);
+        for is in 0..s {
+            // A = In panel (C × nb) at column pos + s·d, row stride W.
+            // B (transposed access) = Grad_out panel (K × nb), row stride Q.
+            gemm_f32_bt(
+                &x[pos + is * d..],
+                w,
+                &gout[pos..],
+                q,
+                &mut gw_sck[is * c * k..(is + 1) * c * k],
+                k,
+                c,
+                k,
+                nb,
+            );
+        }
+        pos += nb;
+    }
+}
+
+/// Batched backward-weight pass. Returns the gradient in the framework's
+/// `(K, C, S)` layout.
+///
+/// With `threads > 1` the batch is sharded over per-thread accumulators
+/// which are summed afterwards — the deterministic equivalent of the
+/// paper's shared-weight-tensor multithreading caveat (Sec. 3.3).
+pub fn backward_weight(
+    p: &ConvParams,
+    gout: &[f32],
+    x: &[f32],
+    threads: usize,
+) -> Vec<f32> {
+    let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
+    assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {p}");
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    let t = threads.max(1).min(n.max(1));
+    let mut partials = vec![vec![0.0f32; s * c * k]; t];
+    if t == 1 {
+        for i in 0..n {
+            backward_weight_single(
+                p,
+                &gout[i * k * q..(i + 1) * k * q],
+                &x[i * c * w..(i + 1) * c * w],
+                &mut partials[0],
+            );
+        }
+    } else {
+        std::thread::scope(|scope| {
+            for (tid, acc) in partials.iter_mut().enumerate() {
+                let gout = &gout;
+                let x = &x;
+                scope.spawn(move || {
+                    let mut i = tid;
+                    while i < n {
+                        backward_weight_single(
+                            p,
+                            &gout[i * k * q..(i + 1) * k * q],
+                            &x[i * c * w..(i + 1) * c * w],
+                            acc,
+                        );
+                        i += t;
+                    }
+                });
+            }
+        });
+    }
+    // Tree-free deterministic merge (t is small).
+    let mut total = partials.remove(0);
+    for part in &partials {
+        for (a, b) in total.iter_mut().zip(part) {
+            *a += b;
+        }
+    }
+    sck_to_kcs(&total, s, c, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::direct::backward_weight_direct;
+    use crate::conv1d::test_util::rnd;
+
+    fn check(p: ConvParams) {
+        let gout = rnd(p.n * p.k * p.q(), 100);
+        let x = rnd(p.n * p.c * p.w, 200);
+        let got = backward_weight(&p, &gout, &x, 1);
+        let want = backward_weight_direct(&p, &gout, &x);
+        for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w_).abs() < 2e-3 * (1.0 + w_.abs()),
+                "{p} idx {i}: {g} vs {w_}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_direct_paper_shapes() {
+        for &(n, c, k, q, s, d) in &[
+            (2, 15, 15, 128, 51, 8),
+            (1, 64, 64, 200, 5, 1),
+            (2, 32, 32, 130, 9, 4),
+            (1, 1, 1, 64, 1, 1),
+            (1, 4, 8, 100, 15, 2),
+            (3, 10, 16, 77, 21, 1),
+        ] {
+            check(ConvParams::new(n, c, k, q + (s - 1) * d, s, d).unwrap());
+        }
+    }
+
+    #[test]
+    fn batch_additivity() {
+        // grad_w(batch) == Σ grad_w(sample) — Algorithm 4 is a reduction.
+        let p = ConvParams::new(3, 4, 5, 120, 7, 2).unwrap();
+        let gout = rnd(p.n * p.k * p.q(), 1);
+        let x = rnd(p.n * p.c * p.w, 2);
+        let full = backward_weight(&p, &gout, &x, 1);
+        let single = ConvParams { n: 1, ..p };
+        let mut acc = vec![0.0; p.k * p.c * p.s];
+        for i in 0..p.n {
+            let gi = backward_weight(
+                &single,
+                &gout[i * p.k * p.q()..(i + 1) * p.k * p.q()],
+                &x[i * p.c * p.w..(i + 1) * p.c * p.w],
+                1,
+            );
+            for (a, b) in acc.iter_mut().zip(&gi) {
+                *a += b;
+            }
+        }
+        for (a, b) in full.iter().zip(&acc) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let p = ConvParams::new(6, 5, 4, 200, 9, 3).unwrap();
+        let gout = rnd(p.n * p.k * p.q(), 3);
+        let x = rnd(p.n * p.c * p.w, 4);
+        let serial = backward_weight(&p, &gout, &x, 1);
+        let par = backward_weight(&p, &gout, &x, 3);
+        for (a, b) in serial.iter().zip(&par) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Naive direct convolution — correctness oracle and worst-case baseline.
+//!
+//! The plain 6-nested-loop evaluation of paper eq. (2). It performs no
+//! blocking, no layout transformation and no vector-friendly access
+//! pattern, so it doubles as the "unoptimised" end of the efficiency
+//! spectrum in the benchmark harness (the shape oneDNN's 1D path collapses
+//! to for long widths and filters).
+
+use super::params::ConvParams;
+
+/// Forward: `Out[n,k,q] = Σ_c Σ_s In[n,c,q+d·s] · W[k,c,s]` (weight in
+/// framework layout `(K, C, S)`). `out` is overwritten.
+pub fn forward_direct(p: &ConvParams, x: &[f32], w_kcs: &[f32], out: &mut [f32]) {
+    let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    assert_eq!(x.len(), n * c * w);
+    assert_eq!(w_kcs.len(), k * c * s);
+    assert_eq!(out.len(), n * k * q);
+    out.fill(0.0);
+    for ib in 0..n {
+        for ik in 0..k {
+            for ic in 0..c {
+                for is in 0..s {
+                    let wv = w_kcs[(ik * c + ic) * s + is];
+                    let xrow = &x[(ib * c + ic) * w + is * d..(ib * c + ic) * w + is * d + q];
+                    let orow = &mut out[(ib * k + ik) * q..(ib * k + ik) * q + q];
+                    for iq in 0..q {
+                        orow[iq] += wv * xrow[iq];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward-data: scatter-style adjoint of [`forward_direct`].
+pub fn backward_data_direct(p: &ConvParams, gout: &[f32], w_kcs: &[f32], gin: &mut [f32]) {
+    let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    assert_eq!(gout.len(), n * k * q);
+    assert_eq!(gin.len(), n * c * w);
+    gin.fill(0.0);
+    for ib in 0..n {
+        for ik in 0..k {
+            for ic in 0..c {
+                for is in 0..s {
+                    let wv = w_kcs[(ik * c + ic) * s + is];
+                    for iq in 0..q {
+                        gin[(ib * c + ic) * w + iq + is * d] += wv * gout[(ib * k + ik) * q + iq];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward-weight: `Grad_w[k,c,s] = Σ_n Σ_q Grad_out[n,k,q] · In[n,c,q+d·s]`.
+pub fn backward_weight_direct(p: &ConvParams, gout: &[f32], x: &[f32]) -> Vec<f32> {
+    let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    assert_eq!(gout.len(), n * k * q);
+    assert_eq!(x.len(), n * c * w);
+    let mut gw = vec![0.0f32; k * c * s];
+    for ib in 0..n {
+        for ik in 0..k {
+            for ic in 0..c {
+                for is in 0..s {
+                    let mut acc = 0.0f32;
+                    let grow = &gout[(ib * k + ik) * q..(ib * k + ik) * q + q];
+                    let xrow = &x[(ib * c + ic) * w + is * d..(ib * c + ic) * w + is * d + q];
+                    for iq in 0..q {
+                        acc += grow[iq] * xrow[iq];
+                    }
+                    gw[(ik * c + ic) * s + is] += acc;
+                }
+            }
+        }
+    }
+    gw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_computed_example() {
+        // Fig. 1-style tiny case: C=1, K=1, S=2, d=2, W=6 -> Q=4.
+        // x = [1 2 3 4 5 6], w = [10, 1]: out[q] = 10*x[q] + x[q+2].
+        let p = ConvParams::new(1, 1, 1, 6, 2, 2).unwrap();
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [10.0, 1.0];
+        let mut out = vec![0.0; 4];
+        forward_direct(&p, &x, &w, &mut out);
+        assert_eq!(out, vec![13.0, 24.0, 35.0, 46.0]);
+    }
+
+    #[test]
+    fn backward_data_hand_example() {
+        let p = ConvParams::new(1, 1, 1, 6, 2, 2).unwrap();
+        let w = [10.0, 1.0];
+        let gout = [1.0, 1.0, 1.0, 1.0];
+        let mut gin = vec![0.0; 6];
+        backward_data_direct(&p, &gout, &w, &mut gin);
+        // gin[w] = 10*gout[w] (if w<4) + 1*gout[w-2] (if 2<=w<6)
+        assert_eq!(gin, vec![10.0, 10.0, 11.0, 11.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn backward_weight_is_finite_difference_of_forward() {
+        // Central-difference gradient check of the forward pass.
+        let p = ConvParams::new(1, 2, 2, 20, 3, 2).unwrap();
+        let x: Vec<f32> = (0..p.c * p.w).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut wt: Vec<f32> = (0..p.k * p.c * p.s).map(|i| (i as f32 * 0.3).cos()).collect();
+        let gout: Vec<f32> = (0..p.k * p.q()).map(|i| 0.1 + (i % 5) as f32 * 0.2).collect();
+        let gw = backward_weight_direct(&p, &gout, &x);
+        let eps = 1e-2f32;
+        let mut out_p = vec![0.0; p.k * p.q()];
+        let mut out_m = vec![0.0; p.k * p.q()];
+        for wi in 0..wt.len() {
+            let orig = wt[wi];
+            wt[wi] = orig + eps;
+            forward_direct(&p, &x, &wt, &mut out_p);
+            wt[wi] = orig - eps;
+            forward_direct(&p, &x, &wt, &mut out_m);
+            wt[wi] = orig;
+            // d/dw <gout, Out> = gw[wi]
+            let fd: f32 = out_p
+                .iter()
+                .zip(&out_m)
+                .zip(&gout)
+                .map(|((a, b), g)| (a - b) / (2.0 * eps) * g)
+                .sum();
+            assert!(
+                (fd - gw[wi]).abs() < 2e-2 * (1.0 + gw[wi].abs()),
+                "w[{wi}]: fd {fd} vs analytic {}",
+                gw[wi]
+            );
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Forward pass — paper Algorithm 2 (width-blocked BRGEMM).
+//!
+//! For every output block of 64 columns, build the tap offset lists
+//! (`A_ptrs[s] = &Weight[s,0,0]`, `B_ptrs[s] = &In[0, pos + s·d]`) and run
+//! one BRGEMM with `l_br = S`:
+//!
+//! ```text
+//! for pos = 0 .. Q step 64:              # cache blocking (width)
+//!     for s = 0 .. S:                    # pointer generation
+//!         A_ptrs[s] = Weight[s, :, :]    # (K, C) tap, contiguous in SKC
+//!         B_ptrs[s] = In[:, pos + s·d]   # (C, 64) strided panel
+//!     Out[:, pos .. pos+64] = BRGEMM(A_ptrs, B_ptrs, S)
+//! ```
+//!
+//! GEMM shape per block: `m = K`, `n = 64`, `k = C` — so the paper's
+//! LIBXSMM-friendliness condition is `√(C·K) ≤ 64` (Sec. 3.1).
+
+use super::bf16::Bf16;
+use super::brgemm::{brgemm_bf16, brgemm_f32};
+use super::params::{ConvParams, WIDTH_BLOCK};
+use super::threading::{par_batch_chunks, par_batch_chunks_bf16};
+
+/// Forward pass for one batch element.
+///
+/// * `x`: `(C, W)` input row (`w` pre-padded), row-major, `x.len() == c*w`
+/// * `w_skc`: weight relaid out to `(S, K, C)` ([`super::layout::kcs_to_skc`])
+/// * `out`: `(K, Q)` output row, overwritten.
+pub fn forward_single(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32]) {
+    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(x.len(), c * w);
+    debug_assert_eq!(w_skc.len(), s * k * c);
+    debug_assert_eq!(out.len(), k * q);
+    // Tap offsets into the SKC weight are block-position independent:
+    // generate once per call (the paper regenerates per block; hoisting is
+    // equivalent and cheaper — see EXPERIMENTS.md §Perf).
+    let a_offs: Vec<usize> = (0..s).map(|is| is * k * c).collect();
+    let mut b_offs = vec![0usize; s];
+    let mut pos = 0;
+    while pos < q {
+        let nb = WIDTH_BLOCK.min(q - pos);
+        for (is, bo) in b_offs.iter_mut().enumerate() {
+            *bo = pos + is * d; // &In[0, pos + s*d], row stride = w
+        }
+        brgemm_f32(
+            w_skc, &a_offs, c, x, &b_offs, w, &mut out[pos..], q, k, nb, c, true,
+        );
+        pos += nb;
+    }
+}
+
+/// Batched forward pass, multithreaded across the batch dimension
+/// (the paper's threading strategy, Sec. 2).
+///
+/// * `x`: `(N, C, W)`; `out`: `(N, K, Q)`, overwritten.
+pub fn forward(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], threads: usize) {
+    let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(w_skc.len(), p.s * k * c, "weight shape mismatch for {p}");
+    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    par_batch_chunks(out, k * q, threads, |i, out_row| {
+        forward_single(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row);
+    });
+}
+
+/// Forward pass with a caller-chosen width block — the ablation hook for
+/// the paper's fixed block length of 64 (Sec. 3: "we keep the block length
+/// equal to 64 elements"). Blocks other than 64 bypass the n=64
+/// register-resident fast path, which is itself part of what the ablation
+/// measures. `wb ≤ 128` (the generic micro-kernel's accumulator bound).
+pub fn forward_single_wb(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], wb: usize) {
+    assert!(wb >= 1 && wb <= crate::conv1d::gemm::MAX_N);
+    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(x.len(), c * w);
+    debug_assert_eq!(w_skc.len(), s * k * c);
+    debug_assert_eq!(out.len(), k * q);
+    let a_offs: Vec<usize> = (0..s).map(|is| is * k * c).collect();
+    let mut b_offs = vec![0usize; s];
+    let mut pos = 0;
+    while pos < q {
+        let nb = wb.min(q - pos);
+        for (is, bo) in b_offs.iter_mut().enumerate() {
+            *bo = pos + is * d;
+        }
+        brgemm_f32(
+            w_skc, &a_offs, c, x, &b_offs, w, &mut out[pos..], q, k, nb, c, true,
+        );
+        pos += nb;
+    }
+}
+
+/// bf16 forward pass for one batch element: bf16 operands, f32 accumulate,
+/// bf16 store (paper Sec. 4.3 BF16 path; Cooper Lake `VDPBF16PS`).
+pub fn forward_single_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut [Bf16]) {
+    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(x.len(), c * w);
+    debug_assert_eq!(w_skc.len(), s * k * c);
+    debug_assert_eq!(out.len(), k * q);
+    let a_offs: Vec<usize> = (0..s).map(|is| is * k * c).collect();
+    let mut b_offs = vec![0usize; s];
+    let mut fblock = vec![0.0f32; k * WIDTH_BLOCK];
+    let mut pos = 0;
+    while pos < q {
+        let nb = WIDTH_BLOCK.min(q - pos);
+        for (is, bo) in b_offs.iter_mut().enumerate() {
+            *bo = pos + is * d;
+        }
+        brgemm_bf16(
+            w_skc, &a_offs, c, x, &b_offs, w, &mut fblock, nb, k, nb, c, true,
+        );
+        // Narrow the f32 accumulator block to bf16 on store.
+        for ik in 0..k {
+            for j in 0..nb {
+                out[ik * q + pos + j] = Bf16::from_f32(fblock[ik * nb + j]);
+            }
+        }
+        pos += nb;
+    }
+}
+
+/// Batched bf16 forward pass.
+pub fn forward_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut [Bf16], threads: usize) {
+    let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
+    assert_eq!(x.len(), n * c * w);
+    assert_eq!(w_skc.len(), p.s * k * c);
+    assert_eq!(out.len(), n * k * q);
+    par_batch_chunks_bf16(out, k * q, threads, |i, out_row| {
+        forward_single_bf16(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::direct::forward_direct;
+    use crate::conv1d::layout::kcs_to_skc;
+    use crate::conv1d::test_util::rnd;
+
+    fn check(p: ConvParams) {
+        let x = rnd(p.n * p.c * p.w, 11);
+        let wt = rnd(p.k * p.c * p.s, 22);
+        let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+        let mut got = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut got, 1);
+        let mut want = vec![0.0; p.n * p.k * p.q()];
+        forward_direct(&p, &x, &wt, &mut want);
+        for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w_).abs() < 1e-4 * (1.0 + w_.abs()), "{p} idx {i}: {g} vs {w_}");
+        }
+    }
+
+    #[test]
+    fn matches_direct_paper_shapes() {
+        for &(n, c, k, q, s, d) in &[
+            (2, 15, 15, 128, 51, 8), // AtacWorks layer
+            (1, 64, 64, 200, 5, 1),  // Fig. 5 family
+            (2, 32, 32, 130, 9, 4),  // Fig. 6 family
+            (1, 1, 1, 64, 1, 1),     // degenerate
+            (1, 4, 8, 100, 15, 2),   // Q % 64 != 0
+            (3, 10, 16, 77, 21, 1),
+            (1, 8, 4, 640, 25, 16),
+        ] {
+            check(ConvParams::new(n, c, k, q + (s - 1) * d, s, d).unwrap());
+        }
+    }
+
+    #[test]
+    fn multithreaded_equals_single() {
+        let p = ConvParams::new(4, 6, 7, 300, 9, 3).unwrap();
+        let x = rnd(p.n * p.c * p.w, 33);
+        let wt = rnd(p.k * p.c * p.s, 44);
+        let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+        let mut o1 = vec![0.0; p.n * p.k * p.q()];
+        let mut o4 = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut o1, 1);
+        forward(&p, &x, &skc, &mut o4, 4);
+        assert_eq!(o1, o4, "threading must be bit-exact");
+    }
+
+    #[test]
+    fn bf16_close_to_f32() {
+        use crate::conv1d::bf16::{to_bf16, to_f32};
+        let p = ConvParams::new(2, 16, 16, 160, 5, 2).unwrap();
+        let x = rnd(p.n * p.c * p.w, 55);
+        let wt = rnd(p.k * p.c * p.s, 66);
+        let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+        let mut f32_out = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut f32_out, 1);
+        let mut bf_out = vec![Bf16::ZERO; p.n * p.k * p.q()];
+        forward_bf16(&p, &to_bf16(&x), &to_bf16(&skc), &mut bf_out, 1);
+        for (g, w_) in to_f32(&bf_out).iter().zip(&f32_out) {
+            assert!((g - w_).abs() < 4e-2 * (1.0 + w_.abs()), "{g} vs {w_}");
+        }
+    }
+
+    #[test]
+    fn identity_filter() {
+        // S=1, C=K=1, weight 1.0 → output == input.
+        let p = ConvParams::new(1, 1, 1, 100, 1, 7).unwrap();
+        let x = rnd(100, 77);
+        let mut out = vec![0.0; 100];
+        forward(&p, &x, &[1.0], &mut out, 1);
+        assert_eq!(out, x);
+    }
+}

@@ -1,0 +1,280 @@
+//! Small-GEMM micro-kernels — the LIBXSMM-analog substrate.
+//!
+//! The paper builds everything on LIBXSMM's JIT-generated small GEMMs and
+//! BRGEMM. We reproduce the same design in Rust: a strided, accumulate-only
+//! (`β = 1`) small-matrix multiply specialised for the kernel shapes the
+//! convolution layer produces:
+//!
+//!   forward       : `m = K`, `n = WB(=64)`, `k = C`  (A = weight tap, row-major)
+//!   backward-data : `m = C`, `n = WB`,     `k = K`
+//!   backward-weight: `m = C`, `n = K`,     `k = WB`, `Bᵀ` access
+//!
+//! `n` is the width-block dimension and is contiguous in memory for both
+//! `B` and `C`, so the inner loop is a unit-stride FMA chain the compiler
+//! auto-vectorises to the host SIMD width (the portable analog of the
+//! paper's AVX-512 columns). A row-local accumulator keeps `C` traffic to
+//! one load + one store per (m, n) element per call — matching LIBXSMM's
+//! register-blocked stores.
+
+use super::bf16::Bf16;
+
+/// Width-block upper bound used for stack accumulators. Must be ≥ every
+/// `n` the convolution kernels produce (WIDTH_BLOCK = 64 plus remainders).
+pub const MAX_N: usize = 128;
+
+/// `C[m×n] += A[m×k] · B[k×n]` with row strides `lda/ldb/ldc` (row-major).
+///
+/// Panics in debug builds if an index would be out of range; callers
+/// guarantee `a.len() ≥ (m−1)·lda + k`, `b.len() ≥ (k−1)·ldb + n`,
+/// `c.len() ≥ (m−1)·ldc + n`.
+#[inline]
+pub fn gemm_f32(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!(n <= MAX_N, "n={n} exceeds MAX_N");
+    debug_assert!(a.len() >= (m.saturating_sub(1)) * lda + k);
+    debug_assert!(b.len() >= (k.saturating_sub(1)) * ldb + n);
+    debug_assert!(c.len() >= (m.saturating_sub(1)) * ldc + n);
+    for im in 0..m {
+        let mut acc = [0.0f32; MAX_N];
+        let arow = &a[im * lda..im * lda + k];
+        // k-dimension FMA chain; j-loop is unit-stride and auto-vectorised.
+        for (ik, &av) in arow.iter().enumerate() {
+            let brow = &b[ik * ldb..ik * ldb + n];
+            for j in 0..n {
+                acc[j] = av.mul_add(brow[j], acc[j]);
+            }
+        }
+        let crow = &mut c[im * ldc..im * ldc + n];
+        for j in 0..n {
+            crow[j] += acc[j];
+        }
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]ᵀ-free` variant where **B is accessed
+/// transposed**: `B` is a `n×k` row-major matrix and we compute
+/// `C[i][j] += Σ_l A[i][l] · B[j][l]`.
+///
+/// This is Algorithm 4's `GEMM(In_panel, transpose(Grad_out_panel))`:
+/// both operands are read along their contiguous axis (the width block),
+/// so no transpose materialisation is needed — the dot product itself is
+/// unit-stride.
+#[inline]
+pub fn gemm_f32_bt(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!(a.len() >= (m.saturating_sub(1)) * lda + k);
+    debug_assert!(b.len() >= (n.saturating_sub(1)) * ldb + k);
+    debug_assert!(c.len() >= (m.saturating_sub(1)) * ldc + n);
+    // The dot product is computed in 16 independent lanes so the FMA
+    // dependency chain is broken and the l-loop vectorises (a single
+    // serial `dot = fma(..)` chain is latency-bound at <1 GFLOP/s —
+    // measured; see EXPERIMENTS.md §Perf step 3; a further 4-column
+    // blocking variant was tried and reverted, §Perf step 4).
+    const LANES: usize = 16;
+    let chunks = k / LANES;
+    for im in 0..m {
+        let arow = &a[im * lda..im * lda + k];
+        let crow = &mut c[im * ldc..im * ldc + n];
+        for j in 0..n {
+            let brow = &b[j * ldb..j * ldb + k];
+            let mut part = [0.0f32; LANES];
+            for ch in 0..chunks {
+                let av = &arow[ch * LANES..ch * LANES + LANES];
+                let bv = &brow[ch * LANES..ch * LANES + LANES];
+                for l in 0..LANES {
+                    part[l] = av[l].mul_add(bv[l], part[l]);
+                }
+            }
+            let mut dot = 0.0f32;
+            for l in chunks * LANES..k {
+                dot = arow[l].mul_add(brow[l], dot);
+            }
+            for &p in &part {
+                dot += p;
+            }
+            crow[j] += dot;
+        }
+    }
+}
+
+/// bf16 × bf16 → f32-accumulate GEMM (`VDPBF16PS` semantics): operands are
+/// widened to f32 per element, products accumulate in f32, `C` stays f32.
+#[inline]
+pub fn gemm_bf16(
+    a: &[Bf16],
+    lda: usize,
+    b: &[Bf16],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!(n <= MAX_N, "n={n} exceeds MAX_N");
+    for im in 0..m {
+        let mut acc = [0.0f32; MAX_N];
+        let arow = &a[im * lda..im * lda + k];
+        for (ik, &av) in arow.iter().enumerate() {
+            let av = av.to_f32();
+            let brow = &b[ik * ldb..ik * ldb + n];
+            for j in 0..n {
+                acc[j] = av.mul_add(brow[j].to_f32(), acc[j]);
+            }
+        }
+        let crow = &mut c[im * ldc..im * ldc + n];
+        for j in 0..n {
+            crow[j] += acc[j];
+        }
+    }
+}
+
+/// Reference (naive, obviously-correct) GEMM used only by unit tests.
+#[cfg(test)]
+pub fn gemm_naive(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for l in 0..k {
+                s += a[i * lda + l] * b[l * ldb + j];
+            }
+            c[i * ldc + j] += s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rnd(n: usize, seed: u64) -> Vec<f32> {
+        // splitmix64-based deterministic pseudo-random floats in [-1, 1).
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_add(0x9E3779B97F4A7C15);
+                let mut z = s;
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+                z ^= z >> 31;
+                (z as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    fn check_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + y.abs()),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_square() {
+        for &(m, n, k) in &[(4, 4, 4), (15, 64, 15), (64, 64, 64), (1, 1, 1), (3, 17, 9)] {
+            let a = rnd(m * k, 1);
+            let b = rnd(k * n, 2);
+            let mut c1 = rnd(m * n, 3);
+            let mut c2 = c1.clone();
+            gemm_f32(&a, k, &b, n, &mut c1, n, m, n, k);
+            gemm_naive(&a, k, &b, n, &mut c2, n, m, n, k);
+            check_close(&c1, &c2, 1e-5);
+        }
+    }
+
+    #[test]
+    fn strided_operands() {
+        // Embed operands in larger buffers with padding between rows.
+        let (m, n, k) = (5, 32, 7);
+        let (lda, ldb, ldc) = (k + 3, n + 11, n + 2);
+        let a = rnd(m * lda, 4);
+        let b = rnd(k * ldb, 5);
+        let mut c1 = rnd(m * ldc, 6);
+        let mut c2 = c1.clone();
+        gemm_f32(&a, lda, &b, ldb, &mut c1, ldc, m, n, k);
+        gemm_naive(&a, lda, &b, ldb, &mut c2, ldc, m, n, k);
+        check_close(&c1, &c2, 1e-5);
+        // Padding columns untouched.
+        for i in 0..m {
+            for j in n..ldc.min(c1.len() - i * ldc) {
+                assert_eq!(c1[i * ldc + j], c2[i * ldc + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn bt_variant_matches_explicit_transpose() {
+        let (m, n, k) = (6, 9, 33);
+        let a = rnd(m * k, 7);
+        let bt = rnd(n * k, 8); // n×k row-major == (k×n) transposed
+        // Materialise B = btᵀ for the reference.
+        let mut b = vec![0.0; k * n];
+        for j in 0..n {
+            for l in 0..k {
+                b[l * n + j] = bt[j * k + l];
+            }
+        }
+        let mut c1 = vec![0.5; m * n];
+        let mut c2 = c1.clone();
+        gemm_f32_bt(&a, k, &bt, k, &mut c1, n, m, n, k);
+        gemm_naive(&a, k, &b, n, &mut c2, n, m, n, k);
+        check_close(&c1, &c2, 1e-5);
+    }
+
+    #[test]
+    fn accumulates_rather_than_overwrites() {
+        let (m, n, k) = (2, 3, 2);
+        let a = vec![1.0; m * k];
+        let b = vec![1.0; k * n];
+        let mut c = vec![10.0; m * n];
+        gemm_f32(&a, k, &b, n, &mut c, n, m, n, k);
+        assert!(c.iter().all(|&v| v == 12.0)); // 10 + k*1
+    }
+
+    #[test]
+    fn bf16_matches_f32_at_bf16_precision() {
+        use crate::conv1d::bf16::{quantize, to_bf16};
+        let (m, n, k) = (8, 64, 16);
+        let af = rnd(m * k, 10);
+        let bf = rnd(k * n, 11);
+        let a16 = to_bf16(&af);
+        let b16 = to_bf16(&bf);
+        let mut c_bf = vec![0.0f32; m * n];
+        gemm_bf16(&a16, k, &b16, n, &mut c_bf, n, m, n, k);
+        // Reference: f32 GEMM over bf16-quantised operands.
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm_f32(&quantize(&af), k, &quantize(&bf), n, &mut c_ref, n, m, n, k);
+        check_close(&c_bf, &c_ref, 1e-6); // identical math, tiny fp-order slack
+    }
+}

@@ -1,0 +1,142 @@
+//! im2col + GEMM convolution — the "library baseline" (oneDNN-analog).
+//!
+//! Classical lowering of convolution to one large GEMM (paper Sec. 1,
+//! refs [1, 33]): materialise the patch matrix
+//!
+//! ```text
+//! Col[(c·S + s), q] = In[c, q + d·s]        # (C·S, Q)
+//! Out = W_mat · Col                          # (K, C·S) × (C·S, Q)
+//! ```
+//!
+//! This is what generic 2D-conv libraries degenerate to on 1D data with
+//! long widths: the Col matrix is `S×` larger than the input, so for
+//! `S = 51` the pass moves ~51× more bytes than the BRGEMM formulation —
+//! precisely the inefficiency the paper's Figs. 4–6 show for oneDNN as
+//! `S` and `Q` grow. It is numerically exact, so it doubles as a second
+//! independent oracle for the BRGEMM kernels.
+
+use super::gemm::gemm_f32;
+use super::params::{ConvParams, WIDTH_BLOCK};
+use super::threading::par_batch_chunks;
+
+/// Materialise the im2col patch matrix for one batch element: `(C·S, Q)`.
+pub fn im2col_single(p: &ConvParams, x: &[f32], col: &mut [f32]) {
+    let (c, s, d, w, q) = (p.c, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(x.len(), c * w);
+    debug_assert_eq!(col.len(), c * s * q);
+    for ic in 0..c {
+        for is in 0..s {
+            let src = &x[ic * w + is * d..ic * w + is * d + q];
+            let dst = &mut col[(ic * s + is) * q..(ic * s + is) * q + q];
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+/// Flatten the `(K, C, S)` weight into the `(K, C·S)` GEMM operand.
+/// (The KCS layout is already row-major contiguous in (C, S), so this is
+/// a no-op view; provided for API symmetry and documentation.)
+#[inline]
+pub fn weight_matrix(w_kcs: &[f32]) -> &[f32] {
+    w_kcs
+}
+
+/// Forward pass for one batch element via im2col + blocked GEMM.
+pub fn forward_im2col_single(
+    p: &ConvParams,
+    x: &[f32],
+    w_kcs: &[f32],
+    col: &mut [f32],
+    out: &mut [f32],
+) {
+    let (c, k, s, q) = (p.c, p.k, p.s, p.q());
+    im2col_single(p, x, col);
+    out[..k * q].fill(0.0);
+    // Blocked over the width so the GEMM micro-kernel's stack accumulator
+    // applies; the data movement cost of `col` dominates regardless.
+    let mut pos = 0;
+    while pos < q {
+        let nb = WIDTH_BLOCK.min(q - pos);
+        gemm_f32(
+            weight_matrix(w_kcs),
+            c * s,
+            &col[pos..],
+            q,
+            &mut out[pos..],
+            q,
+            k,
+            nb,
+            c * s,
+        );
+        pos += nb;
+    }
+}
+
+/// Batched im2col forward. Allocates one patch matrix per thread.
+pub fn forward_im2col(p: &ConvParams, x: &[f32], w_kcs: &[f32], out: &mut [f32], threads: usize) {
+    let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(w_kcs.len(), k * c * s, "weight shape mismatch for {p}");
+    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    par_batch_chunks(out, k * q, threads, |i, out_row| {
+        let mut col = vec![0.0f32; c * s * q];
+        forward_im2col_single(p, &x[i * c * w..(i + 1) * c * w], w_kcs, &mut col, out_row);
+    });
+}
+
+/// Extra bytes moved by the im2col materialisation relative to BRGEMM —
+/// used by the machine model to explain the baseline's efficiency cliff.
+pub fn im2col_extra_bytes(p: &ConvParams) -> u64 {
+    // Col write + Col read back in the GEMM, per batch element.
+    2 * (p.n * p.c * p.s * p.q() * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::direct::forward_direct;
+    use crate::conv1d::test_util::rnd;
+
+    #[test]
+    fn matches_direct() {
+        for &(n, c, k, q, s, d) in &[
+            (2, 15, 15, 128, 51, 8),
+            (1, 64, 64, 200, 5, 1),
+            (1, 3, 2, 100, 9, 4),
+            (1, 1, 1, 64, 1, 1),
+            (2, 5, 6, 77, 7, 3),
+        ] {
+            let p = ConvParams::new(n, c, k, q + (s - 1) * d, s, d).unwrap();
+            let x = rnd(p.n * p.c * p.w, 1);
+            let wt = rnd(p.k * p.c * p.s, 2);
+            let mut got = vec![0.0; p.n * p.k * p.q()];
+            forward_im2col(&p, &x, &wt, &mut got, 1);
+            let mut want = vec![0.0; p.n * p.k * p.q()];
+            forward_direct(&p, &x, &wt, &mut want);
+            for (g, w_) in got.iter().zip(&want) {
+                assert!((g - w_).abs() < 1e-4 * (1.0 + w_.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn col_matrix_layout() {
+        let p = ConvParams::new(1, 2, 1, 8, 2, 3).unwrap(); // Q = 5
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut col = vec![0.0; 2 * 2 * 5];
+        im2col_single(&p, &x, &mut col);
+        // Row (c=0, s=0): x[0..5]; row (c=0, s=1): x[3..8];
+        // row (c=1, s=0): x[8..13]; row (c=1, s=1): x[11..16].
+        assert_eq!(&col[0..5], &[0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&col[5..10], &[3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(&col[10..15], &[8.0, 9.0, 10.0, 11.0, 12.0]);
+        assert_eq!(&col[15..20], &[11.0, 12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn traffic_grows_with_s() {
+        let p1 = ConvParams::new(1, 15, 15, 1400, 5, 8).unwrap();
+        let p2 = ConvParams::new(1, 15, 15, 1400, 51, 8).unwrap();
+        assert!(im2col_extra_bytes(&p2) > 5 * im2col_extra_bytes(&p1));
+    }
+}

@@ -1,0 +1,272 @@
+//! `Conv1dLayer` — the public, framework-style layer object.
+//!
+//! Owns the weight (framework layout `(K, C, S)`) plus the two derived
+//! layouts the paper's kernels need, a bias vector, and an implementation
+//! selector. This is the Rust equivalent of the paper's PyTorch C++
+//! extension module: construct once, call `forward` / `backward_*` per
+//! batch, switch `Backend` to compare against the library baseline.
+
+use super::backward_data::backward_data;
+use super::backward_weight::backward_weight;
+use super::bf16::{to_bf16, Bf16};
+use super::direct::{backward_data_direct, forward_direct};
+use super::forward::{forward, forward_bf16};
+use super::im2col::forward_im2col;
+use super::layout::{kcs_to_sck_flipped, kcs_to_skc, pad_width};
+use super::params::ConvParams;
+
+/// Kernel implementation selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The paper's BRGEMM kernels (Algorithms 2–4). Default.
+    #[default]
+    Brgemm,
+    /// im2col + GEMM — the "oneDNN-analog" library baseline.
+    Im2col,
+    /// Naive direct loops — correctness oracle / unoptimised floor.
+    Direct,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "brgemm" | "libxsmm" | "ours" => Ok(Backend::Brgemm),
+            "im2col" | "onednn" | "baseline" => Ok(Backend::Im2col),
+            "direct" | "naive" => Ok(Backend::Direct),
+            other => Err(format!("unknown backend '{other}'")),
+        }
+    }
+}
+
+/// A 1D dilated convolution layer with owned parameters.
+#[derive(Debug, Clone)]
+pub struct Conv1dLayer {
+    /// Input channels.
+    pub c: usize,
+    /// Filters (output channels).
+    pub k: usize,
+    /// Filter width.
+    pub s: usize,
+    /// Dilation.
+    pub d: usize,
+    /// Kernel implementation used by `forward`.
+    pub backend: Backend,
+    /// Threads for the batch-dimension parallelism.
+    pub threads: usize,
+    w_kcs: Vec<f32>,
+    w_skc: Vec<f32>,        // forward layout (S, K, C)
+    w_sck_flip: Vec<f32>,   // backward-data layout (S, C, K), taps reversed
+    w_skc_bf16: Vec<Bf16>,  // bf16 copy of the forward layout
+    /// Per-filter bias (added by `forward_same`, framework-style).
+    pub bias: Vec<f32>,
+}
+
+impl Conv1dLayer {
+    /// Create a layer with the given weight in framework `(K, C, S)` layout.
+    pub fn new(c: usize, k: usize, s: usize, d: usize, w_kcs: Vec<f32>) -> Self {
+        assert_eq!(w_kcs.len(), k * c * s, "weight shape mismatch");
+        assert!(c > 0 && k > 0 && s > 0 && d > 0);
+        let w_skc = kcs_to_skc(&w_kcs, k, c, s);
+        let w_sck_flip = kcs_to_sck_flipped(&w_kcs, k, c, s);
+        let w_skc_bf16 = to_bf16(&w_skc);
+        Conv1dLayer {
+            c,
+            k,
+            s,
+            d,
+            backend: Backend::Brgemm,
+            threads: 1,
+            w_kcs,
+            w_skc,
+            w_sck_flip,
+            w_skc_bf16,
+            bias: vec![0.0; k],
+        }
+    }
+
+    /// Replace the weights (e.g. after an optimiser step); refreshes the
+    /// derived layouts.
+    pub fn set_weights(&mut self, w_kcs: Vec<f32>) {
+        assert_eq!(w_kcs.len(), self.k * self.c * self.s);
+        self.w_skc = kcs_to_skc(&w_kcs, self.k, self.c, self.s);
+        self.w_sck_flip = kcs_to_sck_flipped(&w_kcs, self.k, self.c, self.s);
+        self.w_skc_bf16 = to_bf16(&self.w_skc);
+        self.w_kcs = w_kcs;
+    }
+
+    /// Framework-layout weights `(K, C, S)`.
+    pub fn weights(&self) -> &[f32] {
+        &self.w_kcs
+    }
+
+    /// Problem descriptor for a padded input of width `w`.
+    pub fn params(&self, n: usize, w: usize) -> ConvParams {
+        ConvParams::new(n, self.c, self.k, w, self.s, self.d)
+            .unwrap_or_else(|| panic!("invalid conv problem: w={w} s={} d={}", self.s, self.d))
+    }
+
+    /// Valid convolution over a **pre-padded** `(N, C, W)` input.
+    /// Returns `(N, K, Q)`.
+    pub fn forward(&self, x: &[f32], n: usize, w: usize) -> Vec<f32> {
+        let p = self.params(n, w);
+        let mut out = vec![0.0f32; n * self.k * p.q()];
+        match self.backend {
+            Backend::Brgemm => forward(&p, x, &self.w_skc, &mut out, self.threads),
+            Backend::Im2col => forward_im2col(&p, x, &self.w_kcs, &mut out, self.threads),
+            Backend::Direct => forward_direct(&p, x, &self.w_kcs, &mut out),
+        }
+        out
+    }
+
+    /// Same-padded convolution + bias over an unpadded `(N, C, W)` input.
+    /// Returns `(N, K, W)` — the AtacWorks usage.
+    pub fn forward_same(&self, x: &[f32], n: usize, w: usize) -> Vec<f32> {
+        let (l, r) = ConvParams::same_pad(self.s, self.d);
+        let xp = pad_width(x, n, self.c, w, l, r);
+        let mut out = self.forward(&xp, n, w + l + r);
+        for ib in 0..n {
+            for ik in 0..self.k {
+                let b = self.bias[ik];
+                if b != 0.0 {
+                    for v in &mut out[(ib * self.k + ik) * w..(ib * self.k + ik) * w + w] {
+                        *v += b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// bf16 forward over a pre-padded bf16 input (BRGEMM backend only).
+    pub fn forward_bf16(&self, x: &[Bf16], n: usize, w: usize) -> Vec<Bf16> {
+        let p = self.params(n, w);
+        let mut out = vec![Bf16::ZERO; n * self.k * p.q()];
+        forward_bf16(&p, x, &self.w_skc_bf16, &mut out, self.threads);
+        out
+    }
+
+    /// Data gradient: `gout (N, K, Q)` → `(N, C, W)` (Algorithm 3).
+    pub fn backward_data(&self, gout: &[f32], n: usize, w: usize) -> Vec<f32> {
+        let p = self.params(n, w);
+        let mut gin = vec![0.0f32; n * self.c * w];
+        match self.backend {
+            Backend::Brgemm | Backend::Im2col => {
+                backward_data(&p, gout, &self.w_sck_flip, &mut gin, self.threads)
+            }
+            Backend::Direct => backward_data_direct(&p, gout, &self.w_kcs, &mut gin),
+        }
+        gin
+    }
+
+    /// Weight gradient in `(K, C, S)` layout (Algorithm 4).
+    pub fn backward_weight(&self, gout: &[f32], x: &[f32], n: usize, w: usize) -> Vec<f32> {
+        let p = self.params(n, w);
+        backward_weight(&p, gout, x, self.threads)
+    }
+
+    /// Bias gradient: `Σ_{n,q} gout[n,k,q]` per filter.
+    pub fn backward_bias(&self, gout: &[f32], n: usize, q: usize) -> Vec<f32> {
+        let mut gb = vec![0.0f32; self.k];
+        for ib in 0..n {
+            for ik in 0..self.k {
+                let row = &gout[(ib * self.k + ik) * q..(ib * self.k + ik) * q + q];
+                gb[ik] += row.iter().sum::<f32>();
+            }
+        }
+        gb
+    }
+
+    /// Number of learnable parameters (weights + bias).
+    pub fn param_count(&self) -> usize {
+        self.w_kcs.len() + self.bias.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::test_util::rnd;
+
+    fn layer(c: usize, k: usize, s: usize, d: usize) -> Conv1dLayer {
+        Conv1dLayer::new(c, k, s, d, rnd(k * c * s, 9))
+    }
+
+    #[test]
+    fn backends_agree() {
+        let (n, w) = (2, 300);
+        let l = layer(5, 7, 9, 4);
+        let x = rnd(n * 5 * w, 10);
+        let a = {
+            let mut l = l.clone();
+            l.backend = Backend::Brgemm;
+            l.forward(&x, n, w)
+        };
+        let b = {
+            let mut l = l.clone();
+            l.backend = Backend::Im2col;
+            l.forward(&x, n, w)
+        };
+        let c_ = {
+            let mut l = l.clone();
+            l.backend = Backend::Direct;
+            l.forward(&x, n, w)
+        };
+        for ((x1, x2), x3) in a.iter().zip(&b).zip(&c_) {
+            assert!((x1 - x2).abs() < 1e-4 * (1.0 + x2.abs()));
+            assert!((x1 - x3).abs() < 1e-4 * (1.0 + x3.abs()));
+        }
+    }
+
+    #[test]
+    fn same_padding_preserves_width_and_adds_bias() {
+        let (n, w) = (1, 97);
+        let mut l = layer(3, 4, 5, 2);
+        l.bias = vec![1.0, 2.0, 3.0, 4.0];
+        let x = rnd(n * 3 * w, 11);
+        let out = l.forward_same(&x, n, w);
+        assert_eq!(out.len(), n * 4 * w);
+        // Check the bias offset: zero input ⇒ output == bias everywhere.
+        let zeros = vec![0.0; n * 3 * w];
+        let out0 = l.forward_same(&zeros, n, w);
+        for ik in 0..4 {
+            assert!(out0[ik * w..(ik + 1) * w]
+                .iter()
+                .all(|&v| v == l.bias[ik]));
+        }
+    }
+
+    #[test]
+    fn grad_shapes() {
+        let (n, w) = (2, 140);
+        let l = layer(4, 6, 7, 3);
+        let p = l.params(n, w);
+        let x = rnd(n * 4 * w, 12);
+        let gout = rnd(n * 6 * p.q(), 13);
+        assert_eq!(l.backward_data(&gout, n, w).len(), n * 4 * w);
+        assert_eq!(l.backward_weight(&gout, &x, n, w).len(), 6 * 4 * 7);
+        assert_eq!(l.backward_bias(&gout, n, p.q()).len(), 6);
+    }
+
+    #[test]
+    fn set_weights_refreshes_layouts() {
+        let (n, w) = (1, 80);
+        let mut l = layer(2, 3, 3, 2);
+        let x = rnd(n * 2 * w, 14);
+        let before = l.forward(&x, n, w);
+        let new_w = rnd(3 * 2 * 3, 15);
+        l.set_weights(new_w.clone());
+        let after = l.forward(&x, n, w);
+        assert_ne!(before, after);
+        // And it matches a fresh layer with those weights.
+        let fresh = Conv1dLayer::new(2, 3, 3, 2, new_w).forward(&x, n, w);
+        assert_eq!(after, fresh);
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("onednn".parse::<Backend>().unwrap(), Backend::Im2col);
+        assert_eq!("BRGEMM".parse::<Backend>().unwrap(), Backend::Brgemm);
+        assert!("cuda".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Weight-tensor relayouts (paper Sec. 3.1 / 3.2).
+//!
+//! The framework-native weight layout is `(K, C, S)`. The forward pass
+//! consumes `(S, K, C)` — each tap `s` is then a contiguous `(K, C)` GEMM
+//! operand — and the backward-data pass consumes `(S, C, K)` with the tap
+//! axis *reversed*, which realises Algorithm 3's pointer walk
+//! `B_ptrs[s] = &Grad_out[0, pos − (S−1−s)·d]` as a plain forward-style
+//! BRGEMM over a zero-padded gradient.
+
+/// `(K, C, S) → (S, K, C)`. Forward-pass layout (paper Sec. 3.1).
+pub fn kcs_to_skc(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * c * s, "weight length mismatch");
+    let mut out = vec![0.0; k * c * s];
+    for ik in 0..k {
+        for ic in 0..c {
+            for is in 0..s {
+                out[(is * k + ik) * c + ic] = w[(ik * c + ic) * s + is];
+            }
+        }
+    }
+    out
+}
+
+/// `(K, C, S) → (S, C, K)` with the tap axis reversed.
+/// Backward-data layout (paper Sec. 3.2); the flip encodes `s → S−1−s`.
+pub fn kcs_to_sck_flipped(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * c * s, "weight length mismatch");
+    let mut out = vec![0.0; k * c * s];
+    for ik in 0..k {
+        for ic in 0..c {
+            for is in 0..s {
+                out[((s - 1 - is) * c + ic) * k + ik] = w[(ik * c + ic) * s + is];
+            }
+        }
+    }
+    out
+}
+
+/// `(S, C, K) → (K, C, S)`. Inverse of the backward-weight accumulator
+/// layout: Algorithm 4 accumulates `Grad_w` in `(S, C, K)` panels and the
+/// framework stores gradients in `(K, C, S)`.
+pub fn sck_to_kcs(w: &[f32], s: usize, c: usize, k: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * c * s, "weight length mismatch");
+    let mut out = vec![0.0; k * c * s];
+    for is in 0..s {
+        for ic in 0..c {
+            for ik in 0..k {
+                out[(ik * c + ic) * s + is] = w[(is * c + ic) * k + ik];
+            }
+        }
+    }
+    out
+}
+
+/// `(S, K, C) → (K, C, S)`. Inverse of [`kcs_to_skc`]; used by tests and
+/// by checkpoint export.
+pub fn skc_to_kcs(w: &[f32], s: usize, k: usize, c: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * c * s, "weight length mismatch");
+    let mut out = vec![0.0; k * c * s];
+    for is in 0..s {
+        for ik in 0..k {
+            for ic in 0..c {
+                out[(ik * c + ic) * s + is] = w[(is * k + ik) * c + ic];
+            }
+        }
+    }
+    out
+}
+
+/// Zero-pad a `(N, C, W)` tensor along the width axis.
+pub fn pad_width(x: &[f32], n: usize, c: usize, w: usize, left: usize, right: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * c * w, "input length mismatch");
+    let wp = w + left + right;
+    let mut out = vec![0.0; n * c * wp];
+    for i in 0..n {
+        for j in 0..c {
+            let src = &x[(i * c + j) * w..(i * c + j) * w + w];
+            let dst = &mut out[(i * c + j) * wp + left..(i * c + j) * wp + left + w];
+            dst.copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Remove `left`/`right` columns from a `(N, C, W)` tensor.
+pub fn unpad_width(x: &[f32], n: usize, c: usize, w: usize, left: usize, right: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * c * w, "input length mismatch");
+    let wu = w - left - right;
+    let mut out = vec![0.0; n * c * wu];
+    for i in 0..n {
+        for j in 0..c {
+            let src = &x[(i * c + j) * w + left..(i * c + j) * w + left + wu];
+            out[(i * c + j) * wu..(i * c + j) * wu + wu].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn skc_roundtrip() {
+        let (k, c, s) = (4, 3, 5);
+        let w = iota(k * c * s);
+        assert_eq!(skc_to_kcs(&kcs_to_skc(&w, k, c, s), s, k, c), w);
+    }
+
+    #[test]
+    fn sck_flip_semantics() {
+        let (k, c, s) = (2, 3, 4);
+        let w = iota(k * c * s);
+        let sck = kcs_to_sck_flipped(&w, k, c, s);
+        for is in 0..s {
+            for ic in 0..c {
+                for ik in 0..k {
+                    assert_eq!(
+                        sck[(is * c + ic) * k + ik],
+                        w[(ik * c + ic) * s + (s - 1 - is)],
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sck_to_kcs_inverts_unflipped_layout() {
+        // Build an (S,C,K) tensor directly and check indexing convention.
+        let (s, c, k) = (3, 2, 4);
+        let sck = iota(s * c * k);
+        let kcs = sck_to_kcs(&sck, s, c, k);
+        for is in 0..s {
+            for ic in 0..c {
+                for ik in 0..k {
+                    assert_eq!(kcs[(ik * c + ic) * s + is], sck[(is * c + ic) * k + ik]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let (n, c, w) = (2, 3, 7);
+        let x = iota(n * c * w);
+        let padded = pad_width(&x, n, c, w, 2, 5);
+        assert_eq!(padded.len(), n * c * (w + 7));
+        assert_eq!(unpad_width(&padded, n, c, w + 7, 2, 5), x);
+        // Edges are zero.
+        assert_eq!(padded[0], 0.0);
+        assert_eq!(padded[1], 0.0);
+        assert_eq!(padded[2], 0.0); // first data element is x[0] == 0 too
+        assert_eq!(padded[3], 1.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! The paper's contribution: an efficient, generic 1D dilated convolution
+//! layer built on small-GEMM / batch-reduce-GEMM kernels with width
+//! blocking (Chaudhary et al., 2021, Sec. 3).
+//!
+//! Module map (see DESIGN.md §5):
+//! * [`params`]  — problem descriptors, shape math, FLOP counts
+//! * [`layout`]  — weight relayouts `(K,C,S) ↔ (S,K,C) ↔ (S,C,K)`
+//! * [`gemm`]    — small-GEMM micro-kernels (the LIBXSMM analog)
+//! * [`brgemm`]  — batch-reduce GEMM (paper eq. 3)
+//! * [`forward`] / [`backward_data`] / [`backward_weight`] — Algorithms 2–4
+//! * [`bf16`]    — BFloat16 storage + `VDPBF16PS`-semantics kernels
+//! * [`im2col`]  — the library baseline (oneDNN-analog)
+//! * [`direct`]  — naive oracle / unoptimised floor
+//! * [`layer`]   — the framework-facing `Conv1dLayer` object
+//! * [`threading`] — batch-dimension parallelism
+
+pub mod backward_data;
+pub mod backward_weight;
+pub mod bf16;
+pub mod brgemm;
+pub mod direct;
+pub mod forward;
+pub mod gemm;
+pub mod im2col;
+pub mod layer;
+pub mod layout;
+pub mod params;
+pub mod threading;
+
+pub use layer::{Backend, Conv1dLayer};
+pub use params::{ConvParams, WIDTH_BLOCK};
+
+/// Deterministic pseudo-random test vectors (splitmix64-derived), shared by
+/// unit tests, integration tests and benches.
+pub mod test_util {
+    /// `n` floats in `[-0.5, 0.5)`, deterministic in `seed`.
+    pub fn rnd(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                let mut z = s;
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                z ^= z >> 31;
+                (z as f64 / u64::MAX as f64) as f32 - 0.5
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,186 @@
+//! Convolution problem descriptors and shape math (paper Sec. 2).
+//!
+//! Conventions follow the paper exactly:
+//!   input  `In`     : (N, C, W)  — batch, channels, width (**pre-padded**)
+//!   weight `Weight` : (K, C, S)  — filters, channels, filter width
+//!   output `Out`    : (N, K, Q)  with `Q = W - (S-1)·d` (valid convolution)
+//!
+//! `same`-padding helpers compute the zero pad that makes `Q == W_unpadded`,
+//! which is how the AtacWorks workload drives the layer (50 000-wide
+//! segments padded to 60 000, paper Sec. 4.2).
+
+/// Width-block length used by every kernel. The paper (Sec. 3) keeps the
+/// block equal to 64 elements so that one GEMM dimension stays inside
+/// LIBXSMM's cache-friendly problem-size bound `(m·n·k)^(1/3) ≤ 64`.
+pub const WIDTH_BLOCK: usize = 64;
+
+/// A fully-specified 1D dilated convolution problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvParams {
+    /// Batch size `N`.
+    pub n: usize,
+    /// Input channels `C`.
+    pub c: usize,
+    /// Number of filters (output channels) `K`.
+    pub k: usize,
+    /// Padded input width `W`.
+    pub w: usize,
+    /// Filter width `S`.
+    pub s: usize,
+    /// Dilation `d` (standard convolution is `d = 1`).
+    pub d: usize,
+}
+
+impl ConvParams {
+    /// Construct and validate a problem descriptor.
+    ///
+    /// Returns `None` if any dimension is zero or the input is too narrow
+    /// to produce at least one output column.
+    pub fn new(n: usize, c: usize, k: usize, w: usize, s: usize, d: usize) -> Option<Self> {
+        let p = ConvParams { n, c, k, w, s, d };
+        if n == 0 || c == 0 || k == 0 || w == 0 || s == 0 || d == 0 {
+            return None;
+        }
+        if (s - 1) * d >= w {
+            return None;
+        }
+        Some(p)
+    }
+
+    /// Output width `Q = W − (S−1)·d` (paper eq. 2, valid convolution).
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.w - (self.s - 1) * self.d
+    }
+
+    /// Receptive-field span of the dilated filter: `(S−1)·d + 1` input
+    /// columns contribute to each output column.
+    #[inline]
+    pub fn span(&self) -> usize {
+        (self.s - 1) * self.d + 1
+    }
+
+    /// FLOPs of one forward pass: `2·N·C·K·Q·S` (MACs × 2), the
+    /// denominator of the paper's efficiency plots.
+    #[inline]
+    pub fn flops(&self) -> u64 {
+        2 * self.n as u64 * self.c as u64 * self.k as u64 * self.q() as u64 * self.s as u64
+    }
+
+    /// `(left, right)` zero padding so that `Q == W` for an *unpadded*
+    /// input of width `w_unpadded`.
+    pub fn same_pad(s: usize, d: usize) -> (usize, usize) {
+        let total = (s - 1) * d;
+        (total / 2, total - total / 2)
+    }
+
+    /// Descriptor for the problem after `same`-padding an unpadded width.
+    pub fn with_same_padding(
+        n: usize,
+        c: usize,
+        k: usize,
+        w_unpadded: usize,
+        s: usize,
+        d: usize,
+    ) -> Option<Self> {
+        let (l, r) = Self::same_pad(s, d);
+        Self::new(n, c, k, w_unpadded + l + r, s, d)
+    }
+
+    /// Number of width blocks in the forward pass (`ceil(Q / 64)`).
+    #[inline]
+    pub fn q_blocks(&self) -> usize {
+        self.q().div_ceil(WIDTH_BLOCK)
+    }
+
+    /// The paper's LIBXSMM problem-size heuristic: the per-block GEMM is
+    /// cache-optimal whenever `sqrt(C·K) ≤ 64` (Sec. 3.1).
+    #[inline]
+    pub fn cache_optimal(&self) -> bool {
+        self.c * self.k <= 64 * 64
+    }
+
+    /// Paper eq. (4): the parameter region where the BRGEMM layer is
+    /// expected to beat the library baseline.
+    #[inline]
+    pub fn favours_brgemm(&self) -> bool {
+        self.s >= 5 && self.q() >= 1000
+    }
+
+    /// Byte size of the input tensor (f32).
+    pub fn input_bytes(&self) -> usize {
+        self.n * self.c * self.w * 4
+    }
+
+    /// Byte size of the weight tensor (f32).
+    pub fn weight_bytes(&self) -> usize {
+        self.k * self.c * self.s * 4
+    }
+
+    /// Byte size of the output tensor (f32).
+    pub fn output_bytes(&self) -> usize {
+        self.n * self.k * self.q() * 4
+    }
+}
+
+impl std::fmt::Display for ConvParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "N{}·C{}·K{}·W{}·S{}·d{} (Q={})",
+            self.n,
+            self.c,
+            self.k,
+            self.w,
+            self.s,
+            self.d,
+            self.q()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_matches_paper_examples() {
+        // Fig. 1: C=5, W=17, K=4, S=3, d=3 -> Q = 17 - 2*3 = 11 on the
+        // valid region (the paper pads to keep Q = 17; our same_pad does).
+        let p = ConvParams::new(1, 5, 4, 17, 3, 3).unwrap();
+        assert_eq!(p.q(), 11);
+        let (l, r) = ConvParams::same_pad(3, 3);
+        assert_eq!(l + r, 6);
+        let padded = ConvParams::with_same_padding(1, 5, 4, 17, 3, 3).unwrap();
+        assert_eq!(padded.q(), 17);
+    }
+
+    #[test]
+    fn atacworks_shape() {
+        // 50_000-wide segment padded by 5_000 on each side (Sec. 4.2).
+        let p = ConvParams::new(1, 15, 15, 60_000, 51, 8).unwrap();
+        assert_eq!(p.q(), 60_000 - 50 * 8);
+        assert!(p.favours_brgemm());
+        assert!(p.cache_optimal());
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(ConvParams::new(0, 1, 1, 10, 1, 1).is_none());
+        assert!(ConvParams::new(1, 1, 1, 10, 5, 4).is_none()); // span 17 > 10
+        assert!(ConvParams::new(1, 1, 1, 10, 1, 0).is_none());
+    }
+
+    #[test]
+    fn flops_formula() {
+        let p = ConvParams::new(1, 15, 15, 1000 + 50 * 8, 51, 8).unwrap();
+        assert_eq!(p.flops(), 2 * 15 * 15 * 1000 * 51);
+    }
+
+    #[test]
+    fn span_and_blocks() {
+        let p = ConvParams::new(1, 1, 1, 1000, 51, 8).unwrap();
+        assert_eq!(p.span(), 401);
+        assert_eq!(p.q_blocks(), p.q().div_ceil(64));
+    }
+}

@@ -1,0 +1,118 @@
+//! Batch-dimension work partitioning (paper Sec. 2: "We employ
+//! multithreading across the batch dimension (N) in the forward pass and
+//! the backward pass kernels").
+//!
+//! The output tensor is split into disjoint per-sample rows handed to
+//! scoped OS threads — each "thread" plays the role of one CPU core of the
+//! paper's 28-core socket. Work is distributed round-robin so ragged
+//! batches stay balanced. With `threads == 1` no thread is spawned (the
+//! single-core fast path used by the benchmarks on this host).
+
+/// Apply `f(batch_index, chunk)` to every `chunk_len`-sized row of `out`,
+/// distributing rows across `threads` scoped threads.
+///
+/// `f` must be `Sync` (it is shared by reference) and is called exactly
+/// once per batch element, in-order within a thread.
+pub fn par_batch_chunks<F>(out: &mut [f32], chunk_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert_eq!(out.len() % chunk_len, 0, "output not divisible into rows");
+    let n = out.len() / chunk_len;
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 {
+        for (i, chunk) in out.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // Hand out rows round-robin: thread `tid` gets rows tid, tid+t, ...
+    let rows: Vec<(usize, &mut [f32])> = out.chunks_mut(chunk_len).enumerate().collect();
+    let mut buckets: Vec<Vec<(usize, &mut [f32])>> = (0..t).map(|_| Vec::new()).collect();
+    for (i, row) in rows {
+        buckets[i % t].push((i, row));
+    }
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            let f = &f;
+            scope.spawn(move || {
+                for (i, row) in bucket {
+                    f(i, row);
+                }
+            });
+        }
+    });
+}
+
+/// Generic bf16 variant of [`par_batch_chunks`].
+pub fn par_batch_chunks_bf16<F>(
+    out: &mut [super::bf16::Bf16],
+    chunk_len: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [super::bf16::Bf16]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert_eq!(out.len() % chunk_len, 0, "output not divisible into rows");
+    let n = out.len() / chunk_len;
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 {
+        for (i, chunk) in out.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let rows: Vec<(usize, &mut [super::bf16::Bf16])> =
+        out.chunks_mut(chunk_len).enumerate().collect();
+    let mut buckets: Vec<Vec<(usize, &mut [super::bf16::Bf16])>> =
+        (0..t).map(|_| Vec::new()).collect();
+    for (i, row) in rows {
+        buckets[i % t].push((i, row));
+    }
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            let f = &f;
+            scope.spawn(move || {
+                for (i, row) in bucket {
+                    f(i, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_row_once() {
+        let mut out = vec![0.0f32; 7 * 3];
+        let count = AtomicUsize::new(0);
+        par_batch_chunks(&mut out, 3, 4, |i, chunk| {
+            count.fetch_add(1, Ordering::SeqCst);
+            chunk.fill(i as f32 + 1.0);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 7);
+        for i in 0..7 {
+            assert!(out[i * 3..(i + 1) * 3].iter().all(|&v| v == i as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let mut out = vec![0.0f32; 4];
+        par_batch_chunks(&mut out, 2, 1, |i, chunk| chunk.fill(i as f32));
+        assert_eq!(out, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let mut out = vec![0.0f32; 2];
+        par_batch_chunks(&mut out, 1, 16, |i, chunk| chunk.fill(i as f32 + 5.0));
+        assert_eq!(out, vec![5.0, 6.0]);
+    }
+}

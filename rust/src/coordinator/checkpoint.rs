@@ -1,0 +1,108 @@
+//! Checkpointing: save/load the flat parameter vector in a tiny
+//! self-describing binary format (magic + version + length + LE f32 data
+//! + xor checksum). Interoperates with both the native and PJRT paths,
+//! which share the flat packing order.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"DC1D";
+const VERSION: u32 = 1;
+
+fn checksum(data: &[f32]) -> u32 {
+    let mut x = 0xDEAD_BEEFu32;
+    for v in data {
+        x ^= v.to_bits();
+        x = x.rotate_left(7);
+    }
+    x
+}
+
+/// Save a flat parameter vector.
+pub fn save(path: impl AsRef<Path>, params: &[f32]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    f.write_all(&checksum(params).to_le_bytes())?;
+    let mut buf = Vec::with_capacity(params.len() * 4);
+    for v in params {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a flat parameter vector, validating magic/version/checksum.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+    let mut head = [0u8; 4 + 4 + 8 + 4];
+    f.read_exact(&mut head).context("reading header")?;
+    if &head[0..4] != MAGIC {
+        bail!("not a dilconv1d checkpoint (bad magic)");
+    }
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let len = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+    let want_sum = u32::from_le_bytes(head[16..20].try_into().unwrap());
+    let mut buf = vec![0u8; len * 4];
+    f.read_exact(&mut buf).context("reading parameters")?;
+    let params: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    if checksum(&params) != want_sum {
+        bail!("checkpoint checksum mismatch (corrupt file)");
+    }
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("dilconv_ckpt_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt.ckpt");
+        let params: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        save(&p, &params).unwrap();
+        assert_eq!(load(&p).unwrap(), params);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt.ckpt");
+        save(&p, &[1.0, 2.0, 3.0]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("checksum"));
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("bad.ckpt");
+        std::fs::write(&p, b"NOPE0000000000000000000000").unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn empty_params_roundtrip() {
+        let p = tmp("empty.ckpt");
+        save(&p, &[]).unwrap();
+        assert_eq!(load(&p).unwrap(), Vec::<f32>::new());
+    }
+}

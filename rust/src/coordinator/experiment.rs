@@ -1,0 +1,131 @@
+//! Experiment descriptors: the paper's published numbers, encoded so the
+//! benchmark harness can print paper-vs-reproduced tables (DESIGN.md §6).
+
+/// One row of paper Table 1 (single-socket end-to-end training).
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Row {
+    pub device: &'static str,
+    pub code: &'static str,
+    pub precision: &'static str,
+    /// Training time per epoch, seconds ("—" encoded as NaN for V100).
+    pub time_per_epoch: f64,
+    pub auroc: f64,
+}
+
+/// Paper Table 1 (Sec. 4.4).
+pub const TABLE1: &[Table1Row] = &[
+    Table1Row { device: "1 V100", code: "CUDA", precision: "FP32", time_per_epoch: f64::NAN, auroc: 0.9386 },
+    Table1Row { device: "1s CLX", code: "oneDNN", precision: "FP32", time_per_epoch: 9690.4, auroc: 0.9388 },
+    Table1Row { device: "1s CLX", code: "LIBXSMM", precision: "FP32", time_per_epoch: 1411.9, auroc: 0.9388 },
+    Table1Row { device: "1s CPX", code: "LIBXSMM", precision: "FP32", time_per_epoch: 1254.8, auroc: 0.9387 },
+    Table1Row { device: "1s CPX", code: "LIBXSMM", precision: "BF16", time_per_epoch: 769.6, auroc: 0.9378 },
+];
+
+/// Headline single-socket speedup of Table 1: oneDNN / LIBXSMM on CLX.
+pub fn table1_clx_speedup() -> f64 {
+    9690.4 / 1411.9 // = 6.86×
+}
+
+/// One row of paper Table 2 (16-socket vs DGX-1).
+#[derive(Debug, Clone, Copy)]
+pub struct Table2Row {
+    pub device: &'static str,
+    pub precision: &'static str,
+    pub time_per_epoch: f64,
+    pub auroc: f64,
+    pub speedup_vs_v100: f64,
+}
+
+/// Paper Table 2 (Sec. 4.5.2).
+pub const TABLE2: &[Table2Row] = &[
+    Table2Row { device: "8 V100", precision: "FP32", time_per_epoch: 162.0, auroc: f64::NAN, speedup_vs_v100: 1.00 },
+    Table2Row { device: "16s CLX", precision: "FP32", time_per_epoch: 115.0, auroc: 0.9345, speedup_vs_v100: 1.41 },
+    Table2Row { device: "16s CPX", precision: "FP32", time_per_epoch: 103.1, auroc: 0.9341, speedup_vs_v100: 1.57 },
+    Table2Row { device: "8s CPX", precision: "BF16", time_per_epoch: 122.8, auroc: 0.9346, speedup_vs_v100: 1.32 },
+    Table2Row { device: "16s CPX", precision: "BF16", time_per_epoch: 71.3, auroc: 0.9323, speedup_vs_v100: 2.27 },
+];
+
+/// Paper Sec. 4.3 parameter sweep sets.
+pub const SWEEP_WIDTHS: &[usize] = &[1_000, 2_000, 5_000, 10_000, 20_000, 60_000];
+pub const SWEEP_CHANNELS: &[usize] = &[1, 4, 8, 10, 15, 16, 32, 64];
+pub const SWEEP_FILTERS: &[usize] = &[1, 4, 8, 10, 15, 16, 32, 64];
+pub const SWEEP_FILTER_SIZES: &[usize] = &[1, 5, 9, 15, 21, 25, 31, 49, 51];
+pub const SWEEP_DILATIONS: &[usize] = &[1, 2, 4, 8, 16];
+
+/// Figure-4 family: C=15, K=15, d=8 on CLX, FP32, batch 56.
+pub fn fig4_grid() -> Vec<(usize, usize, usize, usize, usize)> {
+    // (c, k, q, s, d)
+    let mut v = Vec::new();
+    for &s in &[5usize, 9, 15, 21, 25, 31, 49, 51] {
+        for &q in SWEEP_WIDTHS {
+            v.push((15, 15, q, s, 8));
+        }
+    }
+    v
+}
+
+/// Figure-5 family: C=64, K=64, d=1 (standard conv) on CLX, FP32.
+pub fn fig5_grid() -> Vec<(usize, usize, usize, usize, usize)> {
+    let mut v = Vec::new();
+    for &s in &[5usize, 9, 15, 21, 25, 31, 49, 51] {
+        for &q in SWEEP_WIDTHS {
+            v.push((64, 64, q, s, 1));
+        }
+    }
+    v
+}
+
+/// Figure-6 family: C=32, K=32, d=4 on CPX, BF16 vs FP32 baseline.
+pub fn fig6_grid() -> Vec<(usize, usize, usize, usize, usize)> {
+    let mut v = Vec::new();
+    for &s in &[5usize, 9, 15, 21, 25, 31, 49, 51] {
+        for &q in SWEEP_WIDTHS {
+            v.push((32, 32, q, s, 4));
+        }
+    }
+    v
+}
+
+/// Eq.-4 condition grid: crossing S and Q around the claimed boundary.
+pub fn eq4_grid() -> Vec<(usize, usize, usize, usize, usize)> {
+    let mut v = Vec::new();
+    for &s in &[1usize, 3, 5, 9, 51] {
+        for &q in &[200usize, 500, 1_000, 5_000, 20_000] {
+            v.push((15, 15, q, s, 8));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_speedups_are_consistent() {
+        assert!((table1_clx_speedup() - 6.86).abs() < 0.01);
+        for row in TABLE2 {
+            if row.device == "8 V100" {
+                continue;
+            }
+            let implied = 162.0 / row.time_per_epoch;
+            assert!(
+                (implied - row.speedup_vs_v100).abs() < 0.015,
+                "{}: implied {implied} vs published {}",
+                row.device,
+                row.speedup_vs_v100
+            );
+        }
+    }
+
+    #[test]
+    fn grids_cover_paper_corners() {
+        let f4 = fig4_grid();
+        assert!(f4.contains(&(15, 15, 60_000, 51, 8)));
+        let f5 = fig5_grid();
+        assert!(f5.contains(&(64, 64, 1_000, 5, 1)));
+        let f6 = fig6_grid();
+        assert!(f6.iter().all(|&(c, k, _, _, d)| c == 32 && k == 32 && d == 4));
+        assert_eq!(f4.len(), 48);
+    }
+}

@@ -1,0 +1,9 @@
+//! Training coordinator: the epoch loop with simulated multi-socket data
+//! parallelism ([`trainer`]), checkpointing ([`checkpoint`]) and the
+//! paper-experiment descriptors ([`experiment`]).
+
+pub mod checkpoint;
+pub mod experiment;
+pub mod trainer;
+
+pub use trainer::{EpochReport, Trainer};

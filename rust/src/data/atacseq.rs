@@ -1,0 +1,253 @@
+//! Synthetic ATAC-seq signal-track generator — the dataset substrate.
+//!
+//! The paper trains AtacWorks on real dsc-ATAC-seq coverage tracks that we
+//! do not have; this module synthesises tracks with the same computational
+//! and statistical structure (DESIGN.md §4, substitution 1):
+//!
+//! * 1D integer-ish coverage (reads per base) with a low Poisson background,
+//! * sparse *peaks* — regions of a few hundred bases with lognormal
+//!   amplitude and smooth (Gaussian-bump) shape,
+//! * a paired *noisy* track produced by read subsampling
+//!   (`noisy ~ Poisson(clean · rate) / rate`) — the "low-coverage /
+//!   low-quality" input AtacWorks denoises,
+//! * binary peak labels for the classification head.
+//!
+//! Tracks are generated deterministically from `(seed, segment_index)`, so
+//! the "dataset" needs no storage: any worker can materialise any shard.
+
+use crate::util::rng::Rng;
+
+/// Generation parameters for one segment family.
+#[derive(Debug, Clone, Copy)]
+pub struct TrackConfig {
+    /// Unpadded segment width (paper: 50 000).
+    pub width: usize,
+    /// Zero padding added to both sides (paper: 5 000 → total 60 000).
+    pub pad: usize,
+    /// Background read rate per base (Poisson λ).
+    pub background_rate: f64,
+    /// Expected number of peaks per 10 000 bases.
+    pub peaks_per_10kb: f64,
+    /// Mean peak half-width in bases.
+    pub peak_halfwidth: f64,
+    /// Lognormal (μ, σ) of peak amplitude.
+    pub amp_mu: f64,
+    pub amp_sigma: f64,
+    /// Read subsampling rate for the noisy track (paper-style low coverage).
+    pub subsample: f64,
+}
+
+impl Default for TrackConfig {
+    fn default() -> Self {
+        TrackConfig {
+            width: 50_000,
+            pad: 5_000,
+            background_rate: 0.4,
+            peaks_per_10kb: 1.2,
+            peak_halfwidth: 150.0,
+            amp_mu: 2.2,
+            amp_sigma: 0.6,
+            subsample: 0.1,
+        }
+    }
+}
+
+impl TrackConfig {
+    /// A width-scaled copy (keeps densities constant). Used to run the
+    /// paper's workload at reduced width on this host.
+    pub fn scaled(&self, width: usize) -> TrackConfig {
+        TrackConfig {
+            width,
+            pad: (self.pad as f64 * width as f64 / self.width as f64).round() as usize,
+            ..*self
+        }
+    }
+
+    /// Total (padded) track width — the convolution input width.
+    pub fn padded_width(&self) -> usize {
+        self.width + 2 * self.pad
+    }
+}
+
+/// One (noisy, clean, peak-label) training triple, all at padded width.
+#[derive(Debug, Clone)]
+pub struct SignalTrack {
+    /// Noisy low-coverage input (network input).
+    pub noisy: Vec<f32>,
+    /// Clean high-coverage target (regression target).
+    pub clean: Vec<f32>,
+    /// Binary peak labels (classification target).
+    pub peaks: Vec<f32>,
+}
+
+/// Generate the segment with the given index, deterministically.
+pub fn generate_track(cfg: &TrackConfig, seed: u64, index: u64) -> SignalTrack {
+    let mut rng = Rng::new(seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+    let w = cfg.width;
+    let wp = cfg.padded_width();
+
+    // 1. Smooth peak intensity field.
+    let mut intensity = vec![0.0f64; w];
+    let n_peaks = rng
+        .poisson(cfg.peaks_per_10kb * w as f64 / 10_000.0)
+        .max(1);
+    let mut peak_mask = vec![false; w];
+    for _ in 0..n_peaks {
+        let center = rng.below(w) as f64;
+        let half = (cfg.peak_halfwidth * rng.lognormal(0.0, 0.35)).max(20.0);
+        let amp = rng.lognormal(cfg.amp_mu, cfg.amp_sigma);
+        let lo = ((center - 4.0 * half).floor().max(0.0)) as usize;
+        let hi = ((center + 4.0 * half).ceil() as usize).min(w);
+        for i in lo..hi {
+            let z = (i as f64 - center) / half;
+            intensity[i] += amp * (-0.5 * z * z).exp();
+            if z.abs() <= 1.5 {
+                peak_mask[i] = true;
+            }
+        }
+    }
+
+    // 2. Clean coverage: Poisson(background + intensity).
+    // 3. Noisy coverage: Poisson(rate · λ) — a subsampled sequencing run.
+    let mut clean = vec![0.0f32; wp];
+    let mut noisy = vec![0.0f32; wp];
+    let mut peaks = vec![0.0f32; wp];
+    for i in 0..w {
+        let lam = cfg.background_rate + intensity[i];
+        clean[cfg.pad + i] = rng.poisson(lam) as f32;
+        noisy[cfg.pad + i] = rng.poisson(lam * cfg.subsample) as f32;
+        peaks[cfg.pad + i] = if peak_mask[i] { 1.0 } else { 0.0 };
+    }
+    SignalTrack { noisy, clean, peaks }
+}
+
+/// Assemble `indices` into `(N, 1, Wp)` batch tensors.
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub clean: Vec<f32>,
+    pub peaks: Vec<f32>,
+    pub n: usize,
+    pub width: usize,
+}
+
+/// Materialise a batch of tracks (row-major `(N, 1, Wp)`).
+pub fn make_batch(cfg: &TrackConfig, seed: u64, indices: &[u64]) -> Batch {
+    let wp = cfg.padded_width();
+    let n = indices.len();
+    let mut x = vec![0.0f32; n * wp];
+    let mut clean = vec![0.0f32; n * wp];
+    let mut peaks = vec![0.0f32; n * wp];
+    for (row, &idx) in indices.iter().enumerate() {
+        let t = generate_track(cfg, seed, idx);
+        x[row * wp..(row + 1) * wp].copy_from_slice(&t.noisy);
+        clean[row * wp..(row + 1) * wp].copy_from_slice(&t.clean);
+        peaks[row * wp..(row + 1) * wp].copy_from_slice(&t.peaks);
+    }
+    Batch {
+        x,
+        clean,
+        peaks,
+        n,
+        width: wp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TrackConfig {
+        TrackConfig::default().scaled(2_000)
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let cfg = small();
+        let a = generate_track(&cfg, 42, 7);
+        let b = generate_track(&cfg, 42, 7);
+        let c = generate_track(&cfg, 42, 8);
+        assert_eq!(a.clean, b.clean);
+        assert_ne!(a.clean, c.clean);
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let cfg = small();
+        let t = generate_track(&cfg, 1, 0);
+        assert_eq!(t.clean.len(), cfg.padded_width());
+        assert!(t.clean[..cfg.pad].iter().all(|&v| v == 0.0));
+        assert!(t.clean[cfg.pad + cfg.width..].iter().all(|&v| v == 0.0));
+        assert!(t.peaks[..cfg.pad].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn coverage_is_nonnegative_integerish() {
+        let cfg = small();
+        let t = generate_track(&cfg, 3, 1);
+        for &v in &t.clean {
+            assert!(v >= 0.0 && v.fract() == 0.0);
+        }
+    }
+
+    #[test]
+    fn noisy_is_subsampled() {
+        let cfg = small();
+        let mut tot_clean = 0.0f64;
+        let mut tot_noisy = 0.0f64;
+        for i in 0..20 {
+            let t = generate_track(&cfg, 5, i);
+            tot_clean += t.clean.iter().map(|&v| v as f64).sum::<f64>();
+            tot_noisy += t.noisy.iter().map(|&v| v as f64).sum::<f64>();
+        }
+        let ratio = tot_noisy / tot_clean;
+        assert!(
+            (ratio - cfg.subsample).abs() < 0.05,
+            "subsample ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn peaks_are_sparse_but_present() {
+        let cfg = small();
+        let mut frac = 0.0;
+        for i in 0..10 {
+            let t = generate_track(&cfg, 9, i);
+            frac += t.peaks.iter().sum::<f32>() as f64 / cfg.width as f64;
+        }
+        frac /= 10.0;
+        assert!(frac > 0.005 && frac < 0.5, "peak fraction {frac}");
+    }
+
+    #[test]
+    fn peak_regions_have_higher_signal() {
+        let cfg = small();
+        let mut in_peak = (0.0f64, 0u64);
+        let mut out_peak = (0.0f64, 0u64);
+        for i in 0..10 {
+            let t = generate_track(&cfg, 11, i);
+            for j in cfg.pad..cfg.pad + cfg.width {
+                if t.peaks[j] > 0.5 {
+                    in_peak = (in_peak.0 + t.clean[j] as f64, in_peak.1 + 1);
+                } else {
+                    out_peak = (out_peak.0 + t.clean[j] as f64, out_peak.1 + 1);
+                }
+            }
+        }
+        let mi = in_peak.0 / in_peak.1.max(1) as f64;
+        let mo = out_peak.0 / out_peak.1.max(1) as f64;
+        assert!(mi > 3.0 * mo, "in-peak {mi} vs background {mo}");
+    }
+
+    #[test]
+    fn batch_layout() {
+        let cfg = small();
+        let b = make_batch(&cfg, 1, &[0, 1, 2]);
+        assert_eq!(b.n, 3);
+        assert_eq!(b.x.len(), 3 * cfg.padded_width());
+        let t1 = generate_track(&cfg, 1, 1);
+        assert_eq!(
+            &b.x[cfg.padded_width()..2 * cfg.padded_width()],
+            &t1.noisy[..]
+        );
+    }
+}

@@ -1,0 +1,206 @@
+//! Dataset bookkeeping: chromosome-style splits and epoch shuffling.
+//!
+//! The paper holds out chromosome 20 for validation and chromosome 10 for
+//! testing, training on all other autosomes (Sec. 4.2). We reproduce the
+//! same protocol: every synthetic segment is deterministically assigned to
+//! one of 22 "autosomes" (weighted roughly like human chromosome lengths),
+//! and the three splits are carved out by chromosome — so train/val/test
+//! never share a chromosome, exactly like the paper.
+
+use crate::util::rng::Rng;
+
+/// Which split a segment belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Validation,
+    Test,
+}
+
+/// Chromosome held out for validation (paper: chr20).
+pub const VAL_CHROMOSOME: u8 = 20;
+/// Chromosome held out for testing (paper: chr10).
+pub const TEST_CHROMOSOME: u8 = 10;
+
+/// Deterministic chromosome assignment of a segment index: 1..=22,
+/// weighted by a coarse human-autosome length profile.
+pub fn chromosome_of(seed: u64, index: u64) -> u8 {
+    // Relative autosome lengths (Mb, rounded): chr1..chr22.
+    const LEN: [u32; 22] = [
+        249, 243, 198, 190, 182, 171, 159, 146, 141, 136, 135, 133, 114, 107, 102, 90, 83, 80,
+        59, 63, 47, 51,
+    ];
+    const TOTAL: u32 = {
+        let mut t = 0;
+        let mut i = 0;
+        while i < 22 {
+            t += LEN[i];
+            i += 1;
+        }
+        t
+    };
+    let mut rng = Rng::new(seed ^ 0xC0FF_EE00 ^ index.wrapping_mul(0x2545_F491_4F6C_DD1D));
+    let mut r = rng.below(TOTAL as usize) as u32;
+    for (i, &l) in LEN.iter().enumerate() {
+        if r < l {
+            return (i + 1) as u8;
+        }
+        r -= l;
+    }
+    22
+}
+
+/// Split of a segment index under the paper's protocol.
+pub fn split_of(seed: u64, index: u64) -> Split {
+    match chromosome_of(seed, index) {
+        VAL_CHROMOSOME => Split::Validation,
+        TEST_CHROMOSOME => Split::Test,
+        _ => Split::Train,
+    }
+}
+
+/// A logical dataset: `total` segments generated from `seed`, partitioned
+/// into chromosome-based splits.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub seed: u64,
+    pub train: Vec<u64>,
+    pub validation: Vec<u64>,
+    pub test: Vec<u64>,
+}
+
+impl Dataset {
+    /// Scan `total` segment indices into splits.
+    pub fn new(seed: u64, total: u64) -> Self {
+        let mut train = Vec::new();
+        let mut validation = Vec::new();
+        let mut test = Vec::new();
+        for i in 0..total {
+            match split_of(seed, i) {
+                Split::Train => train.push(i),
+                Split::Validation => validation.push(i),
+                Split::Test => test.push(i),
+            }
+        }
+        Dataset {
+            seed,
+            train,
+            validation,
+            test,
+        }
+    }
+
+    /// Build a dataset whose *train* split has (at least) `train_target`
+    /// segments — the paper quotes training-set sizes (e.g. 32 000).
+    pub fn with_train_size(seed: u64, train_target: usize) -> Self {
+        // Train fraction ≈ (TOTAL − len20 − len10) / TOTAL ≈ 0.90.
+        let mut total = (train_target as f64 / 0.88) as u64 + 64;
+        loop {
+            let ds = Dataset::new(seed, total);
+            // Also require non-empty held-out splits so evaluation is
+            // always defined, even for tiny test datasets.
+            if ds.train.len() >= train_target
+                && !ds.validation.is_empty()
+                && !ds.test.is_empty()
+            {
+                let mut ds = ds;
+                ds.train.truncate(train_target);
+                return ds;
+            }
+            total += (train_target / 10 + 64) as u64;
+        }
+    }
+
+    /// Fisher–Yates shuffle of the training order for one epoch
+    /// (deterministic in `(seed, epoch)`).
+    pub fn epoch_order(&self, epoch: u64) -> Vec<u64> {
+        let mut order = self.train.clone();
+        let mut rng = Rng::new(self.seed ^ 0xE90C_17 ^ epoch.wrapping_mul(0x9E37_79B9));
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i + 1);
+            order.swap(i, j);
+        }
+        order
+    }
+
+    /// Shard a segment list across `shards` workers (contiguous blocks;
+    /// the remainder spreads over the leading shards).
+    pub fn shard(list: &[u64], shards: usize) -> Vec<Vec<u64>> {
+        let n = list.len();
+        let base = n / shards;
+        let extra = n % shards;
+        let mut out = Vec::with_capacity(shards);
+        let mut off = 0;
+        for sh in 0..shards {
+            let len = base + usize::from(sh < extra);
+            out.push(list[off..off + len].to_vec());
+            off += len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_are_disjoint_and_cover() {
+        let ds = Dataset::new(3, 5_000);
+        assert_eq!(
+            ds.train.len() + ds.validation.len() + ds.test.len(),
+            5_000
+        );
+        for &i in &ds.validation {
+            assert_eq!(chromosome_of(3, i), VAL_CHROMOSOME);
+        }
+        for &i in &ds.test {
+            assert_eq!(chromosome_of(3, i), TEST_CHROMOSOME);
+        }
+    }
+
+    #[test]
+    fn split_proportions_match_chromosome_weights() {
+        let ds = Dataset::new(1, 50_000);
+        let vf = ds.validation.len() as f64 / 50_000.0;
+        let tf = ds.test.len() as f64 / 50_000.0;
+        // chr20 ≈ 63/2779 ≈ 2.3%, chr10 ≈ 136/2779 ≈ 4.9%.
+        assert!((vf - 0.023).abs() < 0.006, "val fraction {vf}");
+        assert!((tf - 0.049).abs() < 0.008, "test fraction {tf}");
+    }
+
+    #[test]
+    fn with_train_size_hits_target() {
+        let ds = Dataset::with_train_size(9, 1_000);
+        assert_eq!(ds.train.len(), 1_000);
+        assert!(!ds.validation.is_empty());
+    }
+
+    #[test]
+    fn epoch_order_is_permutation_and_varies() {
+        let ds = Dataset::new(5, 2_000);
+        let e0 = ds.epoch_order(0);
+        let e1 = ds.epoch_order(1);
+        assert_ne!(e0, e1);
+        let mut s0 = e0.clone();
+        let mut st = ds.train.clone();
+        s0.sort_unstable();
+        st.sort_unstable();
+        assert_eq!(s0, st);
+        // Deterministic.
+        assert_eq!(e0, ds.epoch_order(0));
+    }
+
+    #[test]
+    fn sharding_is_balanced_partition() {
+        let list: Vec<u64> = (0..103).collect();
+        let shards = Dataset::shard(&list, 4);
+        assert_eq!(shards.len(), 4);
+        let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        let mut all: Vec<u64> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, list);
+    }
+}

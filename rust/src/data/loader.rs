@@ -1,0 +1,146 @@
+//! Prefetching batch loader — the PyTorch-`DataLoader()`-worker analog.
+//!
+//! The paper reserves one CPU core per socket for the `DataLoader()`
+//! worker (Sec. 4.4); here a dedicated OS thread generates batches ahead
+//! of the trainer through a bounded channel, overlapping data synthesis
+//! with compute exactly like the paper's pipeline. The machine model
+//! accounts for the reserved core when projecting socket-level timings.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::atacseq::{make_batch, Batch, TrackConfig};
+
+/// A background loader streaming batches for one epoch.
+pub struct Loader {
+    /// `Some` while the epoch is live; dropped before joining the worker
+    /// so a blocked `send` unblocks with an error instead of deadlocking.
+    rx: Option<mpsc::Receiver<Batch>>,
+    handle: Option<JoinHandle<()>>,
+    /// Number of batches this epoch will produce.
+    pub n_batches: usize,
+}
+
+impl Loader {
+    /// Spawn a prefetch worker over `order` (segment indices), producing
+    /// `batch_size`-sized batches (last ragged batch dropped, as the
+    /// paper's fixed-batch training does). `depth` bounds the prefetch
+    /// queue (1–2 emulates the single DataLoader worker).
+    pub fn spawn(cfg: TrackConfig, seed: u64, order: Vec<u64>, batch_size: usize, depth: usize) -> Loader {
+        assert!(batch_size > 0);
+        let n_batches = order.len() / batch_size;
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            for b in 0..n_batches {
+                let idx = &order[b * batch_size..(b + 1) * batch_size];
+                let batch = make_batch(&cfg, seed, idx);
+                if tx.send(batch).is_err() {
+                    return; // consumer dropped early
+                }
+            }
+        });
+        Loader {
+            rx: Some(rx),
+            handle: Some(handle),
+            n_batches,
+        }
+    }
+
+    /// Blocking receive of the next batch; `None` when the epoch ends.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        self.rx.as_ref()?.recv().ok()
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        // Drop the receiver FIRST: a worker blocked in `send` sees the
+        // disconnect and exits; only then is joining safe.
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Synchronous (no-thread) batch iterator used by tests and benches where
+/// determinism of scheduling matters more than overlap.
+pub struct SyncLoader {
+    cfg: TrackConfig,
+    seed: u64,
+    order: Vec<u64>,
+    batch_size: usize,
+    cursor: usize,
+}
+
+impl SyncLoader {
+    pub fn new(cfg: TrackConfig, seed: u64, order: Vec<u64>, batch_size: usize) -> Self {
+        SyncLoader {
+            cfg,
+            seed,
+            order,
+            batch_size,
+            cursor: 0,
+        }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.order.len() / self.batch_size
+    }
+}
+
+impl Iterator for SyncLoader {
+    type Item = Batch;
+    fn next(&mut self) -> Option<Batch> {
+        if self.cursor + self.batch_size > self.order.len() {
+            return None;
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch_size];
+        self.cursor += self.batch_size;
+        Some(make_batch(&self.cfg, self.seed, idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrackConfig {
+        TrackConfig::default().scaled(1_000)
+    }
+
+    #[test]
+    fn loader_streams_all_batches() {
+        let order: Vec<u64> = (0..10).collect();
+        let mut l = Loader::spawn(cfg(), 7, order, 3, 2);
+        assert_eq!(l.n_batches, 3);
+        let mut seen = 0;
+        while let Some(b) = l.next_batch() {
+            assert_eq!(b.n, 3);
+            assert_eq!(b.width, cfg().padded_width());
+            seen += 1;
+        }
+        assert_eq!(seen, 3); // ragged tail (index 9) dropped
+    }
+
+    #[test]
+    fn loader_matches_sync_loader() {
+        let order: Vec<u64> = (0..6).collect();
+        let mut l = Loader::spawn(cfg(), 9, order.clone(), 2, 1);
+        let s = SyncLoader::new(cfg(), 9, order, 2);
+        for sync_batch in s {
+            let async_batch = l.next_batch().unwrap();
+            assert_eq!(async_batch.x, sync_batch.x);
+            assert_eq!(async_batch.peaks, sync_batch.peaks);
+        }
+        assert!(l.next_batch().is_none());
+    }
+
+    #[test]
+    fn early_drop_does_not_deadlock() {
+        let order: Vec<u64> = (0..100).collect();
+        let mut l = Loader::spawn(cfg(), 1, order, 2, 1);
+        let _ = l.next_batch();
+        drop(l); // must not hang
+    }
+}

@@ -1,0 +1,11 @@
+//! Data pipeline: synthetic ATAC-seq generation ([`atacseq`]),
+//! chromosome-split datasets ([`dataset`]) and the prefetching batch
+//! loader ([`loader`]) — the DataLoader-worker analog of paper Sec. 4.4.
+
+pub mod atacseq;
+pub mod dataset;
+pub mod loader;
+
+pub use atacseq::{generate_track, make_batch, Batch, SignalTrack, TrackConfig};
+pub use dataset::{Dataset, Split};
+pub use loader::{Loader, SyncLoader};

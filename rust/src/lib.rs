@@ -1,0 +1,31 @@
+//! # dilconv1d
+//!
+//! Rust + JAX + Pallas reproduction of *"Efficient and Generic 1D Dilated
+//! Convolution Layer for Deep Learning"* (Chaudhary et al., 2021).
+//!
+//! The crate is a three-layer system (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the framework: the paper's BRGEMM convolution
+//!   kernels ([`conv1d`]), a native training engine ([`model`]), a data
+//!   pipeline ([`data`]), metrics ([`metrics`]), a simulated multi-socket
+//!   runtime ([`dist`]), machine models of the paper's testbeds
+//!   ([`machine`]), the training coordinator ([`coordinator`]), the
+//!   benchmark harness ([`bench_harness`]) and a TOML config system
+//!   ([`config`]).
+//! * **L2/L1 (Python, build-time only)** — a JAX AtacWorks model with
+//!   Pallas conv kernels, AOT-lowered to HLO text executed by [`runtime`]
+//!   through the PJRT CPU client. Python never runs on the training path.
+
+pub mod bench_harness;
+pub mod config;
+pub mod conv1d;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod machine;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+pub use conv1d::{Backend, Conv1dLayer, ConvParams};

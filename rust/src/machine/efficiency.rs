@@ -1,0 +1,88 @@
+//! Efficiency accounting: converts measured kernel wall-clock into the
+//! paper's "% of machine peak" metric, and translates host measurements
+//! onto the paper's testbeds at equal efficiency (DESIGN.md §4,
+//! substitution 3).
+
+use super::spec::{MachineSpec, Precision};
+
+/// One measured kernel run.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// FLOPs of the pass (2·N·C·K·Q·S).
+    pub flops: u64,
+    /// Wall-clock seconds.
+    pub secs: f64,
+    /// Threads (cores) the run used.
+    pub threads: usize,
+}
+
+impl Measurement {
+    /// Achieved FLOP/s.
+    pub fn flops_per_sec(&self) -> f64 {
+        self.flops as f64 / self.secs
+    }
+
+    /// Efficiency versus `spec`'s peak using `threads` cores of it.
+    pub fn efficiency_on(&self, spec: &MachineSpec, prec: Precision) -> f64 {
+        let peak = spec.peak_per_core(prec) * self.threads.min(spec.cores) as f64;
+        (self.flops_per_sec() / peak).min(1.5)
+    }
+
+    /// Project this measurement's *efficiency* onto another machine:
+    /// time the same problem would take on `target` at equal fraction of
+    /// peak, using `target_threads` cores.
+    pub fn project_time(
+        &self,
+        host: &MachineSpec,
+        target: &MachineSpec,
+        prec: Precision,
+        target_threads: usize,
+    ) -> f64 {
+        let eff = self.efficiency_on(host, prec);
+        let target_peak =
+            target.peak_per_core(prec) * target_threads.min(target.cores) as f64;
+        self.flops as f64 / (eff.max(1e-6) * target_peak)
+    }
+}
+
+/// GFLOP/s pretty formatting for report tables.
+pub fn gflops(flops: u64, secs: f64) -> f64 {
+    flops as f64 / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_math() {
+        let host = MachineSpec::host(10.0); // 10 GFLOP/s, 1 core
+        let m = Measurement {
+            flops: 5_000_000_000,
+            secs: 1.0,
+            threads: 1,
+        };
+        // 5 GFLOP/s on a 10 GFLOP/s core = 50 %.
+        assert!((m.efficiency_on(&host, Precision::F32) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_preserves_efficiency() {
+        let host = MachineSpec::host(10.0);
+        let clx = MachineSpec::cascade_lake();
+        let m = Measurement {
+            flops: 8_000_000_000,
+            secs: 1.0,
+            threads: 1,
+        };
+        let t = m.project_time(&host, &clx, Precision::F32, 27);
+        // Equal efficiency on 27 CLX cores (27 · 153.6 GF = 4.147 TF peak):
+        // time = 8e9 / (0.8 · 4.147e12) ≈ 2.41 ms.
+        assert!((t - 8e9 / (0.8 * 27.0 * (4.3e12 / 28.0))).abs() / t < 1e-6);
+    }
+
+    #[test]
+    fn gflops_helper() {
+        assert!((gflops(2_000_000_000, 0.5) - 4.0).abs() < 1e-12);
+    }
+}

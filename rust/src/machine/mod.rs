@@ -1,0 +1,12 @@
+//! Machine models of the paper's testbeds (CLX / CPX / V100) plus the
+//! roofline+cache projection used to report paper-scale numbers from this
+//! host's measurements. See DESIGN.md §4, substitution 3.
+
+pub mod efficiency;
+pub mod roofline;
+pub mod spec;
+pub mod workload;
+
+pub use efficiency::{gflops, Measurement};
+pub use roofline::{calibrate_host, project, Projection, Strategy};
+pub use spec::{MachineSpec, Precision};

@@ -1,0 +1,153 @@
+//! Machine models of the paper's testbeds (Sec. 4.1) — the hardware
+//! substitution substrate (DESIGN.md §4, substitution 3).
+
+/// Floating-point precision of a kernel run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+}
+
+/// A CPU-socket (or GPU) performance description.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineSpec {
+    pub name: &'static str,
+    /// Physical cores per socket.
+    pub cores: usize,
+    /// Base clock (Hz).
+    pub base_hz: f64,
+    /// All-core turbo clock (Hz) — the paper enables turbo.
+    pub turbo_hz: f64,
+    /// Peak FP32 FLOP/s per socket.
+    pub peak_f32: f64,
+    /// Peak BF16 FLOP/s per socket (== f32 peak when unsupported).
+    pub peak_bf16: f64,
+    /// Per-core L2 bytes.
+    pub l2_bytes: usize,
+    /// Shared L3 bytes.
+    pub l3_bytes: usize,
+    /// Sustainable DRAM bandwidth per socket (bytes/s).
+    pub dram_bw: f64,
+}
+
+impl MachineSpec {
+    /// Intel Xeon Platinum 8280 — Cascade Lake (paper Sec. 4.1):
+    /// 28 cores @ 2.7 GHz base / 4.0 GHz max turbo, AVX-512,
+    /// 4.3 TFLOPS FP32 peak, 1 MB L2/core, 38.5 MB L3.
+    pub fn cascade_lake() -> Self {
+        MachineSpec {
+            name: "CLX",
+            cores: 28,
+            base_hz: 2.7e9,
+            turbo_hz: 4.0e9,
+            peak_f32: 4.3e12,
+            peak_bf16: 4.3e12, // no AVX512-BF16 on CLX
+            l2_bytes: 1 << 20,
+            l3_bytes: 38_500_000,
+            dram_bw: 120e9,
+        }
+    }
+
+    /// Intel Xeon Platinum 8380HL — Cooper Lake (paper Sec. 4.1):
+    /// 28 cores @ 2.9 GHz / 4.3 GHz turbo, AVX-512 + AVX512-BF16,
+    /// 4.66 TFLOPS FP32 / 9.32 TFLOPS BF16.
+    pub fn cooper_lake() -> Self {
+        MachineSpec {
+            name: "CPX",
+            cores: 28,
+            base_hz: 2.9e9,
+            turbo_hz: 4.3e9,
+            peak_f32: 4.66e12,
+            peak_bf16: 9.32e12,
+            l2_bytes: 1 << 20,
+            l3_bytes: 38_500_000,
+            dram_bw: 140e9,
+        }
+    }
+
+    /// Nvidia V100 (DGX-1 member, paper Sec. 4.5.2 comparison).
+    /// 15.7 TFLOPS FP32; AtacWorks uses the CUDA FP32 path.
+    pub fn v100() -> Self {
+        MachineSpec {
+            name: "V100",
+            cores: 80, // SMs
+            base_hz: 1.53e9,
+            turbo_hz: 1.53e9,
+            peak_f32: 15.7e12,
+            peak_bf16: 15.7e12,
+            l2_bytes: 6 << 20,
+            l3_bytes: 6 << 20,
+            dram_bw: 900e9,
+        }
+    }
+
+    /// The host this repository actually runs on: a single core with
+    /// `measured_gflops` sustained f32 GEMM throughput (calibrated at
+    /// startup by [`super::roofline::calibrate_host`]).
+    pub fn host(measured_gflops: f64) -> Self {
+        MachineSpec {
+            name: "HOST",
+            cores: 1,
+            base_hz: 3.0e9,
+            turbo_hz: 3.0e9,
+            peak_f32: measured_gflops * 1e9,
+            peak_bf16: measured_gflops * 1e9,
+            l2_bytes: 1 << 20,
+            l3_bytes: 32 << 20,
+            dram_bw: 20e9,
+        }
+    }
+
+    /// Peak FLOP/s for a precision.
+    pub fn peak(&self, prec: Precision) -> f64 {
+        match prec {
+            Precision::F32 => self.peak_f32,
+            Precision::Bf16 => self.peak_bf16,
+        }
+    }
+
+    /// Peak per core.
+    pub fn peak_per_core(&self, prec: Precision) -> f64 {
+        self.peak(prec) / self.cores as f64
+    }
+
+    /// Parse a spec by name ("clx", "cpx", "v100").
+    pub fn by_name(name: &str) -> Option<MachineSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "clx" | "cascade" | "cascadelake" => Some(Self::cascade_lake()),
+            "cpx" | "cooper" | "cooperlake" => Some(Self::cooper_lake()),
+            "v100" | "gpu" => Some(Self::v100()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peaks() {
+        let clx = MachineSpec::cascade_lake();
+        assert_eq!(clx.peak(Precision::F32), 4.3e12);
+        let cpx = MachineSpec::cooper_lake();
+        assert_eq!(cpx.peak(Precision::Bf16), 9.32e12);
+        // BF16 peak is exactly 2× the FP32 peak on CPX (paper Sec. 4.1).
+        assert_eq!(cpx.peak_bf16 / cpx.peak_f32, 2.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(MachineSpec::by_name("CLX").unwrap().name, "CLX");
+        assert_eq!(MachineSpec::by_name("cooper").unwrap().name, "CPX");
+        assert!(MachineSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn per_core_peak() {
+        let clx = MachineSpec::cascade_lake();
+        // 4.3 TF / 28 cores ≈ 153.6 GF per core.
+        let pc = clx.peak_per_core(Precision::F32);
+        assert!((pc - 153.57e9).abs() < 1e9);
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end AtacWorks epoch-time model: composes the per-layer roofline
+//! projections, the data-parallel topology and the α–β communication model
+//! into the paper's Table 1 / Table 2 / Figs 7–10 quantities.
+//!
+//! Time per epoch =
+//!     Σ_steps [ max-shard compute (fwd + bwd over 25 conv layers) ]
+//!   + Σ_steps [ ring all-reduce of the parameter-sized gradient ]
+//!   + eval time (single-threaded-per-socket, does not scale — Sec. 4.5.2)
+
+use crate::conv1d::ConvParams;
+use crate::dist::comm_model::CommModel;
+use crate::dist::topology::Topology;
+use crate::machine::roofline::{project, Strategy};
+use crate::machine::spec::{MachineSpec, Precision};
+use crate::model::NetConfig;
+
+/// The paper's end-to-end workload constants (Sec. 4.2).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub net: NetConfig,
+    /// Padded segment width (60 000).
+    pub width: usize,
+    /// Training segments per epoch (32 000).
+    pub train_segments: usize,
+    /// Validation segments (1 280).
+    pub val_segments: usize,
+}
+
+impl Workload {
+    pub fn paper() -> Self {
+        Workload {
+            net: NetConfig::default(),
+            width: 60_000,
+            train_segments: 32_000,
+            val_segments: 1_280,
+        }
+    }
+
+    /// §4.5.3 long-segment variant: 600 000-wide, 4 191 segments.
+    pub fn long_segments() -> Self {
+        Workload {
+            net: NetConfig::default(),
+            width: 600_000,
+            train_segments: 4_191,
+            val_segments: 101,
+        }
+    }
+
+    /// §4.5.4 large-dataset variant: 293 242 segments.
+    pub fn large_dataset() -> Self {
+        Workload {
+            train_segments: 293_242,
+            val_segments: 2_520,
+            ..Workload::paper()
+        }
+    }
+
+    /// Forward FLOPs of one sample through all conv layers.
+    pub fn fwd_flops_per_sample(&self) -> u64 {
+        self.net
+            .layer_shapes()
+            .iter()
+            .map(|&(k, c, s)| 2 * (k * c * s * self.width) as u64)
+            .sum()
+    }
+
+    /// Train FLOPs of one sample: forward + backward-data + backward-weight
+    /// ≈ 3× forward (each backward pass has the same MAC count, Alg. 3/4).
+    pub fn train_flops_per_sample(&self) -> u64 {
+        3 * self.fwd_flops_per_sample()
+    }
+
+    /// Flat parameter count (gradient length for the all-reduce).
+    pub fn param_count(&self) -> usize {
+        self.net.param_count()
+    }
+}
+
+/// Modelled epoch-time breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochModel {
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    pub eval_secs: f64,
+}
+
+impl EpochModel {
+    pub fn total(&self) -> f64 {
+        self.compute_secs + self.comm_secs + self.eval_secs
+    }
+}
+
+/// Sustained per-socket training throughput (FLOP/s) for the workload's
+/// dominant layer under a kernel strategy.
+pub fn socket_throughput(
+    w: &Workload,
+    spec: &MachineSpec,
+    prec: Precision,
+    strategy: Strategy,
+    topo: &Topology,
+) -> f64 {
+    // Dominant layer: the ch→ch dilated conv.
+    let p = ConvParams::with_same_padding(
+        topo.paper_batch_size() / topo.sockets,
+        w.net.channels,
+        w.net.channels,
+        w.width,
+        w.net.filter_size,
+        w.net.dilation,
+    )
+    .expect("invalid workload layer");
+    let proj = project(&p, strategy, spec, prec, topo.compute_cores());
+    proj.efficiency * spec.peak_per_core(prec) * topo.compute_cores() as f64
+}
+
+/// Model a full training epoch on `topo` sockets of `spec`.
+pub fn model_epoch(
+    w: &Workload,
+    spec: &MachineSpec,
+    prec: Precision,
+    strategy: Strategy,
+    topo: &Topology,
+    comm: &CommModel,
+) -> EpochModel {
+    let tput = socket_throughput(w, spec, prec, strategy, topo);
+    let total_flops = w.train_flops_per_sample() as f64 * w.train_segments as f64;
+    let compute_secs = total_flops / (tput * topo.sockets as f64);
+
+    let global_batch = topo.paper_batch_size();
+    let steps = w.train_segments / global_batch.max(1);
+    let comm_secs = steps as f64 * comm.ring_allreduce_secs(w.param_count(), topo.sockets);
+
+    // Evaluation "is single threaded and doesn't scale" (Sec. 4.5.2):
+    // one socket's throughput regardless of the topology.
+    let topo1 = Topology::new(1, topo.cores_per_socket);
+    let tput1 = socket_throughput(w, spec, prec, strategy, &topo1);
+    let eval_secs = w.fwd_flops_per_sample() as f64 * w.val_segments as f64 / tput1;
+
+    EpochModel {
+        compute_secs,
+        comm_secs,
+        eval_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_per_sample_matches_hand_count() {
+        let w = Workload::paper();
+        // Σ 2·k·c·s·W: stem 15·1 + 22 blocks·225 + heads 2·15 channels·filters
+        let units: usize = w.net.layer_shapes().iter().map(|&(k, c, _)| k * c).sum();
+        assert_eq!(units, 15 + 22 * 225 + 2 * 15);
+        assert_eq!(
+            w.fwd_flops_per_sample(),
+            2 * (units * 51 * 60_000) as u64
+        );
+    }
+
+    #[test]
+    fn table1_shape_onednn_vs_brgemm() {
+        // Paper Table 1: oneDNN 9690 s vs LIBXSMM 1412 s on 1s CLX (6.86×).
+        let w = Workload::paper();
+        let clx = MachineSpec::cascade_lake();
+        let topo = Topology::xeon(1);
+        let comm = CommModel::upi();
+        let ours = model_epoch(&w, &clx, Precision::F32, Strategy::Brgemm, &topo, &comm);
+        let lib = model_epoch(&w, &clx, Precision::F32, Strategy::Im2col, &topo, &comm);
+        let speedup = lib.total() / ours.total();
+        assert!(
+            speedup > 2.0 && speedup < 12.0,
+            "modeled oneDNN/BRGEMM speedup {speedup} out of plausible band"
+        );
+        // Modeled LIBXSMM CLX epoch in the same order of magnitude as 1412 s.
+        assert!(
+            ours.total() > 300.0 && ours.total() < 5_000.0,
+            "modeled epoch {}s",
+            ours.total()
+        );
+    }
+
+    #[test]
+    fn scaling_is_near_linear_to_16_sockets() {
+        let w = Workload::paper();
+        let cpx = MachineSpec::cooper_lake();
+        let comm = CommModel::fabric();
+        let t1 = model_epoch(&w, &cpx, Precision::F32, Strategy::Brgemm, &Topology::xeon(1), &comm);
+        let t16 = model_epoch(&w, &cpx, Precision::F32, Strategy::Brgemm, &Topology::xeon(16), &comm);
+        // Compute scales ~16x, eval does not; speedup lands well below 16
+        // but comfortably above 4 (paper Fig. 8 shows near-linear *train*).
+        let sp = t1.total() / t16.total();
+        assert!(sp > 4.0 && sp <= 16.0, "16-socket speedup {sp}");
+        let train_sp = t1.compute_secs / (t16.compute_secs + t16.comm_secs);
+        assert!(train_sp > 10.0, "train-only speedup {train_sp}");
+    }
+
+    #[test]
+    fn bf16_on_cpx_beats_f32() {
+        let w = Workload::paper();
+        let cpx = MachineSpec::cooper_lake();
+        let comm = CommModel::fabric();
+        let topo = Topology::xeon(16);
+        let f = model_epoch(&w, &cpx, Precision::F32, Strategy::Brgemm, &topo, &comm);
+        let b = model_epoch(&w, &cpx, Precision::Bf16, Strategy::Brgemm, &topo, &comm);
+        let sp = f.total() / b.total();
+        assert!(sp > 1.2 && sp < 2.1, "bf16 speedup {sp}");
+    }
+
+    #[test]
+    fn long_segment_epoch_larger_per_segment() {
+        let w = Workload::long_segments();
+        assert_eq!(w.fwd_flops_per_sample() / Workload::paper().fwd_flops_per_sample(), 10);
+    }
+}

@@ -1,0 +1,574 @@
+//! `dilconv` — the launcher CLI for the dilconv1d framework.
+//!
+//! Subcommands (see README.md):
+//!   train            end-to-end AtacWorks training (native engine)
+//!   sweep            regenerate Fig. 4/5/6 and the eq. 4 grid
+//!   scaling          regenerate Figs. 8/9/10 and Table 2
+//!   bench            regenerate Table 1 / §4.5.3 / §4.5.4 projections
+//!   calibrate        measure host peak GFLOP/s
+//!   artifacts-check  verify the AOT artifacts against the native kernels
+//!   data-gen         inspect the synthetic ATAC-seq generator
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--key=value`); the
+//! offline build has no clap.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dilconv1d::bench_harness::tables::{markdown, pct, secs, speedup, write_csv};
+use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
+use dilconv1d::config::TrainConfig;
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{Backend, ConvParams};
+use dilconv1d::coordinator::{checkpoint, experiment, Trainer};
+use dilconv1d::data::atacseq::TrackConfig;
+use dilconv1d::data::generate_track;
+use dilconv1d::dist::{CommModel, Topology};
+use dilconv1d::machine::workload::{model_epoch, Workload};
+use dilconv1d::machine::{calibrate_host, MachineSpec, Precision, Strategy};
+use dilconv1d::runtime::{Registry, Session, TrainState};
+
+/// Parsed command line: subcommand + `--key value` flags.
+struct Args {
+    cmd: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument '{a}' (flags are --key value)"))?;
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), rest[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+            }
+            i += 1;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "scaling" => cmd_scaling(&args),
+        "bench" => cmd_bench(&args),
+        "calibrate" => cmd_calibrate(),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "data-gen" => cmd_data_gen(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `dilconv help`)"),
+    }
+}
+
+const HELP: &str = "\
+dilconv — efficient & generic 1D dilated convolution layer (paper reproduction)
+
+USAGE: dilconv <subcommand> [--flags]
+
+  train            train the AtacWorks-like network on synthetic ATAC-seq
+                   [--config cfg.toml] [--epochs N] [--batch N] [--sockets N]
+                   [--width N] [--pad N] [--segments N] [--channels N]
+                   [--blocks N] [--backend brgemm|onednn|direct] [--lr F]
+                   [--threads N] [--seed N] [--checkpoint out.ckpt]
+  sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
+                   --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
+                   [--reps N] [--batch N] [--max-q N]
+  scaling          multi-socket scaling (Figs. 8/9/10, Table 2)
+                   [--precision fp32|bf16] [--measure]
+  bench            end-to-end projections --experiment table1|table2|
+                   long-segment|large-dataset
+  calibrate        measure host sustained GFLOP/s
+  artifacts-check  run AOT HLO artifacts and compare with native kernels
+                   [--dir artifacts] [--train-steps N]
+  data-gen         synthetic ATAC-seq stats [--segments N] [--width N]
+";
+
+// ------------------------------------------------------------------ train
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => TrainConfig::from_file(p)?,
+        None => TrainConfig::default(),
+    };
+    cfg.epochs = args.usize("epochs", cfg.epochs)?;
+    cfg.batch_size = args.usize("batch", cfg.batch_size)?;
+    cfg.sockets = args.usize("sockets", cfg.sockets)?;
+    cfg.segment_width = args.usize("width", cfg.segment_width)?;
+    cfg.segment_pad = args.usize("pad", cfg.segment_pad)?;
+    cfg.train_segments = args.usize("segments", cfg.train_segments)?;
+    cfg.channels = args.usize("channels", cfg.channels)?;
+    cfg.n_blocks = args.usize("blocks", cfg.n_blocks)?;
+    cfg.threads_per_socket = args.usize("threads", cfg.threads_per_socket)?;
+    cfg.seed = args.usize("seed", cfg.seed as usize)? as u64;
+    cfg.lr = args.f64("lr", cfg.lr)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    println!(
+        "training AtacWorks-like net: {} conv layers, ch={}, S={}, d={}, W={} (padded {}), \
+         {} train segments, batch {}, {} sockets, backend {:?}",
+        1 + 2 * cfg.n_blocks + 2,
+        cfg.channels,
+        cfg.filter_size,
+        cfg.dilation,
+        cfg.segment_width,
+        cfg.padded_width(),
+        cfg.train_segments,
+        cfg.batch_size,
+        cfg.sockets,
+        cfg.backend,
+    );
+    let mut trainer = Trainer::new(cfg.clone())?;
+    println!("parameters: {}", trainer.param_count());
+    let reports = trainer.train(|r| {
+        println!(
+            "epoch {:>3}  loss {:.5}  (mse {:.5} bce {:.5})  val_mse {:.5}  val_auroc {}  \
+             train {:.2}s eval {:.2}s comm(model) {:.3}s  [{} steps]",
+            r.epoch,
+            r.train_loss,
+            r.train_mse,
+            r.train_bce,
+            r.val_mse,
+            r.val_auroc.map_or("n/a".into(), |a| format!("{a:.4}")),
+            r.timing.train_secs,
+            r.timing.eval_secs,
+            r.modeled_comm_secs,
+            r.steps,
+        );
+    });
+    if let (Some(first), Some(last)) = (reports.first(), reports.last()) {
+        println!(
+            "loss {:.5} -> {:.5} over {} epochs; final AUROC {}",
+            first.train_loss,
+            last.train_loss,
+            reports.len(),
+            last.val_auroc.map_or("n/a".into(), |a| format!("{a:.4}")),
+        );
+    }
+    if let Some(path) = args.get("checkpoint") {
+        checkpoint::save(path, trainer.params())?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ sweep
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let figure = args.get("figure").unwrap_or("fig4");
+    let quick = args.bool("quick");
+    let reps = args.usize("reps", if quick { 2 } else { 3 })?;
+    let batch = args.usize("batch", 2)?;
+    let max_q = args.usize("max-q", if quick { 5_000 } else { 60_000 })?;
+    let (grid, precision, machine, label) = match figure {
+        "fig4" => (experiment::fig4_grid(), Precision::F32, MachineSpec::cascade_lake(), "Fig. 4: C=15 K=15 d=8, FP32, CLX"),
+        "fig5" => (experiment::fig5_grid(), Precision::F32, MachineSpec::cascade_lake(), "Fig. 5: C=64 K=64 d=1, FP32, CLX"),
+        "fig6" => (experiment::fig6_grid(), Precision::Bf16, MachineSpec::cooper_lake(), "Fig. 6: C=32 K=32 d=4, BF16, CPX"),
+        "eq4" => (experiment::eq4_grid(), Precision::F32, MachineSpec::cascade_lake(), "Eq. 4 condition grid"),
+        other => bail!("unknown figure '{other}'"),
+    };
+    let grid: Vec<_> = if quick {
+        grid.into_iter()
+            .filter(|&(_, _, q, s, _)| (s == 5 || s == 51 || s == 9) && q <= 20_000)
+            .collect()
+    } else {
+        grid
+    };
+    println!("# {label}\n# host calibration...");
+    let host_peak = calibrate_host();
+    println!("# host sustained ≈ {host_peak:.2} GFLOP/s (1 core)\n");
+    let cfg = SweepConfig {
+        batch,
+        reps,
+        max_measured_q: max_q,
+        host_gflops_peak: host_peak,
+        threads: 1,
+    };
+    let mut rows = Vec::new();
+    for &(c, k, q, s, d) in &grid {
+        let ours = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Brgemm, precision, &machine);
+        let base = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Im2col, Precision::F32, &machine);
+        let bwd = run_point(&cfg, c, k, q, s, d, Pass::BackwardData, Backend::Brgemm, precision, &machine);
+        rows.push(vec![
+            format!("{c}x{k}"),
+            q.to_string(),
+            s.to_string(),
+            d.to_string(),
+            secs(ours.timing.median_secs),
+            format!("{:.2}", ours.host_gflops),
+            pct(ours.host_eff),
+            secs(base.timing.median_secs),
+            speedup(base.timing.median_secs / ours.timing.median_secs),
+            secs(bwd.timing.median_secs),
+            pct(ours.modeled_eff),
+            pct(base.modeled_eff),
+        ]);
+    }
+    let headers = vec![
+        "CxK", "Q", "S", "d", "ours fwd", "GF/s", "host eff", "baseline fwd", "speedup",
+        "ours bwd-d", "modeled eff (paper hw)", "modeled eff baseline",
+    ];
+    println!("{}", markdown(&headers, &rows));
+    if let Some(path) = args.get("csv") {
+        write_csv(path, &headers, &rows)?;
+        println!("# csv written to {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- scaling
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let prec = match args.get("precision").unwrap_or("fp32") {
+        "fp32" | "f32" => Precision::F32,
+        "bf16" => Precision::Bf16,
+        other => bail!("unknown precision '{other}'"),
+    };
+    let w = Workload::paper();
+    let comm = CommModel::fabric();
+    println!(
+        "# Figs. 8/9: modeled AtacWorks epoch time on CPX sockets ({prec:?})"
+    );
+    let t1 = model_epoch(&w, &MachineSpec::cooper_lake(), prec, Strategy::Brgemm, &Topology::xeon(1), &comm);
+    let mut rows = Vec::new();
+    for &s in &[1usize, 2, 4, 8, 16] {
+        let t = model_epoch(&w, &MachineSpec::cooper_lake(), prec, Strategy::Brgemm, &Topology::xeon(s), &comm);
+        rows.push(vec![
+            s.to_string(),
+            Topology::xeon(s).paper_batch_size().to_string(),
+            secs(t.compute_secs),
+            secs(t.comm_secs),
+            secs(t.eval_secs),
+            secs(t.total()),
+            speedup(t1.total() / t.total()),
+            speedup((t1.compute_secs + t1.comm_secs) / (t.compute_secs + t.comm_secs)),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(
+            &["sockets", "batch", "compute", "comm", "eval", "total", "speedup", "train-only speedup"],
+            &rows
+        )
+    );
+
+    // Table 2 / Fig. 10: vs 8 V100 (162 s from the AtacWorks paper).
+    println!("# Table 2: sockets vs 8 V100 (paper: CLX 1.41x, CPX fp32 1.57x, CPX bf16 2.27x)");
+    let mut rows = Vec::new();
+    let v100 = 162.0;
+    for (dev, spec, p2, sockets) in [
+        ("16s CLX", MachineSpec::cascade_lake(), Precision::F32, 16usize),
+        ("16s CPX", MachineSpec::cooper_lake(), Precision::F32, 16),
+        ("8s CPX", MachineSpec::cooper_lake(), Precision::Bf16, 8),
+        ("16s CPX", MachineSpec::cooper_lake(), Precision::Bf16, 16),
+    ] {
+        let t = model_epoch(&w, &spec, p2, Strategy::Brgemm, &Topology::xeon(sockets), &comm);
+        let paper = experiment::TABLE2
+            .iter()
+            .find(|r| r.device == dev && r.precision == (if p2 == Precision::F32 { "FP32" } else { "BF16" }));
+        rows.push(vec![
+            dev.to_string(),
+            if p2 == Precision::F32 { "FP32" } else { "BF16" }.to_string(),
+            secs(t.total()),
+            speedup(v100 / t.total()),
+            paper.map_or("—".into(), |r| secs(r.time_per_epoch)),
+            paper.map_or("—".into(), |r| speedup(r.speedup_vs_v100)),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(
+            &["device", "precision", "modeled epoch", "modeled speedup vs V100", "paper epoch", "paper speedup"],
+            &rows
+        )
+    );
+
+    // Optional measured mini-scaling on this host (sockets = worker replicas).
+    if args.bool("measure") {
+        println!("# measured mini-scaling on this host (scaled workload, in-process sockets)");
+        let mut rows = Vec::new();
+        let mut base = None;
+        for &s in &[1usize, 2, 4] {
+            let cfg = TrainConfig {
+                channels: 8,
+                n_blocks: 2,
+                filter_size: 15,
+                dilation: 4,
+                segment_width: 800,
+                segment_pad: 80,
+                train_segments: 16,
+                batch_size: 4,
+                epochs: 1,
+                sockets: s,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(cfg)?;
+            let r = tr.run_epoch(0);
+            base.get_or_insert(r.timing.train_secs);
+            rows.push(vec![
+                s.to_string(),
+                secs(r.timing.train_secs),
+                format!("{:.4}", r.train_loss),
+                speedup(base.unwrap() / r.timing.train_secs),
+            ]);
+        }
+        println!("{}", markdown(&["sockets", "train secs", "loss", "speedup"], &rows));
+        println!("# note: this host has 1 physical core; measured 'sockets' share it.");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ bench
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args.get("experiment").unwrap_or("table1");
+    let comm = CommModel::fabric();
+    match exp {
+        "table1" => {
+            let w = Workload::paper();
+            println!("# Table 1: single-socket end-to-end training (paper vs modeled)");
+            let mut rows = Vec::new();
+            let cases: [(&str, &str, MachineSpec, Precision, Strategy); 4] = [
+                ("1s CLX", "oneDNN (FP32)", MachineSpec::cascade_lake(), Precision::F32, Strategy::Im2col),
+                ("1s CLX", "LIBXSMM (FP32)", MachineSpec::cascade_lake(), Precision::F32, Strategy::Brgemm),
+                ("1s CPX", "LIBXSMM (FP32)", MachineSpec::cooper_lake(), Precision::F32, Strategy::Brgemm),
+                ("1s CPX", "LIBXSMM (BF16)", MachineSpec::cooper_lake(), Precision::Bf16, Strategy::Brgemm),
+            ];
+            for (dev, code, spec, prec, strat) in cases {
+                let t = model_epoch(&w, &spec, prec, strat, &Topology::xeon(1), &comm);
+                let paper = experiment::TABLE1
+                    .iter()
+                    .find(|r| {
+                        r.device == dev
+                            && code.starts_with(r.code)
+                            && code.contains(r.precision)
+                    })
+                    .map(|r| r.time_per_epoch);
+                rows.push(vec![
+                    dev.into(),
+                    code.into(),
+                    secs(t.total()),
+                    paper.map_or("—".into(), secs),
+                ]);
+            }
+            println!("{}", markdown(&["device", "code", "modeled epoch", "paper epoch"], &rows));
+            let ours = model_epoch(&w, &MachineSpec::cascade_lake(), Precision::F32, Strategy::Brgemm, &Topology::xeon(1), &comm);
+            let lib = model_epoch(&w, &MachineSpec::cascade_lake(), Precision::F32, Strategy::Im2col, &Topology::xeon(1), &comm);
+            println!(
+                "modeled CLX speedup (oneDNN-analog / BRGEMM): {} — paper: {}",
+                speedup(lib.total() / ours.total()),
+                speedup(experiment::table1_clx_speedup()),
+            );
+        }
+        "long-segment" => {
+            // §4.5.3: 600k-wide segments, 2 CLX sockets, batch 52 → 977.4 s.
+            let w = Workload::long_segments();
+            let t = model_epoch(&w, &MachineSpec::cascade_lake(), Precision::F32, Strategy::Brgemm, &Topology::xeon(2), &comm);
+            println!("# §4.5.3 long segments (600k wide, 4191 segs, 2s CLX)");
+            println!("modeled epoch: {} — paper: 977.4s", secs(t.total()));
+            let bytes_per_track = 600_000usize * 4 * 3; // x, clean, peaks
+            let batch_bytes = 52 * bytes_per_track;
+            println!(
+                "activation footprint at batch 52 x 27 layers ≈ {} (fits CPU DRAM; a 16 GB V100 OOMs — paper could not run this on V100)",
+                dilconv1d::util::human_bytes((batch_bytes * 27) as u64),
+            );
+        }
+        "large-dataset" => {
+            // §4.5.4: 9.16× dataset on 16s CLX → 872.1 s/epoch (train only).
+            let w = Workload::large_dataset();
+            let t = model_epoch(&w, &MachineSpec::cascade_lake(), Precision::F32, Strategy::Brgemm, &Topology::xeon(16), &comm);
+            println!("# §4.5.4 large dataset (293242 segs, 16s CLX)");
+            println!(
+                "modeled train-only epoch: {} — paper: 872.1s (dataset ratio {:.2}x of the 32k-segment run)",
+                secs(t.compute_secs + t.comm_secs),
+                w.train_segments as f64 / 32_000.0,
+            );
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- calibrate
+
+fn cmd_calibrate() -> Result<()> {
+    println!("calibrating host sustained GEMM throughput...");
+    let g = calibrate_host();
+    println!("host ≈ {g:.2} GFLOP/s (single core, f32 micro-kernel)");
+    Ok(())
+}
+
+// ------------------------------------------------------- artifacts-check
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args.get("dir").unwrap_or("artifacts");
+    let reg = Registry::load(dir)?;
+    println!("registry: {} artifacts in {dir}", reg.artifacts.len());
+    let mut sess = Session::cpu()?;
+    println!("PJRT: {}", sess.platform());
+
+    // 1. conv_fwd artifacts vs the native BRGEMM kernel.
+    let conv_names: Vec<String> = reg
+        .artifacts
+        .values()
+        .filter(|a| a.kind == "conv_fwd")
+        .map(|a| a.name.clone())
+        .collect();
+    for name in conv_names {
+        let art = reg.get(&name)?.clone();
+        let shp = &art.inputs[0].shape; // (n, c, w)
+        let wshp = &art.inputs[1].shape; // (s, k, c)
+        let (n, c, w) = (shp[0], shp[1], shp[2]);
+        let (s, k) = (wshp[0], wshp[1]);
+        let q = art.outputs[0].shape[2];
+        let d = if s > 1 { (w - q) / (s - 1) } else { 1 };
+        let x = rnd(n * c * w, 7);
+        let wt = rnd(s * k * c, 8);
+        let got = dilconv1d::runtime::step::run_conv_fwd(&mut sess, &art, &x, &wt)?;
+        let p = ConvParams::new(n, c, k, w, s, d).unwrap();
+        let mut want = vec![0.0f32; n * k * q];
+        // Native kernel takes (S,K,C) directly — same layout as the artifact.
+        dilconv1d::conv1d::forward::forward(&p, &x, &wt, &mut want, 1);
+        let mut max_err = 0.0f32;
+        for (g, w_) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w_).abs() / (1.0 + w_.abs()));
+        }
+        println!(
+            "{name}: PJRT vs native max rel err {max_err:.2e} {}",
+            if max_err < 1e-4 { "OK" } else { "MISMATCH" }
+        );
+        if max_err >= 1e-4 {
+            bail!("artifact {name} disagrees with the native kernel");
+        }
+    }
+
+    // 2. Train a few steps of the tiny model through PJRT.
+    let steps = args.usize("train-steps", 3)?;
+    if reg.artifacts.contains_key("train_step_tiny") {
+        let art = reg.get("train_step_tiny")?.clone();
+        sess.load("train_step_tiny", &art.path)?;
+        let eval_art = reg.get("eval_step_tiny")?.clone();
+        sess.load("eval_step_tiny", &eval_art.path)?;
+        let mut st = TrainState::init(&reg, "tiny")?;
+        let mut track = TrackConfig::default().scaled(st.width);
+        track.pad = 0;
+        track.width = st.width;
+        let mut first = None;
+        let mut last = 0.0;
+        for i in 0..steps {
+            let idx: Vec<u64> = (0..st.batch as u64)
+                .map(|r| (i * st.batch) as u64 + r)
+                .collect();
+            let b = dilconv1d::data::make_batch(&track, 1, &idx);
+            let l = st.step(&sess, &b.x, &b.clean, &b.peaks)?;
+            println!(
+                "pjrt train step {i}: loss {:.5} (mse {:.5} bce {:.5})",
+                l.total, l.mse, l.bce
+            );
+            first.get_or_insert(l.total);
+            last = l.total;
+        }
+        if steps >= 3 {
+            anyhow::ensure!(
+                last < first.unwrap(),
+                "PJRT training loss did not decrease: {} -> {last}",
+                first.unwrap()
+            );
+        }
+        let idx: Vec<u64> = (0..st.batch as u64).collect();
+        let b = dilconv1d::data::make_batch(&track, 1, &idx);
+        let (den, probs) = st.eval(&sess, &b.x)?;
+        println!(
+            "pjrt eval: denoised len {}, probs in [{:.3}, {:.3}]",
+            den.len(),
+            probs.iter().cloned().fold(f32::INFINITY, f32::min),
+            probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        );
+        println!("artifacts-check OK");
+    } else {
+        println!("(no train_step_tiny artifact; model check skipped)");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- data-gen
+
+fn cmd_data_gen(args: &Args) -> Result<()> {
+    let segments = args.usize("segments", 8)?;
+    let width = args.usize("width", 5_000)?;
+    let cfg = TrackConfig::default().scaled(width);
+    println!(
+        "synthetic ATAC-seq: width {} (+{} pad/side), bg rate {}, subsample {}",
+        cfg.width, cfg.pad, cfg.background_rate, cfg.subsample
+    );
+    let mut rows = Vec::new();
+    for i in 0..segments as u64 {
+        let t = generate_track(&cfg, 42, i);
+        let cov: f64 = t.clean.iter().map(|&v| v as f64).sum::<f64>() / cfg.width as f64;
+        let noisy: f64 = t.noisy.iter().map(|&v| v as f64).sum::<f64>() / cfg.width as f64;
+        let peak_frac: f64 = t.peaks.iter().sum::<f32>() as f64 / cfg.width as f64;
+        rows.push(vec![
+            i.to_string(),
+            format!("{cov:.3}"),
+            format!("{noisy:.3}"),
+            format!("{:.2}%", peak_frac * 100.0),
+            format!("{:?}", dilconv1d::data::dataset::split_of(42, i)),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(
+            &["segment", "clean cov/base", "noisy cov/base", "peak frac", "split"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Classification metrics for the peak-calling head: numerically stable
+//! BCE on logits, plus precision/recall/F1 at a threshold.
+
+/// Binary cross-entropy on logits, `mean(max(z,0) − z·y + log1p(exp(−|z|)))`
+/// — identical to the L2 model's loss (model.py `bce_with_logits`).
+pub fn bce_with_logits(logits: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    if logits.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = logits
+        .iter()
+        .zip(labels)
+        .map(|(&z, &y)| {
+            let z = z as f64;
+            let y = y as f64;
+            z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()
+        })
+        .sum();
+    s / logits.len() as f64
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Confusion counts at `threshold` over probabilities.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn from_probs(probs: &[f32], labels: &[f32], threshold: f32) -> Self {
+        assert_eq!(probs.len(), labels.len());
+        let mut c = Confusion::default();
+        for (&p, &y) in probs.iter().zip(labels) {
+            match (p >= threshold, y > 0.5) {
+                (true, true) => c.tp += 1,
+                (true, false) => c.fp += 1,
+                (false, false) => c.tn += 1,
+                (false, true) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fn_) as f64
+        }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.tn + self.fn_;
+        if total == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bce_matches_hand_values() {
+        // z=0 ⇒ loss = ln 2 regardless of label.
+        let l = bce_with_logits(&[0.0], &[1.0]);
+        assert!((l - std::f64::consts::LN_2).abs() < 1e-12);
+        // Large confident correct logit ⇒ ~0.
+        assert!(bce_with_logits(&[20.0], &[1.0]) < 1e-8);
+        // Large confident wrong logit ⇒ ~|z|.
+        assert!((bce_with_logits(&[-20.0], &[1.0]) - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bce_is_stable_at_extremes() {
+        let v = bce_with_logits(&[1e4, -1e4], &[1.0, 0.0]);
+        assert!(v.is_finite() && v < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for z in [-5.0f32, -1.0, 0.0, 2.5, 8.0] {
+            assert!((sigmoid(z) + sigmoid(-z) - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(sigmoid(0.0), 0.5);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let probs = [0.9f32, 0.8, 0.2, 0.4, 0.6];
+        let labels = [1.0f32, 0.0, 0.0, 1.0, 1.0];
+        let c = Confusion::from_probs(&probs, &labels, 0.5);
+        assert_eq!(
+            c,
+            Confusion {
+                tp: 2,
+                fp: 1,
+                tn: 1,
+                fn_: 1
+            }
+        );
+        assert!((c.precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.recall() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.f1() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.accuracy() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_confusion() {
+        let c = Confusion::default();
+        assert_eq!(c.precision(), 0.0);
+        assert_eq!(c.recall(), 0.0);
+        assert_eq!(c.f1(), 0.0);
+    }
+}

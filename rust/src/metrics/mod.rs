@@ -1,0 +1,13 @@
+//! Evaluation metrics and telemetry: exact AUROC ([`auroc`], the paper's
+//! peak-calling accuracy metric), regression metrics ([`regression`]),
+//! classification metrics ([`classification`]) and timing ([`timing`]).
+
+pub mod auroc;
+pub mod classification;
+pub mod regression;
+pub mod timing;
+
+pub use auroc::{auroc, AurocAccumulator};
+pub use classification::{bce_with_logits, sigmoid, Confusion};
+pub use regression::{mse, pearson, MseAccumulator};
+pub use timing::{EpochTiming, Stats, Timer};

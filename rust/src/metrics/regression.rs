@@ -1,0 +1,108 @@
+//! Regression metrics for the denoising head: MSE and Pearson correlation
+//! (AtacWorks reports both for the denoised track quality).
+
+/// Mean squared error.
+pub fn mse(pred: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred
+        .iter()
+        .zip(target)
+        .map(|(&p, &t)| {
+            let d = (p - t) as f64;
+            d * d
+        })
+        .sum();
+    s / pred.len() as f64
+}
+
+/// Pearson correlation coefficient; `None` if either side is constant.
+pub fn pearson(pred: &[f32], target: &[f32]) -> Option<f64> {
+    assert_eq!(pred.len(), target.len());
+    let n = pred.len();
+    if n < 2 {
+        return None;
+    }
+    let nf = n as f64;
+    let mp: f64 = pred.iter().map(|&v| v as f64).sum::<f64>() / nf;
+    let mt: f64 = target.iter().map(|&v| v as f64).sum::<f64>() / nf;
+    let (mut spt, mut spp, mut stt) = (0.0f64, 0.0f64, 0.0f64);
+    for (&p, &t) in pred.iter().zip(target) {
+        let dp = p as f64 - mp;
+        let dt = t as f64 - mt;
+        spt += dp * dt;
+        spp += dp * dp;
+        stt += dt * dt;
+    }
+    if spp <= 0.0 || stt <= 0.0 {
+        return None;
+    }
+    Some(spt / (spp.sqrt() * stt.sqrt()))
+}
+
+/// Streaming MSE accumulator (per-epoch evaluation).
+#[derive(Default, Debug, Clone, Copy)]
+pub struct MseAccumulator {
+    sum_sq: f64,
+    count: u64,
+}
+
+impl MseAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, pred: &[f32], target: &[f32]) {
+        assert_eq!(pred.len(), target.len());
+        for (&p, &t) in pred.iter().zip(target) {
+            let d = (p - t) as f64;
+            self.sum_sq += d * d;
+        }
+        self.count += pred.len() as u64;
+    }
+
+    pub fn compute(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_sq / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(mse(&[0.0, 0.0], &[3.0, 4.0]), 12.5);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y: Vec<f32> = x.iter().map(|&v| 2.0 * v + 1.0).collect();
+        assert!((pearson(&x, &y).unwrap() - 1.0).abs() < 1e-12);
+        let z: Vec<f32> = x.iter().map(|&v| -v).collect();
+        assert!((pearson(&x, &z).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_undefined() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), None);
+    }
+
+    #[test]
+    fn accumulator_matches_direct() {
+        let p = [0.5f32, 1.5, -2.0, 3.0];
+        let t = [0.0f32, 1.0, -1.0, 4.0];
+        let mut acc = MseAccumulator::new();
+        acc.push(&p[..2], &t[..2]);
+        acc.push(&p[2..], &t[2..]);
+        assert!((acc.compute() - mse(&p, &t)).abs() < 1e-12);
+    }
+}

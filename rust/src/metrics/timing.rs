@@ -1,0 +1,149 @@
+//! Timing utilities: wall-clock timers, per-epoch statistics and simple
+//! latency histograms for the coordinator's telemetry.
+
+use std::time::{Duration, Instant};
+
+/// A running wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Online mean/min/max/stddev accumulator (Welford).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Per-epoch timing breakdown recorded by the trainer (paper Fig. 10
+/// separates training and evaluation time).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EpochTiming {
+    pub train_secs: f64,
+    pub eval_secs: f64,
+    pub data_secs: f64,
+    pub comm_secs: f64,
+}
+
+impl EpochTiming {
+    pub fn total(&self) -> f64 {
+        self.train_secs + self.eval_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(v);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        // Sample stddev of that classic set is ~2.138.
+        assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn epoch_total() {
+        let e = EpochTiming {
+            train_secs: 10.0,
+            eval_secs: 2.5,
+            data_secs: 1.0,
+            comm_secs: 0.5,
+        };
+        assert_eq!(e.total(), 12.5);
+    }
+}

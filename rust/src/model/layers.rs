@@ -1,0 +1,192 @@
+//! Trainable layer wrappers with activation caching for the fixed-topology
+//! backward pass (the native engine's "autograd tape" is the network
+//! structure itself; see resnet.rs).
+
+use crate::conv1d::layout::{pad_width, unpad_width};
+use crate::conv1d::{Backend, Conv1dLayer, ConvParams};
+
+use super::tensor::Tensor;
+
+/// A same-padded conv layer with bias, caching its padded input for the
+/// backward pass. Width-preserving: `(N, C, W) -> (N, K, W)`.
+pub struct ConvSame {
+    pub conv: Conv1dLayer,
+    /// Cached padded input from the last forward (for backward-weight).
+    cached_xp: Option<(Vec<f32>, usize, usize)>, // (data, n, wp)
+}
+
+/// Gradients of one conv layer.
+pub struct ConvGrads {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl ConvSame {
+    pub fn new(c: usize, k: usize, s: usize, d: usize, weights: Vec<f32>) -> Self {
+        ConvSame {
+            conv: Conv1dLayer::new(c, k, s, d, weights),
+            cached_xp: None,
+        }
+    }
+
+    pub fn set_backend(&mut self, backend: Backend, threads: usize) {
+        self.conv.backend = backend;
+        self.conv.threads = threads;
+    }
+
+    /// Forward, caching the padded input when `train` is set.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
+        let xp = pad_width(&x.data, x.n, x.c, x.w, l, r);
+        let wp = x.w + l + r;
+        let mut out = self.conv.forward(&xp, x.n, wp);
+        // Bias.
+        for ib in 0..x.n {
+            for ik in 0..self.conv.k {
+                let b = self.conv.bias[ik];
+                if b != 0.0 {
+                    for v in &mut out[(ib * self.conv.k + ik) * x.w..(ib * self.conv.k + ik + 1) * x.w] {
+                        *v += b;
+                    }
+                }
+            }
+        }
+        if train {
+            self.cached_xp = Some((xp, x.n, wp));
+        }
+        Tensor::from_vec(out, x.n, self.conv.k, x.w)
+    }
+
+    /// Backward: consumes the cached input; returns (grad_input, grads).
+    pub fn backward(&mut self, gout: &Tensor) -> (Tensor, ConvGrads) {
+        let (xp, n, wp) = self
+            .cached_xp
+            .take()
+            .expect("backward() without a cached forward(train=true)");
+        assert_eq!(gout.n, n);
+        assert_eq!(gout.c, self.conv.k);
+        let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
+        debug_assert_eq!(gout.w + l + r, wp);
+        let gw = self.conv.backward_weight(&gout.data, &xp, n, wp);
+        let gb = self.conv.backward_bias(&gout.data, n, gout.w);
+        let gxp = self.conv.backward_data(&gout.data, n, wp);
+        let gx = unpad_width(&gxp, n, self.conv.c, wp, l, r);
+        (
+            Tensor::from_vec(gx, n, self.conv.c, gout.w),
+            ConvGrads { w: gw, b: gb },
+        )
+    }
+
+    /// Backward-weight only (used by the stem, whose input needs no grad).
+    pub fn backward_weights_only(&mut self, gout: &Tensor) -> ConvGrads {
+        let (xp, n, wp) = self
+            .cached_xp
+            .take()
+            .expect("backward() without a cached forward(train=true)");
+        let gw = self.conv.backward_weight(&gout.data, &xp, n, wp);
+        let gb = self.conv.backward_bias(&gout.data, n, gout.w);
+        ConvGrads { w: gw, b: gb }
+    }
+
+    pub fn k(&self) -> usize {
+        self.conv.k
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.conv.weights().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::test_util::rnd;
+
+    #[test]
+    fn forward_preserves_width() {
+        let mut l = ConvSame::new(3, 5, 7, 2, rnd(5 * 3 * 7, 1));
+        let x = Tensor::from_vec(rnd(2 * 3 * 90, 2), 2, 3, 90);
+        let y = l.forward(&x, false);
+        assert_eq!(y.shape(), (2, 5, 90));
+    }
+
+    #[test]
+    fn backward_gradcheck_weights() {
+        // Finite-difference check of dLoss/dw for Loss = <g, forward(x)>.
+        let (c, k, s, d, n, w) = (2, 2, 3, 2, 1, 24);
+        let w0 = rnd(k * c * s, 3);
+        let x = Tensor::from_vec(rnd(n * c * w, 4), n, c, w);
+        let g = Tensor::from_vec(rnd(n * k * w, 5), n, k, w);
+
+        let mut layer = ConvSame::new(c, k, s, d, w0.clone());
+        layer.forward(&x, true);
+        let (_, grads) = layer.backward(&g);
+
+        let eps = 1e-2f32;
+        for wi in 0..w0.len() {
+            let mut wp = w0.clone();
+            wp[wi] += eps;
+            let yp = ConvSame::new(c, k, s, d, wp).forward(&x, false);
+            let mut wm = w0.clone();
+            wm[wi] -= eps;
+            let ym = ConvSame::new(c, k, s, d, wm).forward(&x, false);
+            let fd: f32 = yp
+                .data
+                .iter()
+                .zip(&ym.data)
+                .zip(&g.data)
+                .map(|((a, b), gg)| (a - b) / (2.0 * eps) * gg)
+                .sum();
+            assert!(
+                (fd - grads.w[wi]).abs() < 3e-2 * (1.0 + grads.w[wi].abs()),
+                "w[{wi}] fd {fd} vs {}",
+                grads.w[wi]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_gradcheck_input() {
+        let (c, k, s, d, n, w) = (2, 3, 3, 1, 1, 16);
+        let w0 = rnd(k * c * s, 6);
+        let x0 = rnd(n * c * w, 7);
+        let g = Tensor::from_vec(rnd(n * k * w, 8), n, k, w);
+        let mut layer = ConvSame::new(c, k, s, d, w0.clone());
+        layer.forward(&Tensor::from_vec(x0.clone(), n, c, w), true);
+        let (gx, _) = layer.backward(&g);
+        let eps = 1e-2f32;
+        for xi in (0..x0.len()).step_by(5) {
+            let mut xp = x0.clone();
+            xp[xi] += eps;
+            let yp = layer.forward(&Tensor::from_vec(xp, n, c, w), false);
+            let mut xm = x0.clone();
+            xm[xi] -= eps;
+            let ym = layer.forward(&Tensor::from_vec(xm, n, c, w), false);
+            let fd: f32 = yp
+                .data
+                .iter()
+                .zip(&ym.data)
+                .zip(&g.data)
+                .map(|((a, b), gg)| (a - b) / (2.0 * eps) * gg)
+                .sum();
+            assert!(
+                (fd - gx.data[xi]).abs() < 3e-2 * (1.0 + gx.data[xi].abs()),
+                "x[{xi}] fd {fd} vs {}",
+                gx.data[xi]
+            );
+        }
+    }
+
+    #[test]
+    fn bias_gradient_is_gout_sum() {
+        let (c, k, s, d, n, w) = (1, 2, 3, 1, 2, 10);
+        let mut layer = ConvSame::new(c, k, s, d, rnd(k * c * s, 9));
+        let x = Tensor::from_vec(rnd(n * c * w, 10), n, c, w);
+        layer.forward(&x, true);
+        let g = Tensor::from_vec(vec![1.0; n * k * w], n, k, w);
+        let (_, grads) = layer.backward(&g);
+        for &gb in &grads.b {
+            assert!((gb - (n * w) as f32).abs() < 1e-4);
+        }
+    }
+}

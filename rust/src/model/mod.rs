@@ -1,0 +1,16 @@
+//! Native training engine: the AtacWorks-like dilated-conv ResNet
+//! ([`resnet`]) built on the paper's conv kernels, with hand-written
+//! fixed-topology autograd, losses ([`loss`]) and optimisers
+//! ([`optimizer`]). Mirrors python/compile/model.py layer-for-layer so the
+//! flat parameter packing interoperates with the PJRT path.
+
+pub mod layers;
+pub mod loss;
+pub mod optimizer;
+pub mod resnet;
+pub mod tensor;
+
+pub use layers::{ConvGrads, ConvSame};
+pub use optimizer::{Adam, Sgd};
+pub use resnet::{AtacWorksNet, Losses, NetConfig};
+pub use tensor::Tensor;

@@ -1,0 +1,118 @@
+//! Optimisers over flat parameter vectors: Adam (the AtacWorks default)
+//! and SGD with momentum. Matches python/compile/model.py's Adam exactly
+//! (same β₁/β₂/ε and bias correction) so native and PJRT training agree.
+
+/// Adam state over a flat parameter vector.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(param_len: usize, lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; param_len],
+            v: vec![0.0; param_len],
+            t: 0,
+        }
+    }
+
+    /// One update: `params -= lr · m̂ / (√v̂ + ε)`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+/// SGD with classical momentum.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(param_len: usize, lr: f32, momentum: f32) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            velocity: vec![0.0; param_len],
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        for i in 0..params.len() {
+            self.velocity[i] = self.momentum * self.velocity[i] - self.lr * grads[i];
+            params[i] += self.velocity[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimises_quadratic() {
+        // f(x) = Σ (x−3)², gradient 2(x−3).
+        let mut x = vec![0.0f32; 4];
+        let mut opt = Adam::new(4, 0.1);
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().map(|&v| 2.0 * (v - 3.0)).collect();
+            opt.step(&mut x, &g);
+        }
+        for &v in &x {
+            assert!((v - 3.0).abs() < 0.01, "x={v}");
+        }
+        assert_eq!(opt.steps_taken(), 500);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction makes the first step ≈ lr · sign(g).
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut x, &[0.37]);
+        assert!((x[0] + 0.01).abs() < 1e-4, "x={}", x[0]);
+    }
+
+    #[test]
+    fn sgd_with_momentum_accelerates() {
+        let mut x_plain = vec![10.0f32];
+        let mut x_mom = vec![10.0f32];
+        let mut plain = Sgd::new(1, 0.01, 0.0);
+        let mut mom = Sgd::new(1, 0.01, 0.9);
+        for _ in 0..50 {
+            let gp = [2.0 * x_plain[0]];
+            plain.step(&mut x_plain, &gp);
+            let gm = [2.0 * x_mom[0]];
+            mom.step(&mut x_mom, &gm);
+        }
+        assert!(x_mom[0].abs() < x_plain[0].abs());
+    }
+}

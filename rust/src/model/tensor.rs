@@ -1,0 +1,103 @@
+//! Minimal `(N, C, W)` tensor for the native training engine.
+//!
+//! Deliberately tiny: contiguous `Vec<f32>` + shape, with only the ops the
+//! AtacWorks network needs. The heavy lifting happens inside the conv1d
+//! kernels; this type exists for shape-checked plumbing.
+
+/// A row-major `(N, C, W)` tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub c: usize,
+    pub w: usize,
+}
+
+impl Tensor {
+    pub fn zeros(n: usize, c: usize, w: usize) -> Self {
+        Tensor {
+            data: vec![0.0; n * c * w],
+            n,
+            c,
+            w,
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>, n: usize, c: usize, w: usize) -> Self {
+        assert_eq!(data.len(), n * c * w, "shape/data mismatch");
+        Tensor { data, n, c, w }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.n, self.c, self.w)
+    }
+
+    /// In-place ReLU; returns the activation mask for the backward pass.
+    pub fn relu_inplace(&mut self) -> Vec<bool> {
+        let mut mask = vec![false; self.data.len()];
+        for (v, m) in self.data.iter_mut().zip(mask.iter_mut()) {
+            if *v > 0.0 {
+                *m = true;
+            } else {
+                *v = 0.0;
+            }
+        }
+        mask
+    }
+
+    /// `self += other` (elementwise, shapes must match).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Apply a stored ReLU mask to a gradient (backward of `relu_inplace`).
+    pub fn mask_gradient(grad: &mut [f32], mask: &[bool]) {
+        assert_eq!(grad.len(), mask.len());
+        for (g, &m) in grad.iter_mut().zip(mask) {
+            if !m {
+                *g = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_and_mask_roundtrip() {
+        let mut t = Tensor::from_vec(vec![-1.0, 2.0, 0.0, 3.0], 1, 1, 4);
+        let mask = t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 2.0, 0.0, 3.0]);
+        assert_eq!(mask, vec![false, true, false, true]);
+        let mut g = vec![10.0, 10.0, 10.0, 10.0];
+        Tensor::mask_gradient(&mut g, &mask);
+        assert_eq!(g, vec![0.0, 10.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn add_assign() {
+        let mut a = Tensor::from_vec(vec![1.0, 2.0], 1, 1, 2);
+        let b = Tensor::from_vec(vec![3.0, 4.0], 1, 1, 2);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![0.0; 5], 1, 2, 3);
+    }
+}

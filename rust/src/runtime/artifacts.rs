@@ -1,0 +1,256 @@
+//! Artifact registry: discovers and describes the HLO-text artifacts that
+//! `make artifacts` (python/compile/aot.py) emitted, via
+//! `artifacts/meta.json`.
+//!
+//! Every artifact entry records its kind (conv_fwd, train_step, …), input
+//! and output tensor shapes (the Rust↔HLO ABI) and, for model artifacts,
+//! the flat-parameter packing spec used by the coordinator/checkpointing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor shape+dtype as recorded in meta.json.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("bad shape in tensor spec"))?,
+        })
+    }
+}
+
+/// One named parameter tensor inside the flat packing.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model metadata attached to train/eval/grad artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub channels: usize,
+    pub n_blocks: usize,
+    pub filter_size: usize,
+    pub dilation: usize,
+    pub n_conv_layers: usize,
+    pub param_count: usize,
+    pub param_spec: Vec<ParamEntry>,
+}
+
+/// A single artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub flops: Option<u64>,
+    pub model: Option<ModelMeta>,
+    pub batch: Option<usize>,
+    pub width: Option<usize>,
+}
+
+/// The registry of all artifacts in a directory.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Registry {
+    /// Load `dir/meta.json` and build the registry.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}; run `make artifacts` first"))?;
+        let doc = Json::parse(&text).context("parsing meta.json")?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow!("meta.json root must be an object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            let kind = entry
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let path = if kind == "params" {
+                dir.join(
+                    entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("params entry without file"))?,
+                )
+            } else {
+                dir.join(format!("{name}.hlo.txt"))
+            };
+            let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                match entry.get(key) {
+                    Some(Json::Arr(v)) => v.iter().map(TensorSpec::from_json).collect(),
+                    _ => Ok(Vec::new()),
+                }
+            };
+            let model = entry.get("model").map(|m| -> Result<ModelMeta> {
+                let usz = |k: &str| {
+                    m.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("model meta missing {k}"))
+                };
+                let mut param_spec = Vec::new();
+                if let Some(list) = m.get("param_spec").and_then(Json::as_arr) {
+                    for pe in list {
+                        param_spec.push(ParamEntry {
+                            name: pe
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .unwrap_or("")
+                                .to_string(),
+                            shape: pe
+                                .get("shape")
+                                .and_then(Json::as_usize_vec)
+                                .unwrap_or_default(),
+                            offset: pe.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                            size: pe.get("size").and_then(Json::as_usize).unwrap_or(0),
+                        });
+                    }
+                }
+                Ok(ModelMeta {
+                    channels: usz("channels")?,
+                    n_blocks: usz("n_blocks")?,
+                    filter_size: usz("filter_size")?,
+                    dilation: usz("dilation")?,
+                    n_conv_layers: usz("n_conv_layers")?,
+                    param_count: usz("param_count")?,
+                    param_spec,
+                })
+            });
+            let model = match model {
+                Some(m) => Some(m?),
+                None => None,
+            };
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    kind,
+                    path,
+                    inputs: tensors("inputs")?,
+                    outputs: tensors("outputs")?,
+                    flops: entry.get("flops").and_then(Json::as_f64).map(|f| f as u64),
+                    model,
+                    batch: entry.get("batch").and_then(Json::as_usize),
+                    width: entry.get("width").and_then(Json::as_usize),
+                },
+            );
+        }
+        Ok(Registry { dir, artifacts })
+    }
+
+    /// Lookup by name, with a helpful error.
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not found (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Read the packed initial parameters for a model variant.
+    pub fn load_params(&self, variant: &str) -> Result<Vec<f32>> {
+        let art = self.get(&format!("params_{variant}"))?;
+        let bytes = std::fs::read(&art.path)
+            .with_context(|| format!("reading {:?}", art.path))?;
+        if bytes.len() % 4 != 0 {
+            bail!("params file not a multiple of 4 bytes");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("meta.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_registry() {
+        let dir = std::env::temp_dir().join("dilconv_test_registry");
+        write_meta(
+            &dir,
+            r#"{
+              "conv_fwd_x": {
+                "kind": "conv_fwd",
+                "inputs": [{"dtype": "f32", "shape": [2, 3, 100]}],
+                "outputs": [{"dtype": "f32", "shape": [2, 4, 90]}],
+                "flops": 12345
+              },
+              "train_step_t": {
+                "kind": "train_step",
+                "batch": 2, "width": 512,
+                "model": {"channels": 15, "n_blocks": 2, "filter_size": 51,
+                          "dilation": 8, "n_conv_layers": 7, "param_count": 100,
+                          "param_spec": [{"name": "conv0.w", "shape": [15,1,51],
+                                          "offset": 0, "size": 765}]}
+              }
+            }"#,
+        );
+        let reg = Registry::load(&dir).unwrap();
+        let a = reg.get("conv_fwd_x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3, 100]);
+        assert_eq!(a.inputs[0].elements(), 600);
+        assert_eq!(a.flops, Some(12345));
+        let t = reg.get("train_step_t").unwrap();
+        let m = t.model.as_ref().unwrap();
+        assert_eq!(m.n_conv_layers, 7);
+        assert_eq!(m.param_spec[0].size, 765);
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn loads_params_blob() {
+        let dir = std::env::temp_dir().join("dilconv_test_params");
+        write_meta(
+            &dir,
+            r#"{"params_v": {"kind": "params", "file": "params_v.f32.bin"}}"#,
+        );
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("params_v.f32.bin"), bytes).unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.load_params("v").unwrap(), vals);
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT execution wrapper: loads HLO-text artifacts on the CPU client and
+//! caches compiled executables.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), not
+//! serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! (See /opt/xla-example/README.md.)
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU session with an executable cache.
+pub struct Session {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Session {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Session> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Session {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform description for logs.
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load + compile an HLO text file, caching by `key`.
+    pub fn load(&mut self, key: &str, path: impl AsRef<Path>) -> Result<()> {
+        if self.cache.contains_key(key) {
+            return Ok(());
+        }
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        self.cache.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a cached executable. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single output literal is decomposed
+    /// into the tuple elements.
+    pub fn run(&self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .cache
+            .get(key)
+            .with_context(|| format!("executable '{key}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{key}'"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Number of cached executables.
+    pub fn loaded(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Host tensor (f32, row-major) ↔ `xla::Literal` conversion helpers.
+pub mod literal {
+    use anyhow::{Context, Result};
+
+    /// Build an f32 literal of the given shape from a host slice.
+    pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        anyhow::ensure!(
+            elems == data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        if shape.is_empty() {
+            return Ok(xla::Literal::scalar(data[0]));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .context("reshaping literal")
+    }
+
+    /// Scalar f32 literal.
+    pub fn f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().context("literal to f32 vec")
+    }
+
+    /// Extract an f32 scalar.
+    pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+        lit.get_first_element::<f32>()
+            .context("literal first element")
+    }
+}

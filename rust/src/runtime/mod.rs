@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust — Python never runs
+//! on the training path.
+//!
+//! * [`artifacts`] — registry over `artifacts/meta.json`
+//! * [`client`]    — PJRT CPU session + executable cache + literal helpers
+//! * [`step`]      — train/eval step runners (the flat-parameter ABI)
+
+pub mod artifacts;
+pub mod client;
+pub mod step;
+
+pub use artifacts::{Artifact, ModelMeta, Registry, TensorSpec};
+pub use client::Session;
+pub use step::{StepLosses, TrainState};

@@ -1,0 +1,130 @@
+//! Train/eval step runners over loaded HLO artifacts — the Rust side of
+//! the L2 ABI defined in python/compile/aot.py.
+//!
+//! A [`TrainState`] holds the flat parameter vector plus Adam moments; one
+//! `step()` call feeds `(params, m, v, step, x, clean, peaks)` to the
+//! `train_step_<variant>` executable and swaps in the returned state.
+//! Python is never involved: the HLO was lowered once at build time.
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::{Artifact, Registry};
+use super::client::{literal, Session};
+
+/// Losses returned by one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLosses {
+    pub total: f32,
+    pub mse: f32,
+    pub bce: f32,
+}
+
+/// Mutable training state for a model variant (flat f32 ABI).
+pub struct TrainState {
+    pub variant: String,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+    /// Expected batch/width of the lowered train_step artifact.
+    pub batch: usize,
+    pub width: usize,
+}
+
+impl TrainState {
+    /// Initialise from the registry's packed initial parameters.
+    pub fn init(reg: &Registry, variant: &str) -> Result<TrainState> {
+        let art = reg.get(&format!("train_step_{variant}"))?;
+        let model = art
+            .model
+            .as_ref()
+            .context("train_step artifact missing model meta")?;
+        let params = reg.load_params(variant)?;
+        ensure!(
+            params.len() == model.param_count,
+            "params blob length {} != param_count {}",
+            params.len(),
+            model.param_count
+        );
+        Ok(TrainState {
+            variant: variant.to_string(),
+            m: vec![0.0; params.len()],
+            v: vec![0.0; params.len()],
+            params,
+            step: 0.0,
+            batch: art.batch.context("train_step missing batch")?,
+            width: art.width.context("train_step missing width")?,
+        })
+    }
+
+    /// Artifact key of this variant's train step.
+    pub fn train_key(&self) -> String {
+        format!("train_step_{}", self.variant)
+    }
+
+    /// Artifact key of this variant's eval step.
+    pub fn eval_key(&self) -> String {
+        format!("eval_step_{}", self.variant)
+    }
+
+    /// Run one Adam step on `(x, clean, peaks)` batches of shape
+    /// `(batch, 1, width)` flattened row-major.
+    pub fn step(
+        &mut self,
+        sess: &Session,
+        x: &[f32],
+        clean: &[f32],
+        peaks: &[f32],
+    ) -> Result<StepLosses> {
+        let shape = [self.batch, 1, self.width];
+        let inputs = vec![
+            literal::f32_tensor(&self.params, &[self.params.len()])?,
+            literal::f32_tensor(&self.m, &[self.m.len()])?,
+            literal::f32_tensor(&self.v, &[self.v.len()])?,
+            literal::f32_scalar(self.step),
+            literal::f32_tensor(x, &shape)?,
+            literal::f32_tensor(clean, &shape)?,
+            literal::f32_tensor(peaks, &shape)?,
+        ];
+        let out = sess.run(&self.train_key(), &inputs)?;
+        ensure!(out.len() == 6, "train_step returned {} outputs", out.len());
+        self.params = literal::to_f32_vec(&out[0])?;
+        self.m = literal::to_f32_vec(&out[1])?;
+        self.v = literal::to_f32_vec(&out[2])?;
+        self.step += 1.0;
+        Ok(StepLosses {
+            total: literal::to_f32_scalar(&out[3])?,
+            mse: literal::to_f32_scalar(&out[4])?,
+            bce: literal::to_f32_scalar(&out[5])?,
+        })
+    }
+
+    /// Run the eval step: returns `(denoised, peak_probabilities)`, each
+    /// `(batch, 1, width)` flattened.
+    pub fn eval(&self, sess: &Session, x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let shape = [self.batch, 1, self.width];
+        let inputs = vec![
+            literal::f32_tensor(&self.params, &[self.params.len()])?,
+            literal::f32_tensor(x, &shape)?,
+        ];
+        let out = sess.run(&self.eval_key(), &inputs)?;
+        ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
+        Ok((literal::to_f32_vec(&out[0])?, literal::to_f32_vec(&out[1])?))
+    }
+}
+
+/// Load + run a conv_fwd artifact (runtime integration of the L1 kernel).
+pub fn run_conv_fwd(
+    sess: &mut Session,
+    art: &Artifact,
+    x: &[f32],
+    w_skc: &[f32],
+) -> Result<Vec<f32>> {
+    sess.load(&art.name, &art.path)?;
+    let inputs = vec![
+        literal::f32_tensor(x, &art.inputs[0].shape)?,
+        literal::f32_tensor(w_skc, &art.inputs[1].shape)?,
+    ];
+    let out = sess.run(&art.name, &inputs)?;
+    literal::to_f32_vec(&out[0])
+}

@@ -1,0 +1,55 @@
+//! In-tree substrates that replace external crates in the offline build:
+//! a JSON reader ([`json`]), a splitmix/xoshiro PRNG with distribution
+//! samplers ([`rng`]), and small shared helpers.
+
+pub mod json;
+pub mod rng;
+
+/// Format a byte count human-readably (benchmark reports).
+pub fn human_bytes(b: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", U[i])
+    }
+}
+
+/// Format seconds adaptively (ns → s) for benchmark tables.
+pub fn human_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(2.5), "2.500 s");
+        assert_eq!(human_secs(0.0025), "2.500 ms");
+        assert_eq!(human_secs(2.5e-6), "2.500 µs");
+        assert_eq!(human_secs(5e-9), "5.0 ns");
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration tests over the full conv1d layer API: cross-backend
+//! agreement at the paper's exact parameter corners (Sec. 4.3 sweep sets),
+//! bf16 vs f32, layer-object semantics, and the FLOP bookkeeping used by
+//! the efficiency harness.
+
+use dilconv1d::conv1d::bf16::{to_bf16, to_f32};
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams};
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what} idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// The paper's Sec. 4.3 sweep corners, scaled widths.
+fn paper_corners() -> Vec<(usize, usize, usize, usize, usize, usize)> {
+    // (n, c, k, q, s, d)
+    vec![
+        (2, 15, 15, 1_000, 51, 8), // AtacWorks FP32 layer
+        (2, 16, 16, 1_000, 51, 8), // AtacWorks BF16 layer
+        (1, 64, 64, 2_000, 5, 1),  // Fig. 5 corner
+        (1, 32, 32, 2_000, 9, 4),  // Fig. 6 corner
+        (1, 1, 1, 1_000, 1, 1),    // minimum sweep values
+        (2, 4, 10, 1_000, 15, 2),
+        (1, 8, 64, 1_000, 25, 16), // max dilation in the sweep set
+        (1, 10, 8, 2_000, 49, 2),
+        (3, 15, 15, 977, 31, 4),   // Q not a multiple of the 64 block
+    ]
+}
+
+#[test]
+fn all_backends_agree_on_paper_corners() {
+    for (n, c, k, q, s, d) in paper_corners() {
+        let w = q + (s - 1) * d;
+        let weights = rnd(k * c * s, 1);
+        let x = rnd(n * c * w, 2);
+        let mut layer = Conv1dLayer::new(c, k, s, d, weights);
+        layer.backend = Backend::Brgemm;
+        let ours = layer.forward(&x, n, w);
+        layer.backend = Backend::Im2col;
+        let lib = layer.forward(&x, n, w);
+        layer.backend = Backend::Direct;
+        let naive = layer.forward(&x, n, w);
+        close(&ours, &naive, 1e-3, "brgemm/direct");
+        close(&lib, &naive, 1e-3, "im2col/direct");
+    }
+}
+
+#[test]
+fn backward_passes_agree_on_paper_corners() {
+    for (n, c, k, q, s, d) in paper_corners().into_iter().take(5) {
+        let w = q + (s - 1) * d;
+        let weights = rnd(k * c * s, 3);
+        let x = rnd(n * c * w, 4);
+        let gout = rnd(n * k * q, 5);
+        let mut layer = Conv1dLayer::new(c, k, s, d, weights);
+        layer.backend = Backend::Brgemm;
+        let gd_ours = layer.backward_data(&gout, n, w);
+        let gw_ours = layer.backward_weight(&gout, &x, n, w);
+        layer.backend = Backend::Direct;
+        let gd_naive = layer.backward_data(&gout, n, w);
+        close(&gd_ours, &gd_naive, 1e-3, "bwd-data");
+        // Direct bwd-weight oracle.
+        let p = ConvParams::new(n, c, k, w, s, d).unwrap();
+        let gw_naive = dilconv1d::conv1d::direct::backward_weight_direct(&p, &gout, &x);
+        close(&gw_ours, &gw_naive, 5e-3, "bwd-weight");
+    }
+}
+
+#[test]
+fn bf16_forward_tracks_f32_within_precision() {
+    // Paper Sec. 4.3: the bf16 path requires even C/K/W.
+    let (n, c, k, q, s, d) = (2, 16, 16, 1_024, 5, 2);
+    let w = q + (s - 1) * d;
+    let weights = rnd(k * c * s, 6);
+    let x = rnd(n * c * w, 7);
+    let layer = Conv1dLayer::new(c, k, s, d, weights);
+    let f32_out = layer.forward(&x, n, w);
+    let bf_out = to_f32(&layer.forward_bf16(&to_bf16(&x), n, w));
+    // bf16 has ~3 decimal digits; with k=C*S=80-long reductions in f32
+    // accumulators the error stays ~1e-2 relative.
+    close(&bf_out, &f32_out, 5e-2, "bf16 vs f32");
+}
+
+#[test]
+fn layer_same_padding_matches_paper_figure1_shape() {
+    // Fig. 1: C=5, W=17, K=4, S=3, d=3, Q=17 with zero padding.
+    let (n, c, k, s, d, w) = (1, 5, 4, 3, 3, 17);
+    let layer = Conv1dLayer::new(c, k, s, d, rnd(k * c * s, 8));
+    let x = rnd(n * c * w, 9);
+    let out = layer.forward_same(&x, n, w);
+    assert_eq!(out.len(), n * k * w, "same-padded output width must be 17");
+}
+
+#[test]
+fn flop_accounting_matches_both_backends() {
+    // Efficiency denominators must be implementation-independent.
+    let p = ConvParams::new(4, 15, 15, 1_400, 51, 8).unwrap();
+    assert_eq!(p.flops(), 2 * 4 * 15 * 15 * 1000 * 51);
+    assert!(p.favours_brgemm());
+    let p_small = ConvParams::new(4, 15, 15, 999 + 4 * 50, 5, 50).unwrap();
+    assert!(!p_small.favours_brgemm()); // Q = 999 < 1000
+}
+
+#[test]
+fn param_count_matches_paper_model() {
+    // 25 conv layers, ch=15, S=51 — the network the paper trains.
+    use dilconv1d::model::NetConfig;
+    let cfg = NetConfig::default();
+    assert_eq!(cfg.n_conv_layers(), 25);
+    // stem + 22 body convs + 2 heads, weights + biases:
+    let expect: usize = cfg
+        .layer_shapes()
+        .iter()
+        .map(|&(k, c, s)| k * c * s + k)
+        .sum();
+    assert_eq!(cfg.param_count(), expect);
+    assert!(expect > 250_000 && expect < 300_000, "{expect}");
+}
+
+#[test]
+fn wide_track_regression_60k() {
+    // Full paper width: 60 000-wide track through the AtacWorks layer.
+    let (n, c, k, s, d) = (1, 15, 15, 51, 8);
+    let w = 60_000;
+    let p = ConvParams::new(n, c, k, w, s, d).unwrap();
+    let layer = Conv1dLayer::new(c, k, s, d, rnd(k * c * s, 10));
+    let x = rnd(n * c * w, 11);
+    let out = layer.forward(&x, n, w);
+    assert_eq!(out.len(), n * k * p.q());
+    assert!(out.iter().all(|v| v.is_finite()));
+}

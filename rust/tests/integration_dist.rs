@@ -1,0 +1,96 @@
+//! Integration tests of the distributed substrate: ring all-reduce
+//! (in-place and message-passing), the worker pool, topology accounting
+//! and the communication model's consistency with the real byte counts.
+
+use dilconv1d::dist::allreduce::{
+    naive_allreduce, ring_allreduce, ring_allreduce_threaded, ring_bytes_per_rank,
+};
+use dilconv1d::dist::{CommModel, Topology, WorkerPool};
+use dilconv1d::model::NetConfig;
+use dilconv1d::util::rng::Rng;
+
+#[test]
+fn allreduce_at_model_gradient_size() {
+    // The actual gradient length of the paper's 25-layer model.
+    let len = NetConfig::default().param_count();
+    let mut rng = Rng::new(1);
+    for &p in &[2usize, 4, 16] {
+        let base: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..len).map(|_| rng.normal(0.0, 0.1) as f32).collect())
+            .collect();
+        let mut b1 = base.clone();
+        ring_allreduce(&mut b1);
+        let mut b2 = base.clone();
+        naive_allreduce(&mut b2);
+        let b3 = ring_allreduce_threaded(base);
+        for r in 0..p {
+            for i in (0..len).step_by(997) {
+                assert!((b1[r][i] - b2[r][i]).abs() < 1e-4 * (1.0 + b2[r][i].abs()));
+                assert!((b3[r][i] - b2[r][i]).abs() < 1e-4 * (1.0 + b2[r][i].abs()));
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_pool_gradient_averaging_is_order_independent() {
+    let pool = WorkerPool::new(5);
+    // Each rank contributes rank-dependent gradients; mean is fixed.
+    let r = pool.step(|rank| {
+        let g: Vec<f32> = (0..100).map(|i| (rank * 100 + i) as f32).collect();
+        (g, rank as f64)
+    });
+    for (i, &g) in r.grad.iter().enumerate() {
+        let want: f32 = (0..5).map(|rk| (rk * 100 + i) as f32).sum::<f32>() / 5.0;
+        assert!((g - want).abs() < 1e-3);
+    }
+    assert!((r.loss - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn topology_reproduces_paper_core_accounting() {
+    // Sec. 4.4: single socket reserves 1 core (27 compute);
+    // Sec. 4.5: multi-socket reserves 2 (26 compute).
+    assert_eq!(Topology::xeon(1).compute_cores(), 27);
+    for s in [2usize, 4, 8, 16] {
+        assert_eq!(Topology::xeon(s).compute_cores(), 26);
+    }
+    // Batch sizes from Sec. 4.5.1.
+    let batches: Vec<usize> = [1usize, 2, 4, 8, 16]
+        .iter()
+        .map(|&s| Topology::xeon(s).paper_batch_size())
+        .collect();
+    assert_eq!(batches, vec![54, 52, 104, 208, 416]);
+}
+
+#[test]
+fn comm_model_consistent_with_ring_bytes() {
+    // The α–β model's bandwidth term must equal bytes/bandwidth for the
+    // byte count the real ring implementation reports.
+    let m = CommModel {
+        latency: 0.0,
+        bandwidth: 1e9,
+    };
+    let len = 1_000_000;
+    for &p in &[2usize, 4, 8] {
+        let t = m.ring_allreduce_secs(len, p);
+        let bytes = ring_bytes_per_rank(len, p);
+        assert!(
+            (t - bytes as f64 / 1e9).abs() < 1e-9,
+            "p={p}: model {t} vs bytes {bytes}"
+        );
+    }
+}
+
+#[test]
+fn scaling_efficiency_of_the_modeled_collective() {
+    // Ring all-reduce per-rank traffic saturates; the modeled time must
+    // grow sub-linearly in rank count (this is what makes Fig. 8 linear).
+    let m = CommModel::fabric();
+    let len = NetConfig::default().param_count();
+    let t2 = m.ring_allreduce_secs(len, 2);
+    let t16 = m.ring_allreduce_secs(len, 16);
+    // 8x the ranks must cost < ~4.5x the time (bandwidth term saturates,
+    // latency term grows with 2(P-1)).
+    assert!(t16 < 4.5 * t2, "t2={t2} t16={t16}");
+}

@@ -1,0 +1,113 @@
+//! Integration tests over the PJRT runtime: load the AOT HLO-text
+//! artifacts produced by `make artifacts`, execute them on the CPU
+//! client, and cross-check against the native Rust kernels — proving the
+//! L1 (Pallas) / L2 (JAX) / L3 (Rust) stack computes one consistent
+//! function.
+//!
+//! These tests are skipped (with a message) when `artifacts/` has not
+//! been built, so `cargo test` works on a fresh checkout; CI and the
+//! Makefile run `make artifacts` first.
+
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::ConvParams;
+use dilconv1d::data::atacseq::TrackConfig;
+use dilconv1d::data::make_batch;
+use dilconv1d::runtime::{Registry, Session, TrainState};
+
+fn registry() -> Option<Registry> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Registry::load(&dir) {
+        Ok(r) => Some(r),
+        Err(_) => {
+            eprintln!("artifacts/ not built; skipping runtime integration test");
+            None
+        }
+    }
+}
+
+#[test]
+fn conv_fwd_artifact_matches_native_kernel() {
+    let Some(reg) = registry() else { return };
+    let Ok(art) = reg.get("conv_fwd_atac") else {
+        return;
+    };
+    let mut sess = Session::cpu().expect("pjrt cpu client");
+    let shp = &art.inputs[0].shape;
+    let wshp = &art.inputs[1].shape;
+    let (n, c, w) = (shp[0], shp[1], shp[2]);
+    let (s, k) = (wshp[0], wshp[1]);
+    let q = art.outputs[0].shape[2];
+    let d = (w - q) / (s - 1);
+    let x = rnd(n * c * w, 41);
+    let wt = rnd(s * k * c, 42);
+    let got = dilconv1d::runtime::step::run_conv_fwd(&mut sess, art, &x, &wt).expect("run");
+    let p = ConvParams::new(n, c, k, w, s, d).unwrap();
+    let mut want = vec![0.0f32; n * k * q];
+    dilconv1d::conv1d::forward::forward(&p, &x, &wt, &mut want, 1);
+    for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - e).abs() < 1e-3 * (1.0 + e.abs()),
+            "idx {i}: pjrt {g} vs native {e}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_training_reduces_loss_and_matches_abi() {
+    let Some(reg) = registry() else { return };
+    if !reg.artifacts.contains_key("train_step_tiny") {
+        eprintln!("train_step_tiny not built; skipping");
+        return;
+    }
+    let mut sess = Session::cpu().expect("pjrt cpu client");
+    let mut st = TrainState::init(&reg, "tiny").expect("train state");
+    sess.load(&st.train_key(), &reg.get(&st.train_key()).unwrap().path)
+        .expect("compile train step");
+    sess.load(&st.eval_key(), &reg.get(&st.eval_key()).unwrap().path)
+        .expect("compile eval step");
+
+    let mut track = TrackConfig::default().scaled(st.width);
+    track.pad = 0;
+    track.width = st.width;
+    let idx: Vec<u64> = (0..st.batch as u64).collect();
+    let b = make_batch(&track, 11, &idx);
+
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let l = st.step(&sess, &b.x, &b.clean, &b.peaks).expect("step");
+        assert!(l.total.is_finite() && l.mse >= 0.0 && l.bce >= 0.0);
+        losses.push(l.total);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "PJRT loss did not decrease: {losses:?}"
+    );
+
+    // Eval ABI: (denoised, probabilities in [0, 1]).
+    let (den, probs) = st.eval(&sess, &b.x).expect("eval");
+    assert_eq!(den.len(), st.batch * st.width);
+    assert_eq!(probs.len(), st.batch * st.width);
+    assert!(probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+}
+
+#[test]
+fn registry_metadata_is_consistent() {
+    let Some(reg) = registry() else { return };
+    for (name, art) in &reg.artifacts {
+        if art.kind == "params" {
+            let params = reg.load_params(&name.replace("params_", "")).expect("params blob");
+            let meta = art.model.as_ref().expect("params entries carry model meta");
+            assert_eq!(params.len(), meta.param_count, "{name}");
+            // Spec offsets tile the flat vector exactly.
+            let mut expected_off = 0;
+            for pe in &meta.param_spec {
+                assert_eq!(pe.offset, expected_off, "{name}/{}", pe.name);
+                assert_eq!(pe.size, pe.shape.iter().product::<usize>(), "{name}/{}", pe.name);
+                expected_off += pe.size;
+            }
+            assert_eq!(expected_off, meta.param_count, "{name}");
+        } else {
+            assert!(art.path.exists(), "{name}: missing {:?}", art.path);
+        }
+    }
+}

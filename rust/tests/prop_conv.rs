@@ -1,0 +1,221 @@
+//! Property-based tests of the conv1d kernel invariants (DESIGN.md §7).
+//!
+//! The offline build has no proptest; properties are checked over many
+//! deterministically-random cases drawn from a seeded PRNG — shrinkage is
+//! traded for a printed failing seed.
+
+use dilconv1d::conv1d::backward_data::backward_data;
+use dilconv1d::conv1d::backward_weight::backward_weight;
+use dilconv1d::conv1d::direct::{backward_data_direct, backward_weight_direct, forward_direct};
+use dilconv1d::conv1d::forward::forward;
+use dilconv1d::conv1d::im2col::forward_im2col;
+use dilconv1d::conv1d::layout::{
+    kcs_to_sck_flipped, kcs_to_skc, pad_width, sck_to_kcs, skc_to_kcs, unpad_width,
+};
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::ConvParams;
+use dilconv1d::util::rng::Rng;
+
+/// Draw a random valid conv problem.
+fn arb_problem(rng: &mut Rng) -> ConvParams {
+    loop {
+        let n = 1 + rng.below(3);
+        let c = 1 + rng.below(17);
+        let k = 1 + rng.below(17);
+        let s = 1 + rng.below(12);
+        let d = 1 + rng.below(9);
+        let q = 1 + rng.below(300);
+        if let Some(p) = ConvParams::new(n, c, k, q + (s - 1) * d, s, d) {
+            return p;
+        }
+    }
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str, case: u64) {
+    assert_eq!(a.len(), b.len(), "{what} length, case {case}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what} case {case} idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn prop_forward_all_backends_agree() {
+    let mut rng = Rng::new(0xF0);
+    for case in 0..60 {
+        let p = arb_problem(&mut rng);
+        let x = rnd(p.n * p.c * p.w, case);
+        let wt = rnd(p.k * p.c * p.s, case + 1000);
+        let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+        let mut brgemm = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut brgemm, 1);
+        let mut im2col = vec![0.0; p.n * p.k * p.q()];
+        forward_im2col(&p, &x, &wt, &mut im2col, 1);
+        let mut direct = vec![0.0; p.n * p.k * p.q()];
+        forward_direct(&p, &x, &wt, &mut direct);
+        close(&brgemm, &direct, 1e-3, "brgemm vs direct", case);
+        close(&im2col, &direct, 1e-3, "im2col vs direct", case);
+    }
+}
+
+#[test]
+fn prop_backward_data_matches_direct() {
+    let mut rng = Rng::new(0xF1);
+    for case in 0..40 {
+        let p = arb_problem(&mut rng);
+        let gout = rnd(p.n * p.k * p.q(), case);
+        let wt = rnd(p.k * p.c * p.s, case + 2000);
+        let sck = kcs_to_sck_flipped(&wt, p.k, p.c, p.s);
+        let mut ours = vec![0.0; p.n * p.c * p.w];
+        backward_data(&p, &gout, &sck, &mut ours, 1);
+        let mut want = vec![0.0; p.n * p.c * p.w];
+        backward_data_direct(&p, &gout, &wt, &mut want);
+        close(&ours, &want, 1e-3, "bwd-data", case);
+    }
+}
+
+#[test]
+fn prop_backward_weight_matches_direct() {
+    let mut rng = Rng::new(0xF2);
+    for case in 0..40 {
+        let p = arb_problem(&mut rng);
+        let gout = rnd(p.n * p.k * p.q(), case);
+        let x = rnd(p.n * p.c * p.w, case + 3000);
+        let ours = backward_weight(&p, &gout, &x, 1);
+        let want = backward_weight_direct(&p, &gout, &x);
+        close(&ours, &want, 5e-3, "bwd-weight", case);
+    }
+}
+
+#[test]
+fn prop_relayout_roundtrips() {
+    let mut rng = Rng::new(0xF3);
+    for case in 0..50 {
+        let k = 1 + rng.below(20);
+        let c = 1 + rng.below(20);
+        let s = 1 + rng.below(60);
+        let w = rnd(k * c * s, case);
+        assert_eq!(skc_to_kcs(&kcs_to_skc(&w, k, c, s), s, k, c), w);
+        // Double flip+transpose is the identity too.
+        let sck = kcs_to_sck_flipped(&w, k, c, s);
+        let back = sck_to_kcs(&sck, s, c, k);
+        // back[k][c][s'] = w[k][c][S-1-s'] — flipping again restores.
+        let mut unflipped = vec![0.0; w.len()];
+        for ik in 0..k {
+            for ic in 0..c {
+                for is in 0..s {
+                    unflipped[(ik * c + ic) * s + is] = back[(ik * c + ic) * s + (s - 1 - is)];
+                }
+            }
+        }
+        assert_eq!(unflipped, w, "case {case}");
+    }
+}
+
+#[test]
+fn prop_pad_roundtrip_and_zeroes() {
+    let mut rng = Rng::new(0xF4);
+    for case in 0..50 {
+        let n = 1 + rng.below(3);
+        let c = 1 + rng.below(5);
+        let w = 1 + rng.below(200);
+        let l = rng.below(20);
+        let r = rng.below(20);
+        let x = rnd(n * c * w, case);
+        let padded = pad_width(&x, n, c, w, l, r);
+        assert_eq!(padded.len(), n * c * (w + l + r));
+        assert_eq!(unpad_width(&padded, n, c, w + l + r, l, r), x);
+        for row in 0..n * c {
+            let base = row * (w + l + r);
+            assert!(padded[base..base + l].iter().all(|&v| v == 0.0));
+            assert!(padded[base + l + w..base + l + r + w].iter().all(|&v| v == 0.0));
+        }
+    }
+}
+
+#[test]
+fn prop_output_width_formula() {
+    let mut rng = Rng::new(0xF5);
+    for _ in 0..100 {
+        let p = arb_problem(&mut rng);
+        assert_eq!(p.q(), p.w - (p.s - 1) * p.d);
+        let (l, r) = ConvParams::same_pad(p.s, p.d);
+        assert_eq!(l + r, (p.s - 1) * p.d);
+    }
+}
+
+#[test]
+fn prop_linearity_of_forward() {
+    // conv(a·x + b·y) == a·conv(x) + b·conv(y) — convolution is linear.
+    let mut rng = Rng::new(0xF6);
+    for case in 0..20 {
+        let p = arb_problem(&mut rng);
+        let x = rnd(p.n * p.c * p.w, case);
+        let y = rnd(p.n * p.c * p.w, case + 500);
+        let wt = rnd(p.k * p.c * p.s, case + 900);
+        let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+        let (a, b) = (0.7f32, -1.3f32);
+        let mixed: Vec<f32> = x.iter().zip(&y).map(|(xv, yv)| a * xv + b * yv).collect();
+        let mut out_mixed = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &mixed, &skc, &mut out_mixed, 1);
+        let mut ox = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut ox, 1);
+        let mut oy = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &y, &skc, &mut oy, 1);
+        let want: Vec<f32> = ox.iter().zip(&oy).map(|(xv, yv)| a * xv + b * yv).collect();
+        close(&out_mixed, &want, 5e-3, "linearity", case);
+    }
+}
+
+#[test]
+fn prop_dilation_equals_strided_dense_conv() {
+    // A dilated filter equals a dense filter with zeros inserted between
+    // taps: conv(x, w, d) == conv(x, expand(w, d), 1).
+    let mut rng = Rng::new(0xF7);
+    for case in 0..20 {
+        let c = 1 + rng.below(4);
+        let k = 1 + rng.below(4);
+        let s = 2 + rng.below(4);
+        let d = 2 + rng.below(4);
+        let q = 1 + rng.below(100);
+        let w_in = q + (s - 1) * d;
+        let p_dil = ConvParams::new(1, c, k, w_in, s, d).unwrap();
+        let s_dense = (s - 1) * d + 1;
+        let p_dense = ConvParams::new(1, c, k, w_in, s_dense, 1).unwrap();
+        assert_eq!(p_dil.q(), p_dense.q());
+        let x = rnd(c * w_in, case);
+        let wt = rnd(k * c * s, case + 100);
+        // Expand taps with zeros.
+        let mut dense = vec![0.0f32; k * c * s_dense];
+        for ik in 0..k {
+            for ic in 0..c {
+                for is in 0..s {
+                    dense[(ik * c + ic) * s_dense + is * d] = wt[(ik * c + ic) * s + is];
+                }
+            }
+        }
+        let mut o1 = vec![0.0; k * p_dil.q()];
+        forward(&p_dil, &x, &kcs_to_skc(&wt, k, c, s), &mut o1, 1);
+        let mut o2 = vec![0.0; k * p_dense.q()];
+        forward(&p_dense, &x, &kcs_to_skc(&dense, k, c, s_dense), &mut o2, 1);
+        close(&o1, &o2, 1e-3, "dilation-expansion", case);
+    }
+}
+
+#[test]
+fn prop_threading_bit_exact() {
+    let mut rng = Rng::new(0xF8);
+    for case in 0..15 {
+        let p = arb_problem(&mut rng);
+        let x = rnd(p.n * p.c * p.w, case);
+        let wt = rnd(p.k * p.c * p.s, case + 1);
+        let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+        let mut o1 = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut o1, 1);
+        let mut o2 = vec![0.0; p.n * p.k * p.q()];
+        forward(&p, &x, &skc, &mut o2, 3);
+        assert_eq!(o1, o2, "case {case}");
+    }
+}
