@@ -1,13 +1,16 @@
 //! Quickstart: build a 1D dilated convolution layer at the paper's
 //! AtacWorks shape (C=15, K=15, S=51, d=8), run forward + both backward
-//! passes, check the three backends agree, and print achieved GFLOP/s.
+//! passes, check the three backends agree, and print achieved GFLOP/s —
+//! then do it again through the plan/executor API (build a `ConvPlan`
+//! once, execute into preallocated buffers with zero steady-state
+//! allocations).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use dilconv1d::bench_harness::time_fn;
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams};
-use dilconv1d::machine::gflops;
+use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams, ConvPlan};
+use dilconv1d::machine::{gflops, Precision};
 
 fn main() {
     // The paper's workhorse layer (Sec. 4.2): 15 channels, 15 filters,
@@ -36,7 +39,7 @@ fn main() {
             .zip(&out2)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
-        println!("{backend:?} agrees with BRGEMM: max abs err {max_err:.2e}");
+        println!("{backend} agrees with brgemm: max abs err {max_err:.2e}");
         assert!(max_err < 1e-3);
     }
 
@@ -48,17 +51,40 @@ fn main() {
 
     // Timings per backend (the Fig. 4 story in miniature).
     println!("\ntiming (median of 5):");
-    for backend in [Backend::Brgemm, Backend::Im2col, Backend::Direct] {
+    for backend in Backend::ALL {
         let mut l = layer.clone();
         l.backend = backend;
         let t = time_fn(1, 5, || {
             std::hint::black_box(l.forward(&x, n, w));
         });
         println!(
-            "  {backend:?}: {:8.2} ms  ({:6.2} GFLOP/s)",
+            "  {backend}: {:8.2} ms  ({:6.2} GFLOP/s)",
             t.median_secs * 1e3,
             gflops(p.flops(), t.median_secs),
         );
     }
+
+    // The plan/executor API: build once (layout derivation + workspace
+    // sizing, the paper's "JIT at construction" phase), execute many
+    // times with zero steady-state allocations.
+    let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, layer.weights().to_vec())
+        .expect("plan");
+    println!(
+        "\nplan: kernel '{}', workspace {} KiB",
+        plan.kernel_name(),
+        plan.workspace_bytes() / 1024
+    );
+    let mut out_planned = vec![0.0f32; n * k * p.q()];
+    let t = time_fn(1, 5, || {
+        plan.execute_forward_into(&x, &mut out_planned);
+        std::hint::black_box(&out_planned);
+    });
+    println!(
+        "  planned forward: {:8.2} ms  ({:6.2} GFLOP/s)",
+        t.median_secs * 1e3,
+        gflops(p.flops(), t.median_secs),
+    );
+    assert_eq!(out_planned, out, "planned path must be bit-exact");
+
     println!("\nquickstart OK");
 }

@@ -6,8 +6,11 @@
 //! Run: `cargo bench --bench conv_forward` (in `cargo bench` the binary
 //! runs with `--bench`, which we ignore).
 
-use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
-use dilconv1d::conv1d::Backend;
+use dilconv1d::bench_harness::{run_point, time_fn, Pass, SweepConfig};
+use dilconv1d::conv1d::forward::forward;
+use dilconv1d::conv1d::layout::kcs_to_skc;
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan};
 use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
 
 fn main() {
@@ -68,5 +71,51 @@ fn main() {
             b.modeled_eff * 100.0,
         );
     }
+    // Planned vs eager on the paper's AtacWorks shape (C=15, K=15, S=51,
+    // W=60 000): the eager path re-derives the offset tables and allocates
+    // the output on every call (the pre-plan Conv1dLayer::forward shape);
+    // the plan executes into preallocated buffers with zero allocations.
+    println!("\n# planned vs eager (AtacWorks layer: C=15 K=15 S=51 d=8 W=60000)");
+    let (n, c, k, s, d, w) = (1usize, 15usize, 15usize, 51usize, 8usize, 60_000usize);
+    let p = ConvParams::new(n, c, k, w, s, d).unwrap();
+    let wt = rnd(k * c * s, 0xE1);
+    let x = rnd(n * c * w, 0xE2);
+    let reps = if quick { 3 } else { 7 };
+    let skc = kcs_to_skc(&wt, k, c, s);
+    let t_eager = time_fn(1, reps, || {
+        let mut out = vec![0.0f32; n * k * p.q()];
+        forward(&p, &x, &skc, &mut out, 1);
+        std::hint::black_box(&out);
+    });
+    let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt).expect("plan");
+    let mut out = vec![0.0f32; n * k * p.q()];
+    let t_plan = time_fn(1, reps, || {
+        plan.execute_forward_into(&x, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "eager  {:>8.2} ms   planned {:>8.2} ms   ratio {:.3} (workspace {} KiB)",
+        t_eager.median_secs * 1e3,
+        t_plan.median_secs * 1e3,
+        t_plan.median_secs / t_eager.median_secs,
+        plan.workspace_bytes() / 1024,
+    );
+    // Visible regression signal; hard-fail only under BENCH_STRICT so a
+    // noisy shared host can't spuriously kill the bench binary.
+    let regressed = t_plan.min_secs > t_eager.min_secs * 1.10;
+    if regressed {
+        eprintln!(
+            "WARN: planned path slower than eager: {} vs {}",
+            t_plan.min_secs, t_eager.min_secs
+        );
+    }
+    if std::env::var("BENCH_STRICT").is_ok() {
+        assert!(
+            !regressed,
+            "planned path must not be slower than eager: {} vs {}",
+            t_plan.min_secs, t_eager.min_secs
+        );
+    }
+
     println!("\nconv_forward bench done");
 }

@@ -3,14 +3,8 @@
 //! paper's machines at equal efficiency (the substitution contract of
 //! DESIGN.md §4).
 
-use crate::conv1d::backward_data::backward_data;
-use crate::conv1d::backward_weight::backward_weight;
-use crate::conv1d::bf16::to_bf16;
-use crate::conv1d::forward::{forward, forward_bf16};
-use crate::conv1d::im2col::forward_im2col;
-use crate::conv1d::layout::{kcs_to_sck_flipped, kcs_to_skc};
 use crate::conv1d::test_util::rnd;
-use crate::conv1d::{Backend, ConvParams};
+use crate::conv1d::{Backend, ConvParams, ConvPlan};
 use crate::machine::{project, Measurement, Precision, Strategy};
 use crate::machine::spec::MachineSpec;
 
@@ -97,51 +91,39 @@ pub fn run_point(
     let x = rnd(p.n * p.c * p.w, 0xC0 + q as u64);
     let wt = rnd(p.k * p.c * p.s, 0xF1 + s as u64);
 
-    let timing = match (pass, backend, precision) {
-        (Pass::Forward, Backend::Brgemm, Precision::F32) => {
-            let skc = kcs_to_skc(&wt, k, c, s);
+    // Build the plan once — the paper's setup phase (JIT + relayout) —
+    // then time the steady-state executor only, the way a training loop
+    // experiences the kernel. bf16 is only meaningful on the BRGEMM
+    // backend; the library baseline always measures f32, as in the paper.
+    let plan_precision = if backend == Backend::Brgemm {
+        precision
+    } else {
+        Precision::F32
+    };
+    let mut plan = ConvPlan::new(p, backend, plan_precision, cfg.threads, wt)
+        .expect("sweep plan construction");
+    let timing = match pass {
+        Pass::Forward => {
             let mut out = vec![0.0f32; p.n * p.k * p.q()];
             time_fn(1, cfg.reps, || {
-                forward(&p, &x, &skc, &mut out, cfg.threads);
+                plan.execute_forward_into(&x, &mut out);
                 std::hint::black_box(&out);
             })
         }
-        (Pass::Forward, Backend::Brgemm, Precision::Bf16) => {
-            let skc = to_bf16(&kcs_to_skc(&wt, k, c, s));
-            let xb = to_bf16(&x);
-            let mut out = vec![crate::conv1d::bf16::Bf16::ZERO; p.n * p.k * p.q()];
-            time_fn(1, cfg.reps, || {
-                forward_bf16(&p, &xb, &skc, &mut out, cfg.threads);
-                std::hint::black_box(&out);
-            })
-        }
-        (Pass::Forward, Backend::Im2col, _) => {
-            let mut out = vec![0.0f32; p.n * p.k * p.q()];
-            time_fn(1, cfg.reps, || {
-                forward_im2col(&p, &x, &wt, &mut out, cfg.threads);
-                std::hint::black_box(&out);
-            })
-        }
-        (Pass::Forward, Backend::Direct, _) => {
-            let mut out = vec![0.0f32; p.n * p.k * p.q()];
-            time_fn(1, cfg.reps, || {
-                crate::conv1d::direct::forward_direct(&p, &x, &wt, &mut out);
-                std::hint::black_box(&out);
-            })
-        }
-        (Pass::BackwardData, _, _) => {
+        Pass::BackwardData => {
             let gout = rnd(p.n * p.k * p.q(), 0xAB);
-            let sck = kcs_to_sck_flipped(&wt, k, c, s);
             let mut gin = vec![0.0f32; p.n * p.c * p.w];
             time_fn(1, cfg.reps, || {
-                backward_data(&p, &gout, &sck, &mut gin, cfg.threads);
+                plan.execute_backward_data_into(&gout, &mut gin);
                 std::hint::black_box(&gin);
             })
         }
-        (Pass::BackwardWeight, _, _) => {
+        Pass::BackwardWeight => {
             let gout = rnd(p.n * p.k * p.q(), 0xCD);
+            let mut gw = vec![0.0f32; p.k * p.c * p.s];
             time_fn(1, cfg.reps, || {
-                std::hint::black_box(backward_weight(&p, &gout, &x, cfg.threads));
+                plan.execute_backward_weight_into(&gout, &x, &mut gw);
+                std::hint::black_box(&gw);
             })
         }
     };

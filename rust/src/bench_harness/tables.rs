@@ -48,6 +48,13 @@ pub fn speedup(x: f64) -> String {
     format!("{x:.2}x")
 }
 
+/// Canonical table/CSV cell for a backend: the registry name via
+/// `Display`, which round-trips with `Backend::from_str` — replaces the
+/// ad-hoc `{:?}` labels the reports used to emit.
+pub fn backend_cell(b: crate::conv1d::Backend) -> String {
+    b.to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +78,16 @@ mod tests {
         assert_eq!(secs(2.5), "2.500s");
         assert_eq!(secs(0.0021), "2.100ms");
         assert_eq!(speedup(6.864), "6.86x");
+    }
+
+    #[test]
+    fn backend_cells_round_trip() {
+        use crate::conv1d::Backend;
+        for b in Backend::ALL {
+            let cell = backend_cell(b);
+            assert_eq!(cell.parse::<Backend>().unwrap(), b, "{cell}");
+        }
+        assert_eq!(backend_cell(Backend::Im2col), "im2col");
     }
 
     #[test]

@@ -100,6 +100,12 @@ impl TrainConfig {
         if let Some(v) = toml::get_f64(&doc, "train", "lr") {
             cfg.lr = v;
         }
+        // Backend before precision: a backend name implies a precision
+        // (see apply_backend_name), so an explicit `precision` key stays
+        // authoritative when both are given.
+        if let Some(s) = toml::get_str(&doc, "train", "backend") {
+            cfg.apply_backend_name(s).map_err(|e| anyhow!(e))?;
+        }
         if let Some(s) = toml::get_str(&doc, "train", "precision") {
             cfg.precision = match s.to_ascii_lowercase().as_str() {
                 "f32" | "fp32" => Precision::F32,
@@ -107,10 +113,29 @@ impl TrainConfig {
                 other => return Err(anyhow!("unknown precision '{other}'")),
             };
         }
-        if let Some(s) = toml::get_str(&doc, "train", "backend") {
-            cfg.backend = s.parse().map_err(|e: String| anyhow!(e))?;
-        }
         Ok(cfg)
+    }
+
+    /// Select the conv backend by **registry name** (any alias accepted by
+    /// [`crate::conv1d::lookup_kernel`]) — so configs pick any registered
+    /// kernel without the enum ever growing. A kernel name pins the
+    /// precision too: `"bf16"` means the BRGEMM backend at
+    /// `Precision::Bf16`, every other name means f32 — a later
+    /// `precision` setting can still override.
+    pub fn apply_backend_name(&mut self, name: &str) -> Result<(), String> {
+        let kernel = crate::conv1d::lookup_kernel(name)
+            .ok_or_else(|| format!("unknown backend '{name}'"))?;
+        match kernel.name() {
+            "bf16" => {
+                self.backend = Backend::Brgemm;
+                self.precision = Precision::Bf16;
+            }
+            canonical => {
+                self.backend = canonical.parse()?;
+                self.precision = Precision::F32;
+            }
+        }
+        Ok(())
     }
 
     /// Padded track width the network sees.
@@ -159,6 +184,22 @@ sockets = 4
         assert_eq!(c.sockets, 4);
         // Untouched defaults survive.
         assert_eq!(c.filter_size, 51);
+    }
+
+    #[test]
+    fn registry_backend_names() {
+        let mut c = TrainConfig::default();
+        c.apply_backend_name("libxsmm").unwrap();
+        assert_eq!(c.backend, Backend::Brgemm);
+        c.apply_backend_name("bf16").unwrap();
+        assert_eq!(c.backend, Backend::Brgemm);
+        assert_eq!(c.precision, Precision::Bf16);
+        // Selecting a non-bf16 kernel afterwards resets the implied
+        // precision — no sticky bf16 from an earlier choice.
+        c.apply_backend_name("onednn").unwrap();
+        assert_eq!(c.backend, Backend::Im2col);
+        assert_eq!(c.precision, Precision::F32);
+        assert!(c.apply_backend_name("cuda").is_err());
     }
 
     #[test]

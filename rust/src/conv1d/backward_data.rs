@@ -11,20 +11,28 @@
 
 use super::brgemm::brgemm_f32;
 use super::params::{ConvParams, WIDTH_BLOCK};
-use super::threading::par_batch_chunks;
+use super::threading::par_batch_chunks_scratch;
 
-/// Backward-data for one batch element.
+/// Tap offsets of the `(S, C, K)` backward-data weight: `a_offs[s] = s·C·K`.
+pub fn backward_data_a_offs(p: &ConvParams) -> Vec<usize> {
+    (0..p.s).map(|is| is * p.c * p.k).collect()
+}
+
+/// Zero-allocation backward-data for one batch element; offset tables are
+/// caller-owned scratch.
 ///
 /// * `gout_padded`: `(K, Q + 2·(S−1)·d)` — output gradient padded with
-///   `(S−1)·d` zeros on each side (see [`pad_gout`]).
+///   `(S−1)·d` zeros on each side (see [`pad_gout_into`]).
 /// * `w_sck`: weight relaid out to `(S, C, K)` with taps reversed
 ///   ([`super::layout::kcs_to_sck_flipped`]).
 /// * `gin`: `(C, W)` data gradient, overwritten.
-pub fn backward_data_single(
+pub fn backward_data_single_into(
     p: &ConvParams,
     gout_padded: &[f32],
     w_sck: &[f32],
     gin: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
 ) {
     let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
     let pad = (s - 1) * d;
@@ -32,8 +40,8 @@ pub fn backward_data_single(
     debug_assert_eq!(gout_padded.len(), k * qp);
     debug_assert_eq!(w_sck.len(), s * c * k);
     debug_assert_eq!(gin.len(), c * w);
-    let a_offs: Vec<usize> = (0..s).map(|is| is * c * k).collect();
-    let mut b_offs = vec![0usize; s];
+    debug_assert_eq!(a_offs.len(), s);
+    debug_assert_eq!(b_offs.len(), s);
     let mut pos = 0;
     // The "output" of this pass is the data gradient of width W = Q + pad.
     while pos < w {
@@ -42,32 +50,91 @@ pub fn backward_data_single(
             *bo = pos + is * d; // into the padded gradient
         }
         brgemm_f32(
-            w_sck, &a_offs, k, gout_padded, &b_offs, qp, &mut gin[pos..], w, c, nb, k, true,
+            w_sck, a_offs, k, gout_padded, b_offs, qp, &mut gin[pos..], w, c, nb, k, true,
         );
         pos += nb;
     }
+}
+
+/// Backward-data for one batch element (allocating wrapper).
+pub fn backward_data_single(p: &ConvParams, gout_padded: &[f32], w_sck: &[f32], gin: &mut [f32]) {
+    let a_offs = backward_data_a_offs(p);
+    let mut b_offs = vec![0usize; p.s];
+    backward_data_single_into(p, gout_padded, w_sck, gin, &a_offs, &mut b_offs);
+}
+
+/// Zero-pad the `(N, K, Q)` output gradient by `(S−1)·d` on both width
+/// edges into a caller-owned `(N, K, Q + 2·(S−1)·d)` buffer.
+pub fn pad_gout_into(p: &ConvParams, gout: &[f32], gp: &mut [f32]) {
+    let (n, k, q) = (p.n, p.k, p.q());
+    let pad = (p.s - 1) * p.d;
+    super::layout::pad_width_into(gout, n, k, q, pad, pad, gp);
 }
 
 /// Zero-pad `(N, K, Q)` output gradient by `(S−1)·d` on both width edges.
 pub fn pad_gout(p: &ConvParams, gout: &[f32]) -> Vec<f32> {
     let (n, k, q) = (p.n, p.k, p.q());
     let pad = (p.s - 1) * p.d;
-    super::layout::pad_width(gout, n, k, q, pad, pad)
+    let mut gp = vec![0.0; n * k * (q + 2 * pad)];
+    pad_gout_into(p, gout, &mut gp);
+    gp
 }
 
-/// Batched backward-data pass, threaded over the batch dimension.
-///
-/// * `gout`: `(N, K, Q)` (unpadded); `w_sck` as above; `gin`: `(N, C, W)`.
-pub fn backward_data(p: &ConvParams, gout: &[f32], w_sck: &[f32], gin: &mut [f32], threads: usize) {
+/// Batched backward-data with caller-owned scratch — the plan executor's
+/// entry point. `b_offs` needs `min(threads, N)·S` elements, `gp` the
+/// padded-gradient size `N·K·(Q + 2·(S−1)·d)`; with `threads <= 1` the
+/// call performs zero heap allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_data_with_scratch(
+    p: &ConvParams,
+    gout: &[f32],
+    w_sck: &[f32],
+    gin: &mut [f32],
+    threads: usize,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    gp: &mut [f32],
+) {
     let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
     assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {p}");
     assert_eq!(w_sck.len(), p.s * c * k, "weight shape mismatch for {p}");
     assert_eq!(gin.len(), n * c * w, "grad-in shape mismatch for {p}");
-    let gp = pad_gout(p, gout);
+    pad_gout_into(p, gout, gp);
     let qp = q + 2 * (p.s - 1) * p.d;
-    par_batch_chunks(gin, c * w, threads, |i, gin_row| {
-        backward_data_single(p, &gp[i * k * qp..(i + 1) * k * qp], w_sck, gin_row);
-    });
+    let gp = &*gp;
+    let mut no_scratch: [f32; 0] = [];
+    par_batch_chunks_scratch(
+        gin,
+        c * w,
+        b_offs,
+        p.s,
+        &mut no_scratch[..],
+        0,
+        threads,
+        |i, gin_row, bo, _| {
+            backward_data_single_into(
+                p,
+                &gp[i * k * qp..(i + 1) * k * qp],
+                w_sck,
+                gin_row,
+                a_offs,
+                bo,
+            );
+        },
+    );
+}
+
+/// Batched backward-data pass, threaded over the batch dimension. The pad
+/// buffer and offset tables are hoisted to one allocation per call.
+///
+/// * `gout`: `(N, K, Q)` (unpadded); `w_sck` as above; `gin`: `(N, C, W)`.
+pub fn backward_data(p: &ConvParams, gout: &[f32], w_sck: &[f32], gin: &mut [f32], threads: usize) {
+    let a_offs = backward_data_a_offs(p);
+    let workers = threads.max(1).min(p.n.max(1));
+    let mut b_offs = vec![0usize; workers * p.s];
+    let qp = p.q() + 2 * (p.s - 1) * p.d;
+    let mut gp = vec![0.0; p.n * p.k * qp];
+    backward_data_with_scratch(p, gout, w_sck, gin, threads, &a_offs, &mut b_offs, &mut gp);
 }
 
 #[cfg(test)]

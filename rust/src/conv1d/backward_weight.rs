@@ -16,7 +16,7 @@
 //! threading is requested.
 
 use super::gemm::gemm_f32_bt;
-use super::layout::sck_to_kcs;
+use super::layout::sck_to_kcs_into;
 use super::params::{ConvParams, WIDTH_BLOCK};
 
 /// Accumulate the weight gradient of one batch element into `gw_sck`
@@ -48,37 +48,44 @@ pub fn backward_weight_single(p: &ConvParams, gout: &[f32], x: &[f32], gw_sck: &
     }
 }
 
-/// Batched backward-weight pass. Returns the gradient in the framework's
-/// `(K, C, S)` layout.
+/// Batched backward-weight with caller-owned scratch — the plan
+/// executor's entry point. `gw_kcs` receives the gradient in the
+/// framework's `(K, C, S)` layout; `partials` must hold
+/// `min(threads, N)·S·C·K` elements of per-worker accumulator space.
+/// With `threads <= 1` the call performs zero heap allocations.
 ///
-/// With `threads > 1` the batch is sharded over per-thread accumulators
+/// With `threads > 1` the batch is sharded over per-worker accumulators
 /// which are summed afterwards — the deterministic equivalent of the
 /// paper's shared-weight-tensor multithreading caveat (Sec. 3.3).
-pub fn backward_weight(
+pub fn backward_weight_with_scratch(
     p: &ConvParams,
     gout: &[f32],
     x: &[f32],
+    gw_kcs: &mut [f32],
     threads: usize,
-) -> Vec<f32> {
+    partials: &mut [f32],
+) {
     let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
     assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {p}");
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(gw_kcs.len(), k * c * s, "grad-weight shape mismatch for {p}");
     let t = threads.max(1).min(n.max(1));
-    let mut partials = vec![vec![0.0f32; s * c * k]; t];
+    let scl = s * c * k;
+    assert!(partials.len() >= t * scl, "partials buffer too small");
+    let partials = &mut partials[..t * scl];
+    partials.fill(0.0);
     if t == 1 {
         for i in 0..n {
             backward_weight_single(
                 p,
                 &gout[i * k * q..(i + 1) * k * q],
                 &x[i * c * w..(i + 1) * c * w],
-                &mut partials[0],
+                partials,
             );
         }
     } else {
         std::thread::scope(|scope| {
-            for (tid, acc) in partials.iter_mut().enumerate() {
-                let gout = &gout;
-                let x = &x;
+            for (tid, acc) in partials.chunks_mut(scl).enumerate() {
                 scope.spawn(move || {
                     let mut i = tid;
                     while i < n {
@@ -93,15 +100,27 @@ pub fn backward_weight(
                 });
             }
         });
-    }
-    // Tree-free deterministic merge (t is small).
-    let mut total = partials.remove(0);
-    for part in &partials {
-        for (a, b) in total.iter_mut().zip(part) {
-            *a += b;
+        // Tree-free deterministic merge (t is small).
+        let (total, rest) = partials.split_at_mut(scl);
+        for part in rest.chunks(scl) {
+            for (a, b) in total.iter_mut().zip(part) {
+                *a += b;
+            }
         }
     }
-    sck_to_kcs(&total, s, c, k)
+    sck_to_kcs_into(&partials[..scl], s, c, k, gw_kcs);
+}
+
+/// Batched backward-weight pass. Returns the gradient in the framework's
+/// `(K, C, S)` layout (allocating wrapper around
+/// [`backward_weight_with_scratch`]).
+pub fn backward_weight(p: &ConvParams, gout: &[f32], x: &[f32], threads: usize) -> Vec<f32> {
+    let (c, k, s) = (p.c, p.k, p.s);
+    let t = threads.max(1).min(p.n.max(1));
+    let mut partials = vec![0.0f32; t * s * c * k];
+    let mut gw = vec![0.0f32; k * c * s];
+    backward_weight_with_scratch(p, gout, x, &mut gw, threads, &mut partials);
+    gw
 }
 
 #[cfg(test)]

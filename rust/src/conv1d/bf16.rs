@@ -54,6 +54,15 @@ pub fn to_bf16(xs: &[f32]) -> Vec<Bf16> {
     xs.iter().map(|&v| Bf16::from_f32(v)).collect()
 }
 
+/// Convert a f32 slice to bf16 into a caller-owned buffer (the plan's
+/// zero-allocation input staging for the bf16 kernel).
+pub fn to_bf16_into(xs: &[f32], out: &mut [Bf16]) {
+    assert_eq!(xs.len(), out.len(), "bf16 buffer length mismatch");
+    for (o, &v) in out.iter_mut().zip(xs) {
+        *o = Bf16::from_f32(v);
+    }
+}
+
 /// Widen a bf16 slice to f32.
 pub fn to_f32(xs: &[Bf16]) -> Vec<f32> {
     xs.iter().map(|v| v.to_f32()).collect()

@@ -52,12 +52,14 @@ pub fn backward_data_direct(p: &ConvParams, gout: &[f32], w_kcs: &[f32], gin: &m
     }
 }
 
-/// Backward-weight: `Grad_w[k,c,s] = Σ_n Σ_q Grad_out[n,k,q] · In[n,c,q+d·s]`.
-pub fn backward_weight_direct(p: &ConvParams, gout: &[f32], x: &[f32]) -> Vec<f32> {
+/// Backward-weight into a caller-owned `(K, C, S)` buffer:
+/// `Grad_w[k,c,s] = Σ_n Σ_q Grad_out[n,k,q] · In[n,c,q+d·s]`.
+pub fn backward_weight_direct_into(p: &ConvParams, gout: &[f32], x: &[f32], gw: &mut [f32]) {
     let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
     assert_eq!(gout.len(), n * k * q);
     assert_eq!(x.len(), n * c * w);
-    let mut gw = vec![0.0f32; k * c * s];
+    assert_eq!(gw.len(), k * c * s);
+    gw.fill(0.0);
     for ib in 0..n {
         for ik in 0..k {
             for ic in 0..c {
@@ -73,6 +75,12 @@ pub fn backward_weight_direct(p: &ConvParams, gout: &[f32], x: &[f32]) -> Vec<f3
             }
         }
     }
+}
+
+/// Backward-weight returning a fresh `(K, C, S)` gradient buffer.
+pub fn backward_weight_direct(p: &ConvParams, gout: &[f32], x: &[f32]) -> Vec<f32> {
+    let mut gw = vec![0.0f32; p.k * p.c * p.s];
+    backward_weight_direct_into(p, gout, x, &mut gw);
     gw
 }
 

@@ -18,23 +18,37 @@
 use super::bf16::Bf16;
 use super::brgemm::{brgemm_bf16, brgemm_f32};
 use super::params::{ConvParams, WIDTH_BLOCK};
-use super::threading::{par_batch_chunks, par_batch_chunks_bf16};
+use super::threading::par_batch_chunks_scratch;
 
-/// Forward pass for one batch element.
+/// Tap offsets of the `(S, K, C)` forward weight: `a_offs[s] = s·K·C`.
+/// Block-position independent, so a plan computes them exactly once
+/// (the paper regenerates per block; hoisting is equivalent and cheaper —
+/// see EXPERIMENTS.md §Perf).
+pub fn forward_a_offs(p: &ConvParams) -> Vec<usize> {
+    (0..p.s).map(|is| is * p.k * p.c).collect()
+}
+
+/// Zero-allocation forward pass for one batch element: the tap-offset
+/// tables live in caller-owned scratch (`a_offs` from
+/// [`forward_a_offs`], `b_offs` any `S`-length buffer).
 ///
 /// * `x`: `(C, W)` input row (`w` pre-padded), row-major, `x.len() == c*w`
 /// * `w_skc`: weight relaid out to `(S, K, C)` ([`super::layout::kcs_to_skc`])
 /// * `out`: `(K, Q)` output row, overwritten.
-pub fn forward_single(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32]) {
+pub fn forward_single_into(
+    p: &ConvParams,
+    x: &[f32],
+    w_skc: &[f32],
+    out: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+) {
     let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(w_skc.len(), s * k * c);
     debug_assert_eq!(out.len(), k * q);
-    // Tap offsets into the SKC weight are block-position independent:
-    // generate once per call (the paper regenerates per block; hoisting is
-    // equivalent and cheaper — see EXPERIMENTS.md §Perf).
-    let a_offs: Vec<usize> = (0..s).map(|is| is * k * c).collect();
-    let mut b_offs = vec![0usize; s];
+    debug_assert_eq!(a_offs.len(), s);
+    debug_assert_eq!(b_offs.len(), s);
     let mut pos = 0;
     while pos < q {
         let nb = WIDTH_BLOCK.min(q - pos);
@@ -42,24 +56,62 @@ pub fn forward_single(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32])
             *bo = pos + is * d; // &In[0, pos + s*d], row stride = w
         }
         brgemm_f32(
-            w_skc, &a_offs, c, x, &b_offs, w, &mut out[pos..], q, k, nb, c, true,
+            w_skc, a_offs, c, x, b_offs, w, &mut out[pos..], q, k, nb, c, true,
         );
         pos += nb;
     }
 }
 
-/// Batched forward pass, multithreaded across the batch dimension
-/// (the paper's threading strategy, Sec. 2).
-///
-/// * `x`: `(N, C, W)`; `out`: `(N, K, Q)`, overwritten.
-pub fn forward(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], threads: usize) {
+/// Forward pass for one batch element (allocating convenience wrapper
+/// around [`forward_single_into`]).
+pub fn forward_single(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32]) {
+    let a_offs = forward_a_offs(p);
+    let mut b_offs = vec![0usize; p.s];
+    forward_single_into(p, x, w_skc, out, &a_offs, &mut b_offs);
+}
+
+/// Batched forward pass with caller-owned scratch — the plan executor's
+/// entry point. `b_offs` must hold at least `min(threads, N)·S` elements
+/// (one `S`-window per worker); with `threads <= 1` the call performs
+/// zero heap allocations.
+pub fn forward_with_scratch(
+    p: &ConvParams,
+    x: &[f32],
+    w_skc: &[f32],
+    out: &mut [f32],
+    threads: usize,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+) {
     let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
     assert_eq!(w_skc.len(), p.s * k * c, "weight shape mismatch for {p}");
     assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
-    par_batch_chunks(out, k * q, threads, |i, out_row| {
-        forward_single(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row);
-    });
+    let mut no_scratch: [f32; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        k * q,
+        b_offs,
+        p.s,
+        &mut no_scratch[..],
+        0,
+        threads,
+        |i, out_row, bo, _| {
+            forward_single_into(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row, a_offs, bo);
+        },
+    );
+}
+
+/// Batched forward pass, multithreaded across the batch dimension
+/// (the paper's threading strategy, Sec. 2). The per-image offset tables
+/// are hoisted: one scratch allocation per call, not per image.
+///
+/// * `x`: `(N, C, W)`; `out`: `(N, K, Q)`, overwritten.
+pub fn forward(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], threads: usize) {
+    let a_offs = forward_a_offs(p);
+    let workers = threads.max(1).min(p.n.max(1));
+    let mut b_offs = vec![0usize; workers * p.s];
+    forward_with_scratch(p, x, w_skc, out, threads, &a_offs, &mut b_offs);
 }
 
 /// Forward pass with a caller-chosen width block — the ablation hook for
@@ -73,7 +125,7 @@ pub fn forward_single_wb(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f3
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(w_skc.len(), s * k * c);
     debug_assert_eq!(out.len(), k * q);
-    let a_offs: Vec<usize> = (0..s).map(|is| is * k * c).collect();
+    let a_offs = forward_a_offs(p);
     let mut b_offs = vec![0usize; s];
     let mut pos = 0;
     while pos < q {
@@ -88,25 +140,33 @@ pub fn forward_single_wb(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f3
     }
 }
 
-/// bf16 forward pass for one batch element: bf16 operands, f32 accumulate,
-/// bf16 store (paper Sec. 4.3 BF16 path; Cooper Lake `VDPBF16PS`).
-pub fn forward_single_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut [Bf16]) {
+/// Zero-allocation bf16 forward pass for one batch element: bf16
+/// operands, f32 accumulate, bf16 store (paper Sec. 4.3 BF16 path; Cooper
+/// Lake `VDPBF16PS`). `fblock` is the caller-owned `K·WIDTH_BLOCK` f32
+/// accumulator staging block narrowed to bf16 on store.
+pub fn forward_single_bf16_into(
+    p: &ConvParams,
+    x: &[Bf16],
+    w_skc: &[Bf16],
+    out: &mut [Bf16],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    fblock: &mut [f32],
+) {
     let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(w_skc.len(), s * k * c);
     debug_assert_eq!(out.len(), k * q);
-    let a_offs: Vec<usize> = (0..s).map(|is| is * k * c).collect();
-    let mut b_offs = vec![0usize; s];
-    let mut fblock = vec![0.0f32; k * WIDTH_BLOCK];
+    debug_assert_eq!(a_offs.len(), s);
+    debug_assert_eq!(b_offs.len(), s);
+    debug_assert!(fblock.len() >= k * WIDTH_BLOCK);
     let mut pos = 0;
     while pos < q {
         let nb = WIDTH_BLOCK.min(q - pos);
         for (is, bo) in b_offs.iter_mut().enumerate() {
             *bo = pos + is * d;
         }
-        brgemm_bf16(
-            w_skc, &a_offs, c, x, &b_offs, w, &mut fblock, nb, k, nb, c, true,
-        );
+        brgemm_bf16(w_skc, a_offs, c, x, b_offs, w, fblock, nb, k, nb, c, true);
         // Narrow the f32 accumulator block to bf16 on store.
         for ik in 0..k {
             for j in 0..nb {
@@ -117,15 +177,99 @@ pub fn forward_single_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut
     }
 }
 
-/// Batched bf16 forward pass.
+/// bf16 forward pass for one batch element (allocating wrapper).
+pub fn forward_single_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut [Bf16]) {
+    let a_offs = forward_a_offs(p);
+    let mut b_offs = vec![0usize; p.s];
+    let mut fblock = vec![0.0f32; p.k * WIDTH_BLOCK];
+    forward_single_bf16_into(p, x, w_skc, out, &a_offs, &mut b_offs, &mut fblock);
+}
+
+/// Batched bf16 forward pass. Offset tables and the f32 accumulator block
+/// are hoisted to one allocation per worker, not one per image.
 pub fn forward_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut [Bf16], threads: usize) {
     let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
     assert_eq!(x.len(), n * c * w);
     assert_eq!(w_skc.len(), p.s * k * c);
     assert_eq!(out.len(), n * k * q);
-    par_batch_chunks_bf16(out, k * q, threads, |i, out_row| {
-        forward_single_bf16(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row);
-    });
+    let a_offs = forward_a_offs(p);
+    let workers = threads.max(1).min(n.max(1));
+    let mut b_offs = vec![0usize; workers * p.s];
+    let mut fblock = vec![0.0f32; workers * k * WIDTH_BLOCK];
+    par_batch_chunks_scratch(
+        out,
+        k * q,
+        &mut b_offs[..],
+        p.s,
+        &mut fblock[..],
+        k * WIDTH_BLOCK,
+        threads,
+        |i, out_row, bo, fb| {
+            forward_single_bf16_into(
+                p,
+                &x[i * c * w..(i + 1) * c * w],
+                w_skc,
+                out_row,
+                &a_offs,
+                bo,
+                fb,
+            );
+        },
+    );
+}
+
+/// Zero-allocation bf16 forward with **f32 output** — the plan executor's
+/// bf16 kernel: operands stay bf16 (`VDPBF16PS` semantics), the f32
+/// accumulator is stored directly, so the caller keeps a uniform f32
+/// tensor interface across precisions.
+pub fn forward_bf16_f32out_with_scratch(
+    p: &ConvParams,
+    x: &[Bf16],
+    w_skc: &[Bf16],
+    out: &mut [f32],
+    threads: usize,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+) {
+    let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(w_skc.len(), s * k * c, "weight shape mismatch for {p}");
+    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    let mut no_scratch: [f32; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        k * q,
+        b_offs,
+        s,
+        &mut no_scratch[..],
+        0,
+        threads,
+        |i, out_row, bo, _| {
+            let xrow = &x[i * c * w..(i + 1) * c * w];
+            let mut pos = 0;
+            while pos < q {
+                let nb = WIDTH_BLOCK.min(q - pos);
+                for (is, slot) in bo.iter_mut().enumerate() {
+                    *slot = pos + is * d;
+                }
+                brgemm_bf16(
+                    w_skc,
+                    a_offs,
+                    c,
+                    xrow,
+                    bo,
+                    w,
+                    &mut out_row[pos..],
+                    q,
+                    k,
+                    nb,
+                    c,
+                    true,
+                );
+                pos += nb;
+            }
+        },
+    );
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@
 
 use super::gemm::gemm_f32;
 use super::params::{ConvParams, WIDTH_BLOCK};
-use super::threading::par_batch_chunks;
+use super::threading::par_batch_chunks_scratch;
 
 /// Materialise the im2col patch matrix for one batch element: `(C·S, Q)`.
 pub fn im2col_single(p: &ConvParams, x: &[f32], col: &mut [f32]) {
@@ -72,16 +72,43 @@ pub fn forward_im2col_single(
     }
 }
 
-/// Batched im2col forward. Allocates one patch matrix per thread.
-pub fn forward_im2col(p: &ConvParams, x: &[f32], w_kcs: &[f32], out: &mut [f32], threads: usize) {
+/// Batched im2col forward with a caller-owned patch matrix — the plan
+/// executor's entry point. `col` must hold `min(threads, N)·C·S·Q`
+/// elements (one patch matrix per worker); with `threads <= 1` the call
+/// performs zero heap allocations.
+pub fn forward_im2col_with_scratch(
+    p: &ConvParams,
+    x: &[f32],
+    w_kcs: &[f32],
+    out: &mut [f32],
+    threads: usize,
+    col: &mut [f32],
+) {
     let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
     assert_eq!(w_kcs.len(), k * c * s, "weight shape mismatch for {p}");
     assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
-    par_batch_chunks(out, k * q, threads, |i, out_row| {
-        let mut col = vec![0.0f32; c * s * q];
-        forward_im2col_single(p, &x[i * c * w..(i + 1) * c * w], w_kcs, &mut col, out_row);
-    });
+    let mut no_scratch: [usize; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        k * q,
+        col,
+        c * s * q,
+        &mut no_scratch[..],
+        0,
+        threads,
+        |i, out_row, colb, _| {
+            forward_im2col_single(p, &x[i * c * w..(i + 1) * c * w], w_kcs, colb, out_row);
+        },
+    );
+}
+
+/// Batched im2col forward. The patch matrices are hoisted to one
+/// allocation per call (one per worker), not one per image.
+pub fn forward_im2col(p: &ConvParams, x: &[f32], w_kcs: &[f32], out: &mut [f32], threads: usize) {
+    let workers = threads.max(1).min(p.n.max(1));
+    let mut col = vec![0.0f32; workers * p.c * p.s * p.q()];
+    forward_im2col_with_scratch(p, x, w_kcs, out, threads, &mut col);
 }
 
 /// Extra bytes moved by the im2col materialisation relative to BRGEMM —

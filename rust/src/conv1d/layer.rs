@@ -1,21 +1,24 @@
 //! `Conv1dLayer` — the public, framework-style layer object.
 //!
-//! Owns the weight (framework layout `(K, C, S)`) plus the two derived
-//! layouts the paper's kernels need, a bias vector, and an implementation
-//! selector. This is the Rust equivalent of the paper's PyTorch C++
-//! extension module: construct once, call `forward` / `backward_*` per
-//! batch, switch `Backend` to compare against the library baseline.
+//! Since the plan/executor redesign (DESIGN.md §5a) this is a thin
+//! compatibility wrapper over [`ConvPlan`]: the layer owns the framework
+//! `(K, C, S)` weight and a bias, and lazily builds one plan per
+//! `(shape, backend, threads)` combination. Repeated calls at the same
+//! shape — the training steady state — reuse the cached plan, so the
+//! derived layouts, offset tables and scratch are built once, exactly
+//! like the paper's PyTorch C++ extension module.
 
-use super::backward_data::backward_data;
-use super::backward_weight::backward_weight;
+use std::sync::Mutex;
+
 use super::bf16::{to_bf16, Bf16};
-use super::direct::{backward_data_direct, forward_direct};
-use super::forward::{forward, forward_bf16};
-use super::im2col::forward_im2col;
-use super::layout::{kcs_to_sck_flipped, kcs_to_skc, pad_width};
+use super::forward::forward_bf16;
+use super::layout::{kcs_to_skc, pad_width};
 use super::params::ConvParams;
+use super::plan::ConvPlan;
+use crate::machine::Precision;
 
-/// Kernel implementation selector.
+/// Kernel implementation selector. `Display` emits the canonical registry
+/// name ([`super::plan::lookup_kernel`]) and round-trips with `FromStr`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Backend {
     /// The paper's BRGEMM kernels (Algorithms 2–4). Default.
@@ -27,20 +30,52 @@ pub enum Backend {
     Direct,
 }
 
+impl Backend {
+    /// Every selectable backend, in preference order.
+    pub const ALL: [Backend; 3] = [Backend::Brgemm, Backend::Im2col, Backend::Direct];
+
+    /// Canonical registry name of this backend.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Brgemm => "brgemm",
+            Backend::Im2col => "im2col",
+            Backend::Direct => "direct",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 impl std::str::FromStr for Backend {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "brgemm" | "libxsmm" | "ours" => Ok(Backend::Brgemm),
-            "im2col" | "onednn" | "baseline" => Ok(Backend::Im2col),
-            "direct" | "naive" => Ok(Backend::Direct),
-            other => Err(format!("unknown backend '{other}'")),
+        // Single alias vocabulary: resolve through the kernel registry so
+        // the enum and `lookup_kernel` can never drift apart.
+        match super::plan::lookup_kernel(s).map(|k| k.name()) {
+            Some("brgemm") => Ok(Backend::Brgemm),
+            Some("im2col") => Ok(Backend::Im2col),
+            Some("direct") => Ok(Backend::Direct),
+            Some(other) => Err(format!(
+                "kernel '{other}' is not an enum backend; select it by name \
+                 via the registry (e.g. TrainConfig::apply_backend_name)"
+            )),
+            None => Err(format!("unknown backend '{s}'")),
         }
     }
 }
 
 /// A 1D dilated convolution layer with owned parameters.
-#[derive(Debug, Clone)]
+///
+/// Concurrency note: the cached plan sits behind a `Mutex`, so sharing
+/// one `&Conv1dLayer` across threads serialises its forward/backward
+/// calls. For parallel inference give each worker its own layer (a
+/// `clone()` is cheap — the clone rebuilds its plan lazily); in-layer
+/// parallelism comes from `threads` instead.
+#[derive(Debug)]
 pub struct Conv1dLayer {
     /// Input channels.
     pub c: usize,
@@ -52,14 +87,34 @@ pub struct Conv1dLayer {
     pub d: usize,
     /// Kernel implementation used by `forward`.
     pub backend: Backend,
+    /// Forward-pass precision. `Bf16` takes effect on the BRGEMM backend
+    /// (the paper's bf16 path); other backends fall back to f32, exactly
+    /// like the bench harness does.
+    pub precision: Precision,
     /// Threads for the batch-dimension parallelism.
     pub threads: usize,
     w_kcs: Vec<f32>,
-    w_skc: Vec<f32>,        // forward layout (S, K, C)
-    w_sck_flip: Vec<f32>,   // backward-data layout (S, C, K), taps reversed
-    w_skc_bf16: Vec<Bf16>,  // bf16 copy of the forward layout
     /// Per-filter bias (added by `forward_same`, framework-style).
     pub bias: Vec<f32>,
+    /// Cached plan for the last-seen `(shape, backend, precision, threads)`.
+    plan: Mutex<Option<ConvPlan>>,
+}
+
+impl Clone for Conv1dLayer {
+    fn clone(&self) -> Self {
+        Conv1dLayer {
+            c: self.c,
+            k: self.k,
+            s: self.s,
+            d: self.d,
+            backend: self.backend,
+            precision: self.precision,
+            threads: self.threads,
+            w_kcs: self.w_kcs.clone(),
+            bias: self.bias.clone(),
+            plan: Mutex::new(None), // the clone rebuilds its plan lazily
+        }
+    }
 }
 
 impl Conv1dLayer {
@@ -67,31 +122,27 @@ impl Conv1dLayer {
     pub fn new(c: usize, k: usize, s: usize, d: usize, w_kcs: Vec<f32>) -> Self {
         assert_eq!(w_kcs.len(), k * c * s, "weight shape mismatch");
         assert!(c > 0 && k > 0 && s > 0 && d > 0);
-        let w_skc = kcs_to_skc(&w_kcs, k, c, s);
-        let w_sck_flip = kcs_to_sck_flipped(&w_kcs, k, c, s);
-        let w_skc_bf16 = to_bf16(&w_skc);
         Conv1dLayer {
             c,
             k,
             s,
             d,
             backend: Backend::Brgemm,
+            precision: Precision::F32,
             threads: 1,
             w_kcs,
-            w_skc,
-            w_sck_flip,
-            w_skc_bf16,
             bias: vec![0.0; k],
+            plan: Mutex::new(None),
         }
     }
 
     /// Replace the weights (e.g. after an optimiser step); refreshes the
-    /// derived layouts.
+    /// cached plan's derived layouts in place.
     pub fn set_weights(&mut self, w_kcs: Vec<f32>) {
         assert_eq!(w_kcs.len(), self.k * self.c * self.s);
-        self.w_skc = kcs_to_skc(&w_kcs, self.k, self.c, self.s);
-        self.w_sck_flip = kcs_to_sck_flipped(&w_kcs, self.k, self.c, self.s);
-        self.w_skc_bf16 = to_bf16(&self.w_skc);
+        if let Some(plan) = self.plan.get_mut().unwrap().as_mut() {
+            plan.set_weights(&w_kcs);
+        }
         self.w_kcs = w_kcs;
     }
 
@@ -106,16 +157,38 @@ impl Conv1dLayer {
             .unwrap_or_else(|| panic!("invalid conv problem: w={w} s={} d={}", self.s, self.d))
     }
 
+    /// Effective plan precision: bf16 is only meaningful on the BRGEMM
+    /// backend (paper Sec. 4.3); everything else runs f32.
+    fn plan_precision(&self) -> Precision {
+        if self.backend == Backend::Brgemm {
+            self.precision
+        } else {
+            Precision::F32
+        }
+    }
+
+    /// Run `f` against the cached plan, rebuilding it when the shape,
+    /// backend, precision or thread count changed since the last call.
+    fn with_plan<R>(&self, p: &ConvParams, f: impl FnOnce(&mut ConvPlan) -> R) -> R {
+        let precision = self.plan_precision();
+        let mut guard = self.plan.lock().unwrap();
+        let reuse = guard
+            .as_ref()
+            .is_some_and(|plan| plan.matches(p, self.backend, precision, self.threads));
+        if !reuse {
+            let plan = ConvPlan::new(*p, self.backend, precision, self.threads, self.w_kcs.clone())
+                .unwrap_or_else(|e| panic!("{e}"));
+            *guard = Some(plan);
+        }
+        f(guard.as_mut().expect("plan just ensured"))
+    }
+
     /// Valid convolution over a **pre-padded** `(N, C, W)` input.
     /// Returns `(N, K, Q)`.
     pub fn forward(&self, x: &[f32], n: usize, w: usize) -> Vec<f32> {
         let p = self.params(n, w);
         let mut out = vec![0.0f32; n * self.k * p.q()];
-        match self.backend {
-            Backend::Brgemm => forward(&p, x, &self.w_skc, &mut out, self.threads),
-            Backend::Im2col => forward_im2col(&p, x, &self.w_kcs, &mut out, self.threads),
-            Backend::Direct => forward_direct(&p, x, &self.w_kcs, &mut out),
-        }
+        self.with_plan(&p, |plan| plan.execute_forward_into(x, &mut out));
         out
     }
 
@@ -139,10 +212,14 @@ impl Conv1dLayer {
     }
 
     /// bf16 forward over a pre-padded bf16 input (BRGEMM backend only).
+    /// Compatibility path with a bf16 tensor interface; the bf16 weight
+    /// layout is derived per call — steady-state bf16 execution belongs
+    /// to a `Precision::Bf16` plan, which stages it once.
     pub fn forward_bf16(&self, x: &[Bf16], n: usize, w: usize) -> Vec<Bf16> {
         let p = self.params(n, w);
+        let w_skc_bf16 = to_bf16(&kcs_to_skc(&self.w_kcs, self.k, self.c, self.s));
         let mut out = vec![Bf16::ZERO; n * self.k * p.q()];
-        forward_bf16(&p, x, &self.w_skc_bf16, &mut out, self.threads);
+        forward_bf16(&p, x, &w_skc_bf16, &mut out, self.threads);
         out
     }
 
@@ -150,19 +227,16 @@ impl Conv1dLayer {
     pub fn backward_data(&self, gout: &[f32], n: usize, w: usize) -> Vec<f32> {
         let p = self.params(n, w);
         let mut gin = vec![0.0f32; n * self.c * w];
-        match self.backend {
-            Backend::Brgemm | Backend::Im2col => {
-                backward_data(&p, gout, &self.w_sck_flip, &mut gin, self.threads)
-            }
-            Backend::Direct => backward_data_direct(&p, gout, &self.w_kcs, &mut gin),
-        }
+        self.with_plan(&p, |plan| plan.execute_backward_data_into(gout, &mut gin));
         gin
     }
 
     /// Weight gradient in `(K, C, S)` layout (Algorithm 4).
     pub fn backward_weight(&self, gout: &[f32], x: &[f32], n: usize, w: usize) -> Vec<f32> {
         let p = self.params(n, w);
-        backward_weight(&p, gout, x, self.threads)
+        let mut gw = vec![0.0f32; self.k * self.c * self.s];
+        self.with_plan(&p, |plan| plan.execute_backward_weight_into(gout, x, &mut gw));
+        gw
     }
 
     /// Bias gradient: `Σ_{n,q} gout[n,k,q]` per filter.
@@ -219,6 +293,20 @@ mod tests {
     }
 
     #[test]
+    fn backend_switch_on_one_layer_rebuilds_plan() {
+        // Mutating the pub field must be observed by the cached plan.
+        let (n, w) = (1, 200);
+        let mut l = layer(3, 4, 5, 2);
+        let x = rnd(n * 3 * w, 21);
+        let a = l.forward(&x, n, w);
+        l.backend = Backend::Direct;
+        let b = l.forward(&x, n, w);
+        for (x1, x2) in a.iter().zip(&b) {
+            assert!((x1 - x2).abs() < 1e-4 * (1.0 + x2.abs()));
+        }
+    }
+
+    #[test]
     fn same_padding_preserves_width_and_adds_bias() {
         let (n, w) = (1, 97);
         let mut l = layer(3, 4, 5, 2);
@@ -268,5 +356,37 @@ mod tests {
         assert_eq!("onednn".parse::<Backend>().unwrap(), Backend::Im2col);
         assert_eq!("BRGEMM".parse::<Backend>().unwrap(), Backend::Brgemm);
         assert!("cuda".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn bf16_precision_selects_the_bf16_kernel() {
+        let (n, w) = (1, 200);
+        let mut l = layer(4, 4, 5, 2);
+        let x = rnd(n * 4 * w, 31);
+        let f32_out = l.forward(&x, n, w);
+        l.precision = Precision::Bf16;
+        let bf_out = l.forward(&x, n, w);
+        assert_ne!(f32_out, bf_out, "bf16 path must actually quantise");
+        for (a, b) in bf_out.iter().zip(&f32_out) {
+            assert!((a - b).abs() < 5e-2 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // Non-BRGEMM backends gracefully fall back to f32.
+        l.backend = Backend::Direct;
+        let direct_out = l.forward(&x, n, w);
+        for (a, b) in direct_out.iter().zip(&f32_out) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn backend_display_round_trips() {
+        for b in Backend::ALL {
+            assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
+            // The registry resolves the same canonical name.
+            let k = crate::conv1d::plan::lookup_kernel(b.as_str()).expect("registered");
+            assert_eq!(k.name(), b.as_str());
+        }
+        assert_eq!(Backend::Brgemm.to_string(), "brgemm");
+        assert_eq!(Backend::ALL.len(), 3);
     }
 }

@@ -7,10 +7,11 @@
 //! `B_ptrs[s] = &Grad_out[0, pos − (S−1−s)·d]` as a plain forward-style
 //! BRGEMM over a zero-padded gradient.
 
-/// `(K, C, S) → (S, K, C)`. Forward-pass layout (paper Sec. 3.1).
-pub fn kcs_to_skc(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
+/// `(K, C, S) → (S, K, C)` into a caller-owned buffer (plan steady state:
+/// `set_weights` re-derives layouts with zero allocations).
+pub fn kcs_to_skc_into(w: &[f32], k: usize, c: usize, s: usize, out: &mut [f32]) {
     assert_eq!(w.len(), k * c * s, "weight length mismatch");
-    let mut out = vec![0.0; k * c * s];
+    assert_eq!(out.len(), k * c * s, "layout buffer length mismatch");
     for ik in 0..k {
         for ic in 0..c {
             for is in 0..s {
@@ -18,14 +19,20 @@ pub fn kcs_to_skc(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// `(K, C, S) → (S, K, C)`. Forward-pass layout (paper Sec. 3.1).
+pub fn kcs_to_skc(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
+    let mut out = vec![0.0; k * c * s];
+    kcs_to_skc_into(w, k, c, s, &mut out);
     out
 }
 
-/// `(K, C, S) → (S, C, K)` with the tap axis reversed.
-/// Backward-data layout (paper Sec. 3.2); the flip encodes `s → S−1−s`.
-pub fn kcs_to_sck_flipped(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
+/// `(K, C, S) → (S, C, K)` with the tap axis reversed, into a caller-owned
+/// buffer.
+pub fn kcs_to_sck_flipped_into(w: &[f32], k: usize, c: usize, s: usize, out: &mut [f32]) {
     assert_eq!(w.len(), k * c * s, "weight length mismatch");
-    let mut out = vec![0.0; k * c * s];
+    assert_eq!(out.len(), k * c * s, "layout buffer length mismatch");
     for ik in 0..k {
         for ic in 0..c {
             for is in 0..s {
@@ -33,15 +40,21 @@ pub fn kcs_to_sck_flipped(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// `(K, C, S) → (S, C, K)` with the tap axis reversed.
+/// Backward-data layout (paper Sec. 3.2); the flip encodes `s → S−1−s`.
+pub fn kcs_to_sck_flipped(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
+    let mut out = vec![0.0; k * c * s];
+    kcs_to_sck_flipped_into(w, k, c, s, &mut out);
     out
 }
 
-/// `(S, C, K) → (K, C, S)`. Inverse of the backward-weight accumulator
-/// layout: Algorithm 4 accumulates `Grad_w` in `(S, C, K)` panels and the
-/// framework stores gradients in `(K, C, S)`.
-pub fn sck_to_kcs(w: &[f32], s: usize, c: usize, k: usize) -> Vec<f32> {
+/// `(S, C, K) → (K, C, S)` into a caller-owned buffer (the zero-allocation
+/// tail of the backward-weight pass).
+pub fn sck_to_kcs_into(w: &[f32], s: usize, c: usize, k: usize, out: &mut [f32]) {
     assert_eq!(w.len(), k * c * s, "weight length mismatch");
-    let mut out = vec![0.0; k * c * s];
+    assert_eq!(out.len(), k * c * s, "layout buffer length mismatch");
     for is in 0..s {
         for ic in 0..c {
             for ik in 0..k {
@@ -49,6 +62,14 @@ pub fn sck_to_kcs(w: &[f32], s: usize, c: usize, k: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// `(S, C, K) → (K, C, S)`. Inverse of the backward-weight accumulator
+/// layout: Algorithm 4 accumulates `Grad_w` in `(S, C, K)` panels and the
+/// framework stores gradients in `(K, C, S)`.
+pub fn sck_to_kcs(w: &[f32], s: usize, c: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0; k * c * s];
+    sck_to_kcs_into(w, s, c, k, &mut out);
     out
 }
 
@@ -67,32 +88,59 @@ pub fn skc_to_kcs(w: &[f32], s: usize, k: usize, c: usize) -> Vec<f32> {
     out
 }
 
-/// Zero-pad a `(N, C, W)` tensor along the width axis.
-pub fn pad_width(x: &[f32], n: usize, c: usize, w: usize, left: usize, right: usize) -> Vec<f32> {
+/// Zero-pad a `(N, C, W)` tensor along the width axis into a caller-owned
+/// buffer (pad regions are rewritten, so the buffer may hold stale data).
+pub fn pad_width_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    w: usize,
+    left: usize,
+    right: usize,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), n * c * w, "input length mismatch");
     let wp = w + left + right;
-    let mut out = vec![0.0; n * c * wp];
-    for i in 0..n {
-        for j in 0..c {
-            let src = &x[(i * c + j) * w..(i * c + j) * w + w];
-            let dst = &mut out[(i * c + j) * wp + left..(i * c + j) * wp + left + w];
-            dst.copy_from_slice(src);
-        }
+    assert_eq!(out.len(), n * c * wp, "padded buffer length mismatch");
+    for row in 0..n * c {
+        let base = row * wp;
+        out[base..base + left].fill(0.0);
+        out[base + left..base + left + w].copy_from_slice(&x[row * w..(row + 1) * w]);
+        out[base + left + w..base + wp].fill(0.0);
     }
+}
+
+/// Zero-pad a `(N, C, W)` tensor along the width axis.
+pub fn pad_width(x: &[f32], n: usize, c: usize, w: usize, left: usize, right: usize) -> Vec<f32> {
+    let mut out = vec![0.0; n * c * (w + left + right)];
+    pad_width_into(x, n, c, w, left, right, &mut out);
     out
+}
+
+/// Remove `left`/`right` columns from a `(N, C, W)` tensor into a
+/// caller-owned buffer.
+pub fn unpad_width_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    w: usize,
+    left: usize,
+    right: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), n * c * w, "input length mismatch");
+    let wu = w - left - right;
+    assert_eq!(out.len(), n * c * wu, "unpadded buffer length mismatch");
+    for row in 0..n * c {
+        let src = &x[row * w + left..row * w + left + wu];
+        out[row * wu..(row + 1) * wu].copy_from_slice(src);
+    }
 }
 
 /// Remove `left`/`right` columns from a `(N, C, W)` tensor.
 pub fn unpad_width(x: &[f32], n: usize, c: usize, w: usize, left: usize, right: usize) -> Vec<f32> {
-    assert_eq!(x.len(), n * c * w, "input length mismatch");
-    let wu = w - left - right;
-    let mut out = vec![0.0; n * c * wu];
-    for i in 0..n {
-        for j in 0..c {
-            let src = &x[(i * c + j) * w + left..(i * c + j) * w + left + wu];
-            out[(i * c + j) * wu..(i * c + j) * wu + wu].copy_from_slice(src);
-        }
-    }
+    let mut out = vec![0.0; n * c * (w - left - right)];
+    unpad_width_into(x, n, c, w, left, right, &mut out);
     out
 }
 

@@ -2,7 +2,7 @@
 //! layer built on small-GEMM / batch-reduce-GEMM kernels with width
 //! blocking (Chaudhary et al., 2021, Sec. 3).
 //!
-//! Module map (see DESIGN.md §5):
+//! Module map (see rust/DESIGN.md §5):
 //! * [`params`]  — problem descriptors, shape math, FLOP counts
 //! * [`layout`]  — weight relayouts `(K,C,S) ↔ (S,K,C) ↔ (S,C,K)`
 //! * [`gemm`]    — small-GEMM micro-kernels (the LIBXSMM analog)
@@ -11,7 +11,10 @@
 //! * [`bf16`]    — BFloat16 storage + `VDPBF16PS`-semantics kernels
 //! * [`im2col`]  — the library baseline (oneDNN-analog)
 //! * [`direct`]  — naive oracle / unoptimised floor
-//! * [`layer`]   — the framework-facing `Conv1dLayer` object
+//! * [`plan`]    — `ConvPlan`/`ConvKernel`: the setup-once, run-many
+//!   plan/executor API and the string-named backend registry (DESIGN.md §5a)
+//! * [`layer`]   — the framework-facing `Conv1dLayer` object (a thin
+//!   compatibility wrapper over a cached plan)
 //! * [`threading`] — batch-dimension parallelism
 
 pub mod backward_data;
@@ -25,10 +28,12 @@ pub mod im2col;
 pub mod layer;
 pub mod layout;
 pub mod params;
+pub mod plan;
 pub mod threading;
 
 pub use layer::{Backend, Conv1dLayer};
 pub use params::{ConvParams, WIDTH_BLOCK};
+pub use plan::{kernels, lookup_kernel, ConvKernel, ConvPlan, PlanError, Workspace};
 
 /// Deterministic pseudo-random test vectors (splitmix64-derived), shared by
 /// unit tests, integration tests and benches.

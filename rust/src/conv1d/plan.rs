@@ -1,0 +1,1031 @@
+//! Plan/executor API — the cuDNN/oneDNN-style *setup-once, run-many*
+//! surface of the conv1d layer (DESIGN.md §5a).
+//!
+//! The paper's LIBXSMM layer JITs its BRGEMM kernels and relays the
+//! weight tensor out **once at construction**, then reuses scratch every
+//! step. This module reproduces that shape natively:
+//!
+//! * [`ConvKernel`] — the backend contract (forward / backward-data /
+//!   backward-weight + capability and workspace queries), implemented by
+//!   the BRGEMM, im2col, direct and bf16 kernels;
+//! * the **registry** ([`kernels`], [`lookup_kernel`]) — string-named
+//!   kernel lookup, so configs, benches and CLIs select backends without
+//!   touching an enum;
+//! * [`ConvPlan`] — built once from `ConvParams` + backend + precision;
+//!   owns the derived weight layouts, the precomputed tap-offset tables,
+//!   the padding geometry and a [`Workspace`], so the steady-state
+//!   `execute_*_into` calls perform **zero** heap allocations
+//!   (single-worker plans; multi-worker plans allocate only the scoped
+//!   thread spawns — asserted by `tests/plan_alloc.rs`).
+
+use super::backward_data::{backward_data_a_offs, backward_data_with_scratch};
+use super::backward_weight::backward_weight_with_scratch;
+use super::bf16::{to_bf16, to_bf16_into, Bf16};
+use super::direct::{backward_data_direct, backward_weight_direct_into, forward_direct};
+use super::forward::{forward_a_offs, forward_bf16_f32out_with_scratch, forward_with_scratch};
+use super::im2col::forward_im2col_with_scratch;
+use super::layer::Backend;
+use super::layout::{
+    kcs_to_sck_flipped_into, kcs_to_skc_into, pad_width_into, unpad_width_into,
+};
+use super::params::ConvParams;
+use crate::machine::Precision;
+
+/// Plan construction failure (invalid shape, unknown backend, or a
+/// backend/precision combination the registry cannot serve).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanError(pub String);
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "conv plan error: {}", self.0)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// All derived weight layouts a plan owns (relayouts happen once at
+/// construction / `set_weights`, never per step — paper Sec. 3.1/3.2).
+pub struct PlanWeights {
+    /// Framework layout `(K, C, S)` — im2col/direct operand.
+    pub kcs: Vec<f32>,
+    /// Forward layout `(S, K, C)` — BRGEMM operand.
+    pub skc: Vec<f32>,
+    /// Backward-data layout `(S, C, K)`, taps reversed.
+    pub sck_flip: Vec<f32>,
+    /// bf16 copy of the forward layout (bf16 plans only, else empty).
+    pub skc_bf16: Vec<Bf16>,
+}
+
+/// Element counts of every workspace buffer a kernel needs for a problem;
+/// the single source of truth for both allocation and the
+/// `workspace_bytes` query.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceSpec {
+    /// Per-worker tap-offset windows (`workers·S`).
+    pub b_offs: usize,
+    /// Per-worker im2col patch matrices (`workers·C·S·Q`).
+    pub col: usize,
+    /// Padded output gradient for backward-data (`N·K·(Q + 2·(S−1)·d)`).
+    pub gout_padded: usize,
+    /// Per-worker backward-weight accumulators (`workers·S·C·K`).
+    pub gw_partials: usize,
+    /// bf16 staging copy of the input (`N·C·W`, bf16 kernel only).
+    pub xb: usize,
+    /// Padded-input scratch for same-padding execution (`N·C·W`). Zero in
+    /// kernel specs — grown lazily on first `execute_forward_same_into`.
+    pub padded_in: usize,
+    /// Padded data-gradient scratch for same-padding backward (`N·C·W`).
+    /// Zero in kernel specs — grown lazily on first use.
+    pub gx_padded: usize,
+    /// Owned output buffer (`N·K·Q`, the non-`_into` convenience API).
+    /// Zero in kernel specs — grown lazily on first `execute_forward`.
+    pub out: usize,
+}
+
+impl WorkspaceSpec {
+    /// Total bytes the buffers occupy.
+    pub fn bytes(&self) -> usize {
+        (self.b_offs) * std::mem::size_of::<usize>()
+            + (self.col
+                + self.gout_padded
+                + self.gw_partials
+                + self.padded_in
+                + self.gx_padded
+                + self.out)
+                * 4
+            + self.xb * 2
+    }
+}
+
+/// Caller-visible scratch of one plan: every buffer any executor touches,
+/// sized once at plan construction.
+pub struct Workspace {
+    /// Forward tap offsets into the `(S, K, C)` weight (`S` entries).
+    a_offs_fwd: Vec<usize>,
+    /// Backward-data tap offsets into the `(S, C, K)` weight.
+    a_offs_bwd: Vec<usize>,
+    b_offs: Vec<usize>,
+    col: Vec<f32>,
+    gout_padded: Vec<f32>,
+    gw_partials: Vec<f32>,
+    xb: Vec<Bf16>,
+    padded_in: Vec<f32>,
+    gx_padded: Vec<f32>,
+    out: Vec<f32>,
+}
+
+impl Workspace {
+    fn from_spec(p: &ConvParams, spec: &WorkspaceSpec) -> Workspace {
+        Workspace {
+            a_offs_fwd: forward_a_offs(p),
+            a_offs_bwd: backward_data_a_offs(p),
+            b_offs: vec![0; spec.b_offs],
+            col: vec![0.0; spec.col],
+            gout_padded: vec![0.0; spec.gout_padded],
+            gw_partials: vec![0.0; spec.gw_partials],
+            xb: vec![Bf16::ZERO; spec.xb],
+            padded_in: vec![0.0; spec.padded_in],
+            gx_padded: vec![0.0; spec.gx_padded],
+            out: vec![0.0; spec.out],
+        }
+    }
+
+    /// Total bytes held by this workspace's scratch buffers.
+    pub fn bytes(&self) -> usize {
+        (self.a_offs_fwd.len() + self.a_offs_bwd.len() + self.b_offs.len())
+            * std::mem::size_of::<usize>()
+            + (self.col.len()
+                + self.gout_padded.len()
+                + self.gw_partials.len()
+                + self.padded_in.len()
+                + self.gx_padded.len()
+                + self.out.len())
+                * 4
+            + self.xb.len() * 2
+    }
+}
+
+/// Effective worker count of a plan: one scratch window per worker.
+fn workers(p: &ConvParams, threads: usize) -> usize {
+    threads.max(1).min(p.n.max(1))
+}
+
+/// Grow a lazily-sized workspace buffer to its target length. A no-op in
+/// steady state (the one-time growth happens on the first use of the
+/// owning API).
+fn ensure_len(v: &mut Vec<f32>, len: usize) {
+    if v.len() != len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Element count of the padded backward-data gradient.
+fn gout_padded_len(p: &ConvParams) -> usize {
+    p.n * p.k * (p.q() + 2 * (p.s - 1) * p.d)
+}
+
+/// A conv1d compute backend: the kernel contract behind a [`ConvPlan`].
+///
+/// Implementations are stateless unit structs registered in [`kernels`];
+/// all mutable state lives in the plan's [`Workspace`], so one kernel
+/// instance serves any number of concurrent plans.
+pub trait ConvKernel: Send + Sync {
+    /// Canonical registry name (round-trips through [`lookup_kernel`]).
+    fn name(&self) -> &'static str;
+
+    /// Whether this kernel can run the given problem. All in-tree kernels
+    /// are fully generic today; the hook exists so specialised kernels
+    /// (ISA-gated, shape-restricted) can join the registry and the plan
+    /// builder can reject or fall back cleanly.
+    fn supports(&self, p: &ConvParams) -> bool {
+        let _ = p;
+        true
+    }
+
+    /// Workspace layout this kernel needs for `p` at the given worker
+    /// count (excludes the plan-level `padded_in`/`gx_padded`/`out`
+    /// buffers, which the plan grows lazily when their APIs are used).
+    fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec;
+
+    /// Scratch bytes this kernel needs for `p` — the cuDNN-style
+    /// workspace-size query.
+    fn workspace_bytes(&self, p: &ConvParams, threads: usize) -> usize {
+        self.workspace_spec(p, threads).bytes()
+    }
+
+    /// Forward pass `(N, C, W) → (N, K, Q)`, overwriting `out`.
+    fn forward(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        out: &mut [f32],
+        threads: usize,
+    );
+
+    /// Data gradient `(N, K, Q) → (N, C, W)`, overwriting `gin`.
+    fn backward_data(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        gin: &mut [f32],
+        threads: usize,
+    );
+
+    /// Weight gradient in `(K, C, S)` layout, overwriting `gw`.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_weight(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        x: &[f32],
+        gw: &mut [f32],
+        threads: usize,
+    );
+}
+
+/// The paper's width-blocked BRGEMM kernels (Algorithms 2–4).
+pub struct BrgemmKernel;
+
+impl ConvKernel for BrgemmKernel {
+    fn name(&self) -> &'static str {
+        "brgemm"
+    }
+
+    fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
+        let t = workers(p, threads);
+        WorkspaceSpec {
+            b_offs: t * p.s,
+            gout_padded: gout_padded_len(p),
+            gw_partials: t * p.s * p.c * p.k,
+            ..WorkspaceSpec::default()
+        }
+    }
+
+    fn forward(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        forward_with_scratch(p, x, &w.skc, out, threads, &ws.a_offs_fwd, &mut ws.b_offs);
+    }
+
+    fn backward_data(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        gin: &mut [f32],
+        threads: usize,
+    ) {
+        backward_data_with_scratch(
+            p,
+            gout,
+            &w.sck_flip,
+            gin,
+            threads,
+            &ws.a_offs_bwd,
+            &mut ws.b_offs,
+            &mut ws.gout_padded,
+        );
+    }
+
+    fn backward_weight(
+        &self,
+        p: &ConvParams,
+        _w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        x: &[f32],
+        gw: &mut [f32],
+        threads: usize,
+    ) {
+        backward_weight_with_scratch(p, gout, x, gw, threads, &mut ws.gw_partials);
+    }
+}
+
+/// The im2col + GEMM library baseline (oneDNN-analog). Backward passes
+/// share the BRGEMM machinery, exactly as the enum backend always did.
+pub struct Im2colKernel;
+
+impl ConvKernel for Im2colKernel {
+    fn name(&self) -> &'static str {
+        "im2col"
+    }
+
+    fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
+        let t = workers(p, threads);
+        WorkspaceSpec {
+            b_offs: t * p.s,
+            col: t * p.c * p.s * p.q(),
+            gout_padded: gout_padded_len(p),
+            gw_partials: t * p.s * p.c * p.k,
+            ..WorkspaceSpec::default()
+        }
+    }
+
+    fn forward(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        forward_im2col_with_scratch(p, x, &w.kcs, out, threads, &mut ws.col);
+    }
+
+    fn backward_data(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        gin: &mut [f32],
+        threads: usize,
+    ) {
+        BrgemmKernel.backward_data(p, w, ws, gout, gin, threads);
+    }
+
+    fn backward_weight(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        x: &[f32],
+        gw: &mut [f32],
+        threads: usize,
+    ) {
+        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, threads);
+    }
+}
+
+/// Naive direct loops — correctness oracle / unoptimised floor. Needs no
+/// scratch at all; ignores `threads`.
+pub struct DirectKernel;
+
+impl ConvKernel for DirectKernel {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn workspace_spec(&self, _p: &ConvParams, _threads: usize) -> WorkspaceSpec {
+        WorkspaceSpec::default()
+    }
+
+    fn forward(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        _ws: &mut Workspace,
+        x: &[f32],
+        out: &mut [f32],
+        _threads: usize,
+    ) {
+        forward_direct(p, x, &w.kcs, out);
+    }
+
+    fn backward_data(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        _ws: &mut Workspace,
+        gout: &[f32],
+        gin: &mut [f32],
+        _threads: usize,
+    ) {
+        backward_data_direct(p, gout, &w.kcs, gin);
+    }
+
+    fn backward_weight(
+        &self,
+        p: &ConvParams,
+        _w: &PlanWeights,
+        _ws: &mut Workspace,
+        gout: &[f32],
+        x: &[f32],
+        gw: &mut [f32],
+        _threads: usize,
+    ) {
+        backward_weight_direct_into(p, gout, x, gw);
+    }
+}
+
+/// BRGEMM with bf16 storage (`VDPBF16PS` semantics): the input is staged
+/// to bf16 in the workspace, products accumulate in f32 and the f32
+/// accumulator is stored, so the plan keeps a uniform f32 tensor
+/// interface. Backward passes run the f32 BRGEMM kernels — gradients stay
+/// full precision, which is what the paper's mixed-precision training
+/// path needs (Sec. 4.3).
+pub struct Bf16Kernel;
+
+impl ConvKernel for Bf16Kernel {
+    fn name(&self) -> &'static str {
+        "bf16"
+    }
+
+    fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
+        let t = workers(p, threads);
+        WorkspaceSpec {
+            b_offs: t * p.s,
+            gout_padded: gout_padded_len(p),
+            gw_partials: t * p.s * p.c * p.k,
+            xb: p.n * p.c * p.w,
+            ..WorkspaceSpec::default()
+        }
+    }
+
+    fn forward(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        to_bf16_into(x, &mut ws.xb);
+        forward_bf16_f32out_with_scratch(
+            p,
+            &ws.xb,
+            &w.skc_bf16,
+            out,
+            threads,
+            &ws.a_offs_fwd,
+            &mut ws.b_offs,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        gin: &mut [f32],
+        threads: usize,
+    ) {
+        BrgemmKernel.backward_data(p, w, ws, gout, gin, threads);
+    }
+
+    fn backward_weight(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        x: &[f32],
+        gw: &mut [f32],
+        threads: usize,
+    ) {
+        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, threads);
+    }
+}
+
+/// The backend registry: every kernel the plan builder can select.
+static KERNELS: [&(dyn ConvKernel); 4] = [&BrgemmKernel, &Im2colKernel, &DirectKernel, &Bf16Kernel];
+
+/// All registered kernels, in preference order.
+pub fn kernels() -> &'static [&'static dyn ConvKernel] {
+    &KERNELS
+}
+
+/// Look a kernel up by name. Accepts the same aliases as
+/// `Backend::from_str` plus `"bf16"`/`"bfloat16"` — configs and benches
+/// select backends by string without touching the enum.
+pub fn lookup_kernel(name: &str) -> Option<&'static dyn ConvKernel> {
+    let canonical = match name.to_ascii_lowercase().as_str() {
+        "brgemm" | "libxsmm" | "ours" => "brgemm",
+        "im2col" | "onednn" | "baseline" => "im2col",
+        "direct" | "naive" => "direct",
+        "bf16" | "bfloat16" => "bf16",
+        _ => return None,
+    };
+    kernels().iter().copied().find(|k| k.name() == canonical)
+}
+
+/// A fully-prepared convolution: kernel choice, derived weight layouts,
+/// padding geometry and workspace, built once and executed many times.
+pub struct ConvPlan {
+    p: ConvParams,
+    kernel: &'static dyn ConvKernel,
+    precision: Precision,
+    threads: usize,
+    /// `(left, right)` same-padding for this `(S, d)`.
+    pad: (usize, usize),
+    weights: PlanWeights,
+    bias: Vec<f32>,
+    /// Whether `ws.padded_in` holds a valid input from
+    /// `execute_forward_same_into` (guards the cached backward-weight).
+    same_cached: bool,
+    ws: Workspace,
+}
+
+impl std::fmt::Debug for ConvPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConvPlan")
+            .field("params", &self.p)
+            .field("kernel", &self.kernel.name())
+            .field("precision", &self.precision)
+            .field("threads", &self.threads)
+            .field("workspace_bytes", &self.ws.bytes())
+            .finish()
+    }
+}
+
+impl ConvPlan {
+    /// Build a plan from a problem descriptor, an enum backend and a
+    /// precision. `Precision::Bf16` is served by the bf16 kernel and is
+    /// only available on the BRGEMM backend (as in the paper).
+    pub fn new(
+        p: ConvParams,
+        backend: Backend,
+        precision: Precision,
+        threads: usize,
+        w_kcs: Vec<f32>,
+    ) -> Result<ConvPlan, PlanError> {
+        let name = match (backend, precision) {
+            (Backend::Brgemm, Precision::Bf16) => "bf16",
+            (_, Precision::Bf16) => {
+                return Err(PlanError(format!(
+                    "precision bf16 requires the brgemm backend, got {backend}"
+                )))
+            }
+            (b, Precision::F32) => b.as_str(),
+        };
+        Self::by_name(p, name, threads, w_kcs)
+    }
+
+    /// Build a plan from a registry kernel name (`"brgemm"`, `"im2col"`,
+    /// `"direct"`, `"bf16"` or any `Backend::from_str` alias).
+    pub fn by_name(
+        p: ConvParams,
+        kernel: &str,
+        threads: usize,
+        w_kcs: Vec<f32>,
+    ) -> Result<ConvPlan, PlanError> {
+        let k = lookup_kernel(kernel)
+            .ok_or_else(|| PlanError(format!("unknown kernel '{kernel}'")))?;
+        Self::with_kernel(p, k, threads, w_kcs)
+    }
+
+    /// Build a plan for an explicit kernel (registry or caller-owned).
+    pub fn with_kernel(
+        p: ConvParams,
+        kernel: &'static dyn ConvKernel,
+        threads: usize,
+        w_kcs: Vec<f32>,
+    ) -> Result<ConvPlan, PlanError> {
+        if w_kcs.len() != p.k * p.c * p.s {
+            return Err(PlanError(format!(
+                "weight length {} does not match (K,C,S)=({},{},{})",
+                w_kcs.len(),
+                p.k,
+                p.c,
+                p.s
+            )));
+        }
+        if !kernel.supports(&p) {
+            return Err(PlanError(format!(
+                "kernel '{}' does not support {p}",
+                kernel.name()
+            )));
+        }
+        let threads = threads.max(1);
+        let precision = if kernel.name() == "bf16" {
+            Precision::Bf16
+        } else {
+            Precision::F32
+        };
+        // The plan-level padded_in / gx_padded / out buffers are grown
+        // lazily by the same-padding and owned-output APIs — `_into`-only
+        // callers (benches, sweeps) never pay for them.
+        let spec = kernel.workspace_spec(&p, threads);
+        let ws = Workspace::from_spec(&p, &spec);
+        let mut weights = PlanWeights {
+            skc: vec![0.0; w_kcs.len()],
+            sck_flip: vec![0.0; w_kcs.len()],
+            skc_bf16: Vec::new(),
+            kcs: w_kcs,
+        };
+        derive_layouts(&p, &mut weights, precision);
+        Ok(ConvPlan {
+            pad: ConvParams::same_pad(p.s, p.d),
+            p,
+            kernel,
+            precision,
+            threads,
+            weights,
+            bias: Vec::new(),
+            same_cached: false,
+            ws,
+        })
+    }
+
+    /// The problem this plan was built for.
+    pub fn params(&self) -> &ConvParams {
+        &self.p
+    }
+
+    /// Canonical name of the kernel behind this plan.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// Precision of the forward pass.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Worker count the workspace was sized for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Bytes of workspace this plan holds — the cuDNN-style query, now
+    /// answering for the concrete allocation.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.bytes()
+    }
+
+    /// `(left, right)` same-padding geometry for this plan's `(S, d)`.
+    pub fn same_pad(&self) -> (usize, usize) {
+        self.pad
+    }
+
+    /// Input width *before* same-padding (`W − left − right`).
+    pub fn unpadded_width(&self) -> usize {
+        self.p.w - self.pad.0 - self.pad.1
+    }
+
+    /// True when this plan can serve a `(n, w)` problem under the given
+    /// backend/precision/threads without rebuilding.
+    pub fn matches(
+        &self,
+        p: &ConvParams,
+        backend: Backend,
+        precision: Precision,
+        threads: usize,
+    ) -> bool {
+        let name = match (backend, precision) {
+            (Backend::Brgemm, Precision::Bf16) => "bf16",
+            (_, Precision::Bf16) => return false,
+            (b, Precision::F32) => b.as_str(),
+        };
+        self.p == *p && self.kernel.name() == name && self.threads == threads.max(1)
+    }
+
+    /// Replace the weights (same shape) and refresh every derived layout
+    /// in place — zero allocations.
+    pub fn set_weights(&mut self, w_kcs: &[f32]) {
+        assert_eq!(
+            w_kcs.len(),
+            self.p.k * self.p.c * self.p.s,
+            "weight shape mismatch for {}",
+            self.p
+        );
+        self.weights.kcs.copy_from_slice(w_kcs);
+        derive_layouts(&self.p, &mut self.weights, self.precision);
+    }
+
+    /// Framework-layout weights `(K, C, S)`.
+    pub fn weights(&self) -> &[f32] {
+        &self.weights.kcs
+    }
+
+    /// Set the per-filter bias added by the same-padding forward.
+    pub fn set_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.p.k, "bias length mismatch");
+        if self.bias.len() != self.p.k {
+            self.bias = bias.to_vec();
+        } else {
+            self.bias.copy_from_slice(bias);
+        }
+    }
+
+    /// Forward over a pre-padded `(N, C, W)` input into a caller-owned
+    /// `(N, K, Q)` buffer. Zero heap allocations in steady state.
+    pub fn execute_forward_into(&mut self, x: &[f32], out: &mut [f32]) {
+        let (n, c, k, w, q) = (self.p.n, self.p.c, self.p.k, self.p.w, self.p.q());
+        assert_eq!(x.len(), n * c * w, "input shape mismatch for {}", self.p);
+        assert_eq!(out.len(), n * k * q, "output shape mismatch for {}", self.p);
+        self.kernel
+            .forward(&self.p, &self.weights, &mut self.ws, x, out, self.threads);
+    }
+
+    /// Forward into the plan's owned output buffer; returns it as a
+    /// slice. Zero heap allocations in steady state (the buffer is grown
+    /// once on first use).
+    pub fn execute_forward(&mut self, x: &[f32]) -> &[f32] {
+        let mut out = std::mem::take(&mut self.ws.out);
+        ensure_len(&mut out, self.p.n * self.p.k * self.p.q());
+        self.execute_forward_into(x, &mut out);
+        self.ws.out = out;
+        &self.ws.out
+    }
+
+    /// Same-padding forward: pads an unpadded `(N, C, W−pad)` input into
+    /// the workspace, runs the kernel and adds the per-filter bias.
+    /// `out` is `(N, K, W−pad)`. The padded input stays cached in the
+    /// workspace for [`Self::execute_backward_weight_cached_into`].
+    pub fn execute_forward_same_into(&mut self, x: &[f32], out: &mut [f32]) {
+        let (n, c, k) = (self.p.n, self.p.c, self.p.k);
+        let wu = self.unpadded_width();
+        assert_eq!(
+            self.p.q(),
+            wu,
+            "plan was not built with same-padding geometry ({})",
+            self.p
+        );
+        assert_eq!(x.len(), n * c * wu, "input shape mismatch for {}", self.p);
+        assert_eq!(out.len(), n * k * wu, "output shape mismatch for {}", self.p);
+        ensure_len(&mut self.ws.padded_in, n * c * self.p.w);
+        pad_width_into(x, n, c, wu, self.pad.0, self.pad.1, &mut self.ws.padded_in);
+        let xp = std::mem::take(&mut self.ws.padded_in);
+        self.kernel
+            .forward(&self.p, &self.weights, &mut self.ws, &xp, out, self.threads);
+        self.ws.padded_in = xp;
+        self.same_cached = true;
+        if !self.bias.is_empty() {
+            for ib in 0..n {
+                for ik in 0..k {
+                    let b = self.bias[ik];
+                    if b != 0.0 {
+                        let row = (ib * k + ik) * wu;
+                        for v in &mut out[row..row + wu] {
+                            *v += b;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Data gradient `(N, K, Q) → (N, C, W)` into a caller-owned buffer.
+    /// Zero heap allocations in steady state.
+    pub fn execute_backward_data_into(&mut self, gout: &[f32], gin: &mut [f32]) {
+        let (n, c, k, w, q) = (self.p.n, self.p.c, self.p.k, self.p.w, self.p.q());
+        assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {}", self.p);
+        assert_eq!(gin.len(), n * c * w, "grad-in shape mismatch for {}", self.p);
+        self.kernel.backward_data(
+            &self.p,
+            &self.weights,
+            &mut self.ws,
+            gout,
+            gin,
+            self.threads,
+        );
+    }
+
+    /// Same-padding data gradient: computes the padded `(N, C, W)` data
+    /// gradient in the workspace and strips the pad columns into the
+    /// caller's `(N, C, W−pad)` buffer.
+    pub fn execute_backward_data_same_into(&mut self, gout: &[f32], gx: &mut [f32]) {
+        let (n, c, w) = (self.p.n, self.p.c, self.p.w);
+        let wu = self.unpadded_width();
+        assert_eq!(gx.len(), n * c * wu, "grad shape mismatch for {}", self.p);
+        let mut gxp = std::mem::take(&mut self.ws.gx_padded);
+        ensure_len(&mut gxp, n * c * w);
+        self.execute_backward_data_into(gout, &mut gxp);
+        unpad_width_into(&gxp, n, c, w, self.pad.0, self.pad.1, gx);
+        self.ws.gx_padded = gxp;
+    }
+
+    /// Weight gradient in `(K, C, S)` layout into a caller-owned buffer.
+    /// `x` is the (pre-padded) forward input. Zero heap allocations in
+    /// steady state.
+    pub fn execute_backward_weight_into(&mut self, gout: &[f32], x: &[f32], gw: &mut [f32]) {
+        let (n, c, k, s, w, q) = (
+            self.p.n,
+            self.p.c,
+            self.p.k,
+            self.p.s,
+            self.p.w,
+            self.p.q(),
+        );
+        assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {}", self.p);
+        assert_eq!(x.len(), n * c * w, "input shape mismatch for {}", self.p);
+        assert_eq!(gw.len(), k * c * s, "grad-weight shape mismatch for {}", self.p);
+        self.kernel.backward_weight(
+            &self.p,
+            &self.weights,
+            &mut self.ws,
+            gout,
+            x,
+            gw,
+            self.threads,
+        );
+    }
+
+    /// Weight gradient against the padded input cached by the last
+    /// [`Self::execute_forward_same_into`] call. Panics if no
+    /// same-padding forward has populated the cache — a silently-zero
+    /// gradient would stall training undetected.
+    pub fn execute_backward_weight_cached_into(&mut self, gout: &[f32], gw: &mut [f32]) {
+        assert!(
+            self.same_cached,
+            "execute_backward_weight_cached_into without a prior execute_forward_same_into"
+        );
+        let xp = std::mem::take(&mut self.ws.padded_in);
+        self.execute_backward_weight_into(gout, &xp, gw);
+        self.ws.padded_in = xp;
+    }
+}
+
+/// Refresh every derived layout from `weights.kcs` (in place where the
+/// buffers already exist).
+fn derive_layouts(p: &ConvParams, weights: &mut PlanWeights, precision: Precision) {
+    kcs_to_skc_into(&weights.kcs, p.k, p.c, p.s, &mut weights.skc);
+    kcs_to_sck_flipped_into(&weights.kcs, p.k, p.c, p.s, &mut weights.sck_flip);
+    if precision == Precision::Bf16 {
+        if weights.skc_bf16.len() == weights.skc.len() {
+            to_bf16_into(&weights.skc, &mut weights.skc_bf16);
+        } else {
+            weights.skc_bf16 = to_bf16(&weights.skc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::test_util::rnd;
+    use crate::conv1d::Conv1dLayer;
+
+    fn problem() -> (ConvParams, Vec<f32>, Vec<f32>) {
+        let p = ConvParams::new(2, 5, 7, 300, 9, 4).unwrap();
+        let wt = rnd(p.k * p.c * p.s, 3);
+        let x = rnd(p.n * p.c * p.w, 4);
+        (p, wt, x)
+    }
+
+    #[test]
+    fn registry_has_all_kernels() {
+        let names: Vec<&str> = kernels().iter().map(|k| k.name()).collect();
+        assert_eq!(names, vec!["brgemm", "im2col", "direct", "bf16"]);
+        for alias in ["libxsmm", "onednn", "naive", "bfloat16", "OURS"] {
+            assert!(lookup_kernel(alias).is_some(), "{alias}");
+        }
+        assert!(lookup_kernel("cuda").is_none());
+    }
+
+    #[test]
+    fn kernel_names_round_trip_with_lookup() {
+        for k in kernels() {
+            let found = lookup_kernel(k.name()).expect("canonical name resolves");
+            assert_eq!(found.name(), k.name());
+        }
+    }
+
+    #[test]
+    fn plan_forward_matches_layer_bit_exact() {
+        let (p, wt, x) = problem();
+        let layer = Conv1dLayer::new(p.c, p.k, p.s, p.d, wt.clone());
+        let want = layer.forward(&x, p.n, p.w);
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt).unwrap();
+        let mut got = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut got);
+        assert_eq!(got, want);
+        // And the owned-output convenience API agrees.
+        assert_eq!(plan.execute_forward(&x), &want[..]);
+    }
+
+    #[test]
+    fn all_kernels_agree_on_forward() {
+        let (p, wt, x) = problem();
+        let mut reference = vec![0.0; p.n * p.k * p.q()];
+        ConvPlan::by_name(p, "direct", 1, wt.clone())
+            .unwrap()
+            .execute_forward_into(&x, &mut reference);
+        for name in ["brgemm", "im2col", "bf16"] {
+            let mut plan = ConvPlan::by_name(p, name, 1, wt.clone()).unwrap();
+            let mut got = vec![0.0; p.n * p.k * p.q()];
+            plan.execute_forward_into(&x, &mut got);
+            let tol = if name == "bf16" { 4e-2 } else { 1e-3 };
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert!(
+                    (g - r).abs() < tol * (1.0 + r.abs()),
+                    "{name} idx {i}: {g} vs {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_passes_match_layer() {
+        let (p, wt, x) = problem();
+        let gout = rnd(p.n * p.k * p.q(), 9);
+        let layer = Conv1dLayer::new(p.c, p.k, p.s, p.d, wt.clone());
+        let gd_want = layer.backward_data(&gout, p.n, p.w);
+        let gw_want = layer.backward_weight(&gout, &x, p.n, p.w);
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt).unwrap();
+        let mut gd = vec![0.0; p.n * p.c * p.w];
+        plan.execute_backward_data_into(&gout, &mut gd);
+        let mut gw = vec![0.0; p.k * p.c * p.s];
+        plan.execute_backward_weight_into(&gout, &x, &mut gw);
+        assert_eq!(gd, gd_want);
+        assert_eq!(gw, gw_want);
+    }
+
+    #[test]
+    fn plan_reuse_is_stateless_across_inputs() {
+        let (p, wt, x1) = problem();
+        let x2 = rnd(p.n * p.c * p.w, 77);
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt.clone()).unwrap();
+        let mut a1 = vec![0.0; p.n * p.k * p.q()];
+        let mut a2 = vec![0.0; p.n * p.k * p.q()];
+        let mut a1_again = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x1, &mut a1);
+        plan.execute_forward_into(&x2, &mut a2);
+        plan.execute_forward_into(&x1, &mut a1_again);
+        assert_eq!(a1, a1_again, "plan reuse must not leak state");
+        assert_ne!(a1, a2);
+    }
+
+    #[test]
+    fn set_weights_refreshes_all_layouts_in_place() {
+        let (p, wt, x) = problem();
+        let wt2 = rnd(p.k * p.c * p.s, 55);
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt).unwrap();
+        let bytes_before = plan.workspace_bytes();
+        let mut before = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut before);
+        plan.set_weights(&wt2);
+        let mut after = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut after);
+        assert_ne!(before, after);
+        let mut fresh = vec![0.0; p.n * p.k * p.q()];
+        ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt2)
+            .unwrap()
+            .execute_forward_into(&x, &mut fresh);
+        assert_eq!(after, fresh);
+        assert_eq!(plan.workspace_bytes(), bytes_before);
+    }
+
+    #[test]
+    fn same_padding_roundtrip_with_bias() {
+        let (n, c, k, s, d, wu) = (2, 3, 4, 5, 2, 97);
+        let p = ConvParams::with_same_padding(n, c, k, wu, s, d).unwrap();
+        let wt = rnd(k * c * s, 8);
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt.clone()).unwrap();
+        plan.set_bias(&[1.0, 2.0, 3.0, 4.0]);
+        let x = rnd(n * c * wu, 9);
+        let mut out = vec![0.0; n * k * wu];
+        plan.execute_forward_same_into(&x, &mut out);
+        // Oracle: the layer's forward_same.
+        let mut layer = Conv1dLayer::new(c, k, s, d, wt);
+        layer.bias = vec![1.0, 2.0, 3.0, 4.0];
+        let want = layer.forward_same(&x, n, wu);
+        assert_eq!(out, want);
+        // Cached-input backward-weight matches the explicit-input call.
+        let gout = rnd(n * k * wu, 10);
+        let mut gw1 = vec![0.0; k * c * s];
+        plan.execute_backward_weight_cached_into(&gout, &mut gw1);
+        let xp = crate::conv1d::layout::pad_width(&x, n, c, wu, plan.same_pad().0, plan.same_pad().1);
+        let mut gw2 = vec![0.0; k * c * s];
+        plan.execute_backward_weight_into(&gout, &xp, &mut gw2);
+        assert_eq!(gw1, gw2);
+        // Same-padded data gradient strips back to the unpadded width.
+        let mut gx = vec![0.0; n * c * wu];
+        plan.execute_backward_data_same_into(&gout, &mut gx);
+        let gd_full = {
+            let layer = Conv1dLayer::new(c, k, s, d, plan.weights().to_vec());
+            layer.backward_data(&gout, n, p.w)
+        };
+        let want_gx =
+            crate::conv1d::layout::unpad_width(&gd_full, n, c, p.w, plan.same_pad().0, plan.same_pad().1);
+        assert_eq!(gx, want_gx);
+    }
+
+    #[test]
+    fn multithreaded_plan_is_bit_exact() {
+        let (p, wt, x) = problem();
+        let mut p1 = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt.clone()).unwrap();
+        let mut p4 = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 4, wt).unwrap();
+        let mut o1 = vec![0.0; p.n * p.k * p.q()];
+        let mut o4 = vec![0.0; p.n * p.k * p.q()];
+        p1.execute_forward_into(&x, &mut o1);
+        p4.execute_forward_into(&x, &mut o4);
+        assert_eq!(o1, o4);
+    }
+
+    #[test]
+    fn workspace_bytes_reflects_kernel_needs() {
+        let (p, wt, _x) = problem();
+        let direct = ConvPlan::by_name(p, "direct", 1, wt.clone()).unwrap();
+        let im2col = ConvPlan::by_name(p, "im2col", 1, wt.clone()).unwrap();
+        let brgemm = ConvPlan::by_name(p, "brgemm", 1, wt).unwrap();
+        // im2col's patch matrix dominates everything else.
+        assert!(im2col.workspace_bytes() > brgemm.workspace_bytes());
+        assert!(brgemm.workspace_bytes() > direct.workspace_bytes());
+        // The registry's size query agrees with the plan's allocation
+        // modulo the always-present tap-offset tables (the lazy
+        // padded_in/gx_padded/out buffers are empty at build time).
+        let kernel = lookup_kernel("im2col").unwrap();
+        let fixed = (forward_a_offs(&p).len() + backward_data_a_offs(&p).len())
+            * std::mem::size_of::<usize>();
+        assert_eq!(kernel.workspace_bytes(&p, 1) + fixed, im2col.workspace_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_configurations() {
+        let p = ConvParams::new(1, 2, 3, 50, 5, 2).unwrap();
+        let wt = rnd(3 * 2 * 5, 1);
+        assert!(ConvPlan::by_name(p, "no-such-kernel", 1, wt.clone()).is_err());
+        assert!(ConvPlan::new(p, Backend::Im2col, Precision::Bf16, 1, wt.clone()).is_err());
+        assert!(ConvPlan::by_name(p, "brgemm", 1, wt[1..].to_vec()).is_err());
+    }
+}

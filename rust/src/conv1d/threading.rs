@@ -4,48 +4,37 @@
 //!
 //! The output tensor is split into disjoint per-sample rows handed to
 //! scoped OS threads — each "thread" plays the role of one CPU core of the
-//! paper's 28-core socket. Work is distributed round-robin so ragged
-//! batches stay balanced. With `threads == 1` no thread is spawned (the
-//! single-core fast path used by the benchmarks on this host).
+//! paper's 28-core socket. Rows are split into contiguous near-equal
+//! blocks (±1 row), so ragged batches stay balanced and each worker owns
+//! a private scratch window. With `threads == 1` no thread is spawned
+//! (the single-core fast path used by the benchmarks on this host) and
+//! the loop performs zero heap allocations.
 
 /// Apply `f(batch_index, chunk)` to every `chunk_len`-sized row of `out`,
-/// distributing rows across `threads` scoped threads.
+/// distributing rows across `threads` scoped threads. Thin scratch-free
+/// wrapper over [`par_batch_chunks_scratch`].
 ///
 /// `f` must be `Sync` (it is shared by reference) and is called exactly
-/// once per batch element, in-order within a thread.
+/// once per batch element, in-order within a worker.
 pub fn par_batch_chunks<F>(out: &mut [f32], chunk_len: usize, threads: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
-    assert!(chunk_len > 0, "chunk_len must be positive");
-    assert_eq!(out.len() % chunk_len, 0, "output not divisible into rows");
-    let n = out.len() / chunk_len;
-    let t = threads.max(1).min(n.max(1));
-    if t <= 1 {
-        for (i, chunk) in out.chunks_mut(chunk_len).enumerate() {
-            f(i, chunk);
-        }
-        return;
-    }
-    // Hand out rows round-robin: thread `tid` gets rows tid, tid+t, ...
-    let rows: Vec<(usize, &mut [f32])> = out.chunks_mut(chunk_len).enumerate().collect();
-    let mut buckets: Vec<Vec<(usize, &mut [f32])>> = (0..t).map(|_| Vec::new()).collect();
-    for (i, row) in rows {
-        buckets[i % t].push((i, row));
-    }
-    std::thread::scope(|scope| {
-        for bucket in buckets {
-            let f = &f;
-            scope.spawn(move || {
-                for (i, row) in bucket {
-                    f(i, row);
-                }
-            });
-        }
-    });
+    let mut s1: [usize; 0] = [];
+    let mut s2: [usize; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        chunk_len,
+        &mut s1[..],
+        0,
+        &mut s2[..],
+        0,
+        threads,
+        |i, row, _, _| f(i, row),
+    );
 }
 
-/// Generic bf16 variant of [`par_batch_chunks`].
+/// bf16 variant of [`par_batch_chunks`].
 pub fn par_batch_chunks_bf16<F>(
     out: &mut [super::bf16::Bf16],
     chunk_len: usize,
@@ -54,29 +43,86 @@ pub fn par_batch_chunks_bf16<F>(
 ) where
     F: Fn(usize, &mut [super::bf16::Bf16]) + Sync,
 {
+    let mut s1: [usize; 0] = [];
+    let mut s2: [usize; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        chunk_len,
+        &mut s1[..],
+        0,
+        &mut s2[..],
+        0,
+        threads,
+        |i, row, _, _| f(i, row),
+    );
+}
+
+/// Scratch-aware batch partitioning — the zero-allocation substrate of the
+/// plan executor ([`crate::conv1d::plan`]).
+///
+/// Splits `out` into `chunk_len`-sized rows and hands every worker a
+/// *private* scratch window carved out of the caller-owned `s1`/`s2`
+/// buffers (`s1_len`/`s2_len` elements each), so nothing is allocated per
+/// row. With `threads <= 1` no thread is spawned and the loop itself
+/// performs **zero** heap allocations; with more threads the rows are
+/// split into contiguous near-equal blocks (`f` still sees global row
+/// indices, so results are bit-identical to the serial order).
+///
+/// Requirements: `s1.len() >= t·s1_len` and `s2.len() >= t·s2_len` for the
+/// effective worker count `t = min(threads, rows)`. A scratch length of 0
+/// passes an empty slice.
+#[allow(clippy::too_many_arguments)]
+pub fn par_batch_chunks_scratch<O, T1, T2, F>(
+    out: &mut [O],
+    chunk_len: usize,
+    s1: &mut [T1],
+    s1_len: usize,
+    s2: &mut [T2],
+    s2_len: usize,
+    threads: usize,
+    f: F,
+) where
+    O: Send,
+    T1: Send,
+    T2: Send,
+    F: Fn(usize, &mut [O], &mut [T1], &mut [T2]) + Sync,
+{
     assert!(chunk_len > 0, "chunk_len must be positive");
     assert_eq!(out.len() % chunk_len, 0, "output not divisible into rows");
     let n = out.len() / chunk_len;
     let t = threads.max(1).min(n.max(1));
     if t <= 1 {
-        for (i, chunk) in out.chunks_mut(chunk_len).enumerate() {
-            f(i, chunk);
+        for (i, row) in out.chunks_mut(chunk_len).enumerate() {
+            f(i, row, &mut s1[..s1_len], &mut s2[..s2_len]);
         }
         return;
     }
-    let rows: Vec<(usize, &mut [super::bf16::Bf16])> =
-        out.chunks_mut(chunk_len).enumerate().collect();
-    let mut buckets: Vec<Vec<(usize, &mut [super::bf16::Bf16])>> =
-        (0..t).map(|_| Vec::new()).collect();
-    for (i, row) in rows {
-        buckets[i % t].push((i, row));
-    }
+    assert!(
+        s1.len() >= t * s1_len && s2.len() >= t * s2_len,
+        "scratch buffers too small for {t} workers"
+    );
+    let base = n / t;
+    let rem = n % t;
     std::thread::scope(|scope| {
-        for bucket in buckets {
+        let mut out_rest = &mut *out;
+        let mut s1_rest = &mut *s1;
+        let mut s2_rest = &mut *s2;
+        let mut row0 = 0usize;
+        for tid in 0..t {
+            let rows = base + usize::from(tid < rem);
+            let (o_chunk, o_rest) =
+                std::mem::take(&mut out_rest).split_at_mut(rows * chunk_len);
+            out_rest = o_rest;
+            let (c1, r1) = std::mem::take(&mut s1_rest).split_at_mut(s1_len);
+            s1_rest = r1;
+            let (c2, r2) = std::mem::take(&mut s2_rest).split_at_mut(s2_len);
+            s2_rest = r2;
+            let start = row0;
+            row0 += rows;
             let f = &f;
             scope.spawn(move || {
-                for (i, row) in bucket {
-                    f(i, row);
+                for (j, row) in o_chunk.chunks_mut(chunk_len).enumerate() {
+                    f(start + j, row, &mut c1[..], &mut c2[..]);
                 }
             });
         }
@@ -114,5 +160,35 @@ mod tests {
         let mut out = vec![0.0f32; 2];
         par_batch_chunks(&mut out, 1, 16, |i, chunk| chunk.fill(i as f32 + 5.0));
         assert_eq!(out, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn scratch_variant_matches_serial() {
+        // Each row records its index plus a value staged through scratch;
+        // serial and threaded runs must agree exactly.
+        let (n, len, slen) = (9usize, 4usize, 3usize);
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; n * len];
+            let mut s1 = vec![0usize; threads.max(1) * slen];
+            let mut s2 = vec![0.0f32; 0];
+            par_batch_chunks_scratch(
+                &mut out[..],
+                len,
+                &mut s1[..],
+                slen,
+                &mut s2[..],
+                0,
+                threads,
+                |i, row, scr, _| {
+                    assert_eq!(scr.len(), slen);
+                    scr.fill(i + 1);
+                    row.fill(scr[0] as f32 * 10.0);
+                },
+            );
+            out
+        };
+        assert_eq!(run(1), run(4));
+        assert_eq!(run(1)[0..4], [10.0, 10.0, 10.0, 10.0]);
+        assert_eq!(run(1)[32..36], [90.0, 90.0, 90.0, 90.0]);
     }
 }

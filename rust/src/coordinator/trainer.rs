@@ -68,6 +68,7 @@ impl Trainer {
             .collect();
         for r in &mut replicas {
             r.set_backend(cfg.backend, cfg.threads_per_socket);
+            r.set_precision(cfg.precision);
         }
         let params = replicas[0].pack_params();
         let opt = Adam::new(params.len(), cfg.lr as f32);

@@ -1,0 +1,230 @@
+//! All-reduce collectives over per-rank gradient buffers.
+//!
+//! [`ring_allreduce`] is the bandwidth-optimal ring algorithm (reduce-
+//! scatter + all-gather over P−1 steps each); every rank ends with the
+//! **sum** across ranks. [`naive_allreduce`] is the obviously-correct
+//! reference (gather-to-root + broadcast). [`ring_allreduce_threaded`]
+//! runs the same ring with real message passing: one OS thread per rank,
+//! chunks travelling over mpsc channels — the in-process analog of the
+//! paper's inter-socket collective.
+
+/// Per-rank chunk boundaries: rank/chunk `i` owns `[i·⌈len/P⌉, …)`.
+fn chunk_bounds(len: usize, ranks: usize) -> Vec<(usize, usize)> {
+    let chunk = len.div_ceil(ranks);
+    (0..ranks)
+        .map(|i| ((i * chunk).min(len), ((i + 1) * chunk).min(len)))
+        .collect()
+}
+
+/// Bytes each rank transmits in a full ring all-reduce of `elems` f32s:
+/// `2·(P−1)` messages of one ⌈len/P⌉-element chunk each. The α–β model
+/// ([`super::comm_model::CommModel`]) uses exactly this count, so model
+/// and implementation cannot drift apart.
+pub fn ring_bytes_per_rank(elems: usize, ranks: usize) -> u64 {
+    if ranks <= 1 {
+        return 0;
+    }
+    2 * (ranks as u64 - 1) * elems.div_ceil(ranks) as u64 * 4
+}
+
+/// Borrow two distinct ranks' buffers mutably.
+fn two_bufs(bufs: &mut [Vec<f32>], a: usize, b: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = bufs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = bufs.split_at_mut(a);
+        let (x, y) = (&mut hi[0], &mut lo[b]);
+        (x, y)
+    }
+}
+
+/// Naive all-reduce: sum every rank into rank 0, then broadcast.
+/// Reference implementation; `P·len` adds, `2(P−1)·len` element moves.
+pub fn naive_allreduce(bufs: &mut [Vec<f32>]) {
+    let p = bufs.len();
+    if p <= 1 {
+        return;
+    }
+    let (head, rest) = bufs.split_at_mut(1);
+    for r in rest.iter() {
+        for (a, b) in head[0].iter_mut().zip(r) {
+            *a += *b;
+        }
+    }
+    for r in rest.iter_mut() {
+        r.copy_from_slice(&head[0]);
+    }
+}
+
+/// In-place ring all-reduce: every `bufs[r]` ends with the element-wise
+/// sum across ranks. Deterministic: chunk `c` accumulates in ring order,
+/// identical to the message-passing variant.
+pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
+    let p = bufs.len();
+    if p <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged rank buffers");
+    let bounds = chunk_bounds(len, p);
+
+    // Reduce-scatter: at step t, rank r sends chunk (r − t) mod p to rank
+    // r+1, which accumulates it. Within a step no rank's outgoing chunk
+    // has been touched yet (sender r transmits chunk r−t; the only chunk
+    // written at r so far this step is r−1−t), so sequential application
+    // is exact.
+    for step in 0..p - 1 {
+        for r in 0..p {
+            let ci = (r + p - step) % p;
+            let (lo, hi) = bounds[ci];
+            if lo >= hi {
+                continue;
+            }
+            let (src, dst) = two_bufs(bufs, r, (r + 1) % p);
+            for (d, s) in dst[lo..hi].iter_mut().zip(&src[lo..hi]) {
+                *d += *s;
+            }
+        }
+    }
+    // All-gather: rank r now owns the fully-reduced chunk (r + 1) mod p
+    // and circulates it; receivers overwrite.
+    for step in 0..p - 1 {
+        for r in 0..p {
+            let ci = (r + 1 + p - step) % p;
+            let (lo, hi) = bounds[ci];
+            if lo >= hi {
+                continue;
+            }
+            let (src, dst) = two_bufs(bufs, r, (r + 1) % p);
+            dst[lo..hi].copy_from_slice(&src[lo..hi]);
+        }
+    }
+}
+
+/// Ring all-reduce with real message passing: one thread per rank, chunk
+/// copies over mpsc channels (unbounded sends ⇒ no deadlock). Returns the
+/// reduced buffers in rank order; numerically identical to
+/// [`ring_allreduce`] (same accumulation order per chunk).
+pub fn ring_allreduce_threaded(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    let p = bufs.len();
+    if p <= 1 {
+        return bufs;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged rank buffers");
+    let bounds = chunk_bounds(len, p);
+
+    // Channel i carries messages rank i → rank (i+1) mod p.
+    let mut txs = Vec::with_capacity(p);
+    let mut rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = std::sync::mpsc::channel::<Vec<f32>>();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+
+    let mut handles = Vec::with_capacity(p);
+    for (r, mut buf) in bufs.into_iter().enumerate() {
+        let tx = txs[r].clone();
+        let rx = rxs[(r + p - 1) % p].take().expect("receiver taken twice");
+        let bounds = bounds.clone();
+        handles.push(std::thread::spawn(move || {
+            // Reduce-scatter.
+            for step in 0..p - 1 {
+                let cs = (r + p - step) % p;
+                let (lo, hi) = bounds[cs];
+                tx.send(buf[lo..hi].to_vec()).expect("ring send");
+                let cr = (r + p - 1 - step) % p;
+                let (lo, hi) = bounds[cr];
+                let msg = rx.recv().expect("ring recv");
+                for (d, s) in buf[lo..hi].iter_mut().zip(&msg) {
+                    *d += *s;
+                }
+            }
+            // All-gather.
+            for step in 0..p - 1 {
+                let cs = (r + 1 + p - step) % p;
+                let (lo, hi) = bounds[cs];
+                tx.send(buf[lo..hi].to_vec()).expect("ring send");
+                let cr = (r + p - step) % p;
+                let (lo, hi) = bounds[cr];
+                let msg = rx.recv().expect("ring recv");
+                buf[lo..hi].copy_from_slice(&msg);
+            }
+            buf
+        }));
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("ring rank panicked"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranks(p: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..p)
+            .map(|r| (0..len).map(|i| (r * len + i) as f32 * 0.25 - 3.0).collect())
+            .collect()
+    }
+
+    fn sums(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let len = bufs[0].len();
+        (0..len).map(|i| bufs.iter().map(|b| b[i]).sum()).collect()
+    }
+
+    #[test]
+    fn ring_equals_sum_small() {
+        for p in 1..=6 {
+            for len in [1usize, 5, 7, 64, 130] {
+                let base = ranks(p, len);
+                let want = sums(&base);
+                let mut got = base.clone();
+                ring_allreduce(&mut got);
+                for r in 0..p {
+                    for i in 0..len {
+                        assert!(
+                            (got[r][i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+                            "p={p} len={len} rank {r} idx {i}: {} vs {}",
+                            got[r][i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_in_place_bitwise() {
+        let base = ranks(5, 97);
+        let mut a = base.clone();
+        ring_allreduce(&mut a);
+        let b = ring_allreduce_threaded(base);
+        assert_eq!(a, b, "same accumulation order ⇒ bit-identical");
+    }
+
+    #[test]
+    fn naive_is_the_oracle() {
+        let base = ranks(4, 33);
+        let want = sums(&base);
+        let mut got = base;
+        naive_allreduce(&mut got);
+        for b in &got {
+            for (x, w) in b.iter().zip(&want) {
+                assert!((x - w).abs() < 1e-4 * (1.0 + w.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(ring_bytes_per_rank(100, 1), 0);
+        // p=4, len=100: chunk 25, 2·3 messages of 25 f32 = 600 bytes.
+        assert_eq!(ring_bytes_per_rank(100, 4), 600);
+    }
+}

@@ -1,0 +1,78 @@
+//! α–β (latency–bandwidth) cost model of the collectives on the paper's
+//! links: a P-rank ring all-reduce costs `2(P−1)·α + bytes/β`, where the
+//! byte count is taken from the *real* ring implementation
+//! ([`super::allreduce::ring_bytes_per_rank`]) so model and algorithm
+//! agree by construction.
+
+use super::allreduce::ring_bytes_per_rank;
+
+/// A point-to-point link: per-message latency (seconds) and sustained
+/// bandwidth (bytes/second).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommModel {
+    pub latency: f64,
+    pub bandwidth: f64,
+}
+
+impl CommModel {
+    /// Intra-node UPI link between the sockets of one Xeon board
+    /// (~10.4 GT/s per link, two links): low latency, high bandwidth.
+    pub fn upi() -> CommModel {
+        CommModel {
+            latency: 600e-9,
+            bandwidth: 20.8e9,
+        }
+    }
+
+    /// Inter-node 100 Gb/s fabric (the multi-node scaling runs of
+    /// Sec. 4.5): higher latency, ~12.5 GB/s per direction.
+    pub fn fabric() -> CommModel {
+        CommModel {
+            latency: 5e-6,
+            bandwidth: 12.5e9,
+        }
+    }
+
+    /// Modeled seconds for a ring all-reduce of `elems` f32 values across
+    /// `ranks` peers: `2(P−1)` latency hops plus the per-rank byte count
+    /// of the real ring at this link's bandwidth.
+    pub fn ring_allreduce_secs(&self, elems: usize, ranks: usize) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let hops = 2 * (ranks - 1);
+        hops as f64 * self.latency + ring_bytes_per_rank(elems, ranks) as f64 / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(CommModel::upi().ring_allreduce_secs(1_000_000, 1), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_term_saturates_with_ranks() {
+        // Per-rank traffic approaches 2·len·4 bytes as P grows, so the
+        // bandwidth term must grow sub-linearly in P.
+        let m = CommModel {
+            latency: 0.0,
+            bandwidth: 1e9,
+        };
+        let t2 = m.ring_allreduce_secs(1_000_000, 2);
+        let t16 = m.ring_allreduce_secs(1_000_000, 16);
+        assert!(t16 < 2.0 * t2, "t2={t2} t16={t16}");
+    }
+
+    #[test]
+    fn latency_term_counts_hops() {
+        let m = CommModel {
+            latency: 1e-6,
+            bandwidth: f64::INFINITY,
+        };
+        assert!((m.ring_allreduce_secs(10, 4) - 6e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! Simulated multi-socket substrate (paper Sec. 4.4/4.5): real collective
+//! algorithms executed in-process plus the α–β cost model that projects
+//! them onto the paper's UPI / fabric links.
+//!
+//! * [`allreduce`]  — ring + naive all-reduce (in-place and message-passing)
+//! * [`comm_model`] — α–β (latency–bandwidth) collective cost model
+//! * [`topology`]   — socket/core accounting of the paper's Xeon testbeds
+//! * [`worker`]     — data-parallel worker pool (one rank per "socket")
+//!
+//! The coordinator runs the *real* ring all-reduce over replica gradients
+//! each step and separately accumulates what the collective *would* cost
+//! between physical sockets via [`CommModel`] — so measured numbers stay
+//! honest on a single host while the projections use the paper's links.
+
+pub mod allreduce;
+pub mod comm_model;
+pub mod topology;
+pub mod worker;
+
+pub use comm_model::CommModel;
+pub use topology::Topology;
+pub use worker::{StepResult, WorkerPool};

@@ -1,0 +1,74 @@
+//! Socket/core accounting of the paper's Xeon testbeds (Sec. 4.4/4.5):
+//! 28-core sockets, one core reserved for the data loader on a single
+//! socket, two (loader + communication proxy) when scaling out, and the
+//! per-topology global batch sizes of Sec. 4.5.1.
+
+/// A multi-socket machine shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+}
+
+impl Topology {
+    pub fn new(sockets: usize, cores_per_socket: usize) -> Topology {
+        assert!(sockets > 0 && cores_per_socket > 2);
+        Topology {
+            sockets,
+            cores_per_socket,
+        }
+    }
+
+    /// The paper's 28-core Xeon sockets (CLX-AP / CPX).
+    pub fn xeon(sockets: usize) -> Topology {
+        Topology::new(sockets, 28)
+    }
+
+    /// Compute cores per socket: 27 on a single socket (1 reserved for
+    /// the DataLoader worker, Sec. 4.4), 26 when multi-socket (a second
+    /// core feeds the collective, Sec. 4.5).
+    pub fn compute_cores(&self) -> usize {
+        if self.sockets <= 1 {
+            self.cores_per_socket - 1
+        } else {
+            self.cores_per_socket - 2
+        }
+    }
+
+    /// Total compute cores across the machine.
+    pub fn total_compute_cores(&self) -> usize {
+        self.compute_cores() * self.sockets
+    }
+
+    /// Global batch size used by the paper at this topology (Sec. 4.5.1):
+    /// 54 on one socket (2 samples per compute core), 26 per socket when
+    /// scaled out.
+    pub fn paper_batch_size(&self) -> usize {
+        if self.sockets <= 1 {
+            2 * self.compute_cores()
+        } else {
+            self.compute_cores() * self.sockets
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_reservation() {
+        assert_eq!(Topology::xeon(1).compute_cores(), 27);
+        assert_eq!(Topology::xeon(2).compute_cores(), 26);
+        assert_eq!(Topology::xeon(16).total_compute_cores(), 416);
+    }
+
+    #[test]
+    fn paper_batches() {
+        let got: Vec<usize> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&s| Topology::xeon(s).paper_batch_size())
+            .collect();
+        assert_eq!(got, vec![54, 52, 104, 208, 416]);
+    }
+}

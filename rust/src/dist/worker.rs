@@ -1,0 +1,89 @@
+//! Data-parallel worker pool: one scoped thread per rank computes a
+//! `(gradient, loss)` pair, gradients are combined with the real ring
+//! all-reduce and averaged — the in-process version of one synchronous
+//! data-parallel step (paper Sec. 4.4).
+
+use super::allreduce::ring_allreduce;
+
+/// A fixed-size pool of data-parallel ranks.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    ranks: usize,
+}
+
+/// Result of one pooled step: rank-averaged gradient and loss.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub grad: Vec<f32>,
+    pub loss: f64,
+}
+
+impl WorkerPool {
+    pub fn new(ranks: usize) -> WorkerPool {
+        assert!(ranks > 0, "pool needs at least one rank");
+        WorkerPool { ranks }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Run `f(rank)` on every rank concurrently, ring-all-reduce the
+    /// gradients, and return the mean gradient and mean loss.
+    pub fn step<F>(&self, f: F) -> StepResult
+    where
+        F: Fn(usize) -> (Vec<f32>, f64) + Sync,
+    {
+        let p = self.ranks;
+        let mut slots: Vec<Option<(Vec<f32>, f64)>> = (0..p).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (rank, slot) in slots.iter_mut().enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    *slot = Some(f(rank));
+                });
+            }
+        });
+        let mut grads = Vec::with_capacity(p);
+        let mut loss = 0.0f64;
+        for slot in slots {
+            let (g, l) = slot.expect("rank produced no result");
+            grads.push(g);
+            loss += l;
+        }
+        ring_allreduce(&mut grads);
+        let mut grad = grads.swap_remove(0);
+        let inv = 1.0 / p as f32;
+        for g in grad.iter_mut() {
+            *g *= inv;
+        }
+        StepResult {
+            grad,
+            loss: loss / p as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_rank_contributions() {
+        let pool = WorkerPool::new(3);
+        let r = pool.step(|rank| (vec![rank as f32; 8], rank as f64 * 10.0));
+        for &g in &r.grad {
+            assert!((g - 1.0).abs() < 1e-6); // mean of 0, 1, 2
+        }
+        assert!((r.loss - 10.0).abs() < 1e-12);
+        assert_eq!(pool.ranks(), 3);
+    }
+
+    #[test]
+    fn single_rank_passthrough() {
+        let pool = WorkerPool::new(1);
+        let r = pool.step(|_| (vec![2.5; 4], 7.0));
+        assert_eq!(r.grad, vec![2.5; 4]);
+        assert_eq!(r.loss, 7.0);
+    }
+}

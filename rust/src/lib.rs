@@ -3,7 +3,7 @@
 //! Rust + JAX + Pallas reproduction of *"Efficient and Generic 1D Dilated
 //! Convolution Layer for Deep Learning"* (Chaudhary et al., 2021).
 //!
-//! The crate is a three-layer system (see `DESIGN.md`):
+//! The crate is a three-layer system (see `rust/DESIGN.md`):
 //!
 //! * **L3 (this crate)** — the framework: the paper's BRGEMM convolution
 //!   kernels ([`conv1d`]), a native training engine ([`model`]), a data
@@ -28,4 +28,4 @@ pub mod model;
 pub mod runtime;
 pub mod util;
 
-pub use conv1d::{Backend, Conv1dLayer, ConvParams};
+pub use conv1d::{Backend, Conv1dLayer, ConvKernel, ConvParams, ConvPlan};

@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use dilconv1d::bench_harness::tables::{markdown, pct, secs, speedup, write_csv};
+use dilconv1d::bench_harness::tables::{backend_cell, markdown, pct, secs, speedup, write_csv};
 use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
 use dilconv1d::config::TrainConfig;
 use dilconv1d::conv1d::test_util::rnd;
@@ -116,7 +116,7 @@ USAGE: dilconv <subcommand> [--flags]
   train            train the AtacWorks-like network on synthetic ATAC-seq
                    [--config cfg.toml] [--epochs N] [--batch N] [--sockets N]
                    [--width N] [--pad N] [--segments N] [--channels N]
-                   [--blocks N] [--backend brgemm|onednn|direct] [--lr F]
+                   [--blocks N] [--backend brgemm|onednn|direct|bf16] [--lr F]
                    [--threads N] [--seed N] [--checkpoint out.ckpt]
   sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
                    --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
@@ -150,7 +150,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = args.usize("seed", cfg.seed as usize)? as u64;
     cfg.lr = args.f64("lr", cfg.lr)?;
     if let Some(b) = args.get("backend") {
-        cfg.backend = b.parse().map_err(|e: String| anyhow!(e))?;
+        // Registry-name selection: any conv1d::lookup_kernel alias,
+        // including "bf16" (BRGEMM backend at bf16 precision).
+        cfg.apply_backend_name(b).map_err(|e| anyhow!(e))?;
     }
     println!(
         "training AtacWorks-like net: {} conv layers, ch={}, S={}, d={}, W={} (padded {}), \
@@ -242,6 +244,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             q.to_string(),
             s.to_string(),
             d.to_string(),
+            backend_cell(ours.backend),
             secs(ours.timing.median_secs),
             format!("{:.2}", ours.host_gflops),
             pct(ours.host_eff),
@@ -253,8 +256,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     let headers = vec![
-        "CxK", "Q", "S", "d", "ours fwd", "GF/s", "host eff", "baseline fwd", "speedup",
-        "ours bwd-d", "modeled eff (paper hw)", "modeled eff baseline",
+        "CxK", "Q", "S", "d", "kernel", "ours fwd", "GF/s", "host eff", "baseline fwd",
+        "speedup", "ours bwd-d", "modeled eff (paper hw)", "modeled eff baseline",
     ];
     println!("{}", markdown(&headers, &rows));
     if let Some(path) = args.get("csv") {

@@ -2,17 +2,31 @@
 //! backward pass (the native engine's "autograd tape" is the network
 //! structure itself; see resnet.rs).
 
-use crate::conv1d::layout::{pad_width, unpad_width};
+use crate::conv1d::layout::{pad_width_into, unpad_width};
 use crate::conv1d::{Backend, Conv1dLayer, ConvParams};
+use crate::machine::Precision;
 
 use super::tensor::Tensor;
 
 /// A same-padded conv layer with bias, caching its padded input for the
 /// backward pass. Width-preserving: `(N, C, W) -> (N, K, W)`.
+///
+/// Steady-state training reuses everything across steps: the layer's
+/// cached [`crate::conv1d::ConvPlan`] (derived layouts, offset tables,
+/// kernel scratch) and this wrapper's persistent padded-input buffers —
+/// the per-step re-pad allocation of the pre-plan design is gone.
+/// Training and eval forwards pad into *separate* buffers, so an eval
+/// pass between `forward(train=true)` and `backward()` cannot corrupt
+/// the cached training input.
 pub struct ConvSame {
     pub conv: Conv1dLayer,
-    /// Cached padded input from the last forward (for backward-weight).
-    cached_xp: Option<(Vec<f32>, usize, usize)>, // (data, n, wp)
+    /// Persistent padded-input buffer for `forward(train=true)`; holds
+    /// the cached input the backward pass consumes.
+    xp_train: Vec<f32>,
+    /// Persistent padded-input buffer for eval forwards.
+    xp_eval: Vec<f32>,
+    /// `(n, wp)` of the padded input cached by the last `forward(train)`.
+    cached: Option<(usize, usize)>,
 }
 
 /// Gradients of one conv layer.
@@ -25,7 +39,9 @@ impl ConvSame {
     pub fn new(c: usize, k: usize, s: usize, d: usize, weights: Vec<f32>) -> Self {
         ConvSame {
             conv: Conv1dLayer::new(c, k, s, d, weights),
-            cached_xp: None,
+            xp_train: Vec::new(),
+            xp_eval: Vec::new(),
+            cached: None,
         }
     }
 
@@ -34,12 +50,27 @@ impl ConvSame {
         self.conv.threads = threads;
     }
 
+    /// Select the forward precision (bf16 takes effect on the BRGEMM
+    /// backend; others fall back to f32).
+    pub fn set_precision(&mut self, precision: Precision) {
+        self.conv.precision = precision;
+    }
+
     /// Forward, caching the padded input when `train` is set.
     pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
         let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
-        let xp = pad_width(&x.data, x.n, x.c, x.w, l, r);
         let wp = x.w + l + r;
-        let mut out = self.conv.forward(&xp, x.n, wp);
+        let need = x.n * x.c * wp;
+        let buf = if train {
+            &mut self.xp_train
+        } else {
+            &mut self.xp_eval
+        };
+        if buf.len() != need {
+            buf.resize(need, 0.0);
+        }
+        pad_width_into(&x.data, x.n, x.c, x.w, l, r, buf);
+        let mut out = self.conv.forward(buf, x.n, wp);
         // Bias.
         for ib in 0..x.n {
             for ik in 0..self.conv.k {
@@ -52,22 +83,23 @@ impl ConvSame {
             }
         }
         if train {
-            self.cached_xp = Some((xp, x.n, wp));
+            self.cached = Some((x.n, wp));
         }
         Tensor::from_vec(out, x.n, self.conv.k, x.w)
     }
 
     /// Backward: consumes the cached input; returns (grad_input, grads).
     pub fn backward(&mut self, gout: &Tensor) -> (Tensor, ConvGrads) {
-        let (xp, n, wp) = self
-            .cached_xp
+        let (n, wp) = self
+            .cached
             .take()
             .expect("backward() without a cached forward(train=true)");
         assert_eq!(gout.n, n);
         assert_eq!(gout.c, self.conv.k);
         let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
         debug_assert_eq!(gout.w + l + r, wp);
-        let gw = self.conv.backward_weight(&gout.data, &xp, n, wp);
+        let xp = &self.xp_train[..n * self.conv.c * wp];
+        let gw = self.conv.backward_weight(&gout.data, xp, n, wp);
         let gb = self.conv.backward_bias(&gout.data, n, gout.w);
         let gxp = self.conv.backward_data(&gout.data, n, wp);
         let gx = unpad_width(&gxp, n, self.conv.c, wp, l, r);
@@ -79,11 +111,12 @@ impl ConvSame {
 
     /// Backward-weight only (used by the stem, whose input needs no grad).
     pub fn backward_weights_only(&mut self, gout: &Tensor) -> ConvGrads {
-        let (xp, n, wp) = self
-            .cached_xp
+        let (n, wp) = self
+            .cached
             .take()
             .expect("backward() without a cached forward(train=true)");
-        let gw = self.conv.backward_weight(&gout.data, &xp, n, wp);
+        let xp = &self.xp_train[..n * self.conv.c * wp];
+        let gw = self.conv.backward_weight(&gout.data, xp, n, wp);
         let gb = self.conv.backward_bias(&gout.data, n, gout.w);
         ConvGrads { w: gw, b: gb }
     }

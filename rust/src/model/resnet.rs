@@ -115,6 +115,14 @@ impl AtacWorksNet {
         }
     }
 
+    /// Select the forward precision for every layer (bf16 takes effect on
+    /// the BRGEMM backend; gradients stay f32).
+    pub fn set_precision(&mut self, precision: crate::machine::Precision) {
+        for c in &mut self.convs {
+            c.set_precision(precision);
+        }
+    }
+
     /// Forward pass. `x: (N, 1, W)`; returns `(denoised, logits)`, both
     /// `(N, 1, W)`. With `train` set, caches everything backward needs.
     pub fn forward(&mut self, x: &Tensor, train: bool) -> (Tensor, Tensor, ForwardCache) {

@@ -1,0 +1,50 @@
+//! Stub PJRT session, compiled when the `xla` feature is off (the default
+//! offline build). Keeps the `runtime::client` API surface identical to
+//! the real client so callers compile unchanged; every operation that
+//! would touch PJRT fails at run time with a clear message. The runtime
+//! integration tests and `dilconv artifacts-check` already skip when
+//! `artifacts/` is absent, so the default build degrades gracefully.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: dilconv1d was built without the `xla` feature (see rust/DESIGN.md §8)";
+
+/// A PJRT CPU session placeholder.
+pub struct Session {
+    _private: (),
+}
+
+impl Session {
+    /// Always fails in the stub build.
+    pub fn cpu() -> Result<Session> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Platform description for logs.
+    pub fn platform(&self) -> String {
+        "unavailable (built without the xla feature)".to_string()
+    }
+
+    /// Always fails in the stub build.
+    pub fn load(&mut self, _key: &str, _path: impl AsRef<Path>) -> Result<()> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Number of cached executables (always zero in the stub).
+    pub fn loaded(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_fails_with_a_clear_message() {
+        let e = Session::cpu().err().expect("stub must fail");
+        assert!(e.to_string().contains("xla"), "{e}");
+    }
+}

@@ -5,9 +5,24 @@
 //! * [`artifacts`] — registry over `artifacts/meta.json`
 //! * [`client`]    — PJRT CPU session + executable cache + literal helpers
 //! * [`step`]      — train/eval step runners (the flat-parameter ABI)
+//!
+//! The PJRT-backed `client`/`step` modules require the `xla` feature
+//! (and the `xla` bindings crate). The default offline build substitutes
+//! API-identical stubs that fail at run time, so everything downstream —
+//! CLI, tests, examples — compiles either way (DESIGN.md §8).
 
 pub mod artifacts;
+
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
+pub mod step;
+
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
+pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "step_stub.rs"]
 pub mod step;
 
 pub use artifacts::{Artifact, ModelMeta, Registry, TensorSpec};

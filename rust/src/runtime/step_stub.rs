@@ -1,0 +1,75 @@
+//! Stub train/eval step runners, compiled when the `xla` feature is off.
+//! Mirrors the public surface of `runtime::step` (the flat-parameter ABI
+//! types) so the CLI, tests and examples compile; all execution entry
+//! points fail at run time.
+
+use anyhow::{bail, Result};
+
+use super::artifacts::{Artifact, Registry};
+use super::client::Session;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: dilconv1d was built without the `xla` feature (see rust/DESIGN.md §8)";
+
+/// Losses returned by one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLosses {
+    pub total: f32,
+    pub mse: f32,
+    pub bce: f32,
+}
+
+/// Mutable training state for a model variant (flat f32 ABI).
+pub struct TrainState {
+    pub variant: String,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+    /// Expected batch/width of the lowered train_step artifact.
+    pub batch: usize,
+    pub width: usize,
+}
+
+impl TrainState {
+    /// Always fails in the stub build.
+    pub fn init(_reg: &Registry, _variant: &str) -> Result<TrainState> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Artifact key of this variant's train step.
+    pub fn train_key(&self) -> String {
+        format!("train_step_{}", self.variant)
+    }
+
+    /// Artifact key of this variant's eval step.
+    pub fn eval_key(&self) -> String {
+        format!("eval_step_{}", self.variant)
+    }
+
+    /// Always fails in the stub build.
+    pub fn step(
+        &mut self,
+        _sess: &Session,
+        _x: &[f32],
+        _clean: &[f32],
+        _peaks: &[f32],
+    ) -> Result<StepLosses> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Always fails in the stub build.
+    pub fn eval(&self, _sess: &Session, _x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Always fails in the stub build.
+pub fn run_conv_fwd(
+    _sess: &mut Session,
+    _art: &Artifact,
+    _x: &[f32],
+    _w_skc: &[f32],
+) -> Result<Vec<f32>> {
+    bail!(UNAVAILABLE)
+}

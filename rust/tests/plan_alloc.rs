@@ -1,0 +1,117 @@
+//! Zero-allocation guarantee of the plan executor (ISSUE 1 acceptance
+//! criterion): after `ConvPlan` construction, steady-state
+//! `execute_forward_into` / `execute_backward_*_into` calls perform
+//! **zero** heap allocations (single-worker plans; multi-worker plans
+//! additionally pay only the scoped thread spawns).
+//!
+//! Verified with a counting `#[global_allocator]`. This file deliberately
+//! contains a single `#[test]` so no concurrent test can allocate while a
+//! window is measured; a short retry loop absorbs any one-off runtime
+//! allocation that might land inside a window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{ConvParams, ConvPlan};
+
+struct CountingAllocator;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Run `f` and return the number of heap allocations it performed,
+/// retrying a few times so a stray runtime allocation outside our code
+/// (e.g. lazy stdio setup) cannot produce a false positive. The MINIMUM
+/// over attempts is the honest count of what `f` itself allocates.
+fn allocs_during(mut f: impl FnMut()) -> usize {
+    let mut min = usize::MAX;
+    for _ in 0..3 {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        f();
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        min = min.min(delta);
+        if min == 0 {
+            break;
+        }
+    }
+    min
+}
+
+#[test]
+fn steady_state_executors_do_not_allocate() {
+    // Same-padded AtacWorks-flavoured shape, scaled for test speed, with a
+    // Q % 64 != 0 tail so the remainder path is exercised too.
+    let (n, c, k, s, d, wu) = (2usize, 5usize, 6usize, 9usize, 4usize, 450usize);
+    let p = ConvParams::with_same_padding(n, c, k, wu, s, d).unwrap();
+    let wt = rnd(k * c * s, 1);
+    let x = rnd(n * c * p.w, 2);
+    let x_unpadded = rnd(n * c * wu, 3);
+    let gout = rnd(n * k * p.q(), 4);
+
+    for kernel in ["brgemm", "im2col", "direct", "bf16"] {
+        // threads = 1: the strictly zero-allocation configuration.
+        let mut plan = ConvPlan::by_name(p, kernel, 1, wt.clone()).unwrap();
+        let mut out = vec![0.0f32; n * k * p.q()];
+        let mut gin = vec![0.0f32; n * c * p.w];
+        let mut gw = vec![0.0f32; k * c * s];
+        let mut gx = vec![0.0f32; n * c * wu];
+
+        // Warm every path once (first call may lazily touch nothing, but
+        // keep the measurement honest regardless).
+        plan.execute_forward_into(&x, &mut out);
+        plan.execute_forward_same_into(&x_unpadded, &mut out[..n * k * wu]);
+        plan.execute_backward_data_into(&gout, &mut gin);
+        plan.execute_backward_weight_into(&gout, &x, &mut gw);
+        plan.execute_backward_data_same_into(&gout, &mut gx);
+
+        let fwd = allocs_during(|| plan.execute_forward_into(&x, &mut out));
+        assert_eq!(fwd, 0, "{kernel}: execute_forward_into allocated");
+
+        let fwd_same =
+            allocs_during(|| plan.execute_forward_same_into(&x_unpadded, &mut out[..n * k * wu]));
+        assert_eq!(fwd_same, 0, "{kernel}: execute_forward_same_into allocated");
+
+        let bwd_d = allocs_during(|| plan.execute_backward_data_into(&gout, &mut gin));
+        assert_eq!(bwd_d, 0, "{kernel}: execute_backward_data_into allocated");
+
+        let bwd_w = allocs_during(|| plan.execute_backward_weight_into(&gout, &x, &mut gw));
+        assert_eq!(bwd_w, 0, "{kernel}: execute_backward_weight_into allocated");
+
+        let bwd_same = allocs_during(|| plan.execute_backward_data_same_into(&gout, &mut gx));
+        assert_eq!(bwd_same, 0, "{kernel}: execute_backward_data_same_into allocated");
+
+        // set_weights refreshes every derived layout in place.
+        let reweight = allocs_during(|| plan.set_weights(&wt));
+        assert_eq!(reweight, 0, "{kernel}: set_weights allocated");
+
+        // And the owned-output convenience path is allocation-free too.
+        let fwd_owned = allocs_during(|| {
+            plan.execute_forward(&x);
+        });
+        assert_eq!(fwd_owned, 0, "{kernel}: execute_forward allocated");
+    }
+}

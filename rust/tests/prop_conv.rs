@@ -13,7 +13,8 @@ use dilconv1d::conv1d::layout::{
     kcs_to_sck_flipped, kcs_to_skc, pad_width, sck_to_kcs, skc_to_kcs, unpad_width,
 };
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::ConvParams;
+use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams, ConvPlan};
+use dilconv1d::machine::Precision;
 use dilconv1d::util::rng::Rng;
 
 /// Draw a random valid conv problem.
@@ -201,6 +202,74 @@ fn prop_dilation_equals_strided_dense_conv() {
         let mut o2 = vec![0.0; k * p_dense.q()];
         forward(&p_dense, &x, &kcs_to_skc(&dense, k, c, s_dense), &mut o2, 1);
         close(&o1, &o2, 1e-3, "dilation-expansion", case);
+    }
+}
+
+#[test]
+fn prop_plan_reuse_matches_fresh_layer_bit_exact() {
+    // A plan executed repeatedly with different inputs must match fresh
+    // Conv1dLayer calls *bit-exactly*: across every dilation 1–8, odd
+    // widths, and Q % WIDTH_BLOCK != 0 tails, and on every backend.
+    for d in 1..=8usize {
+        // Odd Q, and Q chosen so Q % 64 != 0 (97, 161, ... are all odd).
+        let (n, c, k, s) = (2usize, 5usize, 6usize, 7usize);
+        let q = 97 + 8 * d; // odd ∀d, never a multiple of 64 in this range
+        assert_ne!(q % 64, 0);
+        let p = ConvParams::new(n, c, k, q + (s - 1) * d, s, d).unwrap();
+        let wt = rnd(k * c * s, 500 + d as u64);
+        let x1 = rnd(n * c * p.w, 600 + d as u64);
+        let x2 = rnd(n * c * p.w, 700 + d as u64);
+        for backend in Backend::ALL {
+            let mut plan = ConvPlan::new(p, backend, Precision::F32, 1, wt.clone()).unwrap();
+            let mut o1 = vec![0.0; n * k * p.q()];
+            let mut o2 = vec![0.0; n * k * p.q()];
+            let mut o1_again = vec![0.0; n * k * p.q()];
+            plan.execute_forward_into(&x1, &mut o1);
+            plan.execute_forward_into(&x2, &mut o2);
+            plan.execute_forward_into(&x1, &mut o1_again);
+            assert_eq!(o1, o1_again, "d={d} {backend}: plan reuse leaked state");
+            // Fresh layers as the oracle — one per call, no shared state.
+            let fresh = |xv: &[f32]| {
+                let mut l = Conv1dLayer::new(c, k, s, d, wt.clone());
+                l.backend = backend;
+                l.forward(xv, n, p.w)
+            };
+            assert_eq!(o1, fresh(&x1), "d={d} {backend}: forward(x1)");
+            assert_eq!(o2, fresh(&x2), "d={d} {backend}: forward(x2)");
+        }
+        // Backward passes through a reused plan are bit-exact too.
+        let gout = rnd(n * k * p.q(), 800 + d as u64);
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt.clone()).unwrap();
+        let mut warm = vec![0.0; n * k * p.q()];
+        plan.execute_forward_into(&x1, &mut warm); // dirty the workspace
+        let mut gin = vec![0.0; n * c * p.w];
+        plan.execute_backward_data_into(&gout, &mut gin);
+        let mut gw = vec![0.0; k * c * s];
+        plan.execute_backward_weight_into(&gout, &x1, &mut gw);
+        let fresh = Conv1dLayer::new(c, k, s, d, wt);
+        assert_eq!(gin, fresh.backward_data(&gout, n, p.w), "d={d}: bwd-data");
+        assert_eq!(gw, fresh.backward_weight(&gout, &x1, n, p.w), "d={d}: bwd-weight");
+    }
+}
+
+#[test]
+fn prop_bf16_plan_is_deterministic_and_tracks_f32() {
+    let mut rng = Rng::new(0xFA);
+    for case in 0..10 {
+        let p = arb_problem(&mut rng);
+        let wt = rnd(p.k * p.c * p.s, 900 + case);
+        let x = rnd(p.n * p.c * p.w, 950 + case);
+        let mut plan = ConvPlan::by_name(p, "bf16", 1, wt.clone()).unwrap();
+        let mut o1 = vec![0.0; p.n * p.k * p.q()];
+        let mut o2 = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut o1);
+        plan.execute_forward_into(&x, &mut o2);
+        assert_eq!(o1, o2, "case {case}: bf16 plan must be deterministic");
+        let mut f32_out = vec![0.0; p.n * p.k * p.q()];
+        ConvPlan::by_name(p, "brgemm", 1, wt)
+            .unwrap()
+            .execute_forward_into(&x, &mut f32_out);
+        close(&o1, &f32_out, 6e-2, "bf16 vs f32", case);
     }
 }
 

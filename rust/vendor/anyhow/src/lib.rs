@@ -1,0 +1,169 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, covering the
+//! subset of its API this workspace uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait on `Result`/`Option`, and the `anyhow!`,
+//! `bail!`, `ensure!` macros.
+//!
+//! Errors are flattened to strings at construction time (context chains
+//! become `"outer: inner"`), which is all the callers ever observe — they
+//! print with `{e}` / `{e:#}` and never downcast.
+
+use std::fmt::{self, Debug, Display};
+
+/// A string-backed error value.
+pub struct Error(String);
+
+/// `std::result::Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error(m.to_string())
+    }
+
+    /// Prepend a context layer: `"ctx: cause"`.
+    pub fn context<C: Display>(self, ctx: C) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// `?` conversions from any std error (io, parse, custom impls, ...).
+// `Error` itself deliberately does not implement `std::error::Error`, so
+// this blanket impl cannot overlap with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("not an integer")?;
+        ensure!(v >= 0, "negative value {v}");
+        if v > 100 {
+            bail!("too large: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn happy_path() {
+        assert_eq!(parse("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not an integer: "), "{e}");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(parse("-1").unwrap_err().to_string(), "negative value -1");
+        assert_eq!(parse("101").unwrap_err().to_string(), "too large: 101");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path/xyz")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        let s = String::from("from-expr");
+        assert_eq!(anyhow!(s).to_string(), "from-expr");
+        assert_eq!(anyhow!("{} {}", 1, 2).to_string(), "1 2");
+    }
+}
