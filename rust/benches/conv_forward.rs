@@ -6,11 +6,11 @@
 //! Run: `cargo bench --bench conv_forward` (in `cargo bench` the binary
 //! runs with `--bench`, which we ignore).
 
-use dilconv1d::bench_harness::{run_point, time_fn, Pass, SweepConfig};
+use dilconv1d::bench_harness::{run_point, run_point_tuned, time_fn, Pass, SweepConfig};
 use dilconv1d::conv1d::forward::forward;
 use dilconv1d::conv1d::layout::kcs_to_skc;
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan};
+use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, PostOps};
 use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
 
 fn main() {
@@ -115,6 +115,97 @@ fn main() {
             "planned path must not be slower than eager: {} vs {}",
             t_plan.min_secs, t_eager.min_secs
         );
+    }
+
+    // Fused vs unfused post-ops on the same AtacWorks shape: the fused
+    // path applies bias+relu inside the kernel's output-block loop (one
+    // pass over the output); the unfused path reproduces the pre-fusion
+    // layer stack — conv, then a bias sweep, then a relu sweep.
+    println!("\n# fused vs unfused post-ops (bias+relu, AtacWorks layer)");
+    let bias = rnd(k, 0xE3);
+    plan.set_post_ops(PostOps::bias_relu());
+    plan.set_bias(&bias);
+    let mut y = vec![0.0f32; n * k * p.q()];
+    let t_fused = time_fn(1, reps, || {
+        plan.execute_forward_post_into(&x, None, &mut y);
+        std::hint::black_box(&y);
+    });
+    plan.set_post_ops(PostOps::none());
+    let q = p.q();
+    let t_unfused = time_fn(1, reps, || {
+        plan.execute_forward_into(&x, &mut out);
+        for ib in 0..n {
+            for ik in 0..k {
+                let row = &mut out[(ib * k + ik) * q..(ib * k + ik + 1) * q];
+                let b = bias[ik];
+                for v in row.iter_mut() {
+                    *v += b;
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        std::hint::black_box(&out);
+    });
+    let fused_ratio = t_fused.median_secs / t_unfused.median_secs;
+    println!(
+        "unfused (3 passes) {:>8.2} ms   fused (1 pass) {:>8.2} ms   ratio {:.3}",
+        t_unfused.median_secs * 1e3,
+        t_fused.median_secs * 1e3,
+        fused_ratio,
+    );
+    let fused_regressed = t_fused.min_secs > t_unfused.min_secs * 1.05;
+    if fused_regressed {
+        eprintln!(
+            "WARN: fused post-ops slower than unfused: {} vs {}",
+            t_fused.min_secs, t_unfused.min_secs
+        );
+    }
+    if std::env::var("BENCH_STRICT").is_ok() {
+        assert!(
+            !fused_regressed,
+            "fused must be <= unfused on the AtacWorks shape: {} vs {}",
+            t_fused.min_secs, t_unfused.min_secs
+        );
+    }
+
+    // Autotuned point: the harness routes kernel selection through the
+    // shape-keyed autotuner (first call measures, later calls memoize).
+    let (t_tuned, tuned_kernel) = run_point_tuned(&cfg, 15, 15, 10_000, 51, 8, PostOps::bias_relu());
+    println!(
+        "autotuned kernel for C=15 K=15 Q=10000 S=51 d=8: {} ({:.2} ms fused fwd)",
+        tuned_kernel,
+        t_tuned.median_secs * 1e3
+    );
+
+    // Bench trajectory row (BENCH_*.json at the repo root).
+    let json = format!(
+        "{{\n  \"bench\": \"conv_forward\",\n  \"shape\": \"C15_K15_S51_d8_W60000\",\n  \
+         \"eager_ms\": {:.4},\n  \"planned_ms\": {:.4},\n  \"planned_over_eager\": {:.4},\n  \
+         \"unfused_ms\": {:.4},\n  \"fused_ms\": {:.4},\n  \"fused_over_unfused\": {:.4},\n  \
+         \"autotuned_kernel\": \"{}\",\n  \"autotuned_fused_ms\": {:.4}\n}}\n",
+        t_eager.median_secs * 1e3,
+        t_plan.median_secs * 1e3,
+        t_plan.median_secs / t_eager.median_secs,
+        t_unfused.median_secs * 1e3,
+        t_fused.median_secs * 1e3,
+        fused_ratio,
+        tuned_kernel,
+        t_tuned.median_secs * 1e3,
+    );
+    // Benches run from rust/; place the trajectory file at the repo root
+    // when it is visible, else in the working directory.
+    let out_path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_conv_forward.json"
+    } else {
+        "BENCH_conv_forward.json"
+    };
+    match std::fs::write(out_path, &json) {
+        Ok(()) => println!("bench row written to {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
     }
 
     println!("\nconv_forward bench done");

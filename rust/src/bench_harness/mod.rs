@@ -8,4 +8,4 @@ pub mod sweep;
 pub mod tables;
 
 pub use runner::{time_auto, time_fn, Timing};
-pub use sweep::{run_grid, run_point, Pass, SweepConfig, SweepRow};
+pub use sweep::{run_grid, run_point, run_point_tuned, Pass, SweepConfig, SweepRow};

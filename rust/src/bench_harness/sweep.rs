@@ -4,7 +4,7 @@
 //! DESIGN.md §4).
 
 use crate::conv1d::test_util::rnd;
-use crate::conv1d::{Backend, ConvParams, ConvPlan};
+use crate::conv1d::{Backend, ConvParams, ConvPlan, PostOps};
 use crate::machine::{project, Measurement, Precision, Strategy};
 use crate::machine::spec::MachineSpec;
 
@@ -155,6 +155,43 @@ pub fn run_point(
         modeled_eff: proj.efficiency,
         modeled_secs: proj.secs,
     }
+}
+
+/// Measure one forward grid point with the kernel chosen by the
+/// process-wide autotuner ([`crate::conv1d::autotuner`]) and a fused
+/// post-op epilogue. Returns the steady-state timing plus the chosen
+/// kernel's registry name — the sweep/bench binaries report both.
+pub fn run_point_tuned(
+    cfg: &SweepConfig,
+    c: usize,
+    k: usize,
+    q: usize,
+    s: usize,
+    d: usize,
+    post: PostOps,
+) -> (Timing, &'static str) {
+    let q_meas = q.min(cfg.max_measured_q);
+    let p = ConvParams::new(cfg.batch, c, k, q_meas + (s - 1) * d, s, d)
+        .expect("invalid sweep point");
+    let x = rnd(p.n * p.c * p.w, 0xC0 + q as u64);
+    let wt = rnd(p.k * p.c * p.s, 0xF1 + s as u64);
+    let mut plan = ConvPlan::tuned(p, Precision::F32, cfg.threads, wt)
+        .expect("tuned plan construction")
+        .with_post_ops(post);
+    if post.bias {
+        plan.set_bias(&rnd(k, 0xB1A5));
+    }
+    let res = if post.residual {
+        Some(rnd(p.n * p.k * p.q(), 0xE51D))
+    } else {
+        None
+    };
+    let mut out = vec![0.0f32; p.n * p.k * p.q()];
+    let timing = time_fn(1, cfg.reps, || {
+        plan.execute_forward_post_into(&x, res.as_deref(), &mut out);
+        std::hint::black_box(&out);
+    });
+    (timing, plan.kernel_name())
 }
 
 /// Run a full grid (e.g. `experiment::fig4_grid()`) under both the BRGEMM

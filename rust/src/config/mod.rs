@@ -3,7 +3,7 @@
 
 pub mod toml;
 
-use crate::conv1d::Backend;
+use crate::conv1d::{Backend, PostOps};
 use crate::machine::Precision;
 
 use anyhow::{anyhow, Context, Result};
@@ -29,6 +29,16 @@ pub struct TrainConfig {
     pub lr: f64,
     pub precision: Precision,
     pub backend: Backend,
+    /// Fused post-op spec for the network body (`post_ops = "bias_relu"`):
+    /// the activation is applied inside the conv kernels' output-block
+    /// loop; the ResNet block tails additionally fuse the residual add.
+    pub post_ops: PostOps,
+    /// Choose each layer's kernel per shape via the autotuner
+    /// (`autotune = true`) instead of pinning `backend`.
+    pub autotune: bool,
+    /// Persisted tuning table (JSON): loaded before training to
+    /// warm-start the autotuner, written back after.
+    pub tune_cache: Option<String>,
     // Topology.
     pub sockets: usize,
     pub threads_per_socket: usize,
@@ -50,6 +60,9 @@ impl Default for TrainConfig {
             lr: 2e-4,
             precision: Precision::F32,
             backend: Backend::Brgemm,
+            post_ops: PostOps::bias_relu(),
+            autotune: false,
+            tune_cache: None,
             sockets: 1,
             threads_per_socket: 1,
         }
@@ -112,6 +125,15 @@ impl TrainConfig {
                 "bf16" | "bfloat16" => Precision::Bf16,
                 other => return Err(anyhow!("unknown precision '{other}'")),
             };
+        }
+        if let Some(s) = toml::get_str(&doc, "train", "post_ops") {
+            cfg.post_ops = PostOps::parse(s).map_err(|e| anyhow!(e))?;
+        }
+        if let Some(b) = toml::get_bool(&doc, "train", "autotune") {
+            cfg.autotune = b;
+        }
+        if let Some(s) = toml::get_str(&doc, "train", "tune_cache") {
+            cfg.tune_cache = Some(s.to_string());
         }
         Ok(cfg)
     }
@@ -184,6 +206,34 @@ sockets = 4
         assert_eq!(c.sockets, 4);
         // Untouched defaults survive.
         assert_eq!(c.filter_size, 51);
+    }
+
+    #[test]
+    fn post_ops_and_autotune_keys() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(
+            &p,
+            r#"
+[train]
+post_ops = "bias_sigmoid"
+autotune = true
+tune_cache = "tune.json"
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.post_ops, PostOps::parse("bias_sigmoid").unwrap());
+        assert!(c.autotune);
+        assert_eq!(c.tune_cache.as_deref(), Some("tune.json"));
+        // Defaults: fused bias+relu, no autotune.
+        let d = TrainConfig::default();
+        assert_eq!(d.post_ops, PostOps::bias_relu());
+        assert!(!d.autotune);
+        // Bad post-op spec fails loudly.
+        std::fs::write(&p, "[train]\npost_ops = \"bias_tanh\"\n").unwrap();
+        assert!(TrainConfig::from_file(&p).is_err());
     }
 
     #[test]

@@ -7,26 +7,53 @@
 //! to for long widths and filters).
 
 use super::params::ConvParams;
+use super::post::{apply_segment, PostOps};
 
 /// Forward: `Out[n,k,q] = Σ_c Σ_s In[n,c,q+d·s] · W[k,c,s]` (weight in
 /// framework layout `(K, C, S)`). `out` is overwritten.
 pub fn forward_direct(p: &ConvParams, x: &[f32], w_kcs: &[f32], out: &mut [f32]) {
+    forward_direct_post(p, x, w_kcs, out, &PostOps::none(), &[], None);
+}
+
+/// [`forward_direct`] with the post-op epilogue fused per output row: the
+/// `(n, k)` row is complete after the `c`/`s` accumulation loops, so the
+/// epilogue runs on it before the next row is touched — one pass over the
+/// output even in the oracle kernel.
+pub fn forward_direct_post(
+    p: &ConvParams,
+    x: &[f32],
+    w_kcs: &[f32],
+    out: &mut [f32],
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+) {
     let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     assert_eq!(x.len(), n * c * w);
     assert_eq!(w_kcs.len(), k * c * s);
     assert_eq!(out.len(), n * k * q);
+    super::post::validate_args(ops, bias, residual, n, k, q);
     out.fill(0.0);
     for ib in 0..n {
         for ik in 0..k {
+            let row = (ib * k + ik) * q;
             for ic in 0..c {
                 for is in 0..s {
                     let wv = w_kcs[(ik * c + ic) * s + is];
                     let xrow = &x[(ib * c + ic) * w + is * d..(ib * c + ic) * w + is * d + q];
-                    let orow = &mut out[(ib * k + ik) * q..(ib * k + ik) * q + q];
+                    let orow = &mut out[row..row + q];
                     for iq in 0..q {
                         orow[iq] += wv * xrow[iq];
                     }
                 }
+            }
+            if !ops.is_none() {
+                let bias_k = if ops.bias { bias[ik] } else { 0.0 };
+                let res = residual
+                    .filter(|_| ops.residual)
+                    .map(|r| &r[row..row + q]);
+                apply_segment(ops, bias_k, res, &mut out[row..row + q]);
             }
         }
     }

@@ -18,6 +18,7 @@
 use super::bf16::Bf16;
 use super::brgemm::{brgemm_bf16, brgemm_f32};
 use super::params::{ConvParams, WIDTH_BLOCK};
+use super::post::{apply_block, PostOps};
 use super::threading::par_batch_chunks_scratch;
 
 /// Tap offsets of the `(S, K, C)` forward weight: `a_offs[s] = s·K·C`.
@@ -43,7 +44,28 @@ pub fn forward_single_into(
     a_offs: &[usize],
     b_offs: &mut [usize],
 ) {
+    forward_single_post_into(p, x, w_skc, out, a_offs, b_offs, &PostOps::none(), &[], None);
+}
+
+/// [`forward_single_into`] with the post-op epilogue fused into the width
+/// block loop: each freshly-computed `(K, nb)` output block gets
+/// bias/activation/residual/scale applied while it is still cache-hot —
+/// one pass over the output instead of separate sweeps (DESIGN.md §5b).
+/// `res_row` is this image's `(K, Q)` residual row when `ops.residual`.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_single_post_into(
+    p: &ConvParams,
+    x: &[f32],
+    w_skc: &[f32],
+    out: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+) {
     let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(w_skc.len(), s * k * c);
     debug_assert_eq!(out.len(), k * q);
@@ -58,6 +80,7 @@ pub fn forward_single_into(
         brgemm_f32(
             w_skc, a_offs, c, x, b_offs, w, &mut out[pos..], q, k, nb, c, true,
         );
+        apply_block(ops, bias, res_row, out, k, q, pos, nb);
         pos += nb;
     }
 }
@@ -98,6 +121,57 @@ pub fn forward_with_scratch(
         threads,
         |i, out_row, bo, _| {
             forward_single_into(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row, a_offs, bo);
+        },
+    );
+}
+
+/// Batched fused-epilogue forward pass with caller-owned scratch — the
+/// plan executor's post-op entry point. `residual` is the full `(N, K, Q)`
+/// residual tensor when `ops.residual`; each worker sees only its image's
+/// row. Zero heap allocations with `threads <= 1`, same as
+/// [`forward_with_scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn forward_post_with_scratch(
+    p: &ConvParams,
+    x: &[f32],
+    w_skc: &[f32],
+    out: &mut [f32],
+    threads: usize,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+) {
+    let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(w_skc.len(), p.s * k * c, "weight shape mismatch for {p}");
+    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    super::post::validate_args(ops, bias, residual, n, k, q);
+    let mut no_scratch: [f32; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        k * q,
+        b_offs,
+        p.s,
+        &mut no_scratch[..],
+        0,
+        threads,
+        |i, out_row, bo, _| {
+            let res_row = residual
+                .filter(|_| ops.residual)
+                .map(|r| &r[i * k * q..(i + 1) * k * q]);
+            forward_single_post_into(
+                p,
+                &x[i * c * w..(i + 1) * c * w],
+                w_skc,
+                out_row,
+                a_offs,
+                bo,
+                ops,
+                bias,
+                res_row,
+            );
         },
     );
 }
@@ -231,10 +305,42 @@ pub fn forward_bf16_f32out_with_scratch(
     a_offs: &[usize],
     b_offs: &mut [usize],
 ) {
+    forward_bf16_f32out_post_with_scratch(
+        p,
+        x,
+        w_skc,
+        out,
+        threads,
+        a_offs,
+        b_offs,
+        &PostOps::none(),
+        &[],
+        None,
+    );
+}
+
+/// [`forward_bf16_f32out_with_scratch`] with the post-op epilogue fused
+/// into the width block loop (applied to the f32 accumulator block right
+/// after its BRGEMM, before the next block is computed).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_bf16_f32out_post_with_scratch(
+    p: &ConvParams,
+    x: &[Bf16],
+    w_skc: &[Bf16],
+    out: &mut [f32],
+    threads: usize,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+) {
     let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
     assert_eq!(w_skc.len(), s * k * c, "weight shape mismatch for {p}");
     assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    super::post::validate_args(ops, bias, residual, n, k, q);
     let mut no_scratch: [f32; 0] = [];
     par_batch_chunks_scratch(
         out,
@@ -246,6 +352,9 @@ pub fn forward_bf16_f32out_with_scratch(
         threads,
         |i, out_row, bo, _| {
             let xrow = &x[i * c * w..(i + 1) * c * w];
+            let res_row = residual
+                .filter(|_| ops.residual)
+                .map(|r| &r[i * k * q..(i + 1) * k * q]);
             let mut pos = 0;
             while pos < q {
                 let nb = WIDTH_BLOCK.min(q - pos);
@@ -266,6 +375,7 @@ pub fn forward_bf16_f32out_with_scratch(
                     c,
                     true,
                 );
+                apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
                 pos += nb;
             }
         },

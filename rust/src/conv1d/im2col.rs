@@ -17,6 +17,7 @@
 
 use super::gemm::gemm_f32;
 use super::params::{ConvParams, WIDTH_BLOCK};
+use super::post::{apply_block, PostOps};
 use super::threading::par_batch_chunks_scratch;
 
 /// Materialise the im2col patch matrix for one batch element: `(C·S, Q)`.
@@ -49,7 +50,25 @@ pub fn forward_im2col_single(
     col: &mut [f32],
     out: &mut [f32],
 ) {
+    forward_im2col_single_post(p, x, w_kcs, col, out, &PostOps::none(), &[], None);
+}
+
+/// [`forward_im2col_single`] with the post-op epilogue fused into the
+/// width block loop (each `(K, nb)` block gets its epilogue right after
+/// the block GEMM, while it is still cache-hot).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_im2col_single_post(
+    p: &ConvParams,
+    x: &[f32],
+    w_kcs: &[f32],
+    col: &mut [f32],
+    out: &mut [f32],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+) {
     let (c, k, s, q) = (p.c, p.k, p.s, p.q());
+    debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     im2col_single(p, x, col);
     out[..k * q].fill(0.0);
     // Blocked over the width so the GEMM micro-kernel's stack accumulator
@@ -68,6 +87,7 @@ pub fn forward_im2col_single(
             nb,
             c * s,
         );
+        apply_block(ops, bias, res_row, out, k, q, pos, nb);
         pos += nb;
     }
 }
@@ -99,6 +119,52 @@ pub fn forward_im2col_with_scratch(
         threads,
         |i, out_row, colb, _| {
             forward_im2col_single(p, &x[i * c * w..(i + 1) * c * w], w_kcs, colb, out_row);
+        },
+    );
+}
+
+/// Batched fused-epilogue im2col forward with caller-owned scratch — the
+/// plan executor's post-op entry point for the baseline kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_im2col_post_with_scratch(
+    p: &ConvParams,
+    x: &[f32],
+    w_kcs: &[f32],
+    out: &mut [f32],
+    threads: usize,
+    col: &mut [f32],
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+) {
+    let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(w_kcs.len(), k * c * s, "weight shape mismatch for {p}");
+    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    super::post::validate_args(ops, bias, residual, n, k, q);
+    let mut no_scratch: [usize; 0] = [];
+    par_batch_chunks_scratch(
+        out,
+        k * q,
+        col,
+        c * s * q,
+        &mut no_scratch[..],
+        0,
+        threads,
+        |i, out_row, colb, _| {
+            let res_row = residual
+                .filter(|_| ops.residual)
+                .map(|r| &r[i * k * q..(i + 1) * k * q]);
+            forward_im2col_single_post(
+                p,
+                &x[i * c * w..(i + 1) * c * w],
+                w_kcs,
+                colb,
+                out_row,
+                ops,
+                bias,
+                res_row,
+            );
         },
     );
 }

@@ -14,7 +14,8 @@ use super::bf16::{to_bf16, Bf16};
 use super::forward::forward_bf16;
 use super::layout::{kcs_to_skc, pad_width};
 use super::params::ConvParams;
-use super::plan::ConvPlan;
+use super::plan::{ConvPlan, PlanError};
+use super::post::PostOps;
 use crate::machine::Precision;
 
 /// Kernel implementation selector. `Display` emits the canonical registry
@@ -68,6 +69,19 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Gradients produced by one fused backward pass
+/// ([`Conv1dLayer::try_backward_fused`]).
+pub struct FusedGrads {
+    /// Input gradient `(N, C, W)` (requested via `need_gin`).
+    pub gin: Option<Vec<f32>>,
+    /// Weight gradient `(K, C, S)`.
+    pub w: Vec<f32>,
+    /// Bias gradient (`K`) — folded into the prologue sweep.
+    pub b: Vec<f32>,
+    /// Residual gradient `(N, K, Q)` (requested via `need_gres`).
+    pub res: Option<Vec<f32>>,
+}
+
 /// A 1D dilated convolution layer with owned parameters.
 ///
 /// Concurrency note: the cached plan sits behind a `Mutex`, so sharing
@@ -93,11 +107,22 @@ pub struct Conv1dLayer {
     pub precision: Precision,
     /// Threads for the batch-dimension parallelism.
     pub threads: usize,
+    /// Post-op epilogue fused by `forward_post` / `backward_fused` —
+    /// [`PostOps::none`] leaves the legacy APIs bit-identical.
+    pub post_ops: PostOps,
+    /// When set, the kernel is chosen per shape by the process-wide
+    /// autotuner ([`crate::conv1d::autotuner`]) instead of `backend`.
+    pub autotune: bool,
     w_kcs: Vec<f32>,
-    /// Per-filter bias (added by `forward_same`, framework-style).
+    /// Per-filter bias (added by `forward_same` and the fused post-op
+    /// pipeline, framework-style).
     pub bias: Vec<f32>,
-    /// Cached plan for the last-seen `(shape, backend, precision, threads)`.
-    plan: Mutex<Option<ConvPlan>>,
+    /// Cached plan for the last-seen
+    /// `(shape, backend, precision, threads, post_ops)`, tagged with
+    /// whether the autotuner chose its kernel (a pinned-backend plan must
+    /// not satisfy an `autotune` lookup, and vice versa the tag lets a
+    /// tuned plan be reused without re-consulting the table).
+    plan: Mutex<Option<(ConvPlan, bool)>>,
 }
 
 impl Clone for Conv1dLayer {
@@ -110,6 +135,8 @@ impl Clone for Conv1dLayer {
             backend: self.backend,
             precision: self.precision,
             threads: self.threads,
+            post_ops: self.post_ops,
+            autotune: self.autotune,
             w_kcs: self.w_kcs.clone(),
             bias: self.bias.clone(),
             plan: Mutex::new(None), // the clone rebuilds its plan lazily
@@ -130,6 +157,8 @@ impl Conv1dLayer {
             backend: Backend::Brgemm,
             precision: Precision::F32,
             threads: 1,
+            post_ops: PostOps::none(),
+            autotune: false,
             w_kcs,
             bias: vec![0.0; k],
             plan: Mutex::new(None),
@@ -140,7 +169,7 @@ impl Conv1dLayer {
     /// cached plan's derived layouts in place.
     pub fn set_weights(&mut self, w_kcs: Vec<f32>) {
         assert_eq!(w_kcs.len(), self.k * self.c * self.s);
-        if let Some(plan) = self.plan.get_mut().unwrap().as_mut() {
+        if let Some((plan, _)) = self.plan.get_mut().unwrap().as_mut() {
             plan.set_weights(&w_kcs);
         }
         self.w_kcs = w_kcs;
@@ -151,16 +180,31 @@ impl Conv1dLayer {
         &self.w_kcs
     }
 
+    /// Problem descriptor for a padded input of width `w` — the
+    /// `Result`-returning plan-building path (invalid geometry, e.g.
+    /// `w < (S−1)·d + 1`, is an error, not a panic).
+    pub fn try_params(&self, n: usize, w: usize) -> Result<ConvParams, PlanError> {
+        ConvParams::new(n, self.c, self.k, w, self.s, self.d).ok_or_else(|| {
+            PlanError(format!(
+                "invalid conv problem: n={n} c={} k={} w={w} s={} d={} \
+                 (need w > (S-1)*d and every dimension nonzero)",
+                self.c, self.k, self.s, self.d
+            ))
+        })
+    }
+
     /// Problem descriptor for a padded input of width `w`.
+    ///
+    /// Panics on invalid geometry; use [`Self::try_params`] for the
+    /// error-returning variant.
     pub fn params(&self, n: usize, w: usize) -> ConvParams {
-        ConvParams::new(n, self.c, self.k, w, self.s, self.d)
-            .unwrap_or_else(|| panic!("invalid conv problem: w={w} s={} d={}", self.s, self.d))
+        self.try_params(n, w).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Effective plan precision: bf16 is only meaningful on the BRGEMM
     /// backend (paper Sec. 4.3); everything else runs f32.
     fn plan_precision(&self) -> Precision {
-        if self.backend == Backend::Brgemm {
+        if self.backend == Backend::Brgemm || self.autotune {
             self.precision
         } else {
             Precision::F32
@@ -168,28 +212,128 @@ impl Conv1dLayer {
     }
 
     /// Run `f` against the cached plan, rebuilding it when the shape,
-    /// backend, precision or thread count changed since the last call.
-    fn with_plan<R>(&self, p: &ConvParams, f: impl FnOnce(&mut ConvPlan) -> R) -> R {
+    /// backend, precision, thread count or post-op spec changed since the
+    /// last call. The plan's bias is re-synced from `self.bias` on every
+    /// call (a `K`-element copy), so direct mutation of the `bias` field
+    /// can never go stale.
+    fn with_plan<R>(
+        &self,
+        p: &ConvParams,
+        f: impl FnOnce(&mut ConvPlan) -> R,
+    ) -> Result<R, PlanError> {
         let precision = self.plan_precision();
         let mut guard = self.plan.lock().unwrap();
-        let reuse = guard
-            .as_ref()
-            .is_some_and(|plan| plan.matches(p, self.backend, precision, self.threads));
+        let reuse = guard.as_ref().is_some_and(|(plan, tuned)| {
+            let kernel_ok = if self.autotune {
+                // A tuner-chosen plan is reusable without re-consulting
+                // the table (the tuner is deterministic per shape/
+                // threads/precision); a pinned-backend plan is NOT — it
+                // would silently bypass the autotuner.
+                *tuned
+                    && plan.params() == p
+                    && plan.threads() == self.threads.max(1)
+                    && plan.precision() == precision
+            } else {
+                plan.matches(p, self.backend, precision, self.threads)
+            };
+            kernel_ok && plan.post_ops() == &self.post_ops
+        });
         if !reuse {
-            let plan = ConvPlan::new(*p, self.backend, precision, self.threads, self.w_kcs.clone())
-                .unwrap_or_else(|e| panic!("{e}"));
-            *guard = Some(plan);
+            let mut plan = if self.autotune {
+                ConvPlan::tuned(*p, precision, self.threads, self.w_kcs.clone())?
+            } else {
+                ConvPlan::new(*p, self.backend, precision, self.threads, self.w_kcs.clone())?
+            };
+            plan.set_post_ops(self.post_ops);
+            *guard = Some((plan, self.autotune));
         }
-        f(guard.as_mut().expect("plan just ensured"))
+        let (plan, _) = guard.as_mut().expect("plan just ensured");
+        plan.set_bias(&self.bias);
+        Ok(f(plan))
+    }
+
+    /// Valid convolution over a **pre-padded** `(N, C, W)` input.
+    /// Returns `(N, K, Q)`. Error-returning twin of [`Self::forward`].
+    pub fn try_forward(&self, x: &[f32], n: usize, w: usize) -> Result<Vec<f32>, PlanError> {
+        let p = self.try_params(n, w)?;
+        let mut out = vec![0.0f32; n * self.k * p.q()];
+        self.with_plan(&p, |plan| plan.execute_forward_into(x, &mut out))?;
+        Ok(out)
     }
 
     /// Valid convolution over a **pre-padded** `(N, C, W)` input.
     /// Returns `(N, K, Q)`.
     pub fn forward(&self, x: &[f32], n: usize, w: usize) -> Vec<f32> {
-        let p = self.params(n, w);
+        self.try_forward(x, n, w).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fused post-op forward over a **pre-padded** input: applies
+    /// `self.post_ops` (with `self.bias`) inside the kernel's output
+    /// block loop — one pass over the output. `residual` is the
+    /// `(N, K, Q)` residual tensor when the spec has `residual` set.
+    pub fn try_forward_post(
+        &self,
+        x: &[f32],
+        residual: Option<&[f32]>,
+        n: usize,
+        w: usize,
+    ) -> Result<Vec<f32>, PlanError> {
+        let p = self.try_params(n, w)?;
         let mut out = vec![0.0f32; n * self.k * p.q()];
-        self.with_plan(&p, |plan| plan.execute_forward_into(x, &mut out));
-        out
+        self.with_plan(&p, |plan| {
+            plan.execute_forward_post_into(x, residual, &mut out)
+        })?;
+        Ok(out)
+    }
+
+    /// Fused backward through the post-op pipeline (adjoint of
+    /// [`Self::try_forward_post`]): one prologue sweep folds the
+    /// activation gradient (from the saved output `y`), the bias gradient
+    /// and the residual gradient together, then runs the kernel backward
+    /// passes. `need_gin`/`need_gres` control which gradients are
+    /// produced (the stem skips `gin`; only residual-fused layers need
+    /// `gres`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_backward_fused(
+        &self,
+        gout: &[f32],
+        y: &[f32],
+        x: &[f32],
+        n: usize,
+        w: usize,
+        need_gin: bool,
+        need_gres: bool,
+    ) -> Result<FusedGrads, PlanError> {
+        let p = self.try_params(n, w)?;
+        let mut gin = if need_gin {
+            Some(vec![0.0f32; n * self.c * w])
+        } else {
+            None
+        };
+        let mut gres = if need_gres {
+            Some(vec![0.0f32; n * self.k * p.q()])
+        } else {
+            None
+        };
+        let mut gw = vec![0.0f32; self.k * self.c * self.s];
+        let mut gb = vec![0.0f32; self.k];
+        self.with_plan(&p, |plan| {
+            plan.execute_backward_fused_into(
+                gout,
+                y,
+                x,
+                gin.as_deref_mut(),
+                &mut gw,
+                Some(&mut gb),
+                gres.as_deref_mut(),
+            )
+        })?;
+        Ok(FusedGrads {
+            gin,
+            w: gw,
+            b: gb,
+            res: gres,
+        })
     }
 
     /// Same-padded convolution + bias over an unpadded `(N, C, W)` input.
@@ -224,19 +368,39 @@ impl Conv1dLayer {
     }
 
     /// Data gradient: `gout (N, K, Q)` → `(N, C, W)` (Algorithm 3).
-    pub fn backward_data(&self, gout: &[f32], n: usize, w: usize) -> Vec<f32> {
-        let p = self.params(n, w);
+    /// Error-returning twin of [`Self::backward_data`].
+    pub fn try_backward_data(&self, gout: &[f32], n: usize, w: usize) -> Result<Vec<f32>, PlanError> {
+        let p = self.try_params(n, w)?;
         let mut gin = vec![0.0f32; n * self.c * w];
-        self.with_plan(&p, |plan| plan.execute_backward_data_into(gout, &mut gin));
-        gin
+        self.with_plan(&p, |plan| plan.execute_backward_data_into(gout, &mut gin))?;
+        Ok(gin)
+    }
+
+    /// Data gradient: `gout (N, K, Q)` → `(N, C, W)` (Algorithm 3).
+    pub fn backward_data(&self, gout: &[f32], n: usize, w: usize) -> Vec<f32> {
+        self.try_backward_data(gout, n, w)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Weight gradient in `(K, C, S)` layout (Algorithm 4).
+    /// Error-returning twin of [`Self::backward_weight`].
+    pub fn try_backward_weight(
+        &self,
+        gout: &[f32],
+        x: &[f32],
+        n: usize,
+        w: usize,
+    ) -> Result<Vec<f32>, PlanError> {
+        let p = self.try_params(n, w)?;
+        let mut gw = vec![0.0f32; self.k * self.c * self.s];
+        self.with_plan(&p, |plan| plan.execute_backward_weight_into(gout, x, &mut gw))?;
+        Ok(gw)
     }
 
     /// Weight gradient in `(K, C, S)` layout (Algorithm 4).
     pub fn backward_weight(&self, gout: &[f32], x: &[f32], n: usize, w: usize) -> Vec<f32> {
-        let p = self.params(n, w);
-        let mut gw = vec![0.0f32; self.k * self.c * self.s];
-        self.with_plan(&p, |plan| plan.execute_backward_weight_into(gout, x, &mut gw));
-        gw
+        self.try_backward_weight(gout, x, n, w)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Bias gradient: `Σ_{n,q} gout[n,k,q]` per filter.
@@ -375,6 +539,81 @@ mod tests {
         let direct_out = l.forward(&x, n, w);
         for (a, b) in direct_out.iter().zip(&f32_out) {
             assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn invalid_geometry_is_an_error_not_a_panic() {
+        // w < (S-1)*d + 1: no output column fits.
+        let l = layer(3, 4, 5, 2); // span = 9
+        let x = rnd(3 * 8, 40);
+        let err = l.try_forward(&x, 1, 8).unwrap_err();
+        assert!(err.to_string().contains("invalid conv problem"), "{err}");
+        assert!(l.try_params(1, 8).is_err());
+        assert!(l.try_params(0, 100).is_err());
+        assert!(l.try_params(1, 9).is_ok()); // exactly one output column
+        assert!(l.try_backward_data(&[], 1, 8).is_err());
+        assert!(l.try_backward_weight(&[], &[], 1, 8).is_err());
+        assert!(l.try_forward_post(&x, None, 1, 8).is_err());
+        assert!(l
+            .try_backward_fused(&[], &[], &[], 1, 8, true, false)
+            .is_err());
+    }
+
+    #[test]
+    fn forward_post_fuses_bias_and_relu() {
+        let (n, w) = (2, 120);
+        let mut l = layer(3, 4, 5, 2);
+        l.bias = vec![0.1, -0.2, 0.3, -0.4];
+        let x = rnd(n * 3 * w, 41);
+        let q = l.params(n, w).q();
+        // Unfused oracle: forward, then bias, then relu.
+        let mut want = l.forward(&x, n, w);
+        for ib in 0..n {
+            for ik in 0..4 {
+                for v in &mut want[(ib * 4 + ik) * q..(ib * 4 + ik + 1) * q] {
+                    *v = (*v + l.bias[ik]).max(0.0);
+                }
+            }
+        }
+        l.post_ops = PostOps::bias_relu();
+        let got = l.try_forward_post(&x, None, n, w).unwrap();
+        assert_eq!(got, want, "fused bias+relu must match the 3-pass oracle");
+        // PostOps::none() keeps the fused entry point bit-identical to
+        // the raw forward.
+        l.post_ops = PostOps::none();
+        let raw = l.try_forward_post(&x, None, n, w).unwrap();
+        assert_eq!(raw, l.forward(&x, n, w));
+    }
+
+    #[test]
+    fn autotuned_layer_matches_fixed_backend() {
+        let (n, w) = (2, 150);
+        let mut l = layer(4, 5, 7, 2);
+        let x = rnd(n * 4 * w, 42);
+        let want = l.forward(&x, n, w); // caches a pinned brgemm plan
+        // Flipping autotune on must NOT reuse the pinned plan: the next
+        // forward consults the tuner, which memoizes this shape's entry.
+        l.autotune = true;
+        let got = l.forward(&x, n, w);
+        let p = l.params(n, w);
+        assert!(
+            crate::conv1d::autotuner()
+                .entry(&p, l.threads, crate::machine::Precision::F32)
+                .is_some(),
+            "autotuned forward must consult the tuner, not the stale plan"
+        );
+        for (g, ww) in got.iter().zip(&want) {
+            assert!((g - ww).abs() < 1e-4 * (1.0 + ww.abs()), "{g} vs {ww}");
+        }
+        // Repeated calls reuse the tuned plan and stay deterministic.
+        assert_eq!(l.forward(&x, n, w), got);
+        // Flipping autotune back off must likewise drop the tuned plan.
+        l.autotune = false;
+        l.backend = Backend::Direct;
+        let direct = l.forward(&x, n, w);
+        for (g, ww) in direct.iter().zip(&want) {
+            assert!((g - ww).abs() < 1e-4 * (1.0 + ww.abs()), "{g} vs {ww}");
         }
     }
 

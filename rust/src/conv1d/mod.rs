@@ -11,8 +11,13 @@
 //! * [`bf16`]    — BFloat16 storage + `VDPBF16PS`-semantics kernels
 //! * [`im2col`]  — the library baseline (oneDNN-analog)
 //! * [`direct`]  — naive oracle / unoptimised floor
+//! * [`post`]    — the fused post-op pipeline (bias/activation/residual/
+//!   scale epilogues applied inside each kernel's output-block loop,
+//!   DESIGN.md §5b)
 //! * [`plan`]    — `ConvPlan`/`ConvKernel`: the setup-once, run-many
 //!   plan/executor API and the string-named backend registry (DESIGN.md §5a)
+//! * [`tune`]    — shape-keyed kernel autotuner with a persistent
+//!   (`util::json`) tuning table
 //! * [`layer`]   — the framework-facing `Conv1dLayer` object (a thin
 //!   compatibility wrapper over a cached plan)
 //! * [`threading`] — batch-dimension parallelism
@@ -29,11 +34,15 @@ pub mod layer;
 pub mod layout;
 pub mod params;
 pub mod plan;
+pub mod post;
 pub mod threading;
+pub mod tune;
 
-pub use layer::{Backend, Conv1dLayer};
+pub use layer::{Backend, Conv1dLayer, FusedGrads};
 pub use params::{ConvParams, WIDTH_BLOCK};
-pub use plan::{kernels, lookup_kernel, ConvKernel, ConvPlan, PlanError, Workspace};
+pub use plan::{kernels, lookup_kernel, ConvKernel, ConvPlan, PlanError, PostOpArgs, Workspace};
+pub use post::{Activation, PostOps};
+pub use tune::{autotuner, Autotuner, TuneEntry};
 
 /// Deterministic pseudo-random test vectors (splitmix64-derived), shared by
 /// unit tests, integration tests and benches.

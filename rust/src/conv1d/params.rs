@@ -29,15 +29,27 @@ pub struct ConvParams {
     pub s: usize,
     /// Dilation `d` (standard convolution is `d = 1`).
     pub d: usize,
+    /// Output stride (subsampling; the paper's layer is stride 1). The
+    /// kernels compute at stride 1; stride > 1 is served generically by
+    /// the plan executor, which subsamples inside the post-op epilogue.
+    pub stride: usize,
 }
 
 impl ConvParams {
-    /// Construct and validate a problem descriptor.
+    /// Construct and validate a problem descriptor (stride 1).
     ///
     /// Returns `None` if any dimension is zero or the input is too narrow
     /// to produce at least one output column.
     pub fn new(n: usize, c: usize, k: usize, w: usize, s: usize, d: usize) -> Option<Self> {
-        let p = ConvParams { n, c, k, w, s, d };
+        let p = ConvParams {
+            n,
+            c,
+            k,
+            w,
+            s,
+            d,
+            stride: 1,
+        };
         if n == 0 || c == 0 || k == 0 || w == 0 || s == 0 || d == 0 {
             return None;
         }
@@ -47,10 +59,27 @@ impl ConvParams {
         Some(p)
     }
 
-    /// Output width `Q = W − (S−1)·d` (paper eq. 2, valid convolution).
+    /// The same problem at a different output stride. Returns `None` for a
+    /// zero stride.
+    pub fn with_stride(self, stride: usize) -> Option<Self> {
+        if stride == 0 {
+            return None;
+        }
+        Some(ConvParams { stride, ..self })
+    }
+
+    /// The stride-1 twin of this problem — the geometry the kernels
+    /// actually compute; the plan subsamples its output for `stride > 1`.
+    #[inline]
+    pub fn unit_stride(&self) -> Self {
+        ConvParams { stride: 1, ..*self }
+    }
+
+    /// Output width `Q = ⌊(W − (S−1)·d − 1) / stride⌋ + 1` (paper eq. 2 at
+    /// stride 1, where it reduces to `W − (S−1)·d`).
     #[inline]
     pub fn q(&self) -> usize {
-        self.w - (self.s - 1) * self.d
+        (self.w - (self.s - 1) * self.d - 1) / self.stride + 1
     }
 
     /// Receptive-field span of the dilated filter: `(S−1)·d + 1` input
@@ -127,15 +156,13 @@ impl std::fmt::Display for ConvParams {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "N{}·C{}·K{}·W{}·S{}·d{} (Q={})",
-            self.n,
-            self.c,
-            self.k,
-            self.w,
-            self.s,
-            self.d,
-            self.q()
-        )
+            "N{}·C{}·K{}·W{}·S{}·d{}",
+            self.n, self.c, self.k, self.w, self.s, self.d,
+        )?;
+        if self.stride != 1 {
+            write!(f, "·st{}", self.stride)?;
+        }
+        write!(f, " (Q={})", self.q())
     }
 }
 
@@ -175,6 +202,21 @@ mod tests {
     fn flops_formula() {
         let p = ConvParams::new(1, 15, 15, 1000 + 50 * 8, 51, 8).unwrap();
         assert_eq!(p.flops(), 2 * 15 * 15 * 1000 * 51);
+    }
+
+    #[test]
+    fn strided_output_width() {
+        let p = ConvParams::new(1, 3, 4, 20, 3, 2).unwrap(); // span 5, Q=16
+        assert_eq!(p.q(), 16);
+        let p2 = p.with_stride(2).unwrap();
+        assert_eq!(p2.q(), 8); // positions 0,2,..,14
+        let p3 = p.with_stride(3).unwrap();
+        assert_eq!(p3.q(), 6); // positions 0,3,..,15
+        assert_eq!(p2.unit_stride(), p);
+        assert!(p.with_stride(0).is_none());
+        // Display mentions the stride only when it is not 1.
+        assert!(!format!("{p}").contains("st"));
+        assert!(format!("{p2}").contains("st2"));
     }
 
     #[test]

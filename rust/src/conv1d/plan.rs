@@ -21,14 +21,18 @@
 use super::backward_data::{backward_data_a_offs, backward_data_with_scratch};
 use super::backward_weight::backward_weight_with_scratch;
 use super::bf16::{to_bf16, to_bf16_into, Bf16};
-use super::direct::{backward_data_direct, backward_weight_direct_into, forward_direct};
-use super::forward::{forward_a_offs, forward_bf16_f32out_with_scratch, forward_with_scratch};
-use super::im2col::forward_im2col_with_scratch;
+use super::direct::{backward_data_direct, backward_weight_direct_into, forward_direct_post};
+use super::forward::{
+    forward_a_offs, forward_bf16_f32out_post_with_scratch, forward_post_with_scratch,
+    forward_with_scratch,
+};
+use super::im2col::forward_im2col_post_with_scratch;
 use super::layer::Backend;
 use super::layout::{
     kcs_to_sck_flipped_into, kcs_to_skc_into, pad_width_into, unpad_width_into,
 };
 use super::params::ConvParams;
+use super::post::{self, PostOps};
 use crate::machine::Precision;
 
 /// Plan construction failure (invalid shape, unknown backend, or a
@@ -113,6 +117,13 @@ pub struct Workspace {
     padded_in: Vec<f32>,
     gx_padded: Vec<f32>,
     out: Vec<f32>,
+    /// Fused-backward prologue buffer (`N·K·Q`): the activation-masked,
+    /// scaled gradient the kernels consume. Grown lazily on first fused
+    /// backward.
+    gpre: Vec<f32>,
+    /// Stride-1 staging output for `stride > 1` plans (`N·K·Q₁`). Grown
+    /// lazily on first strided execution.
+    full: Vec<f32>,
 }
 
 impl Workspace {
@@ -128,6 +139,8 @@ impl Workspace {
             padded_in: vec![0.0; spec.padded_in],
             gx_padded: vec![0.0; spec.gx_padded],
             out: vec![0.0; spec.out],
+            gpre: Vec::new(),
+            full: Vec::new(),
         }
     }
 
@@ -140,7 +153,9 @@ impl Workspace {
                 + self.gw_partials.len()
                 + self.padded_in.len()
                 + self.gx_padded.len()
-                + self.out.len())
+                + self.out.len()
+                + self.gpre.len()
+                + self.full.len())
                 * 4
             + self.xb.len() * 2
     }
@@ -165,6 +180,15 @@ fn gout_padded_len(p: &ConvParams) -> usize {
     p.n * p.k * (p.q() + 2 * (p.s - 1) * p.d)
 }
 
+/// The post-op context a plan hands its kernel for one fused forward
+/// call: the epilogue spec, the plan's per-filter bias, and the optional
+/// caller-supplied residual tensor (same shape as the output).
+pub struct PostOpArgs<'a> {
+    pub ops: &'a PostOps,
+    pub bias: &'a [f32],
+    pub residual: Option<&'a [f32]>,
+}
+
 /// A conv1d compute backend: the kernel contract behind a [`ConvPlan`].
 ///
 /// Implementations are stateless unit structs registered in [`kernels`];
@@ -173,6 +197,14 @@ fn gout_padded_len(p: &ConvParams) -> usize {
 pub trait ConvKernel: Send + Sync {
     /// Canonical registry name (round-trips through [`lookup_kernel`]).
     fn name(&self) -> &'static str;
+
+    /// Storage precision of this kernel's forward pass. The plan derives
+    /// its precision from this, and the autotuner only ranks kernels of
+    /// the requested precision against each other — a reduced-precision
+    /// kernel must never win an f32-keyed tuning entry.
+    fn precision(&self) -> Precision {
+        Precision::F32
+    }
 
     /// Whether this kernel can run the given problem. All in-tree kernels
     /// are fully generic today; the hook exists so specialised kernels
@@ -204,6 +236,28 @@ pub trait ConvKernel: Send + Sync {
         out: &mut [f32],
         threads: usize,
     );
+
+    /// Fused-epilogue forward: like [`ConvKernel::forward`] but with the
+    /// post-ops applied inside the kernel's output-block loop, so a
+    /// `bias + relu` forward is one pass over the output. The default
+    /// implementation is the unfused fallback (kernel pass + reference
+    /// sweep) so out-of-tree kernels stay correct; every in-tree kernel
+    /// overrides it with the truly fused loop. Only ever invoked at
+    /// stride 1 (the plan serves `stride > 1` by subsampling).
+    #[allow(clippy::too_many_arguments)]
+    fn forward_post(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        args: &PostOpArgs<'_>,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        self.forward(p, w, ws, x, out, threads);
+        post::apply_reference(args.ops, args.bias, args.residual, out, p.n, p.k, p.q());
+    }
 
     /// Data gradient `(N, K, Q) → (N, C, W)`, overwriting `gin`.
     fn backward_data(
@@ -258,6 +312,30 @@ impl ConvKernel for BrgemmKernel {
         threads: usize,
     ) {
         forward_with_scratch(p, x, &w.skc, out, threads, &ws.a_offs_fwd, &mut ws.b_offs);
+    }
+
+    fn forward_post(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        args: &PostOpArgs<'_>,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        forward_post_with_scratch(
+            p,
+            x,
+            &w.skc,
+            out,
+            threads,
+            &ws.a_offs_fwd,
+            &mut ws.b_offs,
+            args.ops,
+            args.bias,
+            args.residual,
+        );
     }
 
     fn backward_data(
@@ -324,7 +402,40 @@ impl ConvKernel for Im2colKernel {
         out: &mut [f32],
         threads: usize,
     ) {
-        forward_im2col_with_scratch(p, x, &w.kcs, out, threads, &mut ws.col);
+        forward_im2col_post_with_scratch(
+            p,
+            x,
+            &w.kcs,
+            out,
+            threads,
+            &mut ws.col,
+            &PostOps::none(),
+            &[],
+            None,
+        );
+    }
+
+    fn forward_post(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        args: &PostOpArgs<'_>,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        forward_im2col_post_with_scratch(
+            p,
+            x,
+            &w.kcs,
+            out,
+            threads,
+            &mut ws.col,
+            args.ops,
+            args.bias,
+            args.residual,
+        );
     }
 
     fn backward_data(
@@ -375,7 +486,20 @@ impl ConvKernel for DirectKernel {
         out: &mut [f32],
         _threads: usize,
     ) {
-        forward_direct(p, x, &w.kcs, out);
+        forward_direct_post(p, x, &w.kcs, out, &PostOps::none(), &[], None);
+    }
+
+    fn forward_post(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        _ws: &mut Workspace,
+        x: &[f32],
+        args: &PostOpArgs<'_>,
+        out: &mut [f32],
+        _threads: usize,
+    ) {
+        forward_direct_post(p, x, &w.kcs, out, args.ops, args.bias, args.residual);
     }
 
     fn backward_data(
@@ -417,6 +541,10 @@ impl ConvKernel for Bf16Kernel {
         "bf16"
     }
 
+    fn precision(&self) -> Precision {
+        Precision::Bf16
+    }
+
     fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
         let t = workers(p, threads);
         WorkspaceSpec {
@@ -438,7 +566,7 @@ impl ConvKernel for Bf16Kernel {
         threads: usize,
     ) {
         to_bf16_into(x, &mut ws.xb);
-        forward_bf16_f32out_with_scratch(
+        forward_bf16_f32out_post_with_scratch(
             p,
             &ws.xb,
             &w.skc_bf16,
@@ -446,6 +574,34 @@ impl ConvKernel for Bf16Kernel {
             threads,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
+            &PostOps::none(),
+            &[],
+            None,
+        );
+    }
+
+    fn forward_post(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        args: &PostOpArgs<'_>,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        to_bf16_into(x, &mut ws.xb);
+        forward_bf16_f32out_post_with_scratch(
+            p,
+            &ws.xb,
+            &w.skc_bf16,
+            out,
+            threads,
+            &ws.a_offs_fwd,
+            &mut ws.b_offs,
+            args.ops,
+            args.bias,
+            args.residual,
         );
     }
 
@@ -501,6 +657,10 @@ pub fn lookup_kernel(name: &str) -> Option<&'static dyn ConvKernel> {
 /// padding geometry and workspace, built once and executed many times.
 pub struct ConvPlan {
     p: ConvParams,
+    /// Stride-1 twin of `p` — the geometry the kernels compute; equals
+    /// `p` for stride-1 plans. `stride > 1` is served by subsampling the
+    /// stride-1 output inside the (fused) epilogue pass.
+    kp: ConvParams,
     kernel: &'static dyn ConvKernel,
     precision: Precision,
     threads: usize,
@@ -508,6 +668,8 @@ pub struct ConvPlan {
     pad: (usize, usize),
     weights: PlanWeights,
     bias: Vec<f32>,
+    /// Post-op epilogue executed by the fused forward/backward paths.
+    post: PostOps,
     /// Whether `ws.padded_in` holds a valid input from
     /// `execute_forward_same_into` (guards the cached backward-weight).
     same_cached: bool,
@@ -562,6 +724,20 @@ impl ConvPlan {
         Self::with_kernel(p, k, threads, w_kcs)
     }
 
+    /// Build a plan whose kernel is chosen by the in-process autotuner
+    /// ([`super::tune::autotuner`]): the first call for a shape
+    /// micro-benchmarks the candidates, later calls reuse the memoized
+    /// winner.
+    pub fn tuned(
+        p: ConvParams,
+        precision: Precision,
+        threads: usize,
+        w_kcs: Vec<f32>,
+    ) -> Result<ConvPlan, PlanError> {
+        let kernel = super::tune::autotuner().choose(&p, threads, precision);
+        Self::with_kernel(p, kernel, threads, w_kcs)
+    }
+
     /// Build a plan for an explicit kernel (registry or caller-owned).
     pub fn with_kernel(
         p: ConvParams,
@@ -578,23 +754,23 @@ impl ConvPlan {
                 p.s
             )));
         }
-        if !kernel.supports(&p) {
+        // Kernels compute at stride 1; capability, workspace and offset
+        // tables are all judged against the stride-1 twin the kernel
+        // will actually execute (the plan subsamples the output).
+        let kp = p.unit_stride();
+        if !kernel.supports(&kp) {
             return Err(PlanError(format!(
-                "kernel '{}' does not support {p}",
+                "kernel '{}' does not support {kp}",
                 kernel.name()
             )));
         }
         let threads = threads.max(1);
-        let precision = if kernel.name() == "bf16" {
-            Precision::Bf16
-        } else {
-            Precision::F32
-        };
+        let precision = kernel.precision();
         // The plan-level padded_in / gx_padded / out buffers are grown
         // lazily by the same-padding and owned-output APIs — `_into`-only
         // callers (benches, sweeps) never pay for them.
-        let spec = kernel.workspace_spec(&p, threads);
-        let ws = Workspace::from_spec(&p, &spec);
+        let spec = kernel.workspace_spec(&kp, threads);
+        let ws = Workspace::from_spec(&kp, &spec);
         let mut weights = PlanWeights {
             skc: vec![0.0; w_kcs.len()],
             sck_flip: vec![0.0; w_kcs.len()],
@@ -605,11 +781,13 @@ impl ConvPlan {
         Ok(ConvPlan {
             pad: ConvParams::same_pad(p.s, p.d),
             p,
+            kp,
             kernel,
             precision,
             threads,
             weights,
             bias: Vec::new(),
+            post: PostOps::none(),
             same_cached: false,
             ws,
         })
@@ -686,7 +864,8 @@ impl ConvPlan {
         &self.weights.kcs
     }
 
-    /// Set the per-filter bias added by the same-padding forward.
+    /// Set the per-filter bias added by the same-padding forward and the
+    /// fused post-op pipeline.
     pub fn set_bias(&mut self, bias: &[f32]) {
         assert_eq!(bias.len(), self.p.k, "bias length mismatch");
         if self.bias.len() != self.p.k {
@@ -696,14 +875,103 @@ impl ConvPlan {
         }
     }
 
+    /// Builder: attach a post-op epilogue spec at construction time.
+    pub fn with_post_ops(mut self, ops: PostOps) -> ConvPlan {
+        self.post = ops;
+        self
+    }
+
+    /// Replace the post-op epilogue spec.
+    pub fn set_post_ops(&mut self, ops: PostOps) {
+        self.post = ops;
+    }
+
+    /// The post-op epilogue this plan fuses into
+    /// [`Self::execute_forward_post_into`] and the fused backward.
+    pub fn post_ops(&self) -> &PostOps {
+        &self.post
+    }
+
     /// Forward over a pre-padded `(N, C, W)` input into a caller-owned
-    /// `(N, K, Q)` buffer. Zero heap allocations in steady state.
+    /// `(N, K, Q)` buffer — raw convolution, no post-ops. Zero heap
+    /// allocations in steady state.
     pub fn execute_forward_into(&mut self, x: &[f32], out: &mut [f32]) {
+        self.forward_dispatch(x, None, out, &PostOps::none());
+    }
+
+    /// Fused-epilogue forward: applies this plan's [`PostOps`] (scale,
+    /// bias, residual add, activation) **inside** the kernel's output
+    /// block loop — one pass over the output tensor instead of separate
+    /// bias/activation sweeps. `residual` must be `Some` (shape
+    /// `(N, K, Q)`) iff the spec has `residual` set. Zero heap
+    /// allocations in steady state.
+    pub fn execute_forward_post_into(
+        &mut self,
+        x: &[f32],
+        residual: Option<&[f32]>,
+        out: &mut [f32],
+    ) {
+        let post = self.post;
+        self.forward_dispatch(x, residual, out, &post);
+    }
+
+    fn forward_dispatch(
+        &mut self,
+        x: &[f32],
+        residual: Option<&[f32]>,
+        out: &mut [f32],
+        ops: &PostOps,
+    ) {
         let (n, c, k, w, q) = (self.p.n, self.p.c, self.p.k, self.p.w, self.p.q());
         assert_eq!(x.len(), n * c * w, "input shape mismatch for {}", self.p);
         assert_eq!(out.len(), n * k * q, "output shape mismatch for {}", self.p);
+        if ops.bias {
+            assert_eq!(
+                self.bias.len(),
+                k,
+                "bias post-op without a plan bias (call set_bias) for {}",
+                self.p
+            );
+        }
+        let res = residual.filter(|_| ops.residual);
+        if ops.residual {
+            let r = res.expect("residual post-op requires a residual tensor");
+            assert_eq!(r.len(), n * k * q, "residual shape mismatch for {}", self.p);
+        }
+        if self.p.stride == 1 {
+            let args = PostOpArgs {
+                ops,
+                bias: &self.bias,
+                residual: res,
+            };
+            self.kernel
+                .forward_post(&self.kp, &self.weights, &mut self.ws, x, &args, out, self.threads);
+            return;
+        }
+        // stride > 1: the kernel computes the stride-1 output into the
+        // staging buffer; one epilogue pass (still fused with the
+        // post-ops) subsamples it into `out`.
+        let q1 = self.kp.q();
+        let stride = self.p.stride;
+        let mut full = std::mem::take(&mut self.ws.full);
+        ensure_len(&mut full, n * k * q1);
         self.kernel
-            .forward(&self.p, &self.weights, &mut self.ws, x, out, self.threads);
+            .forward(&self.kp, &self.weights, &mut self.ws, x, &mut full, self.threads);
+        for row in 0..n * k {
+            let full_row = &full[row * q1..(row + 1) * q1];
+            let out_row = &mut out[row * q..(row + 1) * q];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                *o = full_row[j * stride];
+            }
+            // The epilogue math lives in post::apply_segment only, so the
+            // strided path can never drift from the fused kernels'.
+            if !ops.is_none() {
+                let bias_k = if ops.bias { self.bias[row % k] } else { 0.0 };
+                let res_seg = res.map(|r| &r[row * q..(row + 1) * q]);
+                post::apply_segment(ops, bias_k, res_seg, out_row);
+            }
+        }
+        self.ws.full = full;
     }
 
     /// Forward into the plan's owned output buffer; returns it as a
@@ -723,6 +991,7 @@ impl ConvPlan {
     /// workspace for [`Self::execute_backward_weight_cached_into`].
     pub fn execute_forward_same_into(&mut self, x: &[f32], out: &mut [f32]) {
         let (n, c, k) = (self.p.n, self.p.c, self.p.k);
+        assert_eq!(self.p.stride, 1, "same-padding requires stride 1");
         let wu = self.unpadded_width();
         assert_eq!(
             self.p.q(),
@@ -760,14 +1029,25 @@ impl ConvPlan {
         let (n, c, k, w, q) = (self.p.n, self.p.c, self.p.k, self.p.w, self.p.q());
         assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {}", self.p);
         assert_eq!(gin.len(), n * c * w, "grad-in shape mismatch for {}", self.p);
-        self.kernel.backward_data(
-            &self.p,
-            &self.weights,
-            &mut self.ws,
-            gout,
-            gin,
-            self.threads,
-        );
+        self.execute_backward_data_into_raw(gout, gin);
+    }
+
+    /// Scatter a strided `(N, K, Q)` output-domain tensor onto the
+    /// stride-1 grid `(N, K, Q₁)` (zeros between the strided positions) —
+    /// the adjoint of the forward subsampling.
+    fn scatter_to_unit_stride(&self, gout: &[f32], full: &mut Vec<f32>) {
+        let (n, k, q) = (self.p.n, self.p.k, self.p.q());
+        let (q1, stride) = (self.kp.q(), self.p.stride);
+        ensure_len(full, n * k * q1);
+        for (full_row, gout_row) in full.chunks_mut(q1).zip(gout.chunks(q)) {
+            for (j1, v) in full_row.iter_mut().enumerate() {
+                *v = if j1 % stride == 0 && j1 / stride < q {
+                    gout_row[j1 / stride]
+                } else {
+                    0.0
+                };
+            }
+        }
     }
 
     /// Same-padding data gradient: computes the padded `(N, C, W)` data
@@ -799,15 +1079,187 @@ impl ConvPlan {
         assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {}", self.p);
         assert_eq!(x.len(), n * c * w, "input shape mismatch for {}", self.p);
         assert_eq!(gw.len(), k * c * s, "grad-weight shape mismatch for {}", self.p);
-        self.kernel.backward_weight(
-            &self.p,
-            &self.weights,
-            &mut self.ws,
-            gout,
-            x,
-            gw,
-            self.threads,
+        self.execute_backward_weight_into_raw(gout, x, gw);
+    }
+
+    /// Fused backward through the post-op pipeline — the adjoint of
+    /// [`Self::execute_forward_post_into`]. A single prologue sweep turns
+    /// `gout` (the gradient w.r.t. the post-op output) into the
+    /// activation-masked, scaled convolution gradient, folding the bias
+    /// gradient and the residual gradient into that same sweep; the
+    /// kernel backward passes then consume it directly — no separate
+    /// mask/bias sweeps over the gradient tensor.
+    ///
+    /// * `y` — the **saved forward output**: activation gradients are
+    ///   reconstructed from it (`relu': y > 0`, `sigmoid': y·(1−y)`), so
+    ///   no pre-activation tensor is ever materialised;
+    /// * `x` — the forward input `(N, C, W)` (pre-padded);
+    /// * `gin` `(N, C, W)`, `gb` (`K`, overwritten) and `gres`
+    ///   `(N, K, Q)` are filled when `Some`; `gw` `(K, C, S)` always.
+    ///   A requested `gb`/`gres` whose op is **absent from the spec** is
+    ///   zeroed — a parameter that never entered the forward has zero
+    ///   gradient.
+    ///
+    /// Zero heap allocations in steady state (the prologue buffer is
+    /// grown once on first use).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_backward_fused_into(
+        &mut self,
+        gout: &[f32],
+        y: &[f32],
+        x: &[f32],
+        gin: Option<&mut [f32]>,
+        gw: &mut [f32],
+        mut gb: Option<&mut [f32]>,
+        mut gres: Option<&mut [f32]>,
+    ) {
+        let (n, c, k, s, w, q) = (
+            self.p.n,
+            self.p.c,
+            self.p.k,
+            self.p.s,
+            self.p.w,
+            self.p.q(),
         );
+        assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {}", self.p);
+        assert_eq!(y.len(), n * k * q, "saved-output shape mismatch for {}", self.p);
+        assert_eq!(x.len(), n * c * w, "input shape mismatch for {}", self.p);
+        assert_eq!(gw.len(), k * c * s, "grad-weight shape mismatch for {}", self.p);
+        if let Some(gin) = gin.as_deref() {
+            assert_eq!(gin.len(), n * c * w, "grad-in shape mismatch for {}", self.p);
+        }
+        if let Some(gb) = gb.as_deref() {
+            assert_eq!(gb.len(), k, "bias-grad length mismatch for {}", self.p);
+        }
+        if let Some(gr) = gres.as_deref() {
+            assert_eq!(gr.len(), n * k * q, "residual-grad shape mismatch for {}", self.p);
+        }
+        if let Some(gb) = gb.as_deref_mut() {
+            gb.fill(0.0);
+        }
+        let post = self.post;
+        // Ops absent from the spec did not participate in the forward, so
+        // their gradients are zero — don't let the prologue fill them.
+        if !post.residual {
+            if let Some(gr) = gres.as_deref_mut() {
+                gr.fill(0.0);
+            }
+        }
+        let mut gpre = std::mem::take(&mut self.ws.gpre);
+        ensure_len(&mut gpre, n * k * q);
+        post::backward_prologue(
+            &post,
+            gout,
+            y,
+            &mut gpre,
+            n,
+            k,
+            q,
+            if post.bias { gb } else { None },
+            if post.residual { gres } else { None },
+        );
+        if self.p.stride == 1 {
+            if let Some(gin) = gin {
+                self.kernel.backward_data(
+                    &self.kp,
+                    &self.weights,
+                    &mut self.ws,
+                    &gpre,
+                    gin,
+                    self.threads,
+                );
+            }
+            self.kernel.backward_weight(
+                &self.kp,
+                &self.weights,
+                &mut self.ws,
+                &gpre,
+                x,
+                gw,
+                self.threads,
+            );
+        } else {
+            // One scatter onto the stride-1 grid serves both kernel
+            // backward passes.
+            let mut full = std::mem::take(&mut self.ws.full);
+            self.scatter_to_unit_stride(&gpre, &mut full);
+            if let Some(gin) = gin {
+                self.kernel.backward_data(
+                    &self.kp,
+                    &self.weights,
+                    &mut self.ws,
+                    &full,
+                    gin,
+                    self.threads,
+                );
+            }
+            self.kernel.backward_weight(
+                &self.kp,
+                &self.weights,
+                &mut self.ws,
+                &full,
+                x,
+                gw,
+                self.threads,
+            );
+            self.ws.full = full;
+        }
+        self.ws.gpre = gpre;
+    }
+
+    /// Backward-data on an already-prologued gradient (no shape asserts
+    /// beyond the dispatch; shared by the raw and fused paths).
+    fn execute_backward_data_into_raw(&mut self, gpre: &[f32], gin: &mut [f32]) {
+        if self.p.stride == 1 {
+            self.kernel.backward_data(
+                &self.kp,
+                &self.weights,
+                &mut self.ws,
+                gpre,
+                gin,
+                self.threads,
+            );
+        } else {
+            let mut full = std::mem::take(&mut self.ws.full);
+            self.scatter_to_unit_stride(gpre, &mut full);
+            self.kernel.backward_data(
+                &self.kp,
+                &self.weights,
+                &mut self.ws,
+                &full,
+                gin,
+                self.threads,
+            );
+            self.ws.full = full;
+        }
+    }
+
+    /// Backward-weight on an already-prologued gradient.
+    fn execute_backward_weight_into_raw(&mut self, gpre: &[f32], x: &[f32], gw: &mut [f32]) {
+        if self.p.stride == 1 {
+            self.kernel.backward_weight(
+                &self.kp,
+                &self.weights,
+                &mut self.ws,
+                gpre,
+                x,
+                gw,
+                self.threads,
+            );
+        } else {
+            let mut full = std::mem::take(&mut self.ws.full);
+            self.scatter_to_unit_stride(gpre, &mut full);
+            self.kernel.backward_weight(
+                &self.kp,
+                &self.weights,
+                &mut self.ws,
+                &full,
+                x,
+                gw,
+                self.threads,
+            );
+            self.ws.full = full;
+        }
     }
 
     /// Weight gradient against the padded input cached by the last
@@ -1018,6 +1470,67 @@ mod tests {
         let fixed = (forward_a_offs(&p).len() + backward_data_a_offs(&p).len())
             * std::mem::size_of::<usize>();
         assert_eq!(kernel.workspace_bytes(&p, 1) + fixed, im2col.workspace_bytes());
+    }
+
+    #[test]
+    fn fused_post_ops_match_reference_sweep_bit_exact() {
+        let (p, wt, x) = problem();
+        let bias = rnd(p.k, 77);
+        let res = rnd(p.n * p.k * p.q(), 78);
+        let combos = [
+            PostOps::none(),
+            PostOps::bias(),
+            PostOps::bias_relu(),
+            PostOps::parse("bias_sigmoid").unwrap(),
+            PostOps::bias_relu_residual().with_scale(0.5),
+        ];
+        for name in ["brgemm", "im2col", "direct", "bf16"] {
+            for &ops in combos.iter() {
+                let mut plan = ConvPlan::by_name(p, name, 1, wt.clone())
+                    .unwrap()
+                    .with_post_ops(ops);
+                plan.set_bias(&bias);
+                let residual = if ops.residual { Some(&res[..]) } else { None };
+                let mut fused = vec![0.0; p.n * p.k * p.q()];
+                plan.execute_forward_post_into(&x, residual, &mut fused);
+                // Oracle: the same plan's raw forward + the unfused
+                // reference sweep. The fused path reorders nothing, so
+                // the comparison is bit-exact per kernel.
+                let mut want = vec![0.0; p.n * p.k * p.q()];
+                plan.execute_forward_into(&x, &mut want);
+                post::apply_reference(&ops, &bias, residual, &mut want, p.n, p.k, p.q());
+                assert_eq!(fused, want, "{name} / {ops}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_plans_subsample_the_unit_stride_output() {
+        let p1 = ConvParams::new(2, 3, 4, 50, 5, 2).unwrap(); // Q = 42
+        let p2 = p1.with_stride(2).unwrap(); // Q = 21
+        let wt = rnd(4 * 3 * 5, 5);
+        let x = rnd(2 * 3 * 50, 6);
+        let mut full = vec![0.0; 2 * 4 * p1.q()];
+        ConvPlan::by_name(p1, "brgemm", 1, wt.clone())
+            .unwrap()
+            .execute_forward_into(&x, &mut full);
+        for name in ["brgemm", "im2col", "direct", "bf16"] {
+            let mut plan = ConvPlan::by_name(p2, name, 1, wt.clone()).unwrap();
+            assert_eq!(plan.params().q(), 21);
+            let mut out = vec![0.0; 2 * 4 * p2.q()];
+            plan.execute_forward_into(&x, &mut out);
+            let tol = if name == "bf16" { 4e-2 } else { 1e-4 };
+            for row in 0..2 * 4 {
+                for j in 0..p2.q() {
+                    let want = full[row * p1.q() + j * 2];
+                    let got = out[row * p2.q() + j];
+                    assert!(
+                        (got - want).abs() < tol * (1.0 + want.abs()),
+                        "{name} row {row} col {j}: {got} vs {want}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Post-op pipeline: the fused epilogue applied inside each kernel's
+//! output-block loop (bias add, activation, residual add, output scale).
+//!
+//! The paper's end-to-end speedup depends on keeping the output block hot:
+//! bias and activation are applied while the freshly-computed block still
+//! sits in cache, instead of as separate full-tensor sweeps afterwards
+//! (Georganas et al. and cuDNN's fused epilogues converge on the same
+//! design). A [`PostOps`] spec is attached to a
+//! [`crate::conv1d::ConvPlan`] at build time; the kernels call
+//! [`apply_segment`] on every output block they produce, so a
+//! `bias + relu` forward is **one** pass over the output tensor.
+//!
+//! Math (cuDNN epilogue order):
+//!
+//! ```text
+//! y = act(scale · conv(x) + bias + residual)
+//! ```
+//!
+//! and the fused backward prologue, derived once here so forward and
+//! backward cannot drift apart:
+//!
+//! ```text
+//! dz      = gout ⊙ act'(y)          (activation gradient, from the saved
+//!                                    forward *output* — no pre-activation
+//!                                    tensor is ever materialised)
+//! d bias  = Σ_{n,q} dz              (folded into the same sweep)
+//! d resid = dz
+//! d conv  = scale · dz              (what backward_data/weight consume)
+//! ```
+
+/// Pointwise activation applied by the epilogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Activation {
+    /// No activation.
+    #[default]
+    Identity,
+    /// `max(0, v)`.
+    Relu,
+    /// `1 / (1 + e^(−v))`.
+    Sigmoid,
+}
+
+impl Activation {
+    /// Apply the activation to one value.
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Activation::Identity => v,
+            Activation::Relu => {
+                if v > 0.0 {
+                    v
+                } else {
+                    0.0
+                }
+            }
+            Activation::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        }
+    }
+
+    /// Derivative `act'(z)` expressed through the saved *output*
+    /// `y = act(z)` — every supported activation admits this form, so the
+    /// fused backward never needs the pre-activation tensor.
+    #[inline]
+    pub fn grad_from_output(self, y: f32) -> f32 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Sigmoid => y * (1.0 - y),
+        }
+    }
+
+    /// Canonical token used in [`PostOps`] names.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::Identity => "identity",
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+        }
+    }
+}
+
+/// A post-op epilogue spec: what the kernel fuses onto each output block.
+///
+/// `PartialEq` (not `Eq`): `scale` is a float.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PostOps {
+    /// Add the plan's per-filter bias.
+    pub bias: bool,
+    /// Pointwise activation applied last.
+    pub activation: Activation,
+    /// Add a caller-supplied residual tensor (same shape as the output)
+    /// before the activation.
+    pub residual: bool,
+    /// Scale the raw convolution output before bias/residual/activation.
+    pub scale: f32,
+}
+
+impl Default for PostOps {
+    fn default() -> Self {
+        PostOps::none()
+    }
+}
+
+impl PostOps {
+    /// The identity epilogue: plain convolution.
+    pub const fn none() -> PostOps {
+        PostOps {
+            bias: false,
+            activation: Activation::Identity,
+            residual: false,
+            scale: 1.0,
+        }
+    }
+
+    /// Bias add only (the framework-layer default).
+    pub const fn bias() -> PostOps {
+        PostOps {
+            bias: true,
+            ..PostOps::none()
+        }
+    }
+
+    /// `relu(conv + bias)` — the hot configuration of the AtacWorks body.
+    pub const fn bias_relu() -> PostOps {
+        PostOps {
+            bias: true,
+            activation: Activation::Relu,
+            ..PostOps::none()
+        }
+    }
+
+    /// `relu(conv + bias + residual)` — the ResNet block tail.
+    pub const fn bias_relu_residual() -> PostOps {
+        PostOps {
+            bias: true,
+            activation: Activation::Relu,
+            residual: true,
+            ..PostOps::none()
+        }
+    }
+
+    /// True when the epilogue is the identity (no work to fuse).
+    pub fn is_none(&self) -> bool {
+        !self.bias
+            && self.activation == Activation::Identity
+            && !self.residual
+            && self.scale == 1.0
+    }
+
+    /// Builder: replace the activation.
+    pub fn with_activation(mut self, a: Activation) -> PostOps {
+        self.activation = a;
+        self
+    }
+
+    /// Builder: replace the output scale.
+    pub fn with_scale(mut self, scale: f32) -> PostOps {
+        self.scale = scale;
+        self
+    }
+
+    /// Builder: toggle the residual input.
+    pub fn with_residual(mut self, residual: bool) -> PostOps {
+        self.residual = residual;
+        self
+    }
+
+    /// Parse a spec from its config/CLI name: `"none"` or `_`-separated
+    /// tokens out of `bias`, `relu`, `sigmoid`, `identity`, `residual`
+    /// (e.g. `"bias_relu"`, `"bias_relu_residual"`). `scale` is not
+    /// nameable — it exists for programmatic users (e.g. gradient
+    /// averaging) and defaults to 1.
+    pub fn parse(name: &str) -> Result<PostOps, String> {
+        let lower = name.to_ascii_lowercase();
+        if lower == "none" {
+            return Ok(PostOps::none());
+        }
+        let mut ops = PostOps::none();
+        for tok in lower.split('_') {
+            match tok {
+                "bias" => ops.bias = true,
+                "relu" => ops.activation = Activation::Relu,
+                "sigmoid" => ops.activation = Activation::Sigmoid,
+                "identity" => ops.activation = Activation::Identity,
+                "residual" => ops.residual = true,
+                other => return Err(format!("unknown post-op token '{other}' in '{name}'")),
+            }
+        }
+        Ok(ops)
+    }
+
+    /// Canonical name (round-trips through [`PostOps::parse`] whenever
+    /// `scale == 1`).
+    pub fn name(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut parts: Vec<&str> = Vec::new();
+        if self.bias {
+            parts.push("bias");
+        }
+        if self.activation != Activation::Identity {
+            parts.push(self.activation.as_str());
+        }
+        if self.residual {
+            parts.push("residual");
+        }
+        let mut s = if parts.is_empty() {
+            "identity".to_string()
+        } else {
+            parts.join("_")
+        };
+        if self.scale != 1.0 {
+            s.push_str(&format!("@scale{}", self.scale));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for PostOps {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Apply the epilogue to one contiguous output segment belonging to a
+/// single filter: `seg[j] = act(scale·seg[j] + bias_k + res[j])`.
+///
+/// This is the primitive every kernel calls right after producing an
+/// output block, while the block is still cache-hot. `res` must be `Some`
+/// iff `ops.residual` is set, and at least `seg.len()` long.
+#[inline]
+pub fn apply_segment(ops: &PostOps, bias_k: f32, res: Option<&[f32]>, seg: &mut [f32]) {
+    let b = if ops.bias { bias_k } else { 0.0 };
+    let sc = ops.scale;
+    match res {
+        Some(r) => {
+            debug_assert!(r.len() >= seg.len());
+            for (v, rv) in seg.iter_mut().zip(r) {
+                *v = ops.activation.apply(sc * *v + b + rv);
+            }
+        }
+        None => {
+            debug_assert!(!ops.residual, "residual post-op without residual data");
+            for v in seg.iter_mut() {
+                *v = ops.activation.apply(sc * *v + b);
+            }
+        }
+    }
+}
+
+/// Validate a fused-forward argument set against its spec — the single
+/// owner of the bias-length / residual-presence / residual-shape
+/// contract every kernel entry point enforces.
+pub fn validate_args(
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+    n: usize,
+    k: usize,
+    q: usize,
+) {
+    if ops.bias {
+        assert_eq!(bias.len(), k, "post-op bias length mismatch");
+    }
+    if ops.residual {
+        let r = residual.expect("residual post-op requires a residual tensor");
+        assert_eq!(r.len(), n * k * q, "post-op residual shape mismatch");
+    }
+}
+
+/// Apply the epilogue to the width block `pos .. pos+nb` of every filter
+/// row of one image's `(K, Q)` output — the call every fused kernel makes
+/// right after a block's BRGEMM, while the block is still cache-hot.
+/// `res_row` is the image's `(K, Q)` residual row when `ops.residual`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn apply_block(
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    out_row: &mut [f32],
+    k: usize,
+    q: usize,
+    pos: usize,
+    nb: usize,
+) {
+    if ops.is_none() {
+        return;
+    }
+    for ik in 0..k {
+        let at = ik * q + pos;
+        let bias_k = if ops.bias { bias[ik] } else { 0.0 };
+        let res = res_row.map(|r| &r[at..at + nb]);
+        apply_segment(ops, bias_k, res, &mut out_row[at..at + nb]);
+    }
+}
+
+/// Unfused reference sweep over a full `(N, K, Q)` output tensor — the
+/// fallback for kernels that do not override the fused hook, and the
+/// oracle the conformance matrix compares every fused kernel against.
+pub fn apply_reference(
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    q: usize,
+) {
+    if ops.is_none() {
+        return;
+    }
+    assert_eq!(out.len(), n * k * q, "post-op output shape mismatch");
+    if ops.bias {
+        assert_eq!(bias.len(), k, "post-op bias length mismatch");
+    }
+    if ops.residual {
+        let r = residual.expect("residual post-op requires a residual tensor");
+        assert_eq!(r.len(), n * k * q, "post-op residual shape mismatch");
+    }
+    for ib in 0..n {
+        for ik in 0..k {
+            let row = (ib * k + ik) * q;
+            let bias_k = if ops.bias { bias[ik] } else { 0.0 };
+            let res_row = residual.filter(|_| ops.residual).map(|r| &r[row..row + q]);
+            apply_segment(ops, bias_k, res_row, &mut out[row..row + q]);
+        }
+    }
+}
+
+/// Fused backward prologue over a full `(N, K, Q)` tensor — **one** sweep
+/// that turns the gradient w.r.t. the post-op output into the gradient
+/// w.r.t. the raw convolution output, folding the bias gradient (and the
+/// residual gradient, when requested) into the same pass:
+///
+/// * `dconv[i] = scale · gout[i] · act'(y[i])` — written to `dconv`,
+/// * `gb[k] += Σ gout·act'` — accumulated when `gb` is `Some`
+///   (caller zeroes it first),
+/// * `gres[i] = gout[i] · act'(y[i])` — written when `gres` is `Some`.
+pub fn backward_prologue(
+    ops: &PostOps,
+    gout: &[f32],
+    y: &[f32],
+    dconv: &mut [f32],
+    n: usize,
+    k: usize,
+    q: usize,
+    mut gb: Option<&mut [f32]>,
+    mut gres: Option<&mut [f32]>,
+) {
+    assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch");
+    assert_eq!(y.len(), n * k * q, "saved-output shape mismatch");
+    assert_eq!(dconv.len(), n * k * q, "dconv shape mismatch");
+    if let Some(gb) = gb.as_deref() {
+        assert_eq!(gb.len(), k, "bias-grad length mismatch");
+    }
+    if let Some(gr) = gres.as_deref() {
+        assert_eq!(gr.len(), n * k * q, "residual-grad shape mismatch");
+    }
+    let act = ops.activation;
+    let sc = ops.scale;
+    for ib in 0..n {
+        for ik in 0..k {
+            let row = (ib * k + ik) * q;
+            let mut acc = 0.0f32;
+            for j in row..row + q {
+                let dz = gout[j] * act.grad_from_output(y[j]);
+                acc += dz;
+                if let Some(gr) = gres.as_deref_mut() {
+                    gr[j] = dz;
+                }
+                dconv[j] = sc * dz;
+            }
+            if let Some(gb) = gb.as_deref_mut() {
+                gb[ik] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for name in [
+            "none",
+            "bias",
+            "relu",
+            "bias_relu",
+            "bias_sigmoid",
+            "bias_relu_residual",
+            "sigmoid",
+            "residual",
+        ] {
+            let ops = PostOps::parse(name).unwrap();
+            assert_eq!(ops.name(), name, "{name}");
+            assert_eq!(PostOps::parse(&ops.name()).unwrap(), ops);
+        }
+        assert_eq!(PostOps::parse("BIAS_RELU").unwrap(), PostOps::bias_relu());
+        assert!(PostOps::parse("bias_tanh").is_err());
+        assert!(PostOps::none().is_none());
+        assert!(!PostOps::bias().is_none());
+    }
+
+    #[test]
+    fn segment_math() {
+        let ops = PostOps::bias_relu_residual().with_scale(2.0);
+        let mut seg = vec![1.0f32, -3.0];
+        let res = vec![0.5f32, 1.0];
+        apply_segment(&ops, 0.25, Some(&res), &mut seg);
+        // 2·1 + 0.25 + 0.5 = 2.75; 2·(−3) + 0.25 + 1 = −4.75 → relu → 0.
+        assert_eq!(seg, vec![2.75, 0.0]);
+    }
+
+    #[test]
+    fn activation_grad_from_output() {
+        for v in [-2.0f32, -0.5, 0.0, 0.5, 2.0] {
+            let y = Activation::Sigmoid.apply(v);
+            // d/dv sigmoid = sig·(1−sig)
+            let want = y * (1.0 - y);
+            assert!((Activation::Sigmoid.grad_from_output(y) - want).abs() < 1e-6);
+        }
+        assert_eq!(Activation::Relu.grad_from_output(3.0), 1.0);
+        assert_eq!(Activation::Relu.grad_from_output(0.0), 0.0);
+        assert_eq!(Activation::Identity.grad_from_output(-7.0), 1.0);
+    }
+
+    #[test]
+    fn prologue_folds_bias_and_residual_grads() {
+        let (n, k, q) = (1, 2, 3);
+        let ops = PostOps::bias_relu_residual().with_scale(0.5);
+        let y = vec![1.0f32, 0.0, 2.0, 0.0, 3.0, 1.0]; // relu outputs
+        let gout = vec![1.0f32; 6];
+        let mut dconv = vec![0.0f32; 6];
+        let mut gb = vec![0.0f32; 2];
+        let mut gres = vec![0.0f32; 6];
+        backward_prologue(
+            &ops,
+            &gout,
+            &y,
+            &mut dconv,
+            n,
+            k,
+            q,
+            Some(&mut gb),
+            Some(&mut gres),
+        );
+        assert_eq!(gres, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+        assert_eq!(gb, vec![2.0, 2.0]);
+        assert_eq!(dconv, vec![0.5, 0.0, 0.5, 0.0, 0.5, 0.5]);
+    }
+}

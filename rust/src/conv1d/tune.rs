@@ -1,0 +1,338 @@
+//! Shape-keyed kernel autotuner (DESIGN.md §5b).
+//!
+//! cuDNN's `cudnnFindConvolutionForwardAlgorithm` and oneDNN's primitive
+//! cache converge on the same design the paper implies: pick the kernel
+//! *per shape* by measuring once, then reuse the choice for every later
+//! plan at that shape. This module is the native version:
+//!
+//! * [`Autotuner::choose`] — given `(ConvParams, threads, precision)`,
+//!   return the fastest registered kernel. The first call for a shape
+//!   micro-benchmarks every candidate on a width-capped probe problem and
+//!   memoizes the winner; every later call is a pure table lookup — the
+//!   determinism the tests lock down with [`Autotuner::measurement_count`].
+//! * Persistence — the table round-trips through `util::json`
+//!   ([`Autotuner::to_json`] / [`Autotuner::load_json`] and the
+//!   file-level `save`/`load`), so sweeps and the trainer warm-start
+//!   instead of re-measuring (`autotune = true`, `tune_cache = "…"`).
+//!
+//! The process-wide instance lives behind [`autotuner`];
+//! [`super::plan::ConvPlan::tuned`] and `Conv1dLayer { autotune: true }`
+//! route through it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::params::ConvParams;
+use super::plan::{kernels, lookup_kernel, ConvKernel, ConvPlan};
+use crate::machine::Precision;
+use crate::util::json::Json;
+
+/// One memoized decision: the winning kernel and its measured time on the
+/// probe problem (microseconds; informational).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneEntry {
+    pub kernel: String,
+    pub micros: f64,
+}
+
+/// The shape-keyed kernel selection table.
+pub struct Autotuner {
+    table: Mutex<BTreeMap<String, TuneEntry>>,
+    /// Serializes micro-benchmarks only (never table lookups): two
+    /// concurrent measurements would contend for cores and memoize
+    /// contended timings.
+    measuring: Mutex<()>,
+    /// Number of micro-benchmark runs performed (NOT table lookups) —
+    /// lets tests assert that a repeated shape re-measures nothing.
+    measurements: AtomicUsize,
+}
+
+impl Default for Autotuner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Autotuner {
+    /// An empty tuner (tests use private instances; production code goes
+    /// through [`autotuner`]).
+    pub fn new() -> Autotuner {
+        Autotuner {
+            table: Mutex::new(BTreeMap::new()),
+            measuring: Mutex::new(()),
+            measurements: AtomicUsize::new(0),
+        }
+    }
+
+    /// The cache key of one tuning decision: the full problem shape plus
+    /// the execution context (thread count, precision) — anything that
+    /// can flip the kernel ranking.
+    pub fn key(p: &ConvParams, threads: usize, precision: Precision) -> String {
+        let prec = match precision {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        };
+        format!(
+            "n{}c{}k{}w{}s{}d{}st{}t{}p{}",
+            p.n,
+            p.c,
+            p.k,
+            p.w,
+            p.s,
+            p.d,
+            p.stride,
+            threads.max(1),
+            prec
+        )
+    }
+
+    /// Total micro-benchmark runs so far (one per candidate kernel per
+    /// previously-unseen shape).
+    pub fn measurement_count(&self) -> usize {
+        self.measurements.load(Ordering::SeqCst)
+    }
+
+    /// Number of memoized decisions.
+    pub fn len(&self) -> usize {
+        self.table.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every memoized decision (tests).
+    pub fn clear(&self) {
+        self.table.lock().unwrap().clear();
+    }
+
+    /// The memoized entry for a shape, if any.
+    pub fn entry(&self, p: &ConvParams, threads: usize, precision: Precision) -> Option<TuneEntry> {
+        self.table
+            .lock()
+            .unwrap()
+            .get(&Self::key(p, threads, precision))
+            .cloned()
+    }
+
+    /// Pick the kernel for a problem: table hit → memoized winner with
+    /// **zero** re-measurement; miss → micro-benchmark every candidate
+    /// once and memoize. `Precision::Bf16` has exactly one candidate (the
+    /// bf16 kernel), so it never measures.
+    pub fn choose(
+        &self,
+        p: &ConvParams,
+        threads: usize,
+        precision: Precision,
+    ) -> &'static dyn ConvKernel {
+        if precision == Precision::Bf16 {
+            return kernels()
+                .iter()
+                .copied()
+                .find(|k| k.precision() == Precision::Bf16)
+                .expect("a bf16-precision kernel is registered");
+        }
+        let key = Self::key(p, threads, precision);
+        if let Some(k) = self.hit(&key) {
+            return k;
+        }
+        // Serialize measurements (not lookups): concurrent candidate
+        // sweeps would compete for cores and memoize contended timings.
+        // Re-check under the guard — another thread may have measured
+        // this shape while we waited.
+        let _serialize = self.measuring.lock().unwrap();
+        if let Some(k) = self.hit(&key) {
+            return k;
+        }
+        let (kernel, micros) = self.measure(p, threads);
+        self.table.lock().unwrap().insert(
+            key,
+            TuneEntry {
+                kernel: kernel.name().to_string(),
+                micros,
+            },
+        );
+        kernel
+    }
+
+    /// Table lookup (fast path): the memoized kernel for a key, if any.
+    fn hit(&self, key: &str) -> Option<&'static dyn ConvKernel> {
+        self.table
+            .lock()
+            .unwrap()
+            .get(key)
+            .and_then(|e| lookup_kernel(&e.kernel))
+    }
+
+    /// Micro-benchmark every f32 candidate on a width-capped probe of `p`
+    /// and return the fastest (name, best time in µs). The probe caps `Q`
+    /// (and `N`) so tuning a 60 000-wide training shape costs
+    /// milliseconds; the block structure that decides the ranking is
+    /// preserved.
+    fn measure(&self, p: &ConvParams, threads: usize) -> (&'static dyn ConvKernel, f64) {
+        let probe = probe_params(p, threads);
+        let wt = crate::conv1d::test_util::rnd(probe.k * probe.c * probe.s, 0x7E57);
+        let x = crate::conv1d::test_util::rnd(probe.n * probe.c * probe.w, 0x7E58);
+        let mut best: Option<(&'static dyn ConvKernel, f64)> = None;
+        for &kernel in kernels() {
+            // Only same-precision kernels compete: a reduced-precision
+            // kernel must never win an f32-keyed entry.
+            if kernel.precision() != Precision::F32 || !kernel.supports(&probe.unit_stride()) {
+                continue;
+            }
+            let mut plan = match ConvPlan::with_kernel(probe, kernel, threads, wt.clone()) {
+                Ok(plan) => plan,
+                Err(_) => continue,
+            };
+            let mut out = vec![0.0f32; probe.n * probe.k * probe.q()];
+            plan.execute_forward_into(&x, &mut out); // warmup
+            let mut best_us = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                plan.execute_forward_into(&x, &mut out);
+                best_us = best_us.min(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            self.measurements.fetch_add(1, Ordering::SeqCst);
+            std::hint::black_box(&out);
+            if best.is_none() || best_us < best.unwrap().1 {
+                best = Some((kernel, best_us));
+            }
+        }
+        best.expect("at least one registered kernel serves every problem")
+    }
+
+    /// Serialize the table as JSON (parseable by [`Autotuner::load_json`]
+    /// and `util::json`).
+    pub fn to_json(&self) -> String {
+        let table = self.table.lock().unwrap();
+        let mut s = String::from("{\n  \"version\": 1,\n  \"entries\": {");
+        for (i, (key, e)) in table.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    \"{}\": {{\"kernel\": \"{}\", \"micros\": {:.3}}}",
+                key, e.kernel, e.micros
+            ));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Merge a persisted table into this one (persisted entries win).
+    /// Returns the number of entries loaded. Unknown kernels are skipped
+    /// — a table written by a newer build must not poison this one.
+    pub fn load_json(&self, src: &str) -> Result<usize, String> {
+        let doc = Json::parse(src).map_err(|e| e.to_string())?;
+        match doc.get("version").and_then(Json::as_usize) {
+            Some(1) => {}
+            other => {
+                return Err(format!(
+                    "tune table: unsupported version {other:?} (this build reads version 1)"
+                ))
+            }
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| "tune table: missing 'entries' object".to_string())?;
+        let mut loaded = 0;
+        let mut table = self.table.lock().unwrap();
+        for (key, v) in entries {
+            let kernel = match v.get("kernel").and_then(Json::as_str) {
+                Some(name) if lookup_kernel(name).is_some() => name.to_string(),
+                _ => continue,
+            };
+            let micros = v.get("micros").and_then(Json::as_f64).unwrap_or(0.0);
+            table.insert(key.clone(), TuneEntry { kernel, micros });
+            loaded += 1;
+        }
+        Ok(loaded)
+    }
+
+    /// Persist the table to a file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Load a persisted table from a file (merging; see
+    /// [`Autotuner::load_json`]).
+    pub fn load(&self, path: impl AsRef<std::path::Path>) -> Result<usize, String> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("reading tune table {:?}: {e}", path.as_ref()))?;
+        self.load_json(&src)
+    }
+}
+
+/// The width-capped probe problem the micro-benchmark runs: same
+/// `(C, K, S, d)` blocking behaviour, bounded cost. The batch is capped
+/// but never below the worker count — the kernels parallelise across the
+/// batch, so a probe with fewer rows than workers would measure a
+/// different parallelism regime than the one the cache key promises.
+fn probe_params(p: &ConvParams, threads: usize) -> ConvParams {
+    const MAX_PROBE_Q: usize = 512;
+    let q = p.q().min(MAX_PROBE_Q).max(1);
+    // Reconstruct a width giving exactly q output columns at p's stride.
+    let w = (q - 1) * p.stride + (p.s - 1) * p.d + 1;
+    let probe = ConvParams {
+        n: p.n.min(threads.max(2)),
+        w,
+        ..*p
+    };
+    debug_assert_eq!(probe.q(), q);
+    probe
+}
+
+/// The process-wide autotuner every production caller shares.
+pub fn autotuner() -> &'static Autotuner {
+    static GLOBAL: OnceLock<Autotuner> = OnceLock::new();
+    GLOBAL.get_or_init(Autotuner::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_caps_width_but_keeps_blocking_dims() {
+        let p = ConvParams::new(8, 15, 15, 60_000, 51, 8).unwrap();
+        let probe = probe_params(&p, 1);
+        assert_eq!(probe.q(), 512);
+        assert_eq!((probe.c, probe.k, probe.s, probe.d), (15, 15, 51, 8));
+        assert_eq!(probe.n, 2);
+        // The probe batch never drops below the worker count (up to N),
+        // so the measurement runs the same parallelism regime the cache
+        // key promises.
+        assert_eq!(probe_params(&p, 4).n, 4);
+        assert_eq!(probe_params(&p, 64).n, 8);
+        // Small problems are probed as-is.
+        let small = ConvParams::new(1, 3, 3, 100, 5, 2).unwrap();
+        assert_eq!(probe_params(&small, 1), small);
+    }
+
+    #[test]
+    fn key_distinguishes_every_dimension() {
+        let p = ConvParams::new(1, 3, 4, 100, 5, 2).unwrap();
+        let base = Autotuner::key(&p, 1, Precision::F32);
+        let variants = [
+            Autotuner::key(&ConvParams::new(2, 3, 4, 100, 5, 2).unwrap(), 1, Precision::F32),
+            Autotuner::key(&p.with_stride(2).unwrap(), 1, Precision::F32),
+            Autotuner::key(&p, 4, Precision::F32),
+            Autotuner::key(&p, 1, Precision::Bf16),
+        ];
+        for v in &variants {
+            assert_ne!(&base, v);
+        }
+    }
+
+    #[test]
+    fn bf16_precision_short_circuits() {
+        let t = Autotuner::new();
+        let p = ConvParams::new(1, 4, 4, 200, 5, 2).unwrap();
+        let k = t.choose(&p, 1, Precision::Bf16);
+        assert_eq!(k.name(), "bf16");
+        assert_eq!(t.measurement_count(), 0);
+    }
+}

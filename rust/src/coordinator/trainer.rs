@@ -63,12 +63,40 @@ impl Trainer {
             pad: cfg.segment_pad,
             ..TrackConfig::default()
         };
+        // The network's epilogue shape is fixed by its topology: every
+        // layer fuses a bias, block tails fuse the residual add. The
+        // config's post_ops therefore selects the *body activation* only
+        // — reject specs this network cannot honor instead of silently
+        // dropping components (e.g. "none" would strip every bias).
+        if !cfg.post_ops.bias || cfg.post_ops.residual || cfg.post_ops.scale != 1.0 {
+            return Err(anyhow::anyhow!(
+                "post_ops = \"{}\" is not trainable: the AtacWorks network always fuses \
+                 bias (+ residual on block tails, fixed by topology); use \"bias\", \
+                 \"bias_relu\" or \"bias_sigmoid\"",
+                cfg.post_ops
+            ));
+        }
+        // Config validated — now warm-start the autotuner from a persisted tuning table
+        // before any plan is built, so the first epoch already uses the
+        // previously-measured winners.
+        if cfg.autotune {
+            if let Some(path) = cfg.tune_cache.as_deref() {
+                if std::path::Path::new(path).exists() {
+                    match crate::conv1d::autotuner().load(path) {
+                        Ok(n) => println!("autotuner: warm-started {n} entries from {path}"),
+                        Err(e) => eprintln!("warning: ignoring tune cache: {e}"),
+                    }
+                }
+            }
+        }
         let mut replicas: Vec<AtacWorksNet> = (0..cfg.sockets.max(1))
             .map(|_| AtacWorksNet::init(net_cfg, cfg.seed))
             .collect();
         for r in &mut replicas {
             r.set_backend(cfg.backend, cfg.threads_per_socket);
             r.set_precision(cfg.precision);
+            r.set_autotune(cfg.autotune);
+            r.set_activation(cfg.post_ops.activation);
         }
         let params = replicas[0].pack_params();
         let opt = Adam::new(params.len(), cfg.lr as f32);
@@ -242,12 +270,21 @@ impl Trainer {
     }
 
     /// Train for `cfg.epochs` epochs, invoking `on_epoch` after each.
+    /// With `autotune` + `tune_cache` set, the tuning table is persisted
+    /// when training finishes so the next run warm-starts.
     pub fn train(&mut self, mut on_epoch: impl FnMut(&EpochReport)) -> Vec<EpochReport> {
         let mut reports = Vec::with_capacity(self.cfg.epochs);
         for e in 0..self.cfg.epochs {
             let r = self.run_epoch(e);
             on_epoch(&r);
             reports.push(r);
+        }
+        if self.cfg.autotune {
+            if let Some(path) = self.cfg.tune_cache.as_deref() {
+                if let Err(e) = crate::conv1d::autotuner().save(path) {
+                    eprintln!("warning: could not persist tune cache to {path}: {e}");
+                }
+            }
         }
         reports
     }
@@ -271,6 +308,17 @@ mod tests {
             lr: 1e-3,
             ..TrainConfig::default()
         }
+    }
+
+    #[test]
+    fn unsupported_post_ops_are_rejected() {
+        use crate::conv1d::PostOps;
+        let mut cfg = tiny_cfg();
+        cfg.post_ops = PostOps::none();
+        assert!(Trainer::new(cfg).is_err(), "post_ops none must be rejected");
+        let mut cfg = tiny_cfg();
+        cfg.post_ops = PostOps::parse("bias_sigmoid").unwrap();
+        assert!(Trainer::new(cfg).is_ok());
     }
 
     #[test]

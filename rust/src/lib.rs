@@ -28,4 +28,7 @@ pub mod model;
 pub mod runtime;
 pub mod util;
 
-pub use conv1d::{Backend, Conv1dLayer, ConvKernel, ConvParams, ConvPlan};
+pub use conv1d::{
+    autotuner, Activation, Autotuner, Backend, Conv1dLayer, ConvKernel, ConvParams, ConvPlan,
+    PostOps,
+};

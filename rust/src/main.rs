@@ -118,6 +118,8 @@ USAGE: dilconv <subcommand> [--flags]
                    [--width N] [--pad N] [--segments N] [--channels N]
                    [--blocks N] [--backend brgemm|onednn|direct|bf16] [--lr F]
                    [--threads N] [--seed N] [--checkpoint out.ckpt]
+                   [--autotune] [--tune-cache tune.json]
+                   [--post-ops bias_relu|bias_sigmoid|bias]
   sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
                    --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
                    [--reps N] [--batch N] [--max-q N]
@@ -153,6 +155,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         // Registry-name selection: any conv1d::lookup_kernel alias,
         // including "bf16" (BRGEMM backend at bf16 precision).
         cfg.apply_backend_name(b).map_err(|e| anyhow!(e))?;
+    }
+    if args.bool("autotune") {
+        cfg.autotune = true;
+    }
+    if let Some(p) = args.get("tune-cache") {
+        cfg.tune_cache = Some(p.to_string());
+    }
+    if let Some(s) = args.get("post-ops") {
+        cfg.post_ops = dilconv1d::conv1d::PostOps::parse(s).map_err(|e| anyhow!(e))?;
     }
     println!(
         "training AtacWorks-like net: {} conv layers, ch={}, S={}, d={}, W={} (padded {}), \

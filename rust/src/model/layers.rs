@@ -3,7 +3,7 @@
 //! structure itself; see resnet.rs).
 
 use crate::conv1d::layout::{pad_width_into, unpad_width};
-use crate::conv1d::{Backend, Conv1dLayer, ConvParams};
+use crate::conv1d::{Backend, Conv1dLayer, ConvParams, PostOps};
 use crate::machine::Precision;
 
 use super::tensor::Tensor;
@@ -25,8 +25,15 @@ pub struct ConvSame {
     xp_train: Vec<f32>,
     /// Persistent padded-input buffer for eval forwards.
     xp_eval: Vec<f32>,
-    /// `(n, wp)` of the padded input cached by the last `forward(train)`.
-    cached: Option<(usize, usize)>,
+    /// Saved post-op output of the last `forward_fused(train=true)` —
+    /// the fused backward reconstructs activation gradients from it
+    /// (no mask tensors exist on the fused path).
+    y_train: Vec<f32>,
+    /// `(n, wp, fused)` of the input cached by the last training
+    /// forward; the flag records *which* forward path produced it, so a
+    /// backward can never consume the wrong cache (the fused backward
+    /// needs `y_train`, which only `forward_fused` writes).
+    cached: Option<(usize, usize, bool)>,
 }
 
 /// Gradients of one conv layer.
@@ -41,6 +48,7 @@ impl ConvSame {
             conv: Conv1dLayer::new(c, k, s, d, weights),
             xp_train: Vec::new(),
             xp_eval: Vec::new(),
+            y_train: Vec::new(),
             cached: None,
         }
     }
@@ -56,8 +64,19 @@ impl ConvSame {
         self.conv.precision = precision;
     }
 
-    /// Forward, caching the padded input when `train` is set.
-    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+    /// Attach the post-op epilogue the fused paths apply.
+    pub fn set_post_ops(&mut self, ops: PostOps) {
+        self.conv.post_ops = ops;
+    }
+
+    /// Route kernel selection through the process-wide autotuner.
+    pub fn set_autotune(&mut self, on: bool) {
+        self.conv.autotune = on;
+    }
+
+    /// Shared same-padding prologue of both forward paths: pad `x` into
+    /// the persistent train/eval buffer and return the padded width.
+    fn pad_into_buffer(&mut self, x: &Tensor, train: bool) -> usize {
         let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
         let wp = x.w + l + r;
         let need = x.n * x.c * wp;
@@ -70,6 +89,76 @@ impl ConvSame {
             buf.resize(need, 0.0);
         }
         pad_width_into(&x.data, x.n, x.c, x.w, l, r, buf);
+        wp
+    }
+
+    /// Fused forward: same-padding + the layer's post-op epilogue
+    /// (bias/activation/residual) applied inside the kernel's output
+    /// block loop — one pass over the output instead of the legacy
+    /// conv + bias-sweep (+ caller relu-sweep). `residual` must be a
+    /// `(N, K, W)` tensor iff the spec has `residual` set. With `train`,
+    /// caches the padded input *and* the post-op output for
+    /// [`Self::backward_fused`].
+    pub fn forward_fused(&mut self, x: &Tensor, residual: Option<&Tensor>, train: bool) -> Tensor {
+        let wp = self.pad_into_buffer(x, train);
+        let buf = if train { &self.xp_train } else { &self.xp_eval };
+        let out = self
+            .conv
+            .try_forward_post(buf, residual.map(|t| t.data.as_slice()), x.n, wp)
+            .unwrap_or_else(|e| panic!("{e}"));
+        if train {
+            self.y_train.clear();
+            self.y_train.extend_from_slice(&out);
+            self.cached = Some((x.n, wp, true));
+        }
+        Tensor::from_vec(out, x.n, self.conv.k, x.w)
+    }
+
+    /// Fused backward: consumes the cached padded input and saved output.
+    /// One prologue sweep folds the activation gradient, the bias
+    /// gradient and (when `need_gres`) the residual gradient together,
+    /// then the kernel backward passes run on the masked gradient —
+    /// no separate mask/bias sweeps. Returns
+    /// `(grad_input?, grad_residual?, grads)`.
+    pub fn backward_fused(
+        &mut self,
+        gout: &Tensor,
+        need_gin: bool,
+        need_gres: bool,
+    ) -> (Option<Tensor>, Option<Tensor>, ConvGrads) {
+        let (n, wp, fused) = self
+            .cached
+            .take()
+            .expect("backward_fused() without a cached forward_fused(train=true)");
+        assert!(
+            fused,
+            "backward_fused() after a legacy forward(train=true); the fused backward \
+             needs the saved output only forward_fused caches"
+        );
+        assert_eq!(gout.n, n);
+        assert_eq!(gout.c, self.conv.k);
+        let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
+        debug_assert_eq!(gout.w + l + r, wp);
+        let xp = &self.xp_train[..n * self.conv.c * wp];
+        let y = &self.y_train[..n * self.conv.k * gout.w];
+        let fg = self
+            .conv
+            .try_backward_fused(&gout.data, y, xp, n, wp, need_gin, need_gres)
+            .unwrap_or_else(|e| panic!("{e}"));
+        let gin = fg.gin.map(|gxp| {
+            let gx = unpad_width(&gxp, n, self.conv.c, wp, l, r);
+            Tensor::from_vec(gx, n, self.conv.c, gout.w)
+        });
+        let gres = fg
+            .res
+            .map(|gr| Tensor::from_vec(gr, n, self.conv.k, gout.w));
+        (gin, gres, ConvGrads { w: fg.w, b: fg.b })
+    }
+
+    /// Forward, caching the padded input when `train` is set.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let wp = self.pad_into_buffer(x, train);
+        let buf = if train { &self.xp_train } else { &self.xp_eval };
         let mut out = self.conv.forward(buf, x.n, wp);
         // Bias.
         for ib in 0..x.n {
@@ -83,17 +172,18 @@ impl ConvSame {
             }
         }
         if train {
-            self.cached = Some((x.n, wp));
+            self.cached = Some((x.n, wp, false));
         }
         Tensor::from_vec(out, x.n, self.conv.k, x.w)
     }
 
     /// Backward: consumes the cached input; returns (grad_input, grads).
     pub fn backward(&mut self, gout: &Tensor) -> (Tensor, ConvGrads) {
-        let (n, wp) = self
+        let (n, wp, fused) = self
             .cached
             .take()
             .expect("backward() without a cached forward(train=true)");
+        assert!(!fused, "backward() after forward_fused(train=true); use backward_fused");
         assert_eq!(gout.n, n);
         assert_eq!(gout.c, self.conv.k);
         let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
@@ -111,10 +201,11 @@ impl ConvSame {
 
     /// Backward-weight only (used by the stem, whose input needs no grad).
     pub fn backward_weights_only(&mut self, gout: &Tensor) -> ConvGrads {
-        let (n, wp) = self
+        let (n, wp, fused) = self
             .cached
             .take()
             .expect("backward() without a cached forward(train=true)");
+        assert!(!fused, "backward_weights_only() after forward_fused(train=true)");
         let xp = &self.xp_train[..n * self.conv.c * wp];
         let gw = self.conv.backward_weight(&gout.data, xp, n, wp);
         let gb = self.conv.backward_bias(&gout.data, n, gout.w);
@@ -208,6 +299,65 @@ mod tests {
                 gx.data[xi]
             );
         }
+    }
+
+    #[test]
+    fn fused_forward_backward_match_legacy_three_pass() {
+        // The fused bias+relu path must reproduce the legacy pipeline —
+        // conv, bias sweep, relu sweep; masked backward — bit for bit.
+        let (c, k, s, d, n, w) = (3, 4, 5, 2, 2, 60);
+        let wts = rnd(k * c * s, 20);
+        let bias = vec![0.1, -0.2, 0.3, 0.4];
+        let mut fused = ConvSame::new(c, k, s, d, wts.clone());
+        fused.conv.bias = bias.clone();
+        fused.set_post_ops(PostOps::bias_relu());
+        let mut legacy = ConvSame::new(c, k, s, d, wts);
+        legacy.conv.bias = bias;
+        let x = Tensor::from_vec(rnd(n * c * w, 21), n, c, w);
+        let y = fused.forward_fused(&x, None, true);
+        let mut want = legacy.forward(&x, true);
+        let mask = want.relu_inplace();
+        assert_eq!(y.data, want.data, "fused forward != conv+bias+relu");
+
+        let g = Tensor::from_vec(rnd(n * k * w, 22), n, k, w);
+        let (gin, gres, grads) = fused.backward_fused(&g, true, false);
+        assert!(gres.is_none());
+        let mut gm = g.clone();
+        Tensor::mask_gradient(&mut gm.data, &mask);
+        let (gin_want, grads_want) = legacy.backward(&gm);
+        assert_eq!(gin.unwrap().data, gin_want.data, "fused gin");
+        assert_eq!(grads.w, grads_want.w, "fused gw");
+        for (a, b) in grads.b.iter().zip(&grads_want.b) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "fused gb {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_residual_matches_manual_skip_add() {
+        let (c, k, s, d, n, w) = (2, 3, 5, 2, 1, 40);
+        let wts = rnd(k * c * s, 30);
+        let bias = vec![0.05, -0.1, 0.15];
+        let mut fused = ConvSame::new(c, k, s, d, wts.clone());
+        fused.conv.bias = bias.clone();
+        fused.set_post_ops(PostOps::bias_relu_residual());
+        let mut legacy = ConvSame::new(c, k, s, d, wts);
+        legacy.conv.bias = bias;
+        let x = Tensor::from_vec(rnd(n * c * w, 31), n, c, w);
+        let res = Tensor::from_vec(rnd(n * k * w, 32), n, k, w);
+        // Legacy: conv+bias, then the separate skip add, then relu.
+        let mut want = legacy.forward(&x, true);
+        want.add_assign(&res);
+        let mask = want.relu_inplace();
+        let y = fused.forward_fused(&x, Some(&res), true);
+        assert_eq!(y.data, want.data, "fused residual forward");
+        // Fused backward: the residual gradient is the masked gradient.
+        let g = Tensor::from_vec(rnd(n * k * w, 33), n, k, w);
+        let (gin, gres, _) = fused.backward_fused(&g, true, true);
+        let mut gm = g.clone();
+        Tensor::mask_gradient(&mut gm.data, &mask);
+        assert_eq!(gres.unwrap().data, gm.data, "residual gradient == masked gout");
+        let (gin_want, _) = legacy.backward(&gm);
+        assert_eq!(gin.unwrap().data, gin_want.data, "fused residual gin");
     }
 
     #[test]

@@ -4,12 +4,20 @@
 //! — with a hand-written, fixed-topology backward pass whose conv
 //! gradients run through the paper's Algorithm 3/4 kernels.
 //!
+//! Every layer routes through the **fused post-op pipeline**
+//! (DESIGN.md §5b): the stem and the first block conv fuse `bias + act`,
+//! the second block conv fuses `bias + act + residual` (the skip
+//! connection is added inside the conv's output-block loop), and the
+//! heads fuse `bias`. Forward is one pass per layer instead of the
+//! pre-fusion conv + bias sweep + relu sweep; backward reconstructs
+//! activation gradients from the saved outputs, so no mask tensors exist.
+//!
 //! The architecture and parameter packing order mirror
 //! python/compile/model.py exactly (conv0.w, conv0.b, conv1.w, …), so
 //! checkpoints and gradients interoperate between the native and PJRT
 //! paths.
 
-use crate::conv1d::Backend;
+use crate::conv1d::{Activation, Backend, PostOps};
 use crate::util::rng::Rng;
 
 use super::layers::{ConvGrads, ConvSame};
@@ -105,7 +113,9 @@ impl AtacWorksNet {
                 ConvSame::new(c, k, s, cfg.dilation, w)
             })
             .collect();
-        AtacWorksNet { cfg, convs }
+        let mut net = AtacWorksNet { cfg, convs };
+        net.set_activation(Activation::Relu);
+        net
     }
 
     /// Select the kernel backend + thread count for every layer.
@@ -123,37 +133,53 @@ impl AtacWorksNet {
         }
     }
 
+    /// Route every layer's kernel selection through the process-wide
+    /// autotuner.
+    pub fn set_autotune(&mut self, on: bool) {
+        for c in &mut self.convs {
+            c.set_autotune(on);
+        }
+    }
+
+    /// Select the body activation and (re)attach each layer's fused
+    /// post-op spec by role: stem and first block conv fuse
+    /// `bias + act`, second block conv fuses `bias + act + residual`,
+    /// heads fuse `bias` only.
+    pub fn set_activation(&mut self, act: Activation) {
+        let nb = self.cfg.n_blocks;
+        let body = PostOps::bias().with_activation(act);
+        self.convs[0].set_post_ops(body);
+        for b in 0..nb {
+            self.convs[1 + 2 * b].set_post_ops(body);
+            self.convs[2 + 2 * b].set_post_ops(body.with_residual(true));
+        }
+        self.convs[1 + 2 * nb].set_post_ops(PostOps::bias());
+        self.convs[2 + 2 * nb].set_post_ops(PostOps::bias());
+    }
+
     /// Forward pass. `x: (N, 1, W)`; returns `(denoised, logits)`, both
-    /// `(N, 1, W)`. With `train` set, caches everything backward needs.
+    /// `(N, 1, W)`. With `train` set, each layer caches what its fused
+    /// backward needs (padded input + post-op output) — the returned
+    /// [`ForwardCache`] is an empty compatibility token.
+    ///
+    /// Every layer is one fused pass: the relu lives inside the conv's
+    /// output-block loop, and the skip connection is added there too
+    /// (`relu(conv(r) + bias + h)`), so no separate add/relu sweeps run.
     pub fn forward(&mut self, x: &Tensor, train: bool) -> (Tensor, Tensor, ForwardCache) {
         assert_eq!(x.c, 1, "input must be single-channel");
         let nb = self.cfg.n_blocks;
-        let mut cache = ForwardCache::default();
 
-        let mut h = self.convs[0].forward(x, train); // stem
-        let stem_mask = h.relu_inplace();
-        if train {
-            cache.stem_mask = stem_mask;
-        }
-
+        let mut h = self.convs[0].forward_fused(x, None, train); // stem: bias+act
         for b in 0..nb {
             let c1 = 1 + 2 * b;
             let c2 = c1 + 1;
-            let mut r = self.convs[c1].forward(&h, train);
-            let m1 = r.relu_inplace();
-            let r2 = self.convs[c2].forward(&r, train);
-            let mut pre = h; // move: h is consumed into the residual sum
-            pre.add_assign(&r2);
-            let m2 = pre.relu_inplace();
-            if train {
-                cache.block_masks.push((m1, m2));
-            }
-            h = pre;
+            let r = self.convs[c1].forward_fused(&h, None, train);
+            h = self.convs[c2].forward_fused(&r, Some(&h), train);
         }
 
-        let denoised = self.convs[1 + 2 * nb].forward(&h, train);
-        let logits = self.convs[2 + 2 * nb].forward(&h, train);
-        (denoised, logits, cache)
+        let denoised = self.convs[1 + 2 * nb].forward_fused(&h, None, train);
+        let logits = self.convs[2 + 2 * nb].forward_fused(&h, None, train);
+        (denoised, logits, ForwardCache::default())
     }
 
     /// Full training step math: forward + losses + backward.
@@ -165,7 +191,7 @@ impl AtacWorksNet {
         peaks: &Tensor,
     ) -> (Vec<ConvGrads>, Losses) {
         let nb = self.cfg.n_blocks;
-        let (denoised, logits, cache) = self.forward(x, true);
+        let (denoised, logits, _) = self.forward(x, true);
         let (l_mse, g_mse) = mse_with_grad(&denoised.data, &clean.data);
         let (l_bce, g_bce) = bce_with_grad(&logits.data, &peaks.data);
         let losses = Losses {
@@ -177,29 +203,32 @@ impl AtacWorksNet {
         let g_den = Tensor::from_vec(g_mse, denoised.n, denoised.c, denoised.w);
         let g_log = Tensor::from_vec(g_bce, logits.n, logits.c, logits.w);
 
-        // Heads.
-        let (gh_reg, grads_reg) = self.convs[1 + 2 * nb].backward(&g_den);
-        let (gh_cls, grads_cls) = self.convs[2 + 2 * nb].backward(&g_log);
-        let mut gh = gh_reg;
-        gh.add_assign(&gh_cls);
+        // Heads (bias fused; identity activation).
+        let (gh_reg, _, grads_reg) = self.convs[1 + 2 * nb].backward_fused(&g_den, true, false);
+        let (gh_cls, _, grads_cls) = self.convs[2 + 2 * nb].backward_fused(&g_log, true, false);
+        let mut gh = gh_reg.expect("head backward produces an input gradient");
+        gh.add_assign(&gh_cls.expect("head backward produces an input gradient"));
 
-        // Blocks, reversed.
+        // Blocks, reversed. The second conv's fused backward hands back
+        // both the branch gradient (through the conv) and the residual
+        // gradient (the skip path) from one prologue sweep.
         let mut block_grads: Vec<(ConvGrads, ConvGrads)> = Vec::with_capacity(nb);
         for b in (0..nb).rev() {
-            let (m1, m2) = &cache.block_masks[b];
-            Tensor::mask_gradient(&mut gh.data, m2); // through final ReLU
             let c1 = 1 + 2 * b;
             let c2 = c1 + 1;
-            let (mut gu, g2) = self.convs[c2].backward(&gh); // branch conv 2
-            Tensor::mask_gradient(&mut gu.data, m1); // through branch ReLU
-            let (gbranch, g1) = self.convs[c1].backward(&gu); // branch conv 1
-            gh.add_assign(&gbranch); // skip path + branch path
+            let (gu, gskip, g2) = self.convs[c2].backward_fused(&gh, true, true);
+            let (gbranch, _, g1) = self.convs[c1].backward_fused(
+                &gu.expect("block conv produces an input gradient"),
+                true,
+                false,
+            );
+            gh = gbranch.expect("block conv produces an input gradient");
+            gh.add_assign(&gskip.expect("residual gradient requested")); // skip + branch
             block_grads.push((g1, g2));
         }
 
         // Stem (input gradient not needed).
-        Tensor::mask_gradient(&mut gh.data, &cache.stem_mask);
-        let grads_stem = self.convs[0].backward_weights_only(&gh);
+        let (_, _, grads_stem) = self.convs[0].backward_fused(&gh, false, false);
 
         // Assemble in packing order.
         let mut out = Vec::with_capacity(self.convs.len());
@@ -248,12 +277,11 @@ impl AtacWorksNet {
     }
 }
 
-/// Cached activation masks from a training forward pass.
+/// Compatibility token returned by [`AtacWorksNet::forward`]. Since the
+/// fused post-op pipeline, each [`ConvSame`] caches its own backward
+/// state (padded input + saved output) — no mask tensors exist anymore.
 #[derive(Default)]
-pub struct ForwardCache {
-    stem_mask: Vec<bool>,
-    block_masks: Vec<(Vec<bool>, Vec<bool>)>,
-}
+pub struct ForwardCache {}
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,126 @@
+//! Autotuner determinism + persistence (ISSUE 2 satellite): the same
+//! shape chosen twice re-measures nothing and returns the same kernel;
+//! the tuning table round-trips through `util::json` and a reloaded
+//! table is honored without any measurement.
+
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{Autotuner, ConvParams, ConvPlan, PostOps};
+use dilconv1d::machine::Precision;
+use dilconv1d::util::json::Json;
+
+fn shape() -> ConvParams {
+    ConvParams::new(2, 8, 8, 600, 9, 4).unwrap()
+}
+
+#[test]
+fn same_shape_twice_measures_once_and_agrees() {
+    let tuner = Autotuner::new();
+    let p = shape();
+    let first = tuner.choose(&p, 1, Precision::F32);
+    let measured = tuner.measurement_count();
+    assert!(measured > 0, "first choose must micro-benchmark candidates");
+    assert_eq!(tuner.len(), 1);
+    // Second choose: identical decision, ZERO re-measurement.
+    let second = tuner.choose(&p, 1, Precision::F32);
+    assert_eq!(first.name(), second.name());
+    assert_eq!(
+        tuner.measurement_count(),
+        measured,
+        "repeated shape must not re-measure"
+    );
+    // A different shape is a different key and measures again.
+    let p2 = ConvParams::new(1, 3, 3, 300, 5, 2).unwrap();
+    tuner.choose(&p2, 1, Precision::F32);
+    assert!(tuner.measurement_count() > measured);
+    assert_eq!(tuner.len(), 2);
+}
+
+#[test]
+fn table_round_trips_through_util_json_and_is_honored_on_reload() {
+    let tuner = Autotuner::new();
+    let p = shape();
+    let chosen = tuner.choose(&p, 1, Precision::F32);
+    let json = tuner.to_json();
+    // The persisted table is valid JSON for the in-tree parser and keeps
+    // the entry under the shape key.
+    let doc = Json::parse(&json).expect("tuning table must be valid JSON");
+    assert_eq!(doc.get("version").and_then(Json::as_usize), Some(1));
+    let entries = doc.get("entries").and_then(Json::as_obj).unwrap();
+    assert_eq!(entries.len(), 1);
+    let key = Autotuner::key(&p, 1, Precision::F32);
+    assert_eq!(
+        entries[&key].get("kernel").and_then(Json::as_str),
+        Some(chosen.name())
+    );
+
+    // Reload into a fresh tuner: the decision is honored with zero
+    // measurements.
+    let fresh = Autotuner::new();
+    assert_eq!(fresh.load_json(&json).unwrap(), 1);
+    let again = fresh.choose(&p, 1, Precision::F32);
+    assert_eq!(again.name(), chosen.name());
+    assert_eq!(fresh.measurement_count(), 0, "reloaded table must preempt measurement");
+}
+
+#[test]
+fn persisted_entry_overrides_measurement_even_for_a_slow_kernel() {
+    // Force-load a table pinning the naive kernel: choose() must honor
+    // it (the table is authoritative; it would never win a measurement).
+    let tuner = Autotuner::new();
+    let p = shape();
+    let key = Autotuner::key(&p, 1, Precision::F32);
+    let json = format!(
+        "{{\"version\": 1, \"entries\": {{\"{key}\": {{\"kernel\": \"direct\", \"micros\": 1.0}}}}}}"
+    );
+    assert_eq!(tuner.load_json(&json).unwrap(), 1);
+    let k = tuner.choose(&p, 1, Precision::F32);
+    assert_eq!(k.name(), "direct");
+    assert_eq!(tuner.measurement_count(), 0);
+    // Unknown kernels in a persisted table are skipped, not honored.
+    let bad = format!(
+        "{{\"version\": 1, \"entries\": {{\"{key}\": {{\"kernel\": \"cuda\", \"micros\": 1.0}}}}}}"
+    );
+    let t2 = Autotuner::new();
+    assert_eq!(t2.load_json(&bad).unwrap(), 0);
+}
+
+#[test]
+fn file_round_trip_and_plan_integration() {
+    let tuner = Autotuner::new();
+    let p = shape();
+    tuner.choose(&p, 1, Precision::F32);
+    let dir = std::env::temp_dir().join("dilconv_tune_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune.json");
+    tuner.save(&path).unwrap();
+    let fresh = Autotuner::new();
+    assert_eq!(fresh.load(&path).unwrap(), 1);
+    assert_eq!(
+        fresh.entry(&p, 1, Precision::F32).unwrap().kernel,
+        tuner.entry(&p, 1, Precision::F32).unwrap().kernel
+    );
+
+    // ConvPlan::tuned routes through the process-wide tuner and produces
+    // the same numbers as an explicitly-selected plan of that kernel.
+    let wt = rnd(p.k * p.c * p.s, 9);
+    let x = rnd(p.n * p.c * p.w, 10);
+    let mut tuned = ConvPlan::tuned(p, Precision::F32, 1, wt.clone()).unwrap();
+    let mut fixed = ConvPlan::by_name(p, tuned.kernel_name(), 1, wt).unwrap();
+    let mut a = vec![0.0f32; p.n * p.k * p.q()];
+    let mut b = vec![0.0f32; p.n * p.k * p.q()];
+    tuned.execute_forward_into(&x, &mut a);
+    fixed.execute_forward_into(&x, &mut b);
+    assert_eq!(a, b);
+    // bf16 precision short-circuits to the bf16 kernel.
+    let bf = ConvPlan::tuned(p, Precision::Bf16, 1, rnd(p.k * p.c * p.s, 11)).unwrap();
+    assert_eq!(bf.kernel_name(), "bf16");
+    assert_eq!(bf.precision(), Precision::Bf16);
+    // Fused post-ops compose with tuned plans.
+    let mut post = ConvPlan::tuned(p, Precision::F32, 1, rnd(p.k * p.c * p.s, 12))
+        .unwrap()
+        .with_post_ops(PostOps::bias_relu());
+    post.set_bias(&rnd(p.k, 13));
+    let mut out = vec![0.0f32; p.n * p.k * p.q()];
+    post.execute_forward_post_into(&x, None, &mut out);
+    assert!(out.iter().all(|v| *v >= 0.0), "relu epilogue must clamp");
+}

@@ -1,0 +1,302 @@
+//! Cross-backend conformance matrix (ISSUE 2 acceptance criterion):
+//! every registry kernel × every post-op combo, over an exhaustive
+//! small-shape grid — kw ∈ {1,3,5,11}, dilation ∈ {1,2,4,8},
+//! stride ∈ {1,2}, C,K ∈ {1,3,16,17}, odd input widths — compared
+//! against a naive scalar reference written *in this file* (f64
+//! accumulation, no shared code with the kernels), with per-case error
+//! reporting on failure.
+//!
+//! Tolerances are the acceptance bounds: 1e-4 max abs error for f32
+//! kernels, 2e-2 for the bf16 kernel.
+
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{kernels, Activation, ConvParams, ConvPlan, PostOps};
+
+/// Scalar f64 reference of the raw convolution (valid, strided):
+/// `out[n,k,j] = Σ_c Σ_s x[n,c,j·stride + s·d] · w[k,c,s]`.
+fn reference_conv(p: &ConvParams, x: &[f32], wt: &[f32]) -> Vec<f64> {
+    let (n, c, k, s, d, w, q, st) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q(), p.stride);
+    let mut out = vec![0.0f64; n * k * q];
+    for ib in 0..n {
+        for ik in 0..k {
+            for j in 0..q {
+                let mut acc = 0.0f64;
+                for ic in 0..c {
+                    for is in 0..s {
+                        let xv = x[(ib * c + ic) * w + j * st + is * d] as f64;
+                        let wv = wt[(ik * c + ic) * s + is] as f64;
+                        acc += xv * wv;
+                    }
+                }
+                out[(ib * k + ik) * q + j] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Scalar epilogue on the f64 reference: `act(scale·conv + bias + res)`.
+fn reference_post(
+    conv: &[f64],
+    ops: &PostOps,
+    bias: &[f32],
+    res: Option<&[f32]>,
+    n: usize,
+    k: usize,
+    q: usize,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; conv.len()];
+    for ib in 0..n {
+        for ik in 0..k {
+            for j in 0..q {
+                let at = (ib * k + ik) * q + j;
+                let mut v = ops.scale as f64 * conv[at];
+                if ops.bias {
+                    v += bias[ik] as f64;
+                }
+                if ops.residual {
+                    v += res.expect("residual data")[at] as f64;
+                }
+                out[at] = match ops.activation {
+                    Activation::Identity => v,
+                    Activation::Relu => v.max(0.0),
+                    Activation::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+                };
+            }
+        }
+    }
+    out
+}
+
+/// Compare with per-case error reporting: on failure, print the case
+/// label, the worst index and the full error statistics.
+fn assert_close(case: &str, got: &[f32], want: &[f64], tol: f64) {
+    assert_eq!(got.len(), want.len(), "{case}: length mismatch");
+    let mut max_err = 0.0f64;
+    let mut max_at = 0usize;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let e = (*g as f64 - w).abs();
+        if e > max_err {
+            max_err = e;
+            max_at = i;
+        }
+    }
+    assert!(
+        max_err <= tol,
+        "{case}: max abs err {max_err:.3e} > {tol:.1e} at idx {max_at} \
+         (got {}, want {})",
+        got[max_at],
+        want[max_at],
+    );
+}
+
+/// The post-op combos the matrix crosses every kernel with.
+fn post_combos() -> Vec<PostOps> {
+    vec![
+        PostOps::none(),
+        PostOps::bias(),
+        PostOps::bias_relu(),
+        PostOps::parse("bias_sigmoid").unwrap(),
+        PostOps::bias_relu_residual(),
+        PostOps::bias_relu().with_scale(0.5),
+    ]
+}
+
+#[test]
+fn forward_matrix_all_kernels_all_post_ops() {
+    let mut cases = 0usize;
+    for &s in &[1usize, 3, 5, 11] {
+        for &d in &[1usize, 2, 4, 8] {
+            if s == 1 && d > 1 {
+                continue; // dilation is meaningless for a 1-tap filter
+            }
+            for &stride in &[1usize, 2] {
+                for &c in &[1usize, 3, 16, 17] {
+                    for &k in &[1usize, 3, 16, 17] {
+                        let span = (s - 1) * d + 1;
+                        // Odd input width, ≥ 12 output columns at stride 1.
+                        let mut w = span + 12;
+                        if w % 2 == 0 {
+                            w += 1;
+                        }
+                        let p = ConvParams::new(2, c, k, w, s, d)
+                            .unwrap()
+                            .with_stride(stride)
+                            .unwrap();
+                        run_forward_case(&p, &mut cases);
+                    }
+                }
+            }
+        }
+    }
+    // 13 distinct (kw, d) pairs (kw=1 collapses the dilation axis)
+    // × 2 stride × 4 C × 4 K shapes, every kernel × combo.
+    assert_eq!(cases, 13 * 2 * 16 * kernels().len() * post_combos().len());
+}
+
+fn run_forward_case(p: &ConvParams, cases: &mut usize) {
+    let seed = (p.s * 31 + p.d * 7 + p.c * 3 + p.k + p.stride) as u64;
+    let x = rnd(p.n * p.c * p.w, seed);
+    // Modest weight magnitudes keep the bf16 accumulation error well
+    // inside the 2e-2 acceptance bound even at C·S = 187 taps.
+    let wt: Vec<f32> = rnd(p.k * p.c * p.s, seed + 1).iter().map(|v| v * 0.25).collect();
+    let bias = rnd(p.k, seed + 2);
+    let res = rnd(p.n * p.k * p.q(), seed + 3);
+    let conv_ref = reference_conv(p, &x, &wt);
+    for kernel in kernels() {
+        let mut plan = ConvPlan::with_kernel(*p, *kernel, 1, wt.clone())
+            .unwrap_or_else(|e| panic!("{p} {}: {e}", kernel.name()));
+        plan.set_bias(&bias);
+        let mut out = vec![0.0f32; p.n * p.k * p.q()];
+        for ops in post_combos() {
+            plan.set_post_ops(ops);
+            let residual = if ops.residual { Some(&res[..]) } else { None };
+            plan.execute_forward_post_into(&x, residual, &mut out);
+            let want = reference_post(&conv_ref, &ops, &bias, residual, p.n, p.k, p.q());
+            let tol = if kernel.name() == "bf16" { 2e-2 } else { 1e-4 };
+            let case = format!("{p} kernel={} post={}", kernel.name(), ops);
+            assert_close(&case, &out, &want, tol);
+            *cases += 1;
+        }
+    }
+}
+
+/// Scalar backward-data reference at the problem's stride (f64):
+/// the adjoint of [`reference_conv`].
+fn reference_backward_data(p: &ConvParams, dconv: &[f64], wt: &[f32]) -> Vec<f64> {
+    let (n, c, k, s, d, w, q, st) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q(), p.stride);
+    let mut gin = vec![0.0f64; n * c * w];
+    for ib in 0..n {
+        for ik in 0..k {
+            for j in 0..q {
+                let g = dconv[(ib * k + ik) * q + j];
+                for ic in 0..c {
+                    for is in 0..s {
+                        let wv = wt[(ik * c + ic) * s + is] as f64;
+                        gin[(ib * c + ic) * w + j * st + is * d] += g * wv;
+                    }
+                }
+            }
+        }
+    }
+    gin
+}
+
+/// Scalar backward-weight reference (f64).
+fn reference_backward_weight(p: &ConvParams, dconv: &[f64], x: &[f32]) -> Vec<f64> {
+    let (n, c, k, s, d, w, q, st) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q(), p.stride);
+    let mut gw = vec![0.0f64; k * c * s];
+    for ib in 0..n {
+        for ik in 0..k {
+            for j in 0..q {
+                let g = dconv[(ib * k + ik) * q + j];
+                for ic in 0..c {
+                    for is in 0..s {
+                        gw[(ik * c + ic) * s + is] += g * x[(ib * c + ic) * w + j * st + is * d] as f64;
+                    }
+                }
+            }
+        }
+    }
+    gw
+}
+
+#[test]
+fn fused_backward_matrix_subgrid() {
+    // Every kernel × the fused backward-relevant combos on a compact
+    // shape subgrid (both strides, odd widths).
+    let combos = [
+        PostOps::bias(),
+        PostOps::bias_relu(),
+        PostOps::bias_relu_residual().with_scale(0.5),
+    ];
+    for &(c, k, s, d) in &[(3usize, 16usize, 3usize, 1usize), (17, 3, 11, 4), (16, 16, 5, 2)] {
+        for &stride in &[1usize, 2] {
+            let span = (s - 1) * d + 1;
+            let mut w = span + 12;
+            if w % 2 == 0 {
+                w += 1;
+            }
+            let p = ConvParams::new(2, c, k, w, s, d)
+                .unwrap()
+                .with_stride(stride)
+                .unwrap();
+            let seed = (c * 5 + k + s + d + stride) as u64;
+            let x = rnd(p.n * p.c * p.w, seed);
+            let wt: Vec<f32> = rnd(p.k * p.c * p.s, seed + 1).iter().map(|v| v * 0.25).collect();
+            let bias = rnd(p.k, seed + 2);
+            let res = rnd(p.n * p.k * p.q(), seed + 3);
+            let gout = rnd(p.n * p.k * p.q(), seed + 4);
+            for kernel in kernels() {
+                for &ops in combos.iter() {
+                    let mut plan = ConvPlan::with_kernel(*p, *kernel, 1, wt.clone())
+                        .unwrap()
+                        .with_post_ops(ops);
+                    plan.set_bias(&bias);
+                    let residual = if ops.residual { Some(&res[..]) } else { None };
+                    let mut y = vec![0.0f32; p.n * p.k * p.q()];
+                    plan.execute_forward_post_into(&x, residual, &mut y);
+                    let mut gin = vec![0.0f32; p.n * p.c * p.w];
+                    let mut gw = vec![0.0f32; p.k * p.c * p.s];
+                    let mut gb = vec![0.0f32; p.k];
+                    let mut gres = vec![0.0f32; p.n * p.k * p.q()];
+                    plan.execute_backward_fused_into(
+                        &gout,
+                        &y,
+                        &x,
+                        Some(&mut gin),
+                        &mut gw,
+                        Some(&mut gb),
+                        Some(&mut gres),
+                    );
+                    // Scalar reference of the fused backward, from the
+                    // *same saved output* y (the contract of the API).
+                    let (n, kk, q) = (p.n, p.k, p.q());
+                    let mut dz = vec![0.0f64; n * kk * q];
+                    let mut gb_want = vec![0.0f64; kk];
+                    for ib in 0..n {
+                        for ik in 0..kk {
+                            for j in 0..q {
+                                let at = (ib * kk + ik) * q + j;
+                                let a = match ops.activation {
+                                    Activation::Identity => 1.0f64,
+                                    Activation::Relu => {
+                                        if y[at] > 0.0 {
+                                            1.0
+                                        } else {
+                                            0.0
+                                        }
+                                    }
+                                    Activation::Sigmoid => {
+                                        y[at] as f64 * (1.0 - y[at] as f64)
+                                    }
+                                };
+                                dz[at] = gout[at] as f64 * a;
+                                gb_want[ik] += dz[at];
+                            }
+                        }
+                    }
+                    let dconv: Vec<f64> = dz.iter().map(|v| v * ops.scale as f64).collect();
+                    let gin_want = reference_backward_data(&p, &dconv, &wt);
+                    let gw_want = reference_backward_weight(&p, &dconv, &x);
+                    let tol = if kernel.name() == "bf16" { 2e-2 } else { 1e-4 };
+                    let case = format!(
+                        "{p} kernel={} post={} (fused backward)",
+                        kernel.name(),
+                        ops
+                    );
+                    // A residual that was never fused has zero gradient.
+                    let gres_want = if ops.residual {
+                        dz.clone()
+                    } else {
+                        vec![0.0f64; dz.len()]
+                    };
+                    assert_close(&format!("{case} / gres"), &gres, &gres_want, tol);
+                    assert_close(&format!("{case} / gb"), &gb, &gb_want, 1e-3);
+                    assert_close(&format!("{case} / gin"), &gin, &gin_want, 1e-3);
+                    assert_close(&format!("{case} / gw"), &gw, &gw_want, 1e-3);
+                }
+            }
+        }
+    }
+}

@@ -122,6 +122,114 @@ fn param_count_matches_paper_model() {
     assert!(expect > 250_000 && expect < 300_000, "{expect}");
 }
 
+/// Finite-difference harness for the fused post-op backward: builds a
+/// `ConvSame` with the given spec, runs one fused forward/backward, then
+/// checks every analytic gradient (weights, bias, input, residual)
+/// against central differences of `loss = Σ g ⊙ forward(...)`.
+/// Returns `(checked, ok)` pairs per group so callers choose strictness.
+fn fused_fd_check(post_name: &str) -> Vec<(usize, usize)> {
+    use dilconv1d::conv1d::PostOps;
+    use dilconv1d::model::{ConvSame, Tensor};
+    let (c, k, s, d, n, w) = (2usize, 3usize, 3usize, 2usize, 1usize, 20usize);
+    let w0 = rnd(k * c * s, 50);
+    let b0 = rnd(k, 51);
+    let x0 = rnd(n * c * w, 52);
+    let r0 = rnd(n * k * w, 53);
+    let g = rnd(n * k * w, 54);
+    let post = PostOps::parse(post_name).unwrap();
+
+    let make = |wv: &[f32], bv: &[f32]| {
+        let mut l = ConvSame::new(c, k, s, d, wv.to_vec());
+        l.conv.bias = bv.to_vec();
+        l.set_post_ops(post);
+        l
+    };
+    let loss = |wv: &[f32], bv: &[f32], xv: &[f32], rv: &[f32]| -> f64 {
+        let mut l = make(wv, bv);
+        let res_t = Tensor::from_vec(rv.to_vec(), n, k, w);
+        let res = if post.residual { Some(&res_t) } else { None };
+        let y = l.forward_fused(&Tensor::from_vec(xv.to_vec(), n, c, w), res, false);
+        y.data.iter().zip(&g).map(|(a, b)| *a as f64 * *b as f64).sum()
+    };
+
+    let mut layer = make(&w0, &b0);
+    let x = Tensor::from_vec(x0.clone(), n, c, w);
+    let res_t = Tensor::from_vec(r0.clone(), n, k, w);
+    let res = if post.residual { Some(&res_t) } else { None };
+    layer.forward_fused(&x, res, true);
+    let (gin, gres, grads) =
+        layer.backward_fused(&Tensor::from_vec(g.clone(), n, k, w), true, post.residual);
+    let gin = gin.unwrap();
+
+    fn check_group(
+        results: &mut Vec<(usize, usize)>,
+        analytic: &[f32],
+        eps: f32,
+        mut perturb: impl FnMut(usize, f32) -> f64,
+    ) {
+        let (mut checked, mut ok) = (0usize, 0usize);
+        for (i, a) in analytic.iter().enumerate() {
+            let fd = (perturb(i, eps) - perturb(i, -eps)) / (2.0 * eps as f64);
+            checked += 1;
+            if (fd - *a as f64).abs() < 3e-2 * (1.0 + a.abs() as f64) {
+                ok += 1;
+            }
+        }
+        results.push((checked, ok));
+    }
+
+    let eps = 1e-2f32;
+    let mut results = Vec::new();
+    check_group(&mut results, &grads.w, eps, |i, e| {
+        let mut v = w0.clone();
+        v[i] += e;
+        loss(&v, &b0, &x0, &r0)
+    });
+    check_group(&mut results, &grads.b, eps, |i, e| {
+        let mut v = b0.clone();
+        v[i] += e;
+        loss(&w0, &v, &x0, &r0)
+    });
+    check_group(&mut results, &gin.data, eps, |i, e| {
+        let mut v = x0.clone();
+        v[i] += e;
+        loss(&w0, &b0, &v, &r0)
+    });
+    if post.residual {
+        let gres = gres.unwrap();
+        check_group(&mut results, &gres.data, eps, |i, e| {
+            let mut v = r0.clone();
+            v[i] += e;
+            loss(&w0, &b0, &x0, &v)
+        });
+    }
+    results
+}
+
+#[test]
+fn fused_sigmoid_backward_matches_finite_difference_exactly() {
+    // Sigmoid is smooth: every single gradient entry must match its
+    // central difference.
+    for (checked, ok) in fused_fd_check("bias_sigmoid") {
+        assert!(checked > 0);
+        assert_eq!(ok, checked, "{ok}/{checked} sigmoid gradients matched");
+    }
+}
+
+#[test]
+fn fused_relu_residual_backward_matches_finite_difference() {
+    // ReLU kinks make individual central differences unreliable exactly
+    // at zero activations; require a large majority per gradient group
+    // (the exact-equality lockdown lives in prop_conv.rs).
+    for (checked, ok) in fused_fd_check("bias_relu_residual") {
+        assert!(checked > 0);
+        assert!(
+            ok * 10 >= checked * 9,
+            "only {ok}/{checked} relu/residual gradients matched"
+        );
+    }
+}
+
 #[test]
 fn wide_track_regression_60k() {
     // Full paper width: 60 000-wide track through the AtacWorks layer.

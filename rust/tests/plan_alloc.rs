@@ -13,7 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{ConvParams, ConvPlan};
+use dilconv1d::conv1d::{ConvParams, ConvPlan, PostOps};
 
 struct CountingAllocator;
 
@@ -113,5 +113,43 @@ fn steady_state_executors_do_not_allocate() {
             plan.execute_forward(&x);
         });
         assert_eq!(fwd_owned, 0, "{kernel}: execute_forward allocated");
+
+        // Fused post-op pipeline: the bias+relu+residual epilogue runs
+        // inside the kernel's block loop (one pass over the output) and
+        // the fused backward's prologue buffer is part of the workspace —
+        // both must stay zero-allocation in steady state.
+        let bias = rnd(k, 5);
+        let residual = rnd(n * k * p.q(), 6);
+        plan.set_post_ops(PostOps::bias_relu_residual());
+        plan.set_bias(&bias);
+        let mut y = vec![0.0f32; n * k * p.q()];
+        let mut gb = vec![0.0f32; k];
+        let mut gres = vec![0.0f32; n * k * p.q()];
+        // Warm once (bias copy + gpre growth happen here).
+        plan.execute_forward_post_into(&x, Some(&residual), &mut y);
+        plan.execute_backward_fused_into(
+            &gout,
+            &y,
+            &x,
+            Some(&mut gin),
+            &mut gw,
+            Some(&mut gb),
+            Some(&mut gres),
+        );
+        let fwd_post =
+            allocs_during(|| plan.execute_forward_post_into(&x, Some(&residual), &mut y));
+        assert_eq!(fwd_post, 0, "{kernel}: execute_forward_post_into allocated");
+        let bwd_fused = allocs_during(|| {
+            plan.execute_backward_fused_into(
+                &gout,
+                &y,
+                &x,
+                Some(&mut gin),
+                &mut gw,
+                Some(&mut gb),
+                Some(&mut gres),
+            )
+        });
+        assert_eq!(bwd_fused, 0, "{kernel}: execute_backward_fused_into allocated");
     }
 }

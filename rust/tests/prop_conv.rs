@@ -13,7 +13,7 @@ use dilconv1d::conv1d::layout::{
     kcs_to_sck_flipped, kcs_to_skc, pad_width, sck_to_kcs, skc_to_kcs, unpad_width,
 };
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams, ConvPlan};
+use dilconv1d::conv1d::{Backend, Conv1dLayer, ConvParams, ConvPlan, PostOps};
 use dilconv1d::machine::Precision;
 use dilconv1d::util::rng::Rng;
 
@@ -270,6 +270,88 @@ fn prop_bf16_plan_is_deterministic_and_tracks_f32() {
             .unwrap()
             .execute_forward_into(&x, &mut f32_out);
         close(&o1, &f32_out, 6e-2, "bf16 vs f32", case);
+    }
+}
+
+#[test]
+fn prop_fused_forward_with_no_post_ops_is_bit_identical() {
+    // PostOps::none(): the fused entry point must be indistinguishable —
+    // bit for bit — from the raw forward, on every kernel.
+    let mut rng = Rng::new(0xFB);
+    for case in 0..12 {
+        let p = arb_problem(&mut rng);
+        let wt = rnd(p.k * p.c * p.s, 1100 + case);
+        let x = rnd(p.n * p.c * p.w, 1150 + case);
+        for name in ["brgemm", "im2col", "direct", "bf16"] {
+            let mut plan = ConvPlan::by_name(p, name, 1, wt.clone()).unwrap();
+            assert!(plan.post_ops().is_none(), "default spec is none");
+            let mut raw = vec![0.0; p.n * p.k * p.q()];
+            plan.execute_forward_into(&x, &mut raw);
+            let mut fused = vec![0.0; p.n * p.k * p.q()];
+            plan.execute_forward_post_into(&x, None, &mut fused);
+            assert_eq!(raw, fused, "case {case} {name}: fused != unfused at none()");
+        }
+    }
+}
+
+#[test]
+fn prop_fused_relu_backward_equals_masked_unfused_backward() {
+    // Exact (bit-level) agreement: the fused relu backward must produce
+    // the same gradients as masking the output gradient by `y > 0` and
+    // running the raw backward passes — per kernel, across dilations.
+    let mut rng = Rng::new(0xFC);
+    for case in 0..10 {
+        let p = arb_problem(&mut rng);
+        let wt = rnd(p.k * p.c * p.s, 1200 + case);
+        let x = rnd(p.n * p.c * p.w, 1250 + case);
+        let bias = rnd(p.k, 1300 + case);
+        let gout = rnd(p.n * p.k * p.q(), 1350 + case);
+        for name in ["brgemm", "im2col", "direct"] {
+            let mut plan = ConvPlan::by_name(p, name, 1, wt.clone())
+                .unwrap()
+                .with_post_ops(PostOps::bias_relu());
+            plan.set_bias(&bias);
+            let mut y = vec![0.0; p.n * p.k * p.q()];
+            plan.execute_forward_post_into(&x, None, &mut y);
+            let mut gin = vec![0.0; p.n * p.c * p.w];
+            let mut gw = vec![0.0; p.k * p.c * p.s];
+            let mut gb = vec![0.0; p.k];
+            plan.execute_backward_fused_into(
+                &gout,
+                &y,
+                &x,
+                Some(&mut gin),
+                &mut gw,
+                Some(&mut gb),
+                None,
+            );
+            // Unfused oracle: mask, then the raw backward executors.
+            let masked: Vec<f32> = gout
+                .iter()
+                .zip(&y)
+                .map(|(g, yy)| if *yy > 0.0 { *g } else { 0.0 })
+                .collect();
+            let mut gin_want = vec![0.0; p.n * p.c * p.w];
+            plan.execute_backward_data_into(&masked, &mut gin_want);
+            let mut gw_want = vec![0.0; p.k * p.c * p.s];
+            plan.execute_backward_weight_into(&masked, &x, &mut gw_want);
+            assert_eq!(gin, gin_want, "case {case} {name}: fused gin");
+            assert_eq!(gw, gw_want, "case {case} {name}: fused gw");
+            // Bias gradient = per-filter sum of the masked gradient.
+            for ik in 0..p.k {
+                let mut want = 0.0f32;
+                for ib in 0..p.n {
+                    want += masked[(ib * p.k + ik) * p.q()..(ib * p.k + ik + 1) * p.q()]
+                        .iter()
+                        .sum::<f32>();
+                }
+                assert!(
+                    (gb[ik] - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "case {case} {name}: gb[{ik}] {} vs {want}",
+                    gb[ik]
+                );
+            }
+        }
     }
 }
 
