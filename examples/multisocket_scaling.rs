@@ -15,30 +15,54 @@ use dilconv1d::machine::{MachineSpec, Precision, Strategy};
 
 fn main() {
     // ---- measured: real data-parallel replicas on this host ----
+    // Each socket count runs twice: the monolithic post-backward
+    // all-reduce and the bucketed, backward-overlapped one (DESIGN.md
+    // §6). The two are bit-identical by construction (aligned ring);
+    // "exposed" is the modeled part of the collective a backward pass
+    // would not hide.
     println!("== measured: in-process data-parallel training (scaled workload) ==");
-    println!("sockets | steps | train s | loss      | comm(model) s");
+    println!("sockets | all-reduce        | steps | train s | loss      | comm(model) s | exposed s");
     let mut params_per_socket = Vec::new();
     for &sockets in &[1usize, 2, 4] {
-        let cfg = TrainConfig {
-            channels: 8,
-            n_blocks: 2,
-            filter_size: 15,
-            dilation: 4,
-            segment_width: 600,
-            segment_pad: 60,
-            train_segments: 16,
-            batch_size: 4,
-            epochs: 1,
-            sockets,
-            ..TrainConfig::default()
-        };
-        let mut t = Trainer::new(cfg).expect("trainer");
-        let r = t.run_epoch(0);
-        println!(
-            "{sockets:>7} | {:>5} | {:>7.2} | {:>9.5} | {:.4}",
-            r.steps, r.timing.train_secs, r.train_loss, r.modeled_comm_secs
-        );
-        params_per_socket.push(t.params().to_vec());
+        let mut params_mono: Option<Vec<f32>> = None;
+        for overlap in [false, true] {
+            let cfg = TrainConfig {
+                channels: 8,
+                n_blocks: 2,
+                filter_size: 15,
+                dilation: 4,
+                segment_width: 600,
+                segment_pad: 60,
+                train_segments: 16,
+                batch_size: 4,
+                epochs: 1,
+                sockets,
+                overlap,
+                bucket_mb: 0.005,
+                ..TrainConfig::default()
+            };
+            let mut t = Trainer::new(cfg).expect("trainer");
+            let r = t.run_epoch(0);
+            println!(
+                "{sockets:>7} | {:<17} | {:>5} | {:>7.2} | {:>9.5} | {:>13.4} | {:.4}",
+                if overlap { "bucketed+overlap" } else { "monolithic" },
+                r.steps,
+                r.timing.train_secs,
+                r.train_loss,
+                r.modeled_comm_secs,
+                r.exposed_comm_secs,
+            );
+            if overlap {
+                assert_eq!(
+                    params_mono.as_deref(),
+                    Some(t.params()),
+                    "overlapped all-reduce must be bit-identical to monolithic at {sockets} sockets"
+                );
+            } else {
+                params_mono = Some(t.params().to_vec());
+            }
+        }
+        params_per_socket.push(params_mono.expect("monolithic run recorded"));
     }
     // Data-parallel correctness: identical trajectories regardless of P.
     for (i, p) in params_per_socket.iter().enumerate().skip(1) {

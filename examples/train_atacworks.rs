@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (DESIGN.md §6, T1/FIG7): train the full 25-layer
+//! END-TO-END DRIVER (DESIGN.md §7, T1/FIG7): train the full 25-layer
 //! AtacWorks-like dilated-conv ResNet on synthetic ATAC-seq data with the
 //! paper's BRGEMM kernels, logging the loss curve and validation AUROC
 //! per epoch — the paper's Sec. 4.4 experiment at host scale.
@@ -7,17 +7,25 @@
 //! loader → sharded gradient computation through the Algorithm 2/3/4
 //! kernels → ring all-reduce → Adam → AUROC evaluation.
 //!
-//! Run: `cargo run --release --example train_atacworks -- [epochs] [width]`
-//! Defaults (epochs=6, width=1200) finish in a few minutes on one core.
-//! The recorded run lives in EXPERIMENTS.md §T1.
+//! Run: `cargo run --release --example train_atacworks -- [epochs] [width] [precision]`
+//! Defaults (epochs=6, width=1200, precision=f32) finish in a few
+//! minutes on one core. `precision=bf16` exercises the paper's BF16
+//! recipe: bf16 working weights + kernels, FP32 master weights and
+//! gradient accumulation (split Adam). The recorded run lives in
+//! EXPERIMENTS.md §T1.
 
 use dilconv1d::config::TrainConfig;
 use dilconv1d::coordinator::Trainer;
+use dilconv1d::machine::Precision;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
     let width: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1_200);
+    let precision = match args.get(3).map(String::as_str) {
+        Some("bf16") => Precision::Bf16,
+        _ => Precision::F32,
+    };
 
     // The paper's architecture verbatim (25 conv layers, ch=15, S=51, d=8);
     // track width and dataset size scaled from 50 000/32 000 to host scale.
@@ -32,11 +40,12 @@ fn main() {
         batch_size: 4,
         epochs,
         lr: 2e-4,
+        precision,
         ..TrainConfig::default()
     };
     println!(
         "== AtacWorks end-to-end training ==\n25 conv layers (ch={}, S={}, d={}), \
-         track width {} (+{} pad), {} train segments, batch {}, {} epochs",
+         track width {} (+{} pad), {} train segments, batch {}, {} epochs, {:?}",
         cfg.channels,
         cfg.filter_size,
         cfg.dilation,
@@ -44,7 +53,8 @@ fn main() {
         cfg.segment_pad,
         cfg.train_segments,
         cfg.batch_size,
-        cfg.epochs
+        cfg.epochs,
+        cfg.precision
     );
     let mut trainer = Trainer::new(cfg).expect("trainer construction");
     println!(

@@ -1,4 +1,4 @@
-//! BENCH — ablation of the paper's design choices (DESIGN.md §6):
+//! BENCH — ablation of the paper's design choices (DESIGN.md §7):
 //!
 //! 1. **Width-block length**: the paper fixes the cache block at 64
 //!    (Sec. 3, LIBXSMM's `(mnk)^{1/3} ≤ 64` heuristic). Sweep

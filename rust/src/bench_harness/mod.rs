@@ -1,7 +1,7 @@
 //! Benchmark harness: timing runner ([`runner`]), paper-grid sweeps
 //! ([`sweep`]) and report emitters ([`tables`]). Each bench binary in
 //! `rust/benches/` and the `dilconv sweep`/`bench` subcommands build on
-//! these to regenerate the paper's tables and figures (DESIGN.md §6).
+//! these to regenerate the paper's tables and figures (DESIGN.md §7).
 
 pub mod runner;
 pub mod sweep;

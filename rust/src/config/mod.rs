@@ -39,6 +39,16 @@ pub struct TrainConfig {
     /// Persisted tuning table (JSON): loaded before training to
     /// warm-start the autotuner, written back after.
     pub tune_cache: Option<String>,
+    // Distributed training (DESIGN.md §6).
+    /// Overlap gradient communication with the backward pass: fire each
+    /// gradient bucket's ring all-reduce the moment its layers finish
+    /// differentiating (`overlap = true`), instead of one monolithic
+    /// all-reduce after backward. Bit-identical results either way.
+    pub overlap: bool,
+    /// Gradient bucket budget in MiB (`bucket_mb = 4.0`): the flat
+    /// gradient is cut into whole-layer buckets of at most this many
+    /// bytes, in backward completion order.
+    pub bucket_mb: f64,
     // Topology.
     pub sockets: usize,
     pub threads_per_socket: usize,
@@ -63,6 +73,8 @@ impl Default for TrainConfig {
             post_ops: PostOps::bias_relu(),
             autotune: false,
             tune_cache: None,
+            overlap: false,
+            bucket_mb: 4.0,
             sockets: 1,
             threads_per_socket: 1,
         }
@@ -135,6 +147,15 @@ impl TrainConfig {
         if let Some(s) = toml::get_str(&doc, "train", "tune_cache") {
             cfg.tune_cache = Some(s.to_string());
         }
+        if let Some(b) = toml::get_bool(&doc, "train", "overlap") {
+            cfg.overlap = b;
+        }
+        if let Some(v) = toml::get_f64(&doc, "train", "bucket_mb") {
+            if v <= 0.0 {
+                return Err(anyhow!("bucket_mb must be positive, got {v}"));
+            }
+            cfg.bucket_mb = v;
+        }
         Ok(cfg)
     }
 
@@ -163,6 +184,11 @@ impl TrainConfig {
     /// Padded track width the network sees.
     pub fn padded_width(&self) -> usize {
         self.segment_width + 2 * self.segment_pad
+    }
+
+    /// The gradient bucket budget in bytes (f32 elements × 4).
+    pub fn bucket_bytes(&self) -> usize {
+        (self.bucket_mb * 1024.0 * 1024.0).max(4.0) as usize
     }
 }
 
@@ -227,6 +253,10 @@ tune_cache = "tune.json"
         assert_eq!(c.post_ops, PostOps::parse("bias_sigmoid").unwrap());
         assert!(c.autotune);
         assert_eq!(c.tune_cache.as_deref(), Some("tune.json"));
+        // Distributed keys default off / 4 MiB.
+        assert!(!c.overlap);
+        assert_eq!(c.bucket_mb, 4.0);
+        assert_eq!(c.bucket_bytes(), 4 * 1024 * 1024);
         // Defaults: fused bias+relu, no autotune.
         let d = TrainConfig::default();
         assert_eq!(d.post_ops, PostOps::bias_relu());
@@ -250,6 +280,21 @@ tune_cache = "tune.json"
         assert_eq!(c.backend, Backend::Im2col);
         assert_eq!(c.precision, Precision::F32);
         assert!(c.apply_backend_name("cuda").is_err());
+    }
+
+    #[test]
+    fn overlap_and_bucket_keys() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(&p, "[train]\noverlap = true\nbucket_mb = 0.5\n").unwrap();
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert!(c.overlap);
+        assert_eq!(c.bucket_mb, 0.5);
+        assert_eq!(c.bucket_bytes(), 512 * 1024);
+        // Non-positive budgets fail loudly.
+        std::fs::write(&p, "[train]\nbucket_mb = 0\n").unwrap();
+        assert!(TrainConfig::from_file(&p).is_err());
     }
 
     #[test]

@@ -84,6 +84,26 @@ pub struct FusedGrads {
 
 /// A 1D dilated convolution layer with owned parameters.
 ///
+/// ```
+/// use dilconv1d::conv1d::Conv1dLayer;
+/// use dilconv1d::machine::Precision;
+///
+/// // C=2, K=3, S=5, d=2; input (N=1, C=2, W=32) → output (1, 3, 24).
+/// let mut layer = Conv1dLayer::new(2, 3, 5, 2, vec![0.25f32; 3 * 2 * 5]);
+/// let y32 = layer.forward(&vec![1.0f32; 2 * 32], 1, 32);
+/// assert_eq!(y32.len(), 3 * 24);
+///
+/// // BF16 mixed precision: bf16 operands, f32 accumulation — the same
+/// // call, routed through the bf16 kernel (weights of 0.25 and inputs
+/// // of 1.0 are exact in bf16, so this particular result is identical).
+/// layer.precision = Precision::Bf16;
+/// assert_eq!(layer.forward(&vec![1.0f32; 2 * 32], 1, 32), y32);
+/// ```
+///
+/// During BF16 *training* the trainer additionally keeps FP32 master
+/// weights and loads their bf16 rounding into layers each step
+/// ([`crate::model::MasterWeights`], DESIGN.md §6).
+///
 /// Concurrency note: the cached plan sits behind a `Mutex`, so sharing
 /// one `&Conv1dLayer` across threads serialises its forward/backward
 /// calls. For parallel inference give each worker its own layer (a

@@ -193,7 +193,19 @@ pub struct PostOpArgs<'a> {
 ///
 /// Implementations are stateless unit structs registered in [`kernels`];
 /// all mutable state lives in the plan's [`Workspace`], so one kernel
-/// instance serves any number of concurrent plans.
+/// instance serves any number of concurrent plans. Kernels are selected
+/// by **registry name** — adding one means implementing this trait and
+/// appending a registry entry, never editing an enum:
+///
+/// ```
+/// use dilconv1d::conv1d::{kernels, lookup_kernel};
+///
+/// let names: Vec<&str> = kernels().iter().map(|k| k.name()).collect();
+/// assert_eq!(names, ["brgemm", "im2col", "direct", "bf16"]);
+/// // Historical aliases resolve to their canonical kernels.
+/// assert_eq!(lookup_kernel("onednn").unwrap().name(), "im2col");
+/// assert!(lookup_kernel("cuda").is_none());
+/// ```
 pub trait ConvKernel: Send + Sync {
     /// Canonical registry name (round-trips through [`lookup_kernel`]).
     fn name(&self) -> &'static str;
@@ -655,6 +667,22 @@ pub fn lookup_kernel(name: &str) -> Option<&'static dyn ConvKernel> {
 
 /// A fully-prepared convolution: kernel choice, derived weight layouts,
 /// padding geometry and workspace, built once and executed many times.
+///
+/// ```
+/// use dilconv1d::conv1d::{ConvParams, ConvPlan};
+///
+/// // N=1, C=2, K=3, W=32, S=5, d=2  →  Q = 32 − (5−1)·2 = 24.
+/// let p = ConvParams::new(1, 2, 3, 32, 5, 2).unwrap();
+/// let weights = vec![0.1f32; 3 * 2 * 5]; // (K, C, S)
+/// let mut plan = ConvPlan::by_name(p, "brgemm", 1, weights).unwrap();
+///
+/// let x = vec![1.0f32; 2 * 32];
+/// let mut out = vec![0.0f32; 3 * 24];
+/// plan.execute_forward_into(&x, &mut out); // steady state: 0 allocations
+/// assert_eq!(plan.params().q(), 24);
+/// // Every output sums C·S = 10 taps of 0.1 × 1.0.
+/// assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-5));
+/// ```
 pub struct ConvPlan {
     p: ConvParams,
     /// Stride-1 twin of `p` — the geometry the kernels compute; equals

@@ -87,6 +87,20 @@ impl Activation {
 
 /// A post-op epilogue spec: what the kernel fuses onto each output block.
 ///
+/// Specs round-trip through their canonical string names, which is how
+/// configs (`post_ops = "bias_relu"`) and the CLI (`--post-ops`) select
+/// them:
+///
+/// ```
+/// use dilconv1d::conv1d::PostOps;
+///
+/// let ops = PostOps::parse("bias_relu").unwrap();
+/// assert!(ops.bias && !ops.residual);
+/// assert_eq!(ops.to_string(), "bias_relu");
+/// assert_eq!(PostOps::bias_relu(), ops);
+/// assert!(PostOps::parse("bias_tanh").is_err()); // unknown token
+/// ```
+///
 /// `PartialEq` (not `Eq`): `scale` is a float.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PostOps {

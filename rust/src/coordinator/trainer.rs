@@ -1,28 +1,45 @@
 //! The training coordinator: epoch loop over the native engine with
-//! simulated multi-socket data parallelism (paper Sec. 4.4/4.5).
+//! simulated multi-socket data parallelism (paper Sec. 4.4/4.5 and
+//! DESIGN.md §6).
 //!
 //! One step:
 //!   1. the loader thread delivers a global batch (DataLoader-worker analog),
 //!   2. the batch is sharded across `sockets` replicas,
-//!   3. each replica computes gradients on its shard (scoped thread),
-//!   4. gradients are ring-all-reduced (the real algorithm from dist/),
-//!   5. the Adam step is applied and parameters broadcast to all replicas.
+//!   3. each replica computes gradients on its shard — on a **persistent
+//!      worker pool** (one long-lived thread per socket owning its
+//!      replica; no per-step thread spawns),
+//!   4. gradients are ring-all-reduced — either monolithically after the
+//!      whole backward, or (with `overlap = true`) **bucket by bucket as
+//!      each layer's backward completes**, overlapping communication with
+//!      compute; the bucketed reduction is bit-identical to the
+//!      monolithic one (chunking follows the global grid),
+//!   5. the split Adam step updates the FP32 master weights and the
+//!      replicas reload the (bf16-rounded under `precision = bf16`)
+//!      working copy at the start of the next step.
 //!
 //! Per-epoch evaluation computes MSE + AUROC on the validation split
 //! (paper Table 1's metrics). Timing is recorded separately for train and
 //! eval, as in paper Fig. 10.
 
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::data::atacseq::TrackConfig;
+use crate::data::atacseq::{Batch, TrackConfig};
 use crate::data::{Dataset, Loader};
-use crate::dist::allreduce::ring_allreduce;
+use crate::dist::allreduce::{ring_allreduce, ring_allreduce_aligned};
 use crate::dist::comm_model::CommModel;
+use crate::dist::{BucketPlan, PersistentPool};
 use crate::metrics::auroc::AurocAccumulator;
 use crate::metrics::regression::MseAccumulator;
 use crate::metrics::timing::{EpochTiming, Timer};
-use crate::model::{Adam, AtacWorksNet, NetConfig, Tensor};
+use crate::model::{Adam, AtacWorksNet, MasterWeights, NetConfig, Tensor};
+
+/// `(total, mse, bce)` of one replica's step.
+type LossTriple = (f64, f64, f64);
 
 /// Per-epoch results.
 #[derive(Debug, Clone, Copy)]
@@ -34,19 +51,69 @@ pub struct EpochReport {
     pub val_mse: f64,
     pub val_auroc: Option<f64>,
     pub timing: EpochTiming,
-    /// Modelled multi-socket communication time (α–β ring model).
+    /// Modelled multi-socket communication time (α–β ring model),
+    /// **serialized**: the full cost of every collective, as if none of
+    /// it were hidden behind compute.
     pub modeled_comm_secs: f64,
+    /// The part of [`Self::modeled_comm_secs`] the α–β timeline says
+    /// would actually extend the step on the paper's links: with the
+    /// bucketed, backward-overlapped all-reduce most of the collective
+    /// hides behind compute, so `exposed < modeled`; on the monolithic
+    /// path nothing overlaps and the two are equal.
+    pub exposed_comm_secs: f64,
     pub steps: usize,
 }
 
+/// Gradient + bookkeeping of one synchronous data-parallel step.
+struct StepOutcome {
+    /// Rank-0 copy of the all-reduced (summed, not yet averaged) gradient.
+    grad: Vec<f32>,
+    losses: Vec<LossTriple>,
+    comm_secs: f64,
+    exposed_secs: f64,
+}
+
 /// The coordinator.
+///
+/// ```
+/// use dilconv1d::config::TrainConfig;
+/// use dilconv1d::coordinator::Trainer;
+///
+/// // A toy run: 5 conv layers, 2 in-process sockets, bucketed
+/// // backward-overlapped all-reduce (bit-identical to monolithic).
+/// let cfg = TrainConfig {
+///     channels: 2,
+///     n_blocks: 1,
+///     filter_size: 5,
+///     dilation: 1,
+///     segment_width: 120,
+///     segment_pad: 12,
+///     train_segments: 2,
+///     batch_size: 2,
+///     epochs: 1,
+///     sockets: 2,
+///     overlap: true,
+///     ..TrainConfig::default()
+/// };
+/// let mut trainer = Trainer::new(cfg).unwrap();
+/// let report = trainer.run_epoch(0);
+/// assert!(report.steps > 0);
+/// // Overlap can only hide communication, never add to it.
+/// assert!(report.exposed_comm_secs <= report.modeled_comm_secs);
+/// ```
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub track_cfg: TrackConfig,
     pub dataset: Dataset,
-    replicas: Vec<AtacWorksNet>,
+    /// Persistent data-parallel pool: thread `r` owns replica `r`.
+    pool: PersistentPool<AtacWorksNet>,
     opt: Adam,
-    params: Vec<f32>,
+    /// FP32 master weights + the working copy the replicas load
+    /// (bf16-rounded under `precision = bf16` — split Adam).
+    weights: MasterWeights,
+    /// Gradient bucket partition (backward completion order); `Some` iff
+    /// `cfg.overlap`.
+    buckets: Option<Arc<BucketPlan>>,
     comm: CommModel,
 }
 
@@ -98,53 +165,210 @@ impl Trainer {
             r.set_autotune(cfg.autotune);
             r.set_activation(cfg.post_ops.activation);
         }
-        let params = replicas[0].pack_params();
-        let opt = Adam::new(params.len(), cfg.lr as f32);
+        let weights = MasterWeights::new(replicas[0].pack_params(), cfg.precision);
+        let opt = Adam::new(weights.len(), cfg.lr as f32);
+        let buckets = cfg.overlap.then(|| {
+            Arc::new(BucketPlan::new(
+                &net_cfg.layer_param_counts(),
+                &net_cfg.backward_completion_order(),
+                cfg.bucket_bytes(),
+            ))
+        });
         let dataset = Dataset::with_train_size(cfg.seed, cfg.train_segments);
         Ok(Trainer {
             cfg,
             track_cfg,
             dataset,
-            replicas,
+            pool: PersistentPool::new(replicas),
             opt,
-            params,
+            weights,
+            buckets,
             comm: CommModel::upi(),
         })
     }
 
-    /// Flat parameter vector (packing order shared with the PJRT path).
+    /// FP32 master parameter vector (packing order shared with the PJRT
+    /// path; what checkpoints store).
     pub fn params(&self) -> &[f32] {
-        &self.params
+        self.weights.master()
+    }
+
+    /// The working copy the replicas compute with: bf16-rounded under
+    /// `precision = bf16`, identical to [`Self::params`] under f32.
+    pub fn working_params(&self) -> &[f32] {
+        self.weights.working()
     }
 
     pub fn param_count(&self) -> usize {
-        self.params.len()
+        self.weights.len()
     }
 
-    /// Load parameters (e.g. from a checkpoint).
+    /// Load parameters (e.g. from a checkpoint) into the master copy; the
+    /// replicas pick up the refreshed working copy on their next job.
     pub fn set_params(&mut self, params: Vec<f32>) {
-        assert_eq!(params.len(), self.params.len());
-        for r in &mut self.replicas {
-            r.unpack_params(&params);
+        assert_eq!(params.len(), self.weights.len());
+        self.weights.set_master(&params);
+    }
+
+    /// Shard `batch` and return rank `rank`'s `(x, clean, peaks)`.
+    fn shard(batch: &Batch, rank: usize, rows_per: usize, wp: usize) -> (Tensor, Tensor, Tensor) {
+        let lo = rank * rows_per;
+        let hi = lo + rows_per;
+        (
+            Tensor::from_vec(batch.x[lo * wp..hi * wp].to_vec(), rows_per, 1, wp),
+            Tensor::from_vec(batch.clean[lo * wp..hi * wp].to_vec(), rows_per, 1, wp),
+            Tensor::from_vec(batch.peaks[lo * wp..hi * wp].to_vec(), rows_per, 1, wp),
+        )
+    }
+
+    /// One synchronous step, monolithic flavour: every rank runs its full
+    /// backward, then one ring all-reduce over the whole gradient. The
+    /// modeled collective is priced at `param_count` elements — the α–β
+    /// model shards the message across the ring internally
+    /// (`ring_bytes_per_rank` divides by the rank count), so passing the
+    /// full gradient length here is correct; an audit for a suspected
+    /// double-count of the per-replica shard found none.
+    fn step_monolithic(&self, batch: &Batch, rows_per: usize, wp: usize) -> StepOutcome {
+        let sockets = self.pool.ranks();
+        let params = Arc::new(self.weights.working().to_vec());
+        let (tx, rx) = mpsc::channel::<(usize, Vec<f32>, LossTriple)>();
+        for rank in 0..sockets {
+            let (x, clean, peaks) = Self::shard(batch, rank, rows_per, wp);
+            let tx = tx.clone();
+            let params = Arc::clone(&params);
+            self.pool.exec(rank, move |net| {
+                net.unpack_params(&params);
+                let (grads, l) = net.forward_backward(&x, &clean, &peaks);
+                let flat = net.pack_grads(&grads);
+                let _ = tx.send((rank, flat, (l.total, l.mse, l.bce)));
+            });
         }
-        self.params = params;
+        drop(tx);
+        let mut slots: Vec<Option<Vec<f32>>> = (0..sockets).map(|_| None).collect();
+        let mut losses = vec![(0.0, 0.0, 0.0); sockets];
+        for _ in 0..sockets {
+            let (rank, flat, l) = rx.recv().expect("replica worker died");
+            slots[rank] = Some(flat);
+            losses[rank] = l;
+        }
+        let mut grads: Vec<Vec<f32>> = slots
+            .into_iter()
+            .map(|s| s.expect("every rank reports"))
+            .collect();
+        ring_allreduce(&mut grads);
+        let comm = self.comm.ring_allreduce_secs(self.weights.len(), sockets);
+        StepOutcome {
+            grad: grads.swap_remove(0),
+            losses,
+            comm_secs: comm,
+            // Monolithic: the collective runs strictly after backward —
+            // all of it is exposed.
+            exposed_secs: comm,
+        }
+    }
+
+    /// One synchronous step, bucketed + overlapped flavour: each rank's
+    /// backward streams per-layer gradients into completion-ordered
+    /// buckets and ships every bucket the moment its last layer is done;
+    /// this (main) thread plays the communication channel, reducing each
+    /// bucket while the ranks differentiate earlier layers. The aligned
+    /// ring keeps the result bit-identical to `step_monolithic`.
+    fn step_bucketed(&self, batch: &Batch, rows_per: usize, wp: usize) -> StepOutcome {
+        let plan = self
+            .buckets
+            .as_ref()
+            .expect("bucketed step requires a bucket plan")
+            .clone();
+        let sockets = self.pool.ranks();
+        let n_buckets = plan.n_buckets();
+        let total = self.weights.len();
+        let params = Arc::new(self.weights.working().to_vec());
+        let t0 = Instant::now();
+        let (gtx, grx) = mpsc::channel::<(usize, usize, Vec<f32>, f64)>();
+        let (ltx, lrx) = mpsc::channel::<(usize, LossTriple)>();
+        for rank in 0..sockets {
+            let (x, clean, peaks) = Self::shard(batch, rank, rows_per, wp);
+            let gtx = gtx.clone();
+            let ltx = ltx.clone();
+            let params = Arc::clone(&params);
+            let plan = Arc::clone(&plan);
+            self.pool.exec(rank, move |net| {
+                net.unpack_params(&params);
+                let mut bufs: Vec<Option<Vec<f32>>> = (0..plan.n_buckets())
+                    .map(|b| Some(vec![0.0f32; plan.bucket_elems(b)]))
+                    .collect();
+                let mut left = plan.layers_per_bucket();
+                let l = net.forward_backward_streaming(&x, &clean, &peaks, |layer, grads| {
+                    let (b, off) = plan.slot(layer);
+                    let buf = bufs[b].as_mut().expect("bucket already shipped");
+                    let wl = grads.w.len();
+                    buf[off..off + wl].copy_from_slice(&grads.w);
+                    buf[off + wl..off + wl + grads.b.len()].copy_from_slice(&grads.b);
+                    left[b] -= 1;
+                    if left[b] == 0 {
+                        let buf = bufs[b].take().expect("bucket shipped twice");
+                        let _ = gtx.send((b, rank, buf, t0.elapsed().as_secs_f64()));
+                    }
+                });
+                let _ = ltx.send((rank, (l.total, l.mse, l.bce)));
+            });
+        }
+        drop(gtx);
+        drop(ltx);
+        // Communication channel: reduce each bucket as soon as all ranks
+        // have shipped it — while later (earlier-layer) buckets are still
+        // being computed.
+        let mut flat = vec![0.0f32; total];
+        let mut pending: Vec<Vec<Option<Vec<f32>>>> = (0..n_buckets)
+            .map(|_| (0..sockets).map(|_| None).collect())
+            .collect();
+        let mut arrived = vec![0usize; n_buckets];
+        let mut ready_secs = vec![0.0f64; n_buckets];
+        let mut reduced = 0usize;
+        while reduced < n_buckets {
+            let (b, rank, buf, t) = grx.recv().expect("bucketed backward worker died");
+            assert!(pending[b][rank].is_none(), "bucket {b} from rank {rank} twice");
+            pending[b][rank] = Some(buf);
+            ready_secs[b] = ready_secs[b].max(t);
+            arrived[b] += 1;
+            if arrived[b] == sockets {
+                let mut bufs: Vec<Vec<f32>> = pending[b]
+                    .iter_mut()
+                    .map(|s| s.take().expect("every rank shipped bucket"))
+                    .collect();
+                ring_allreduce_aligned(&mut bufs, &plan.bucket(b).regions, total);
+                plan.scatter(b, &bufs[0], &mut flat);
+                reduced += 1;
+            }
+        }
+        let mut losses = vec![(0.0, 0.0, 0.0); sockets];
+        for _ in 0..sockets {
+            let (rank, l) = lrx.recv().expect("replica worker died");
+            losses[rank] = l;
+        }
+        // Price the same timeline on the paper's links: per-bucket ring
+        // costs against the measured ready times.
+        let report = self
+            .comm
+            .bucketed_overlap(&plan.elems_per_bucket(), sockets, &ready_secs);
+        StepOutcome {
+            grad: flat,
+            losses,
+            comm_secs: report.comm_secs,
+            exposed_secs: report.exposed_secs,
+        }
     }
 
     /// Run one training epoch (+ validation) and report.
     pub fn run_epoch(&mut self, epoch: usize) -> EpochReport {
         let order = self.dataset.epoch_order(epoch as u64);
         let global_batch = self.cfg.batch_size.max(self.cfg.sockets);
-        let mut loader = Loader::spawn(
-            self.track_cfg,
-            self.cfg.seed,
-            order,
-            global_batch,
-            2,
-        );
+        let mut loader = Loader::spawn(self.track_cfg, self.cfg.seed, order, global_batch, 2);
         let wp = self.track_cfg.padded_width();
-        let sockets = self.cfg.sockets.max(1);
+        let sockets = self.pool.ranks();
         let t_train = Timer::start();
-        let mut comm_secs_modeled = 0.0;
+        let mut comm_secs = 0.0;
+        let mut exposed_secs = 0.0;
         let (mut sum_loss, mut sum_mse, mut sum_bce) = (0.0f64, 0.0f64, 0.0f64);
         let mut steps = 0usize;
         while let Some(batch) = loader.next_batch() {
@@ -153,62 +377,24 @@ impl Trainer {
             if rows_per == 0 {
                 continue;
             }
-            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(sockets);
-            let mut losses = vec![(0.0f64, 0.0f64, 0.0f64); sockets];
-            {
-                let mut slots: Vec<Option<Vec<f32>>> = (0..sockets).map(|_| None).collect();
-                std::thread::scope(|scope| {
-                    for (rank, (net, (slot, lrec))) in self
-                        .replicas
-                        .iter_mut()
-                        .zip(slots.iter_mut().zip(losses.iter_mut()))
-                        .enumerate()
-                    {
-                        let lo = rank * rows_per;
-                        let hi = lo + rows_per;
-                        let x = Tensor::from_vec(
-                            batch.x[lo * wp..hi * wp].to_vec(),
-                            rows_per,
-                            1,
-                            wp,
-                        );
-                        let clean = Tensor::from_vec(
-                            batch.clean[lo * wp..hi * wp].to_vec(),
-                            rows_per,
-                            1,
-                            wp,
-                        );
-                        let peaks = Tensor::from_vec(
-                            batch.peaks[lo * wp..hi * wp].to_vec(),
-                            rows_per,
-                            1,
-                            wp,
-                        );
-                        scope.spawn(move || {
-                            let (g, l) = net.forward_backward(&x, &clean, &peaks);
-                            *slot = Some(net.pack_grads(&g));
-                            *lrec = (l.total, l.mse, l.bce);
-                        });
-                    }
-                });
-                for slot in slots {
-                    grads.push(slot.expect("replica produced no gradient"));
-                }
-            }
-            // Gradient synchronisation: real ring all-reduce + α–β model of
-            // what it would cost between the paper's sockets.
-            ring_allreduce(&mut grads);
-            comm_secs_modeled += self.comm.ring_allreduce_secs(self.params.len(), sockets);
-            let mut grad = grads.swap_remove(0);
+            let outcome = if self.cfg.overlap {
+                self.step_bucketed(&batch, rows_per, wp)
+            } else {
+                self.step_monolithic(&batch, rows_per, wp)
+            };
+            comm_secs += outcome.comm_secs;
+            exposed_secs += outcome.exposed_secs;
+            let mut grad = outcome.grad;
             let inv = 1.0 / sockets as f32;
             for g in grad.iter_mut() {
                 *g *= inv;
             }
-            self.opt.step(&mut self.params, &grad);
-            for r in &mut self.replicas {
-                r.unpack_params(&self.params);
-            }
-            let (lt, lm, lb) = losses
+            // Split optimizer step: FP32 update on the master, bf16
+            // re-round into the working copy the replicas load next step.
+            let opt = &mut self.opt;
+            self.weights.update(|master| opt.step(master, &grad));
+            let (lt, lm, lb) = outcome
+                .losses
                 .iter()
                 .fold((0.0, 0.0, 0.0), |a, l| (a.0 + l.0, a.1 + l.1, a.2 + l.2));
             sum_loss += lt / sockets as f64;
@@ -235,15 +421,17 @@ impl Trainer {
                 train_secs,
                 eval_secs,
                 data_secs: 0.0,
-                comm_secs: comm_secs_modeled,
+                comm_secs,
             },
-            modeled_comm_secs: comm_secs_modeled,
+            modeled_comm_secs: comm_secs,
+            exposed_comm_secs: exposed_secs,
             steps,
         }
     }
 
     /// Evaluate MSE + AUROC on (up to `max_segments` of) the validation
-    /// split using replica 0.
+    /// split using replica 0 (on its own pool thread, with the current
+    /// working parameters).
     pub fn evaluate(&mut self, max_segments: usize) -> (f64, Option<f64>) {
         let wp = self.track_cfg.padded_width();
         let val: Vec<u64> = self
@@ -256,17 +444,25 @@ impl Trainer {
         if val.is_empty() {
             return (0.0, None);
         }
-        let mut mse_acc = MseAccumulator::new();
-        let mut auroc_acc = AurocAccumulator::new();
+        let track = self.track_cfg;
+        let seed = self.cfg.seed;
         let stride = (wp / 2_000).max(1);
-        for chunk in val.chunks(4) {
-            let b = crate::data::make_batch(&self.track_cfg, self.cfg.seed, chunk);
-            let x = Tensor::from_vec(b.x, chunk.len(), 1, wp);
-            let (den, logits, _) = self.replicas[0].forward(&x, false);
-            mse_acc.push(&den.data, &b.clean);
-            auroc_acc.push_strided(&logits.data, &b.peaks, stride);
-        }
-        (mse_acc.compute(), auroc_acc.compute())
+        let params = Arc::new(self.weights.working().to_vec());
+        let (tx, rx) = mpsc::channel::<(f64, Option<f64>)>();
+        self.pool.exec(0, move |net| {
+            net.unpack_params(&params);
+            let mut mse_acc = MseAccumulator::new();
+            let mut auroc_acc = AurocAccumulator::new();
+            for chunk in val.chunks(4) {
+                let b = crate::data::make_batch(&track, seed, chunk);
+                let x = Tensor::from_vec(b.x, chunk.len(), 1, wp);
+                let (den, logits, _) = net.forward(&x, false);
+                mse_acc.push(&den.data, &b.clean);
+                auroc_acc.push_strided(&logits.data, &b.peaks, stride);
+            }
+            let _ = tx.send((mse_acc.compute(), auroc_acc.compute()));
+        });
+        rx.recv().expect("evaluation worker died")
     }
 
     /// Train for `cfg.epochs` epochs, invoking `on_epoch` after each.
@@ -293,6 +489,7 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::machine::Precision;
 
     fn tiny_cfg() -> TrainConfig {
         TrainConfig {
@@ -357,5 +554,34 @@ mod tests {
         }
         assert!(r2.modeled_comm_secs > 0.0);
         assert_eq!(r1.modeled_comm_secs, 0.0);
+        // Monolithic path: nothing overlaps, all of it is exposed.
+        assert_eq!(r2.exposed_comm_secs, r2.modeled_comm_secs);
+    }
+
+    #[test]
+    fn bf16_training_keeps_fp32_master_and_bf16_working_copies() {
+        use crate::conv1d::bf16::Bf16;
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 1;
+        cfg.precision = Precision::Bf16;
+        let mut t = Trainer::new(cfg).unwrap();
+        let r = t.run_epoch(0);
+        assert!(r.steps > 0);
+        // Every working parameter is bf16-representable...
+        for &w in t.working_params() {
+            assert_eq!(w, Bf16::from_f32(w).to_f32(), "working param not bf16");
+        }
+        // ...while the master keeps full-precision residue the working
+        // copy cannot express (Adam steps are far below bf16 ulp).
+        let differs = t
+            .params()
+            .iter()
+            .zip(t.working_params())
+            .filter(|(m, w)| m != w)
+            .count();
+        assert!(
+            differs > 0,
+            "master == working everywhere; split-Adam is not splitting"
+        );
     }
 }

@@ -103,6 +103,82 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
     }
 }
 
+/// Ring all-reduce over one *bucket* of a larger flat vector, preserving
+/// the exact per-element accumulation order of a monolithic
+/// [`ring_allreduce`] over the full vector.
+///
+/// `bufs[r]` holds rank `r`'s copy of the bucket: the concatenation of
+/// `regions` (each a `(global_offset, len)` span of the conceptual
+/// `global_len`-element gradient), packed back-to-back. Chunking follows
+/// the **global** grid — each element is processed under the chunk index
+/// it would have in a full-vector ring — so reducing a gradient bucket by
+/// bucket is bit-identical to reducing it in one monolithic call. This is
+/// what lets the overlapped trainer path promise bitwise equality with
+/// the serialized path (see `tests/integration_dist.rs`).
+pub fn ring_allreduce_aligned(
+    bufs: &mut [Vec<f32>],
+    regions: &[(usize, usize)],
+    global_len: usize,
+) {
+    let p = bufs.len();
+    if p <= 1 || global_len == 0 {
+        return;
+    }
+    let local_len: usize = regions.iter().map(|&(_, l)| l).sum();
+    assert!(
+        bufs.iter().all(|b| b.len() == local_len),
+        "ragged rank buffers"
+    );
+    // Local ranges covered by each *global* chunk. A region may straddle
+    // chunk boundaries; a chunk may receive ranges from several regions.
+    let chunk = global_len.div_ceil(p);
+    let mut bounds: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
+    let mut local = 0usize;
+    for &(goff, glen) in regions {
+        assert!(
+            goff + glen <= global_len,
+            "region ({goff}, {glen}) outside the global vector of {global_len}"
+        );
+        let gend = goff + glen;
+        let mut g = goff;
+        while g < gend {
+            let ci = g / chunk;
+            let cend = ((ci + 1) * chunk).min(gend);
+            bounds[ci].push((local, local + (cend - g)));
+            local += cend - g;
+            g = cend;
+        }
+    }
+    // Reduce-scatter, then all-gather — the same schedule as
+    // [`ring_allreduce`], restricted to the bucket's ranges.
+    for step in 0..p - 1 {
+        for r in 0..p {
+            let ci = (r + p - step) % p;
+            if bounds[ci].is_empty() {
+                continue;
+            }
+            let (src, dst) = two_bufs(bufs, r, (r + 1) % p);
+            for &(lo, hi) in &bounds[ci] {
+                for (d, s) in dst[lo..hi].iter_mut().zip(&src[lo..hi]) {
+                    *d += *s;
+                }
+            }
+        }
+    }
+    for step in 0..p - 1 {
+        for r in 0..p {
+            let ci = (r + 1 + p - step) % p;
+            if bounds[ci].is_empty() {
+                continue;
+            }
+            let (src, dst) = two_bufs(bufs, r, (r + 1) % p);
+            for &(lo, hi) in &bounds[ci] {
+                dst[lo..hi].copy_from_slice(&src[lo..hi]);
+            }
+        }
+    }
+}
+
 /// Ring all-reduce with real message passing: one thread per rank, chunk
 /// copies over mpsc channels (unbounded sends ⇒ no deadlock). Returns the
 /// reduced buffers in rank order; numerically identical to
@@ -219,6 +295,64 @@ mod tests {
                 assert!((x - w).abs() < 1e-4 * (1.0 + w.abs()));
             }
         }
+    }
+
+    #[test]
+    fn aligned_ring_is_bitwise_identical_to_monolithic() {
+        // Reducing a vector bucket-by-bucket through the aligned ring must
+        // reproduce the monolithic full-vector ring bit for bit — the
+        // invariant the overlapped trainer path relies on.
+        for p in 2..=5 {
+            for len in [16usize, 103, 130] {
+                let base = ranks(p, len);
+                let mut want = base.clone();
+                ring_allreduce(&mut want);
+                // Three buckets covering the vector; the last one is split
+                // into two regions to exercise the region-list path.
+                let a = len / 5;
+                let b = len / 2;
+                let c = (b + len) / 2;
+                let splits: Vec<Vec<(usize, usize)>> = vec![
+                    vec![(0, a)],
+                    vec![(a, b - a)],
+                    vec![(b, c - b), (c, len - c)],
+                ];
+                for regions in &splits {
+                    let mut bufs: Vec<Vec<f32>> = base
+                        .iter()
+                        .map(|full| {
+                            let mut v = Vec::new();
+                            for &(off, l) in regions {
+                                v.extend_from_slice(&full[off..off + l]);
+                            }
+                            v
+                        })
+                        .collect();
+                    ring_allreduce_aligned(&mut bufs, regions, len);
+                    for r in 0..p {
+                        let mut local = 0;
+                        for &(off, l) in regions {
+                            assert_eq!(
+                                bufs[r][local..local + l],
+                                want[r][off..off + l],
+                                "p={p} len={len} rank {r} region ({off},{l})"
+                            );
+                            local += l;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_ring_full_vector_degenerates_to_monolithic() {
+        let base = ranks(4, 97);
+        let mut want = base.clone();
+        ring_allreduce(&mut want);
+        let mut got = base;
+        ring_allreduce_aligned(&mut got, &[(0, 97)], 97);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Gradient bucketing for backward-overlapped all-reduce (DESIGN.md §6).
+//!
+//! A [`BucketPlan`] partitions the flat gradient vector into fixed-byte-
+//! budget buckets of *whole layers*, ordered by backward completion: the
+//! heads finish first, then the residual blocks in reverse, the stem
+//! last. As soon as every rank has produced a bucket's layers, that
+//! bucket's ring all-reduce can fire while the ranks are still computing
+//! earlier layers — the DDP-style overlap of communication with backward
+//! compute. Reduction goes through
+//! [`ring_allreduce_aligned`](super::allreduce::ring_allreduce_aligned),
+//! which chunks on the *global* grid, so the bucketed result is
+//! bit-identical to one monolithic ring over the whole gradient.
+//!
+//! ```
+//! use dilconv1d::dist::BucketPlan;
+//!
+//! // Three layers of 100/50/25 params completing in reverse order,
+//! // bucketed under a 400-byte (100-element) budget.
+//! let plan = BucketPlan::new(&[100, 50, 25], &[2, 1, 0], 400);
+//! assert_eq!(plan.n_buckets(), 2);
+//! assert_eq!(plan.elems_per_bucket(), vec![75, 100]); // {L2, L1}, {L0}
+//! let (bucket, offset) = plan.slot(1);
+//! assert_eq!((bucket, offset), (0, 25)); // L1 packs after L2's 25 elems
+//! ```
+
+/// One bucket: whole layers packed back-to-back in completion order.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    /// Layer ids (packing-order indices) in completion order.
+    pub layers: Vec<usize>,
+    /// `(global_offset, len)` of each layer's span in the flat vector,
+    /// in the order the layers are packed into the bucket buffer.
+    pub regions: Vec<(usize, usize)>,
+    /// Total f32 elements in the bucket.
+    pub elems: usize,
+}
+
+/// A fixed partition of the flat gradient vector into completion-ordered
+/// buckets under a byte budget. Built once per training run from the
+/// network's per-layer parameter counts and its backward completion
+/// order; steady-state steps only do table lookups.
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    buckets: Vec<Bucket>,
+    /// layer id → (bucket index, offset inside the bucket buffer).
+    slots: Vec<(usize, usize)>,
+    total_elems: usize,
+}
+
+impl BucketPlan {
+    /// Partition `layer_elems` (flat parameter counts per layer, packing
+    /// order) into buckets of at most `budget_bytes` (f32 = 4 bytes),
+    /// walking the layers in `completion_order`. A bucket always holds at
+    /// least one layer, so a single layer larger than the budget gets a
+    /// bucket of its own.
+    pub fn new(
+        layer_elems: &[usize],
+        completion_order: &[usize],
+        budget_bytes: usize,
+    ) -> BucketPlan {
+        let n = layer_elems.len();
+        assert_eq!(
+            completion_order.len(),
+            n,
+            "completion order must cover every layer"
+        );
+        let mut seen = vec![false; n];
+        for &l in completion_order {
+            assert!(
+                l < n && !seen[l],
+                "completion order must be a permutation of 0..{n}"
+            );
+            seen[l] = true;
+        }
+        let mut offsets = vec![0usize; n];
+        let mut total = 0usize;
+        for (off, &e) in offsets.iter_mut().zip(layer_elems) {
+            *off = total;
+            total += e;
+        }
+        let budget_elems = (budget_bytes / 4).max(1);
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut slots = vec![(0usize, 0usize); n];
+        let mut cur = Bucket {
+            layers: Vec::new(),
+            regions: Vec::new(),
+            elems: 0,
+        };
+        for &l in completion_order {
+            if !cur.layers.is_empty() && cur.elems + layer_elems[l] > budget_elems {
+                buckets.push(std::mem::replace(
+                    &mut cur,
+                    Bucket {
+                        layers: Vec::new(),
+                        regions: Vec::new(),
+                        elems: 0,
+                    },
+                ));
+            }
+            slots[l] = (buckets.len(), cur.elems);
+            cur.layers.push(l);
+            cur.regions.push((offsets[l], layer_elems[l]));
+            cur.elems += layer_elems[l];
+        }
+        if !cur.layers.is_empty() {
+            buckets.push(cur);
+        }
+        BucketPlan {
+            buckets,
+            slots,
+            total_elems: total,
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Flat length of the full gradient vector the plan partitions.
+    pub fn total_elems(&self) -> usize {
+        self.total_elems
+    }
+
+    pub fn bucket(&self, b: usize) -> &Bucket {
+        &self.buckets[b]
+    }
+
+    pub fn bucket_elems(&self, b: usize) -> usize {
+        self.buckets[b].elems
+    }
+
+    /// Per-bucket element counts, in completion order.
+    pub fn elems_per_bucket(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.elems).collect()
+    }
+
+    /// Per-bucket layer counts — the countdown a streaming backward uses
+    /// to detect bucket completion.
+    pub fn layers_per_bucket(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.layers.len()).collect()
+    }
+
+    /// `(bucket index, offset inside the bucket buffer)` of `layer`.
+    pub fn slot(&self, layer: usize) -> (usize, usize) {
+        self.slots[layer]
+    }
+
+    /// Copy a (reduced) bucket buffer back into the flat vector.
+    pub fn scatter(&self, b: usize, data: &[f32], flat: &mut [f32]) {
+        let bk = &self.buckets[b];
+        assert_eq!(data.len(), bk.elems, "bucket buffer length mismatch");
+        assert_eq!(flat.len(), self.total_elems, "flat vector length mismatch");
+        let mut off = 0;
+        for &(goff, len) in &bk.regions {
+            flat[goff..goff + len].copy_from_slice(&data[off..off + len]);
+            off += len;
+        }
+    }
+
+    /// Pack a bucket's regions out of a flat vector (the inverse of
+    /// [`Self::scatter`]; tests and comparison paths).
+    pub fn gather(&self, b: usize, flat: &[f32]) -> Vec<f32> {
+        let bk = &self.buckets[b];
+        assert_eq!(flat.len(), self.total_elems, "flat vector length mismatch");
+        let mut out = Vec::with_capacity(bk.elems);
+        for &(goff, len) in &bk.regions {
+            out.extend_from_slice(&flat[goff..goff + len]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_every_layer_exactly_once() {
+        let elems = [100usize, 50, 50, 25, 25, 7];
+        let order = [4usize, 5, 3, 2, 1, 0];
+        let plan = BucketPlan::new(&elems, &order, 300); // 75-elem budget
+        let mut covered = vec![false; elems.len()];
+        let mut walked = Vec::new();
+        for b in 0..plan.n_buckets() {
+            for &l in &plan.bucket(b).layers {
+                assert!(!covered[l], "layer {l} in two buckets");
+                covered[l] = true;
+                walked.push(l);
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "every layer bucketed");
+        assert_eq!(walked, order, "buckets preserve completion order");
+        assert_eq!(plan.total_elems(), elems.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn budget_bounds_buckets_except_oversized_layers() {
+        let elems = [10usize, 500, 10, 10];
+        let order = [3usize, 2, 1, 0];
+        let plan = BucketPlan::new(&elems, &order, 25 * 4); // 25-elem budget
+        for b in 0..plan.n_buckets() {
+            let bk = plan.bucket(b);
+            assert!(
+                bk.elems <= 25 || bk.layers.len() == 1,
+                "bucket {b} over budget with {} layers",
+                bk.layers.len()
+            );
+        }
+        // {3, 2} fits the 25-elem budget, {1} is oversized, {0} trails.
+        assert_eq!(plan.elems_per_bucket(), vec![20, 500, 10]);
+    }
+
+    #[test]
+    fn slot_scatter_gather_round_trip() {
+        let elems = [8usize, 4, 6];
+        let order = [2usize, 1, 0];
+        let plan = BucketPlan::new(&elems, &order, 10 * 4);
+        let flat: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let mut rebuilt = vec![0.0f32; 18];
+        for b in 0..plan.n_buckets() {
+            let data = plan.gather(b, &flat);
+            assert_eq!(data.len(), plan.bucket_elems(b));
+            plan.scatter(b, &data, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, flat);
+        // Writing via slot offsets lands each layer at its gather position.
+        for (l, &e) in elems.iter().enumerate() {
+            let (b, off) = plan.slot(l);
+            let goff: usize = elems[..l].iter().sum();
+            let data = plan.gather(b, &flat);
+            assert_eq!(
+                data[off..off + e],
+                flat[goff..goff + e],
+                "layer {l} slot mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn single_bucket_when_budget_is_huge() {
+        let plan = BucketPlan::new(&[5, 6, 7], &[2, 1, 0], usize::MAX);
+        assert_eq!(plan.n_buckets(), 1);
+        assert_eq!(plan.bucket_elems(0), 18);
+    }
+}

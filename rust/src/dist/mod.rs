@@ -2,21 +2,31 @@
 //! algorithms executed in-process plus the α–β cost model that projects
 //! them onto the paper's UPI / fabric links.
 //!
-//! * [`allreduce`]  — ring + naive all-reduce (in-place and message-passing)
-//! * [`comm_model`] — α–β (latency–bandwidth) collective cost model
+//! * [`allreduce`]  — ring + naive all-reduce (in-place, message-passing,
+//!   and the bucket-aligned variant whose per-element accumulation order
+//!   matches the monolithic ring bit for bit)
+//! * [`bucket`]     — fixed-byte-budget gradient buckets in backward
+//!   completion order, the unit of communication/compute overlap
+//! * [`comm_model`] — α–β (latency–bandwidth) collective cost model,
+//!   including the bucketed-overlap timeline ([`OverlapReport`])
 //! * [`topology`]   — socket/core accounting of the paper's Xeon testbeds
-//! * [`worker`]     — data-parallel worker pool (one rank per "socket")
+//! * [`worker`]     — persistent data-parallel worker pool (one long-lived
+//!   thread per "socket", each owning its model replica)
 //!
 //! The coordinator runs the *real* ring all-reduce over replica gradients
-//! each step and separately accumulates what the collective *would* cost
-//! between physical sockets via [`CommModel`] — so measured numbers stay
-//! honest on a single host while the projections use the paper's links.
+//! each step — monolithically after backward, or bucket-by-bucket
+//! overlapped with it — and separately accumulates what the collective
+//! *would* cost between physical sockets via [`CommModel`], so measured
+//! numbers stay honest on a single host while the projections use the
+//! paper's links (DESIGN.md §6).
 
 pub mod allreduce;
+pub mod bucket;
 pub mod comm_model;
 pub mod topology;
 pub mod worker;
 
-pub use comm_model::CommModel;
+pub use bucket::{Bucket, BucketPlan};
+pub use comm_model::{CommModel, OverlapReport};
 pub use topology::Topology;
-pub use worker::{StepResult, WorkerPool};
+pub use worker::{PersistentPool, StepResult, WorkerPool};

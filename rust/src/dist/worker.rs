@@ -1,9 +1,143 @@
-//! Data-parallel worker pool: one scoped thread per rank computes a
-//! `(gradient, loss)` pair, gradients are combined with the real ring
-//! all-reduce and averaged — the in-process version of one synchronous
-//! data-parallel step (paper Sec. 4.4).
+//! Data-parallel worker pools.
+//!
+//! [`PersistentPool`] is the training substrate: one long-lived OS thread
+//! per rank, each *owning* its rank state (the coordinator hands every
+//! rank its model replica once, at construction), with jobs dispatched
+//! over channels. Spawning happens once per run, not once per step — the
+//! steady state of a training epoch is channel sends only, and a rank's
+//! jobs execute in submission order, which is what lets the bucketed
+//! all-reduce overlap with a still-running backward pass.
+//!
+//! [`WorkerPool`] is the older scoped-thread convenience (one spawn per
+//! step) kept for the simple fork-join collectives in tests and benches.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
 
 use super::allreduce::ring_allreduce;
+
+/// A job executed on a rank's thread against its owned state.
+type Job<W> = Box<dyn FnOnce(&mut W) + Send + 'static>;
+
+enum Msg<W> {
+    Job(Job<W>),
+    Sync(Sender<()>),
+    Stop,
+}
+
+/// A pool of long-lived rank threads, each owning a state `W` (e.g. a
+/// model replica). Jobs submitted to a rank run on its thread in
+/// submission order; different ranks run concurrently.
+///
+/// ```
+/// use dilconv1d::dist::PersistentPool;
+///
+/// // Three ranks, each owning a counter.
+/// let pool = PersistentPool::new(vec![0u64, 0, 0]);
+/// let (tx, rx) = std::sync::mpsc::channel();
+/// for rank in 0..pool.ranks() {
+///     let tx = tx.clone();
+///     pool.exec(rank, move |count| {
+///         *count += rank as u64 + 1;
+///         let _ = tx.send(*count);
+///     });
+/// }
+/// let total: u64 = rx.iter().take(3).sum();
+/// assert_eq!(total, 6); // 1 + 2 + 3
+/// assert_eq!(pool.join(), vec![1, 2, 3]);
+/// ```
+pub struct PersistentPool<W> {
+    txs: Vec<Sender<Msg<W>>>,
+    handles: Vec<JoinHandle<W>>,
+}
+
+impl<W: Send + 'static> PersistentPool<W> {
+    /// Spawn one thread per state; thread `r` owns `states[r]` for the
+    /// pool's lifetime and hands it back at [`Self::join`].
+    pub fn new(states: Vec<W>) -> PersistentPool<W> {
+        assert!(!states.is_empty(), "pool needs at least one rank");
+        let mut txs = Vec::with_capacity(states.len());
+        let mut handles = Vec::with_capacity(states.len());
+        for state in states {
+            let (tx, rx) = channel::<Msg<W>>();
+            txs.push(tx);
+            handles.push(std::thread::spawn(move || {
+                let mut state = state;
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Job(job) => job(&mut state),
+                        Msg::Sync(ack) => {
+                            let _ = ack.send(());
+                        }
+                        Msg::Stop => break,
+                    }
+                }
+                state
+            }));
+        }
+        PersistentPool { txs, handles }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Queue `job` on rank `rank`'s thread. Jobs on one rank run in
+    /// submission order; results travel through whatever channel the
+    /// closure captured. Panics if the rank's thread has died (a previous
+    /// job panicked).
+    pub fn exec(&self, rank: usize, job: impl FnOnce(&mut W) + Send + 'static) {
+        self.txs[rank]
+            .send(Msg::Job(Box::new(job)))
+            .unwrap_or_else(|_| panic!("rank {rank} worker thread died"));
+    }
+
+    /// Block until every rank has drained its job queue.
+    pub fn sync(&self) {
+        let acks: Vec<_> = self
+            .txs
+            .iter()
+            .enumerate()
+            .map(|(rank, tx)| {
+                let (ack, ack_rx) = channel();
+                tx.send(Msg::Sync(ack))
+                    .unwrap_or_else(|_| panic!("rank {rank} worker thread died"));
+                ack_rx
+            })
+            .collect();
+        for (rank, rx) in acks.into_iter().enumerate() {
+            rx.recv()
+                .unwrap_or_else(|_| panic!("rank {rank} worker thread died"));
+        }
+    }
+
+    /// Stop every thread and return the rank states in rank order.
+    pub fn join(mut self) -> Vec<W> {
+        self.send_stop();
+        self.handles
+            .drain(..)
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    }
+}
+
+impl<W> PersistentPool<W> {
+    fn send_stop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Stop);
+        }
+        self.txs.clear();
+    }
+}
+
+impl<W> Drop for PersistentPool<W> {
+    fn drop(&mut self) {
+        self.send_stop();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// A fixed-size pool of data-parallel ranks.
 #[derive(Debug, Clone, Copy)]
@@ -85,5 +219,42 @@ mod tests {
         let r = pool.step(|_| (vec![2.5; 4], 7.0));
         assert_eq!(r.grad, vec![2.5; 4]);
         assert_eq!(r.loss, 7.0);
+    }
+
+    #[test]
+    fn persistent_pool_owns_state_across_jobs() {
+        let pool = PersistentPool::new(vec![Vec::<u32>::new(), Vec::new()]);
+        for i in 0..5u32 {
+            for rank in 0..pool.ranks() {
+                pool.exec(rank, move |log| log.push(i));
+            }
+        }
+        pool.sync();
+        let states = pool.join();
+        // Per-rank jobs ran in submission order against persistent state.
+        assert_eq!(states, vec![vec![0, 1, 2, 3, 4], vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn persistent_pool_ranks_run_concurrently() {
+        // Rank 0 blocks until rank 1's job has run — only possible if the
+        // two ranks execute on different threads.
+        let pool = PersistentPool::new(vec![(), ()]);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.exec(0, move |_| {
+            rx.recv_timeout(std::time::Duration::from_secs(10))
+                .expect("rank 1 never signalled");
+        });
+        pool.exec(1, move |_| {
+            let _ = tx.send(());
+        });
+        pool.sync();
+    }
+
+    #[test]
+    fn persistent_pool_drop_terminates_threads() {
+        let pool = PersistentPool::new(vec![0u8]);
+        pool.exec(0, |s| *s += 1);
+        drop(pool); // must not hang
     }
 }

@@ -6,15 +6,39 @@
 //! The crate is a three-layer system (see `rust/DESIGN.md`):
 //!
 //! * **L3 (this crate)** — the framework: the paper's BRGEMM convolution
-//!   kernels ([`conv1d`]), a native training engine ([`model`]), a data
-//!   pipeline ([`data`]), metrics ([`metrics`]), a simulated multi-socket
-//!   runtime ([`dist`]), machine models of the paper's testbeds
-//!   ([`machine`]), the training coordinator ([`coordinator`]), the
-//!   benchmark harness ([`bench_harness`]) and a TOML config system
-//!   ([`config`]).
+//!   kernels ([`conv1d`]), a native training engine with BF16
+//!   mixed-precision support ([`model`]), a data pipeline ([`data`]),
+//!   metrics ([`metrics`]), a simulated multi-socket runtime with
+//!   bucketed backward-overlapped all-reduce ([`dist`]), machine models
+//!   of the paper's testbeds ([`machine`]), the training coordinator
+//!   ([`coordinator`]), the benchmark harness ([`bench_harness`]) and a
+//!   TOML config system ([`config`]).
 //! * **L2/L1 (Python, build-time only)** — a JAX AtacWorks model with
 //!   Pallas conv kernels, AOT-lowered to HLO text executed by [`runtime`]
 //!   through the PJRT CPU client. Python never runs on the training path.
+//!
+//! ## Quickstart
+//!
+//! The core object is the *setup-once, run-many* [`ConvPlan`]
+//! (DESIGN.md §5a): build it from a problem descriptor and a registry
+//! kernel name, then execute with zero steady-state allocations —
+//!
+//! ```
+//! use dilconv1d::{ConvParams, ConvPlan, PostOps};
+//!
+//! let p = ConvParams::new(1, 1, 1, 16, 3, 2).unwrap(); // Q = 12
+//! let mut plan = ConvPlan::by_name(p, "brgemm", 1, vec![1.0f32; 3])
+//!     .unwrap()
+//!     .with_post_ops(PostOps::parse("relu").unwrap());
+//! let x = vec![1.0f32; 16];
+//! let mut y = vec![0.0f32; 12];
+//! plan.execute_forward_post_into(&x, None, &mut y); // fused epilogue
+//! assert!(y.iter().all(|&v| (v - 3.0).abs() < 1e-6)); // 3 taps of 1·1
+//! ```
+//!
+//! End-to-end training (data → kernels → collectives → Adam) lives
+//! behind [`coordinator::Trainer`]; `dilconv train` (see `main.rs` and
+//! the repository README) is the CLI over it.
 
 pub mod bench_harness;
 pub mod config;

@@ -120,6 +120,10 @@ USAGE: dilconv <subcommand> [--flags]
                    [--threads N] [--seed N] [--checkpoint out.ckpt]
                    [--autotune] [--tune-cache tune.json]
                    [--post-ops bias_relu|bias_sigmoid|bias]
+                   [--precision f32|bf16] (bf16 = split Adam: fp32 master
+                   weights, bf16 working copies + kernels)
+                   [--overlap] [--bucket-mb F] (bucketed all-reduce fired
+                   as each layer's backward completes)
   sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
                    --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
                    [--reps N] [--batch N] [--max-q N]
@@ -156,6 +160,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         // including "bf16" (BRGEMM backend at bf16 precision).
         cfg.apply_backend_name(b).map_err(|e| anyhow!(e))?;
     }
+    if let Some(p) = args.get("precision") {
+        // After --backend, so an explicit precision stays authoritative.
+        cfg.precision = match p.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Precision::F32,
+            "bf16" | "bfloat16" => Precision::Bf16,
+            other => bail!("unknown precision '{other}' (f32|bf16)"),
+        };
+    }
     if args.bool("autotune") {
         cfg.autotune = true;
     }
@@ -165,9 +177,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(s) = args.get("post-ops") {
         cfg.post_ops = dilconv1d::conv1d::PostOps::parse(s).map_err(|e| anyhow!(e))?;
     }
+    if args.bool("overlap") {
+        cfg.overlap = true;
+    }
+    let bucket_mb = args.f64("bucket-mb", cfg.bucket_mb)?;
+    if bucket_mb <= 0.0 {
+        bail!("--bucket-mb must be positive, got {bucket_mb}");
+    }
+    cfg.bucket_mb = bucket_mb;
     println!(
         "training AtacWorks-like net: {} conv layers, ch={}, S={}, d={}, W={} (padded {}), \
-         {} train segments, batch {}, {} sockets, backend {:?}",
+         {} train segments, batch {}, {} sockets, backend {:?}, precision {:?}{}",
         1 + 2 * cfg.n_blocks + 2,
         cfg.channels,
         cfg.filter_size,
@@ -178,13 +198,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.batch_size,
         cfg.sockets,
         cfg.backend,
+        cfg.precision,
+        if cfg.overlap {
+            format!(", overlapped all-reduce ({} MiB buckets)", cfg.bucket_mb)
+        } else {
+            String::new()
+        },
     );
     let mut trainer = Trainer::new(cfg.clone())?;
     println!("parameters: {}", trainer.param_count());
     let reports = trainer.train(|r| {
         println!(
             "epoch {:>3}  loss {:.5}  (mse {:.5} bce {:.5})  val_mse {:.5}  val_auroc {}  \
-             train {:.2}s eval {:.2}s comm(model) {:.3}s  [{} steps]",
+             train {:.2}s eval {:.2}s comm(model) {:.3}s exposed {:.3}s  [{} steps]",
             r.epoch,
             r.train_loss,
             r.train_mse,
@@ -194,6 +220,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             r.timing.train_secs,
             r.timing.eval_secs,
             r.modeled_comm_secs,
+            r.exposed_comm_secs,
             r.steps,
         );
     });

@@ -59,7 +59,11 @@ impl ConvSame {
     }
 
     /// Select the forward precision (bf16 takes effect on the BRGEMM
-    /// backend; others fall back to f32).
+    /// backend; others fall back to f32). Under BF16 *training* the
+    /// trainer pairs this with split Adam: the weights loaded into this
+    /// layer are the bf16 rounding of an FP32 master copy
+    /// ([`crate::model::MasterWeights`]), while every gradient this
+    /// layer produces stays f32 (DESIGN.md §6).
     pub fn set_precision(&mut self, precision: Precision) {
         self.conv.precision = precision;
     }

@@ -1,16 +1,19 @@
 //! Native training engine: the AtacWorks-like dilated-conv ResNet
 //! ([`resnet`]) built on the paper's conv kernels, with hand-written
-//! fixed-topology autograd, losses ([`loss`]) and optimisers
-//! ([`optimizer`]). Mirrors python/compile/model.py layer-for-layer so the
-//! flat parameter packing interoperates with the PJRT path.
+//! fixed-topology autograd, losses ([`loss`]), optimisers
+//! ([`optimizer`]) and the split mixed-precision parameter store
+//! ([`precision`]). Mirrors python/compile/model.py layer-for-layer so
+//! the flat parameter packing interoperates with the PJRT path.
 
 pub mod layers;
 pub mod loss;
 pub mod optimizer;
+pub mod precision;
 pub mod resnet;
 pub mod tensor;
 
 pub use layers::{ConvGrads, ConvSame};
 pub use optimizer::{Adam, Sgd};
+pub use precision::MasterWeights;
 pub use resnet::{AtacWorksNet, Losses, NetConfig};
 pub use tensor::Tensor;

@@ -1,0 +1,154 @@
+//! Split mixed-precision parameter store (DESIGN.md §6).
+//!
+//! The paper's BF16 training recipe (following the LIBXSMM convolution
+//! line of work) is *split* SGD/Adam: the optimizer owns an FP32
+//! **master** copy of every parameter and applies FP32 updates from FP32
+//! gradient accumulation; the compute kernels see a BF16 **working** copy
+//! re-rounded from the master after every step. Because our bf16 kernels
+//! reproduce `VDPBF16PS` semantics (bf16 operands, f32 accumulate), the
+//! working copy here is the bf16 *rounding* of the master, stored widened
+//! to f32 — exactly the values the hardware instruction would read, with
+//! no second rounding when the plan stages its bf16 weight layout.
+//!
+//! In [`Precision::F32`] mode the working copy is a plain mirror, so one
+//! code path serves both precisions.
+//!
+//! ```
+//! use dilconv1d::machine::Precision;
+//! use dilconv1d::model::MasterWeights;
+//!
+//! let mut w = MasterWeights::new(vec![0.1f32; 4], Precision::Bf16);
+//! // The optimizer updates the f32 master; the working copy re-rounds.
+//! w.update(|master| {
+//!     for p in master.iter_mut() {
+//!         *p += 1.0e-3;
+//!     }
+//! });
+//! assert!((w.master()[0] - 0.101).abs() < 1e-6); // full f32 step kept
+//! assert_ne!(w.master()[0], w.working()[0]); // working is bf16-rounded
+//! ```
+
+use crate::conv1d::bf16::Bf16;
+use crate::machine::Precision;
+
+/// FP32 master parameters plus the (possibly bf16-rounded) working copy
+/// the model replicas actually compute with.
+#[derive(Debug, Clone)]
+pub struct MasterWeights {
+    precision: Precision,
+    master: Vec<f32>,
+    working: Vec<f32>,
+}
+
+impl MasterWeights {
+    pub fn new(init: Vec<f32>, precision: Precision) -> MasterWeights {
+        let mut w = MasterWeights {
+            precision,
+            working: vec![0.0; init.len()],
+            master: init,
+        };
+        w.refresh();
+        w
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn len(&self) -> usize {
+        self.master.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.master.is_empty()
+    }
+
+    /// The FP32 master copy (what checkpoints store and the optimizer
+    /// state tracks).
+    pub fn master(&self) -> &[f32] {
+        &self.master
+    }
+
+    /// The working copy the replicas load: bf16-rounded under
+    /// [`Precision::Bf16`], identical to the master under
+    /// [`Precision::F32`].
+    pub fn working(&self) -> &[f32] {
+        &self.working
+    }
+
+    /// Replace the master (e.g. from a checkpoint) and re-derive the
+    /// working copy.
+    pub fn set_master(&mut self, vals: &[f32]) {
+        assert_eq!(vals.len(), self.master.len(), "param length mismatch");
+        self.master.copy_from_slice(vals);
+        self.refresh();
+    }
+
+    /// Apply an optimizer update to the FP32 master in place, then
+    /// re-round the working copy — one split-optimizer step.
+    pub fn update(&mut self, step: impl FnOnce(&mut Vec<f32>)) {
+        step(&mut self.master);
+        assert_eq!(
+            self.master.len(),
+            self.working.len(),
+            "optimizer update must not resize the parameter vector"
+        );
+        self.refresh();
+    }
+
+    fn refresh(&mut self) {
+        match self.precision {
+            Precision::F32 => self.working.copy_from_slice(&self.master),
+            Precision::Bf16 => {
+                for (w, &m) in self.working.iter_mut().zip(&self.master) {
+                    *w = Bf16::from_f32(m).to_f32();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_working_mirrors_master() {
+        let mut w = MasterWeights::new(vec![0.1, -0.7, 3.25], Precision::F32);
+        assert_eq!(w.master(), w.working());
+        w.update(|m| m[1] = 0.123_456_7);
+        assert_eq!(w.master(), w.working());
+        assert_eq!(w.master()[1], 0.123_456_7);
+    }
+
+    #[test]
+    fn bf16_working_is_rounded_but_master_keeps_small_updates() {
+        // A step of 2^-12 is far below bf16 resolution at 1.0 (2^-8): the
+        // working copy cannot represent it, the master must not lose it.
+        let mut w = MasterWeights::new(vec![1.0f32], Precision::Bf16);
+        assert_eq!(w.working()[0], 1.0);
+        let step = (2.0f32).powi(-12);
+        for _ in 0..32 {
+            w.update(|m| m[0] += step);
+        }
+        assert_eq!(w.master()[0], 1.0 + 32.0 * step); // exact f32 sums
+        // 32 steps add 2^-7 — exactly one bf16 ulp at 1.0: the working
+        // copy eventually moves even though every single step rounds away.
+        assert!(w.working()[0] > 1.0, "working copy never advanced");
+        // And the working copy is always a bf16 value.
+        assert_eq!(
+            w.working()[0],
+            Bf16::from_f32(w.working()[0]).to_f32(),
+            "working copy must be bf16-representable"
+        );
+    }
+
+    #[test]
+    fn set_master_refreshes_working() {
+        let mut w = MasterWeights::new(vec![0.0; 2], Precision::Bf16);
+        w.set_master(&[0.300_000_0, -0.300_000_0]);
+        assert_eq!(w.working()[0], Bf16::from_f32(0.3).to_f32());
+        assert_eq!(w.len(), 2);
+        assert!(!w.is_empty());
+    }
+}

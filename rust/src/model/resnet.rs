@@ -83,6 +83,34 @@ impl NetConfig {
             .map(|&(k, c, s)| k * c * s + k)
             .sum()
     }
+
+    /// Flat parameter count (weights + bias) of every layer, packing
+    /// order — the per-layer spans of the flat vector, and the unit of
+    /// gradient bucketing ([`crate::dist::BucketPlan`]).
+    pub fn layer_param_counts(&self) -> Vec<usize> {
+        self.layer_shapes()
+            .iter()
+            .map(|&(k, c, s)| k * c * s + k)
+            .collect()
+    }
+
+    /// Layer ids in the order their gradients complete during the
+    /// backward pass: the two heads first, then each residual block in
+    /// reverse (second conv, then first), the stem last. This is the
+    /// order [`AtacWorksNet::forward_backward_streaming`] invokes its
+    /// sink, and the order gradient buckets fill.
+    pub fn backward_completion_order(&self) -> Vec<usize> {
+        let nb = self.n_blocks;
+        let mut order = Vec::with_capacity(self.n_conv_layers());
+        order.push(1 + 2 * nb);
+        order.push(2 + 2 * nb);
+        for b in (0..nb).rev() {
+            order.push(2 + 2 * b);
+            order.push(1 + 2 * b);
+        }
+        order.push(0);
+        order
+    }
 }
 
 /// Losses of one forward/backward pass.
@@ -190,6 +218,31 @@ impl AtacWorksNet {
         clean: &Tensor,
         peaks: &Tensor,
     ) -> (Vec<ConvGrads>, Losses) {
+        let n_layers = self.convs.len();
+        let mut slots: Vec<Option<ConvGrads>> = (0..n_layers).map(|_| None).collect();
+        let losses = self.forward_backward_streaming(x, clean, peaks, |layer, grads| {
+            slots[layer] = Some(grads);
+        });
+        let out = slots
+            .into_iter()
+            .map(|s| s.expect("backward visited every layer"))
+            .collect();
+        (out, losses)
+    }
+
+    /// Full training step math with a **streaming gradient sink**: the
+    /// sink is invoked with `(layer_id, grads)` the moment each layer's
+    /// backward completes, in [`NetConfig::backward_completion_order`] —
+    /// heads, blocks reversed, stem. This is the hook the bucketed,
+    /// overlapped all-reduce hangs off: a gradient bucket can start its
+    /// collective while earlier layers are still differentiating.
+    pub fn forward_backward_streaming(
+        &mut self,
+        x: &Tensor,
+        clean: &Tensor,
+        peaks: &Tensor,
+        mut sink: impl FnMut(usize, ConvGrads),
+    ) -> Losses {
         let nb = self.cfg.n_blocks;
         let (denoised, logits, _) = self.forward(x, true);
         let (l_mse, g_mse) = mse_with_grad(&denoised.data, &clean.data);
@@ -205,41 +258,34 @@ impl AtacWorksNet {
 
         // Heads (bias fused; identity activation).
         let (gh_reg, _, grads_reg) = self.convs[1 + 2 * nb].backward_fused(&g_den, true, false);
+        sink(1 + 2 * nb, grads_reg);
         let (gh_cls, _, grads_cls) = self.convs[2 + 2 * nb].backward_fused(&g_log, true, false);
+        sink(2 + 2 * nb, grads_cls);
         let mut gh = gh_reg.expect("head backward produces an input gradient");
         gh.add_assign(&gh_cls.expect("head backward produces an input gradient"));
 
         // Blocks, reversed. The second conv's fused backward hands back
         // both the branch gradient (through the conv) and the residual
         // gradient (the skip path) from one prologue sweep.
-        let mut block_grads: Vec<(ConvGrads, ConvGrads)> = Vec::with_capacity(nb);
         for b in (0..nb).rev() {
             let c1 = 1 + 2 * b;
             let c2 = c1 + 1;
             let (gu, gskip, g2) = self.convs[c2].backward_fused(&gh, true, true);
+            sink(c2, g2);
             let (gbranch, _, g1) = self.convs[c1].backward_fused(
                 &gu.expect("block conv produces an input gradient"),
                 true,
                 false,
             );
+            sink(c1, g1);
             gh = gbranch.expect("block conv produces an input gradient");
             gh.add_assign(&gskip.expect("residual gradient requested")); // skip + branch
-            block_grads.push((g1, g2));
         }
 
         // Stem (input gradient not needed).
         let (_, _, grads_stem) = self.convs[0].backward_fused(&gh, false, false);
-
-        // Assemble in packing order.
-        let mut out = Vec::with_capacity(self.convs.len());
-        out.push(grads_stem);
-        for (g1, g2) in block_grads.into_iter().rev() {
-            out.push(g1);
-            out.push(g2);
-        }
-        out.push(grads_reg);
-        out.push(grads_cls);
-        (out, losses)
+        sink(0, grads_stem);
+        losses
     }
 
     /// Flatten parameters in the shared packing order (convN.w, convN.b).
@@ -380,6 +426,49 @@ mod tests {
             "finite-difference gradcheck: only {ok}/{checked} parameters matched"
         );
         net.unpack_params(&p0);
+    }
+
+    #[test]
+    fn streaming_backward_matches_collected_and_orders_layers() {
+        let cfg = NetConfig::tiny();
+        let mut net = AtacWorksNet::init(cfg, 11);
+        let (x, clean, peaks) = batch(&cfg, 2, 60, 12);
+        let (want_grads, want_losses) = net.forward_backward(&x, &clean, &peaks);
+        let mut seen = Vec::new();
+        let mut got: Vec<Option<ConvGrads>> = (0..cfg.n_conv_layers()).map(|_| None).collect();
+        let losses = net.forward_backward_streaming(&x, &clean, &peaks, |layer, g| {
+            seen.push(layer);
+            got[layer] = Some(g);
+        });
+        assert_eq!(seen, cfg.backward_completion_order());
+        assert_eq!(losses.total, want_losses.total);
+        for (l, (g, w)) in got.iter().zip(&want_grads).enumerate() {
+            let g = g.as_ref().expect("layer visited");
+            assert_eq!(g.w, w.w, "layer {l} weight grads");
+            assert_eq!(g.b, w.b, "layer {l} bias grads");
+        }
+    }
+
+    #[test]
+    fn completion_order_is_a_permutation_and_spans_match() {
+        for cfg in [NetConfig::tiny(), NetConfig::default()] {
+            let order = cfg.backward_completion_order();
+            let n = cfg.n_conv_layers();
+            assert_eq!(order.len(), n);
+            let mut seen = vec![false; n];
+            for &l in &order {
+                assert!(!seen[l]);
+                seen[l] = true;
+            }
+            // Heads first, stem last.
+            assert_eq!(order[0], n - 2);
+            assert_eq!(order[1], n - 1);
+            assert_eq!(*order.last().unwrap(), 0);
+            assert_eq!(
+                cfg.layer_param_counts().iter().sum::<usize>(),
+                cfg.param_count()
+            );
+        }
     }
 
     #[test]
