@@ -5,8 +5,10 @@
 //! three passes stand on.
 
 use dilconv1d::bench_harness::time_auto;
-use dilconv1d::conv1d::brgemm::brgemm_f32;
+use dilconv1d::conv1d::bf16::to_bf16;
+use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32, brgemm_f32_with};
 use dilconv1d::conv1d::gemm::gemm_f32;
+use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
 
 fn main() {
@@ -59,5 +61,57 @@ fn main() {
             t2.median_secs / t.median_secs,
         );
     }
+    // Per-ISA rows: the explicit SIMD row kernels at the AtacWorks and
+    // Fig. 5 block shapes, f32 and bf16. The dispatched ISA (env
+    // CONV1D_FORCE_ISA honoured) is marked with '*'.
+    println!("\n# per-ISA BRGEMM micro-kernels (n=64 width block)");
+    println!(
+        "{:>8} {:>4} {:>4} {:>5} | {:>10} | {:>8} | {:>10}",
+        "isa", "m", "k", "l_br", "f32 GF/s", "vs scal", "bf16 GF/s"
+    );
+    for &(m, k, lbr) in &[(15usize, 15usize, 51usize), (64, 64, 5)] {
+        let n = 64usize;
+        let a = rnd(lbr * m * k, 5);
+        let b = rnd(lbr * k * n, 6);
+        let (a16, b16) = (to_bf16(&a), to_bf16(&b));
+        let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+        let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+        let fl = 2.0 * (m * n * k * lbr) as f64;
+        let mut scalar_gf = 0.0f64;
+        for isa in Isa::ALL {
+            let set = MicroKernelSet::for_isa(isa);
+            if set.isa() != isa {
+                println!(
+                    "{:>8} {m:>4} {k:>4} {lbr:>5} | unavailable on this host/build",
+                    isa.name()
+                );
+                continue;
+            }
+            let mut c = vec![0.0f32; m * n];
+            let t = time_auto(0.2, 10, || {
+                brgemm_f32_with(set, &a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, true);
+                std::hint::black_box(&c);
+            });
+            let gf = fl / t.median_secs / 1e9;
+            if isa == Isa::Scalar {
+                scalar_gf = gf;
+            }
+            let mut cb = vec![0.0f32; m * n];
+            let tb = time_auto(0.2, 10, || {
+                brgemm_bf16_with(
+                    set, &a16, &a_offs, k, &b16, &b_offs, n, &mut cb, n, m, n, k, true,
+                );
+                std::hint::black_box(&cb);
+            });
+            println!(
+                "{:>7}{} {m:>4} {k:>4} {lbr:>5} | {gf:>10.2} | {:>7.2}x | {:>10.2}",
+                isa.name(),
+                if active().isa() == isa { '*' } else { ' ' },
+                gf / scalar_gf.max(1e-12),
+                fl / tb.median_secs / 1e9,
+            );
+        }
+    }
+
     println!("\nbrgemm_kernel bench done");
 }

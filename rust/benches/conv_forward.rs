@@ -7,11 +7,12 @@
 //! runs with `--bench`, which we ignore).
 
 use dilconv1d::bench_harness::{run_point, run_point_tuned, time_fn, Pass, SweepConfig};
-use dilconv1d::conv1d::forward::forward;
+use dilconv1d::conv1d::forward::{forward, forward_a_offs, forward_with_scratch};
 use dilconv1d::conv1d::layout::kcs_to_skc;
+use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, PostOps};
-use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
+use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, ExecCtx, Partition, PostOps};
+use dilconv1d::machine::{calibrate_host, project, MachineSpec, Precision, Strategy};
 
 fn main() {
     let quick = std::env::var("BENCH_FULL").is_err();
@@ -181,12 +182,120 @@ fn main() {
         t_tuned.median_secs * 1e3
     );
 
+    // Per-ISA kernel rows (acceptance: dispatched ≥ 1.5× scalar-forced on
+    // AVX2 hosts): the same forward driven through each available
+    // micro-kernel set, with host + modeled CLX roofline efficiency.
+    println!("\n# per-ISA forward (AtacWorks shape N=2 C=15 K=15 S=51 d=8, Q=10000)");
+    println!(
+        "{:>8} | {:>9} | {:>8} | {:>8} | {:>8}",
+        "isa", "median", "GF/s", "host eff", "CLX eff"
+    );
+    let pa = ConvParams::new(2, 15, 15, 10_000 + 50 * 8, 51, 8).unwrap();
+    let wa = rnd(pa.k * pa.c * pa.s, 0xA1);
+    let xa = rnd(pa.n * pa.c * pa.w, 0xA2);
+    let ska = kcs_to_skc(&wa, pa.k, pa.c, pa.s);
+    let a_offs = forward_a_offs(&pa);
+    let mut isa_rows = String::new();
+    let mut isa_gflops = [0.0f64; 3];
+    for (idx, isa) in Isa::ALL.into_iter().enumerate() {
+        let set = MicroKernelSet::for_isa(isa);
+        if set.isa() != isa {
+            println!("{:>8} | unavailable on this host/build", isa.name());
+            continue;
+        }
+        let ctx = ExecCtx::serial().with_uks(set);
+        let mut b_offs = vec![0usize; pa.s];
+        let mut out_a = vec![0.0f32; pa.n * pa.k * pa.q()];
+        let t = time_fn(1, reps, || {
+            forward_with_scratch(&pa, &xa, &ska, &mut out_a, ctx, &a_offs, &mut b_offs);
+            std::hint::black_box(&out_a);
+        });
+        let gf = pa.flops() as f64 / t.median_secs / 1e9;
+        isa_gflops[idx] = gf;
+        let host_eff = gf / host;
+        let modeled = project(&pa, Strategy::Brgemm, &clx, Precision::F32, 1);
+        let mark = if active().isa() == isa { "*" } else { " " };
+        println!(
+            "{:>7}{mark} | {:>7.2}ms | {gf:>8.2} | {:>7.1}% | {:>7.1}%",
+            isa.name(),
+            t.median_secs * 1e3,
+            host_eff * 100.0,
+            modeled.efficiency * 100.0,
+        );
+        if !isa_rows.is_empty() {
+            isa_rows.push_str(",\n    ");
+        }
+        isa_rows.push_str(&format!(
+            "{{\"isa\": \"{}\", \"gflops\": {gf:.3}, \"host_eff\": {host_eff:.4}, \
+             \"modeled_clx_eff\": {:.4}}}",
+            isa.name(),
+            modeled.efficiency,
+        ));
+    }
+    let dispatch_speedup = if active().isa() != Isa::Scalar && isa_gflops[0] > 0.0 {
+        let active_idx = Isa::ALL.iter().position(|&i| i == active().isa()).unwrap();
+        isa_gflops[active_idx] / isa_gflops[0]
+    } else {
+        1.0
+    };
+    println!(
+        "dispatched ISA: {} ({dispatch_speedup:.2}x the scalar-forced kernel)",
+        active().isa()
+    );
+    if std::env::var("BENCH_STRICT").is_ok() && active().isa() != Isa::Scalar {
+        assert!(
+            dispatch_speedup >= 1.5,
+            "dispatched kernel must be >= 1.5x scalar on the AtacWorks shape, got {dispatch_speedup:.2}x"
+        );
+    }
+
+    // Grid vs batch partitioning at N=1 (acceptance: grid >= 2x batch at
+    // 8 threads, Q >= 8192): with one image the batch split degenerates
+    // to a single worker; the 2D width-block grid uses all of them.
+    let threads = 8usize;
+    let pg = ConvParams::new(1, 15, 15, 16_384 + 50 * 8, 51, 8).unwrap();
+    let wg = rnd(pg.k * pg.c * pg.s, 0xB1);
+    let xg = rnd(pg.n * pg.c * pg.w, 0xB2);
+    let mut out_g = vec![0.0f32; pg.n * pg.k * pg.q()];
+    let mut plan_batch = ConvPlan::new(pg, Backend::Brgemm, Precision::F32, threads, wg.clone())
+        .expect("plan");
+    let t_batch = time_fn(1, reps, || {
+        plan_batch.execute_forward_into(&xg, &mut out_g);
+        std::hint::black_box(&out_g);
+    });
+    let mut plan_grid = ConvPlan::new(pg, Backend::Brgemm, Precision::F32, threads, wg)
+        .expect("plan")
+        .with_partition(Partition::Grid);
+    let t_grid = time_fn(1, reps, || {
+        plan_grid.execute_forward_into(&xg, &mut out_g);
+        std::hint::black_box(&out_g);
+    });
+    let grid_speedup = t_batch.median_secs / t_grid.median_secs;
+    println!(
+        "\n# partition at N=1 (C=15 K=15 S=51 d=8, Q=16384, {threads} threads)\n\
+         batch {:>8.2} ms   grid {:>8.2} ms   grid speedup {grid_speedup:.2}x",
+        t_batch.median_secs * 1e3,
+        t_grid.median_secs * 1e3,
+    );
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    if std::env::var("BENCH_STRICT").is_ok() && cores >= threads {
+        assert!(
+            grid_speedup >= 2.0,
+            "grid partitioning must be >= 2x batch at N=1 with {threads} threads, \
+             got {grid_speedup:.2}x"
+        );
+    }
+
     // Bench trajectory row (BENCH_*.json at the repo root).
     let json = format!(
         "{{\n  \"bench\": \"conv_forward\",\n  \"shape\": \"C15_K15_S51_d8_W60000\",\n  \
          \"eager_ms\": {:.4},\n  \"planned_ms\": {:.4},\n  \"planned_over_eager\": {:.4},\n  \
          \"unfused_ms\": {:.4},\n  \"fused_ms\": {:.4},\n  \"fused_over_unfused\": {:.4},\n  \
-         \"autotuned_kernel\": \"{}\",\n  \"autotuned_fused_ms\": {:.4}\n}}\n",
+         \"autotuned_kernel\": \"{}\",\n  \"autotuned_fused_ms\": {:.4},\n  \
+         \"dispatched_isa\": \"{}\",\n  \"dispatch_speedup_vs_scalar\": {:.4},\n  \
+         \"isa_rows\": [\n    {}\n  ],\n  \
+         \"partition_n1_batch_ms\": {:.4},\n  \"partition_n1_grid_ms\": {:.4},\n  \
+         \"partition_n1_grid_speedup\": {:.4}\n}}\n",
         t_eager.median_secs * 1e3,
         t_plan.median_secs * 1e3,
         t_plan.median_secs / t_eager.median_secs,
@@ -195,6 +304,12 @@ fn main() {
         fused_ratio,
         tuned_kernel,
         t_tuned.median_secs * 1e3,
+        active().isa(),
+        dispatch_speedup,
+        isa_rows,
+        t_batch.median_secs * 1e3,
+        t_grid.median_secs * 1e3,
+        grid_speedup,
     );
     // Benches run from rust/; place the trajectory file at the repo root
     // when it is visible, else in the working directory.

@@ -4,7 +4,7 @@
 //! DESIGN.md §4).
 
 use crate::conv1d::test_util::rnd;
-use crate::conv1d::{Backend, ConvParams, ConvPlan, PostOps};
+use crate::conv1d::{Backend, ConvParams, ConvPlan, Partition, PostOps};
 use crate::machine::{project, Measurement, Precision, Strategy};
 use crate::machine::spec::MachineSpec;
 
@@ -175,7 +175,7 @@ pub fn run_point_tuned(
         .expect("invalid sweep point");
     let x = rnd(p.n * p.c * p.w, 0xC0 + q as u64);
     let wt = rnd(p.k * p.c * p.s, 0xF1 + s as u64);
-    let mut plan = ConvPlan::tuned(p, Precision::F32, cfg.threads, wt)
+    let mut plan = ConvPlan::tuned(p, Precision::F32, cfg.threads, Partition::default(), wt)
         .expect("tuned plan construction")
         .with_post_ops(post);
     if post.bias {

@@ -3,7 +3,7 @@
 
 pub mod toml;
 
-use crate::conv1d::{Backend, PostOps};
+use crate::conv1d::{Backend, Partition, PostOps};
 use crate::machine::Precision;
 
 use anyhow::{anyhow, Context, Result};
@@ -33,6 +33,11 @@ pub struct TrainConfig {
     /// the activation is applied inside the conv kernels' output-block
     /// loop; the ResNet block tails additionally fuse the residual add.
     pub post_ops: PostOps,
+    /// Work partitioning the conv kernels split across threads
+    /// (`partition = "batch"` or `"grid"`): `grid` splits the
+    /// `N × ceil(Q/64)` width-block grid so small-batch / long-sequence
+    /// runs still use every thread.
+    pub partition: Partition,
     /// Choose each layer's kernel per shape via the autotuner
     /// (`autotune = true`) instead of pinning `backend`.
     pub autotune: bool,
@@ -71,6 +76,7 @@ impl Default for TrainConfig {
             precision: Precision::F32,
             backend: Backend::Brgemm,
             post_ops: PostOps::bias_relu(),
+            partition: Partition::Batch,
             autotune: false,
             tune_cache: None,
             overlap: false,
@@ -140,6 +146,9 @@ impl TrainConfig {
         }
         if let Some(s) = toml::get_str(&doc, "train", "post_ops") {
             cfg.post_ops = PostOps::parse(s).map_err(|e| anyhow!(e))?;
+        }
+        if let Some(s) = toml::get_str(&doc, "train", "partition") {
+            cfg.partition = s.parse().map_err(|e: String| anyhow!(e))?;
         }
         if let Some(b) = toml::get_bool(&doc, "train", "autotune") {
             cfg.autotune = b;
@@ -253,6 +262,8 @@ tune_cache = "tune.json"
         assert_eq!(c.post_ops, PostOps::parse("bias_sigmoid").unwrap());
         assert!(c.autotune);
         assert_eq!(c.tune_cache.as_deref(), Some("tune.json"));
+        // Partition defaults to the paper's batch split.
+        assert_eq!(c.partition, Partition::Batch);
         // Distributed keys default off / 4 MiB.
         assert!(!c.overlap);
         assert_eq!(c.bucket_mb, 4.0);
@@ -280,6 +291,19 @@ tune_cache = "tune.json"
         assert_eq!(c.backend, Backend::Im2col);
         assert_eq!(c.precision, Precision::F32);
         assert!(c.apply_backend_name("cuda").is_err());
+    }
+
+    #[test]
+    fn partition_key_parses() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(&p, "[train]\npartition = \"grid\"\n").unwrap();
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.partition, Partition::Grid);
+        // Unknown strategies fail loudly.
+        std::fs::write(&p, "[train]\npartition = \"diagonal\"\n").unwrap();
+        assert!(TrainConfig::from_file(&p).is_err());
     }
 
     #[test]

@@ -8,14 +8,57 @@
 //! tap-reversed `(S, C, K)` weight. That is exactly what this module does,
 //! so the backward-data pass shares the forward BRGEMM machinery — the
 //! same property the paper exploits ("very similar to the forward pass").
+//!
+//! The batched entry point takes an [`ExecCtx`]; under
+//! [`Partition::Grid`] the `N × ceil(W/64)` grid of *data-gradient*
+//! width blocks is split across workers, so a single long image
+//! parallelises its backward too.
 
-use super::brgemm::brgemm_f32;
+use super::brgemm::brgemm_f32_with;
 use super::params::{ConvParams, WIDTH_BLOCK};
-use super::threading::par_batch_chunks_scratch;
+use super::simd::{self, MicroKernelSet};
+use super::threading::{par_batch_chunks_scratch, par_grid_chunks_scratch, ExecCtx, Partition};
 
 /// Tap offsets of the `(S, C, K)` backward-data weight: `a_offs[s] = s·C·K`.
 pub fn backward_data_a_offs(p: &ConvParams) -> Vec<usize> {
     (0..p.s).map(|is| is * p.c * p.k).collect()
+}
+
+/// One `(C, nb)` data-gradient block at column `pos` of one image — the
+/// unit of work of both partitionings.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn backward_data_block(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    gout_padded: &[f32],
+    w_sck: &[f32],
+    gin_row: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    let qp = q + 2 * (p.s - 1) * d;
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d; // into the padded gradient
+    }
+    brgemm_f32_with(
+        uks,
+        w_sck,
+        a_offs,
+        k,
+        gout_padded,
+        b_offs,
+        qp,
+        &mut gin_row[pos..],
+        w,
+        c,
+        nb,
+        k,
+        true,
+    );
 }
 
 /// Zero-allocation backward-data for one batch element; offset tables are
@@ -42,16 +85,12 @@ pub fn backward_data_single_into(
     debug_assert_eq!(gin.len(), c * w);
     debug_assert_eq!(a_offs.len(), s);
     debug_assert_eq!(b_offs.len(), s);
-    let mut pos = 0;
+    let uks = simd::active();
     // The "output" of this pass is the data gradient of width W = Q + pad.
+    let mut pos = 0;
     while pos < w {
         let nb = WIDTH_BLOCK.min(w - pos);
-        for (is, bo) in b_offs.iter_mut().enumerate() {
-            *bo = pos + is * d; // into the padded gradient
-        }
-        brgemm_f32(
-            w_sck, a_offs, k, gout_padded, b_offs, qp, &mut gin[pos..], w, c, nb, k, true,
-        );
+        backward_data_block(uks, p, gout_padded, w_sck, gin, a_offs, b_offs, pos, nb);
         pos += nb;
     }
 }
@@ -81,16 +120,16 @@ pub fn pad_gout(p: &ConvParams, gout: &[f32]) -> Vec<f32> {
 }
 
 /// Batched backward-data with caller-owned scratch — the plan executor's
-/// entry point. `b_offs` needs `min(threads, N)·S` elements, `gp` the
-/// padded-gradient size `N·K·(Q + 2·(S−1)·d)`; with `threads <= 1` the
-/// call performs zero heap allocations.
+/// entry point. `b_offs` needs one `S`-window per effective worker, `gp`
+/// the padded-gradient size `N·K·(Q + 2·(S−1)·d)`; with `ctx.threads <= 1`
+/// the call performs zero heap allocations.
 #[allow(clippy::too_many_arguments)]
 pub fn backward_data_with_scratch(
     p: &ConvParams,
     gout: &[f32],
     w_sck: &[f32],
     gin: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
     gp: &mut [f32],
@@ -102,26 +141,43 @@ pub fn backward_data_with_scratch(
     pad_gout_into(p, gout, gp);
     let qp = q + 2 * (p.s - 1) * p.d;
     let gp = &*gp;
+    let uks = ctx.uks;
     let mut no_scratch: [f32; 0] = [];
-    par_batch_chunks_scratch(
-        gin,
-        c * w,
-        b_offs,
-        p.s,
-        &mut no_scratch[..],
-        0,
-        threads,
-        |i, gin_row, bo, _| {
-            backward_data_single_into(
-                p,
-                &gp[i * k * qp..(i + 1) * k * qp],
-                w_sck,
-                gin_row,
-                a_offs,
-                bo,
-            );
-        },
-    );
+    match ctx.partition {
+        Partition::Batch => par_batch_chunks_scratch(
+            gin,
+            c * w,
+            b_offs,
+            p.s,
+            &mut no_scratch[..],
+            0,
+            ctx.threads,
+            |i, gin_row, bo, _| {
+                let gp_row = &gp[i * k * qp..(i + 1) * k * qp];
+                let mut pos = 0;
+                while pos < w {
+                    let nb = WIDTH_BLOCK.min(w - pos);
+                    backward_data_block(uks, p, gp_row, w_sck, gin_row, a_offs, bo, pos, nb);
+                    pos += nb;
+                }
+            },
+        ),
+        Partition::Grid => par_grid_chunks_scratch(
+            gin,
+            c * w,
+            w,
+            WIDTH_BLOCK,
+            b_offs,
+            p.s,
+            &mut no_scratch[..],
+            0,
+            ctx.threads,
+            |i, pos, nb, gin_row, bo, _| {
+                let gp_row = &gp[i * k * qp..(i + 1) * k * qp];
+                backward_data_block(uks, p, gp_row, w_sck, gin_row, a_offs, bo, pos, nb);
+            },
+        ),
+    }
 }
 
 /// Batched backward-data pass, threaded over the batch dimension. The pad
@@ -134,7 +190,16 @@ pub fn backward_data(p: &ConvParams, gout: &[f32], w_sck: &[f32], gin: &mut [f32
     let mut b_offs = vec![0usize; workers * p.s];
     let qp = p.q() + 2 * (p.s - 1) * p.d;
     let mut gp = vec![0.0; p.n * p.k * qp];
-    backward_data_with_scratch(p, gout, w_sck, gin, threads, &a_offs, &mut b_offs, &mut gp);
+    backward_data_with_scratch(
+        p,
+        gout,
+        w_sck,
+        gin,
+        ExecCtx::with_threads(threads),
+        &a_offs,
+        &mut b_offs,
+        &mut gp,
+    );
 }
 
 #[cfg(test)]
@@ -186,6 +251,35 @@ mod tests {
         backward_data(&p, &gout, &sck, &mut g1, 1);
         backward_data(&p, &gout, &sck, &mut g3, 3);
         assert_eq!(g1, g3);
+    }
+
+    #[test]
+    fn grid_partition_equals_batch_bit_exact() {
+        // Grid split over the data-gradient width blocks — bit-exact vs
+        // batch, including the N=1 single-image fan-out.
+        for &(n, threads) in &[(1usize, 8usize), (3, 4)] {
+            let p = ConvParams::new(n, 5, 6, 333, 7, 3).unwrap();
+            let gout = rnd(p.n * p.k * p.q(), 60);
+            let wt = rnd(p.k * p.c * p.s, 61);
+            let sck = kcs_to_sck_flipped(&wt, p.k, p.c, p.s);
+            let a_offs = backward_data_a_offs(&p);
+            let qp = p.q() + 2 * (p.s - 1) * p.d;
+            let run = |partition| {
+                let ctx = ExecCtx::new(threads, partition);
+                let mut b_offs = vec![0usize; threads.max(1) * p.s];
+                let mut gp = vec![0.0; p.n * p.k * qp];
+                let mut gin = vec![0.0; p.n * p.c * p.w];
+                backward_data_with_scratch(
+                    &p, &gout, &sck, &mut gin, ctx, &a_offs, &mut b_offs, &mut gp,
+                );
+                gin
+            };
+            assert_eq!(
+                run(Partition::Batch),
+                run(Partition::Grid),
+                "N={n} threads={threads}"
+            );
+        }
     }
 
     #[test]

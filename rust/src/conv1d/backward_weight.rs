@@ -12,64 +12,99 @@
 //! kernel is the least efficient of the three: the input blocks stream
 //! through cache once and the accumulator is shared across the batch
 //! dimension — which is why the batch reduction here is serial per
-//! accumulator, with optional sharded accumulators merged at the end when
-//! threading is requested.
+//! accumulator, with sharded per-worker accumulators merged at the end
+//! when threading is requested.
+//!
+//! Work sharding follows the [`ExecCtx`] partition: **batch** shards
+//! whole images across workers (the paper's Sec. 3.3 strategy);
+//! **grid** shards `(image, width-block)` cells, so an N=1 long-sequence
+//! backward-weight still uses every core. Either way each worker owns a
+//! private `(S, C, K)` accumulator and the merge is a fixed-order sum, so
+//! results are deterministic for a given `(threads, partition)`.
 
 use super::gemm::gemm_f32_bt;
 use super::layout::sck_to_kcs_into;
 use super::params::{ConvParams, WIDTH_BLOCK};
+use super::threading::{grid_cell, grid_runs, ExecCtx, Partition};
+
+/// Accumulate one `(pos, nb)` width block of one batch element into
+/// `gw_sck` (layout `(S, C, K)`, **not** zeroed) — the unit of work of
+/// both partitionings.
+#[inline]
+fn backward_weight_block(
+    p: &ConvParams,
+    gout: &[f32],
+    x: &[f32],
+    gw_sck: &mut [f32],
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    for is in 0..s {
+        // A = In panel (C × nb) at column pos + s·d, row stride W.
+        // B (transposed access) = Grad_out panel (K × nb), row stride Q.
+        gemm_f32_bt(
+            &x[pos + is * d..],
+            w,
+            &gout[pos..],
+            q,
+            &mut gw_sck[is * c * k..(is + 1) * c * k],
+            k,
+            c,
+            k,
+            nb,
+        );
+    }
+}
 
 /// Accumulate the weight gradient of one batch element into `gw_sck`
 /// (layout `(S, C, K)`, **not** zeroed by this function).
 pub fn backward_weight_single(p: &ConvParams, gout: &[f32], x: &[f32], gw_sck: &mut [f32]) {
-    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    let (c, k, s, w, q) = (p.c, p.k, p.s, p.w, p.q());
     debug_assert_eq!(gout.len(), k * q);
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(gw_sck.len(), s * c * k);
     let mut pos = 0;
     while pos < q {
         let nb = WIDTH_BLOCK.min(q - pos);
-        for is in 0..s {
-            // A = In panel (C × nb) at column pos + s·d, row stride W.
-            // B (transposed access) = Grad_out panel (K × nb), row stride Q.
-            gemm_f32_bt(
-                &x[pos + is * d..],
-                w,
-                &gout[pos..],
-                q,
-                &mut gw_sck[is * c * k..(is + 1) * c * k],
-                k,
-                c,
-                k,
-                nb,
-            );
-        }
+        backward_weight_block(p, gout, x, gw_sck, pos, nb);
         pos += nb;
     }
 }
 
+/// Effective worker count of one backward-weight call under a partition.
+fn effective_workers(p: &ConvParams, threads: usize, partition: Partition) -> usize {
+    let items = match partition {
+        Partition::Batch => p.n,
+        Partition::Grid => p.n * p.q_blocks(),
+    };
+    threads.max(1).min(items.max(1))
+}
+
 /// Batched backward-weight with caller-owned scratch — the plan
 /// executor's entry point. `gw_kcs` receives the gradient in the
-/// framework's `(K, C, S)` layout; `partials` must hold
-/// `min(threads, N)·S·C·K` elements of per-worker accumulator space.
-/// With `threads <= 1` the call performs zero heap allocations.
+/// framework's `(K, C, S)` layout; `partials` must hold one `S·C·K`
+/// accumulator per effective worker. With `ctx.threads <= 1` the call
+/// performs zero heap allocations.
 ///
-/// With `threads > 1` the batch is sharded over per-worker accumulators
-/// which are summed afterwards — the deterministic equivalent of the
-/// paper's shared-weight-tensor multithreading caveat (Sec. 3.3).
+/// With more threads the work items (images, or `(image, width-block)`
+/// cells under [`Partition::Grid`]) are sharded over per-worker
+/// accumulators which are summed afterwards in worker order — the
+/// deterministic equivalent of the paper's shared-weight-tensor
+/// multithreading caveat (Sec. 3.3).
 pub fn backward_weight_with_scratch(
     p: &ConvParams,
     gout: &[f32],
     x: &[f32],
     gw_kcs: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     partials: &mut [f32],
 ) {
     let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
     assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {p}");
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
     assert_eq!(gw_kcs.len(), k * c * s, "grad-weight shape mismatch for {p}");
-    let t = threads.max(1).min(n.max(1));
+    let t = effective_workers(p, ctx.threads, ctx.partition);
     let scl = s * c * k;
     assert!(partials.len() >= t * scl, "partials buffer too small");
     let partials = &mut partials[..t * scl];
@@ -84,22 +119,50 @@ pub fn backward_weight_with_scratch(
             );
         }
     } else {
-        std::thread::scope(|scope| {
-            for (tid, acc) in partials.chunks_mut(scl).enumerate() {
-                scope.spawn(move || {
-                    let mut i = tid;
-                    while i < n {
-                        backward_weight_single(
-                            p,
-                            &gout[i * k * q..(i + 1) * k * q],
-                            &x[i * c * w..(i + 1) * c * w],
-                            acc,
-                        );
-                        i += t;
+        match ctx.partition {
+            Partition::Batch => std::thread::scope(|scope| {
+                for (tid, acc) in partials.chunks_mut(scl).enumerate() {
+                    scope.spawn(move || {
+                        let mut i = tid;
+                        while i < n {
+                            backward_weight_single(
+                                p,
+                                &gout[i * k * q..(i + 1) * k * q],
+                                &x[i * c * w..(i + 1) * c * w],
+                                acc,
+                            );
+                            i += t;
+                        }
+                    });
+                }
+            }),
+            Partition::Grid => {
+                // Contiguous runs of the N × ceil(Q/64) grid (the same
+                // split as `par_grid_chunks_scratch`, via the shared
+                // `grid_runs`/`grid_cell` helpers), one private
+                // accumulator per worker.
+                let qb = p.q_blocks();
+                std::thread::scope(|scope| {
+                    for ((start, count), acc) in
+                        grid_runs(n * qb, t).zip(partials.chunks_mut(scl))
+                    {
+                        scope.spawn(move || {
+                            for g in start..start + count {
+                                let (i, pos, nb) = grid_cell(g, qb, q, WIDTH_BLOCK);
+                                backward_weight_block(
+                                    p,
+                                    &gout[i * k * q..(i + 1) * k * q],
+                                    &x[i * c * w..(i + 1) * c * w],
+                                    acc,
+                                    pos,
+                                    nb,
+                                );
+                            }
+                        });
                     }
                 });
             }
-        });
+        }
         // Tree-free deterministic merge (t is small).
         let (total, rest) = partials.split_at_mut(scl);
         for part in rest.chunks(scl) {
@@ -119,7 +182,14 @@ pub fn backward_weight(p: &ConvParams, gout: &[f32], x: &[f32], threads: usize) 
     let t = threads.max(1).min(p.n.max(1));
     let mut partials = vec![0.0f32; t * s * c * k];
     let mut gw = vec![0.0f32; k * c * s];
-    backward_weight_with_scratch(p, gout, x, &mut gw, threads, &mut partials);
+    backward_weight_with_scratch(
+        p,
+        gout,
+        x,
+        &mut gw,
+        ExecCtx::with_threads(threads),
+        &mut partials,
+    );
     gw
 }
 
@@ -190,6 +260,48 @@ mod tests {
         let par = backward_weight(&p, &gout, &x, 3);
         for (a, b) in serial.iter().zip(&par) {
             assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn grid_partition_matches_serial() {
+        // Grid-sharded accumulators (incl. the N=1 fan-out that batch
+        // sharding cannot parallelise) agree with the serial reduction up
+        // to fp reassociation.
+        for &(n, threads) in &[(1usize, 8usize), (4, 3)] {
+            let p = ConvParams::new(n, 5, 4, 400, 9, 3).unwrap();
+            let gout = rnd(p.n * p.k * p.q(), 5);
+            let x = rnd(p.n * p.c * p.w, 6);
+            let serial = backward_weight(&p, &gout, &x, 1);
+            let t = effective_workers(&p, threads, Partition::Grid);
+            let mut partials = vec![0.0f32; t * p.s * p.c * p.k];
+            let mut gw = vec![0.0f32; p.k * p.c * p.s];
+            backward_weight_with_scratch(
+                &p,
+                &gout,
+                &x,
+                &mut gw,
+                ExecCtx::new(threads, Partition::Grid),
+                &mut partials,
+            );
+            for (a, b) in serial.iter().zip(&gw) {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                    "N={n} threads={threads}: {a} vs {b}"
+                );
+            }
+            // And the grid run is deterministic: a second pass is
+            // bit-identical.
+            let mut gw2 = vec![0.0f32; p.k * p.c * p.s];
+            backward_weight_with_scratch(
+                &p,
+                &gout,
+                &x,
+                &mut gw2,
+                ExecCtx::new(threads, Partition::Grid),
+                &mut partials,
+            );
+            assert_eq!(gw, gw2);
         }
     }
 }

@@ -8,7 +8,12 @@
 //! instruction, not a naive bf16-everywhere emulation.
 
 /// A bfloat16 value: the upper 16 bits of an IEEE-754 f32.
+///
+/// `repr(transparent)` over `u16` is a layout guarantee the SIMD
+/// micro-kernels rely on: [`crate::conv1d::simd`] reinterprets `&[Bf16]`
+/// panels as raw `u16` lanes for the vectorised widening loads.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(transparent)]
 pub struct Bf16(pub u16);
 
 impl Bf16 {
@@ -58,8 +63,25 @@ pub fn to_bf16(xs: &[f32]) -> Vec<Bf16> {
 /// zero-allocation input staging for the bf16 kernel).
 pub fn to_bf16_into(xs: &[f32], out: &mut [Bf16]) {
     assert_eq!(xs.len(), out.len(), "bf16 buffer length mismatch");
-    for (o, &v) in out.iter_mut().zip(xs) {
-        *o = Bf16::from_f32(v);
+    narrow_row_into(xs, out);
+}
+
+/// Narrow one contiguous f32 row to bf16 — the single narrowing loop both
+/// the bf16 forward store and the plan's input staging share. The body is
+/// 8-wide `chunks_exact` so the round-to-nearest-even conversion runs as
+/// straight-line integer code the compiler vectorises (the scalar
+/// per-element loop it replaces was the bf16 path's store bottleneck).
+pub fn narrow_row_into(src: &[f32], dst: &mut [Bf16]) {
+    assert_eq!(src.len(), dst.len(), "bf16 narrow length mismatch");
+    let mut s8 = src.chunks_exact(8);
+    let mut d8 = dst.chunks_exact_mut(8);
+    for (sc, dc) in (&mut s8).zip(&mut d8) {
+        for (d, &s) in dc.iter_mut().zip(sc) {
+            *d = Bf16::from_f32(s);
+        }
+    }
+    for (d, &s) in d8.into_remainder().iter_mut().zip(s8.remainder()) {
+        *d = Bf16::from_f32(s);
     }
 }
 
@@ -111,6 +133,19 @@ mod tests {
             let q = Bf16::from_f32(v).to_f32();
             assert!((q - v).abs() <= v.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE);
             v *= -1.37;
+        }
+    }
+
+    #[test]
+    fn narrow_row_matches_elementwise() {
+        // The chunked narrowing loop must be bit-identical to the naive
+        // per-element conversion, across remainder lengths 0..=17.
+        for len in 0..=17usize {
+            let src: Vec<f32> = (0..len).map(|i| (i as f32 - 4.3) * 0.731).collect();
+            let mut dst = vec![Bf16::ZERO; len];
+            narrow_row_into(&src, &mut dst);
+            let want: Vec<Bf16> = src.iter().map(|&v| Bf16::from_f32(v)).collect();
+            assert_eq!(dst, want, "len {len}");
         }
     }
 

@@ -10,99 +10,20 @@
 //! convolution kernels `l_br = S`, so a 51-tap filter touches the output
 //! exactly once instead of 51 times. This is where the paper's efficiency
 //! on large filter widths comes from.
+//!
+//! The dominant `n = 64` width-block case routes through the explicit
+//! SIMD micro-kernels ([`super::simd`]): the process resolves the ISA
+//! (scalar / AVX2+FMA / AVX-512F) once into a
+//! [`MicroKernelSet`](super::simd::MicroKernelSet) of function pointers,
+//! and the `_with` variants below let benches and tests pin a specific
+//! set. Remainder blocks (`n < 64`) run the generic scalar loop on every
+//! ISA, so all levels stay bit-identical.
 
 use super::bf16::Bf16;
 use super::gemm::MAX_N;
+use super::simd::{self, MicroKernelSet};
 
-/// Fixed-width fast path: one output row of exactly 64 columns (the
-/// paper's width block) with the accumulator in registers for the whole
-/// batch reduction. `N64` trip counts are compile-time constants, so the
-/// j-loops vectorise to four 16-lane FMAs with no spill.
-#[inline(always)]
-fn brgemm_row_n64(
-    a: &[f32],
-    a_offs: &[usize],
-    lda: usize,
-    b: &[f32],
-    b_offs: &[usize],
-    ldb: usize,
-    row: usize,
-    k: usize,
-    crow: &mut [f32],
-    beta_zero: bool,
-) {
-    const N64: usize = 64;
-    let mut acc = [0.0f32; N64];
-    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
-        let arow = &a[ao + row * lda..ao + row * lda + k];
-        for (ik, &av) in arow.iter().enumerate() {
-            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
-            for j in 0..N64 {
-                acc[j] = av.mul_add(brow[j], acc[j]);
-            }
-        }
-    }
-    if beta_zero {
-        crow[..N64].copy_from_slice(&acc);
-    } else {
-        for j in 0..N64 {
-            crow[j] += acc[j];
-        }
-    }
-}
-
-/// Four-row register-blocked variant of [`brgemm_row_n64`]: one B-panel
-/// row load feeds four accumulator rows.
-#[allow(clippy::too_many_arguments)]
-#[inline(always)]
-fn brgemm_row4_n64(
-    a: &[f32],
-    a_offs: &[usize],
-    lda: usize,
-    b: &[f32],
-    b_offs: &[usize],
-    ldb: usize,
-    row0: usize,
-    k: usize,
-    c: &mut [f32],
-    ldc: usize,
-    beta_zero: bool,
-) {
-    const N64: usize = 64;
-    let mut acc0 = [0.0f32; N64];
-    let mut acc1 = [0.0f32; N64];
-    let mut acc2 = [0.0f32; N64];
-    let mut acc3 = [0.0f32; N64];
-    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
-        let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
-        let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
-        let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
-        let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
-        for ik in 0..k {
-            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
-            let (v0, v1, v2, v3) = (a0[ik], a1[ik], a2[ik], a3[ik]);
-            for j in 0..N64 {
-                let bj = brow[j];
-                acc0[j] = v0.mul_add(bj, acc0[j]);
-                acc1[j] = v1.mul_add(bj, acc1[j]);
-                acc2[j] = v2.mul_add(bj, acc2[j]);
-                acc3[j] = v3.mul_add(bj, acc3[j]);
-            }
-        }
-    }
-    for (r, acc) in [acc0, acc1, acc2, acc3].iter().enumerate() {
-        let crow = &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64];
-        if beta_zero {
-            crow.copy_from_slice(acc);
-        } else {
-            for j in 0..N64 {
-                crow[j] += acc[j];
-            }
-        }
-    }
-}
-
-/// f32 BRGEMM.
+/// f32 BRGEMM through the process-active SIMD micro-kernel set.
 ///
 /// * `a[a_offs[i] + row·lda + col]` is the `A_i` element `(row, col)`;
 ///   each `A_i` is `m×k`.
@@ -126,21 +47,52 @@ pub fn brgemm_f32(
     k: usize,
     beta_zero: bool,
 ) {
-    debug_assert_eq!(a_offs.len(), b_offs.len(), "batch length mismatch");
-    debug_assert!(n <= MAX_N);
+    brgemm_f32_with(simd::active(), a, a_offs, lda, b, b_offs, ldb, c, ldc, m, n, k, beta_zero);
+}
+
+/// [`brgemm_f32`] with an explicit micro-kernel set — the entry point the
+/// plan executor and the per-ISA benches/tests use.
+#[allow(clippy::too_many_arguments)]
+pub fn brgemm_f32_with(
+    uks: &MicroKernelSet,
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    beta_zero: bool,
+) {
+    assert_eq!(
+        a_offs.len(),
+        b_offs.len(),
+        "brgemm_f32: batch length mismatch ({} A offsets vs {} B offsets, m={m} n={n} k={k})",
+        a_offs.len(),
+        b_offs.len()
+    );
+    assert!(
+        n <= MAX_N,
+        "brgemm_f32: n={n} exceeds MAX_N={MAX_N} (m={m}, k={k}, l_br={}) — \
+         width blocks must fit the stack accumulator",
+        a_offs.len()
+    );
     if n == 64 {
         // The dominant case: full width blocks (paper Sec. 3 fixes the
-        // block length at 64). Constant trip counts keep the accumulators
-        // in vector registers across the whole reduction; rows are blocked
-        // by 4 so each B panel row is loaded once per 4 FMA rows
-        // (LIBXSMM-style register blocking).
+        // block length at 64). The resolved ISA's register-resident row
+        // kernels run here; rows are blocked by 4 so each B panel row is
+        // loaded once per 4 FMA rows (LIBXSMM-style register blocking).
         let mut im = 0;
         while im + 4 <= m {
-            brgemm_row4_n64(a, a_offs, lda, b, b_offs, ldb, im, k, c, ldc, beta_zero);
+            (uks.row4_f32)(a, a_offs, lda, b, b_offs, ldb, im, k, c, ldc, beta_zero);
             im += 4;
         }
         while im < m {
-            brgemm_row_n64(
+            (uks.row_f32)(
                 a,
                 a_offs,
                 lda,
@@ -156,6 +108,8 @@ pub fn brgemm_f32(
         }
         return;
     }
+    // Remainder blocks (n < 64): generic scalar loop, identical on every
+    // ISA — keeps the dispatch levels bit-exact on ragged tails.
     for im in 0..m {
         let mut acc = [0.0f32; MAX_N];
         // Batch-reduce: accumulator persists across all l_br blocks.
@@ -179,7 +133,8 @@ pub fn brgemm_f32(
     }
 }
 
-/// bf16 BRGEMM with f32 accumulation (`VDPBF16PS` semantics), f32 output.
+/// bf16 BRGEMM with f32 accumulation (`VDPBF16PS` semantics), f32 output,
+/// through the process-active SIMD micro-kernel set.
 #[allow(clippy::too_many_arguments)]
 pub fn brgemm_bf16(
     a: &[Bf16],
@@ -195,8 +150,64 @@ pub fn brgemm_bf16(
     k: usize,
     beta_zero: bool,
 ) {
-    debug_assert_eq!(a_offs.len(), b_offs.len(), "batch length mismatch");
-    debug_assert!(n <= MAX_N);
+    brgemm_bf16_with(simd::active(), a, a_offs, lda, b, b_offs, ldb, c, ldc, m, n, k, beta_zero);
+}
+
+/// [`brgemm_bf16`] with an explicit micro-kernel set. The `n = 64` fast
+/// path uses the same row-4 register blocking as f32 — this is what
+/// brings the bf16 kernels to blocking parity with the f32 ones.
+#[allow(clippy::too_many_arguments)]
+pub fn brgemm_bf16_with(
+    uks: &MicroKernelSet,
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    beta_zero: bool,
+) {
+    assert_eq!(
+        a_offs.len(),
+        b_offs.len(),
+        "brgemm_bf16: batch length mismatch ({} A offsets vs {} B offsets, m={m} n={n} k={k})",
+        a_offs.len(),
+        b_offs.len()
+    );
+    assert!(
+        n <= MAX_N,
+        "brgemm_bf16: n={n} exceeds MAX_N={MAX_N} (m={m}, k={k}, l_br={}) — \
+         width blocks must fit the stack accumulator",
+        a_offs.len()
+    );
+    if n == 64 {
+        let mut im = 0;
+        while im + 4 <= m {
+            (uks.row4_bf16)(a, a_offs, lda, b, b_offs, ldb, im, k, c, ldc, beta_zero);
+            im += 4;
+        }
+        while im < m {
+            (uks.row_bf16)(
+                a,
+                a_offs,
+                lda,
+                b,
+                b_offs,
+                ldb,
+                im,
+                k,
+                &mut c[im * ldc..im * ldc + 64],
+                beta_zero,
+            );
+            im += 1;
+        }
+        return;
+    }
     for im in 0..m {
         let mut acc = [0.0f32; MAX_N];
         for (&ao, &bo) in a_offs.iter().zip(b_offs) {
@@ -258,6 +269,26 @@ mod tests {
     }
 
     #[test]
+    fn n64_fast_path_equals_sum_of_gemms() {
+        // The dispatched n = 64 row kernels against the serial-GEMM oracle,
+        // with an m that exercises both the row-4 and the tail row kernel.
+        let (m, n, k, lbr) = (7, 64, 13, 5);
+        let a = rnd(lbr * m * k, 11);
+        let b = rnd(lbr * k * n, 12);
+        let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+        let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+        let mut c1 = vec![0.0; m * n];
+        brgemm_f32(&a, &a_offs, k, &b, &b_offs, n, &mut c1, n, m, n, k, true);
+        let mut c2 = vec![0.0; m * n];
+        for i in 0..lbr {
+            gemm_f32(&a[a_offs[i]..], k, &b[b_offs[i]..], n, &mut c2, n, m, n, k);
+        }
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
     fn beta_semantics() {
         let (m, n, k) = (2, 4, 3);
         let a = vec![1.0; m * k];
@@ -294,6 +325,15 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "exceeds MAX_N")]
+    fn oversized_width_block_panics_with_shape() {
+        // The n ≤ MAX_N guard is a real assert in release builds too — a
+        // bare slice-index panic deep in the kernel would hide the shape.
+        let mut c = vec![0.0; MAX_N + 1];
+        brgemm_f32(&[], &[], 1, &[], &[], 1, &mut c, MAX_N + 1, 1, MAX_N + 1, 1, true);
+    }
+
+    #[test]
     fn bf16_close_to_f32() {
         use crate::conv1d::bf16::to_bf16;
         let (m, n, k, lbr) = (4, 32, 8, 3);
@@ -321,5 +361,37 @@ mod tests {
         for (x, y) in cb.iter().zip(&cf) {
             assert!((x - y).abs() < 2e-2 * (1.0 + y.abs()), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn bf16_n64_fast_path_matches_generic() {
+        // The new bf16 row/row-4 kernels vs the generic loop run at a
+        // non-64 ldc... easiest oracle: widen operands to f32 and compare
+        // against the f32 fast path (bf16 widening is exact, both
+        // accumulate in f32 with the same FMA order → bit-identical).
+        use crate::conv1d::bf16::{to_bf16, to_f32};
+        let (m, n, k, lbr) = (6, 64, 9, 4);
+        let a16 = to_bf16(&rnd(lbr * m * k, 21));
+        let b16 = to_bf16(&rnd(lbr * k * n, 22));
+        let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+        let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+        let mut c_bf = vec![0.5; m * n];
+        brgemm_bf16(&a16, &a_offs, k, &b16, &b_offs, n, &mut c_bf, n, m, n, k, false);
+        let mut c_f = vec![0.5; m * n];
+        brgemm_f32(
+            &to_f32(&a16),
+            &a_offs,
+            k,
+            &to_f32(&b16),
+            &b_offs,
+            n,
+            &mut c_f,
+            n,
+            m,
+            n,
+            k,
+            false,
+        );
+        assert_eq!(c_bf, c_f, "bf16 n=64 fast path must match exact-widened f32");
     }
 }

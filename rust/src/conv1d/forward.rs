@@ -14,12 +14,18 @@
 //!
 //! GEMM shape per block: `m = K`, `n = 64`, `k = C` — so the paper's
 //! LIBXSMM-friendliness condition is `√(C·K) ≤ 64` (Sec. 3.1).
+//!
+//! Batched entry points take an [`ExecCtx`]: worker count, batch-vs-grid
+//! work [`Partition`] (grid splits the `N × ceil(Q/64)` width-block grid,
+//! so a single long image parallelises), and the resolved SIMD
+//! micro-kernel set the BRGEMM blocks dispatch to.
 
-use super::bf16::Bf16;
-use super::brgemm::{brgemm_bf16, brgemm_f32};
+use super::bf16::{narrow_row_into, Bf16};
+use super::brgemm::{brgemm_bf16_with, brgemm_f32_with};
 use super::params::{ConvParams, WIDTH_BLOCK};
 use super::post::{apply_block, PostOps};
-use super::threading::par_batch_chunks_scratch;
+use super::simd::{self, MicroKernelSet};
+use super::threading::{par_batch_chunks_scratch, par_grid_chunks_scratch, ExecCtx, Partition};
 
 /// Tap offsets of the `(S, K, C)` forward weight: `a_offs[s] = s·K·C`.
 /// Block-position independent, so a plan computes them exactly once
@@ -27,6 +33,48 @@ use super::threading::par_batch_chunks_scratch;
 /// see EXPERIMENTS.md §Perf).
 pub fn forward_a_offs(p: &ConvParams) -> Vec<usize> {
     (0..p.s).map(|is| is * p.k * p.c).collect()
+}
+
+/// One `(K, nb)` output block at column `pos` of one image: generate the
+/// tap offsets, run the BRGEMM, fuse the post-op epilogue. The unit of
+/// work of both partitionings — batch workers loop it over a whole image,
+/// grid workers get handed individual `(image, block)` cells.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn forward_block(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    x: &[f32],
+    w_skc: &[f32],
+    out_row: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d; // &In[0, pos + s*d], row stride = w
+    }
+    brgemm_f32_with(
+        uks,
+        w_skc,
+        a_offs,
+        c,
+        x,
+        b_offs,
+        w,
+        &mut out_row[pos..],
+        q,
+        k,
+        nb,
+        c,
+        true,
+    );
+    apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
 }
 
 /// Zero-allocation forward pass for one batch element: the tap-offset
@@ -64,23 +112,18 @@ pub fn forward_single_post_into(
     bias: &[f32],
     res_row: Option<&[f32]>,
 ) {
-    let (c, k, s, d, w, q) = (p.c, p.k, p.s, p.d, p.w, p.q());
+    let (c, k, s, w, q) = (p.c, p.k, p.s, p.w, p.q());
     debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(w_skc.len(), s * k * c);
     debug_assert_eq!(out.len(), k * q);
     debug_assert_eq!(a_offs.len(), s);
     debug_assert_eq!(b_offs.len(), s);
+    let uks = simd::active();
     let mut pos = 0;
     while pos < q {
         let nb = WIDTH_BLOCK.min(q - pos);
-        for (is, bo) in b_offs.iter_mut().enumerate() {
-            *bo = pos + is * d; // &In[0, pos + s*d], row stride = w
-        }
-        brgemm_f32(
-            w_skc, a_offs, c, x, b_offs, w, &mut out[pos..], q, k, nb, c, true,
-        );
-        apply_block(ops, bias, res_row, out, k, q, pos, nb);
+        forward_block(uks, p, x, w_skc, out, a_offs, b_offs, ops, bias, res_row, pos, nb);
         pos += nb;
     }
 }
@@ -94,41 +137,26 @@ pub fn forward_single(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32])
 }
 
 /// Batched forward pass with caller-owned scratch — the plan executor's
-/// entry point. `b_offs` must hold at least `min(threads, N)·S` elements
-/// (one `S`-window per worker); with `threads <= 1` the call performs
-/// zero heap allocations.
+/// entry point. `b_offs` must hold at least one `S`-window per effective
+/// worker (`min(ctx.threads, N)` for batch partitioning,
+/// `min(ctx.threads, N·ceil(Q/64))` for grid); with `ctx.threads <= 1`
+/// the call performs zero heap allocations.
 pub fn forward_with_scratch(
     p: &ConvParams,
     x: &[f32],
     w_skc: &[f32],
     out: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
 ) {
-    let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
-    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
-    assert_eq!(w_skc.len(), p.s * k * c, "weight shape mismatch for {p}");
-    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
-    let mut no_scratch: [f32; 0] = [];
-    par_batch_chunks_scratch(
-        out,
-        k * q,
-        b_offs,
-        p.s,
-        &mut no_scratch[..],
-        0,
-        threads,
-        |i, out_row, bo, _| {
-            forward_single_into(p, &x[i * c * w..(i + 1) * c * w], w_skc, out_row, a_offs, bo);
-        },
-    );
+    forward_post_with_scratch(p, x, w_skc, out, ctx, a_offs, b_offs, &PostOps::none(), &[], None);
 }
 
 /// Batched fused-epilogue forward pass with caller-owned scratch — the
 /// plan executor's post-op entry point. `residual` is the full `(N, K, Q)`
 /// residual tensor when `ops.residual`; each worker sees only its image's
-/// row. Zero heap allocations with `threads <= 1`, same as
+/// row. Zero heap allocations with `ctx.threads <= 1`, same as
 /// [`forward_with_scratch`].
 #[allow(clippy::too_many_arguments)]
 pub fn forward_post_with_scratch(
@@ -136,44 +164,67 @@ pub fn forward_post_with_scratch(
     x: &[f32],
     w_skc: &[f32],
     out: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
     ops: &PostOps,
     bias: &[f32],
     residual: Option<&[f32]>,
 ) {
-    let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
+    let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
+    debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
-    assert_eq!(w_skc.len(), p.s * k * c, "weight shape mismatch for {p}");
+    assert_eq!(w_skc.len(), s * k * c, "weight shape mismatch for {p}");
     assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
     super::post::validate_args(ops, bias, residual, n, k, q);
+    let uks = ctx.uks;
     let mut no_scratch: [f32; 0] = [];
-    par_batch_chunks_scratch(
-        out,
-        k * q,
-        b_offs,
-        p.s,
-        &mut no_scratch[..],
-        0,
-        threads,
-        |i, out_row, bo, _| {
-            let res_row = residual
-                .filter(|_| ops.residual)
-                .map(|r| &r[i * k * q..(i + 1) * k * q]);
-            forward_single_post_into(
-                p,
-                &x[i * c * w..(i + 1) * c * w],
-                w_skc,
-                out_row,
-                a_offs,
-                bo,
-                ops,
-                bias,
-                res_row,
-            );
-        },
-    );
+    let res_of = |i: usize| {
+        residual
+            .filter(|_| ops.residual)
+            .map(|r| &r[i * k * q..(i + 1) * k * q])
+    };
+    match ctx.partition {
+        Partition::Batch => par_batch_chunks_scratch(
+            out,
+            k * q,
+            b_offs,
+            s,
+            &mut no_scratch[..],
+            0,
+            ctx.threads,
+            |i, out_row, bo, _| {
+                let xrow = &x[i * c * w..(i + 1) * c * w];
+                let res_row = res_of(i);
+                let mut pos = 0;
+                while pos < q {
+                    let nb = WIDTH_BLOCK.min(q - pos);
+                    forward_block(
+                        uks, p, xrow, w_skc, out_row, a_offs, bo, ops, bias, res_row, pos, nb,
+                    );
+                    pos += nb;
+                }
+            },
+        ),
+        Partition::Grid => par_grid_chunks_scratch(
+            out,
+            k * q,
+            q,
+            WIDTH_BLOCK,
+            b_offs,
+            s,
+            &mut no_scratch[..],
+            0,
+            ctx.threads,
+            |i, pos, nb, out_row, bo, _| {
+                let xrow = &x[i * c * w..(i + 1) * c * w];
+                let res_row = res_of(i);
+                forward_block(
+                    uks, p, xrow, w_skc, out_row, a_offs, bo, ops, bias, res_row, pos, nb,
+                );
+            },
+        ),
+    }
 }
 
 /// Batched forward pass, multithreaded across the batch dimension
@@ -185,7 +236,15 @@ pub fn forward(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], thread
     let a_offs = forward_a_offs(p);
     let workers = threads.max(1).min(p.n.max(1));
     let mut b_offs = vec![0usize; workers * p.s];
-    forward_with_scratch(p, x, w_skc, out, threads, &a_offs, &mut b_offs);
+    forward_with_scratch(
+        p,
+        x,
+        w_skc,
+        out,
+        ExecCtx::with_threads(threads),
+        &a_offs,
+        &mut b_offs,
+    );
 }
 
 /// Forward pass with a caller-chosen width block — the ablation hook for
@@ -199,6 +258,7 @@ pub fn forward_single_wb(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f3
     debug_assert_eq!(x.len(), c * w);
     debug_assert_eq!(w_skc.len(), s * k * c);
     debug_assert_eq!(out.len(), k * q);
+    let uks = simd::active();
     let a_offs = forward_a_offs(p);
     let mut b_offs = vec![0usize; s];
     let mut pos = 0;
@@ -207,8 +267,8 @@ pub fn forward_single_wb(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f3
         for (is, bo) in b_offs.iter_mut().enumerate() {
             *bo = pos + is * d;
         }
-        brgemm_f32(
-            w_skc, &a_offs, c, x, &b_offs, w, &mut out[pos..], q, k, nb, c, true,
+        brgemm_f32_with(
+            uks, w_skc, &a_offs, c, x, &b_offs, w, &mut out[pos..], q, k, nb, c, true,
         );
         pos += nb;
     }
@@ -217,7 +277,8 @@ pub fn forward_single_wb(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f3
 /// Zero-allocation bf16 forward pass for one batch element: bf16
 /// operands, f32 accumulate, bf16 store (paper Sec. 4.3 BF16 path; Cooper
 /// Lake `VDPBF16PS`). `fblock` is the caller-owned `K·WIDTH_BLOCK` f32
-/// accumulator staging block narrowed to bf16 on store.
+/// accumulator staging block narrowed to bf16 on store (row-wise chunked
+/// narrowing, [`super::bf16::narrow_row_into`]).
 pub fn forward_single_bf16_into(
     p: &ConvParams,
     x: &[Bf16],
@@ -234,18 +295,20 @@ pub fn forward_single_bf16_into(
     debug_assert_eq!(a_offs.len(), s);
     debug_assert_eq!(b_offs.len(), s);
     debug_assert!(fblock.len() >= k * WIDTH_BLOCK);
+    let uks = simd::active();
     let mut pos = 0;
     while pos < q {
         let nb = WIDTH_BLOCK.min(q - pos);
         for (is, bo) in b_offs.iter_mut().enumerate() {
             *bo = pos + is * d;
         }
-        brgemm_bf16(w_skc, a_offs, c, x, b_offs, w, fblock, nb, k, nb, c, true);
-        // Narrow the f32 accumulator block to bf16 on store.
+        brgemm_bf16_with(uks, w_skc, a_offs, c, x, b_offs, w, fblock, nb, k, nb, c, true);
+        // Narrow the f32 accumulator block to bf16 on store, row by row.
         for ik in 0..k {
-            for j in 0..nb {
-                out[ik * q + pos + j] = Bf16::from_f32(fblock[ik * nb + j]);
-            }
+            narrow_row_into(
+                &fblock[ik * nb..(ik + 1) * nb],
+                &mut out[ik * q + pos..ik * q + pos + nb],
+            );
         }
         pos += nb;
     }
@@ -292,6 +355,46 @@ pub fn forward_bf16(p: &ConvParams, x: &[Bf16], w_skc: &[Bf16], out: &mut [Bf16]
     );
 }
 
+/// One bf16-operand `(K, nb)` output block with f32 output — the unit of
+/// work of the plan's bf16 kernel under both partitionings.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn forward_block_bf16_f32out(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    x: &[Bf16],
+    w_skc: &[Bf16],
+    out_row: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d;
+    }
+    brgemm_bf16_with(
+        uks,
+        w_skc,
+        a_offs,
+        c,
+        x,
+        b_offs,
+        w,
+        &mut out_row[pos..],
+        q,
+        k,
+        nb,
+        c,
+        true,
+    );
+    apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
+}
+
 /// Zero-allocation bf16 forward with **f32 output** — the plan executor's
 /// bf16 kernel: operands stay bf16 (`VDPBF16PS` semantics), the f32
 /// accumulator is stored directly, so the caller keeps a uniform f32
@@ -301,7 +404,7 @@ pub fn forward_bf16_f32out_with_scratch(
     x: &[Bf16],
     w_skc: &[Bf16],
     out: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
 ) {
@@ -310,7 +413,7 @@ pub fn forward_bf16_f32out_with_scratch(
         x,
         w_skc,
         out,
-        threads,
+        ctx,
         a_offs,
         b_offs,
         &PostOps::none(),
@@ -328,58 +431,67 @@ pub fn forward_bf16_f32out_post_with_scratch(
     x: &[Bf16],
     w_skc: &[Bf16],
     out: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
     ops: &PostOps,
     bias: &[f32],
     residual: Option<&[f32]>,
 ) {
-    let (n, c, k, s, d, w, q) = (p.n, p.c, p.k, p.s, p.d, p.w, p.q());
+    let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
     debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
     assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
     assert_eq!(w_skc.len(), s * k * c, "weight shape mismatch for {p}");
     assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
     super::post::validate_args(ops, bias, residual, n, k, q);
+    let uks = ctx.uks;
     let mut no_scratch: [f32; 0] = [];
-    par_batch_chunks_scratch(
-        out,
-        k * q,
-        b_offs,
-        s,
-        &mut no_scratch[..],
-        0,
-        threads,
-        |i, out_row, bo, _| {
-            let xrow = &x[i * c * w..(i + 1) * c * w];
-            let res_row = residual
-                .filter(|_| ops.residual)
-                .map(|r| &r[i * k * q..(i + 1) * k * q]);
-            let mut pos = 0;
-            while pos < q {
-                let nb = WIDTH_BLOCK.min(q - pos);
-                for (is, slot) in bo.iter_mut().enumerate() {
-                    *slot = pos + is * d;
+    let res_of = |i: usize| {
+        residual
+            .filter(|_| ops.residual)
+            .map(|r| &r[i * k * q..(i + 1) * k * q])
+    };
+    match ctx.partition {
+        Partition::Batch => par_batch_chunks_scratch(
+            out,
+            k * q,
+            b_offs,
+            s,
+            &mut no_scratch[..],
+            0,
+            ctx.threads,
+            |i, out_row, bo, _| {
+                let xrow = &x[i * c * w..(i + 1) * c * w];
+                let res_row = res_of(i);
+                let mut pos = 0;
+                while pos < q {
+                    let nb = WIDTH_BLOCK.min(q - pos);
+                    forward_block_bf16_f32out(
+                        uks, p, xrow, w_skc, out_row, a_offs, bo, ops, bias, res_row, pos, nb,
+                    );
+                    pos += nb;
                 }
-                brgemm_bf16(
-                    w_skc,
-                    a_offs,
-                    c,
-                    xrow,
-                    bo,
-                    w,
-                    &mut out_row[pos..],
-                    q,
-                    k,
-                    nb,
-                    c,
-                    true,
+            },
+        ),
+        Partition::Grid => par_grid_chunks_scratch(
+            out,
+            k * q,
+            q,
+            WIDTH_BLOCK,
+            b_offs,
+            s,
+            &mut no_scratch[..],
+            0,
+            ctx.threads,
+            |i, pos, nb, out_row, bo, _| {
+                let xrow = &x[i * c * w..(i + 1) * c * w];
+                let res_row = res_of(i);
+                forward_block_bf16_f32out(
+                    uks, p, xrow, w_skc, out_row, a_offs, bo, ops, bias, res_row, pos, nb,
                 );
-                apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
-                pos += nb;
-            }
-        },
-    );
+            },
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -428,6 +540,33 @@ mod tests {
         forward(&p, &x, &skc, &mut o1, 1);
         forward(&p, &x, &skc, &mut o4, 4);
         assert_eq!(o1, o4, "threading must be bit-exact");
+    }
+
+    #[test]
+    fn grid_partition_equals_batch_bit_exact() {
+        // The 2D (batch × width-block) partitioning must reproduce the
+        // batch split bit for bit — including N=1, where only the grid
+        // actually fans out. Mirrors `multithreaded_equals_single`.
+        for &(n, threads) in &[(1usize, 8usize), (3, 4), (2, 1)] {
+            let p = ConvParams::new(n, 6, 7, 400, 9, 3).unwrap();
+            let x = rnd(p.n * p.c * p.w, 53);
+            let wt = rnd(p.k * p.c * p.s, 54);
+            let skc = kcs_to_skc(&wt, p.k, p.c, p.s);
+            let a_offs = forward_a_offs(&p);
+            let run = |partition| {
+                let ctx = ExecCtx::new(threads, partition);
+                let workers = threads.max(1) * p.s; // enough for either split
+                let mut b_offs = vec![0usize; workers];
+                let mut out = vec![0.0; p.n * p.k * p.q()];
+                forward_with_scratch(&p, &x, &skc, &mut out, ctx, &a_offs, &mut b_offs);
+                out
+            };
+            assert_eq!(
+                run(Partition::Batch),
+                run(Partition::Grid),
+                "N={n} threads={threads}: grid must be bit-exact vs batch"
+            );
+        }
     }
 
     #[test]

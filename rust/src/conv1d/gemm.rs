@@ -17,6 +17,7 @@
 //! register-blocked stores.
 
 use super::bf16::Bf16;
+use super::simd;
 
 /// Width-block upper bound used for stack accumulators. Must be ≥ every
 /// `n` the convolution kernels produce (WIDTH_BLOCK = 64 plus remainders).
@@ -24,9 +25,12 @@ pub const MAX_N: usize = 128;
 
 /// `C[m×n] += A[m×k] · B[k×n]` with row strides `lda/ldb/ldc` (row-major).
 ///
-/// Panics in debug builds if an index would be out of range; callers
-/// guarantee `a.len() ≥ (m−1)·lda + k`, `b.len() ≥ (k−1)·ldb + n`,
-/// `c.len() ≥ (m−1)·ldc + n`.
+/// The `n = 64` width-block case (im2col's block GEMM) routes through the
+/// process-active SIMD micro-kernel set ([`super::simd::active`]) as a
+/// single-block batch reduction; remainders run the portable loop.
+///
+/// Callers guarantee `a.len() ≥ (m−1)·lda + k`, `b.len() ≥ (k−1)·ldb + n`,
+/// `c.len() ≥ (m−1)·ldc + n`; out-of-range indices panic.
 #[inline]
 pub fn gemm_f32(
     a: &[f32],
@@ -39,10 +43,40 @@ pub fn gemm_f32(
     n: usize,
     k: usize,
 ) {
-    debug_assert!(n <= MAX_N, "n={n} exceeds MAX_N");
+    assert!(
+        n <= MAX_N,
+        "gemm_f32: n={n} exceeds MAX_N={MAX_N} (m={m}, k={k}) — \
+         width blocks must fit the stack accumulator"
+    );
     debug_assert!(a.len() >= (m.saturating_sub(1)) * lda + k);
     debug_assert!(b.len() >= (k.saturating_sub(1)) * ldb + n);
     debug_assert!(c.len() >= (m.saturating_sub(1)) * ldc + n);
+    if n == 64 {
+        // One-block batch reduction: same β=1 accumulate semantics, same
+        // per-element FMA order, explicit SIMD row kernels.
+        let uks = simd::active();
+        let mut im = 0;
+        while im + 4 <= m {
+            (uks.row4_f32)(a, &[0], lda, b, &[0], ldb, im, k, c, ldc, false);
+            im += 4;
+        }
+        while im < m {
+            (uks.row_f32)(
+                a,
+                &[0],
+                lda,
+                b,
+                &[0],
+                ldb,
+                im,
+                k,
+                &mut c[im * ldc..im * ldc + 64],
+                false,
+            );
+            im += 1;
+        }
+        return;
+    }
     for im in 0..m {
         let mut acc = [0.0f32; MAX_N];
         let arow = &a[im * lda..im * lda + k];
@@ -129,7 +163,11 @@ pub fn gemm_bf16(
     n: usize,
     k: usize,
 ) {
-    debug_assert!(n <= MAX_N, "n={n} exceeds MAX_N");
+    assert!(
+        n <= MAX_N,
+        "gemm_bf16: n={n} exceeds MAX_N={MAX_N} (m={m}, k={k}) — \
+         width blocks must fit the stack accumulator"
+    );
     for im in 0..m {
         let mut acc = [0.0f32; MAX_N];
         let arow = &a[im * lda..im * lda + k];
@@ -250,6 +288,17 @@ mod tests {
         gemm_f32_bt(&a, k, &bt, k, &mut c1, n, m, n, k);
         gemm_naive(&a, k, &b, n, &mut c2, n, m, n, k);
         check_close(&c1, &c2, 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds MAX_N")]
+    fn oversized_n_panics_with_shape_message() {
+        // Release builds must fail the shape guard, not a bare
+        // slice-index panic later.
+        let mut c = vec![0.0; 2 * (MAX_N + 1)];
+        let a = vec![0.0; 2];
+        let b = vec![0.0; MAX_N + 1];
+        gemm_f32(&a, 1, &b, MAX_N + 1, &mut c, MAX_N + 1, 2, MAX_N + 1, 1);
     }
 
     #[test]

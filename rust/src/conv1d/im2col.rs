@@ -18,7 +18,7 @@
 use super::gemm::gemm_f32;
 use super::params::{ConvParams, WIDTH_BLOCK};
 use super::post::{apply_block, PostOps};
-use super::threading::par_batch_chunks_scratch;
+use super::threading::{par_batch_chunks_scratch, ExecCtx};
 
 /// Materialise the im2col patch matrix for one batch element: `(C·S, Q)`.
 pub fn im2col_single(p: &ConvParams, x: &[f32], col: &mut [f32]) {
@@ -93,15 +93,20 @@ pub fn forward_im2col_single_post(
 }
 
 /// Batched im2col forward with a caller-owned patch matrix — the plan
-/// executor's entry point. `col` must hold `min(threads, N)·C·S·Q`
-/// elements (one patch matrix per worker); with `threads <= 1` the call
-/// performs zero heap allocations.
+/// executor's entry point. `col` must hold `min(ctx.threads, N)·C·S·Q`
+/// elements (one patch matrix per worker); with `ctx.threads <= 1` the
+/// call performs zero heap allocations.
+///
+/// This baseline always splits across the batch dimension — its per-image
+/// patch-matrix materialisation has no width-block grid to shard
+/// (`ctx.partition` is ignored; the BRGEMM kernels are the grid-capable
+/// ones, which is itself part of what the baseline comparison shows).
 pub fn forward_im2col_with_scratch(
     p: &ConvParams,
     x: &[f32],
     w_kcs: &[f32],
     out: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     col: &mut [f32],
 ) {
     let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
@@ -116,7 +121,7 @@ pub fn forward_im2col_with_scratch(
         c * s * q,
         &mut no_scratch[..],
         0,
-        threads,
+        ctx.threads,
         |i, out_row, colb, _| {
             forward_im2col_single(p, &x[i * c * w..(i + 1) * c * w], w_kcs, colb, out_row);
         },
@@ -124,14 +129,15 @@ pub fn forward_im2col_with_scratch(
 }
 
 /// Batched fused-epilogue im2col forward with caller-owned scratch — the
-/// plan executor's post-op entry point for the baseline kernel.
+/// plan executor's post-op entry point for the baseline kernel. Batch
+/// partitioning only (see [`forward_im2col_with_scratch`]).
 #[allow(clippy::too_many_arguments)]
 pub fn forward_im2col_post_with_scratch(
     p: &ConvParams,
     x: &[f32],
     w_kcs: &[f32],
     out: &mut [f32],
-    threads: usize,
+    ctx: ExecCtx,
     col: &mut [f32],
     ops: &PostOps,
     bias: &[f32],
@@ -150,7 +156,7 @@ pub fn forward_im2col_post_with_scratch(
         c * s * q,
         &mut no_scratch[..],
         0,
-        threads,
+        ctx.threads,
         |i, out_row, colb, _| {
             let res_row = residual
                 .filter(|_| ops.residual)
@@ -174,7 +180,7 @@ pub fn forward_im2col_post_with_scratch(
 pub fn forward_im2col(p: &ConvParams, x: &[f32], w_kcs: &[f32], out: &mut [f32], threads: usize) {
     let workers = threads.max(1).min(p.n.max(1));
     let mut col = vec![0.0f32; workers * p.c * p.s * p.q()];
-    forward_im2col_with_scratch(p, x, w_kcs, out, threads, &mut col);
+    forward_im2col_with_scratch(p, x, w_kcs, out, ExecCtx::with_threads(threads), &mut col);
 }
 
 /// Extra bytes moved by the im2col materialisation relative to BRGEMM —

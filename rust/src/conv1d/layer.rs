@@ -16,6 +16,7 @@ use super::layout::{kcs_to_skc, pad_width};
 use super::params::ConvParams;
 use super::plan::{ConvPlan, PlanError};
 use super::post::PostOps;
+use super::threading::Partition;
 use crate::machine::Precision;
 
 /// Kernel implementation selector. `Display` emits the canonical registry
@@ -125,8 +126,13 @@ pub struct Conv1dLayer {
     /// (the paper's bf16 path); other backends fall back to f32, exactly
     /// like the bench harness does.
     pub precision: Precision,
-    /// Threads for the batch-dimension parallelism.
+    /// Threads for the kernel-level parallelism.
     pub threads: usize,
+    /// Work partitioning across those threads: `Batch` splits the batch
+    /// dimension N (the paper's strategy); `Grid` splits the
+    /// `N × ceil(Q/64)` width-block grid, so a single long-sequence image
+    /// still uses every thread (the N ≤ 4 serving regime).
+    pub partition: Partition,
     /// Post-op epilogue fused by `forward_post` / `backward_fused` —
     /// [`PostOps::none`] leaves the legacy APIs bit-identical.
     pub post_ops: PostOps,
@@ -155,6 +161,7 @@ impl Clone for Conv1dLayer {
             backend: self.backend,
             precision: self.precision,
             threads: self.threads,
+            partition: self.partition,
             post_ops: self.post_ops,
             autotune: self.autotune,
             w_kcs: self.w_kcs.clone(),
@@ -177,6 +184,7 @@ impl Conv1dLayer {
             backend: Backend::Brgemm,
             precision: Precision::F32,
             threads: 1,
+            partition: Partition::default(),
             post_ops: PostOps::none(),
             autotune: false,
             w_kcs,
@@ -232,8 +240,8 @@ impl Conv1dLayer {
     }
 
     /// Run `f` against the cached plan, rebuilding it when the shape,
-    /// backend, precision, thread count or post-op spec changed since the
-    /// last call. The plan's bias is re-synced from `self.bias` on every
+    /// backend, precision, thread count, partition or post-op spec
+    /// changed since the last call. The plan's bias is re-synced from `self.bias` on every
     /// call (a `K`-element copy), so direct mutation of the `bias` field
     /// can never go stale.
     fn with_plan<R>(
@@ -256,15 +264,18 @@ impl Conv1dLayer {
             } else {
                 plan.matches(p, self.backend, precision, self.threads)
             };
-            kernel_ok && plan.post_ops() == &self.post_ops
+            kernel_ok
+                && plan.post_ops() == &self.post_ops
+                && plan.partition() == self.partition
         });
         if !reuse {
             let mut plan = if self.autotune {
-                ConvPlan::tuned(*p, precision, self.threads, self.w_kcs.clone())?
+                ConvPlan::tuned(*p, precision, self.threads, self.partition, self.w_kcs.clone())?
             } else {
                 ConvPlan::new(*p, self.backend, precision, self.threads, self.w_kcs.clone())?
             };
             plan.set_post_ops(self.post_ops);
+            plan.set_partition(self.partition);
             *guard = Some((plan, self.autotune));
         }
         let (plan, _) = guard.as_mut().expect("plan just ensured");
@@ -619,7 +630,7 @@ mod tests {
         let p = l.params(n, w);
         assert!(
             crate::conv1d::autotuner()
-                .entry(&p, l.threads, crate::machine::Precision::F32)
+                .entry(&p, l.threads, crate::machine::Precision::F32, l.partition)
                 .is_some(),
             "autotuned forward must consult the tuner, not the stale plan"
         );
@@ -635,6 +646,26 @@ mod tests {
         for (g, ww) in direct.iter().zip(&want) {
             assert!((g - ww).abs() < 1e-4 * (1.0 + ww.abs()), "{g} vs {ww}");
         }
+    }
+
+    #[test]
+    fn grid_partition_layer_matches_batch_bit_exact() {
+        // Flipping the pub field must rebuild the cached plan and produce
+        // bit-identical outputs (forward/backward-data are partition-
+        // invariant).
+        let (n, w) = (1, 400);
+        let mut l = layer(4, 6, 7, 3);
+        l.threads = 8;
+        let x = rnd(n * 4 * w, 91);
+        let want = l.forward(&x, n, w);
+        l.partition = Partition::Grid;
+        assert_eq!(l.forward(&x, n, w), want, "grid forward must be bit-exact");
+        let p = l.params(n, w);
+        let gout = rnd(n * 6 * p.q(), 92);
+        l.partition = Partition::Batch;
+        let gd = l.backward_data(&gout, n, w);
+        l.partition = Partition::Grid;
+        assert_eq!(l.backward_data(&gout, n, w), gd);
     }
 
     #[test]

@@ -14,13 +14,17 @@
 //! * [`post`]    — the fused post-op pipeline (bias/activation/residual/
 //!   scale epilogues applied inside each kernel's output-block loop,
 //!   DESIGN.md §5b)
+//! * [`simd`]    — explicit SIMD BRGEMM micro-kernels (scalar / AVX2+FMA /
+//!   AVX-512F) with runtime ISA dispatch resolved once into a
+//!   `MicroKernelSet` (`CONV1D_FORCE_ISA` override for testing)
 //! * [`plan`]    — `ConvPlan`/`ConvKernel`: the setup-once, run-many
 //!   plan/executor API and the string-named backend registry (DESIGN.md §5a)
 //! * [`tune`]    — shape-keyed kernel autotuner with a persistent
-//!   (`util::json`) tuning table
+//!   (`util::json`) tuning table; the cache key is ISA-aware
 //! * [`layer`]   — the framework-facing `Conv1dLayer` object (a thin
 //!   compatibility wrapper over a cached plan)
-//! * [`threading`] — batch-dimension parallelism
+//! * [`threading`] — work partitioning: batch-dimension (`Partition::Batch`)
+//!   or the 2D `N × ceil(Q/64)` width-block grid (`Partition::Grid`)
 
 pub mod backward_data;
 pub mod backward_weight;
@@ -35,6 +39,7 @@ pub mod layout;
 pub mod params;
 pub mod plan;
 pub mod post;
+pub mod simd;
 pub mod threading;
 pub mod tune;
 
@@ -42,6 +47,8 @@ pub use layer::{Backend, Conv1dLayer, FusedGrads};
 pub use params::{ConvParams, WIDTH_BLOCK};
 pub use plan::{kernels, lookup_kernel, ConvKernel, ConvPlan, PlanError, PostOpArgs, Workspace};
 pub use post::{Activation, PostOps};
+pub use simd::{Isa, MicroKernelSet};
+pub use threading::{ExecCtx, Partition};
 pub use tune::{autotuner, Autotuner, TuneEntry};
 
 /// Deterministic pseudo-random test vectors (splitmix64-derived), shared by

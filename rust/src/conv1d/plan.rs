@@ -31,8 +31,10 @@ use super::layer::Backend;
 use super::layout::{
     kcs_to_sck_flipped_into, kcs_to_skc_into, pad_width_into, unpad_width_into,
 };
-use super::params::ConvParams;
+use super::params::{ConvParams, WIDTH_BLOCK};
 use super::post::{self, PostOps};
+use super::simd::{self, Isa, MicroKernelSet};
+use super::threading::{ExecCtx, Partition};
 use crate::machine::Precision;
 
 /// Plan construction failure (invalid shape, unknown backend, or a
@@ -161,9 +163,19 @@ impl Workspace {
     }
 }
 
-/// Effective worker count of a plan: one scratch window per worker.
-fn workers(p: &ConvParams, threads: usize) -> usize {
+/// Effective worker count under batch partitioning (one scratch window
+/// per worker): im2col's patch matrices are sized by this — the baseline
+/// only shards across N.
+fn workers_batch(p: &ConvParams, threads: usize) -> usize {
     threads.max(1).min(p.n.max(1))
+}
+
+/// Worker-count upper bound across *both* partitionings: the grid splits
+/// `N × ceil(W/64)` cells (`W ≥ Q`, so this also covers the backward-data
+/// grid over the data-gradient width). Grid-capable kernels size their
+/// per-worker scratch by this, so one workspace serves either partition.
+fn workers_grid(p: &ConvParams, threads: usize) -> usize {
+    threads.max(1).min((p.n * p.w.div_ceil(WIDTH_BLOCK)).max(1))
 }
 
 /// Grow a lazily-sized workspace buffer to its target length. A no-op in
@@ -230,6 +242,8 @@ pub trait ConvKernel: Send + Sync {
     /// Workspace layout this kernel needs for `p` at the given worker
     /// count (excludes the plan-level `padded_in`/`gx_padded`/`out`
     /// buffers, which the plan grows lazily when their APIs are used).
+    /// Grid-capable kernels size per-worker scratch for the larger of the
+    /// two partitionings, so one workspace serves either.
     fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec;
 
     /// Scratch bytes this kernel needs for `p` — the cuDNN-style
@@ -238,7 +252,10 @@ pub trait ConvKernel: Send + Sync {
         self.workspace_spec(p, threads).bytes()
     }
 
-    /// Forward pass `(N, C, W) → (N, K, Q)`, overwriting `out`.
+    /// Forward pass `(N, C, W) → (N, K, Q)`, overwriting `out`. The
+    /// [`ExecCtx`] carries the worker count, the batch-vs-grid work
+    /// [`Partition`] and the resolved SIMD micro-kernel set; kernels
+    /// without an inner grid (im2col, direct) may ignore the partition.
     fn forward(
         &self,
         p: &ConvParams,
@@ -246,7 +263,7 @@ pub trait ConvKernel: Send + Sync {
         ws: &mut Workspace,
         x: &[f32],
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     );
 
     /// Fused-epilogue forward: like [`ConvKernel::forward`] but with the
@@ -265,9 +282,9 @@ pub trait ConvKernel: Send + Sync {
         x: &[f32],
         args: &PostOpArgs<'_>,
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        self.forward(p, w, ws, x, out, threads);
+        self.forward(p, w, ws, x, out, ctx);
         post::apply_reference(args.ops, args.bias, args.residual, out, p.n, p.k, p.q());
     }
 
@@ -279,7 +296,7 @@ pub trait ConvKernel: Send + Sync {
         ws: &mut Workspace,
         gout: &[f32],
         gin: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     );
 
     /// Weight gradient in `(K, C, S)` layout, overwriting `gw`.
@@ -292,7 +309,7 @@ pub trait ConvKernel: Send + Sync {
         gout: &[f32],
         x: &[f32],
         gw: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     );
 }
 
@@ -305,7 +322,9 @@ impl ConvKernel for BrgemmKernel {
     }
 
     fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
-        let t = workers(p, threads);
+        // Grid-capable: per-worker windows sized for whichever partition
+        // needs more workers.
+        let t = workers_grid(p, threads);
         WorkspaceSpec {
             b_offs: t * p.s,
             gout_padded: gout_padded_len(p),
@@ -321,9 +340,9 @@ impl ConvKernel for BrgemmKernel {
         ws: &mut Workspace,
         x: &[f32],
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        forward_with_scratch(p, x, &w.skc, out, threads, &ws.a_offs_fwd, &mut ws.b_offs);
+        forward_with_scratch(p, x, &w.skc, out, ctx, &ws.a_offs_fwd, &mut ws.b_offs);
     }
 
     fn forward_post(
@@ -334,14 +353,14 @@ impl ConvKernel for BrgemmKernel {
         x: &[f32],
         args: &PostOpArgs<'_>,
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
         forward_post_with_scratch(
             p,
             x,
             &w.skc,
             out,
-            threads,
+            ctx,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
             args.ops,
@@ -357,14 +376,14 @@ impl ConvKernel for BrgemmKernel {
         ws: &mut Workspace,
         gout: &[f32],
         gin: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
         backward_data_with_scratch(
             p,
             gout,
             &w.sck_flip,
             gin,
-            threads,
+            ctx,
             &ws.a_offs_bwd,
             &mut ws.b_offs,
             &mut ws.gout_padded,
@@ -379,9 +398,9 @@ impl ConvKernel for BrgemmKernel {
         gout: &[f32],
         x: &[f32],
         gw: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        backward_weight_with_scratch(p, gout, x, gw, threads, &mut ws.gw_partials);
+        backward_weight_with_scratch(p, gout, x, gw, ctx, &mut ws.gw_partials);
     }
 }
 
@@ -395,12 +414,15 @@ impl ConvKernel for Im2colKernel {
     }
 
     fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
-        let t = workers(p, threads);
+        // The patch matrices are per-image (batch workers); the shared
+        // BRGEMM backward scratch is sized for either partition.
+        let tb = workers_batch(p, threads);
+        let tg = workers_grid(p, threads);
         WorkspaceSpec {
-            b_offs: t * p.s,
-            col: t * p.c * p.s * p.q(),
+            b_offs: tg * p.s,
+            col: tb * p.c * p.s * p.q(),
             gout_padded: gout_padded_len(p),
-            gw_partials: t * p.s * p.c * p.k,
+            gw_partials: tg * p.s * p.c * p.k,
             ..WorkspaceSpec::default()
         }
     }
@@ -412,14 +434,14 @@ impl ConvKernel for Im2colKernel {
         ws: &mut Workspace,
         x: &[f32],
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
         forward_im2col_post_with_scratch(
             p,
             x,
             &w.kcs,
             out,
-            threads,
+            ctx,
             &mut ws.col,
             &PostOps::none(),
             &[],
@@ -435,14 +457,14 @@ impl ConvKernel for Im2colKernel {
         x: &[f32],
         args: &PostOpArgs<'_>,
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
         forward_im2col_post_with_scratch(
             p,
             x,
             &w.kcs,
             out,
-            threads,
+            ctx,
             &mut ws.col,
             args.ops,
             args.bias,
@@ -457,9 +479,9 @@ impl ConvKernel for Im2colKernel {
         ws: &mut Workspace,
         gout: &[f32],
         gin: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        BrgemmKernel.backward_data(p, w, ws, gout, gin, threads);
+        BrgemmKernel.backward_data(p, w, ws, gout, gin, ctx);
     }
 
     fn backward_weight(
@@ -470,9 +492,9 @@ impl ConvKernel for Im2colKernel {
         gout: &[f32],
         x: &[f32],
         gw: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, threads);
+        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, ctx);
     }
 }
 
@@ -496,7 +518,7 @@ impl ConvKernel for DirectKernel {
         _ws: &mut Workspace,
         x: &[f32],
         out: &mut [f32],
-        _threads: usize,
+        _ctx: ExecCtx,
     ) {
         forward_direct_post(p, x, &w.kcs, out, &PostOps::none(), &[], None);
     }
@@ -509,7 +531,7 @@ impl ConvKernel for DirectKernel {
         x: &[f32],
         args: &PostOpArgs<'_>,
         out: &mut [f32],
-        _threads: usize,
+        _ctx: ExecCtx,
     ) {
         forward_direct_post(p, x, &w.kcs, out, args.ops, args.bias, args.residual);
     }
@@ -521,7 +543,7 @@ impl ConvKernel for DirectKernel {
         _ws: &mut Workspace,
         gout: &[f32],
         gin: &mut [f32],
-        _threads: usize,
+        _ctx: ExecCtx,
     ) {
         backward_data_direct(p, gout, &w.kcs, gin);
     }
@@ -534,7 +556,7 @@ impl ConvKernel for DirectKernel {
         gout: &[f32],
         x: &[f32],
         gw: &mut [f32],
-        _threads: usize,
+        _ctx: ExecCtx,
     ) {
         backward_weight_direct_into(p, gout, x, gw);
     }
@@ -558,7 +580,7 @@ impl ConvKernel for Bf16Kernel {
     }
 
     fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
-        let t = workers(p, threads);
+        let t = workers_grid(p, threads);
         WorkspaceSpec {
             b_offs: t * p.s,
             gout_padded: gout_padded_len(p),
@@ -575,7 +597,7 @@ impl ConvKernel for Bf16Kernel {
         ws: &mut Workspace,
         x: &[f32],
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
         to_bf16_into(x, &mut ws.xb);
         forward_bf16_f32out_post_with_scratch(
@@ -583,7 +605,7 @@ impl ConvKernel for Bf16Kernel {
             &ws.xb,
             &w.skc_bf16,
             out,
-            threads,
+            ctx,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
             &PostOps::none(),
@@ -600,7 +622,7 @@ impl ConvKernel for Bf16Kernel {
         x: &[f32],
         args: &PostOpArgs<'_>,
         out: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
         to_bf16_into(x, &mut ws.xb);
         forward_bf16_f32out_post_with_scratch(
@@ -608,7 +630,7 @@ impl ConvKernel for Bf16Kernel {
             &ws.xb,
             &w.skc_bf16,
             out,
-            threads,
+            ctx,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
             args.ops,
@@ -624,9 +646,9 @@ impl ConvKernel for Bf16Kernel {
         ws: &mut Workspace,
         gout: &[f32],
         gin: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        BrgemmKernel.backward_data(p, w, ws, gout, gin, threads);
+        BrgemmKernel.backward_data(p, w, ws, gout, gin, ctx);
     }
 
     fn backward_weight(
@@ -637,9 +659,9 @@ impl ConvKernel for Bf16Kernel {
         gout: &[f32],
         x: &[f32],
         gw: &mut [f32],
-        threads: usize,
+        ctx: ExecCtx,
     ) {
-        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, threads);
+        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, ctx);
     }
 }
 
@@ -692,6 +714,11 @@ pub struct ConvPlan {
     kernel: &'static dyn ConvKernel,
     precision: Precision,
     threads: usize,
+    /// Batch vs 2D-grid work splitting the kernels run under.
+    partition: Partition,
+    /// SIMD micro-kernel set resolved once at construction (the
+    /// process-active ISA; `CONV1D_FORCE_ISA` override honoured).
+    uks: &'static MicroKernelSet,
     /// `(left, right)` same-padding for this `(S, d)`.
     pad: (usize, usize),
     weights: PlanWeights,
@@ -711,6 +738,8 @@ impl std::fmt::Debug for ConvPlan {
             .field("kernel", &self.kernel.name())
             .field("precision", &self.precision)
             .field("threads", &self.threads)
+            .field("partition", &self.partition)
+            .field("isa", &self.uks.isa())
             .field("workspace_bytes", &self.ws.bytes())
             .finish()
     }
@@ -754,16 +783,19 @@ impl ConvPlan {
 
     /// Build a plan whose kernel is chosen by the in-process autotuner
     /// ([`super::tune::autotuner`]): the first call for a shape
-    /// micro-benchmarks the candidates, later calls reuse the memoized
-    /// winner.
+    /// micro-benchmarks the candidates (under the requested partition —
+    /// grid rankings differ from batch ones at N < threads), later calls
+    /// reuse the memoized winner. The returned plan already runs under
+    /// `partition`.
     pub fn tuned(
         p: ConvParams,
         precision: Precision,
         threads: usize,
+        partition: Partition,
         w_kcs: Vec<f32>,
     ) -> Result<ConvPlan, PlanError> {
-        let kernel = super::tune::autotuner().choose(&p, threads, precision);
-        Self::with_kernel(p, kernel, threads, w_kcs)
+        let kernel = super::tune::autotuner().choose(&p, threads, precision, partition);
+        Ok(Self::with_kernel(p, kernel, threads, w_kcs)?.with_partition(partition))
     }
 
     /// Build a plan for an explicit kernel (registry or caller-owned).
@@ -813,12 +845,23 @@ impl ConvPlan {
             kernel,
             precision,
             threads,
+            partition: Partition::Batch,
+            uks: simd::active(),
             weights,
             bias: Vec::new(),
             post: PostOps::none(),
             same_cached: false,
             ws,
         })
+    }
+
+    /// The execution context the kernels run under.
+    fn ctx(&self) -> ExecCtx {
+        ExecCtx {
+            threads: self.threads,
+            partition: self.partition,
+            uks: self.uks,
+        }
     }
 
     /// The problem this plan was built for.
@@ -839,6 +882,32 @@ impl ConvPlan {
     /// Worker count the workspace was sized for.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Work-partitioning strategy the kernels run under.
+    pub fn partition(&self) -> Partition {
+        self.partition
+    }
+
+    /// Builder: select the work partitioning at construction time.
+    /// [`Partition::Grid`] splits the `N × ceil(Q/64)` width-block grid,
+    /// so a single long-sequence image uses every worker.
+    pub fn with_partition(mut self, partition: Partition) -> ConvPlan {
+        self.partition = partition;
+        self
+    }
+
+    /// Replace the work-partitioning strategy (the workspace is sized for
+    /// either, so no rebuild is needed). Results are bit-identical across
+    /// partitionings for the forward and backward-data passes.
+    pub fn set_partition(&mut self, partition: Partition) {
+        self.partition = partition;
+    }
+
+    /// ISA level of the SIMD micro-kernels this plan dispatches to
+    /// (resolved once at construction; `CONV1D_FORCE_ISA` honoured).
+    pub fn isa(&self) -> Isa {
+        self.uks.isa()
     }
 
     /// Bytes of workspace this plan holds — the cuDNN-style query, now
@@ -966,6 +1035,7 @@ impl ConvPlan {
             let r = res.expect("residual post-op requires a residual tensor");
             assert_eq!(r.len(), n * k * q, "residual shape mismatch for {}", self.p);
         }
+        let ctx = self.ctx();
         if self.p.stride == 1 {
             let args = PostOpArgs {
                 ops,
@@ -973,7 +1043,7 @@ impl ConvPlan {
                 residual: res,
             };
             self.kernel
-                .forward_post(&self.kp, &self.weights, &mut self.ws, x, &args, out, self.threads);
+                .forward_post(&self.kp, &self.weights, &mut self.ws, x, &args, out, ctx);
             return;
         }
         // stride > 1: the kernel computes the stride-1 output into the
@@ -984,7 +1054,7 @@ impl ConvPlan {
         let mut full = std::mem::take(&mut self.ws.full);
         ensure_len(&mut full, n * k * q1);
         self.kernel
-            .forward(&self.kp, &self.weights, &mut self.ws, x, &mut full, self.threads);
+            .forward(&self.kp, &self.weights, &mut self.ws, x, &mut full, ctx);
         for row in 0..n * k {
             let full_row = &full[row * q1..(row + 1) * q1];
             let out_row = &mut out[row * q..(row + 1) * q];
@@ -1032,8 +1102,9 @@ impl ConvPlan {
         ensure_len(&mut self.ws.padded_in, n * c * self.p.w);
         pad_width_into(x, n, c, wu, self.pad.0, self.pad.1, &mut self.ws.padded_in);
         let xp = std::mem::take(&mut self.ws.padded_in);
+        let ctx = self.ctx();
         self.kernel
-            .forward(&self.p, &self.weights, &mut self.ws, &xp, out, self.threads);
+            .forward(&self.p, &self.weights, &mut self.ws, &xp, out, ctx);
         self.ws.padded_in = xp;
         self.same_cached = true;
         if !self.bias.is_empty() {
@@ -1173,6 +1244,7 @@ impl ConvPlan {
                 gr.fill(0.0);
             }
         }
+        let ctx = self.ctx();
         let mut gpre = std::mem::take(&mut self.ws.gpre);
         ensure_len(&mut gpre, n * k * q);
         post::backward_prologue(
@@ -1194,7 +1266,7 @@ impl ConvPlan {
                     &mut self.ws,
                     &gpre,
                     gin,
-                    self.threads,
+                    ctx,
                 );
             }
             self.kernel.backward_weight(
@@ -1204,7 +1276,7 @@ impl ConvPlan {
                 &gpre,
                 x,
                 gw,
-                self.threads,
+                ctx,
             );
         } else {
             // One scatter onto the stride-1 grid serves both kernel
@@ -1218,7 +1290,7 @@ impl ConvPlan {
                     &mut self.ws,
                     &full,
                     gin,
-                    self.threads,
+                    ctx,
                 );
             }
             self.kernel.backward_weight(
@@ -1228,7 +1300,7 @@ impl ConvPlan {
                 &full,
                 x,
                 gw,
-                self.threads,
+                ctx,
             );
             self.ws.full = full;
         }
@@ -1238,6 +1310,7 @@ impl ConvPlan {
     /// Backward-data on an already-prologued gradient (no shape asserts
     /// beyond the dispatch; shared by the raw and fused paths).
     fn execute_backward_data_into_raw(&mut self, gpre: &[f32], gin: &mut [f32]) {
+        let ctx = self.ctx();
         if self.p.stride == 1 {
             self.kernel.backward_data(
                 &self.kp,
@@ -1245,7 +1318,7 @@ impl ConvPlan {
                 &mut self.ws,
                 gpre,
                 gin,
-                self.threads,
+                ctx,
             );
         } else {
             let mut full = std::mem::take(&mut self.ws.full);
@@ -1256,7 +1329,7 @@ impl ConvPlan {
                 &mut self.ws,
                 &full,
                 gin,
-                self.threads,
+                ctx,
             );
             self.ws.full = full;
         }
@@ -1264,6 +1337,7 @@ impl ConvPlan {
 
     /// Backward-weight on an already-prologued gradient.
     fn execute_backward_weight_into_raw(&mut self, gpre: &[f32], x: &[f32], gw: &mut [f32]) {
+        let ctx = self.ctx();
         if self.p.stride == 1 {
             self.kernel.backward_weight(
                 &self.kp,
@@ -1272,7 +1346,7 @@ impl ConvPlan {
                 gpre,
                 x,
                 gw,
-                self.threads,
+                ctx,
             );
         } else {
             let mut full = std::mem::take(&mut self.ws.full);
@@ -1284,7 +1358,7 @@ impl ConvPlan {
                 &full,
                 x,
                 gw,
-                self.threads,
+                ctx,
             );
             self.ws.full = full;
         }
@@ -1480,6 +1554,52 @@ mod tests {
         p1.execute_forward_into(&x, &mut o1);
         p4.execute_forward_into(&x, &mut o4);
         assert_eq!(o1, o4);
+    }
+
+    #[test]
+    fn grid_partitioned_plan_is_bit_exact() {
+        // Forward + backward-data are bit-identical across partitionings
+        // (same per-block computation, different owners) — including the
+        // N=1 case where only the grid actually fans out. Mirrors
+        // `multithreaded_plan_is_bit_exact`.
+        for name in ["brgemm", "bf16"] {
+            let p = ConvParams::new(1, 5, 7, 300, 9, 4).unwrap();
+            let wt = rnd(p.k * p.c * p.s, 3);
+            let x = rnd(p.n * p.c * p.w, 4);
+            let gout = rnd(p.n * p.k * p.q(), 5);
+            let mut batch = ConvPlan::by_name(p, name, 8, wt.clone()).unwrap();
+            let mut grid = ConvPlan::by_name(p, name, 8, wt.clone())
+                .unwrap()
+                .with_partition(Partition::Grid);
+            assert_eq!(batch.partition(), Partition::Batch);
+            assert_eq!(grid.partition(), Partition::Grid);
+            assert_eq!(batch.isa(), grid.isa());
+            let (mut ob, mut og) = (
+                vec![0.0; p.n * p.k * p.q()],
+                vec![0.0; p.n * p.k * p.q()],
+            );
+            batch.execute_forward_into(&x, &mut ob);
+            grid.execute_forward_into(&x, &mut og);
+            assert_eq!(ob, og, "{name}: forward grid vs batch");
+            let (mut gb, mut gg) = (
+                vec![0.0; p.n * p.c * p.w],
+                vec![0.0; p.n * p.c * p.w],
+            );
+            batch.execute_backward_data_into(&gout, &mut gb);
+            grid.execute_backward_data_into(&gout, &mut gg);
+            assert_eq!(gb, gg, "{name}: backward-data grid vs batch");
+            // Backward-weight shards accumulators differently; agree to
+            // fp-reassociation tolerance.
+            let (mut wb, mut wg) = (
+                vec![0.0; p.k * p.c * p.s],
+                vec![0.0; p.k * p.c * p.s],
+            );
+            batch.execute_backward_weight_into(&gout, &x, &mut wb);
+            grid.execute_backward_weight_into(&gout, &x, &mut wg);
+            for (a, b) in wb.iter().zip(&wg) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{name}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! AVX2 + FMA micro-kernels: 8-lane explicit-intrinsic implementations of
+//! the `n = 64` BRGEMM row kernels.
+//!
+//! Register budget (16 × 256-bit `ymm`):
+//! * one-row kernel — the 64-column accumulator lives in 8 `ymm`
+//!   registers for the whole batch reduction; B loads stream through one
+//!   register, the A value is broadcast.
+//! * four-row kernel — 4 rows × 16 columns per column chunk (8 `ymm`
+//!   accumulators + 2 B registers + broadcasts); the 64-column block is
+//!   covered in four chunks so nothing spills. Chunking columns does not
+//!   change the per-element FMA order, so the result stays bit-identical
+//!   to the scalar and one-row kernels.
+//!
+//! Every arithmetic op is the lane-wise twin of the scalar kernel's
+//! (`_mm256_fmadd_ps` ↔ `f32::mul_add`, exact `<< 16` widening for bf16),
+//! so outputs are bit-identical across ISAs. Slice bounds are checked
+//! with safe sub-slicing *before* the pointer loops — out-of-range
+//! offsets panic exactly like the scalar kernels instead of reading wild.
+//!
+//! Safety: the `#[target_feature]` functions are only reachable through
+//! [`SET`], which the dispatch table (`super::set_for`) hands out
+//! strictly after `is_x86_feature_detected!("avx2")` && `("fma")` both
+//! pass.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::arch::x86_64::*;
+
+use crate::conv1d::bf16::Bf16;
+
+use super::{Isa, MicroKernelSet};
+
+const N64: usize = 64;
+
+/// The AVX2+FMA dispatch table entry.
+pub static SET: MicroKernelSet = MicroKernelSet {
+    isa: Isa::Avx2,
+    row_f32,
+    row4_f32,
+    row_bf16,
+    row4_bf16,
+};
+
+fn row_f32(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX2+FMA were detected.
+    unsafe { row_f32_impl(a, a_offs, lda, b, b_offs, ldb, row, k, crow, beta_zero) }
+}
+
+fn row4_f32(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX2+FMA were detected.
+    unsafe { row4_f32_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
+}
+
+fn row_bf16(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX2+FMA were detected.
+    unsafe { row_bf16_impl(a, a_offs, lda, b, b_offs, ldb, row, k, crow, beta_zero) }
+}
+
+fn row4_bf16(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX2+FMA were detected.
+    unsafe { row4_bf16_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
+}
+
+/// Widen 8 bf16 lanes to f32 (exact: bits `<< 16`, the inverse of bf16
+/// truncation — identical to `Bf16::to_f32` per lane). `p` must point at
+/// 8 readable `u16`s; `Bf16` is `repr(transparent)` over `u16`.
+#[inline(always)]
+unsafe fn widen8_bf16(p: *const Bf16) -> __m256 {
+    unsafe {
+        let raw = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(raw)))
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row_f32_impl(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    unsafe {
+        let mut acc = [_mm256_setzero_ps(); 8];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + row * lda..ao + row * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let av = _mm256_set1_ps(av);
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let bv = _mm256_loadu_ps(bp.add(l * 8));
+                    *accl = _mm256_fmadd_ps(av, bv, *accl);
+                }
+            }
+        }
+        store_row(&acc, &mut crow[..N64], beta_zero);
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row_bf16_impl(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    unsafe {
+        let mut acc = [_mm256_setzero_ps(); 8];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + row * lda..ao + row * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let av = _mm256_set1_ps(av.to_f32());
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let bv = widen8_bf16(bp.add(l * 8));
+                    *accl = _mm256_fmadd_ps(av, bv, *accl);
+                }
+            }
+        }
+        store_row(&acc, &mut crow[..N64], beta_zero);
+    }
+}
+
+/// Store a 64-column accumulator into its output row (overwrite or
+/// lane-wise add, matching the scalar kernels' `+=`).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn store_row(acc: &[__m256; 8], crow: &mut [f32], beta_zero: bool) {
+    unsafe {
+        let cp = crow.as_mut_ptr();
+        for (l, accl) in acc.iter().enumerate() {
+            if beta_zero {
+                _mm256_storeu_ps(cp.add(l * 8), *accl);
+            } else {
+                let cv = _mm256_loadu_ps(cp.add(l * 8));
+                _mm256_storeu_ps(cp.add(l * 8), _mm256_add_ps(cv, *accl));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row4_f32_impl(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        // 4 rows × 16 columns per chunk: 8 ymm accumulators, no spill.
+        for chunk in 0..4usize {
+            let col = chunk * 16;
+            let mut acc = [_mm256_setzero_ps(); 8]; // [row*2 + half]
+            for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+                let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+                let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+                let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+                let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+                for ik in 0..k {
+                    let base = bo + ik * ldb + col;
+                    let bp = b[base..base + 16].as_ptr();
+                    let b0 = _mm256_loadu_ps(bp);
+                    let b1 = _mm256_loadu_ps(bp.add(8));
+                    let v0 = _mm256_set1_ps(a0[ik]);
+                    acc[0] = _mm256_fmadd_ps(v0, b0, acc[0]);
+                    acc[1] = _mm256_fmadd_ps(v0, b1, acc[1]);
+                    let v1 = _mm256_set1_ps(a1[ik]);
+                    acc[2] = _mm256_fmadd_ps(v1, b0, acc[2]);
+                    acc[3] = _mm256_fmadd_ps(v1, b1, acc[3]);
+                    let v2 = _mm256_set1_ps(a2[ik]);
+                    acc[4] = _mm256_fmadd_ps(v2, b0, acc[4]);
+                    acc[5] = _mm256_fmadd_ps(v2, b1, acc[5]);
+                    let v3 = _mm256_set1_ps(a3[ik]);
+                    acc[6] = _mm256_fmadd_ps(v3, b0, acc[6]);
+                    acc[7] = _mm256_fmadd_ps(v3, b1, acc[7]);
+                }
+            }
+            store_chunk4(&acc, c, ldc, row0, col, beta_zero);
+        }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row4_bf16_impl(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        for chunk in 0..4usize {
+            let col = chunk * 16;
+            let mut acc = [_mm256_setzero_ps(); 8];
+            for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+                let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+                let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+                let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+                let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+                for ik in 0..k {
+                    let base = bo + ik * ldb + col;
+                    let bp = b[base..base + 16].as_ptr();
+                    let b0 = widen8_bf16(bp);
+                    let b1 = widen8_bf16(bp.add(8));
+                    let v0 = _mm256_set1_ps(a0[ik].to_f32());
+                    acc[0] = _mm256_fmadd_ps(v0, b0, acc[0]);
+                    acc[1] = _mm256_fmadd_ps(v0, b1, acc[1]);
+                    let v1 = _mm256_set1_ps(a1[ik].to_f32());
+                    acc[2] = _mm256_fmadd_ps(v1, b0, acc[2]);
+                    acc[3] = _mm256_fmadd_ps(v1, b1, acc[3]);
+                    let v2 = _mm256_set1_ps(a2[ik].to_f32());
+                    acc[4] = _mm256_fmadd_ps(v2, b0, acc[4]);
+                    acc[5] = _mm256_fmadd_ps(v2, b1, acc[5]);
+                    let v3 = _mm256_set1_ps(a3[ik].to_f32());
+                    acc[6] = _mm256_fmadd_ps(v3, b0, acc[6]);
+                    acc[7] = _mm256_fmadd_ps(v3, b1, acc[7]);
+                }
+            }
+            store_chunk4(&acc, c, ldc, row0, col, beta_zero);
+        }
+    }
+}
+
+/// Store one 4-row × 16-column accumulator chunk at column offset `col`.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn store_chunk4(
+    acc: &[__m256; 8],
+    c: &mut [f32],
+    ldc: usize,
+    row0: usize,
+    col: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        for r in 0..4usize {
+            let at = (row0 + r) * ldc + col;
+            let cp = c[at..at + 16].as_mut_ptr();
+            for half in 0..2usize {
+                let v = acc[r * 2 + half];
+                if beta_zero {
+                    _mm256_storeu_ps(cp.add(half * 8), v);
+                } else {
+                    let cv = _mm256_loadu_ps(cp.add(half * 8));
+                    _mm256_storeu_ps(cp.add(half * 8), _mm256_add_ps(cv, v));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! AVX-512F micro-kernels: 16-lane explicit-intrinsic implementations of
+//! the `n = 64` BRGEMM row kernels — the closest native analog of the
+//! paper's LIBXSMM JIT output on Cascade/Cooper Lake.
+//!
+//! Compiled only under the `avx512` cargo feature (the `_mm512_*`
+//! intrinsics need a recent stable toolchain); runtime-gated behind
+//! `is_x86_feature_detected!("avx512f")` like the AVX2 level.
+//!
+//! Register budget (32 × 512-bit `zmm`): the one-row kernel keeps the
+//! 64-column accumulator in 4 `zmm`; the four-row kernel keeps all
+//! 4 × 64 accumulators resident (16 `zmm` + 4 B registers + broadcasts —
+//! the full LIBXSMM-style register block, no column chunking needed).
+//! Per-element FMA order matches the scalar kernels exactly, so outputs
+//! are bit-identical across ISAs.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::arch::x86_64::*;
+
+use crate::conv1d::bf16::Bf16;
+
+use super::{Isa, MicroKernelSet};
+
+const N64: usize = 64;
+
+/// The AVX-512F dispatch table entry.
+pub static SET: MicroKernelSet = MicroKernelSet {
+    isa: Isa::Avx512,
+    row_f32,
+    row4_f32,
+    row_bf16,
+    row4_bf16,
+};
+
+fn row_f32(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX-512F was detected.
+    unsafe { row_f32_impl(a, a_offs, lda, b, b_offs, ldb, row, k, crow, beta_zero) }
+}
+
+fn row4_f32(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX-512F was detected.
+    unsafe { row4_f32_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
+}
+
+fn row_bf16(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX-512F was detected.
+    unsafe { row_bf16_impl(a, a_offs, lda, b, b_offs, ldb, row, k, crow, beta_zero) }
+}
+
+fn row4_bf16(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX-512F was detected.
+    unsafe { row4_bf16_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
+}
+
+/// Widen 16 bf16 lanes to f32 (exact `<< 16`, identical to
+/// `Bf16::to_f32` per lane). `p` must point at 16 readable `u16`s.
+#[inline(always)]
+unsafe fn widen16_bf16(p: *const Bf16) -> __m512 {
+    unsafe {
+        let raw = _mm256_loadu_si256(p as *const __m256i);
+        _mm512_castsi512_ps(_mm512_slli_epi32::<16>(_mm512_cvtepu16_epi32(raw)))
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn row_f32_impl(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    unsafe {
+        let mut acc = [_mm512_setzero_ps(); 4];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + row * lda..ao + row * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let av = _mm512_set1_ps(av);
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let bv = _mm512_loadu_ps(bp.add(l * 16));
+                    *accl = _mm512_fmadd_ps(av, bv, *accl);
+                }
+            }
+        }
+        store_row(&acc, &mut crow[..N64], beta_zero);
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn row_bf16_impl(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    unsafe {
+        let mut acc = [_mm512_setzero_ps(); 4];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + row * lda..ao + row * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let av = _mm512_set1_ps(av.to_f32());
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let bv = widen16_bf16(bp.add(l * 16));
+                    *accl = _mm512_fmadd_ps(av, bv, *accl);
+                }
+            }
+        }
+        store_row(&acc, &mut crow[..N64], beta_zero);
+    }
+}
+
+/// Store a 64-column accumulator into its output row.
+#[target_feature(enable = "avx512f")]
+unsafe fn store_row(acc: &[__m512; 4], crow: &mut [f32], beta_zero: bool) {
+    unsafe {
+        let cp = crow.as_mut_ptr();
+        for (l, accl) in acc.iter().enumerate() {
+            if beta_zero {
+                _mm512_storeu_ps(cp.add(l * 16), *accl);
+            } else {
+                let cv = _mm512_loadu_ps(cp.add(l * 16));
+                _mm512_storeu_ps(cp.add(l * 16), _mm512_add_ps(cv, *accl));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn row4_f32_impl(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        // Full 4-row × 64-column register block: 16 zmm accumulators.
+        let mut acc = [[_mm512_setzero_ps(); 4]; 4];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+            let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+            let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+            let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+            for ik in 0..k {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let bv = [
+                    _mm512_loadu_ps(bp),
+                    _mm512_loadu_ps(bp.add(16)),
+                    _mm512_loadu_ps(bp.add(32)),
+                    _mm512_loadu_ps(bp.add(48)),
+                ];
+                for (r, &av) in [a0[ik], a1[ik], a2[ik], a3[ik]].iter().enumerate() {
+                    let av = _mm512_set1_ps(av);
+                    for l in 0..4 {
+                        acc[r][l] = _mm512_fmadd_ps(av, bv[l], acc[r][l]);
+                    }
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            store_row(accr, &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64], beta_zero);
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn row4_bf16_impl(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        let mut acc = [[_mm512_setzero_ps(); 4]; 4];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+            let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+            let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+            let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+            for ik in 0..k {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let bv = [
+                    widen16_bf16(bp),
+                    widen16_bf16(bp.add(16)),
+                    widen16_bf16(bp.add(32)),
+                    widen16_bf16(bp.add(48)),
+                ];
+                let avs = [
+                    a0[ik].to_f32(),
+                    a1[ik].to_f32(),
+                    a2[ik].to_f32(),
+                    a3[ik].to_f32(),
+                ];
+                for (r, &av) in avs.iter().enumerate() {
+                    let av = _mm512_set1_ps(av);
+                    for l in 0..4 {
+                        acc[r][l] = _mm512_fmadd_ps(av, bv[l], acc[r][l]);
+                    }
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            store_row(accr, &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64], beta_zero);
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Explicit SIMD BRGEMM micro-kernels with runtime ISA dispatch.
+//!
+//! The paper's efficiency numbers (up to 80 % of peak on Cascade /
+//! Cooper Lake) come from LIBXSMM's JIT-generated AVX-512 register-blocked
+//! BRGEMM micro-kernels. This module is the native equivalent: hand-written
+//! `std::arch` implementations of the `n = 64` width-block row kernels —
+//! the innermost loops every forward / backward-data pass stands on — with
+//! the ISA resolved **once at startup** into a [`MicroKernelSet`] of plain
+//! function pointers:
+//!
+//! * [`scalar`] — the portable fallback (the pre-existing auto-vectorised
+//!   Rust loops); always available, keeps non-x86 builds green.
+//! * `avx2` — 8-lane AVX2+FMA kernels (x86-64, runtime-detected).
+//! * `avx512` — 16-lane AVX-512F kernels; compiled only under the
+//!   `avx512` cargo feature (the `_mm512_*` intrinsics need a recent
+//!   toolchain), runtime-detected like AVX2.
+//!
+//! Every implementation performs the **same fused multiply-add per output
+//! element in the same order** (`acc[j] = fma(a, b[j], acc[j])` over the
+//! batch-reduce × k loop nest), so the ISAs are *bit-identical* — locked
+//! down by `tests/simd_isa.rs`. Remainder blocks (`n < 64`) always run the
+//! generic scalar path, on every ISA.
+//!
+//! Dispatch order: `CONV1D_FORCE_ISA=scalar|avx2|avx512` (testing
+//! override, read once per process) → best runtime-detected ISA →
+//! scalar. A forced ISA the host or build cannot serve falls back to the
+//! best available one below it, with a warning on stderr — it never
+//! silently runs mis-detected vector code.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub mod avx512;
+
+use std::sync::OnceLock;
+
+use super::bf16::Bf16;
+
+/// Instruction-set level of a micro-kernel implementation, ordered from
+/// most portable to widest vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable Rust loops (compiler-vectorised); every target.
+    Scalar,
+    /// AVX2 + FMA, 8 f32 lanes (x86-64).
+    Avx2,
+    /// AVX-512F, 16 f32 lanes (x86-64, `avx512` cargo feature).
+    Avx512,
+}
+
+impl Isa {
+    /// Every ISA level, in dispatch-preference order (widest last).
+    pub const ALL: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Avx512];
+
+    /// Canonical lowercase name (`scalar` / `avx2` / `avx512`) — the
+    /// vocabulary of `CONV1D_FORCE_ISA` and the autotune cache key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a `CONV1D_FORCE_ISA` value.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" | "avx512f" => Some(Isa::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Whether this ISA can run on the current host *and* build
+    /// (AVX-512 additionally needs the `avx512` cargo feature).
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Avx2 => avx2_available(),
+            Isa::Avx512 => avx512_available(),
+        }
+    }
+
+    /// The widest ISA the host + build can serve.
+    pub fn best_available() -> Isa {
+        if Isa::Avx512.available() {
+            Isa::Avx512
+        } else if Isa::Avx2.available() {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// The next narrower level (fallback order for a forced-but-missing
+    /// ISA); `Scalar` is the floor.
+    fn next_lower(self) -> Isa {
+        match self {
+            Isa::Avx512 => Isa::Avx2,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+fn avx512_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+fn avx512_available() -> bool {
+    false
+}
+
+/// One-row `n = 64` f32 BRGEMM kernel: `crow[0..64] (=|+)= Σ_i A_i[row, :] ·
+/// B_i[:, 0..64]` over the offset lists. `crow` is exactly the 64-column
+/// output row; `beta_zero` selects overwrite vs accumulate.
+pub type RowF32 = fn(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+);
+
+/// Four-row register-blocked `n = 64` f32 BRGEMM kernel: rows
+/// `row0..row0+4` of `c` (row stride `ldc`), one B-panel load feeding
+/// four accumulator rows.
+pub type Row4F32 = fn(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+);
+
+/// One-row `n = 64` bf16 kernel (`VDPBF16PS` semantics): bf16 operands
+/// widened exactly, f32 accumulate, f32 output row.
+pub type RowBf16 = fn(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+);
+
+/// Four-row register-blocked `n = 64` bf16 kernel (f32 output).
+pub type Row4Bf16 = fn(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+);
+
+/// The resolved micro-kernel dispatch table: one function pointer per
+/// inner kernel, selected once (per process via [`active`], or explicitly
+/// via [`MicroKernelSet::for_isa`] for benches and the bit-identity
+/// tests). Function pointers rather than trait objects: the call sites
+/// are the innermost loops and the table never changes after resolution.
+pub struct MicroKernelSet {
+    isa: Isa,
+    /// f32 one-row n=64 kernel.
+    pub row_f32: RowF32,
+    /// f32 four-row register-blocked n=64 kernel.
+    pub row4_f32: Row4F32,
+    /// bf16 one-row n=64 kernel (f32 output).
+    pub row_bf16: RowBf16,
+    /// bf16 four-row register-blocked n=64 kernel (f32 output).
+    pub row4_bf16: Row4Bf16,
+}
+
+impl MicroKernelSet {
+    /// The ISA these kernels were compiled for.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// The kernel set for an ISA, clamped to what the host + build can
+    /// serve: requesting an unavailable level returns the best available
+    /// one below it (check [`MicroKernelSet::isa`] to see what you got).
+    pub fn for_isa(isa: Isa) -> &'static MicroKernelSet {
+        let mut level = isa;
+        loop {
+            if let Some(set) = set_for(level) {
+                return set;
+            }
+            level = level.next_lower();
+        }
+    }
+}
+
+impl std::fmt::Debug for MicroKernelSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MicroKernelSet").field("isa", &self.isa).finish()
+    }
+}
+
+/// The portable fallback set — always constructible.
+static SCALAR_SET: MicroKernelSet = MicroKernelSet {
+    isa: Isa::Scalar,
+    row_f32: scalar::row_n64_f32,
+    row4_f32: scalar::row4_n64_f32,
+    row_bf16: scalar::row_n64_bf16,
+    row4_bf16: scalar::row4_n64_bf16,
+};
+
+/// The table entry for one ISA, `None` when the host or build cannot
+/// serve it.
+fn set_for(isa: Isa) -> Option<&'static MicroKernelSet> {
+    match isa {
+        Isa::Scalar => Some(&SCALAR_SET),
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if Isa::Avx2.available() {
+                    return Some(&avx2::SET);
+                }
+            }
+            None
+        }
+        Isa::Avx512 => {
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            {
+                if Isa::Avx512.available() {
+                    return Some(&avx512::SET);
+                }
+            }
+            None
+        }
+    }
+}
+
+/// The process-wide micro-kernel set: `CONV1D_FORCE_ISA` override if set
+/// (with fallback + warning when unavailable), else the best
+/// runtime-detected ISA. Resolved exactly once; every later call is a
+/// single atomic load.
+pub fn active() -> &'static MicroKernelSet {
+    static ACTIVE: OnceLock<&'static MicroKernelSet> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let forced = match std::env::var("CONV1D_FORCE_ISA") {
+            Ok(v) => match Isa::parse(&v) {
+                Some(isa) => Some(isa),
+                None => {
+                    eprintln!(
+                        "WARN: CONV1D_FORCE_ISA='{v}' is not scalar|avx2|avx512; \
+                         using auto-detection"
+                    );
+                    None
+                }
+            },
+            Err(_) => None,
+        };
+        match forced {
+            Some(isa) => {
+                let set = MicroKernelSet::for_isa(isa);
+                if set.isa() != isa {
+                    eprintln!(
+                        "WARN: CONV1D_FORCE_ISA={} is unavailable on this host/build; \
+                         falling back to {}",
+                        isa.name(),
+                        set.isa().name()
+                    );
+                }
+                set
+            }
+            None => MicroKernelSet::for_isa(Isa::best_available()),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_names_round_trip() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+            assert_eq!(Isa::parse(&isa.name().to_uppercase()), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512f"), Some(Isa::Avx512));
+        assert_eq!(Isa::parse("neon"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(Isa::Scalar.available());
+        assert_eq!(MicroKernelSet::for_isa(Isa::Scalar).isa(), Isa::Scalar);
+    }
+
+    #[test]
+    fn for_isa_clamps_to_available() {
+        // Whatever the host, every request resolves to an available set at
+        // or below the requested level.
+        for isa in Isa::ALL {
+            let set = MicroKernelSet::for_isa(isa);
+            assert!(set.isa() <= isa);
+            assert!(set.isa().available());
+        }
+    }
+
+    #[test]
+    fn active_resolves_once_and_is_available() {
+        let a = active();
+        assert!(a.isa().available());
+        // Pointer-stable across calls.
+        assert!(std::ptr::eq(a, active()));
+    }
+
+    #[test]
+    fn best_available_is_consistent_with_availability() {
+        let best = Isa::best_available();
+        assert!(best.available());
+        for isa in Isa::ALL {
+            if isa > best {
+                assert!(!isa.available(), "{isa} above best_available()");
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Portable scalar micro-kernels — the fallback level of the dispatch
+//! table and the bit-exactness reference for the vector ISAs.
+//!
+//! These are the original auto-vectorised Rust loops: constant `n = 64`
+//! trip counts keep the accumulators in registers across the whole batch
+//! reduction, rows are blocked by 4 so each B-panel row is loaded once
+//! per four FMA rows. `f32::mul_add` lowers to a fused multiply-add, the
+//! same operation the AVX2/AVX-512 kernels issue per lane — which is why
+//! every ISA level produces bit-identical outputs.
+
+#![allow(clippy::too_many_arguments)]
+
+use crate::conv1d::bf16::Bf16;
+
+const N64: usize = 64;
+
+/// One-row f32 kernel: `crow[0..64] (=|+)= Σ_i A_i[row, :] · B_i[:, 0..64]`.
+pub fn row_n64_f32(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    let mut acc = [0.0f32; N64];
+    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+        let arow = &a[ao + row * lda..ao + row * lda + k];
+        for (ik, &av) in arow.iter().enumerate() {
+            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+            for j in 0..N64 {
+                acc[j] = av.mul_add(brow[j], acc[j]);
+            }
+        }
+    }
+    let crow = &mut crow[..N64];
+    if beta_zero {
+        crow.copy_from_slice(&acc);
+    } else {
+        for j in 0..N64 {
+            crow[j] += acc[j];
+        }
+    }
+}
+
+/// Four-row register-blocked f32 kernel: one B-panel row load feeds four
+/// accumulator rows.
+pub fn row4_n64_f32(
+    a: &[f32],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[f32],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    let mut acc0 = [0.0f32; N64];
+    let mut acc1 = [0.0f32; N64];
+    let mut acc2 = [0.0f32; N64];
+    let mut acc3 = [0.0f32; N64];
+    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+        let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+        let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+        let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+        let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+        for ik in 0..k {
+            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+            let (v0, v1, v2, v3) = (a0[ik], a1[ik], a2[ik], a3[ik]);
+            for j in 0..N64 {
+                let bj = brow[j];
+                acc0[j] = v0.mul_add(bj, acc0[j]);
+                acc1[j] = v1.mul_add(bj, acc1[j]);
+                acc2[j] = v2.mul_add(bj, acc2[j]);
+                acc3[j] = v3.mul_add(bj, acc3[j]);
+            }
+        }
+    }
+    for (r, acc) in [acc0, acc1, acc2, acc3].iter().enumerate() {
+        let crow = &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64];
+        if beta_zero {
+            crow.copy_from_slice(acc);
+        } else {
+            for j in 0..N64 {
+                crow[j] += acc[j];
+            }
+        }
+    }
+}
+
+/// One-row bf16 kernel (`VDPBF16PS` semantics): operands widened exactly
+/// to f32, fused multiply-add accumulation in f32, f32 output row.
+pub fn row_n64_bf16(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [f32],
+    beta_zero: bool,
+) {
+    let mut acc = [0.0f32; N64];
+    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+        let arow = &a[ao + row * lda..ao + row * lda + k];
+        for (ik, &av) in arow.iter().enumerate() {
+            let av = av.to_f32();
+            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+            for j in 0..N64 {
+                acc[j] = av.mul_add(brow[j].to_f32(), acc[j]);
+            }
+        }
+    }
+    let crow = &mut crow[..N64];
+    if beta_zero {
+        crow.copy_from_slice(&acc);
+    } else {
+        for j in 0..N64 {
+            crow[j] += acc[j];
+        }
+    }
+}
+
+/// Four-row register-blocked bf16 kernel (f32 output) — brings the bf16
+/// path's blocking to parity with f32.
+pub fn row4_n64_bf16(
+    a: &[Bf16],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[Bf16],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    let mut acc0 = [0.0f32; N64];
+    let mut acc1 = [0.0f32; N64];
+    let mut acc2 = [0.0f32; N64];
+    let mut acc3 = [0.0f32; N64];
+    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+        let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+        let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+        let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+        let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+        for ik in 0..k {
+            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+            let (v0, v1, v2, v3) = (
+                a0[ik].to_f32(),
+                a1[ik].to_f32(),
+                a2[ik].to_f32(),
+                a3[ik].to_f32(),
+            );
+            for j in 0..N64 {
+                let bj = brow[j].to_f32();
+                acc0[j] = v0.mul_add(bj, acc0[j]);
+                acc1[j] = v1.mul_add(bj, acc1[j]);
+                acc2[j] = v2.mul_add(bj, acc2[j]);
+                acc3[j] = v3.mul_add(bj, acc3[j]);
+            }
+        }
+    }
+    for (r, acc) in [acc0, acc1, acc2, acc3].iter().enumerate() {
+        let crow = &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64];
+        if beta_zero {
+            crow.copy_from_slice(acc);
+        } else {
+            for j in 0..N64 {
+                crow[j] += acc[j];
+            }
+        }
+    }
+}

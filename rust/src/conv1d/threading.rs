@@ -1,14 +1,107 @@
-//! Batch-dimension work partitioning (paper Sec. 2: "We employ
-//! multithreading across the batch dimension (N) in the forward pass and
-//! the backward pass kernels").
+//! Work partitioning across scoped OS threads — each "thread" plays the
+//! role of one CPU core of the paper's 28-core socket.
 //!
-//! The output tensor is split into disjoint per-sample rows handed to
-//! scoped OS threads — each "thread" plays the role of one CPU core of the
-//! paper's 28-core socket. Rows are split into contiguous near-equal
-//! blocks (±1 row), so ragged batches stay balanced and each worker owns
-//! a private scratch window. With `threads == 1` no thread is spawned
-//! (the single-core fast path used by the benchmarks on this host) and
-//! the loop performs zero heap allocations.
+//! Two strategies (selected by [`Partition`]):
+//!
+//! * **Batch** (paper Sec. 2: "multithreading across the batch dimension
+//!   (N)") — the output tensor is split into disjoint per-sample rows;
+//!   rows are split into contiguous near-equal blocks (±1 row), so ragged
+//!   batches stay balanced and each worker owns a private scratch window.
+//! * **Grid** — the 2D `N × ceil(Q/64)` (batch × width-block) grid is
+//!   split into contiguous near-equal runs of width blocks, so a *single*
+//!   long-sequence image (the N ≤ 4 genomics serving shapes) still
+//!   saturates a socket. Every `(image, width-block)` cell is computed by
+//!   exactly one worker with the same inputs as the serial order, so
+//!   results are **bit-identical** to the batch partitioning.
+//!
+//! With `threads == 1` no thread is spawned (the single-core fast path
+//! used by the benchmarks on this host) and the loops perform zero heap
+//! allocations.
+
+use super::simd::{self, MicroKernelSet};
+
+/// Work-partitioning strategy for the batched conv kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Partition {
+    /// Split the batch dimension `N` (the paper's strategy). Best when
+    /// `N ≥ threads`.
+    #[default]
+    Batch,
+    /// Split the 2D `N × ceil(Q/64)` width-block grid. Parallelises
+    /// *inside* each image — the serving regime (`N < threads`, long Q).
+    Grid,
+}
+
+impl Partition {
+    /// Every strategy, in preference order.
+    pub const ALL: [Partition; 2] = [Partition::Batch, Partition::Grid];
+
+    /// Canonical name (`batch` / `grid`) — config/CLI vocabulary.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Partition::Batch => "batch",
+            Partition::Grid => "grid",
+        }
+    }
+}
+
+impl std::fmt::Display for Partition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Partition {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "batch" | "n" => Ok(Partition::Batch),
+            "grid" | "2d" => Ok(Partition::Grid),
+            other => Err(format!("unknown partition '{other}' (batch|grid)")),
+        }
+    }
+}
+
+/// Execution context of one batched kernel call: worker count, work
+/// partitioning strategy, and the resolved SIMD micro-kernel set. Built
+/// once per [`crate::conv1d::ConvPlan`] and threaded through every hot
+/// path, so the ISA decision is never re-made inside a kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecCtx {
+    /// Scoped worker threads (1 = serial, zero-allocation fast path).
+    pub threads: usize,
+    /// Batch vs 2D-grid work splitting.
+    pub partition: Partition,
+    /// Resolved micro-kernel dispatch table (ISA).
+    pub uks: &'static MicroKernelSet,
+}
+
+impl ExecCtx {
+    /// Serial context with the process-active ISA.
+    pub fn serial() -> ExecCtx {
+        Self::with_threads(1)
+    }
+
+    /// Batch-partitioned context with the process-active ISA.
+    pub fn with_threads(threads: usize) -> ExecCtx {
+        Self::new(threads, Partition::Batch)
+    }
+
+    /// Context with the process-active ISA.
+    pub fn new(threads: usize, partition: Partition) -> ExecCtx {
+        ExecCtx {
+            threads,
+            partition,
+            uks: simd::active(),
+        }
+    }
+
+    /// Builder: pin a specific micro-kernel set (per-ISA benches/tests).
+    pub fn with_uks(mut self, uks: &'static MicroKernelSet) -> ExecCtx {
+        self.uks = uks;
+        self
+    }
+}
 
 /// Apply `f(batch_index, chunk)` to every `chunk_len`-sized row of `out`,
 /// distributing rows across `threads` scoped threads. Thin scratch-free
@@ -129,6 +222,149 @@ pub fn par_batch_chunks_scratch<O, T1, T2, F>(
     });
 }
 
+/// Contiguous near-equal runs of `total` grid cells across `workers`
+/// workers: yields `(start, count)` per worker, in worker order. The
+/// single source of truth for the grid work split — shared by
+/// [`par_grid_chunks_scratch`] and the backward-weight grid sharding so
+/// the two can never diverge.
+pub fn grid_runs(total: usize, workers: usize) -> impl Iterator<Item = (usize, usize)> {
+    let w = workers.max(1);
+    let per = total / w;
+    let rem = total % w;
+    (0..w).scan(0usize, move |g0, tid| {
+        let count = per + usize::from(tid < rem);
+        let start = *g0;
+        *g0 += count;
+        Some((start, count))
+    })
+}
+
+/// Decode global grid cell `g` (row-major over `qb = ceil(q/wb)` blocks
+/// per image) into `(image, pos, nb)`.
+#[inline]
+pub fn grid_cell(g: usize, qb: usize, q: usize, wb: usize) -> (usize, usize, usize) {
+    let (i, blk) = (g / qb, g % qb);
+    let pos = blk * wb;
+    (i, pos, wb.min(q - pos))
+}
+
+/// Raw base pointer a grid worker derives its image-row window from.
+/// Disjointness of the *written* cells is the caller's contract (each
+/// `(image, width-block)` is owned by exactly one worker).
+struct SendPtr<O>(*mut O);
+// Manual impls: the pointer is Copy for any O (a derive would demand
+// `O: Copy`), and sharing it across scoped workers is exactly the point.
+impl<O> Clone for SendPtr<O> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<O> Copy for SendPtr<O> {}
+unsafe impl<O: Send> Send for SendPtr<O> {}
+unsafe impl<O: Send> Sync for SendPtr<O> {}
+
+/// 2D (batch × width-block) work partitioning — the grid substrate of
+/// [`Partition::Grid`].
+///
+/// `out` is `rows × chunk_len` with `q` grid columns per row
+/// (`chunk_len % q == 0`, e.g. `chunk_len = K·Q`); the global grid of
+/// `rows · ceil(q / wb)` width blocks is split into contiguous near-equal
+/// runs, one per worker. `f(i, pos, nb, row, s1, s2)` is called exactly
+/// once per `(image i, block [pos, pos+nb))` cell, with the image's full
+/// `chunk_len` row and the worker's private scratch windows.
+///
+/// **Write contract:** `f` must only write the `nb`-column stripe starting
+/// at `pos` of each `q`-column line of the row it is handed (exactly what
+/// the width-blocked BRGEMM kernels do) — different workers may hold
+/// windows into the *same* image row concurrently, and only the
+/// per-block column disjointness keeps them race-free.
+///
+/// With `threads <= 1` no thread is spawned, blocks run in `(i, pos)`
+/// order and the loop performs zero heap allocations; the parallel runs
+/// compute every cell with identical inputs, so results are bit-identical
+/// to the serial order regardless of `threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn par_grid_chunks_scratch<O, T1, T2, F>(
+    out: &mut [O],
+    chunk_len: usize,
+    q: usize,
+    wb: usize,
+    s1: &mut [T1],
+    s1_len: usize,
+    s2: &mut [T2],
+    s2_len: usize,
+    threads: usize,
+    f: F,
+) where
+    O: Send,
+    T1: Send,
+    T2: Send,
+    F: Fn(usize, usize, usize, &mut [O], &mut [T1], &mut [T2]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert!(q > 0 && wb > 0, "grid geometry must be positive");
+    assert_eq!(out.len() % chunk_len, 0, "output not divisible into rows");
+    assert_eq!(
+        chunk_len % q,
+        0,
+        "rows must be whole multiples of the grid width q"
+    );
+    let n = out.len() / chunk_len;
+    let qb = q.div_ceil(wb);
+    let total = n * qb;
+    let t = threads.max(1).min(total.max(1));
+    if t <= 1 {
+        for (i, row) in out.chunks_mut(chunk_len).enumerate() {
+            let mut pos = 0;
+            while pos < q {
+                let nb = wb.min(q - pos);
+                f(i, pos, nb, row, &mut s1[..s1_len], &mut s2[..s2_len]);
+                pos += nb;
+            }
+        }
+        return;
+    }
+    assert!(
+        s1.len() >= t * s1_len && s2.len() >= t * s2_len,
+        "scratch buffers too small for {t} workers"
+    );
+    let base = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        let mut s1_rest = &mut *s1;
+        let mut s2_rest = &mut *s2;
+        for (start, count) in grid_runs(total, t) {
+            let (c1, r1) = std::mem::take(&mut s1_rest).split_at_mut(s1_len);
+            s1_rest = r1;
+            let (c2, r2) = std::mem::take(&mut s2_rest).split_at_mut(s2_len);
+            s2_rest = r2;
+            let f = &f;
+            scope.spawn(move || {
+                for g in start..start + count {
+                    let (i, pos, nb) = grid_cell(g, qb, q, wb);
+                    // SAFETY: `base` stays valid for the whole scope (the
+                    // caller's &mut borrow outlives it); each (i, blk)
+                    // cell belongs to exactly one worker, and `f`'s write
+                    // contract (above) restricts every worker to its own
+                    // block's columns, so no two workers ever write the
+                    // same cell. Known caveat: windows handed to workers
+                    // sharing an image *alias* as `&mut [O]` even though
+                    // their accessed cells are disjoint — the grid
+                    // kernels are overwrite-only (β = 0) inside their own
+                    // stripe and never read foreign cells, so no
+                    // cross-worker data flow exists for the compiler to
+                    // miscompile, but a fully aliasing-model-clean
+                    // formulation would need raw-pointer output plumbing
+                    // through the micro-kernels (DESIGN.md §5c).
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(i * chunk_len), chunk_len)
+                    };
+                    f(i, pos, nb, row, &mut c1[..], &mut c2[..]);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +396,122 @@ mod tests {
         let mut out = vec![0.0f32; 2];
         par_batch_chunks(&mut out, 1, 16, |i, chunk| chunk.fill(i as f32 + 5.0));
         assert_eq!(out, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn partition_parses_and_displays() {
+        for p in Partition::ALL {
+            assert_eq!(p.as_str().parse::<Partition>().unwrap(), p);
+            assert_eq!(p.to_string(), p.as_str());
+        }
+        assert_eq!("2d".parse::<Partition>().unwrap(), Partition::Grid);
+        assert!("diagonal".parse::<Partition>().is_err());
+    }
+
+    #[test]
+    fn grid_visits_every_cell_once() {
+        // 3 images × q=10, wb=4 → blocks at pos 0 (4 wide), 4 (4), 8 (2);
+        // chunk_len = 2·q (two lines per image, like K=2).
+        let (n, q, wb, chunk) = (3usize, 10usize, 4usize, 20usize);
+        let count = AtomicUsize::new(0);
+        let mut out = vec![0.0f32; n * chunk];
+        let mut s1: [usize; 0] = [];
+        let mut s2: [usize; 0] = [];
+        par_grid_chunks_scratch(
+            &mut out,
+            chunk,
+            q,
+            wb,
+            &mut s1[..],
+            0,
+            &mut s2[..],
+            0,
+            4,
+            |i, pos, nb, row, _, _| {
+                count.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(row.len(), chunk);
+                for line in 0..chunk / q {
+                    for j in pos..pos + nb {
+                        row[line * q + j] = (i * 100 + j) as f32;
+                    }
+                }
+            },
+        );
+        assert_eq!(count.load(Ordering::SeqCst), n * q.div_ceil(wb));
+        for i in 0..n {
+            for line in 0..2 {
+                for j in 0..q {
+                    assert_eq!(out[i * chunk + line * q + j], (i * 100 + j) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_parallel_matches_serial_bit_exact() {
+        // Each cell writes a value derived from (i, pos) plus staged
+        // scratch; every thread count must agree exactly.
+        let (n, q, wb, chunk, slen) = (2usize, 23usize, 8usize, 23usize, 2usize);
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; n * chunk];
+            let mut s1 = vec![0usize; threads.max(1) * slen];
+            let mut s2: [f32; 0] = [];
+            par_grid_chunks_scratch(
+                &mut out,
+                chunk,
+                q,
+                wb,
+                &mut s1[..],
+                slen,
+                &mut s2[..],
+                0,
+                threads,
+                |i, pos, nb, row, scr, _| {
+                    assert_eq!(scr.len(), slen);
+                    scr[0] = i + 1;
+                    scr[1] = pos + 1;
+                    for v in &mut row[pos..pos + nb] {
+                        *v = (scr[0] * 1000 + scr[1]) as f32;
+                    }
+                },
+            );
+            out
+        };
+        let serial = run(1);
+        for threads in [2, 3, 5, 16] {
+            assert_eq!(run(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn grid_single_image_uses_many_workers() {
+        // N=1 must still fan out: count the distinct scratch windows that
+        // actually got touched (one per worker).
+        let (q, wb) = (64usize * 6, 64usize);
+        let mut out = vec![0.0f32; q];
+        let threads = 3;
+        let mut s1 = vec![0usize; threads];
+        let mut s2: [f32; 0] = [];
+        par_grid_chunks_scratch(
+            &mut out,
+            q,
+            q,
+            wb,
+            &mut s1[..],
+            1,
+            &mut s2[..],
+            0,
+            threads,
+            |_i, pos, nb, row, scr, _| {
+                scr[0] += 1;
+                for v in &mut row[pos..pos + nb] {
+                    *v = 1.0;
+                }
+            },
+        );
+        assert!(out.iter().all(|&v| v == 1.0));
+        let touched = s1.iter().filter(|&&c| c > 0).count();
+        assert_eq!(touched, threads, "all workers must receive grid cells");
     }
 
     #[test]

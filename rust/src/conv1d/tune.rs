@@ -5,7 +5,8 @@
 //! *per shape* by measuring once, then reuse the choice for every later
 //! plan at that shape. This module is the native version:
 //!
-//! * [`Autotuner::choose`] — given `(ConvParams, threads, precision)`,
+//! * [`Autotuner::choose`] — given `(ConvParams, threads, precision,
+//!   partition)`,
 //!   return the fastest registered kernel. The first call for a shape
 //!   micro-benchmarks every candidate on a width-capped probe problem and
 //!   memoizes the winner; every later call is a pure table lookup — the
@@ -26,6 +27,7 @@ use std::time::Instant;
 
 use super::params::ConvParams;
 use super::plan::{kernels, lookup_kernel, ConvKernel, ConvPlan};
+use super::threading::Partition;
 use crate::machine::Precision;
 use crate::util::json::Json;
 
@@ -67,15 +69,26 @@ impl Autotuner {
     }
 
     /// The cache key of one tuning decision: the full problem shape plus
-    /// the execution context (thread count, precision) — anything that
-    /// can flip the kernel ranking.
-    pub fn key(p: &ConvParams, threads: usize, precision: Precision) -> String {
+    /// the execution context (thread count, precision, **active SIMD
+    /// ISA**, **work partition**) — anything that can flip the kernel
+    /// ranking. The ISA term means a table measured under
+    /// `CONV1D_FORCE_ISA=scalar` (or on an AVX2-only host) is never
+    /// served to an AVX-512 process and vice versa; the partition term
+    /// keeps grid rankings (where only grid-capable kernels fan out at
+    /// N < threads) separate from batch ones. Persisted entries from a
+    /// different context simply miss and re-measure.
+    pub fn key(
+        p: &ConvParams,
+        threads: usize,
+        precision: Precision,
+        partition: Partition,
+    ) -> String {
         let prec = match precision {
             Precision::F32 => "f32",
             Precision::Bf16 => "bf16",
         };
         format!(
-            "n{}c{}k{}w{}s{}d{}st{}t{}p{}",
+            "n{}c{}k{}w{}s{}d{}st{}t{}p{}i{}pt{}",
             p.n,
             p.c,
             p.k,
@@ -84,7 +97,9 @@ impl Autotuner {
             p.d,
             p.stride,
             threads.max(1),
-            prec
+            prec,
+            super::simd::active().isa().name(),
+            partition
         )
     }
 
@@ -109,11 +124,17 @@ impl Autotuner {
     }
 
     /// The memoized entry for a shape, if any.
-    pub fn entry(&self, p: &ConvParams, threads: usize, precision: Precision) -> Option<TuneEntry> {
+    pub fn entry(
+        &self,
+        p: &ConvParams,
+        threads: usize,
+        precision: Precision,
+        partition: Partition,
+    ) -> Option<TuneEntry> {
         self.table
             .lock()
             .unwrap()
-            .get(&Self::key(p, threads, precision))
+            .get(&Self::key(p, threads, precision, partition))
             .cloned()
     }
 
@@ -126,6 +147,7 @@ impl Autotuner {
         p: &ConvParams,
         threads: usize,
         precision: Precision,
+        partition: Partition,
     ) -> &'static dyn ConvKernel {
         if precision == Precision::Bf16 {
             return kernels()
@@ -134,7 +156,7 @@ impl Autotuner {
                 .find(|k| k.precision() == Precision::Bf16)
                 .expect("a bf16-precision kernel is registered");
         }
-        let key = Self::key(p, threads, precision);
+        let key = Self::key(p, threads, precision, partition);
         if let Some(k) = self.hit(&key) {
             return k;
         }
@@ -146,7 +168,7 @@ impl Autotuner {
         if let Some(k) = self.hit(&key) {
             return k;
         }
-        let (kernel, micros) = self.measure(p, threads);
+        let (kernel, micros) = self.measure(p, threads, partition);
         self.table.lock().unwrap().insert(
             key,
             TuneEntry {
@@ -171,7 +193,12 @@ impl Autotuner {
     /// (and `N`) so tuning a 60 000-wide training shape costs
     /// milliseconds; the block structure that decides the ranking is
     /// preserved.
-    fn measure(&self, p: &ConvParams, threads: usize) -> (&'static dyn ConvKernel, f64) {
+    fn measure(
+        &self,
+        p: &ConvParams,
+        threads: usize,
+        partition: Partition,
+    ) -> (&'static dyn ConvKernel, f64) {
         let probe = probe_params(p, threads);
         let wt = crate::conv1d::test_util::rnd(probe.k * probe.c * probe.s, 0x7E57);
         let x = crate::conv1d::test_util::rnd(probe.n * probe.c * probe.w, 0x7E58);
@@ -182,8 +209,10 @@ impl Autotuner {
             if kernel.precision() != Precision::F32 || !kernel.supports(&probe.unit_stride()) {
                 continue;
             }
+            // Measure under the partition the cache key promises — the
+            // grid ranking at N < threads is nothing like the batch one.
             let mut plan = match ConvPlan::with_kernel(probe, kernel, threads, wt.clone()) {
-                Ok(plan) => plan,
+                Ok(plan) => plan.with_partition(partition),
                 Err(_) => continue,
             };
             let mut out = vec![0.0f32; probe.n * probe.k * probe.q()];
@@ -315,23 +344,38 @@ mod tests {
     #[test]
     fn key_distinguishes_every_dimension() {
         let p = ConvParams::new(1, 3, 4, 100, 5, 2).unwrap();
-        let base = Autotuner::key(&p, 1, Precision::F32);
+        let base = Autotuner::key(&p, 1, Precision::F32, Partition::Batch);
         let variants = [
-            Autotuner::key(&ConvParams::new(2, 3, 4, 100, 5, 2).unwrap(), 1, Precision::F32),
-            Autotuner::key(&p.with_stride(2).unwrap(), 1, Precision::F32),
-            Autotuner::key(&p, 4, Precision::F32),
-            Autotuner::key(&p, 1, Precision::Bf16),
+            Autotuner::key(
+                &ConvParams::new(2, 3, 4, 100, 5, 2).unwrap(),
+                1,
+                Precision::F32,
+                Partition::Batch,
+            ),
+            Autotuner::key(&p.with_stride(2).unwrap(), 1, Precision::F32, Partition::Batch),
+            Autotuner::key(&p, 4, Precision::F32, Partition::Batch),
+            Autotuner::key(&p, 1, Precision::Bf16, Partition::Batch),
+            Autotuner::key(&p, 1, Precision::F32, Partition::Grid),
         ];
         for v in &variants {
             assert_ne!(&base, v);
         }
+        // The key is ISA- and partition-aware: entries recorded under one
+        // ISA or partition are never served under another (the key simply
+        // differs).
+        let isa = crate::conv1d::simd::active().isa().name();
+        assert!(
+            base.contains(&format!("i{isa}")),
+            "key '{base}' must carry the active ISA '{isa}'"
+        );
+        assert!(base.ends_with("ptbatch"), "key '{base}' must carry the partition");
     }
 
     #[test]
     fn bf16_precision_short_circuits() {
         let t = Autotuner::new();
         let p = ConvParams::new(1, 4, 4, 200, 5, 2).unwrap();
-        let k = t.choose(&p, 1, Precision::Bf16);
+        let k = t.choose(&p, 1, Precision::Bf16, Partition::Batch);
         assert_eq!(k.name(), "bf16");
         assert_eq!(t.measurement_count(), 0);
     }

@@ -161,6 +161,7 @@ impl Trainer {
             .collect();
         for r in &mut replicas {
             r.set_backend(cfg.backend, cfg.threads_per_socket);
+            r.set_partition(cfg.partition);
             r.set_precision(cfg.precision);
             r.set_autotune(cfg.autotune);
             r.set_activation(cfg.post_ops.activation);

@@ -119,6 +119,8 @@ USAGE: dilconv <subcommand> [--flags]
                    [--blocks N] [--backend brgemm|onednn|direct|bf16] [--lr F]
                    [--threads N] [--seed N] [--checkpoint out.ckpt]
                    [--autotune] [--tune-cache tune.json]
+                   [--partition batch|grid] (grid: split the N x ceil(Q/64)
+                   width-block grid, so N=1 still uses every thread)
                    [--post-ops bias_relu|bias_sigmoid|bias]
                    [--precision f32|bf16] (bf16 = split Adam: fp32 master
                    weights, bf16 working copies + kernels)
@@ -168,6 +170,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             other => bail!("unknown precision '{other}' (f32|bf16)"),
         };
     }
+    if let Some(s) = args.get("partition") {
+        cfg.partition = s.parse().map_err(|e: String| anyhow!(e))?;
+    }
     if args.bool("autotune") {
         cfg.autotune = true;
     }
@@ -187,7 +192,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.bucket_mb = bucket_mb;
     println!(
         "training AtacWorks-like net: {} conv layers, ch={}, S={}, d={}, W={} (padded {}), \
-         {} train segments, batch {}, {} sockets, backend {:?}, precision {:?}{}",
+         {} train segments, batch {}, {} sockets, backend {:?}, precision {:?}, \
+         partition {}, isa {}{}",
         1 + 2 * cfg.n_blocks + 2,
         cfg.channels,
         cfg.filter_size,
@@ -199,6 +205,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.sockets,
         cfg.backend,
         cfg.precision,
+        cfg.partition,
+        dilconv1d::conv1d::simd::active().isa(),
         if cfg.overlap {
             format!(", overlapped all-reduce ({} MiB buckets)", cfg.bucket_mb)
         } else {

@@ -3,7 +3,7 @@
 //! structure itself; see resnet.rs).
 
 use crate::conv1d::layout::{pad_width_into, unpad_width};
-use crate::conv1d::{Backend, Conv1dLayer, ConvParams, PostOps};
+use crate::conv1d::{Backend, Conv1dLayer, ConvParams, Partition, PostOps};
 use crate::machine::Precision;
 
 use super::tensor::Tensor;
@@ -56,6 +56,13 @@ impl ConvSame {
     pub fn set_backend(&mut self, backend: Backend, threads: usize) {
         self.conv.backend = backend;
         self.conv.threads = threads;
+    }
+
+    /// Select the work partitioning the conv kernels split across
+    /// threads: batch-dimension (paper) or the 2D width-block grid
+    /// (saturates a socket even at N = 1).
+    pub fn set_partition(&mut self, partition: Partition) {
+        self.conv.partition = partition;
     }
 
     /// Select the forward precision (bf16 takes effect on the BRGEMM

@@ -153,6 +153,14 @@ impl AtacWorksNet {
         }
     }
 
+    /// Select the work partitioning for every layer (batch-dimension or
+    /// the 2D width-block grid).
+    pub fn set_partition(&mut self, partition: crate::conv1d::Partition) {
+        for c in &mut self.convs {
+            c.set_partition(partition);
+        }
+    }
+
     /// Select the forward precision for every layer (bf16 takes effect on
     /// the BRGEMM backend; gradients stay f32).
     pub fn set_precision(&mut self, precision: crate::machine::Precision) {

@@ -4,7 +4,7 @@
 //! table is honored without any measurement.
 
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{Autotuner, ConvParams, ConvPlan, PostOps};
+use dilconv1d::conv1d::{Autotuner, ConvParams, ConvPlan, Partition, PostOps};
 use dilconv1d::machine::Precision;
 use dilconv1d::util::json::Json;
 
@@ -16,12 +16,12 @@ fn shape() -> ConvParams {
 fn same_shape_twice_measures_once_and_agrees() {
     let tuner = Autotuner::new();
     let p = shape();
-    let first = tuner.choose(&p, 1, Precision::F32);
+    let first = tuner.choose(&p, 1, Precision::F32, Partition::Batch);
     let measured = tuner.measurement_count();
     assert!(measured > 0, "first choose must micro-benchmark candidates");
     assert_eq!(tuner.len(), 1);
     // Second choose: identical decision, ZERO re-measurement.
-    let second = tuner.choose(&p, 1, Precision::F32);
+    let second = tuner.choose(&p, 1, Precision::F32, Partition::Batch);
     assert_eq!(first.name(), second.name());
     assert_eq!(
         tuner.measurement_count(),
@@ -30,7 +30,7 @@ fn same_shape_twice_measures_once_and_agrees() {
     );
     // A different shape is a different key and measures again.
     let p2 = ConvParams::new(1, 3, 3, 300, 5, 2).unwrap();
-    tuner.choose(&p2, 1, Precision::F32);
+    tuner.choose(&p2, 1, Precision::F32, Partition::Batch);
     assert!(tuner.measurement_count() > measured);
     assert_eq!(tuner.len(), 2);
 }
@@ -39,7 +39,7 @@ fn same_shape_twice_measures_once_and_agrees() {
 fn table_round_trips_through_util_json_and_is_honored_on_reload() {
     let tuner = Autotuner::new();
     let p = shape();
-    let chosen = tuner.choose(&p, 1, Precision::F32);
+    let chosen = tuner.choose(&p, 1, Precision::F32, Partition::Batch);
     let json = tuner.to_json();
     // The persisted table is valid JSON for the in-tree parser and keeps
     // the entry under the shape key.
@@ -47,7 +47,7 @@ fn table_round_trips_through_util_json_and_is_honored_on_reload() {
     assert_eq!(doc.get("version").and_then(Json::as_usize), Some(1));
     let entries = doc.get("entries").and_then(Json::as_obj).unwrap();
     assert_eq!(entries.len(), 1);
-    let key = Autotuner::key(&p, 1, Precision::F32);
+    let key = Autotuner::key(&p, 1, Precision::F32, Partition::Batch);
     assert_eq!(
         entries[&key].get("kernel").and_then(Json::as_str),
         Some(chosen.name())
@@ -57,7 +57,7 @@ fn table_round_trips_through_util_json_and_is_honored_on_reload() {
     // measurements.
     let fresh = Autotuner::new();
     assert_eq!(fresh.load_json(&json).unwrap(), 1);
-    let again = fresh.choose(&p, 1, Precision::F32);
+    let again = fresh.choose(&p, 1, Precision::F32, Partition::Batch);
     assert_eq!(again.name(), chosen.name());
     assert_eq!(fresh.measurement_count(), 0, "reloaded table must preempt measurement");
 }
@@ -68,12 +68,12 @@ fn persisted_entry_overrides_measurement_even_for_a_slow_kernel() {
     // it (the table is authoritative; it would never win a measurement).
     let tuner = Autotuner::new();
     let p = shape();
-    let key = Autotuner::key(&p, 1, Precision::F32);
+    let key = Autotuner::key(&p, 1, Precision::F32, Partition::Batch);
     let json = format!(
         "{{\"version\": 1, \"entries\": {{\"{key}\": {{\"kernel\": \"direct\", \"micros\": 1.0}}}}}}"
     );
     assert_eq!(tuner.load_json(&json).unwrap(), 1);
-    let k = tuner.choose(&p, 1, Precision::F32);
+    let k = tuner.choose(&p, 1, Precision::F32, Partition::Batch);
     assert_eq!(k.name(), "direct");
     assert_eq!(tuner.measurement_count(), 0);
     // Unknown kernels in a persisted table are skipped, not honored.
@@ -88,7 +88,7 @@ fn persisted_entry_overrides_measurement_even_for_a_slow_kernel() {
 fn file_round_trip_and_plan_integration() {
     let tuner = Autotuner::new();
     let p = shape();
-    tuner.choose(&p, 1, Precision::F32);
+    tuner.choose(&p, 1, Precision::F32, Partition::Batch);
     let dir = std::env::temp_dir().join("dilconv_tune_test");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("tune.json");
@@ -96,15 +96,15 @@ fn file_round_trip_and_plan_integration() {
     let fresh = Autotuner::new();
     assert_eq!(fresh.load(&path).unwrap(), 1);
     assert_eq!(
-        fresh.entry(&p, 1, Precision::F32).unwrap().kernel,
-        tuner.entry(&p, 1, Precision::F32).unwrap().kernel
+        fresh.entry(&p, 1, Precision::F32, Partition::Batch).unwrap().kernel,
+        tuner.entry(&p, 1, Precision::F32, Partition::Batch).unwrap().kernel
     );
 
     // ConvPlan::tuned routes through the process-wide tuner and produces
     // the same numbers as an explicitly-selected plan of that kernel.
     let wt = rnd(p.k * p.c * p.s, 9);
     let x = rnd(p.n * p.c * p.w, 10);
-    let mut tuned = ConvPlan::tuned(p, Precision::F32, 1, wt.clone()).unwrap();
+    let mut tuned = ConvPlan::tuned(p, Precision::F32, 1, Partition::Batch, wt.clone()).unwrap();
     let mut fixed = ConvPlan::by_name(p, tuned.kernel_name(), 1, wt).unwrap();
     let mut a = vec![0.0f32; p.n * p.k * p.q()];
     let mut b = vec![0.0f32; p.n * p.k * p.q()];
@@ -112,11 +112,11 @@ fn file_round_trip_and_plan_integration() {
     fixed.execute_forward_into(&x, &mut b);
     assert_eq!(a, b);
     // bf16 precision short-circuits to the bf16 kernel.
-    let bf = ConvPlan::tuned(p, Precision::Bf16, 1, rnd(p.k * p.c * p.s, 11)).unwrap();
+    let bf = ConvPlan::tuned(p, Precision::Bf16, 1, Partition::Batch, rnd(p.k * p.c * p.s, 11)).unwrap();
     assert_eq!(bf.kernel_name(), "bf16");
     assert_eq!(bf.precision(), Precision::Bf16);
     // Fused post-ops compose with tuned plans.
-    let mut post = ConvPlan::tuned(p, Precision::F32, 1, rnd(p.k * p.c * p.s, 12))
+    let mut post = ConvPlan::tuned(p, Precision::F32, 1, Partition::Batch, rnd(p.k * p.c * p.s, 12))
         .unwrap()
         .with_post_ops(PostOps::bias_relu());
     post.set_bias(&rnd(p.k, 13));

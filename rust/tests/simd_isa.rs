@@ -1,0 +1,222 @@
+//! ISA-dispatch and 2D-partition lockdown (ISSUE 4 acceptance criteria).
+//!
+//! * Every available micro-kernel ISA (scalar / AVX2+FMA / AVX-512F) must
+//!   produce **bit-identical** BRGEMM outputs — across the n = 64 fast
+//!   path, remainder widths (n < 64), odd k, row-4 tails (m % 4 ≠ 0),
+//!   empty batch reductions and both β values. The kernels all issue the
+//!   same fused multiply-add per element in the same order; this suite is
+//!   what keeps that true.
+//! * Grid (2D batch × width-block) partitioning must be bit-exact against
+//!   batch partitioning through the full plan API, mirroring
+//!   `multithreaded_equals_single`.
+//! * The autotune cache key must carry the active ISA, so entries
+//!   recorded under one ISA are never served under another.
+
+use dilconv1d::conv1d::bf16::to_bf16;
+use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32_with};
+use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{Autotuner, ConvParams, ConvPlan, Partition, PostOps};
+use dilconv1d::machine::Precision;
+
+/// The kernel-shape grid: (m, n, k, l_br) covering the n=64 fast path,
+/// ragged tails, odd k, m % 4 ≠ 0, single-tap and empty reductions.
+const SHAPES: &[(usize, usize, usize, usize)] = &[
+    (15, 64, 15, 51), // AtacWorks block (row-4 + 3 tail rows)
+    (8, 64, 16, 4),   // multiple-of-4 rows
+    (3, 64, 1, 2),    // k = 1, tail rows only
+    (5, 64, 7, 3),    // odd k, odd m
+    (64, 64, 64, 5),  // Fig. 5 block
+    (7, 48, 11, 5),   // remainder width n < 64
+    (2, 31, 9, 7),    // remainder width, odd everything
+    (1, 1, 1, 1),     // degenerate
+    (6, 64, 15, 0),   // empty batch reduction (l_br = 0)
+];
+
+fn run_f32(
+    set: &MicroKernelSet,
+    (m, n, k, lbr): (usize, usize, usize, usize),
+    beta_zero: bool,
+) -> Vec<f32> {
+    let a = rnd(lbr.max(1) * m * k, 0xA0 + m as u64);
+    let b = rnd(lbr.max(1) * k * n, 0xB0 + n as u64);
+    let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+    let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+    let mut c = rnd(m * n, 0xC0 + k as u64); // non-zero C exercises β = 1
+    brgemm_f32_with(set, &a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, beta_zero);
+    c
+}
+
+fn run_bf16(
+    set: &MicroKernelSet,
+    (m, n, k, lbr): (usize, usize, usize, usize),
+    beta_zero: bool,
+) -> Vec<f32> {
+    let a = to_bf16(&rnd(lbr.max(1) * m * k, 0xD0 + m as u64));
+    let b = to_bf16(&rnd(lbr.max(1) * k * n, 0xE0 + n as u64));
+    let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+    let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+    let mut c = rnd(m * n, 0xF0 + k as u64);
+    brgemm_bf16_with(set, &a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, beta_zero);
+    c
+}
+
+/// The vector ISAs this host + build can actually run (scalar excluded).
+fn available_vector_isas() -> Vec<&'static MicroKernelSet> {
+    [Isa::Avx2, Isa::Avx512]
+        .into_iter()
+        .filter(|&isa| MicroKernelSet::for_isa(isa).isa() == isa)
+        .map(MicroKernelSet::for_isa)
+        .collect()
+}
+
+#[test]
+fn f32_kernels_bit_identical_across_isas() {
+    let scalar = MicroKernelSet::for_isa(Isa::Scalar);
+    let vectors = available_vector_isas();
+    if vectors.is_empty() {
+        eprintln!("no vector ISA available on this host/build; scalar-only lockdown");
+    }
+    for &shape in SHAPES {
+        for beta_zero in [true, false] {
+            let want = run_f32(scalar, shape, beta_zero);
+            for set in &vectors {
+                let got = run_f32(set, shape, beta_zero);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} vs scalar at {shape:?} beta_zero={beta_zero}",
+                    set.isa()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bf16_kernels_bit_identical_across_isas() {
+    let scalar = MicroKernelSet::for_isa(Isa::Scalar);
+    let vectors = available_vector_isas();
+    for &shape in SHAPES {
+        for beta_zero in [true, false] {
+            let want = run_bf16(scalar, shape, beta_zero);
+            for set in &vectors {
+                let got = run_bf16(set, shape, beta_zero);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} vs scalar at {shape:?} beta_zero={beta_zero}",
+                    set.isa()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_process_set_matches_scalar_bit_exact() {
+    // Whatever `active()` resolved to (env override or detection), the
+    // production entry points must agree with the scalar floor.
+    let scalar = MicroKernelSet::for_isa(Isa::Scalar);
+    for &shape in SHAPES {
+        assert_eq!(
+            run_f32(active(), shape, true),
+            run_f32(scalar, shape, true),
+            "active ISA {} diverges at {shape:?}",
+            active().isa()
+        );
+    }
+}
+
+#[test]
+fn grid_partition_plan_bit_exact_vs_batch() {
+    // Mirrors `multithreaded_equals_single` across the partition axis:
+    // every kernel that supports the grid, N ∈ {1, 3}, ragged Q, fused
+    // post-ops included. Forward and backward-data are bit-exact;
+    // backward-weight (re-associated reduction) agrees to tolerance.
+    for name in ["brgemm", "bf16"] {
+        for &(n, threads) in &[(1usize, 8usize), (3, 4)] {
+            let p = ConvParams::new(n, 5, 7, 500, 9, 4).unwrap(); // Q % 64 != 0
+            let wt = rnd(p.k * p.c * p.s, 1);
+            let x = rnd(p.n * p.c * p.w, 2);
+            let bias = rnd(p.k, 3);
+            let gout = rnd(p.n * p.k * p.q(), 4);
+            let build = |partition| {
+                let mut plan = ConvPlan::by_name(p, name, threads, wt.clone())
+                    .unwrap()
+                    .with_partition(partition)
+                    .with_post_ops(PostOps::bias_relu());
+                plan.set_bias(&bias);
+                plan
+            };
+            let mut batch = build(Partition::Batch);
+            let mut grid = build(Partition::Grid);
+            let mut ob = vec![0.0; p.n * p.k * p.q()];
+            let mut og = vec![0.0; p.n * p.k * p.q()];
+            batch.execute_forward_post_into(&x, None, &mut ob);
+            grid.execute_forward_post_into(&x, None, &mut og);
+            assert_eq!(ob, og, "{name} N={n} t={threads}: fused forward");
+            let mut gb = vec![0.0; p.n * p.c * p.w];
+            let mut gg = vec![0.0; p.n * p.c * p.w];
+            batch.execute_backward_data_into(&gout, &mut gb);
+            grid.execute_backward_data_into(&gout, &mut gg);
+            assert_eq!(gb, gg, "{name} N={n} t={threads}: backward-data");
+            let mut wb = vec![0.0; p.k * p.c * p.s];
+            let mut wg = vec![0.0; p.k * p.c * p.s];
+            batch.execute_backward_weight_into(&gout, &x, &mut wb);
+            grid.execute_backward_weight_into(&gout, &x, &mut wg);
+            for (i, (a, b)) in wb.iter().zip(&wg).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                    "{name} N={n} t={threads}: gw[{i}] {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_partition_is_deterministic() {
+    // Repeated grid executions (same plan, same threads) are bit-stable.
+    let p = ConvParams::new(1, 6, 8, 700, 11, 3).unwrap();
+    let wt = rnd(p.k * p.c * p.s, 7);
+    let x = rnd(p.n * p.c * p.w, 8);
+    let mut plan = ConvPlan::by_name(p, "brgemm", 6, wt)
+        .unwrap()
+        .with_partition(Partition::Grid);
+    let mut o1 = vec![0.0; p.n * p.k * p.q()];
+    let mut o2 = vec![0.0; p.n * p.k * p.q()];
+    plan.execute_forward_into(&x, &mut o1);
+    plan.execute_forward_into(&x, &mut o2);
+    assert_eq!(o1, o2);
+}
+
+#[test]
+fn tune_key_carries_the_active_isa_and_partition() {
+    let p = ConvParams::new(1, 3, 4, 100, 5, 2).unwrap();
+    let key = Autotuner::key(&p, 2, Precision::F32, Partition::Batch);
+    let isa = active().isa().name();
+    assert!(
+        key.contains(&format!("i{isa}")),
+        "key '{key}' must carry the active ISA 'i{isa}' — entries tuned \
+         under one ISA must never be served under another"
+    );
+    // Partition flips the key too: a ranking measured under batch
+    // splitting is meaningless for grid (and vice versa).
+    let grid_key = Autotuner::key(&p, 2, Precision::F32, Partition::Grid);
+    assert_ne!(key, grid_key);
+    assert!(grid_key.ends_with("ptgrid"), "{grid_key}");
+}
+
+#[test]
+fn plan_reports_isa_and_partition() {
+    let p = ConvParams::new(1, 2, 3, 64, 3, 2).unwrap();
+    let plan = ConvPlan::by_name(p, "brgemm", 1, vec![0.1; 3 * 2 * 3])
+        .unwrap()
+        .with_partition(Partition::Grid);
+    assert_eq!(plan.isa(), active().isa());
+    assert_eq!(plan.partition(), Partition::Grid);
+    let dbg = format!("{plan:?}");
+    assert!(dbg.contains("isa"), "{dbg}");
+    assert!(dbg.contains("Grid"), "{dbg}");
+}
