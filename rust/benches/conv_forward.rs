@@ -205,9 +205,10 @@ fn main() {
         }
         let ctx = ExecCtx::serial().with_uks(set);
         let mut b_offs = vec![0usize; pa.s];
+        let mut stage: [f32; 0] = []; // batch partitioning needs no staging
         let mut out_a = vec![0.0f32; pa.n * pa.k * pa.q()];
         let t = time_fn(1, reps, || {
-            forward_with_scratch(&pa, &xa, &ska, &mut out_a, ctx, &a_offs, &mut b_offs);
+            forward_with_scratch(&pa, &xa, &ska, &mut out_a, ctx, &a_offs, &mut b_offs, &mut stage);
             std::hint::black_box(&out_a);
         });
         let gf = pa.flops() as f64 / t.median_secs / 1e9;

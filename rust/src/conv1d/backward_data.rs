@@ -17,7 +17,9 @@
 use super::brgemm::brgemm_f32_with;
 use super::params::{ConvParams, WIDTH_BLOCK};
 use super::simd::{self, MicroKernelSet};
-use super::threading::{par_batch_chunks_scratch, par_grid_chunks_scratch, ExecCtx, Partition};
+use super::threading::{
+    par_batch_chunks_scratch, par_grid_chunks_scratch, ExecCtx, GridStripe, Partition,
+};
 
 /// Tap offsets of the `(S, C, K)` backward-data weight: `a_offs[s] = s·C·K`.
 pub fn backward_data_a_offs(p: &ConvParams) -> Vec<usize> {
@@ -59,6 +61,35 @@ fn backward_data_block(
         k,
         true,
     );
+}
+
+/// [`backward_data_block`] for a grid worker: BRGEMM into the worker's
+/// private contiguous `(C, nb)` staging block (`ldc = nb` — identical
+/// math, `ldc` only moves stores), then store only the worker's own
+/// column stripe of the shared data-gradient row through the
+/// [`GridStripe`] handle — no aliasing `&mut` over the output, ever.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn backward_data_block_grid(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    gout_padded: &[f32],
+    w_sck: &[f32],
+    stripe: &mut GridStripe<'_, f32>,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    stage: &mut [f32],
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, q) = (p.c, p.k, p.d, p.q());
+    let qp = q + 2 * (p.s - 1) * d;
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d; // into the padded gradient
+    }
+    let stage = &mut stage[..c * nb];
+    brgemm_f32_with(uks, w_sck, a_offs, k, gout_padded, b_offs, qp, stage, nb, c, nb, k, true);
+    stripe.store_block(stage);
 }
 
 /// Zero-allocation backward-data for one batch element; offset tables are
@@ -121,8 +152,11 @@ pub fn pad_gout(p: &ConvParams, gout: &[f32]) -> Vec<f32> {
 
 /// Batched backward-data with caller-owned scratch — the plan executor's
 /// entry point. `b_offs` needs one `S`-window per effective worker, `gp`
-/// the padded-gradient size `N·K·(Q + 2·(S−1)·d)`; with `ctx.threads <= 1`
-/// the call performs zero heap allocations.
+/// the padded-gradient size `N·K·(Q + 2·(S−1)·d)`; under
+/// [`Partition::Grid`] `stage` must additionally hold one
+/// `C·WIDTH_BLOCK` f32 staging window per effective worker (unused — may
+/// be empty — under [`Partition::Batch`]). With `ctx.threads <= 1` the
+/// call performs zero heap allocations.
 #[allow(clippy::too_many_arguments)]
 pub fn backward_data_with_scratch(
     p: &ConvParams,
@@ -133,6 +167,7 @@ pub fn backward_data_with_scratch(
     a_offs: &[usize],
     b_offs: &mut [usize],
     gp: &mut [f32],
+    stage: &mut [f32],
 ) {
     let (n, c, k, w, q) = (p.n, p.c, p.k, p.w, p.q());
     assert_eq!(gout.len(), n * k * q, "grad-out shape mismatch for {p}");
@@ -169,12 +204,12 @@ pub fn backward_data_with_scratch(
             WIDTH_BLOCK,
             b_offs,
             p.s,
-            &mut no_scratch[..],
-            0,
+            stage,
+            c * WIDTH_BLOCK,
             ctx.threads,
-            |i, pos, nb, gin_row, bo, _| {
+            |i, pos, nb, stripe, bo, stg| {
                 let gp_row = &gp[i * k * qp..(i + 1) * k * qp];
-                backward_data_block(uks, p, gp_row, w_sck, gin_row, a_offs, bo, pos, nb);
+                backward_data_block_grid(uks, p, gp_row, w_sck, stripe, a_offs, bo, stg, pos, nb);
             },
         ),
     }
@@ -190,6 +225,7 @@ pub fn backward_data(p: &ConvParams, gout: &[f32], w_sck: &[f32], gin: &mut [f32
     let mut b_offs = vec![0usize; workers * p.s];
     let qp = p.q() + 2 * (p.s - 1) * p.d;
     let mut gp = vec![0.0; p.n * p.k * qp];
+    let mut stage: [f32; 0] = []; // batch partitioning needs no staging
     backward_data_with_scratch(
         p,
         gout,
@@ -199,6 +235,7 @@ pub fn backward_data(p: &ConvParams, gout: &[f32], w_sck: &[f32], gin: &mut [f32
         &a_offs,
         &mut b_offs,
         &mut gp,
+        &mut stage,
     );
 }
 
@@ -268,9 +305,10 @@ mod tests {
                 let ctx = ExecCtx::new(threads, partition);
                 let mut b_offs = vec![0usize; threads.max(1) * p.s];
                 let mut gp = vec![0.0; p.n * p.k * qp];
+                let mut stage = vec![0.0f32; threads.max(1) * p.c * WIDTH_BLOCK];
                 let mut gin = vec![0.0; p.n * p.c * p.w];
                 backward_data_with_scratch(
-                    &p, &gout, &sck, &mut gin, ctx, &a_offs, &mut b_offs, &mut gp,
+                    &p, &gout, &sck, &mut gin, ctx, &a_offs, &mut b_offs, &mut gp, &mut stage,
                 );
                 gin
             };

@@ -23,9 +23,11 @@
 use super::bf16::{narrow_row_into, Bf16};
 use super::brgemm::{brgemm_bf16_with, brgemm_f32_with};
 use super::params::{ConvParams, WIDTH_BLOCK};
-use super::post::{apply_block, PostOps};
+use super::post::{apply_block, apply_block_staged, PostOps};
 use super::simd::{self, MicroKernelSet};
-use super::threading::{par_batch_chunks_scratch, par_grid_chunks_scratch, ExecCtx, Partition};
+use super::threading::{
+    par_batch_chunks_scratch, par_grid_chunks_scratch, ExecCtx, GridStripe, Partition,
+};
 
 /// Tap offsets of the `(S, K, C)` forward weight: `a_offs[s] = s·K·C`.
 /// Block-position independent, so a plan computes them exactly once
@@ -75,6 +77,39 @@ fn forward_block(
         true,
     );
     apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
+}
+
+/// [`forward_block`] for a grid worker: the BRGEMM computes into the
+/// worker's private contiguous `(K, nb)` staging block (`ldc = nb` —
+/// `ldc` only moves stores, never the FMA order, so grid stays bit-exact
+/// vs batch), the epilogue runs on the hot staging block, and only the
+/// worker's own column stripe of the shared output row is stored through
+/// the [`GridStripe`] handle — no aliasing `&mut` over the output, ever.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn forward_block_grid(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    x: &[f32],
+    w_skc: &[f32],
+    stripe: &mut GridStripe<'_, f32>,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    stage: &mut [f32],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d;
+    }
+    let stage = &mut stage[..k * nb];
+    brgemm_f32_with(uks, w_skc, a_offs, c, x, b_offs, w, stage, nb, k, nb, c, true);
+    apply_block_staged(ops, bias, res_row, stage, k, q, pos, nb);
+    stripe.store_block(stage);
 }
 
 /// Zero-allocation forward pass for one batch element: the tap-offset
@@ -139,8 +174,12 @@ pub fn forward_single(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32])
 /// Batched forward pass with caller-owned scratch — the plan executor's
 /// entry point. `b_offs` must hold at least one `S`-window per effective
 /// worker (`min(ctx.threads, N)` for batch partitioning,
-/// `min(ctx.threads, N·ceil(Q/64))` for grid); with `ctx.threads <= 1`
-/// the call performs zero heap allocations.
+/// `min(ctx.threads, N·ceil(Q/64))` for grid); under [`Partition::Grid`]
+/// `stage` must additionally hold one `K·WIDTH_BLOCK` f32 staging window
+/// per effective worker (unused — may be empty — under
+/// [`Partition::Batch`]). With `ctx.threads <= 1` the call performs zero
+/// heap allocations.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_with_scratch(
     p: &ConvParams,
     x: &[f32],
@@ -149,8 +188,21 @@ pub fn forward_with_scratch(
     ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
+    stage: &mut [f32],
 ) {
-    forward_post_with_scratch(p, x, w_skc, out, ctx, a_offs, b_offs, &PostOps::none(), &[], None);
+    forward_post_with_scratch(
+        p,
+        x,
+        w_skc,
+        out,
+        ctx,
+        a_offs,
+        b_offs,
+        stage,
+        &PostOps::none(),
+        &[],
+        None,
+    );
 }
 
 /// Batched fused-epilogue forward pass with caller-owned scratch — the
@@ -167,6 +219,7 @@ pub fn forward_post_with_scratch(
     ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
+    stage: &mut [f32],
     ops: &PostOps,
     bias: &[f32],
     residual: Option<&[f32]>,
@@ -213,14 +266,14 @@ pub fn forward_post_with_scratch(
             WIDTH_BLOCK,
             b_offs,
             s,
-            &mut no_scratch[..],
-            0,
+            stage,
+            k * WIDTH_BLOCK,
             ctx.threads,
-            |i, pos, nb, out_row, bo, _| {
+            |i, pos, nb, stripe, bo, stg| {
                 let xrow = &x[i * c * w..(i + 1) * c * w];
                 let res_row = res_of(i);
-                forward_block(
-                    uks, p, xrow, w_skc, out_row, a_offs, bo, ops, bias, res_row, pos, nb,
+                forward_block_grid(
+                    uks, p, xrow, w_skc, stripe, a_offs, bo, stg, ops, bias, res_row, pos, nb,
                 );
             },
         ),
@@ -236,6 +289,7 @@ pub fn forward(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], thread
     let a_offs = forward_a_offs(p);
     let workers = threads.max(1).min(p.n.max(1));
     let mut b_offs = vec![0usize; workers * p.s];
+    let mut stage: [f32; 0] = []; // batch partitioning needs no staging
     forward_with_scratch(
         p,
         x,
@@ -244,6 +298,7 @@ pub fn forward(p: &ConvParams, x: &[f32], w_skc: &[f32], out: &mut [f32], thread
         ExecCtx::with_threads(threads),
         &a_offs,
         &mut b_offs,
+        &mut stage,
     );
 }
 
@@ -395,10 +450,42 @@ fn forward_block_bf16_f32out(
     apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
 }
 
+/// [`forward_block_bf16_f32out`] for a grid worker — staged like
+/// [`forward_block_grid`]: BRGEMM into the worker's private `(K, nb)`
+/// block, epilogue on the hot block, stripe-only store through the
+/// [`GridStripe`] handle.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn forward_block_grid_bf16_f32out(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    x: &[Bf16],
+    w_skc: &[Bf16],
+    stripe: &mut GridStripe<'_, f32>,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    stage: &mut [f32],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d;
+    }
+    let stage = &mut stage[..k * nb];
+    brgemm_bf16_with(uks, w_skc, a_offs, c, x, b_offs, w, stage, nb, k, nb, c, true);
+    apply_block_staged(ops, bias, res_row, stage, k, q, pos, nb);
+    stripe.store_block(stage);
+}
+
 /// Zero-allocation bf16 forward with **f32 output** — the plan executor's
 /// bf16 kernel: operands stay bf16 (`VDPBF16PS` semantics), the f32
 /// accumulator is stored directly, so the caller keeps a uniform f32
 /// tensor interface across precisions.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_bf16_f32out_with_scratch(
     p: &ConvParams,
     x: &[Bf16],
@@ -407,6 +494,7 @@ pub fn forward_bf16_f32out_with_scratch(
     ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
+    stage: &mut [f32],
 ) {
     forward_bf16_f32out_post_with_scratch(
         p,
@@ -416,6 +504,7 @@ pub fn forward_bf16_f32out_with_scratch(
         ctx,
         a_offs,
         b_offs,
+        stage,
         &PostOps::none(),
         &[],
         None,
@@ -434,6 +523,7 @@ pub fn forward_bf16_f32out_post_with_scratch(
     ctx: ExecCtx,
     a_offs: &[usize],
     b_offs: &mut [usize],
+    stage: &mut [f32],
     ops: &PostOps,
     bias: &[f32],
     residual: Option<&[f32]>,
@@ -480,14 +570,14 @@ pub fn forward_bf16_f32out_post_with_scratch(
             WIDTH_BLOCK,
             b_offs,
             s,
-            &mut no_scratch[..],
-            0,
+            stage,
+            k * WIDTH_BLOCK,
             ctx.threads,
-            |i, pos, nb, out_row, bo, _| {
+            |i, pos, nb, stripe, bo, stg| {
                 let xrow = &x[i * c * w..(i + 1) * c * w];
                 let res_row = res_of(i);
-                forward_block_bf16_f32out(
-                    uks, p, xrow, w_skc, out_row, a_offs, bo, ops, bias, res_row, pos, nb,
+                forward_block_grid_bf16_f32out(
+                    uks, p, xrow, w_skc, stripe, a_offs, bo, stg, ops, bias, res_row, pos, nb,
                 );
             },
         ),
@@ -555,10 +645,11 @@ mod tests {
             let a_offs = forward_a_offs(&p);
             let run = |partition| {
                 let ctx = ExecCtx::new(threads, partition);
-                let workers = threads.max(1) * p.s; // enough for either split
-                let mut b_offs = vec![0usize; workers];
+                let workers = threads.max(1); // enough for either split
+                let mut b_offs = vec![0usize; workers * p.s];
+                let mut stage = vec![0.0f32; workers * p.k * WIDTH_BLOCK];
                 let mut out = vec![0.0; p.n * p.k * p.q()];
-                forward_with_scratch(&p, &x, &skc, &mut out, ctx, &a_offs, &mut b_offs);
+                forward_with_scratch(&p, &x, &skc, &mut out, ctx, &a_offs, &mut b_offs, &mut stage);
                 out
             };
             assert_eq!(

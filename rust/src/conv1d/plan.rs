@@ -76,6 +76,11 @@ pub struct WorkspaceSpec {
     pub gout_padded: usize,
     /// Per-worker backward-weight accumulators (`workers·S·C·K`).
     pub gw_partials: usize,
+    /// Per-worker grid staging blocks (`workers·max(K,C)·WIDTH_BLOCK`):
+    /// grid workers compute each width block into private contiguous
+    /// staging and store only their own column stripe of the shared
+    /// output row (no aliasing `&mut` across workers).
+    pub stage: usize,
     /// bf16 staging copy of the input (`N·C·W`, bf16 kernel only).
     pub xb: usize,
     /// Padded-input scratch for same-padding execution (`N·C·W`). Zero in
@@ -96,6 +101,7 @@ impl WorkspaceSpec {
             + (self.col
                 + self.gout_padded
                 + self.gw_partials
+                + self.stage
                 + self.padded_in
                 + self.gx_padded
                 + self.out)
@@ -115,6 +121,8 @@ pub struct Workspace {
     col: Vec<f32>,
     gout_padded: Vec<f32>,
     gw_partials: Vec<f32>,
+    /// Per-worker grid staging blocks (see [`WorkspaceSpec::stage`]).
+    stage: Vec<f32>,
     xb: Vec<Bf16>,
     padded_in: Vec<f32>,
     gx_padded: Vec<f32>,
@@ -137,6 +145,7 @@ impl Workspace {
             col: vec![0.0; spec.col],
             gout_padded: vec![0.0; spec.gout_padded],
             gw_partials: vec![0.0; spec.gw_partials],
+            stage: vec![0.0; spec.stage],
             xb: vec![Bf16::ZERO; spec.xb],
             padded_in: vec![0.0; spec.padded_in],
             gx_padded: vec![0.0; spec.gx_padded],
@@ -153,6 +162,7 @@ impl Workspace {
             + (self.col.len()
                 + self.gout_padded.len()
                 + self.gw_partials.len()
+                + self.stage.len()
                 + self.padded_in.len()
                 + self.gx_padded.len()
                 + self.out.len()
@@ -329,6 +339,8 @@ impl ConvKernel for BrgemmKernel {
             b_offs: t * p.s,
             gout_padded: gout_padded_len(p),
             gw_partials: t * p.s * p.c * p.k,
+            // Forward grid stages K lines, backward-data stages C.
+            stage: t * p.k.max(p.c) * WIDTH_BLOCK,
             ..WorkspaceSpec::default()
         }
     }
@@ -342,7 +354,16 @@ impl ConvKernel for BrgemmKernel {
         out: &mut [f32],
         ctx: ExecCtx,
     ) {
-        forward_with_scratch(p, x, &w.skc, out, ctx, &ws.a_offs_fwd, &mut ws.b_offs);
+        forward_with_scratch(
+            p,
+            x,
+            &w.skc,
+            out,
+            ctx,
+            &ws.a_offs_fwd,
+            &mut ws.b_offs,
+            &mut ws.stage,
+        );
     }
 
     fn forward_post(
@@ -363,6 +384,7 @@ impl ConvKernel for BrgemmKernel {
             ctx,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
+            &mut ws.stage,
             args.ops,
             args.bias,
             args.residual,
@@ -387,6 +409,7 @@ impl ConvKernel for BrgemmKernel {
             &ws.a_offs_bwd,
             &mut ws.b_offs,
             &mut ws.gout_padded,
+            &mut ws.stage,
         );
     }
 
@@ -423,6 +446,8 @@ impl ConvKernel for Im2colKernel {
             col: tb * p.c * p.s * p.q(),
             gout_padded: gout_padded_len(p),
             gw_partials: tg * p.s * p.c * p.k,
+            // Only the delegated BRGEMM backward-data grids (C lines).
+            stage: tg * p.c * WIDTH_BLOCK,
             ..WorkspaceSpec::default()
         }
     }
@@ -585,6 +610,7 @@ impl ConvKernel for Bf16Kernel {
             b_offs: t * p.s,
             gout_padded: gout_padded_len(p),
             gw_partials: t * p.s * p.c * p.k,
+            stage: t * p.k.max(p.c) * WIDTH_BLOCK,
             xb: p.n * p.c * p.w,
             ..WorkspaceSpec::default()
         }
@@ -608,6 +634,7 @@ impl ConvKernel for Bf16Kernel {
             ctx,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
+            &mut ws.stage,
             &PostOps::none(),
             &[],
             None,
@@ -633,6 +660,7 @@ impl ConvKernel for Bf16Kernel {
             ctx,
             &ws.a_offs_fwd,
             &mut ws.b_offs,
+            &mut ws.stage,
             args.ops,
             args.bias,
             args.residual,

@@ -316,6 +316,34 @@ pub fn apply_block(
     }
 }
 
+/// [`apply_block`] for a *staged* contiguous `(K, nb)` block (`ldc = nb`)
+/// whose bias/residual still live in the `(K, Q)` output-row geometry —
+/// the grid workers' epilogue: they compute each width block into
+/// private staging and store only their own column stripe of the shared
+/// output row, so the post-ops run on the staging block before the
+/// store. Same per-segment math as [`apply_block`] (both route through
+/// [`apply_segment`]), so the two cannot drift.
+pub fn apply_block_staged(
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    block: &mut [f32],
+    k: usize,
+    q: usize,
+    pos: usize,
+    nb: usize,
+) {
+    if ops.is_none() {
+        return;
+    }
+    debug_assert!(block.len() >= k * nb);
+    for ik in 0..k {
+        let bias_k = if ops.bias { bias[ik] } else { 0.0 };
+        let res = res_row.map(|r| &r[ik * q + pos..ik * q + pos + nb]);
+        apply_segment(ops, bias_k, res, &mut block[ik * nb..(ik + 1) * nb]);
+    }
+}
+
 /// Unfused reference sweep over a full `(N, K, Q)` output tensor — the
 /// fallback for kernels that do not override the fused hook, and the
 /// oracle the conformance matrix compares every fused kernel against.

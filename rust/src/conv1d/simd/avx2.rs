@@ -110,7 +110,11 @@ fn row4_bf16(
 /// Widen 8 bf16 lanes to f32 (exact: bits `<< 16`, the inverse of bf16
 /// truncation — identical to `Bf16::to_f32` per lane). `p` must point at
 /// 8 readable `u16`s; `Bf16` is `repr(transparent)` over `u16`.
-#[inline(always)]
+/// `target_feature`: the `__m256` return value must not cross a
+/// feature-mismatched ABI boundary (`abi_unsupported_vector_types`);
+/// every caller is itself `#[target_feature(enable = "avx2,fma")]`.
+#[target_feature(enable = "avx2")]
+#[inline]
 unsafe fn widen8_bf16(p: *const Bf16) -> __m256 {
     unsafe {
         let raw = _mm_loadu_si128(p as *const __m128i);

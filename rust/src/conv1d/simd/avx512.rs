@@ -100,7 +100,11 @@ fn row4_bf16(
 
 /// Widen 16 bf16 lanes to f32 (exact `<< 16`, identical to
 /// `Bf16::to_f32` per lane). `p` must point at 16 readable `u16`s.
-#[inline(always)]
+/// `target_feature`: the `__m512` return value must not cross a
+/// feature-mismatched ABI boundary (`abi_unsupported_vector_types`);
+/// every caller is itself `#[target_feature(enable = "avx512f")]`.
+#[target_feature(enable = "avx512f")]
+#[inline]
 unsafe fn widen16_bf16(p: *const Bf16) -> __m512 {
     unsafe {
         let raw = _mm256_loadu_si256(p as *const __m256i);

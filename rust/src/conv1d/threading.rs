@@ -12,7 +12,10 @@
 //!   long-sequence image (the N ≤ 4 genomics serving shapes) still
 //!   saturates a socket. Every `(image, width-block)` cell is computed by
 //!   exactly one worker with the same inputs as the serial order, so
-//!   results are **bit-identical** to the batch partitioning.
+//!   results are **bit-identical** to the batch partitioning. Workers
+//!   sharing an image never hold aliasing `&mut` row slices: all output
+//!   goes through a [`GridStripe`] handle that materialises only the
+//!   owning cell's disjoint per-line column stripes.
 //!
 //! With `threads == 1` no thread is spawned (the single-core fast path
 //! used by the benchmarks on this host) and the loops perform zero heap
@@ -248,9 +251,10 @@ pub fn grid_cell(g: usize, qb: usize, q: usize, wb: usize) -> (usize, usize, usi
     (i, pos, wb.min(q - pos))
 }
 
-/// Raw base pointer a grid worker derives its image-row window from.
-/// Disjointness of the *written* cells is the caller's contract (each
-/// `(image, width-block)` is owned by exactly one worker).
+/// Raw base pointer a grid worker derives its stripe writes from.
+/// Disjointness is structural: each `(image, width-block)` cell is owned
+/// by exactly one worker, and [`GridStripe`] only ever materialises
+/// references inside the owning worker's cell.
 struct SendPtr<O>(*mut O);
 // Manual impls: the pointer is Copy for any O (a derive would demand
 // `O: Copy`), and sharing it across scoped workers is exactly the point.
@@ -263,21 +267,113 @@ impl<O> Copy for SendPtr<O> {}
 unsafe impl<O: Send> Send for SendPtr<O> {}
 unsafe impl<O: Send> Sync for SendPtr<O> {}
 
+/// Write handle for one `(image, width-block)` grid cell: exposes exactly
+/// the `nb`-column stripe starting at column `pos` of each `q`-column
+/// line of the owning image's row — and nothing else. Grid workers store
+/// their results through this handle, so a safe closure physically
+/// cannot touch a neighbouring worker's columns, and no two live `&mut`
+/// slices ever overlap anywhere in the grid machinery: the only `&mut`
+/// materialised over the shared output are the per-line stripe slices of
+/// [`GridStripe::line_mut`], which are disjoint across workers by cell
+/// ownership and serialised within a worker by `&mut self`.
+pub struct GridStripe<'a, O> {
+    /// Base of the owning image's `lines · q` row.
+    base: *mut O,
+    q: usize,
+    lines: usize,
+    pos: usize,
+    nb: usize,
+    _row: std::marker::PhantomData<&'a mut [O]>,
+}
+
+impl<'a, O> GridStripe<'a, O> {
+    /// # Safety
+    ///
+    /// `base` must point to a live `lines·q`-element row valid for writes
+    /// for `'a`, `pos + nb <= q` must hold, and the `(pos, nb)` column
+    /// stripe of that row must be owned exclusively by this handle: no
+    /// other reference or handle may access those elements while it (or
+    /// any slice it hands out) is live.
+    unsafe fn new(base: *mut O, q: usize, lines: usize, pos: usize, nb: usize) -> Self {
+        debug_assert!(pos + nb <= q, "stripe [{pos}, {pos}+{nb}) exceeds line width {q}");
+        GridStripe {
+            base,
+            q,
+            lines,
+            pos,
+            nb,
+            _row: std::marker::PhantomData,
+        }
+    }
+
+    /// First column of the stripe.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Stripe width in columns.
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
+    /// Number of `q`-column lines in the image row (`chunk_len / q`).
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
+
+    /// The stripe of line `line`: the image row's
+    /// `[line·q + pos, line·q + pos + nb)` window. At most one line slice
+    /// is live at a time (`&mut self`), and distinct workers' slices are
+    /// disjoint by construction, so this never creates aliasing `&mut`.
+    pub fn line_mut(&mut self, line: usize) -> &mut [O] {
+        assert!(
+            line < self.lines,
+            "grid stripe line {line} out of range ({} lines)",
+            self.lines
+        );
+        // SAFETY: in-bounds by the assert plus the construction invariant
+        // `pos + nb <= q`; exclusive by the construction contract (the
+        // stripe belongs to this handle alone) and by `&mut self` (one
+        // live slice per handle at a time).
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(line * self.q + self.pos), self.nb) }
+    }
+
+    /// Store a staged contiguous `lines × nb` block (`ldc = nb`) into the
+    /// stripe: line `l` of `block` goes to the image row's
+    /// `[l·q + pos, l·q + pos + nb)` window. The single store path of the
+    /// grid kernels, so the stride geometry lives next to
+    /// [`GridStripe::line_mut`]'s exclusivity reasoning instead of being
+    /// repeated per kernel.
+    pub fn store_block(&mut self, block: &[O])
+    where
+        O: Copy,
+    {
+        assert_eq!(
+            block.len(),
+            self.lines * self.nb,
+            "staged block shape mismatch ({} lines × {} cols)",
+            self.lines,
+            self.nb
+        );
+        for line in 0..self.lines {
+            self.line_mut(line)
+                .copy_from_slice(&block[line * self.nb..(line + 1) * self.nb]);
+        }
+    }
+}
+
 /// 2D (batch × width-block) work partitioning — the grid substrate of
 /// [`Partition::Grid`].
 ///
 /// `out` is `rows × chunk_len` with `q` grid columns per row
 /// (`chunk_len % q == 0`, e.g. `chunk_len = K·Q`); the global grid of
 /// `rows · ceil(q / wb)` width blocks is split into contiguous near-equal
-/// runs, one per worker. `f(i, pos, nb, row, s1, s2)` is called exactly
-/// once per `(image i, block [pos, pos+nb))` cell, with the image's full
-/// `chunk_len` row and the worker's private scratch windows.
-///
-/// **Write contract:** `f` must only write the `nb`-column stripe starting
-/// at `pos` of each `q`-column line of the row it is handed (exactly what
-/// the width-blocked BRGEMM kernels do) — different workers may hold
-/// windows into the *same* image row concurrently, and only the
-/// per-block column disjointness keeps them race-free.
+/// runs, one per worker. `f(i, pos, nb, stripe, s1, s2)` is called
+/// exactly once per `(image i, block [pos, pos+nb))` cell with the
+/// worker's private scratch windows; all output goes through the
+/// [`GridStripe`] handle, which exposes only that cell's columns — the
+/// API is sound for any safe closure (out-of-stripe writes are
+/// impossible, not merely forbidden by contract).
 ///
 /// With `threads <= 1` no thread is spawned, blocks run in `(i, pos)`
 /// order and the loop performs zero heap allocations; the parallel runs
@@ -299,7 +395,7 @@ pub fn par_grid_chunks_scratch<O, T1, T2, F>(
     O: Send,
     T1: Send,
     T2: Send,
-    F: Fn(usize, usize, usize, &mut [O], &mut [T1], &mut [T2]) + Sync,
+    F: Fn(usize, usize, usize, &mut GridStripe<'_, O>, &mut [T1], &mut [T2]) + Sync,
 {
     assert!(chunk_len > 0, "chunk_len must be positive");
     assert!(q > 0 && wb > 0, "grid geometry must be positive");
@@ -310,15 +406,21 @@ pub fn par_grid_chunks_scratch<O, T1, T2, F>(
         "rows must be whole multiples of the grid width q"
     );
     let n = out.len() / chunk_len;
+    let lines = chunk_len / q;
     let qb = q.div_ceil(wb);
     let total = n * qb;
     let t = threads.max(1).min(total.max(1));
     if t <= 1 {
         for (i, row) in out.chunks_mut(chunk_len).enumerate() {
+            let base = row.as_mut_ptr();
             let mut pos = 0;
             while pos < q {
                 let nb = wb.min(q - pos);
-                f(i, pos, nb, row, &mut s1[..s1_len], &mut s2[..s2_len]);
+                // SAFETY: `row` is exclusively borrowed and untouched
+                // while the stripe lives, so the handle is the only
+                // access path to its columns.
+                let mut stripe = unsafe { GridStripe::new(base, q, lines, pos, nb) };
+                f(i, pos, nb, &mut stripe, &mut s1[..s1_len], &mut s2[..s2_len]);
                 pos += nb;
             }
         }
@@ -341,24 +443,21 @@ pub fn par_grid_chunks_scratch<O, T1, T2, F>(
             scope.spawn(move || {
                 for g in start..start + count {
                     let (i, pos, nb) = grid_cell(g, qb, q, wb);
-                    // SAFETY: `base` stays valid for the whole scope (the
-                    // caller's &mut borrow outlives it); each (i, blk)
-                    // cell belongs to exactly one worker, and `f`'s write
-                    // contract (above) restricts every worker to its own
-                    // block's columns, so no two workers ever write the
-                    // same cell. Known caveat: windows handed to workers
-                    // sharing an image *alias* as `&mut [O]` even though
-                    // their accessed cells are disjoint — the grid
-                    // kernels are overwrite-only (β = 0) inside their own
-                    // stripe and never read foreign cells, so no
-                    // cross-worker data flow exists for the compiler to
-                    // miscompile, but a fully aliasing-model-clean
-                    // formulation would need raw-pointer output plumbing
-                    // through the micro-kernels (DESIGN.md §5c).
-                    let row = unsafe {
-                        std::slice::from_raw_parts_mut(base.0.add(i * chunk_len), chunk_len)
+                    // SAFETY: `base` is derived from the caller's
+                    // exclusive `&mut out` borrow, which outlives the
+                    // scope and is not otherwise used inside it, so its
+                    // provenance covers the whole output. `grid_runs`
+                    // partitions `0..total`, so each (i, blk) cell — and
+                    // hence each (pos, nb) column stripe of each image —
+                    // belongs to exactly one worker: the handle's
+                    // exclusivity contract holds, and the only `&mut`
+                    // ever materialised (the per-line stripe slices of
+                    // `line_mut`) are pairwise disjoint across the whole
+                    // scope.
+                    let mut stripe = unsafe {
+                        GridStripe::new(base.0.add(i * chunk_len), q, lines, pos, nb)
                     };
-                    f(i, pos, nb, row, &mut c1[..], &mut c2[..]);
+                    f(i, pos, nb, &mut stripe, &mut c1[..], &mut c2[..]);
                 }
             });
         }
@@ -427,12 +526,12 @@ mod tests {
             &mut s2[..],
             0,
             4,
-            |i, pos, nb, row, _, _| {
+            |i, pos, nb, stripe, _, _| {
                 count.fetch_add(1, Ordering::SeqCst);
-                assert_eq!(row.len(), chunk);
-                for line in 0..chunk / q {
-                    for j in pos..pos + nb {
-                        row[line * q + j] = (i * 100 + j) as f32;
+                assert_eq!((stripe.pos(), stripe.nb(), stripe.lines()), (pos, nb, chunk / q));
+                for line in 0..stripe.lines() {
+                    for (off, v) in stripe.line_mut(line).iter_mut().enumerate() {
+                        *v = (i * 100 + pos + off) as f32;
                     }
                 }
             },
@@ -466,11 +565,11 @@ mod tests {
                 &mut s2[..],
                 0,
                 threads,
-                |i, pos, nb, row, scr, _| {
+                |i, pos, _nb, stripe, scr, _| {
                     assert_eq!(scr.len(), slen);
                     scr[0] = i + 1;
                     scr[1] = pos + 1;
-                    for v in &mut row[pos..pos + nb] {
+                    for v in stripe.line_mut(0) {
                         *v = (scr[0] * 1000 + scr[1]) as f32;
                     }
                 },
@@ -502,16 +601,46 @@ mod tests {
             &mut s2[..],
             0,
             threads,
-            |_i, pos, nb, row, scr, _| {
+            |_i, _pos, _nb, stripe, scr, _| {
                 scr[0] += 1;
-                for v in &mut row[pos..pos + nb] {
-                    *v = 1.0;
-                }
+                stripe.line_mut(0).fill(1.0);
             },
         );
         assert!(out.iter().all(|&v| v == 1.0));
         let touched = s1.iter().filter(|&&c| c > 0).count();
         assert_eq!(touched, threads, "all workers must receive grid cells");
+    }
+
+    #[test]
+    fn stripe_handle_is_bounded() {
+        // The write handle hands out exactly nb-wide line stripes and
+        // rejects out-of-range lines — a safe closure cannot reach a
+        // neighbouring worker's columns.
+        let (q, wb, lines) = (10usize, 4usize, 2usize);
+        let mut out = vec![0.0f32; lines * q];
+        let mut s1: [usize; 0] = [];
+        let mut s2: [usize; 0] = [];
+        par_grid_chunks_scratch(
+            &mut out,
+            lines * q,
+            q,
+            wb,
+            &mut s1[..],
+            0,
+            &mut s2[..],
+            0,
+            1,
+            |_i, _pos, nb, stripe, _, _| {
+                for line in 0..stripe.lines() {
+                    assert_eq!(stripe.line_mut(line).len(), nb);
+                }
+                let lines = stripe.lines();
+                assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    stripe.line_mut(lines);
+                }))
+                .is_err());
+            },
+        );
     }
 
     #[test]

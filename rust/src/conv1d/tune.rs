@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
-use super::params::ConvParams;
+use super::params::{ConvParams, WIDTH_BLOCK};
 use super::plan::{kernels, lookup_kernel, ConvKernel, ConvPlan};
 use super::threading::Partition;
 use crate::machine::Precision;
@@ -199,7 +199,7 @@ impl Autotuner {
         threads: usize,
         partition: Partition,
     ) -> (&'static dyn ConvKernel, f64) {
-        let probe = probe_params(p, threads);
+        let probe = probe_params(p, threads, partition);
         let wt = crate::conv1d::test_util::rnd(probe.k * probe.c * probe.s, 0x7E57);
         let x = crate::conv1d::test_util::rnd(probe.n * probe.c * probe.w, 0x7E58);
         let mut best: Option<(&'static dyn ConvKernel, f64)> = None;
@@ -300,16 +300,23 @@ impl Autotuner {
 /// but never below the worker count — the kernels parallelise across the
 /// batch, so a probe with fewer rows than workers would measure a
 /// different parallelism regime than the one the cache key promises.
-fn probe_params(p: &ConvParams, threads: usize) -> ConvParams {
+/// Under [`Partition::Grid`] the width cap is raised until the probe's
+/// `n·ceil(Q/WIDTH_BLOCK)` grid has at least one cell per worker, for
+/// the same reason: a worker-starved grid probe (threads beyond the cell
+/// count idle) would memoize a ranking the production shape — hundreds
+/// of width blocks — never exhibits.
+fn probe_params(p: &ConvParams, threads: usize, partition: Partition) -> ConvParams {
     const MAX_PROBE_Q: usize = 512;
-    let q = p.q().min(MAX_PROBE_Q).max(1);
+    let n = p.n.min(threads.max(2));
+    let q_cap = match partition {
+        Partition::Batch => MAX_PROBE_Q,
+        // n·ceil(q/WB) ≥ threads  ⇐  q ≥ ceil(threads/n)·WB.
+        Partition::Grid => MAX_PROBE_Q.max(threads.max(1).div_ceil(n.max(1)) * WIDTH_BLOCK),
+    };
+    let q = p.q().min(q_cap).max(1);
     // Reconstruct a width giving exactly q output columns at p's stride.
     let w = (q - 1) * p.stride + (p.s - 1) * p.d + 1;
-    let probe = ConvParams {
-        n: p.n.min(threads.max(2)),
-        w,
-        ..*p
-    };
+    let probe = ConvParams { n, w, ..*p };
     debug_assert_eq!(probe.q(), q);
     probe
 }
@@ -327,18 +334,40 @@ mod tests {
     #[test]
     fn probe_caps_width_but_keeps_blocking_dims() {
         let p = ConvParams::new(8, 15, 15, 60_000, 51, 8).unwrap();
-        let probe = probe_params(&p, 1);
+        let probe = probe_params(&p, 1, Partition::Batch);
         assert_eq!(probe.q(), 512);
         assert_eq!((probe.c, probe.k, probe.s, probe.d), (15, 15, 51, 8));
         assert_eq!(probe.n, 2);
         // The probe batch never drops below the worker count (up to N),
         // so the measurement runs the same parallelism regime the cache
         // key promises.
-        assert_eq!(probe_params(&p, 4).n, 4);
-        assert_eq!(probe_params(&p, 64).n, 8);
+        assert_eq!(probe_params(&p, 4, Partition::Batch).n, 4);
+        assert_eq!(probe_params(&p, 64, Partition::Batch).n, 8);
         // Small problems are probed as-is.
         let small = ConvParams::new(1, 3, 3, 100, 5, 2).unwrap();
-        assert_eq!(probe_params(&small, 1), small);
+        assert_eq!(probe_params(&small, 1, Partition::Batch), small);
+    }
+
+    #[test]
+    fn grid_probe_keeps_every_worker_busy() {
+        // Under Partition::Grid the probe grid must have ≥ 1 cell per
+        // worker, or the measurement runs worker-starved relative to the
+        // production shape the cache key promises.
+        let p = ConvParams::new(1, 15, 15, 60_000, 51, 8).unwrap();
+        for threads in [8usize, 32, 64, 128] {
+            let probe = probe_params(&p, threads, Partition::Grid);
+            let cells = probe.n * probe.q().div_ceil(WIDTH_BLOCK);
+            assert!(
+                cells >= threads,
+                "threads={threads}: only {cells} probe grid cells"
+            );
+        }
+        // The batch probe is unchanged by the grid floor.
+        assert_eq!(probe_params(&p, 64, Partition::Batch).q(), 512);
+        // A problem narrower than the floor is never inflated past its
+        // own width.
+        let small = ConvParams::new(1, 3, 3, 100, 5, 2).unwrap();
+        assert_eq!(probe_params(&small, 64, Partition::Grid), small);
     }
 
     #[test]
