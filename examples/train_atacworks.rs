@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (DESIGN.md §7, T1/FIG7): train the full 25-layer
+//! END-TO-END DRIVER (DESIGN.md §8, T1/FIG7): train the full 25-layer
 //! AtacWorks-like dilated-conv ResNet on synthetic ATAC-seq data with the
 //! paper's BRGEMM kernels, logging the loss curve and validation AUROC
 //! per epoch — the paper's Sec. 4.4 experiment at host scale.

@@ -5,7 +5,7 @@
 //! the bucketed variant (DESIGN.md §6): per-bucket aligned rings with
 //! the modeled overlap efficiency against a synthetic backward timeline.
 
-use dilconv1d::bench_harness::time_auto;
+use dilconv1d::bench_harness::{self, time_auto};
 use dilconv1d::dist::allreduce::{
     naive_allreduce, ring_allreduce, ring_allreduce_aligned, ring_allreduce_threaded,
 };
@@ -21,6 +21,8 @@ fn bufs(p: usize, len: usize) -> Vec<Vec<f32>> {
 }
 
 fn main() {
+    let smoke = bench_harness::smoke();
+    let budget = if smoke { 0.02 } else { 0.3 };
     let grad_len = NetConfig::default().param_count();
     println!("allreduce bench: gradient length {grad_len} (the 25-layer AtacWorks model)");
     println!(
@@ -28,20 +30,21 @@ fn main() {
         "ranks", "ring (inproc)", "ring (threads)", "naive"
     );
     let comm = CommModel::fabric();
-    for &p in &[2usize, 4, 8, 16] {
+    let rank_list: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8, 16] };
+    for &p in rank_list {
         let base = bufs(p, grad_len);
         let mut b1 = base.clone();
-        let t_ring = time_auto(0.3, 5, || {
+        let t_ring = time_auto(budget, if smoke { 1 } else { 5 }, || {
             b1.clone_from(&base);
             ring_allreduce(&mut b1);
             std::hint::black_box(&b1);
         });
-        let t_thr = time_auto(0.3, 3, || {
+        let t_thr = time_auto(budget, if smoke { 1 } else { 3 }, || {
             let out = ring_allreduce_threaded(base.clone());
             std::hint::black_box(&out);
         });
         let mut b2 = base.clone();
-        let t_naive = time_auto(0.3, 5, || {
+        let t_naive = time_auto(budget, if smoke { 1 } else { 5 }, || {
             b2.clone_from(&base);
             naive_allreduce(&mut b2);
             std::hint::black_box(&b2);
@@ -75,10 +78,11 @@ fn main() {
         "{:>5} | {:>12} | {:>12} | modeled overlap efficiency (fabric)",
         "ranks", "monolithic", "bucketed sum"
     );
-    for &p in &[2usize, 4, 8] {
+    let bucketed_ranks: &[usize] = if smoke { &[2] } else { &[2, 4, 8] };
+    for &p in bucketed_ranks {
         let base = bufs(p, grad_len);
         let mut b1 = base.clone();
-        let t_mono = time_auto(0.3, 5, || {
+        let t_mono = time_auto(budget, if smoke { 1 } else { 5 }, || {
             b1.clone_from(&base);
             ring_allreduce(&mut b1);
             std::hint::black_box(&b1);
@@ -90,7 +94,7 @@ fn main() {
             .map(|b| base.iter().map(|full| plan.gather(b, full)).collect())
             .collect();
         let mut bucket_bufs = pristine.clone();
-        let t_bucketed = time_auto(0.3, 5, || {
+        let t_bucketed = time_auto(budget, if smoke { 1 } else { 5 }, || {
             for (b, bufs_b) in bucket_bufs.iter_mut().enumerate() {
                 for (buf, fresh) in bufs_b.iter_mut().zip(&pristine[b]) {
                     buf.clone_from(fresh);

@@ -4,18 +4,19 @@
 //! The reproduced claim is the *region shape*: ours wins everywhere the
 //! condition holds.
 
-use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
+use dilconv1d::bench_harness::{self, run_point, Pass, SweepConfig};
 use dilconv1d::conv1d::Backend;
 use dilconv1d::coordinator::experiment::eq4_grid;
 use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
 
 fn main() {
+    let smoke = bench_harness::smoke();
     let host = calibrate_host();
     println!("baseline_vs_brgemm (eq. 4 grid): host ≈ {host:.2} GFLOP/s");
     let cfg = SweepConfig {
         batch: 2,
-        reps: 3,
-        max_measured_q: 20_000,
+        reps: if smoke { 1 } else { 3 },
+        max_measured_q: if smoke { 5_000 } else { 20_000 },
         host_gflops_peak: host,
         threads: 1,
     };
@@ -26,7 +27,17 @@ fn main() {
     );
     let mut violations = 0;
     let mut in_region = 0;
-    for (c, k, q, s, d) in eq4_grid() {
+    let grid: Vec<_> = if smoke {
+        // Smoke mode: the four corners of the eq.-4 region only
+        // (S ∈ {1, 51} × Q ∈ {200, 5000}).
+        eq4_grid()
+            .into_iter()
+            .filter(|&(_, _, q, s, _)| (s == 1 || s == 51) && (q == 200 || q == 5_000))
+            .collect()
+    } else {
+        eq4_grid()
+    };
+    for (c, k, q, s, d) in grid {
         let ours = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Brgemm, Precision::F32, &clx);
         let im2col = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Im2col, Precision::F32, &clx);
         let direct = run_point(&cfg, c, k, q, s, d, Pass::Forward, Backend::Direct, Precision::F32, &clx);

@@ -1,4 +1,4 @@
-//! BENCH — ablation of the paper's design choices (DESIGN.md §7):
+//! BENCH — ablation of the paper's design choices (DESIGN.md §8):
 //!
 //! 1. **Width-block length**: the paper fixes the cache block at 64
 //!    (Sec. 3, LIBXSMM's `(mnk)^{1/3} ≤ 64` heuristic). Sweep
@@ -8,7 +8,7 @@
 //!    advantage as a function of the tap count (covered in more depth by
 //!    `brgemm_kernel.rs`).
 
-use dilconv1d::bench_harness::time_fn;
+use dilconv1d::bench_harness::{self, time_fn};
 use dilconv1d::conv1d::forward::forward_single_wb;
 use dilconv1d::conv1d::layout::kcs_to_skc;
 use dilconv1d::conv1d::test_util::rnd;
@@ -16,7 +16,9 @@ use dilconv1d::conv1d::ConvParams;
 use dilconv1d::machine::gflops;
 
 fn main() {
-    let (c, k, s, d, q) = (15usize, 15usize, 51usize, 8usize, 10_000usize);
+    let smoke = bench_harness::smoke();
+    let q_pick = if smoke { 2_000usize } else { 10_000 };
+    let (c, k, s, d, q) = (15usize, 15usize, 51usize, 8usize, q_pick);
     let p = ConvParams::new(1, c, k, q + (s - 1) * d, s, d).unwrap();
     let x = rnd(p.c * p.w, 1);
     let wt = rnd(k * c * s, 2);
@@ -25,8 +27,9 @@ fn main() {
     println!("# width-block ablation at the AtacWorks shape ({p})");
     println!("{:>4} | {:>10} | {:>8} | note", "WB", "median", "GF/s");
     let mut best = (0usize, f64::INFINITY);
+    let reps = if smoke { 1 } else { 5 };
     for &wb in &[16usize, 32, 48, 64, 96, 128] {
-        let t = time_fn(1, 5, || {
+        let t = time_fn(1, reps, || {
             forward_single_wb(&p, &x, &skc, &mut out, wb);
             std::hint::black_box(&out);
         });

@@ -4,7 +4,7 @@
 //! (= filter width S). This is the §Perf working bench: the hot path all
 //! three passes stand on.
 
-use dilconv1d::bench_harness::time_auto;
+use dilconv1d::bench_harness::{self, time_auto};
 use dilconv1d::conv1d::bf16::to_bf16;
 use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32, brgemm_f32_with};
 use dilconv1d::conv1d::gemm::gemm_f32;
@@ -12,6 +12,9 @@ use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
 
 fn main() {
+    let smoke = bench_harness::smoke();
+    let budget = if smoke { 0.02 } else { 0.2 };
+    let min_reps = if smoke { 1 } else { 10 };
     println!("# small-GEMM micro-kernel: C[m,64] += A[m,k] B[k,64]");
     println!("{:>4} {:>4} | {:>9} | {:>8}", "m", "k", "time", "GF/s");
     for &(m, k) in &[(1usize, 1usize), (4, 4), (8, 8), (15, 15), (16, 16), (32, 32), (64, 64)] {
@@ -19,7 +22,7 @@ fn main() {
         let a = rnd(m * k, 1);
         let b = rnd(k * n, 2);
         let mut c = vec![0.0f32; m * n];
-        let t = time_auto(0.2, 10, || {
+        let t = time_auto(budget, min_reps, || {
             gemm_f32(&a, k, &b, n, &mut c, n, m, n, k);
             std::hint::black_box(&c);
         });
@@ -40,13 +43,13 @@ fn main() {
         let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
         let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
         let mut c = vec![0.0f32; m * n];
-        let t = time_auto(0.2, 10, || {
+        let t = time_auto(budget, min_reps, || {
             brgemm_f32(&a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, true);
             std::hint::black_box(&c);
         });
         // Serial-GEMM comparison (C re-loaded/stored l_br times).
         let mut c2 = vec![0.0f32; m * n];
-        let t2 = time_auto(0.2, 10, || {
+        let t2 = time_auto(budget, min_reps, || {
             c2.fill(0.0);
             for i in 0..lbr {
                 gemm_f32(&a[a_offs[i]..], k, &b[b_offs[i]..], n, &mut c2, n, m, n, k);
@@ -88,7 +91,7 @@ fn main() {
                 continue;
             }
             let mut c = vec![0.0f32; m * n];
-            let t = time_auto(0.2, 10, || {
+            let t = time_auto(budget, min_reps, || {
                 brgemm_f32_with(set, &a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, true);
                 std::hint::black_box(&c);
             });
@@ -97,7 +100,7 @@ fn main() {
                 scalar_gf = gf;
             }
             let mut cb = vec![0.0f32; m * n];
-            let tb = time_auto(0.2, 10, || {
+            let tb = time_auto(budget, min_reps, || {
                 brgemm_bf16_with(
                     set, &a16, &a_offs, k, &b16, &b_offs, n, &mut cb, n, m, n, k, true,
                 );

@@ -3,23 +3,30 @@
 //! paper's width/filter grid. The paper notes backward-weight is the
 //! least efficient kernel — the printed efficiency gap reproduces that.
 
-use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
+use dilconv1d::bench_harness::{self, run_point, Pass, SweepConfig};
 use dilconv1d::conv1d::Backend;
 use dilconv1d::machine::{calibrate_host, MachineSpec, Precision};
 
 fn main() {
+    let smoke = bench_harness::smoke();
     let quick = std::env::var("BENCH_FULL").is_err();
     let host = calibrate_host();
     println!("conv_backward: host ≈ {host:.2} GFLOP/s (1 core)");
     let cfg = SweepConfig {
         batch: 2,
-        reps: if quick { 2 } else { 5 },
+        reps: if smoke { 1 } else if quick { 2 } else { 5 },
         max_measured_q: if quick { 10_000 } else { 60_000 },
         host_gflops_peak: host,
         threads: 1,
     };
     let clx = MachineSpec::cascade_lake();
-    let widths: &[usize] = if quick { &[1_000, 5_000, 10_000] } else { &[1_000, 5_000, 20_000, 60_000] };
+    let widths: &[usize] = if smoke {
+        &[1_000]
+    } else if quick {
+        &[1_000, 5_000, 10_000]
+    } else {
+        &[1_000, 5_000, 20_000, 60_000]
+    };
     println!("{:>6} {:>3} | {:>12} {:>7} | {:>12} {:>7} | bwd-w/bwd-d ratio", "Q", "S", "bwd-data", "eff", "bwd-weight", "eff");
     for &s in &[5usize, 21, 51] {
         for &q in widths {

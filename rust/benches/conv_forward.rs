@@ -6,7 +6,7 @@
 //! Run: `cargo bench --bench conv_forward` (in `cargo bench` the binary
 //! runs with `--bench`, which we ignore).
 
-use dilconv1d::bench_harness::{run_point, run_point_tuned, time_fn, Pass, SweepConfig};
+use dilconv1d::bench_harness::{self, run_point, run_point_tuned, time_fn, Pass, SweepConfig};
 use dilconv1d::conv1d::forward::{forward, forward_a_offs, forward_with_scratch};
 use dilconv1d::conv1d::layout::kcs_to_skc;
 use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
@@ -15,12 +15,15 @@ use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, ExecCtx, Partition, PostO
 use dilconv1d::machine::{calibrate_host, project, MachineSpec, Precision, Strategy};
 
 fn main() {
+    // BENCH_SMOKE shrinks every shape/rep below "quick" (CI smoke job);
+    // BENCH_FULL expands to the paper grid.
+    let smoke = bench_harness::smoke();
     let quick = std::env::var("BENCH_FULL").is_err();
     let host = calibrate_host();
-    println!("conv_forward: host ≈ {host:.2} GFLOP/s (1 core); quick={quick}");
+    println!("conv_forward: host ≈ {host:.2} GFLOP/s (1 core); quick={quick} smoke={smoke}");
     let cfg = SweepConfig {
         batch: 2,
-        reps: if quick { 2 } else { 5 },
+        reps: if smoke { 1 } else if quick { 2 } else { 5 },
         max_measured_q: if quick { 10_000 } else { 60_000 },
         host_gflops_peak: host,
         threads: 1,
@@ -31,7 +34,13 @@ fn main() {
     // Fig. 4 series: C=15 K=15 d=8.
     println!("\n# Fig. 4 series (C=15 K=15 d=8, FP32)");
     println!("{:>6} {:>3} | {:>10} {:>8} {:>6} | modeled CLX eff", "Q", "S", "median", "GF/s", "eff");
-    let widths: &[usize] = if quick { &[1_000, 5_000, 10_000] } else { &[1_000, 2_000, 5_000, 10_000, 20_000, 60_000] };
+    let widths: &[usize] = if smoke {
+        &[1_000]
+    } else if quick {
+        &[1_000, 5_000, 10_000]
+    } else {
+        &[1_000, 2_000, 5_000, 10_000, 20_000, 60_000]
+    };
     for &s in &[5usize, 21, 51] {
         for &q in widths {
             let r = run_point(&cfg, 15, 15, q, s, 8, Pass::Forward, Backend::Brgemm, Precision::F32, &clx);
@@ -76,12 +85,13 @@ fn main() {
     // W=60 000): the eager path re-derives the offset tables and allocates
     // the output on every call (the pre-plan Conv1dLayer::forward shape);
     // the plan executes into preallocated buffers with zero allocations.
-    println!("\n# planned vs eager (AtacWorks layer: C=15 K=15 S=51 d=8 W=60000)");
-    let (n, c, k, s, d, w) = (1usize, 15usize, 15usize, 51usize, 8usize, 60_000usize);
+    let big_w = if smoke { 6_000usize } else { 60_000 };
+    println!("\n# planned vs eager (AtacWorks layer: C=15 K=15 S=51 d=8 W={big_w})");
+    let (n, c, k, s, d, w) = (1usize, 15usize, 15usize, 51usize, 8usize, big_w);
     let p = ConvParams::new(n, c, k, w, s, d).unwrap();
     let wt = rnd(k * c * s, 0xE1);
     let x = rnd(n * c * w, 0xE2);
-    let reps = if quick { 3 } else { 7 };
+    let reps = if smoke { 1 } else if quick { 3 } else { 7 };
     let skc = kcs_to_skc(&wt, k, c, s);
     let t_eager = time_fn(1, reps, || {
         let mut out = vec![0.0f32; n * k * p.q()];
@@ -110,7 +120,7 @@ fn main() {
             t_plan.min_secs, t_eager.min_secs
         );
     }
-    if std::env::var("BENCH_STRICT").is_ok() {
+    if bench_harness::strict() {
         assert!(
             !regressed,
             "planned path must not be slower than eager: {} vs {}",
@@ -165,7 +175,7 @@ fn main() {
             t_fused.min_secs, t_unfused.min_secs
         );
     }
-    if std::env::var("BENCH_STRICT").is_ok() {
+    if bench_harness::strict() {
         assert!(
             !fused_regressed,
             "fused must be <= unfused on the AtacWorks shape: {} vs {}",
@@ -175,9 +185,10 @@ fn main() {
 
     // Autotuned point: the harness routes kernel selection through the
     // shape-keyed autotuner (first call measures, later calls memoize).
-    let (t_tuned, tuned_kernel) = run_point_tuned(&cfg, 15, 15, 10_000, 51, 8, PostOps::bias_relu());
+    let tuned_q = if smoke { 2_000 } else { 10_000 };
+    let (t_tuned, tuned_kernel) = run_point_tuned(&cfg, 15, 15, tuned_q, 51, 8, PostOps::bias_relu());
     println!(
-        "autotuned kernel for C=15 K=15 Q=10000 S=51 d=8: {} ({:.2} ms fused fwd)",
+        "autotuned kernel for C=15 K=15 Q={tuned_q} S=51 d=8: {} ({:.2} ms fused fwd)",
         tuned_kernel,
         t_tuned.median_secs * 1e3
     );
@@ -185,12 +196,13 @@ fn main() {
     // Per-ISA kernel rows (acceptance: dispatched ≥ 1.5× scalar-forced on
     // AVX2 hosts): the same forward driven through each available
     // micro-kernel set, with host + modeled CLX roofline efficiency.
-    println!("\n# per-ISA forward (AtacWorks shape N=2 C=15 K=15 S=51 d=8, Q=10000)");
+    let isa_q = if smoke { 2_000 } else { 10_000 };
+    println!("\n# per-ISA forward (AtacWorks shape N=2 C=15 K=15 S=51 d=8, Q={isa_q})");
     println!(
         "{:>8} | {:>9} | {:>8} | {:>8} | {:>8}",
         "isa", "median", "GF/s", "host eff", "CLX eff"
     );
-    let pa = ConvParams::new(2, 15, 15, 10_000 + 50 * 8, 51, 8).unwrap();
+    let pa = ConvParams::new(2, 15, 15, isa_q + 50 * 8, 51, 8).unwrap();
     let wa = rnd(pa.k * pa.c * pa.s, 0xA1);
     let xa = rnd(pa.n * pa.c * pa.w, 0xA2);
     let ska = kcs_to_skc(&wa, pa.k, pa.c, pa.s);
@@ -243,7 +255,7 @@ fn main() {
         "dispatched ISA: {} ({dispatch_speedup:.2}x the scalar-forced kernel)",
         active().isa()
     );
-    if std::env::var("BENCH_STRICT").is_ok() && active().isa() != Isa::Scalar {
+    if bench_harness::strict() && active().isa() != Isa::Scalar {
         assert!(
             dispatch_speedup >= 1.5,
             "dispatched kernel must be >= 1.5x scalar on the AtacWorks shape, got {dispatch_speedup:.2}x"
@@ -254,7 +266,8 @@ fn main() {
     // 8 threads, Q >= 8192): with one image the batch split degenerates
     // to a single worker; the 2D width-block grid uses all of them.
     let threads = 8usize;
-    let pg = ConvParams::new(1, 15, 15, 16_384 + 50 * 8, 51, 8).unwrap();
+    let grid_q = if smoke { 4_096 } else { 16_384 };
+    let pg = ConvParams::new(1, 15, 15, grid_q + 50 * 8, 51, 8).unwrap();
     let wg = rnd(pg.k * pg.c * pg.s, 0xB1);
     let xg = rnd(pg.n * pg.c * pg.w, 0xB2);
     let mut out_g = vec![0.0f32; pg.n * pg.k * pg.q()];
@@ -273,13 +286,13 @@ fn main() {
     });
     let grid_speedup = t_batch.median_secs / t_grid.median_secs;
     println!(
-        "\n# partition at N=1 (C=15 K=15 S=51 d=8, Q=16384, {threads} threads)\n\
+        "\n# partition at N=1 (C=15 K=15 S=51 d=8, Q={grid_q}, {threads} threads)\n\
          batch {:>8.2} ms   grid {:>8.2} ms   grid speedup {grid_speedup:.2}x",
         t_batch.median_secs * 1e3,
         t_grid.median_secs * 1e3,
     );
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
-    if std::env::var("BENCH_STRICT").is_ok() && cores >= threads {
+    if bench_harness::strict() && cores >= threads {
         assert!(
             grid_speedup >= 2.0,
             "grid partitioning must be >= 2x batch at N=1 with {threads} threads, \

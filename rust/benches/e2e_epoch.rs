@@ -5,6 +5,7 @@
 //! grid (DESIGN.md §6): {f32, bf16} × {monolithic, bucketed+overlapped
 //! all-reduce} at 4 in-process sockets, written to `BENCH_e2e_epoch.json`.
 
+use dilconv1d::bench_harness;
 use dilconv1d::config::TrainConfig;
 use dilconv1d::conv1d::Backend;
 use dilconv1d::coordinator::{experiment, EpochReport, Trainer};
@@ -18,11 +19,16 @@ use dilconv1d::machine::{MachineSpec, Precision, Strategy};
 /// monolithic-vs-overlap comparison out of scheduler noise.
 fn run_case(precision: Precision, overlap: bool, sockets: usize) -> EpochReport {
     let mut best: Option<EpochReport> = None;
-    for _ in 0..3 {
+    let (reps, width, segments) = if bench_harness::smoke() {
+        (1, 400, 8)
+    } else {
+        (3, 1_000, 16)
+    };
+    for _ in 0..reps {
         let cfg = TrainConfig {
-            segment_width: 1_000,
-            segment_pad: 100,
-            train_segments: 16,
+            segment_width: width,
+            segment_pad: width / 10,
+            train_segments: segments,
             batch_size: 4,
             epochs: 1,
             sockets,
@@ -47,16 +53,19 @@ fn run_case(precision: Precision, overlap: bool, sockets: usize) -> EpochReport 
 }
 
 fn main() {
-    println!("# measured: one epoch of the 25-layer network (scaled: W=1000, 16 segments)");
+    let (width, segments) = if bench_harness::smoke() { (400, 8) } else { (1_000, 16) };
+    println!(
+        "# measured: one epoch of the 25-layer network (scaled: W={width}, {segments} segments)"
+    );
     let mut measured = Vec::new();
     for (label, backend) in [
         ("BRGEMM (ours)", Backend::Brgemm),
         ("im2col (oneDNN-analog)", Backend::Im2col),
     ] {
         let cfg = TrainConfig {
-            segment_width: 1_000,
-            segment_pad: 100,
-            train_segments: 16,
+            segment_width: width,
+            segment_pad: width / 10,
+            train_segments: segments,
             batch_size: 4,
             epochs: 1,
             backend,
@@ -134,7 +143,7 @@ fn main() {
                 over.3, mono.3
             );
         }
-        if std::env::var("BENCH_STRICT").is_ok() {
+        if bench_harness::strict() {
             assert!(
                 !regressed,
                 "{pname}: bucketed+overlap must beat monolithic at {sockets} sockets: {} vs {}",

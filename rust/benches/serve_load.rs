@@ -1,0 +1,165 @@
+//! BENCH — batched inference serving under open-loop load (DESIGN.md
+//! §7): dynamic batching (max_batch = 8) vs batch-size-1 serving over a
+//! mix of request widths, reporting p50/p99 end-to-end latency and
+//! sustained seq/s per mode, plus per-bucket fill. Rows are written to
+//! `BENCH_serve.json`.
+//!
+//! Under `BENCH_STRICT` (and ≥ 8 available cores), dynamic batching
+//! must sustain ≥ 2× the seq/s of batch-size-1 serving at 8 kernel
+//! threads: a batch of 8 shards its 8 images across the threads, while
+//! a batch of 1 under the same (batch-partitioned) engine keeps one.
+//! `BENCH_SMOKE=1` shrinks widths/requests and skips the assertion.
+
+use dilconv1d::bench_harness;
+use dilconv1d::config::ServeConfig;
+use dilconv1d::model::AtacWorksNet;
+use dilconv1d::serve::{run_open_loop, BucketSet, LoadReport, Server, WidthMix};
+
+struct Case {
+    label: &'static str,
+    max_batch: usize,
+    report: LoadReport,
+    occupancy: f64,
+}
+
+fn run_case(
+    label: &'static str,
+    cfg: &ServeConfig,
+    params: &[f32],
+    max_batch: usize,
+    mix: &WidthMix,
+    rate: f64,
+    requests: usize,
+) -> Case {
+    let mut cfg = cfg.clone();
+    cfg.max_batch = max_batch;
+    let server = Server::start(cfg.net_config(), params, cfg.batcher_opts())
+        .expect("server start");
+    let report = run_open_loop(&server, mix, rate, requests, 42);
+    let metrics = server.shutdown();
+    println!(
+        "{label:<22} completed {:>4}/{:<4} rejected {:>3}  {:>7.1} seq/s  \
+         p50 {:>7.2} ms  p99 {:>7.2} ms  fill {:.2}/{}",
+        report.completed,
+        report.offered,
+        report.rejected,
+        report.seq_per_sec(),
+        report.latency.p50() * 1e3,
+        report.latency.p99() * 1e3,
+        metrics.mean_batch_occupancy(),
+        max_batch,
+    );
+    Case {
+        label,
+        max_batch,
+        occupancy: metrics.mean_batch_occupancy(),
+        report,
+    }
+}
+
+fn main() {
+    let smoke = bench_harness::smoke();
+    let threads = 8usize;
+    // Width mix: genomics-style heterogeneous tracks over three buckets.
+    let (buckets, requests, rate) = if smoke {
+        (vec![128usize, 256, 384], 24usize, 400.0)
+    } else {
+        (vec![1024usize, 2048, 4096], 192usize, 2_000.0)
+    };
+    let bucket_set = BucketSet::new(&buckets).expect("buckets");
+    // Exact-fit + partial-fill width per bucket, same derivation as
+    // `dilconv serve`.
+    let mix = WidthMix::bucket_mix(&bucket_set).expect("width mix");
+    let widths = mix.widths();
+
+    let mut cfg = ServeConfig {
+        buckets: bucket_set,
+        threads,
+        workers: 1,
+        queue_depth: requests, // open loop: admit the whole schedule
+        window_ms: 2.0,
+        cache_capacity: buckets.len(),
+        ..ServeConfig::default()
+    };
+    if smoke {
+        // Tiny model so the smoke run finishes in seconds.
+        cfg.channels = 4;
+        cfg.n_blocks = 1;
+        cfg.filter_size = 9;
+        cfg.dilation = 2;
+    }
+    cfg.validate().expect("bench serve config");
+    let params = AtacWorksNet::init(cfg.net_config(), cfg.seed).pack_params();
+
+    println!(
+        "# serve_load: open-loop Poisson arrivals at {rate}/s, {requests} requests, \
+         widths {widths:?}, {threads} threads, window {} ms{}",
+        cfg.window_ms,
+        if smoke { " [SMOKE]" } else { "" },
+    );
+    // The offered rate is far above single-thread capacity, so both
+    // modes saturate and seq/s measures each mode's throughput ceiling.
+    let batched = run_case("dynamic batching (8)", &cfg, &params, 8, &mix, rate, requests);
+    let single = run_case("batch-size-1 serving", &cfg, &params, 1, &mix, rate, requests);
+
+    let speedup = batched.report.seq_per_sec() / single.report.seq_per_sec().max(1e-9);
+    println!(
+        "dynamic batching vs batch-size-1: {speedup:.2}x seq/s at {threads} threads \
+         (mean fill {:.2}/8)",
+        batched.occupancy
+    );
+    let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+    if speedup < 2.0 {
+        eprintln!(
+            "WARN: dynamic batching below the 2x floor ({speedup:.2}x) — \
+             expected on hosts with < {threads} cores (this one: {cores})"
+        );
+    }
+    if bench_harness::strict() && cores >= threads {
+        assert!(
+            speedup >= 2.0,
+            "dynamic batching must sustain >= 2x batch-size-1 seq/s at {threads} threads, \
+             got {speedup:.2}x"
+        );
+    }
+
+    // Bench trajectory rows (BENCH_*.json at the repo root).
+    let mut json = format!(
+        "{{\n  \"bench\": \"serve_load\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \
+         \"rate_per_sec\": {rate},\n  \"requests\": {requests},\n  \
+         \"buckets\": \"{}\",\n  \"speedup_batched_vs_single\": {speedup:.4},\n  \"rows\": [\n",
+        cfg.buckets,
+    );
+    let cases = [&batched, &single];
+    for (i, c) in cases.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"max_batch\": {}, \"completed\": {}, \"rejected\": {}, \
+             \"wall_secs\": {:.4}, \"seq_per_sec\": {:.2}, \"p50_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"mean_ms\": {:.3}, \"mean_batch_fill\": {:.3}}}{}\n",
+            c.label,
+            c.max_batch,
+            c.report.completed,
+            c.report.rejected,
+            c.report.wall_secs,
+            c.report.seq_per_sec(),
+            c.report.latency.p50() * 1e3,
+            c.report.latency.p99() * 1e3,
+            c.report.latency.mean() * 1e3,
+            c.occupancy,
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    // Benches run from rust/; place the trajectory file at the repo root
+    // when it is visible, else in the working directory.
+    let out_path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_serve.json"
+    } else {
+        "BENCH_serve.json"
+    };
+    match std::fs::write(out_path, &json) {
+        Ok(()) => println!("bench rows written to {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
+    }
+    println!("serve_load bench done");
+}

@@ -1,7 +1,18 @@
 //! Benchmark harness: timing runner ([`runner`]), paper-grid sweeps
 //! ([`sweep`]) and report emitters ([`tables`]). Each bench binary in
 //! `rust/benches/` and the `dilconv sweep`/`bench` subcommands build on
-//! these to regenerate the paper's tables and figures (DESIGN.md §7).
+//! these to regenerate the paper's tables and figures (DESIGN.md §8).
+//!
+//! Two environment hooks govern every bench binary:
+//!
+//! * `BENCH_SMOKE=1` — **fast mode**: shrink shapes and repetition
+//!   counts to whatever finishes in seconds, and *never* hard-fail on
+//!   performance. This is what CI's `bench-smoke` job runs on shared
+//!   runners, where absolute timings are meaningless but the benches
+//!   must still execute end-to-end and emit their `BENCH_*.json` rows.
+//! * `BENCH_STRICT=1` — turn the printed perf expectations (speedup
+//!   floors, overlap wins) into assertions. Only meaningful on a quiet
+//!   dedicated host; ignored whenever `BENCH_SMOKE` is set.
 
 pub mod runner;
 pub mod sweep;
@@ -9,3 +20,16 @@ pub mod tables;
 
 pub use runner::{time_auto, time_fn, Timing};
 pub use sweep::{run_grid, run_point, run_point_tuned, Pass, SweepConfig, SweepRow};
+
+/// True when `BENCH_SMOKE` is set: benches run tiny shapes with minimal
+/// reps and skip every perf assertion (CI smoke mode).
+pub fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// True when perf expectations should hard-fail: `BENCH_STRICT` is set
+/// and smoke mode is not (a shared smoke runner must never fail on
+/// timing noise, whatever else is exported in its environment).
+pub fn strict() -> bool {
+    std::env::var_os("BENCH_STRICT").is_some() && !smoke()
+}

@@ -1,13 +1,78 @@
 //! Configuration system: a TOML-subset reader ([`toml`]) plus the typed
-//! experiment/training configuration used by the launcher and coordinator.
+//! experiment/training ([`TrainConfig`]) and serving ([`ServeConfig`])
+//! configurations used by the launcher, coordinator and serve CLI.
 
 pub mod toml;
 
 use crate::conv1d::{Backend, Partition, PostOps};
 use crate::machine::Precision;
+use crate::model::NetConfig;
+use crate::serve::{BatcherOpts, BucketSet, EngineOpts};
 
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
+use std::time::Duration;
+
+/// Shared `precision` vocabulary of the `[train]`/`[serve]` sections and
+/// the `--precision` flags.
+fn parse_precision(s: &str) -> Result<Precision> {
+    match s.to_ascii_lowercase().as_str() {
+        "f32" | "fp32" => Ok(Precision::F32),
+        "bf16" | "bfloat16" => Ok(Precision::Bf16),
+        other => Err(anyhow!("unknown precision '{other}' (f32|bf16)")),
+    }
+}
+
+/// Shared `backend` vocabulary: resolve a registry kernel name (any
+/// [`crate::conv1d::lookup_kernel`] alias) to the `(Backend, Precision)`
+/// pair it implies — `"bf16"` means the BRGEMM backend at bf16, every
+/// other kernel pins f32. One resolver, so `train` and `serve` can
+/// never drift on what a backend name selects.
+fn resolve_backend_name(name: &str) -> Result<(Backend, Precision), String> {
+    let kernel = crate::conv1d::lookup_kernel(name)
+        .ok_or_else(|| format!("unknown backend '{name}'"))?;
+    Ok(match kernel.name() {
+        "bf16" => (Backend::Brgemm, Precision::Bf16),
+        canonical => (canonical.parse::<Backend>()?, Precision::F32),
+    })
+}
+
+/// Strict CLI boolean vocabulary: bad values fail loudly, matching the
+/// TOML path's typed `get_bool` (a typo must never silently mean false).
+fn parse_bool_flag(key: &str, value: &str) -> Result<bool> {
+    match value.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => Err(anyhow!("--{key} expects true|false, got '{other}'")),
+    }
+}
+
+/// Override `dst` with `[section] key` when present — the one usize
+/// reader every config loader goes through.
+fn set_usize(doc: &toml::Doc, sec: &str, key: &str, dst: &mut usize) {
+    if let Some(v) = toml::get_usize(doc, sec, key) {
+        *dst = v;
+    }
+}
+
+/// Apply the `[model]`/`[data]` keys both loaders share — one parser, so
+/// `train` and `serve` can never read the same TOML differently.
+fn apply_model_data_keys(
+    doc: &toml::Doc,
+    channels: &mut usize,
+    n_blocks: &mut usize,
+    filter_size: &mut usize,
+    dilation: &mut usize,
+    seed: &mut u64,
+) {
+    set_usize(doc, "model", "channels", channels);
+    set_usize(doc, "model", "n_blocks", n_blocks);
+    set_usize(doc, "model", "filter_size", filter_size);
+    set_usize(doc, "model", "dilation", dilation);
+    if let Some(v) = toml::get_usize(doc, "data", "seed") {
+        *seed = v as u64;
+    }
+}
 
 /// Full training-run configuration (CLI defaults ≈ a width-scaled version
 /// of the paper's Sec. 4.2 setup that runs in seconds on this host).
@@ -109,25 +174,21 @@ impl TrainConfig {
             .with_context(|| format!("reading config {:?}", path.as_ref()))?;
         let doc = toml::parse(&text).map_err(|e| anyhow!("config parse error: {e}"))?;
         let mut cfg = TrainConfig::default();
-        let u = |doc: &toml::Doc, sec: &str, key: &str, dst: &mut usize| {
-            if let Some(v) = toml::get_usize(doc, sec, key) {
-                *dst = v;
-            }
-        };
-        u(&doc, "model", "channels", &mut cfg.channels);
-        u(&doc, "model", "n_blocks", &mut cfg.n_blocks);
-        u(&doc, "model", "filter_size", &mut cfg.filter_size);
-        u(&doc, "model", "dilation", &mut cfg.dilation);
-        u(&doc, "data", "segment_width", &mut cfg.segment_width);
-        u(&doc, "data", "segment_pad", &mut cfg.segment_pad);
-        u(&doc, "data", "train_segments", &mut cfg.train_segments);
-        u(&doc, "train", "batch_size", &mut cfg.batch_size);
-        u(&doc, "train", "epochs", &mut cfg.epochs);
-        u(&doc, "topology", "sockets", &mut cfg.sockets);
-        u(&doc, "topology", "threads_per_socket", &mut cfg.threads_per_socket);
-        if let Some(v) = toml::get_usize(&doc, "data", "seed") {
-            cfg.seed = v as u64;
-        }
+        apply_model_data_keys(
+            &doc,
+            &mut cfg.channels,
+            &mut cfg.n_blocks,
+            &mut cfg.filter_size,
+            &mut cfg.dilation,
+            &mut cfg.seed,
+        );
+        set_usize(&doc, "data", "segment_width", &mut cfg.segment_width);
+        set_usize(&doc, "data", "segment_pad", &mut cfg.segment_pad);
+        set_usize(&doc, "data", "train_segments", &mut cfg.train_segments);
+        set_usize(&doc, "train", "batch_size", &mut cfg.batch_size);
+        set_usize(&doc, "train", "epochs", &mut cfg.epochs);
+        set_usize(&doc, "topology", "sockets", &mut cfg.sockets);
+        set_usize(&doc, "topology", "threads_per_socket", &mut cfg.threads_per_socket);
         if let Some(v) = toml::get_f64(&doc, "train", "lr") {
             cfg.lr = v;
         }
@@ -138,11 +199,7 @@ impl TrainConfig {
             cfg.apply_backend_name(s).map_err(|e| anyhow!(e))?;
         }
         if let Some(s) = toml::get_str(&doc, "train", "precision") {
-            cfg.precision = match s.to_ascii_lowercase().as_str() {
-                "f32" | "fp32" => Precision::F32,
-                "bf16" | "bfloat16" => Precision::Bf16,
-                other => return Err(anyhow!("unknown precision '{other}'")),
-            };
+            cfg.precision = parse_precision(s)?;
         }
         if let Some(s) = toml::get_str(&doc, "train", "post_ops") {
             cfg.post_ops = PostOps::parse(s).map_err(|e| anyhow!(e))?;
@@ -175,18 +232,7 @@ impl TrainConfig {
     /// `Precision::Bf16`, every other name means f32 — a later
     /// `precision` setting can still override.
     pub fn apply_backend_name(&mut self, name: &str) -> Result<(), String> {
-        let kernel = crate::conv1d::lookup_kernel(name)
-            .ok_or_else(|| format!("unknown backend '{name}'"))?;
-        match kernel.name() {
-            "bf16" => {
-                self.backend = Backend::Brgemm;
-                self.precision = Precision::Bf16;
-            }
-            canonical => {
-                self.backend = canonical.parse()?;
-                self.precision = Precision::F32;
-            }
-        }
+        (self.backend, self.precision) = resolve_backend_name(name)?;
         Ok(())
     }
 
@@ -198,6 +244,227 @@ impl TrainConfig {
     /// The gradient bucket budget in bytes (f32 elements × 4).
     pub fn bucket_bytes(&self) -> usize {
         (self.bucket_mb * 1024.0 * 1024.0).max(4.0) as usize
+    }
+}
+
+/// Configuration of the batched inference server (`[serve]` section +
+/// `dilconv serve` flags; DESIGN.md §7). The `[model]`/`[data]` keys are
+/// shared with [`TrainConfig`], so one TOML file describes both the
+/// training run and the server that loads its checkpoint.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    // Model geometry (must match the checkpoint being served).
+    pub channels: usize,
+    pub n_blocks: usize,
+    pub filter_size: usize,
+    pub dilation: usize,
+    /// Weight-init seed when serving without a checkpoint (demos/tests).
+    pub seed: u64,
+    // Serving policy.
+    /// Width buckets (`buckets = "1024,2048,4096"`), each rounded up to
+    /// the kernels' 64-wide block grid.
+    pub buckets: BucketSet,
+    /// Batch capacity each bucket's plans are pinned at.
+    pub max_batch: usize,
+    /// Batching window in milliseconds (must be positive): a non-full
+    /// batch is flushed once its oldest request has waited this long.
+    pub window_ms: f64,
+    /// Admission budget: maximum requests queued or executing at once.
+    pub queue_depth: usize,
+    /// Worker threads, each owning a private engine + warmed plan cache.
+    pub workers: usize,
+    /// Kernel-level threads per forward pass.
+    pub threads: usize,
+    /// Forward precision (`bf16` serves bf16-rounded weights on the bf16
+    /// kernels — the working copy training replicas compute with).
+    pub precision: Precision,
+    /// Work partitioning (`grid` keeps every thread busy even when a
+    /// window closes with one request).
+    pub partition: Partition,
+    /// Kernel backend (ignored when `autotune` is set).
+    pub backend: Backend,
+    /// Choose each layer's kernel per bucket via the autotuner.
+    pub autotune: bool,
+    /// Maximum resident bucket entries per worker (LRU beyond this).
+    pub cache_capacity: usize,
+    /// Pre-build every bucket's plans before accepting traffic.
+    pub warm: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let t = TrainConfig::default();
+        ServeConfig {
+            channels: t.channels,
+            n_blocks: t.n_blocks,
+            filter_size: t.filter_size,
+            dilation: t.dilation,
+            seed: t.seed,
+            buckets: BucketSet::new(&[1024, 2048, 4096]).expect("static widths"),
+            max_batch: 8,
+            window_ms: 2.0,
+            queue_depth: 256,
+            workers: 1,
+            threads: 1,
+            precision: Precision::F32,
+            partition: Partition::Batch,
+            backend: Backend::Brgemm,
+            autotune: false,
+            cache_capacity: 8,
+            warm: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a TOML file: `[model]`/`[data]` keys shared with
+    /// [`TrainConfig`], serving keys under `[serve]`. Starts from
+    /// `Default` and overrides any key present; invalid values fail
+    /// loudly (see [`Self::validate`]).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let mut cfg = ServeConfig::default();
+        apply_model_data_keys(
+            &doc,
+            &mut cfg.channels,
+            &mut cfg.n_blocks,
+            &mut cfg.filter_size,
+            &mut cfg.dilation,
+            &mut cfg.seed,
+        );
+        set_usize(&doc, "serve", "max_batch", &mut cfg.max_batch);
+        set_usize(&doc, "serve", "queue_depth", &mut cfg.queue_depth);
+        set_usize(&doc, "serve", "workers", &mut cfg.workers);
+        set_usize(&doc, "serve", "threads", &mut cfg.threads);
+        set_usize(&doc, "serve", "cache_capacity", &mut cfg.cache_capacity);
+        if let Some(s) = toml::get_str(&doc, "serve", "buckets") {
+            cfg.buckets = BucketSet::parse(s).map_err(|e| anyhow!(e))?;
+        }
+        if let Some(v) = toml::get_f64(&doc, "serve", "window_ms") {
+            cfg.window_ms = v;
+        }
+        if let Some(s) = toml::get_str(&doc, "serve", "backend") {
+            cfg.apply_backend_name(s)?;
+        }
+        if let Some(s) = toml::get_str(&doc, "serve", "precision") {
+            cfg.precision = parse_precision(s)?;
+        }
+        if let Some(s) = toml::get_str(&doc, "serve", "partition") {
+            cfg.partition = s.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        if let Some(b) = toml::get_bool(&doc, "serve", "autotune") {
+            cfg.autotune = b;
+        }
+        if let Some(b) = toml::get_bool(&doc, "serve", "warm") {
+            cfg.warm = b;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply one `--key value` CLI flag (the `dilconv serve` vocabulary).
+    /// Returns `Ok(false)` for keys this config does not own, so the CLI
+    /// can report unknown flags.
+    pub fn apply_flag(&mut self, key: &str, value: &str) -> Result<bool> {
+        let uint = |v: &str, k: &str| -> Result<usize> {
+            v.parse()
+                .with_context(|| format!("--{k} must be an integer, got '{v}'"))
+        };
+        match key {
+            "buckets" => self.buckets = BucketSet::parse(value).map_err(|e| anyhow!(e))?,
+            "max-batch" => self.max_batch = uint(value, key)?,
+            "window-ms" => {
+                self.window_ms = value
+                    .parse()
+                    .with_context(|| format!("--window-ms must be a number, got '{value}'"))?
+            }
+            "queue" => self.queue_depth = uint(value, key)?,
+            "workers" => self.workers = uint(value, key)?,
+            "threads" => self.threads = uint(value, key)?,
+            "cache-capacity" => self.cache_capacity = uint(value, key)?,
+            "precision" => self.precision = parse_precision(value)?,
+            "partition" => self.partition = value.parse().map_err(|e: String| anyhow!(e))?,
+            "backend" => self.apply_backend_name(value)?,
+            "autotune" => self.autotune = parse_bool_flag(key, value)?,
+            "no-warm" => self.warm = !parse_bool_flag(key, value)?,
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    /// Select the serve backend by registry name — the same shared
+    /// resolver as [`TrainConfig::apply_backend_name`], so `train` and
+    /// `serve` can never drift on what a backend name selects (`"bf16"`
+    /// pins the BRGEMM backend at bf16 precision).
+    pub fn apply_backend_name(&mut self, name: &str) -> Result<()> {
+        (self.backend, self.precision) = resolve_backend_name(name).map_err(|e| anyhow!(e))?;
+        Ok(())
+    }
+
+    /// Reject configurations the server cannot run: a zero batching
+    /// window (a window is what amortizes batches; "no batching" is
+    /// `max_batch = 1`), zero batch/queue/worker/cache sizes. The bucket
+    /// set enforces its own non-emptiness at construction.
+    pub fn validate(&self) -> Result<()> {
+        if self.window_ms.is_nan() || self.window_ms <= 0.0 {
+            return Err(anyhow!(
+                "serve.window_ms must be positive, got {} (for unbatched serving set max_batch = 1)",
+                self.window_ms
+            ));
+        }
+        if self.max_batch == 0 {
+            return Err(anyhow!("serve.max_batch must be at least 1"));
+        }
+        if self.queue_depth == 0 {
+            return Err(anyhow!("serve.queue_depth must be at least 1"));
+        }
+        if self.workers == 0 {
+            return Err(anyhow!("serve.workers must be at least 1"));
+        }
+        if self.threads == 0 {
+            return Err(anyhow!("serve.threads must be at least 1"));
+        }
+        if self.cache_capacity == 0 {
+            return Err(anyhow!("serve.cache_capacity must be at least 1"));
+        }
+        Ok(())
+    }
+
+    /// The model geometry this server executes.
+    pub fn net_config(&self) -> NetConfig {
+        NetConfig {
+            channels: self.channels,
+            n_blocks: self.n_blocks,
+            filter_size: self.filter_size,
+            dilation: self.dilation,
+        }
+    }
+
+    /// The per-worker engine slice of this config.
+    pub fn engine_opts(&self) -> EngineOpts {
+        EngineOpts {
+            buckets: self.buckets.clone(),
+            max_batch: self.max_batch,
+            threads: self.threads,
+            precision: self.precision,
+            partition: self.partition,
+            backend: self.backend,
+            autotune: self.autotune,
+            cache_capacity: self.cache_capacity,
+        }
+    }
+
+    /// The full batcher options of this config.
+    pub fn batcher_opts(&self) -> BatcherOpts {
+        BatcherOpts {
+            engine: self.engine_opts(),
+            window: Duration::from_secs_f64(self.window_ms / 1e3),
+            queue_depth: self.queue_depth,
+            workers: self.workers,
+            warm: self.warm,
+        }
     }
 }
 
@@ -319,6 +586,132 @@ tune_cache = "tune.json"
         // Non-positive budgets fail loudly.
         std::fs::write(&p, "[train]\nbucket_mb = 0\n").unwrap();
         assert!(TrainConfig::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn serve_section_round_trips() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_serve1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(
+            &p,
+            r#"
+[model]
+channels = 8
+n_blocks = 2
+[serve]
+buckets = "500,2048"
+max_batch = 16
+window_ms = 5.5
+queue_depth = 32
+workers = 2
+threads = 4
+precision = "bf16"
+partition = "grid"
+autotune = true
+cache_capacity = 3
+warm = false
+"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_file(&p).unwrap();
+        assert_eq!(c.channels, 8);
+        assert_eq!(c.n_blocks, 2);
+        // 500 rounds up onto the 64-wide block grid.
+        assert_eq!(c.buckets.widths(), &[512, 2048]);
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.window_ms, 5.5);
+        assert_eq!(c.queue_depth, 32);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.precision, Precision::Bf16);
+        assert_eq!(c.partition, Partition::Grid);
+        assert!(c.autotune);
+        assert_eq!(c.cache_capacity, 3);
+        assert!(!c.warm);
+        // Untouched keys keep defaults.
+        assert_eq!(c.filter_size, 51);
+        assert_eq!(c.backend, Backend::Brgemm);
+        // The derived option structs mirror the config.
+        let b = c.batcher_opts();
+        assert_eq!(b.engine.max_batch, 16);
+        assert_eq!(b.engine.buckets, c.buckets);
+        assert_eq!(b.window, Duration::from_secs_f64(0.0055));
+        assert_eq!(b.queue_depth, 32);
+        assert_eq!(b.workers, 2);
+        assert!(!b.warm);
+        assert_eq!(c.net_config().channels, 8);
+    }
+
+    #[test]
+    fn serve_flags_round_trip() {
+        let mut c = ServeConfig::default();
+        for (k, v) in [
+            ("buckets", "128,256"),
+            ("max-batch", "4"),
+            ("window-ms", "1.5"),
+            ("queue", "10"),
+            ("workers", "3"),
+            ("threads", "2"),
+            ("cache-capacity", "2"),
+            ("precision", "bf16"),
+            ("partition", "grid"),
+            ("autotune", "true"),
+            ("no-warm", "true"),
+        ] {
+            assert!(c.apply_flag(k, v).unwrap(), "--{k} must be owned");
+        }
+        assert_eq!(c.buckets.widths(), &[128, 256]);
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.window_ms, 1.5);
+        assert_eq!(c.queue_depth, 10);
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.cache_capacity, 2);
+        assert_eq!(c.precision, Precision::Bf16);
+        assert_eq!(c.partition, Partition::Grid);
+        assert!(c.autotune && !c.warm);
+        c.validate().unwrap();
+        // Backend names resolve through the registry; "bf16" pins both.
+        c.apply_flag("backend", "onednn").unwrap();
+        assert_eq!((c.backend, c.precision), (Backend::Im2col, Precision::F32));
+        c.apply_flag("backend", "bf16").unwrap();
+        assert_eq!((c.backend, c.precision), (Backend::Brgemm, Precision::Bf16));
+        // Unknown keys are not owned; bad values fail loudly.
+        assert!(!c.apply_flag("epochs", "3").unwrap());
+        assert!(c.apply_flag("max-batch", "x").is_err());
+        assert!(c.apply_flag("buckets", "0").is_err());
+        assert!(c.apply_flag("backend", "cuda").is_err());
+        assert!(c.apply_flag("precision", "fp8").is_err());
+        // Booleans are strict: a typo must fail, not silently mean false.
+        assert!(c.apply_flag("autotune", "ture").is_err());
+        assert!(c.apply_flag("no-warm", "maybe").is_err());
+        c.apply_flag("autotune", "false").unwrap();
+        assert!(!c.autotune);
+    }
+
+    #[test]
+    fn serve_rejects_invalid_values() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_serve2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        // Zero batching window.
+        std::fs::write(&p, "[serve]\nwindow_ms = 0\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        std::fs::write(&p, "[serve]\nwindow_ms = -1.0\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        // Empty bucket set.
+        std::fs::write(&p, "[serve]\nbuckets = \"\"\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        std::fs::write(&p, "[serve]\nbuckets = \"1024,0\"\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        // Zero sizes.
+        for key in ["max_batch", "queue_depth", "workers", "threads", "cache_capacity"] {
+            std::fs::write(&p, format!("[serve]\n{key} = 0\n")).unwrap();
+            assert!(ServeConfig::from_file(&p).is_err(), "{key} = 0 must fail");
+        }
+        // A default config validates.
+        ServeConfig::default().validate().unwrap();
     }
 
     #[test]

@@ -139,6 +139,10 @@ pub struct Conv1dLayer {
     /// When set, the kernel is chosen per shape by the process-wide
     /// autotuner ([`crate::conv1d::autotuner`]) instead of `backend`.
     pub autotune: bool,
+    /// Forward-only layer: plans are built via
+    /// [`ConvPlan::with_inference`] (no backward scratch, backward calls
+    /// panic) — the serving path (DESIGN.md §7).
+    pub inference: bool,
     w_kcs: Vec<f32>,
     /// Per-filter bias (added by `forward_same` and the fused post-op
     /// pipeline, framework-style).
@@ -164,6 +168,7 @@ impl Clone for Conv1dLayer {
             partition: self.partition,
             post_ops: self.post_ops,
             autotune: self.autotune,
+            inference: self.inference,
             w_kcs: self.w_kcs.clone(),
             bias: self.bias.clone(),
             plan: Mutex::new(None), // the clone rebuilds its plan lazily
@@ -187,6 +192,7 @@ impl Conv1dLayer {
             partition: Partition::default(),
             post_ops: PostOps::none(),
             autotune: false,
+            inference: false,
             w_kcs,
             bias: vec![0.0; k],
             plan: Mutex::new(None),
@@ -267,6 +273,7 @@ impl Conv1dLayer {
             kernel_ok
                 && plan.post_ops() == &self.post_ops
                 && plan.partition() == self.partition
+                && plan.is_inference() == self.inference
         });
         if !reuse {
             let mut plan = if self.autotune {
@@ -274,6 +281,9 @@ impl Conv1dLayer {
             } else {
                 ConvPlan::new(*p, self.backend, precision, self.threads, self.w_kcs.clone())?
             };
+            if self.inference {
+                plan = plan.with_inference();
+            }
             plan.set_post_ops(self.post_ops);
             plan.set_partition(self.partition);
             *guard = Some((plan, self.autotune));
@@ -449,6 +459,25 @@ impl Conv1dLayer {
     /// Number of learnable parameters (weights + bias).
     pub fn param_count(&self) -> usize {
         self.w_kcs.len() + self.bias.len()
+    }
+
+    /// Eagerly build (warm) the cached plan for a padded `(n, w)` problem
+    /// without executing anything — the serving plan cache calls this at
+    /// startup so the first real request never pays plan construction or
+    /// autotuner probes.
+    pub fn try_warm(&self, n: usize, w: usize) -> Result<(), PlanError> {
+        let p = self.try_params(n, w)?;
+        self.with_plan(&p, |_| ())
+    }
+
+    /// Workspace bytes held by the currently-cached plan (0 when no plan
+    /// has been built yet) — the serving memory-accounting hook.
+    pub fn plan_workspace_bytes(&self) -> usize {
+        self.plan
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(0, |(plan, _)| plan.workspace_bytes())
     }
 }
 
@@ -666,6 +695,37 @@ mod tests {
         let gd = l.backward_data(&gout, n, w);
         l.partition = Partition::Grid;
         assert_eq!(l.backward_data(&gout, n, w), gd);
+    }
+
+    #[test]
+    fn warm_builds_the_plan_and_inference_mode_round_trips() {
+        let (n, w) = (2, 200);
+        let mut l = layer(3, 4, 5, 2);
+        l.inference = true;
+        assert_eq!(l.plan_workspace_bytes(), 0, "no plan before warming");
+        l.try_warm(n, w).unwrap();
+        let warmed = l.plan_workspace_bytes();
+        assert!(warmed > 0, "warm must build the cached plan");
+        let x = rnd(n * 3 * w, 71);
+        let y_inf = l.forward(&x, n, w);
+        // The warm plan was reused (same workspace, no rebuild/growth).
+        assert_eq!(l.plan_workspace_bytes(), warmed);
+        // A training-mode layer computes the same bits with more scratch.
+        let mut t = l.clone();
+        t.inference = false;
+        assert_eq!(t.forward(&x, n, w), y_inf);
+        assert!(t.plan_workspace_bytes() > warmed);
+    }
+
+    #[test]
+    #[should_panic(expected = "inference-only plan")]
+    fn inference_layer_refuses_backward() {
+        let (n, w) = (1, 100);
+        let mut l = layer(2, 3, 5, 2);
+        l.inference = true;
+        let x = rnd(n * 2 * w, 72);
+        let y = l.forward(&x, n, w);
+        let _ = l.backward_data(&y, n, w);
     }
 
     #[test]

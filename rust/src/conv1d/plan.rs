@@ -753,6 +753,10 @@ pub struct ConvPlan {
     bias: Vec<f32>,
     /// Post-op epilogue executed by the fused forward/backward paths.
     post: PostOps,
+    /// Forward-only plan: backward scratch was never allocated and the
+    /// `execute_backward_*` family panics (the serving path, DESIGN.md
+    /// §7 — a silent backward on a trimmed workspace would be a bug).
+    inference: bool,
     /// Whether `ws.padded_in` holds a valid input from
     /// `execute_forward_same_into` (guards the cached backward-weight).
     same_cached: bool,
@@ -878,9 +882,40 @@ impl ConvPlan {
             weights,
             bias: Vec::new(),
             post: PostOps::none(),
+            inference: false,
             same_cached: false,
             ws,
         })
+    }
+
+    /// Builder: make this a **forward-only** plan. The backward scratch
+    /// (`gout_padded`, the per-worker `gw_partials`) is released — for
+    /// the 25-layer serving network this is most of a plan's resident
+    /// footprint — and every `execute_backward_*` call panics instead of
+    /// running against missing buffers. The serving plan cache builds
+    /// its per-bucket plans this way (DESIGN.md §7).
+    pub fn with_inference(mut self) -> ConvPlan {
+        if !self.inference {
+            self.inference = true;
+            let mut spec = self.kernel.workspace_spec(&self.kp, self.threads);
+            spec.gout_padded = 0;
+            spec.gw_partials = 0;
+            self.ws = Workspace::from_spec(&self.kp, &spec);
+        }
+        self
+    }
+
+    /// True for forward-only plans built via [`Self::with_inference`].
+    pub fn is_inference(&self) -> bool {
+        self.inference
+    }
+
+    fn assert_trainable(&self, pass: &str) {
+        assert!(
+            !self.inference,
+            "{pass} on an inference-only plan for {} (build without with_inference() to train)",
+            self.p
+        );
     }
 
     /// The execution context the kernels run under.
@@ -1261,6 +1296,7 @@ impl ConvPlan {
         if let Some(gr) = gres.as_deref() {
             assert_eq!(gr.len(), n * k * q, "residual-grad shape mismatch for {}", self.p);
         }
+        self.assert_trainable("execute_backward_fused_into");
         if let Some(gb) = gb.as_deref_mut() {
             gb.fill(0.0);
         }
@@ -1338,6 +1374,7 @@ impl ConvPlan {
     /// Backward-data on an already-prologued gradient (no shape asserts
     /// beyond the dispatch; shared by the raw and fused paths).
     fn execute_backward_data_into_raw(&mut self, gpre: &[f32], gin: &mut [f32]) {
+        self.assert_trainable("execute_backward_data_into");
         let ctx = self.ctx();
         if self.p.stride == 1 {
             self.kernel.backward_data(
@@ -1365,6 +1402,7 @@ impl ConvPlan {
 
     /// Backward-weight on an already-prologued gradient.
     fn execute_backward_weight_into_raw(&mut self, gpre: &[f32], x: &[f32], gw: &mut [f32]) {
+        self.assert_trainable("execute_backward_weight_into");
         let ctx = self.ctx();
         if self.p.stride == 1 {
             self.kernel.backward_weight(
@@ -1707,6 +1745,51 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn inference_plan_trims_backward_scratch_and_keeps_forward_bits() {
+        let (p, wt, x) = problem();
+        for name in ["brgemm", "im2col", "bf16"] {
+            let mut full = ConvPlan::by_name(p, name, 4, wt.clone()).unwrap();
+            let mut inf = ConvPlan::by_name(p, name, 4, wt.clone())
+                .unwrap()
+                .with_inference();
+            assert!(inf.is_inference() && !full.is_inference());
+            assert!(
+                inf.workspace_bytes() < full.workspace_bytes(),
+                "{name}: inference workspace {} !< training {}",
+                inf.workspace_bytes(),
+                full.workspace_bytes()
+            );
+            let (mut a, mut b) = (
+                vec![0.0; p.n * p.k * p.q()],
+                vec![0.0; p.n * p.k * p.q()],
+            );
+            full.execute_forward_into(&x, &mut a);
+            inf.execute_forward_into(&x, &mut b);
+            assert_eq!(a, b, "{name}: inference forward must be bit-identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inference-only plan")]
+    fn inference_plan_refuses_backward_data() {
+        let (p, wt, _x) = problem();
+        let mut plan = ConvPlan::by_name(p, "brgemm", 1, wt).unwrap().with_inference();
+        let gout = vec![0.0; p.n * p.k * p.q()];
+        let mut gin = vec![0.0; p.n * p.c * p.w];
+        plan.execute_backward_data_into(&gout, &mut gin);
+    }
+
+    #[test]
+    #[should_panic(expected = "inference-only plan")]
+    fn inference_plan_refuses_backward_weight() {
+        let (p, wt, x) = problem();
+        let mut plan = ConvPlan::by_name(p, "brgemm", 1, wt).unwrap().with_inference();
+        let gout = vec![0.0; p.n * p.k * p.q()];
+        let mut gw = vec![0.0; p.k * p.c * p.s];
+        plan.execute_backward_weight_into(&gout, &x, &mut gw);
     }
 
     #[test]

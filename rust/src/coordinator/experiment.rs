@@ -1,5 +1,5 @@
 //! Experiment descriptors: the paper's published numbers, encoded so the
-//! benchmark harness can print paper-vs-reproduced tables (DESIGN.md §7).
+//! benchmark harness can print paper-vs-reproduced tables (DESIGN.md §8).
 
 /// One row of paper Table 1 (single-socket end-to-end training).
 #[derive(Debug, Clone, Copy)]

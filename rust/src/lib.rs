@@ -11,8 +11,9 @@
 //!   metrics ([`metrics`]), a simulated multi-socket runtime with
 //!   bucketed backward-overlapped all-reduce ([`dist`]), machine models
 //!   of the paper's testbeds ([`machine`]), the training coordinator
-//!   ([`coordinator`]), the benchmark harness ([`bench_harness`]) and a
-//!   TOML config system ([`config`]).
+//!   ([`coordinator`]), a batched inference serving subsystem with a
+//!   shape-bucketed plan cache ([`serve`]), the benchmark harness
+//!   ([`bench_harness`]) and a TOML config system ([`config`]).
 //! * **L2/L1 (Python, build-time only)** — a JAX AtacWorks model with
 //!   Pallas conv kernels, AOT-lowered to HLO text executed by [`runtime`]
 //!   through the PJRT CPU client. Python never runs on the training path.
@@ -50,6 +51,7 @@ pub mod machine;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use conv1d::{

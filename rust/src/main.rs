@@ -2,6 +2,7 @@
 //!
 //! Subcommands (see README.md):
 //!   train            end-to-end AtacWorks training (native engine)
+//!   serve            batched inference serving over synthetic traffic
 //!   sweep            regenerate Fig. 4/5/6 and the eq. 4 grid
 //!   scaling          regenerate Figs. 8/9/10 and Table 2
 //!   bench            regenerate Table 1 / §4.5.3 / §4.5.4 projections
@@ -18,7 +19,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use dilconv1d::bench_harness::tables::{backend_cell, markdown, pct, secs, speedup, write_csv};
 use dilconv1d::bench_harness::{run_point, Pass, SweepConfig};
-use dilconv1d::config::TrainConfig;
+use dilconv1d::config::{ServeConfig, TrainConfig};
 use dilconv1d::conv1d::test_util::rnd;
 use dilconv1d::conv1d::{Backend, ConvParams};
 use dilconv1d::coordinator::{checkpoint, experiment, Trainer};
@@ -94,6 +95,7 @@ fn run() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "scaling" => cmd_scaling(&args),
         "bench" => cmd_bench(&args),
@@ -126,6 +128,16 @@ USAGE: dilconv <subcommand> [--flags]
                    weights, bf16 working copies + kernels)
                    [--overlap] [--bucket-mb F] (bucketed all-reduce fired
                    as each layer's backward completes)
+  serve            batched inference serving: dynamic batcher + shape-
+                   bucketed plan cache, driven by an open-loop synthetic
+                   load (reports p50/p99 latency, seq/s, per-bucket stats)
+                   [--config cfg.toml] [--checkpoint ckpt]
+                   [--buckets 1024,2048,4096] [--max-batch N]
+                   [--window-ms F] [--queue N] [--workers N] [--threads N]
+                   [--backend brgemm|onednn|direct|bf16]
+                   [--precision f32|bf16] [--partition batch|grid]
+                   [--autotune] [--cache-capacity N] [--no-warm]
+                   [--requests N] [--rate F] [--seed N]
   sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
                    --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
                    [--reps N] [--batch N] [--max-q N]
@@ -245,6 +257,123 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint::save(path, trainer.params())?;
         println!("checkpoint written to {path}");
     }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ serve
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ServeConfig::from_file(p)?,
+        None => ServeConfig::default(),
+    };
+    // Load-driver flags are owned here, everything else by the config.
+    let driver_flags = ["config", "checkpoint", "requests", "rate", "seed"];
+    for (k, v) in &args.flags {
+        if driver_flags.contains(&k.as_str()) {
+            continue;
+        }
+        if !cfg.apply_flag(k, v)? {
+            bail!("unknown flag --{k} for serve (try `dilconv help`)");
+        }
+    }
+    cfg.validate()?;
+    let net_cfg = cfg.net_config();
+    let params = match args.get("checkpoint") {
+        Some(p) => {
+            let params = checkpoint::load(p)?;
+            println!("loaded checkpoint {p} ({} parameters)", params.len());
+            params
+        }
+        None => dilconv1d::model::AtacWorksNet::init(net_cfg, cfg.seed).pack_params(),
+    };
+    println!(
+        "serving AtacWorks-like net: {} conv layers, ch={}, buckets [{}], max_batch {}, \
+         window {} ms, queue {}, {} worker(s) x {} thread(s), backend {}, precision {:?}, \
+         partition {}, autotune {}, warm {}",
+        net_cfg.n_conv_layers(),
+        net_cfg.channels,
+        cfg.buckets,
+        cfg.max_batch,
+        cfg.window_ms,
+        cfg.queue_depth,
+        cfg.workers,
+        cfg.threads,
+        cfg.backend,
+        cfg.precision,
+        cfg.partition,
+        cfg.autotune,
+        cfg.warm,
+    );
+    let t0 = std::time::Instant::now();
+    let server = dilconv1d::serve::Server::start(net_cfg, &params, cfg.batcher_opts())
+        .map_err(|e| anyhow!(e))?;
+    println!(
+        "server up in {:.2}s ({})",
+        t0.elapsed().as_secs_f64(),
+        if cfg.warm {
+            "plan cache warmed for every bucket"
+        } else {
+            "cold plan cache; first requests pay plan builds"
+        }
+    );
+
+    // Synthetic open-loop traffic: for each bucket, an exact-fit width
+    // and a partial-fill width (exercises the truncation path).
+    let requests = args.usize("requests", 64)?;
+    let rate = args.f64("rate", 100.0)?;
+    if rate.is_nan() || rate <= 0.0 {
+        bail!("--rate must be a positive arrival rate, got {rate}");
+    }
+    if requests == 0 {
+        bail!("--requests must be at least 1");
+    }
+    let seed = args.usize("seed", 7)? as u64;
+    // Exact-fit + partial-fill width per bucket (exercises truncation).
+    let mix = dilconv1d::serve::WidthMix::bucket_mix(&cfg.buckets).map_err(|e| anyhow!(e))?;
+    println!(
+        "open-loop load: {requests} requests at {rate}/s over widths {:?}",
+        mix.widths()
+    );
+    let report = dilconv1d::serve::run_open_loop(&server, &mix, rate, requests, seed);
+    let metrics = server.shutdown();
+
+    println!(
+        "\ncompleted {}/{} (rejected {}, failed {}) in {:.2}s -> {:.1} seq/s",
+        report.completed,
+        report.offered,
+        report.rejected,
+        report.failed,
+        report.wall_secs,
+        report.seq_per_sec(),
+    );
+    println!(
+        "latency: p50 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  max {:.2} ms  | mean batch fill {:.2}/{}",
+        report.latency.p50() * 1e3,
+        report.latency.p99() * 1e3,
+        report.latency.mean() * 1e3,
+        report.latency.max() * 1e3,
+        report.mean_batch_rows,
+        cfg.max_batch,
+    );
+    let mut rows = Vec::new();
+    for (bucket, m) in &metrics.per_bucket {
+        rows.push(vec![
+            bucket.to_string(),
+            m.requests.to_string(),
+            m.batches.to_string(),
+            format!("{:.2}", m.requests as f64 / m.batches.max(1) as f64),
+            format!("{:.2}", m.latency.p50() * 1e3),
+            format!("{:.2}", m.latency.p99() * 1e3),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(
+            &["bucket", "requests", "batches", "fill", "p50 ms", "p99 ms"],
+            &rows
+        )
+    );
     Ok(())
 }
 

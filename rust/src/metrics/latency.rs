@@ -1,0 +1,206 @@
+//! Latency histogram — the serving subsystem's per-request telemetry
+//! (DESIGN.md §7).
+//!
+//! Request latencies span four orders of magnitude (a cache-warm small
+//! bucket vs a cold plan build on a huge one), so the histogram uses
+//! geometrically-spaced buckets: ~18 buckets per decade from 1 µs to
+//! ~12 s (slower outliers clamp into the last bucket, with their exact
+//! max still tracked). Recording is O(1) with no allocation; quantile queries walk
+//! the fixed bucket array. Exact min/max/mean ride along in a
+//! [`Stats`] accumulator, so the common "p50/p99 + mean" report never
+//! misstates the extremes by a bucket width.
+
+use super::timing::Stats;
+
+/// Lower edge of bucket 0, in seconds (1 µs).
+const BASE_SECS: f64 = 1e-6;
+/// Geometric growth factor between bucket edges (≈ 18 buckets/decade,
+/// ~13 % relative resolution).
+const GROWTH: f64 = 1.136;
+/// Bucket count: `BASE · GROWTH^128` ≈ 12 s — ample for request
+/// latencies; slower outliers clamp into the last bucket (their exact
+/// max is still tracked by the [`Stats`] accumulator).
+const BUCKETS: usize = 128;
+
+/// A fixed-size geometric latency histogram with quantile queries.
+///
+/// ```
+/// use dilconv1d::metrics::LatencyHistogram;
+///
+/// let mut h = LatencyHistogram::new();
+/// for ms in 1..=100u32 {
+///     h.record(ms as f64 * 1e-3);
+/// }
+/// assert_eq!(h.count(), 100);
+/// // Quantiles are exact to one bucket (~13% relative resolution).
+/// assert!((h.p50() - 0.050).abs() < 0.010);
+/// assert!((h.p99() - 0.100).abs() < 0.015);
+/// assert!(h.p50() <= h.p99());
+/// ```
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    stats: Stats,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: [0; BUCKETS],
+            stats: Stats::new(),
+        }
+    }
+
+    /// Bucket index for a latency (clamped to the histogram range).
+    fn index(secs: f64) -> usize {
+        if secs <= BASE_SECS {
+            return 0;
+        }
+        let i = (secs / BASE_SECS).ln() / GROWTH.ln();
+        (i as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one latency in seconds. O(1), allocation-free.
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::index(secs)] += 1;
+        self.stats.push(secs);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    /// Exact mean of every recorded latency.
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    /// Exact minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        self.stats.min()
+    }
+
+    /// Exact maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.stats.max()
+    }
+
+    /// The `q`-quantile (`0 < q <= 1`) as the geometric midpoint of the
+    /// bucket holding the rank-`ceil(q·n)` sample, clamped to the exact
+    /// observed [min, max]. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = BASE_SECS * GROWTH.powi(i as i32);
+                let mid = lo * GROWTH.sqrt();
+                return mid.clamp(self.stats.min(), self.stats.max());
+            }
+        }
+        self.stats.max()
+    }
+
+    /// Median latency.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile latency.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram into this one (per-bucket merge; count,
+    /// mean, min and max stay exact via the parallel [`Stats`] merge).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.stats.merge(&other.stats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record(3.3e-3);
+        // Every quantile of one sample is that sample (clamped to the
+        // exact observed extremes).
+        assert_eq!(h.p50(), 3.3e-3);
+        assert_eq!(h.p99(), 3.3e-3);
+        assert_eq!(h.min(), 3.3e-3);
+        assert_eq!(h.max(), 3.3e-3);
+    }
+
+    #[test]
+    fn quantiles_track_a_uniform_sweep() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u32 {
+            h.record(i as f64 * 1e-4); // 0.1 ms .. 100 ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50();
+        let p99 = h.p99();
+        assert!((p50 - 0.05).abs() < 0.05 * 0.2, "p50 {p50}");
+        assert!((p99 - 0.099).abs() < 0.099 * 0.2, "p99 {p99}");
+        assert!(h.min() <= p50 && p50 <= p99 && p99 <= h.max());
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp() {
+        let mut h = LatencyHistogram::new();
+        h.record(1e-9); // below the first bucket
+        h.record(1e4); // beyond the last bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 1e-9);
+        assert_eq!(h.max(), 1e4);
+        // Quantiles stay within the observed extremes.
+        assert!(h.p99() <= 1e4);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_keeps_extremes() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..10 {
+            a.record(1e-3);
+        }
+        for _ in 0..30 {
+            b.record(4e-3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 40);
+        assert_eq!(a.min(), 1e-3);
+        assert_eq!(a.max(), 4e-3);
+        // 75% of mass at 4 ms → p50 lands in the 4 ms bucket.
+        assert!((a.p50() - 4e-3).abs() < 4e-3 * 0.2);
+        // Merged mean is the sample-weighted mean.
+        assert!((a.mean() - (10.0 * 1e-3 + 30.0 * 4e-3) / 40.0).abs() < 1e-9);
+    }
+}

@@ -1,13 +1,16 @@
 //! Evaluation metrics and telemetry: exact AUROC ([`auroc`], the paper's
 //! peak-calling accuracy metric), regression metrics ([`regression`]),
-//! classification metrics ([`classification`]) and timing ([`timing`]).
+//! classification metrics ([`classification`]), timing ([`timing`]) and
+//! the serving subsystem's latency histograms ([`latency`]).
 
 pub mod auroc;
 pub mod classification;
+pub mod latency;
 pub mod regression;
 pub mod timing;
 
 pub use auroc::{auroc, AurocAccumulator};
 pub use classification::{bce_with_logits, sigmoid, Confusion};
+pub use latency::LatencyHistogram;
 pub use regression::{mse, pearson, MseAccumulator};
 pub use timing::{EpochTiming, Stats, Timer};

@@ -85,6 +85,25 @@ impl Stats {
             (self.m2 / (self.n - 1) as f64).sqrt()
         }
     }
+
+    /// Fold another accumulator into this one (parallel Welford merge:
+    /// count, mean, variance, min and max all stay exact).
+    pub fn merge(&mut self, other: &Stats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Per-epoch timing breakdown recorded by the trainer (paper Fig. 10
@@ -119,6 +138,38 @@ mod tests {
         assert_eq!(s.max(), 9.0);
         // Sample stddev of that classic set is ~2.138.
         assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn merge_matches_sequential_pushes() {
+        let all = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut whole = Stats::new();
+        for v in all {
+            whole.push(v);
+        }
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        for v in &all[..3] {
+            a.push(*v);
+        }
+        for v in &all[3..] {
+            b.push(*v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.stddev() - whole.stddev()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // Merging an empty accumulator is the identity, both ways.
+        let empty = Stats::new();
+        let before = (a.count(), a.mean());
+        a.merge(&empty);
+        assert_eq!((a.count(), a.mean()), before);
+        let mut e = Stats::new();
+        e.merge(&a);
+        assert_eq!(e.count(), a.count());
+        assert_eq!(e.max(), a.max());
     }
 
     #[test]

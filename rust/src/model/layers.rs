@@ -85,6 +85,34 @@ impl ConvSame {
         self.conv.autotune = on;
     }
 
+    /// Forward-only mode for serving: plans drop their backward scratch
+    /// ([`crate::conv1d::ConvPlan::with_inference`]) and any backward
+    /// call panics. Eval forwards (`train = false`) already skip the
+    /// activation/padded-input caching, so an inference layer's steady
+    /// state is one fused pass plus the persistent pad buffer.
+    pub fn set_inference(&mut self, on: bool) {
+        self.conv.inference = on;
+    }
+
+    /// Eagerly build the conv plan (and pre-size the eval pad buffer)
+    /// for an unpadded `(n, w)` problem — the serving plan cache warms
+    /// each bucket this way at startup, so the first request never pays
+    /// plan construction.
+    pub fn warm(&mut self, n: usize, w: usize) -> Result<(), crate::conv1d::PlanError> {
+        let (l, r) = ConvParams::same_pad(self.conv.s, self.conv.d);
+        let need = n * self.conv.c * (w + l + r);
+        if self.xp_eval.len() != need {
+            self.xp_eval.resize(need, 0.0);
+        }
+        self.conv.try_warm(n, w + l + r)
+    }
+
+    /// Workspace bytes held by this layer's cached plan (0 before the
+    /// first forward/warm).
+    pub fn plan_workspace_bytes(&self) -> usize {
+        self.conv.plan_workspace_bytes()
+    }
+
     /// Shared same-padding prologue of both forward paths: pad `x` into
     /// the persistent train/eval buffer and return the padded width.
     fn pad_into_buffer(&mut self, x: &Tensor, train: bool) -> usize {

@@ -96,6 +96,22 @@ impl MasterWeights {
         self.refresh();
     }
 
+    /// One-shot working-copy derivation: the bf16 rounding of `params`
+    /// under [`Precision::Bf16`], a plain copy under [`Precision::F32`].
+    /// The serving path loads replicas this way without keeping a master
+    /// copy resident — inference never updates parameters, so the
+    /// master/working split collapses to this single rounding
+    /// (DESIGN.md §7).
+    pub fn working_copy(params: &[f32], precision: Precision) -> Vec<f32> {
+        match precision {
+            Precision::F32 => params.to_vec(),
+            Precision::Bf16 => params
+                .iter()
+                .map(|&p| Bf16::from_f32(p).to_f32())
+                .collect(),
+        }
+    }
+
     fn refresh(&mut self) {
         match self.precision {
             Precision::F32 => self.working.copy_from_slice(&self.master),
@@ -141,6 +157,22 @@ mod tests {
             Bf16::from_f32(w.working()[0]).to_f32(),
             "working copy must be bf16-representable"
         );
+    }
+
+    #[test]
+    fn one_shot_working_copy_matches_the_split_store() {
+        let params = vec![0.3f32, -1.7, 0.123_456_7, 42.5];
+        for precision in [Precision::F32, Precision::Bf16] {
+            let split = MasterWeights::new(params.clone(), precision);
+            assert_eq!(
+                MasterWeights::working_copy(&params, precision),
+                split.working(),
+                "{precision:?}"
+            );
+        }
+        // Rounding is idempotent: a working copy round-trips unchanged.
+        let once = MasterWeights::working_copy(&params, Precision::Bf16);
+        assert_eq!(MasterWeights::working_copy(&once, Precision::Bf16), once);
     }
 
     #[test]

@@ -177,6 +177,87 @@ impl AtacWorksNet {
         }
     }
 
+    /// Forward-only serving mode: every layer's plans are built via
+    /// [`crate::conv1d::ConvPlan::with_inference`] — no backward scratch
+    /// is allocated (for the 25-layer network that is most of a plan's
+    /// footprint) and training entry points panic. Pair with
+    /// [`Self::infer`], which also skips the activation saving a
+    /// `forward(train = true)` would do.
+    pub fn set_inference(&mut self, on: bool) {
+        for c in &mut self.convs {
+            c.set_inference(on);
+        }
+    }
+
+    /// Eagerly build every layer's plan for a batch of `n` unpadded
+    /// width-`w` tracks — the serving plan cache warms each width bucket
+    /// this way at startup (DESIGN.md §7).
+    pub fn warm(&mut self, n: usize, w: usize) -> Result<(), crate::conv1d::PlanError> {
+        for c in &mut self.convs {
+            c.warm(n, w)?;
+        }
+        Ok(())
+    }
+
+    /// Total workspace bytes across every layer's cached plan — what one
+    /// serving plan-cache entry holds resident.
+    pub fn plan_workspace_bytes(&self) -> usize {
+        self.convs.iter().map(|c| c.plan_workspace_bytes()).sum()
+    }
+
+    /// Forward-only inference: `x (N, 1, W)` → `(denoised, peak logits)`,
+    /// both `(N, 1, W)`. No activation or padded-input caching happens
+    /// (the eval pad buffers are reused), so this is the serving
+    /// steady-state path: one fused pass per layer and zero retained
+    /// per-request state.
+    pub fn infer(&mut self, x: &Tensor) -> (Tensor, Tensor) {
+        let (denoised, logits, _) = self.forward(x, false);
+        (denoised, logits)
+    }
+
+    /// Width-masked forward-only inference for zero-padded rows: row `r`
+    /// of `x` carries a real track in columns `0..widths[r]` and zeros
+    /// beyond. After every body layer the pad tail of each row is
+    /// re-zeroed, so the tail always holds exactly the zeros that
+    /// same-padding at the row's native width would supply — without
+    /// masking, layer 1 writes non-zero values (bias, activation,
+    /// boundary taps) into the tail and deeper layers fold them back
+    /// into real columns within the receptive field. With it, each
+    /// row's first `widths[r]` output columns are **bit-identical** to
+    /// running that row alone at width `widths[r]` (per-element FMA
+    /// order is width-independent), so a serving bucket is purely an
+    /// execution shape, never part of the model (DESIGN.md §7).
+    pub fn infer_masked(&mut self, x: &Tensor, widths: &[usize]) -> (Tensor, Tensor) {
+        assert_eq!(widths.len(), x.n, "one width per batch row");
+        assert!(
+            widths.iter().all(|&wv| wv <= x.w),
+            "row widths cannot exceed the padded tensor width"
+        );
+        fn mask_tail(t: &mut Tensor, widths: &[usize]) {
+            for (row, &wv) in widths.iter().enumerate() {
+                for ch in 0..t.c {
+                    let base = (row * t.c + ch) * t.w;
+                    t.data[base + wv..base + t.w].fill(0.0);
+                }
+            }
+        }
+        let nb = self.cfg.n_blocks;
+        let mut h = self.convs[0].forward_fused(x, None, false);
+        mask_tail(&mut h, widths);
+        for b in 0..nb {
+            let c1 = 1 + 2 * b;
+            let c2 = c1 + 1;
+            let mut r = self.convs[c1].forward_fused(&h, None, false);
+            mask_tail(&mut r, widths);
+            h = self.convs[c2].forward_fused(&r, Some(&h), false);
+            mask_tail(&mut h, widths);
+        }
+        // Head outputs need no mask: callers only read the real columns.
+        let denoised = self.convs[1 + 2 * nb].forward_fused(&h, None, false);
+        let logits = self.convs[2 + 2 * nb].forward_fused(&h, None, false);
+        (denoised, logits)
+    }
+
     /// Select the body activation and (re)attach each layer's fused
     /// post-op spec by role: stem and first block conv fuse
     /// `bias + act`, second block conv fuses `bias + act + residual`,
@@ -477,6 +558,56 @@ mod tests {
                 cfg.param_count()
             );
         }
+    }
+
+    #[test]
+    fn infer_matches_eval_forward_and_inference_mode_is_bit_identical() {
+        let cfg = NetConfig::tiny();
+        let mut net = AtacWorksNet::init(cfg, 3);
+        let (x, _, _) = batch(&cfg, 2, 96, 4);
+        let (den_want, log_want, _) = net.forward(&x, false);
+        // Forward-only mode with warmed plans computes the same bits.
+        let mut serve = AtacWorksNet::init(cfg, 3);
+        serve.set_inference(true);
+        serve.warm(2, 96).unwrap();
+        let warmed = serve.plan_workspace_bytes();
+        assert!(warmed > 0);
+        let (den, logits) = serve.infer(&x);
+        assert_eq!(den.data, den_want.data);
+        assert_eq!(logits.data, log_want.data);
+        // Inference plans kept their trimmed workspaces (no rebuild) and
+        // are smaller than the training net's.
+        assert_eq!(serve.plan_workspace_bytes(), warmed);
+        assert!(net.plan_workspace_bytes() > warmed);
+    }
+
+    #[test]
+    fn masked_inference_is_bit_identical_to_native_width() {
+        // A zero-padded row run through infer_masked must reproduce the
+        // same row executed alone at its native width, bit for bit —
+        // the invariant the serving buckets stand on.
+        let cfg = NetConfig::tiny();
+        let (w_native, w_padded) = (90usize, 160usize);
+        let (x, _, _) = batch(&cfg, 1, w_native, 21);
+        let mut native = AtacWorksNet::init(cfg, 13);
+        let (den_want, log_want, _) = native.forward(&x, false);
+        let mut padded = vec![0.0f32; w_padded];
+        padded[..w_native].copy_from_slice(&x.data);
+        let mut serve = AtacWorksNet::init(cfg, 13);
+        let (den, logits) =
+            serve.infer_masked(&Tensor::from_vec(padded, 1, 1, w_padded), &[w_native]);
+        assert_eq!(&den.data[..w_native], &den_want.data[..], "denoised");
+        assert_eq!(&logits.data[..w_native], &log_want.data[..], "logits");
+        // Unmasked inference does NOT have this property — the pad tail
+        // feeds back through deeper layers' receptive fields.
+        let mut padded2 = vec![0.0f32; w_padded];
+        padded2[..w_native].copy_from_slice(&x.data);
+        let (den_unmasked, _) = serve.infer(&Tensor::from_vec(padded2, 1, 1, w_padded));
+        assert_ne!(
+            &den_unmasked.data[..w_native],
+            &den_want.data[..],
+            "without masking the bucket width would leak into the output"
+        );
     }
 
     #[test]

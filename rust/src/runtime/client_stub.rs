@@ -9,7 +9,7 @@ use anyhow::{bail, Result};
 use std::path::Path;
 
 const UNAVAILABLE: &str =
-    "PJRT unavailable: dilconv1d was built without the `xla` feature (see rust/DESIGN.md §9)";
+    "PJRT unavailable: dilconv1d was built without the `xla` feature (see rust/DESIGN.md §10)";
 
 /// A PJRT CPU session placeholder.
 pub struct Session {

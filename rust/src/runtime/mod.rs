@@ -9,7 +9,7 @@
 //! The PJRT-backed `client`/`step` modules require the `xla` feature
 //! (and the `xla` bindings crate). The default offline build substitutes
 //! API-identical stubs that fail at run time, so everything downstream —
-//! CLI, tests, examples — compiles either way (DESIGN.md §9).
+//! CLI, tests, examples — compiles either way (DESIGN.md §10).
 
 pub mod artifacts;
 

@@ -9,7 +9,7 @@ use super::artifacts::{Artifact, Registry};
 use super::client::Session;
 
 const UNAVAILABLE: &str =
-    "PJRT unavailable: dilconv1d was built without the `xla` feature (see rust/DESIGN.md §9)";
+    "PJRT unavailable: dilconv1d was built without the `xla` feature (see rust/DESIGN.md §10)";
 
 /// Losses returned by one training step.
 #[derive(Debug, Clone, Copy)]

@@ -1,0 +1,586 @@
+//! The dynamic batcher — request-oriented serving over the bucket-pinned
+//! engines (DESIGN.md §7).
+//!
+//! Topology: callers [`Server::submit`] single requests; a **dispatcher
+//! thread** groups them by width bucket and flushes a group to a worker
+//! the moment it reaches `max_batch` *or* its oldest request has waited
+//! one batching `window`; a pool of long-lived **worker threads** (the
+//! [`PersistentPool`] pattern from distributed training — spawn once,
+//! channel jobs forever) each owns a private [`InferenceEngine`] whose
+//! plan cache was warmed at startup. Admission control is a bounded
+//! in-flight budget: once `queue_depth` requests are queued or
+//! executing, further submits fail fast with
+//! [`ServeError::QueueFull`] instead of growing an unbounded queue —
+//! callers see backpressure, latency stays bounded.
+//!
+//! Telemetry: every completed request records its end-to-end latency
+//! (enqueue → response) in a global and a per-bucket
+//! [`LatencyHistogram`]; batches record their occupancy so an
+//! over-generous window or an over-wide bucket grid shows up as
+//! underfilled batches, not just as mysterious latency.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::dist::PersistentPool;
+use crate::metrics::LatencyHistogram;
+use crate::model::NetConfig;
+
+use super::engine::{EngineOpts, InferOutput, InferenceEngine};
+use super::ServeError;
+
+/// Server options: the engine slice plus the batching/queueing policy.
+#[derive(Debug, Clone)]
+pub struct BatcherOpts {
+    /// Per-worker engine options (buckets, max_batch, precision, …).
+    pub engine: EngineOpts,
+    /// Batching window: a non-full group is flushed once its oldest
+    /// request has waited this long. The window bounds the latency cost
+    /// of batching: worst-case added latency = one window.
+    pub window: Duration,
+    /// Admission budget: maximum requests queued or executing at once.
+    pub queue_depth: usize,
+    /// Worker threads, each owning a private engine + plan cache.
+    pub workers: usize,
+    /// Warm every worker's plan cache for every bucket before accepting
+    /// traffic (startup cost instead of first-request latency).
+    pub warm: bool,
+}
+
+impl Default for BatcherOpts {
+    fn default() -> Self {
+        BatcherOpts {
+            engine: EngineOpts::default(),
+            window: Duration::from_millis(2),
+            queue_depth: 256,
+            workers: 1,
+            warm: true,
+        }
+    }
+}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// The two model heads, truncated to the request width.
+    pub output: InferOutput,
+    /// End-to-end latency (submit → response), seconds.
+    pub latency_secs: f64,
+    /// Width bucket the request executed in.
+    pub bucket: usize,
+    /// How many real requests shared the batch (1..=max_batch).
+    pub batch_rows: usize,
+}
+
+/// A claim on a submitted request's response.
+pub struct Ticket {
+    rx: Receiver<Result<Response, ServeError>>,
+}
+
+impl Ticket {
+    /// Block until the response arrives (or the server drops the
+    /// request during shutdown).
+    pub fn wait(self) -> Result<Response, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+}
+
+/// Aggregated serving telemetry (cloneable snapshot).
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    /// End-to-end latency across every completed request.
+    pub latency: LatencyHistogram,
+    /// Per-bucket request counts and latency.
+    pub per_bucket: BTreeMap<usize, BucketMetrics>,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests refused at admission (queue full).
+    pub rejected: u64,
+    /// Requests that failed inside the engine (plan errors).
+    pub failed: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Sum of real rows over all batches (occupancy numerator).
+    pub batch_rows: u64,
+    started: Instant,
+    /// Set when this value became a snapshot ([`Server::metrics`] /
+    /// [`Server::shutdown`]): freezes `elapsed_secs`, so a stored
+    /// snapshot's throughput doesn't decay with wall-clock time.
+    frozen_at: Option<Instant>,
+}
+
+/// Per-bucket slice of the serving telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct BucketMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        ServeMetrics {
+            latency: LatencyHistogram::new(),
+            per_bucket: BTreeMap::new(),
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            batches: 0,
+            batch_rows: 0,
+            started: Instant::now(),
+            frozen_at: None,
+        }
+    }
+
+    /// Serving seconds covered by this value: up to now for the live
+    /// struct, up to snapshot time for a snapshot.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.frozen_at
+            .unwrap_or_else(Instant::now)
+            .duration_since(self.started)
+            .as_secs_f64()
+    }
+
+    /// Completed sequences per second of server uptime.
+    pub fn seq_per_sec(&self) -> f64 {
+        self.completed as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    /// Mean real rows per executed batch (how full batches ran).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.batch_rows as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// One enqueued request travelling dispatcher → worker.
+struct Pending {
+    data: Vec<f32>,
+    bucket: usize,
+    enqueued: Instant,
+    reply: Sender<Result<Response, ServeError>>,
+}
+
+/// A worker thread's owned state: private engine + shared telemetry.
+struct Worker {
+    engine: InferenceEngine,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl Worker {
+    /// Execute one same-bucket batch and deliver every response.
+    fn run_batch(&mut self, batch: Vec<Pending>) {
+        let bucket = batch[0].bucket;
+        debug_assert!(batch.iter().all(|p| p.bucket == bucket));
+        let refs: Vec<&[f32]> = batch.iter().map(|p| p.data.as_slice()).collect();
+        let result = self.engine.infer_batch(&refs);
+        let rows = batch.len();
+        let done = Instant::now();
+        let mut m = self.metrics.lock().unwrap();
+        match result {
+            Ok(outputs) => {
+                m.batches += 1;
+                m.batch_rows += rows as u64;
+                let pb = m.per_bucket.entry(bucket).or_default();
+                pb.batches += 1;
+                for (p, output) in batch.into_iter().zip(outputs) {
+                    let latency_secs = done.duration_since(p.enqueued).as_secs_f64();
+                    m.latency.record(latency_secs);
+                    m.completed += 1;
+                    let pb = m.per_bucket.entry(bucket).or_default();
+                    pb.requests += 1;
+                    pb.latency.record(latency_secs);
+                    // Free the admission slot *before* delivering the
+                    // reply: a caller that wait()s and immediately
+                    // resubmits must never see QueueFull for capacity
+                    // its own completed request still holds.
+                    self.inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = p.reply.send(Ok(Response {
+                        output,
+                        latency_secs,
+                        bucket,
+                        batch_rows: rows,
+                    }));
+                }
+            }
+            Err(e) => {
+                // Requests are bucket-validated at submit, so this is a
+                // plan-level failure; every caller learns why.
+                m.failed += rows as u64;
+                for p in batch {
+                    self.inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = p.reply.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// A pending same-bucket group accumulating toward a flush.
+struct Group {
+    reqs: Vec<Pending>,
+    oldest: Instant,
+}
+
+/// The serving front end: dynamic batching over a warmed worker pool.
+pub struct Server {
+    tx: Option<Sender<Pending>>,
+    inflight: Arc<AtomicUsize>,
+    queue_depth: usize,
+    engine_opts: EngineOpts,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Build the workers (warming each plan cache when `opts.warm`),
+    /// spawn the dispatcher and start accepting traffic.
+    pub fn start(
+        net_cfg: NetConfig,
+        params: &[f32],
+        opts: BatcherOpts,
+    ) -> Result<Server, ServeError> {
+        if opts.workers == 0 {
+            return Err(ServeError::Config("workers must be at least 1".into()));
+        }
+        if opts.queue_depth == 0 {
+            return Err(ServeError::Config("queue_depth must be at least 1".into()));
+        }
+        if opts.window.is_zero() {
+            return Err(ServeError::Config(
+                "batching window must be positive".into(),
+            ));
+        }
+        let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(opts.workers);
+        for _ in 0..opts.workers {
+            let mut engine = InferenceEngine::new(net_cfg, params, opts.engine.clone())?;
+            if opts.warm {
+                engine.warm()?;
+            }
+            workers.push(Worker {
+                engine,
+                metrics: Arc::clone(&metrics),
+                inflight: Arc::clone(&inflight),
+            });
+        }
+        let (tx, rx) = channel::<Pending>();
+        let max_batch = opts.engine.max_batch;
+        let window = opts.window;
+        let n_workers = opts.workers;
+        // Serving starts now — warming must not count against uptime
+        // throughput (seq_per_sec), so re-stamp after the builds above.
+        metrics.lock().unwrap().started = Instant::now();
+        let dispatcher = std::thread::spawn(move || {
+            let pool = PersistentPool::new(workers);
+            dispatch_loop(rx, &pool, max_batch, window, n_workers);
+            // Drain: every queued job runs before the pool's Stop
+            // message, so dropping the pool here completes all work.
+            pool.sync();
+        });
+        Ok(Server {
+            tx: Some(tx),
+            inflight,
+            queue_depth: opts.queue_depth,
+            engine_opts: opts.engine,
+            metrics,
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    /// Submit one request (its length is its width). Fails fast with
+    /// [`ServeError::QueueFull`] when the admission budget is exhausted
+    /// and [`ServeError::TooWide`] when no bucket fits — both before any
+    /// queueing.
+    pub fn submit(&self, data: Vec<f32>) -> Result<Ticket, ServeError> {
+        if data.is_empty() {
+            return Err(ServeError::EmptyRequest);
+        }
+        let bucket = self
+            .engine_opts
+            .buckets
+            .bucket_for(data.len())
+            .ok_or_else(|| ServeError::TooWide {
+                width: data.len(),
+                largest: self.engine_opts.buckets.largest(),
+            })?;
+        // Admission: reserve an in-flight slot or reject.
+        let mut cur = self.inflight.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.queue_depth {
+                self.metrics.lock().unwrap().rejected += 1;
+                return Err(ServeError::QueueFull {
+                    depth: self.queue_depth,
+                });
+            }
+            match self.inflight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        let (reply, rx) = channel();
+        let pending = Pending {
+            data,
+            bucket,
+            enqueued: Instant::now(),
+            reply,
+        };
+        let sent = self.tx.as_ref().is_some_and(|tx| tx.send(pending).is_ok());
+        if !sent {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(ServeError::ShuttingDown);
+        }
+        Ok(Ticket { rx })
+    }
+
+    /// Requests currently queued or executing.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot of the serving telemetry (elapsed time frozen at the
+    /// moment of the snapshot).
+    pub fn metrics(&self) -> ServeMetrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.frozen_at = Some(Instant::now());
+        m
+    }
+
+    /// Stop accepting requests, drain everything in flight, join the
+    /// dispatcher and workers, and return the final telemetry (elapsed
+    /// time frozen at shutdown).
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.stop();
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.frozen_at = Some(Instant::now());
+        m
+    }
+
+    fn stop(&mut self) {
+        self.tx.take(); // dispatcher's recv() disconnects → drain + exit
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Dispatcher: accumulate per-bucket groups, flush on full or window
+/// expiry, round-robin flushed batches across the worker ranks.
+fn dispatch_loop(
+    rx: Receiver<Pending>,
+    pool: &PersistentPool<Worker>,
+    max_batch: usize,
+    window: Duration,
+    n_workers: usize,
+) {
+    let mut pending: BTreeMap<usize, Group> = BTreeMap::new();
+    let mut next_rank = 0usize;
+    let mut flush = |group: Group, next_rank: &mut usize| {
+        let rank = *next_rank % n_workers;
+        *next_rank += 1;
+        pool.exec(rank, move |w| w.run_batch(group.reqs));
+    };
+    loop {
+        if pending.is_empty() {
+            // Nothing waiting: block until traffic or shutdown.
+            match rx.recv() {
+                Ok(p) => enqueue(&mut pending, p, max_batch, &mut flush, &mut next_rank),
+                Err(_) => break,
+            }
+            continue;
+        }
+        // Sleep at most until the oldest group's window expires.
+        let deadline = pending
+            .values()
+            .map(|g| g.oldest + window)
+            .min()
+            .expect("pending is non-empty");
+        let now = Instant::now();
+        if deadline <= now {
+            flush_expired(&mut pending, window, &mut flush, &mut next_rank);
+            continue;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(p) => enqueue(&mut pending, p, max_batch, &mut flush, &mut next_rank),
+            Err(RecvTimeoutError::Timeout) => {
+                flush_expired(&mut pending, window, &mut flush, &mut next_rank)
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Shutdown: flush whatever is still pending.
+    for (_, group) in std::mem::take(&mut pending) {
+        flush(group, &mut next_rank);
+    }
+}
+
+/// Add one request to its bucket group; flush the group if it is full.
+fn enqueue(
+    pending: &mut BTreeMap<usize, Group>,
+    p: Pending,
+    max_batch: usize,
+    flush: &mut impl FnMut(Group, &mut usize),
+    next_rank: &mut usize,
+) {
+    // Flushed groups are removed outright, so a resident group is never
+    // empty — `oldest` is always the first (oldest) request's enqueue time.
+    let group = pending.entry(p.bucket).or_insert_with(|| Group {
+        reqs: Vec::with_capacity(max_batch),
+        oldest: p.enqueued,
+    });
+    let bucket = p.bucket;
+    group.reqs.push(p);
+    if group.reqs.len() >= max_batch {
+        let group = pending.remove(&bucket).expect("group just filled");
+        flush(group, next_rank);
+    }
+}
+
+/// Flush every group whose oldest request has aged past the window.
+fn flush_expired(
+    pending: &mut BTreeMap<usize, Group>,
+    window: Duration,
+    flush: &mut impl FnMut(Group, &mut usize),
+    next_rank: &mut usize,
+) {
+    let now = Instant::now();
+    let expired: Vec<usize> = pending
+        .iter()
+        .filter(|(_, g)| g.oldest + window <= now)
+        .map(|(&b, _)| b)
+        .collect();
+    for b in expired {
+        let group = pending.remove(&b).expect("listed as expired");
+        flush(group, next_rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::AtacWorksNet;
+    use crate::serve::BucketSet;
+    use crate::util::rng::Rng;
+
+    fn tiny_server(queue_depth: usize, max_batch: usize, window: Duration) -> Server {
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts {
+            engine: EngineOpts {
+                buckets: BucketSet::new(&[128, 256]).expect("widths"),
+                max_batch,
+                cache_capacity: 2,
+                ..EngineOpts::default()
+            },
+            window,
+            queue_depth,
+            workers: 1,
+            warm: true,
+        };
+        Server::start(cfg, &params, opts).expect("server")
+    }
+
+    fn track(w: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..w).map(|_| rng.poisson(0.7) as f32).collect()
+    }
+
+    #[test]
+    fn serves_requests_and_records_metrics() {
+        let server = tiny_server(64, 4, Duration::from_millis(1));
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|i| server.submit(track(100 + i * 20, i as u64)).expect("submit"))
+            .collect();
+        for t in tickets {
+            let r = t.wait().expect("response");
+            assert!(r.latency_secs >= 0.0);
+            assert!(r.batch_rows >= 1 && r.batch_rows <= 4);
+            assert!(r.bucket == 128 || r.bucket == 256);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.latency.count(), 6);
+        assert!(m.batches >= 2, "two buckets cannot share a batch");
+        assert!(m.mean_batch_occupancy() >= 1.0);
+        let widths: Vec<usize> = m.per_bucket.keys().copied().collect();
+        assert_eq!(widths, vec![128, 256]);
+    }
+
+    #[test]
+    fn rejects_oversized_before_queueing() {
+        let server = tiny_server(4, 2, Duration::from_millis(1));
+        assert!(matches!(
+            server.submit(track(300, 1)),
+            Err(ServeError::TooWide {
+                width: 300,
+                largest: 256
+            })
+        ));
+        assert!(matches!(
+            server.submit(Vec::new()),
+            Err(ServeError::EmptyRequest)
+        ));
+        assert_eq!(server.inflight(), 0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_is_full() {
+        // A long window and a large max_batch park accepted requests in
+        // the dispatcher, so the in-flight budget fills deterministically.
+        let server = tiny_server(3, 64, Duration::from_millis(500));
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..8 {
+            match server.submit(track(100, i)) {
+                Ok(t) => accepted.push(t),
+                Err(ServeError::QueueFull { depth }) => {
+                    assert_eq!(depth, 3);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!(accepted.len(), 3);
+        assert_eq!(rejected, 5);
+        // Accepted requests still complete (window expiry flushes them).
+        for t in accepted {
+            t.wait().expect("accepted requests complete");
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.rejected, 5);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        // Submit then immediately shut down: the pending group must be
+        // flushed, not dropped.
+        let server = tiny_server(16, 8, Duration::from_secs(5));
+        let t = server.submit(track(80, 9)).expect("submit");
+        let m = server.shutdown();
+        let r = t.wait().expect("drained on shutdown");
+        assert_eq!(r.output.denoised.len(), 80);
+        assert_eq!(m.completed, 1);
+    }
+}

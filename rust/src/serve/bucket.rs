@@ -1,0 +1,160 @@
+//! Shape buckets — the serving subsystem's width vocabulary
+//! (DESIGN.md §7).
+//!
+//! Variable-length requests are grouped by rounding their width **up**
+//! to a configured bucket, and every bucket width sits on the kernels'
+//! 64-wide block grid ([`WIDTH_BLOCK`]), so a bucket's plans always run
+//! full-width BRGEMM blocks with no scalar remainder columns. One plan
+//! per bucket (not per request width) is what lets the plan cache
+//! amortize construction, relayouts and autotune probes across every
+//! width that maps into it.
+
+use crate::conv1d::WIDTH_BLOCK;
+
+/// Round a width up to the next multiple of the kernel block width.
+pub fn round_up_to_block(w: usize) -> usize {
+    w.div_ceil(WIDTH_BLOCK) * WIDTH_BLOCK
+}
+
+/// An ordered, deduplicated set of block-aligned width buckets.
+///
+/// ```
+/// use dilconv1d::serve::BucketSet;
+///
+/// let b = BucketSet::parse("1000, 2048,4096").unwrap();
+/// // 1000 is rounded up onto the 64-wide block grid.
+/// assert_eq!(b.widths(), &[1024, 2048, 4096]);
+/// assert_eq!(b.bucket_for(900), Some(1024));
+/// assert_eq!(b.bucket_for(1024), Some(1024));
+/// assert_eq!(b.bucket_for(1025), Some(2048));
+/// assert_eq!(b.bucket_for(5000), None); // over the largest bucket
+/// assert_eq!(b.to_string(), "1024,2048,4096");
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketSet {
+    /// Ascending, unique, multiples of [`WIDTH_BLOCK`].
+    widths: Vec<usize>,
+}
+
+impl BucketSet {
+    /// Build from raw widths: each is rounded up to the block grid, then
+    /// the set is sorted and deduplicated. An empty set (or any zero
+    /// width) is a configuration error, not a default.
+    pub fn new(widths: &[usize]) -> Result<BucketSet, String> {
+        if widths.is_empty() {
+            return Err("bucket set must name at least one width".to_string());
+        }
+        if widths.contains(&0) {
+            return Err("bucket widths must be positive".to_string());
+        }
+        let mut w: Vec<usize> = widths.iter().map(|&x| round_up_to_block(x)).collect();
+        w.sort_unstable();
+        w.dedup();
+        Ok(BucketSet { widths: w })
+    }
+
+    /// Parse a comma-separated width list (the `[serve] buckets` config
+    /// key / `--buckets` flag vocabulary).
+    pub fn parse(spec: &str) -> Result<BucketSet, String> {
+        let mut widths = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            widths.push(
+                tok.parse::<usize>()
+                    .map_err(|_| format!("bad bucket width '{tok}' in '{spec}'"))?,
+            );
+        }
+        Self::new(&widths)
+    }
+
+    /// The bucket widths, ascending.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    pub fn len(&self) -> usize {
+        self.widths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.widths.is_empty()
+    }
+
+    /// Largest width this set can serve.
+    pub fn largest(&self) -> usize {
+        *self.widths.last().expect("bucket set is never empty")
+    }
+
+    /// Smallest bucket that fits a request of width `w`; `None` when `w`
+    /// exceeds the largest bucket (the request must be rejected — padding
+    /// *down* would corrupt it) or `w` is zero.
+    pub fn bucket_for(&self, w: usize) -> Option<usize> {
+        if w == 0 {
+            return None;
+        }
+        self.widths.iter().copied().find(|&b| b >= w)
+    }
+}
+
+impl std::fmt::Display for BucketSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, w) in self.widths.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{w}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_sorts_and_dedups() {
+        let b = BucketSet::new(&[4096, 100, 128, 1000]).unwrap();
+        assert_eq!(b.widths(), &[128, 1024, 4096]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.largest(), 4096);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn rejects_empty_and_zero() {
+        assert!(BucketSet::new(&[]).is_err());
+        assert!(BucketSet::new(&[0, 128]).is_err());
+        assert!(BucketSet::parse("").is_err());
+        assert!(BucketSet::parse("128,x").is_err());
+    }
+
+    #[test]
+    fn bucket_lookup_boundaries() {
+        let b = BucketSet::parse("128,256").unwrap();
+        assert_eq!(b.bucket_for(1), Some(128));
+        assert_eq!(b.bucket_for(128), Some(128));
+        assert_eq!(b.bucket_for(129), Some(256));
+        assert_eq!(b.bucket_for(256), Some(256));
+        assert_eq!(b.bucket_for(257), None);
+        assert_eq!(b.bucket_for(0), None);
+    }
+
+    #[test]
+    fn display_parse_round_trip() {
+        let b = BucketSet::parse("192, 64,1024").unwrap();
+        let again = BucketSet::parse(&b.to_string()).unwrap();
+        assert_eq!(b, again);
+        assert_eq!(b.to_string(), "64,192,1024");
+    }
+
+    #[test]
+    fn block_rounding() {
+        assert_eq!(round_up_to_block(1), 64);
+        assert_eq!(round_up_to_block(64), 64);
+        assert_eq!(round_up_to_block(65), 128);
+    }
+}

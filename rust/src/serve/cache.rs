@@ -1,0 +1,199 @@
+//! Shape-bucketed LRU plan cache (DESIGN.md §7).
+//!
+//! One cache entry per width bucket, holding everything a bucket needs
+//! to execute — for the serving engine that is a whole forward-only
+//! model replica (25 `ConvPlan`s, their workspaces and, when autotuning,
+//! their memoized tune entries). Entries are built once (usually warmed
+//! at startup), reused on every hit, and evicted strictly in
+//! least-recently-used order when the configured capacity is exceeded —
+//! a traffic mix wider than the capacity thrashes loudly in the
+//! `evictions` counter instead of silently ballooning memory.
+//!
+//! The cache is deliberately generic over the entry type so the
+//! eviction policy is unit-testable without building real plans.
+
+/// An LRU cache keyed by bucket width.
+///
+/// ```
+/// use dilconv1d::serve::PlanCache;
+///
+/// let mut c: PlanCache<&'static str> = PlanCache::new(2);
+/// c.get_or_insert_with(128, || "a");
+/// c.get_or_insert_with(256, || "b");
+/// c.get_or_insert_with(128, || unreachable!("hit"));
+/// c.get_or_insert_with(512, || "c"); // evicts 256 (the LRU entry)
+/// assert_eq!(c.evicted(), &[256]);
+/// assert_eq!(c.keys_mru(), vec![512, 128]);
+/// assert_eq!((c.hits(), c.misses()), (1, 3));
+/// ```
+#[derive(Debug)]
+pub struct PlanCache<V> {
+    capacity: usize,
+    /// MRU-first: index 0 is the most recently used entry.
+    entries: Vec<(usize, V)>,
+    evicted: Vec<usize>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<V> PlanCache<V> {
+    /// A cache holding at most `capacity` entries (`capacity >= 1`).
+    pub fn new(capacity: usize) -> PlanCache<V> {
+        assert!(capacity >= 1, "plan cache capacity must be at least 1");
+        PlanCache {
+            capacity,
+            entries: Vec::new(),
+            evicted: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache misses (= entry builds) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Keys evicted so far, oldest eviction first.
+    pub fn evicted(&self) -> &[usize] {
+        &self.evicted
+    }
+
+    /// Keys from most- to least-recently used.
+    pub fn keys_mru(&self) -> Vec<usize> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Whether `key` is resident (does not touch recency).
+    pub fn contains(&self, key: usize) -> bool {
+        self.entries.iter().any(|(k, _)| *k == key)
+    }
+
+    /// Fetch `key`'s entry, building it with `build` on a miss. Both
+    /// paths move the entry to the front (most recently used); a miss
+    /// that overflows the capacity evicts the least-recently-used entry.
+    pub fn get_or_insert_with(&mut self, key: usize, build: impl FnOnce() -> V) -> &mut V {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.hits += 1;
+            let e = self.entries.remove(i);
+            self.entries.insert(0, e);
+        } else {
+            self.misses += 1;
+            self.entries.insert(0, (key, build()));
+            if self.entries.len() > self.capacity {
+                let (k, _) = self.entries.pop().expect("overflowing cache is non-empty");
+                self.evicted.push(k);
+            }
+        }
+        &mut self.entries[0].1
+    }
+
+    /// Fallible twin of [`Self::get_or_insert_with`]: a build error
+    /// leaves the cache unchanged (no half-inserted entry, no eviction).
+    pub fn try_get_or_insert_with<E>(
+        &mut self,
+        key: usize,
+        build: impl FnOnce() -> Result<V, E>,
+    ) -> Result<&mut V, E> {
+        if !self.contains(key) {
+            let v = build()?;
+            self.misses += 1;
+            self.entries.insert(0, (key, v));
+            if self.entries.len() > self.capacity {
+                let (k, _) = self.entries.pop().expect("overflowing cache is non-empty");
+                self.evicted.push(k);
+            }
+            return Ok(&mut self.entries[0].1);
+        }
+        Ok(self.get_or_insert_with(key, || unreachable!("entry is resident")))
+    }
+
+    /// Iterate resident `(key, entry)` pairs, MRU first (read-only; does
+    /// not touch recency).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &V)> {
+        self.entries.iter().map(|(k, v)| (*k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_in_lru_order() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        c.get_or_insert_with(64, || 1);
+        c.get_or_insert_with(128, || 2);
+        // Touch 64 so 128 becomes the LRU entry.
+        assert_eq!(*c.get_or_insert_with(64, || unreachable!()), 1);
+        c.get_or_insert_with(256, || 3);
+        assert_eq!(c.evicted(), &[128], "LRU entry must go first");
+        c.get_or_insert_with(512, || 4);
+        // 64 was older than 256 at this point.
+        assert_eq!(c.evicted(), &[128, 64]);
+        assert_eq!(c.keys_mru(), vec![512, 256]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.capacity(), 2);
+    }
+
+    #[test]
+    fn rebuild_after_eviction_is_a_miss() {
+        let mut c: PlanCache<u32> = PlanCache::new(1);
+        let mut builds = 0;
+        for _ in 0..2 {
+            c.get_or_insert_with(64, || {
+                builds += 1;
+                7
+            });
+        }
+        assert_eq!(builds, 1, "second access is a hit");
+        c.get_or_insert_with(128, || 8); // evicts 64
+        c.get_or_insert_with(64, || {
+            builds += 1;
+            7
+        });
+        assert_eq!(builds, 2, "evicted entry rebuilds");
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 3);
+        assert_eq!(c.evicted(), &[64, 128]);
+    }
+
+    #[test]
+    fn failed_build_leaves_cache_unchanged() {
+        let mut c: PlanCache<u32> = PlanCache::new(1);
+        c.get_or_insert_with(64, || 1);
+        let r: Result<&mut u32, &'static str> = c.try_get_or_insert_with(128, || Err("boom"));
+        assert!(r.is_err());
+        assert_eq!(c.keys_mru(), vec![64], "no eviction on failed build");
+        assert!(c.evicted().is_empty());
+        // Successful fallible build works and evicts normally.
+        let v = c
+            .try_get_or_insert_with::<&'static str>(128, || Ok(2))
+            .unwrap();
+        assert_eq!(*v, 2);
+        assert_eq!(c.evicted(), &[64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be at least 1")]
+    fn zero_capacity_is_rejected() {
+        let _ = PlanCache::<u32>::new(0);
+    }
+}

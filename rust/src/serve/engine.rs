@@ -1,0 +1,411 @@
+//! The bucket-pinned inference engine (DESIGN.md §7).
+//!
+//! An [`InferenceEngine`] owns the model parameters (as the
+//! precision-appropriate working copy) and a [`PlanCache`] of
+//! **bucket entries**: one forward-only [`AtacWorksNet`] replica per
+//! width bucket, its plans pinned at `(N = max_batch, W = bucket)` and
+//! built with [`crate::conv1d::ConvPlan::with_inference`] (no backward
+//! scratch). A batch of requests is zero-padded into the bucket's
+//! persistent staging tensor and executed in one fused forward pass.
+//!
+//! ## The bit-identity contract
+//!
+//! Two properties compose:
+//!
+//! * **Batch invariance.** Every conv kernel computes each output
+//!   element as the same fused-multiply-add reduction over
+//!   `(tap, channel)` in the same order, **per image** — images never
+//!   mix (batch partitioning shards whole images; grid partitioning
+//!   shards `(image, width-block)` cells). A request row in a batch of
+//!   `max_batch` is bit-identical to the same request through a
+//!   `max_batch = 1` engine.
+//! * **Bucket invariance.** Execution goes through
+//!   [`AtacWorksNet::infer_masked`]: each row's zero-pad tail is
+//!   re-zeroed after every layer, so the tail always holds exactly the
+//!   zeros same-padding at the row's native width would supply, and the
+//!   per-element FMA order is width-independent. A served request is
+//!   therefore bit-identical to evaluating it at its **native width** —
+//!   which bucket (if any) it landed in can never change the answer.
+//!
+//! Batching and bucketing are pure throughput transforms, never
+//! numerics ones. `tests/integration_serve.rs` locks both across
+//! buckets × precisions × partitions.
+
+use std::collections::BTreeMap;
+
+use crate::conv1d::{Backend, Partition};
+use crate::machine::Precision;
+use crate::model::{AtacWorksNet, MasterWeights, NetConfig, Tensor};
+
+use super::bucket::BucketSet;
+use super::cache::PlanCache;
+use super::ServeError;
+
+/// Execution options of one engine (a worker's slice of the
+/// `[serve]` config).
+#[derive(Debug, Clone)]
+pub struct EngineOpts {
+    /// Width buckets this engine serves.
+    pub buckets: BucketSet,
+    /// Batch capacity every bucket's plans are pinned at. Underfilled
+    /// batches zero-pad up to it (wasted rows are the price of plan
+    /// stability; the batching window exists to keep batches full).
+    pub max_batch: usize,
+    /// Kernel-level threads per forward pass.
+    pub threads: usize,
+    /// Forward precision (bf16 = bf16-rounded weights + bf16 kernels).
+    pub precision: Precision,
+    /// Work partitioning (`Grid` keeps every thread busy even when a
+    /// batch window closes with a single request).
+    pub partition: Partition,
+    /// Kernel backend (ignored when `autotune` is set).
+    pub backend: Backend,
+    /// Choose each layer's kernel per bucket via the autotuner.
+    pub autotune: bool,
+    /// Maximum resident bucket entries (LRU beyond this).
+    pub cache_capacity: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            buckets: BucketSet::new(&[1024, 2048, 4096]).expect("static widths"),
+            max_batch: 8,
+            threads: 1,
+            precision: Precision::F32,
+            partition: Partition::Batch,
+            backend: Backend::Brgemm,
+            autotune: false,
+            cache_capacity: 8,
+        }
+    }
+}
+
+/// One cache entry: a forward-only replica pinned to a bucket, plus its
+/// persistent input staging tensor `(max_batch, 1, bucket)`.
+struct BucketEntry {
+    net: AtacWorksNet,
+    x: Tensor,
+}
+
+/// Output of one request: the two head tensors truncated back to the
+/// request's own width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferOutput {
+    /// Denoised coverage track (regression head), length = request width.
+    pub denoised: Vec<f32>,
+    /// Peak-call logits (classification head), length = request width.
+    pub logits: Vec<f32>,
+}
+
+/// A bucket-pinned, plan-cached, forward-only model executor.
+pub struct InferenceEngine {
+    net_cfg: NetConfig,
+    /// Working-copy parameters (bf16-rounded under bf16 serving).
+    working: Vec<f32>,
+    opts: EngineOpts,
+    cache: PlanCache<BucketEntry>,
+}
+
+/// Build one bucket entry: replica + pinned, warmed, forward-only plans.
+fn build_entry(
+    net_cfg: NetConfig,
+    working: &[f32],
+    opts: &EngineOpts,
+    bucket: usize,
+) -> Result<BucketEntry, ServeError> {
+    let mut net = AtacWorksNet::init(net_cfg, 0);
+    net.unpack_params(working);
+    net.set_backend(opts.backend, opts.threads);
+    net.set_partition(opts.partition);
+    net.set_precision(opts.precision);
+    net.set_autotune(opts.autotune);
+    net.set_inference(true);
+    net.warm(opts.max_batch, bucket).map_err(ServeError::Plan)?;
+    Ok(BucketEntry {
+        net,
+        x: Tensor::zeros(opts.max_batch, 1, bucket),
+    })
+}
+
+impl InferenceEngine {
+    /// Build an engine over `params` (the flat packing of
+    /// [`AtacWorksNet::pack_params`], e.g. a training checkpoint). The
+    /// stored copy is the precision's working copy
+    /// ([`MasterWeights::working_copy`]), mirroring what training
+    /// replicas compute with.
+    pub fn new(
+        net_cfg: NetConfig,
+        params: &[f32],
+        opts: EngineOpts,
+    ) -> Result<InferenceEngine, ServeError> {
+        if params.len() != net_cfg.param_count() {
+            return Err(ServeError::Config(format!(
+                "parameter vector has {} values, the model needs {}",
+                params.len(),
+                net_cfg.param_count()
+            )));
+        }
+        if opts.max_batch == 0 {
+            return Err(ServeError::Config("max_batch must be at least 1".into()));
+        }
+        if opts.cache_capacity == 0 {
+            return Err(ServeError::Config(
+                "plan cache capacity must be at least 1".into(),
+            ));
+        }
+        Ok(InferenceEngine {
+            net_cfg,
+            working: MasterWeights::working_copy(params, opts.precision),
+            cache: PlanCache::new(opts.cache_capacity),
+            opts,
+        })
+    }
+
+    /// The engine's options (what the plans are pinned to).
+    pub fn opts(&self) -> &EngineOpts {
+        &self.opts
+    }
+
+    /// Warm the plan cache: build an entry for every bucket (ascending).
+    /// When `cache_capacity < buckets.len()` only the largest-capacity
+    /// suffix stays resident — the overflow shows up in
+    /// [`Self::cache_evictions`] rather than hiding.
+    pub fn warm(&mut self) -> Result<(), ServeError> {
+        let widths = self.opts.buckets.widths().to_vec();
+        for b in widths {
+            let (cfg, working, opts) = (self.net_cfg, &self.working, &self.opts);
+            self.cache
+                .try_get_or_insert_with(b, || build_entry(cfg, working, opts, b))?;
+        }
+        Ok(())
+    }
+
+    /// Resident bucket entries.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// `(hits, misses)` of the plan cache so far.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits(), self.cache.misses())
+    }
+
+    /// Buckets evicted so far, oldest first.
+    pub fn cache_evictions(&self) -> &[usize] {
+        self.cache.evicted()
+    }
+
+    /// Total conv-plan workspace bytes resident across cached buckets.
+    pub fn plan_workspace_bytes(&self) -> usize {
+        self.cache
+            .iter()
+            .map(|(_, e)| e.net.plan_workspace_bytes())
+            .sum()
+    }
+
+    /// Smallest bucket serving a request of width `w` (`Err` when the
+    /// request exceeds the largest configured bucket).
+    pub fn bucket_for(&self, w: usize) -> Result<usize, ServeError> {
+        if w == 0 {
+            return Err(ServeError::EmptyRequest);
+        }
+        self.opts
+            .buckets
+            .bucket_for(w)
+            .ok_or_else(|| ServeError::TooWide {
+                width: w,
+                largest: self.opts.buckets.largest(),
+            })
+    }
+
+    /// Run a set of requests (each a raw coverage track; its length is
+    /// its width). Requests are grouped by bucket, each group executes
+    /// in chunks of `max_batch` through the bucket's cached plans, and
+    /// outputs come back in request order, truncated to each request's
+    /// width. Every row is bit-identical to the same request served
+    /// alone (see the module docs).
+    pub fn infer_batch(&mut self, reqs: &[&[f32]]) -> Result<Vec<InferOutput>, ServeError> {
+        // Validate everything up front: one bad request fails the call
+        // before any compute runs.
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let bucket = self.bucket_for(r.len())?;
+            groups.entry(bucket).or_default().push(i);
+        }
+        let mut out: Vec<Option<InferOutput>> = reqs.iter().map(|_| None).collect();
+        for (bucket, idxs) in groups {
+            for chunk in idxs.chunks(self.opts.max_batch) {
+                self.run_chunk(bucket, chunk, reqs, &mut out)?;
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every request was grouped"))
+            .collect())
+    }
+
+    /// Single-request convenience (the "one-at-a-time" serving mode when
+    /// `max_batch = 1`; also the sequential reference in tests).
+    pub fn infer_one(&mut self, req: &[f32]) -> Result<InferOutput, ServeError> {
+        Ok(self
+            .infer_batch(&[req])?
+            .pop()
+            .expect("one request, one output"))
+    }
+
+    fn run_chunk(
+        &mut self,
+        bucket: usize,
+        chunk: &[usize],
+        reqs: &[&[f32]],
+        out: &mut [Option<InferOutput>],
+    ) -> Result<(), ServeError> {
+        debug_assert!(chunk.len() <= self.opts.max_batch);
+        let (cfg, working, opts) = (self.net_cfg, &self.working, &self.opts);
+        let entry = self
+            .cache
+            .try_get_or_insert_with(bucket, || build_entry(cfg, working, opts, bucket))?;
+        // Zero-pad the staging tensor: row r carries request chunk[r],
+        // rows beyond the chunk stay zero (their outputs are discarded).
+        entry.x.data.fill(0.0);
+        let mut widths = vec![0usize; self.opts.max_batch];
+        for (row, &i) in chunk.iter().enumerate() {
+            entry.x.data[row * bucket..row * bucket + reqs[i].len()].copy_from_slice(reqs[i]);
+            widths[row] = reqs[i].len();
+        }
+        // Width-masked inference: each row's pad tail is re-zeroed
+        // between layers, so its output is bit-identical to native-width
+        // execution — the bucket is an execution shape, not model input
+        // (see AtacWorksNet::infer_masked).
+        let (den, logits) = entry.net.infer_masked(&entry.x, &widths);
+        for (row, &i) in chunk.iter().enumerate() {
+            let w = reqs[i].len();
+            out[i] = Some(InferOutput {
+                denoised: den.data[row * bucket..row * bucket + w].to_vec(),
+                logits: logits.data[row * bucket..row * bucket + w].to_vec(),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_opts() -> EngineOpts {
+        EngineOpts {
+            buckets: BucketSet::new(&[128, 256]).expect("widths"),
+            max_batch: 3,
+            cache_capacity: 2,
+            ..EngineOpts::default()
+        }
+    }
+
+    fn tiny_engine(opts: EngineOpts) -> InferenceEngine {
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        InferenceEngine::new(cfg, &params, opts).expect("engine")
+    }
+
+    fn track(w: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..w).map(|_| rng.poisson(0.7) as f32).collect()
+    }
+
+    #[test]
+    fn routes_widths_to_buckets_and_truncates_outputs() {
+        let mut e = tiny_engine(tiny_opts());
+        let reqs = [track(100, 1), track(128, 2), track(200, 3)];
+        let got = e
+            .infer_batch(&[&reqs[0], &reqs[1], &reqs[2]])
+            .expect("infer");
+        assert_eq!(got.len(), 3);
+        for (g, r) in got.iter().zip(&reqs) {
+            assert_eq!(g.denoised.len(), r.len());
+            assert_eq!(g.logits.len(), r.len());
+        }
+        // 100 and 128 share the 128 bucket; 200 built the 256 bucket.
+        assert_eq!(e.cache_len(), 2);
+        assert_eq!(e.cache_stats().1, 2, "two bucket builds");
+    }
+
+    #[test]
+    fn batched_rows_match_single_request_execution_bitwise() {
+        let mut batched = tiny_engine(tiny_opts());
+        let mut single = tiny_engine(EngineOpts {
+            max_batch: 1,
+            ..tiny_opts()
+        });
+        let reqs = [track(90, 10), track(128, 11), track(60, 12)];
+        let got = batched
+            .infer_batch(&[&reqs[0], &reqs[1], &reqs[2]])
+            .expect("batched");
+        for (g, r) in got.iter().zip(&reqs) {
+            let alone = single.infer_one(r).expect("single");
+            assert_eq!(g, &alone, "batched row must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn warm_prebuilds_every_bucket_so_requests_only_hit() {
+        let mut e = tiny_engine(tiny_opts());
+        e.warm().expect("warm");
+        assert_eq!(e.cache_len(), 2);
+        assert!(e.plan_workspace_bytes() > 0);
+        let (_, misses_after_warm) = e.cache_stats();
+        let r = track(70, 20);
+        e.infer_one(&r).expect("infer");
+        let (hits, misses) = e.cache_stats();
+        assert_eq!(misses, misses_after_warm, "no build after warming");
+        assert!(hits >= 1);
+    }
+
+    #[test]
+    fn rejects_oversized_and_empty_requests() {
+        let mut e = tiny_engine(tiny_opts());
+        let too_wide = track(300, 30);
+        match e.infer_batch(&[&too_wide]) {
+            Err(ServeError::TooWide { width, largest }) => {
+                assert_eq!((width, largest), (300, 256));
+            }
+            other => panic!("expected TooWide, got {other:?}"),
+        }
+        assert!(matches!(
+            e.infer_batch(&[&[][..]]),
+            Err(ServeError::EmptyRequest)
+        ));
+        // A failed batch runs nothing: the cache stays empty.
+        assert_eq!(e.cache_len(), 0);
+    }
+
+    #[test]
+    fn cache_eviction_keeps_serving_correctly() {
+        let mut e = tiny_engine(EngineOpts {
+            buckets: BucketSet::new(&[64, 128, 256]).expect("widths"),
+            cache_capacity: 1,
+            max_batch: 2,
+            ..EngineOpts::default()
+        });
+        let (a, b, c) = (track(64, 40), track(128, 41), track(256, 42));
+        let first = e.infer_one(&a).expect("64");
+        e.infer_one(&b).expect("128");
+        e.infer_one(&c).expect("256");
+        assert_eq!(e.cache_len(), 1);
+        assert_eq!(e.cache_evictions(), &[64, 128]);
+        // A rebuilt bucket still produces the same bits.
+        let again = e.infer_one(&a).expect("64 again");
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn rejects_bad_parameter_vector() {
+        let cfg = NetConfig::tiny();
+        assert!(matches!(
+            InferenceEngine::new(cfg, &[0.0; 3], EngineOpts::default()),
+            Err(ServeError::Config(_))
+        ));
+    }
+}

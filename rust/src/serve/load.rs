@@ -1,0 +1,217 @@
+//! Open-loop load generation (DESIGN.md §7).
+//!
+//! An *open-loop* driver submits requests on a Poisson arrival schedule
+//! that never waits for responses — exactly how real traffic behaves —
+//! so queueing delay shows up in the measured latency instead of being
+//! absorbed by a closed feedback loop (the coordinated-omission trap).
+//! Shared by `benches/serve_load.rs` and the `dilconv serve` demo.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyHistogram;
+use crate::util::rng::Rng;
+
+use super::batcher::{Server, Ticket};
+use super::ServeError;
+
+/// A weighted mix of request widths.
+#[derive(Debug, Clone)]
+pub struct WidthMix {
+    /// `(width, weight)`; weights need not be normalised.
+    entries: Vec<(usize, f64)>,
+    total: f64,
+}
+
+impl WidthMix {
+    pub fn new(entries: Vec<(usize, f64)>) -> Result<WidthMix, String> {
+        if entries.is_empty() {
+            return Err("width mix must name at least one width".into());
+        }
+        if entries.iter().any(|&(w, p)| w == 0 || p.is_nan() || p <= 0.0) {
+            return Err("width-mix entries need positive widths and weights".into());
+        }
+        let total = entries.iter().map(|&(_, p)| p).sum();
+        Ok(WidthMix { entries, total })
+    }
+
+    /// Equal-weight mix over `widths`.
+    pub fn uniform(widths: &[usize]) -> Result<WidthMix, String> {
+        Self::new(widths.iter().map(|&w| (w, 1.0)).collect())
+    }
+
+    /// Equal-weight mix derived from a bucket grid: for every bucket, an
+    /// exact-fit width plus a partial-fill width that still routes to
+    /// that bucket (strictly above the next-smaller bucket, so the
+    /// truncation path of *this* bucket is exercised, not a smaller
+    /// one's exact fit). Shared by `dilconv serve` and the load bench.
+    pub fn bucket_mix(buckets: &super::BucketSet) -> Result<WidthMix, String> {
+        let mut widths = Vec::new();
+        let mut prev = 0usize;
+        for &b in buckets.widths() {
+            widths.push(b);
+            let partial = (b - b / 5).max(prev + 1);
+            if partial < b {
+                widths.push(partial);
+            }
+            prev = b;
+        }
+        Self::uniform(&widths)
+    }
+
+    /// The distinct widths in the mix.
+    pub fn widths(&self) -> Vec<usize> {
+        self.entries.iter().map(|&(w, _)| w).collect()
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let mut t = rng.uniform() * self.total;
+        for &(w, p) in &self.entries {
+            if t < p {
+                return w;
+            }
+            t -= p;
+        }
+        self.entries.last().expect("mix is non-empty").0
+    }
+}
+
+/// What one open-loop run observed.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests the schedule offered.
+    pub offered: usize,
+    /// Requests that completed with a response.
+    pub completed: usize,
+    /// Requests refused at admission (backpressure).
+    pub rejected: usize,
+    /// Requests that failed — rejected at submit for a non-backpressure
+    /// reason (e.g. wider than every bucket) or dropped by the server.
+    pub failed: usize,
+    /// First submit → last response, seconds.
+    pub wall_secs: f64,
+    /// End-to-end latency of completed requests.
+    pub latency: LatencyHistogram,
+    /// Sum over responses of the rows that shared their batch / count —
+    /// the request-weighted mean batch size.
+    pub mean_batch_rows: f64,
+}
+
+impl LoadReport {
+    /// Completed sequences per wall-clock second — the serving
+    /// throughput this run sustained.
+    pub fn seq_per_sec(&self) -> f64 {
+        self.completed as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Drive `server` with `total` requests at `rate_per_sec` (exponential
+/// interarrivals, seeded), widths drawn from `mix`, synthetic Poisson
+/// coverage tracks as payloads. Blocks until every accepted request has
+/// responded.
+pub fn run_open_loop(
+    server: &Server,
+    mix: &WidthMix,
+    rate_per_sec: f64,
+    total: usize,
+    seed: u64,
+) -> LoadReport {
+    assert!(rate_per_sec > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(total);
+    let mut rejected = 0usize;
+    let mut failed = 0usize;
+    let start = Instant::now();
+    let mut next_arrival = 0.0f64; // seconds after start
+    for _ in 0..total {
+        // Exponential interarrival: Poisson process at the target rate.
+        let u = rng.uniform().max(1e-12);
+        next_arrival += -u.ln() / rate_per_sec;
+        let due = start + Duration::from_secs_f64(next_arrival);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let w = mix.sample(&mut rng);
+        let data: Vec<f32> = (0..w).map(|_| rng.poisson(0.6) as f32).collect();
+        match server.submit(data) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::QueueFull { .. }) => rejected += 1,
+            // Any other submit error (mix wider than the server's
+            // buckets, shutdown) is the driver's measurement to report,
+            // not a reason to abort with tickets outstanding.
+            Err(_) => failed += 1,
+        }
+    }
+    let mut latency = LatencyHistogram::new();
+    let mut completed = 0usize;
+    let mut batch_rows_sum = 0.0f64;
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                latency.record(r.latency_secs);
+                batch_rows_sum += r.batch_rows as f64;
+                completed += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    LoadReport {
+        offered: total,
+        completed,
+        rejected,
+        failed,
+        wall_secs: start.elapsed().as_secs_f64(),
+        latency,
+        mean_batch_rows: batch_rows_sum / completed.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_sampling_respects_weights() {
+        let mix = WidthMix::new(vec![(100, 3.0), (200, 1.0)]).unwrap();
+        let mut rng = Rng::new(7);
+        let mut count_100 = 0;
+        for _ in 0..1000 {
+            if mix.sample(&mut rng) == 100 {
+                count_100 += 1;
+            }
+        }
+        // 75% expected; allow generous slack.
+        assert!((650..=850).contains(&count_100), "{count_100}");
+        assert_eq!(mix.widths(), vec![100, 200]);
+    }
+
+    #[test]
+    fn mix_rejects_degenerate_specs() {
+        assert!(WidthMix::new(vec![]).is_err());
+        assert!(WidthMix::new(vec![(0, 1.0)]).is_err());
+        assert!(WidthMix::new(vec![(10, 0.0)]).is_err());
+        assert!(WidthMix::uniform(&[64, 128]).is_ok());
+    }
+
+    #[test]
+    fn bucket_mix_partial_widths_stay_in_their_bucket() {
+        use crate::serve::BucketSet;
+        // Closely spaced grid: the naive b - b/5 partial for 1280 would
+        // be 1024 — an exact fit for the smaller bucket, not a partial
+        // fill of this one. bucket_mix must keep it strictly above the
+        // next-smaller bucket.
+        let buckets = BucketSet::new(&[1024, 1280]).unwrap();
+        let mix = WidthMix::bucket_mix(&buckets).unwrap();
+        // Exact fits for both buckets, and the 1280 partial is clamped
+        // to 1025 (smallest width that still routes to 1280) instead of
+        // the naive 1024.
+        assert_eq!(mix.widths(), vec![1024, 820, 1280, 1025]);
+        for w in mix.widths() {
+            assert!(buckets.bucket_for(w).is_some(), "{w} must fit a bucket");
+        }
+        // Wide spacing keeps the 20% partials.
+        let wide = BucketSet::new(&[512, 4096]).unwrap();
+        let m2 = WidthMix::bucket_mix(&wide).unwrap();
+        assert!(m2.widths().contains(&(4096 - 4096 / 5)));
+    }
+}

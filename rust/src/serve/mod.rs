@@ -1,0 +1,89 @@
+//! Batched inference serving (DESIGN.md §7).
+//!
+//! The training side of this repo amortizes plans, weight relayouts and
+//! autotune probes across *steps*; this module amortizes them across
+//! *requests*. The pipeline:
+//!
+//! ```text
+//!  submit(track) ──► admission (bounded in-flight budget, QueueFull)
+//!       │
+//!       ▼
+//!  dispatcher: group by width bucket ──► flush on max_batch | window
+//!       │                                     (round-robin ranks)
+//!       ▼
+//!  worker pool (PersistentPool): each rank owns an InferenceEngine
+//!       │          └─ PlanCache: bucket → forward-only AtacWorksNet
+//!       │                        (ConvPlan + workspace per layer,
+//!       │                         pinned at N = max_batch, W = bucket,
+//!       │                         LRU-evicted, warmed at startup)
+//!       ▼
+//!  Response { denoised, logits, latency } + latency/throughput metrics
+//! ```
+//!
+//! * [`bucket`]  — the width-bucket vocabulary (64-aligned grid)
+//! * [`cache`]   — the shape-bucketed LRU plan cache
+//! * [`engine`]  — bucket-pinned forward-only execution; the
+//!   **bit-identity contract**: a batched row equals the same request
+//!   served alone, bit for bit (per-image kernel loops)
+//! * [`batcher`] — dynamic batcher, admission control, worker pool,
+//!   telemetry
+//! * [`load`]    — open-loop load generation (benches + `dilconv serve`)
+
+pub mod batcher;
+pub mod bucket;
+pub mod cache;
+pub mod engine;
+pub mod load;
+
+pub use batcher::{BatcherOpts, BucketMetrics, Response, ServeMetrics, Server, Ticket};
+pub use bucket::{round_up_to_block, BucketSet};
+pub use cache::PlanCache;
+pub use engine::{EngineOpts, InferOutput, InferenceEngine};
+pub use load::{run_open_loop, LoadReport, WidthMix};
+
+use crate::conv1d::PlanError;
+
+/// Everything that can go wrong between `submit` and a response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Request wider than the largest configured bucket (padding *down*
+    /// would corrupt it; the caller must reject or re-shard).
+    TooWide { width: usize, largest: usize },
+    /// Zero-length request.
+    EmptyRequest,
+    /// Admission control: the bounded in-flight budget is exhausted —
+    /// backpressure, retry later.
+    QueueFull { depth: usize },
+    /// The server dropped the request while shutting down.
+    ShuttingDown,
+    /// Plan construction failed for a bucket entry.
+    Plan(PlanError),
+    /// Invalid serving configuration.
+    Config(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::TooWide { width, largest } => write!(
+                f,
+                "request width {width} exceeds the largest bucket ({largest})"
+            ),
+            ServeError::EmptyRequest => write!(f, "empty request"),
+            ServeError::QueueFull { depth } => {
+                write!(f, "queue full ({depth} requests in flight)")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Plan(e) => write!(f, "{e}"),
+            ServeError::Config(msg) => write!(f, "serve config error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<PlanError> for ServeError {
+    fn from(e: PlanError) -> ServeError {
+        ServeError::Plan(e)
+    }
+}

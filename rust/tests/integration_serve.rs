@@ -1,0 +1,302 @@
+//! Integration: the batched inference serving subsystem (DESIGN.md §7).
+//!
+//! The load-bearing guarantee is **bit-identity**: serving a request in
+//! a dynamic batch must produce exactly the bits that one-at-a-time
+//! execution produces. The conv kernels compute each output element as
+//! the same FMA reduction in the same order per image, for any batch
+//! size and either work partition — so this is an `assert_eq!` on f32
+//! vectors, not a tolerance. The matrix here covers ≥3 width buckets ×
+//! {f32, bf16} × {batch, grid}, at the engine level and end-to-end
+//! through the server (dispatcher + worker pool + admission control).
+
+use std::time::Duration;
+
+use dilconv1d::conv1d::Partition;
+use dilconv1d::machine::Precision;
+use dilconv1d::model::{AtacWorksNet, MasterWeights, NetConfig, Tensor};
+use dilconv1d::serve::{
+    BatcherOpts, BucketSet, EngineOpts, InferenceEngine, ServeError, Server,
+};
+use dilconv1d::util::rng::Rng;
+
+const BUCKETS: [usize; 3] = [128, 256, 384];
+
+fn net_cfg() -> NetConfig {
+    NetConfig::tiny()
+}
+
+fn params() -> Vec<f32> {
+    AtacWorksNet::init(net_cfg(), 42).pack_params()
+}
+
+fn opts(max_batch: usize, precision: Precision, partition: Partition) -> EngineOpts {
+    EngineOpts {
+        buckets: BucketSet::new(&BUCKETS).expect("bucket widths"),
+        max_batch,
+        threads: 2,
+        precision,
+        partition,
+        cache_capacity: BUCKETS.len(),
+        ..EngineOpts::default()
+    }
+}
+
+/// Synthetic Poisson coverage track of width `w`.
+fn track(w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..w).map(|_| rng.poisson(0.8) as f32).collect()
+}
+
+/// A width mix that hits every bucket, both exactly and with padding.
+fn request_widths() -> Vec<usize> {
+    vec![100, 128, 65, 200, 256, 129, 300, 384, 260, 90, 383, 128]
+}
+
+#[test]
+fn batched_serving_is_bit_identical_to_sequential_across_the_matrix() {
+    let p = params();
+    for precision in [Precision::F32, Precision::Bf16] {
+        for partition in [Partition::Batch, Partition::Grid] {
+            let mut batched =
+                InferenceEngine::new(net_cfg(), &p, opts(4, precision, partition))
+                    .expect("batched engine");
+            let mut single =
+                InferenceEngine::new(net_cfg(), &p, opts(1, precision, partition))
+                    .expect("single engine");
+            let reqs: Vec<Vec<f32>> = request_widths()
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| track(w, 100 + i as u64))
+                .collect();
+            let refs: Vec<&[f32]> = reqs.iter().map(Vec::as_slice).collect();
+            let got = batched.infer_batch(&refs).expect("batched inference");
+            assert_eq!(got.len(), reqs.len());
+            for (i, (g, r)) in got.iter().zip(&reqs).enumerate() {
+                let alone = single.infer_one(r).expect("sequential inference");
+                assert_eq!(
+                    g.denoised, alone.denoised,
+                    "{precision:?}/{partition}: denoised row {i} (w={}) diverged from \
+                     one-at-a-time execution",
+                    r.len()
+                );
+                assert_eq!(
+                    g.logits, alone.logits,
+                    "{precision:?}/{partition}: logits row {i} (w={}) diverged",
+                    r.len()
+                );
+                assert_eq!(g.denoised.len(), r.len(), "output truncated to request width");
+            }
+            // All three buckets were exercised.
+            assert_eq!(batched.cache_len(), BUCKETS.len());
+        }
+    }
+}
+
+#[test]
+fn grid_and_batch_partitions_serve_identical_bits() {
+    // The partition is an execution detail, never a numerics one: the
+    // same engine config under batch vs grid partitioning returns
+    // identical responses.
+    let p = params();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let mut a = InferenceEngine::new(net_cfg(), &p, opts(4, precision, Partition::Batch))
+            .expect("batch engine");
+        let mut b = InferenceEngine::new(net_cfg(), &p, opts(4, precision, Partition::Grid))
+            .expect("grid engine");
+        let reqs: Vec<Vec<f32>> = (0..6).map(|i| track(120 + 40 * i, 500 + i as u64)).collect();
+        let refs: Vec<&[f32]> = reqs.iter().map(Vec::as_slice).collect();
+        let ra = a.infer_batch(&refs).expect("batch partition");
+        let rb = b.infer_batch(&refs).expect("grid partition");
+        assert_eq!(ra, rb, "{precision:?}: grid vs batch partition");
+    }
+}
+
+#[test]
+fn serving_is_bucket_invariant_and_matches_native_width_evaluation() {
+    // Width masking makes the bucket an execution shape only: the same
+    // request through two engines with *different* bucket grids returns
+    // identical bits, and both equal evaluating the model directly at
+    // the request's native width (no serving stack at all).
+    let p = params();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let mut coarse = InferenceEngine::new(
+            net_cfg(),
+            &p,
+            EngineOpts {
+                buckets: BucketSet::new(&[256]).expect("bucket"),
+                ..opts(4, precision, Partition::Batch)
+            },
+        )
+        .expect("coarse engine");
+        let mut fine = InferenceEngine::new(
+            net_cfg(),
+            &p,
+            EngineOpts {
+                buckets: BucketSet::new(&[384]).expect("bucket"),
+                ..opts(2, precision, Partition::Grid)
+            },
+        )
+        .expect("fine engine");
+        let r = track(200, 77);
+        let a = coarse.infer_one(&r).expect("bucket 256");
+        let b = fine.infer_one(&r).expect("bucket 384");
+        assert_eq!(a, b, "{precision:?}: the bucket must never change the answer");
+        // Native-width reference: the bare model, no serving stack. It
+        // loads the same working copy the engines serve (bf16 rounds
+        // biases too, which the f32 epilogue consumes directly).
+        let mut net = AtacWorksNet::init(net_cfg(), 0);
+        net.unpack_params(&MasterWeights::working_copy(&p, precision));
+        net.set_precision(precision);
+        let x = Tensor::from_vec(r.clone(), 1, 1, r.len());
+        let (den, logits, _) = net.forward(&x, false);
+        assert_eq!(a.denoised, den.data, "{precision:?}: native-width denoised");
+        assert_eq!(a.logits, logits.data, "{precision:?}: native-width logits");
+    }
+}
+
+#[test]
+fn server_end_to_end_matches_the_sequential_reference() {
+    let p = params();
+    for precision in [Precision::F32, Precision::Bf16] {
+        for partition in [Partition::Batch, Partition::Grid] {
+            let server = Server::start(
+                net_cfg(),
+                &p,
+                BatcherOpts {
+                    engine: opts(4, precision, partition),
+                    window: Duration::from_millis(2),
+                    queue_depth: 64,
+                    workers: 2,
+                    warm: true,
+                },
+            )
+            .expect("server");
+            let reqs: Vec<Vec<f32>> = request_widths()
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| track(w, 900 + i as u64))
+                .collect();
+            let tickets: Vec<_> = reqs
+                .iter()
+                .map(|r| server.submit(r.clone()).expect("submit"))
+                .collect();
+            let mut reference =
+                InferenceEngine::new(net_cfg(), &p, opts(1, precision, partition))
+                    .expect("reference engine");
+            for (i, (t, r)) in tickets.into_iter().zip(&reqs).enumerate() {
+                let resp = t.wait().expect("response");
+                let want = reference.infer_one(r).expect("reference");
+                assert_eq!(
+                    resp.output, want,
+                    "{precision:?}/{partition}: served request {i} (w={}) diverged",
+                    r.len()
+                );
+                assert!(resp.batch_rows >= 1 && resp.batch_rows <= 4);
+                assert!(BUCKETS.contains(&resp.bucket));
+            }
+            let m = server.shutdown();
+            assert_eq!(m.completed, reqs.len() as u64);
+            assert_eq!(m.rejected + m.failed, 0);
+            assert_eq!(m.latency.count(), reqs.len() as u64);
+            assert!(m.batches >= 3, "three buckets cannot share a batch");
+            // Every observed bucket is a configured bucket.
+            for b in m.per_bucket.keys() {
+                assert!(BUCKETS.contains(b));
+            }
+        }
+    }
+}
+
+#[test]
+fn admission_control_backpressure_and_recovery() {
+    // Park requests behind a long window so the in-flight budget fills
+    // deterministically, assert QueueFull, then confirm the accepted
+    // requests drain and the server keeps working afterwards.
+    let server = Server::start(
+        net_cfg(),
+        &params(),
+        BatcherOpts {
+            engine: opts(64, Precision::F32, Partition::Batch),
+            window: Duration::from_millis(300),
+            queue_depth: 4,
+            workers: 1,
+            warm: false,
+        },
+    )
+    .expect("server");
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for i in 0..10 {
+        match server.submit(track(100, i)) {
+            Ok(t) => accepted.push(t),
+            Err(ServeError::QueueFull { depth }) => {
+                assert_eq!(depth, 4);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(accepted.len(), 4);
+    assert_eq!(rejected, 6);
+    for t in accepted {
+        t.wait().expect("accepted request completes after the window");
+    }
+    // Capacity freed: a fresh submit is admitted again.
+    let t = server.submit(track(64, 99)).expect("recovered after drain");
+    let r = t.wait().expect("late request completes");
+    assert_eq!(r.output.denoised.len(), 64);
+    let m = server.shutdown();
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.rejected, 6);
+}
+
+#[test]
+fn oversized_requests_are_rejected_not_truncated() {
+    let server = Server::start(
+        net_cfg(),
+        &params(),
+        BatcherOpts {
+            engine: opts(2, Precision::F32, Partition::Batch),
+            window: Duration::from_millis(1),
+            queue_depth: 8,
+            workers: 1,
+            warm: false,
+        },
+    )
+    .expect("server");
+    match server.submit(track(500, 1)) {
+        Err(ServeError::TooWide { width, largest }) => {
+            assert_eq!((width, largest), (500, 384));
+        }
+        other => panic!("expected TooWide, got {:?}", other.map(|_| ())),
+    }
+    assert!(matches!(server.submit(Vec::new()), Err(ServeError::EmptyRequest)));
+    drop(server);
+}
+
+#[test]
+fn bf16_serving_actually_rounds_and_differs_from_f32() {
+    // Guard against bf16 serving silently running f32 kernels: the two
+    // precisions must disagree somewhere on a non-trivial track.
+    let p = params();
+    let mut f32e = InferenceEngine::new(
+        net_cfg(),
+        &p,
+        opts(1, Precision::F32, Partition::Batch),
+    )
+    .expect("f32 engine");
+    let mut bf16e = InferenceEngine::new(
+        net_cfg(),
+        &p,
+        opts(1, Precision::Bf16, Partition::Batch),
+    )
+    .expect("bf16 engine");
+    let r = track(200, 7);
+    let a = f32e.infer_one(&r).expect("f32");
+    let b = bf16e.infer_one(&r).expect("bf16");
+    assert_ne!(a.denoised, b.denoised, "bf16 path must not be f32 in disguise");
+    // But they agree to bf16 tolerance — same model, rounded weights.
+    for (x, y) in a.denoised.iter().zip(&b.denoised) {
+        assert!((x - y).abs() < 4e-2 * (1.0 + x.abs()), "{x} vs {y}");
+    }
+}

@@ -1,4 +1,4 @@
-//! Property-based tests of the conv1d kernel invariants (DESIGN.md §8).
+//! Property-based tests of the conv1d kernel invariants (DESIGN.md §9).
 //!
 //! The offline build has no proptest; properties are checked over many
 //! deterministically-random cases drawn from a seeded PRNG — shrinkage is
