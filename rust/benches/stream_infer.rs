@@ -1,0 +1,210 @@
+//! BENCH — halo-overlapped streaming inference (DESIGN.md §7b):
+//! fixed-memory windowed evaluation vs whole-sequence evaluation on one
+//! long signal. For each window size the bench asserts **bit-identity**
+//! against the whole-sequence reference, then reports sustained cols/s,
+//! the stitch overhead (a window recomputes its two halos, so ideal cost
+//! grows by window/core), and the plan-workspace footprint that streaming
+//! caps at O(window). Rows are written to `BENCH_stream.json`.
+//!
+//! `BENCH_SMOKE=1` shrinks to the tiny model geometry and a 4096-column
+//! signal. Under `BENCH_STRICT` the windowed plan workspace must stay
+//! strictly below the whole-sequence plan workspace — that inequality is
+//! the subsystem's reason to exist.
+
+use dilconv1d::bench_harness::{self, time_fn};
+use dilconv1d::conv1d::Partition;
+use dilconv1d::machine::Precision;
+use dilconv1d::model::{AtacWorksNet, NetConfig};
+use dilconv1d::serve::{
+    round_up_to_block, BucketSet, EngineOpts, InferenceEngine, StreamingSession,
+};
+use dilconv1d::util::rng::Rng;
+
+fn engine(cfg: NetConfig, params: &[f32], bucket: usize, threads: usize) -> InferenceEngine {
+    InferenceEngine::new(
+        cfg,
+        params,
+        EngineOpts {
+            buckets: BucketSet::new(&[bucket]).expect("bucket width"),
+            max_batch: 1,
+            threads,
+            precision: Precision::F32,
+            partition: Partition::Grid,
+            cache_capacity: 1,
+            ..EngineOpts::default()
+        },
+    )
+    .expect("engine")
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+struct Row {
+    window: usize,
+    halo: usize,
+    core: usize,
+    windows: usize,
+    median_ms: f64,
+    cols_per_sec: f64,
+    workspace_bytes: usize,
+}
+
+fn main() {
+    let smoke = bench_harness::smoke();
+    let threads = 4usize;
+    // Window sweep + signal length. The full geometry keeps the halo
+    // moderate (reach 300) so kilobyte-scale windows are legal; the
+    // paper-default schedule (reach 4800) needs > 9600-wide windows and
+    // is covered by the config-level auto-resolution rules instead.
+    let (cfg, windows, seq_len, reps) = if smoke {
+        (NetConfig::tiny(), vec![128usize, 256, 384], 4_096usize, 2usize)
+    } else {
+        (
+            NetConfig {
+                channels: 15,
+                n_blocks: 2,
+                filter_size: 51,
+                dilation: 2,
+            },
+            vec![1_024usize, 2_048, 4_096],
+            16_384usize,
+            5usize,
+        )
+    };
+    let reach = cfg.receptive_field_reach();
+    let params = AtacWorksNet::init(cfg, 42).pack_params();
+    let mut rng = Rng::new(7);
+    let signal: Vec<f32> = (0..seq_len).map(|_| rng.poisson(0.8) as f32).collect();
+
+    println!(
+        "# stream_infer: {seq_len}-col signal, reach {reach}, windows {windows:?}, \
+         {threads} threads{}",
+        if smoke { " [SMOKE]" } else { "" },
+    );
+
+    // Whole-sequence reference: one bucket wide enough for the signal.
+    let mut whole = engine(cfg, &params, round_up_to_block(seq_len), threads);
+    let want = whole.infer_one(&signal).expect("whole-sequence reference");
+    let t_whole = time_fn(1, reps, || {
+        let r = whole.infer_one(&signal).expect("whole-sequence inference");
+        std::hint::black_box(&r);
+    });
+    let ws_whole = whole.plan_workspace_bytes();
+    let whole_cols = seq_len as f64 / t_whole.median_secs;
+    println!(
+        "whole-sequence   bucket {:>5}  {:>8.2} ms  {:>10.0} cols/s  workspace {:>8} B",
+        round_up_to_block(seq_len),
+        t_whole.median_secs * 1e3,
+        whole_cols,
+        ws_whole,
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &window in &windows {
+        let mut eng = engine(cfg, &params, window, threads);
+        let (t, stats, halo, core) = {
+            let mut session = StreamingSession::new(&mut eng, window).expect("session");
+            // Bit-identity gate before anything is timed: stitched
+            // windows must reproduce the whole-sequence bits exactly.
+            let got = session.infer(&signal).expect("streamed inference");
+            assert_eq!(
+                bits(&got.denoised),
+                bits(&want.denoised),
+                "window {window}: denoised bits diverged from whole-sequence"
+            );
+            assert_eq!(
+                bits(&got.logits),
+                bits(&want.logits),
+                "window {window}: logits bits diverged from whole-sequence"
+            );
+            let stats = session
+                .infer_with(&signal, |_, _, _| {})
+                .expect("window count");
+            let t = time_fn(1, reps, || {
+                let mut acc = 0.0f32;
+                session
+                    .infer_with(&signal, |_, d, _| acc += d[0])
+                    .expect("streamed inference");
+                std::hint::black_box(acc);
+            });
+            (t, stats, session.halo(), session.core())
+        };
+        let ws = eng.plan_workspace_bytes();
+        let cols = seq_len as f64 / t.median_secs;
+        // A window re-derives its two halos, so ideal overhead is
+        // window/core; report measured cost against the whole pass.
+        println!(
+            "window {window:>5} (halo {halo:>4}, {:>3} windows)  {:>8.2} ms  {:>10.0} cols/s  \
+             {:.2}x whole  workspace {:>8} B",
+            stats.windows,
+            t.median_secs * 1e3,
+            cols,
+            t.median_secs / t_whole.median_secs,
+            ws,
+        );
+        if ws >= ws_whole {
+            eprintln!(
+                "WARN: window {window} plan workspace {ws} B not below whole-sequence \
+                 {ws_whole} B"
+            );
+        }
+        if bench_harness::strict() {
+            assert!(
+                ws < ws_whole,
+                "streaming must cap the plan workspace below the whole-sequence plan: \
+                 window {window} used {ws} B vs {ws_whole} B"
+            );
+        }
+        rows.push(Row {
+            window,
+            halo,
+            core,
+            windows: stats.windows,
+            median_ms: t.median_secs * 1e3,
+            cols_per_sec: cols,
+            workspace_bytes: ws,
+        });
+    }
+
+    // Bench trajectory rows (BENCH_*.json at the repo root).
+    let mut json = format!(
+        "{{\n  \"bench\": \"stream_infer\",\n  \"smoke\": {smoke},\n  \"threads\": {threads},\n  \
+         \"seq_len\": {seq_len},\n  \"reach\": {reach},\n  \
+         \"whole_bucket\": {},\n  \"whole_ms\": {:.4},\n  \"whole_cols_per_sec\": {:.1},\n  \
+         \"whole_workspace_bytes\": {ws_whole},\n  \"rows\": [\n",
+        round_up_to_block(seq_len),
+        t_whole.median_secs * 1e3,
+        whole_cols,
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"window\": {}, \"halo\": {}, \"core\": {}, \"windows\": {}, \
+             \"median_ms\": {:.4}, \"cols_per_sec\": {:.1}, \"workspace_bytes\": {}, \
+             \"overhead_vs_whole\": {:.4}}}{}\n",
+            r.window,
+            r.halo,
+            r.core,
+            r.windows,
+            r.median_ms,
+            r.cols_per_sec,
+            r.workspace_bytes,
+            r.median_ms / (t_whole.median_secs * 1e3),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    // Benches run from rust/; place the trajectory file at the repo root
+    // when it is visible, else in the working directory.
+    let out_path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_stream.json"
+    } else {
+        "BENCH_stream.json"
+    };
+    match std::fs::write(out_path, &json) {
+        Ok(()) => println!("bench rows written to {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
+    }
+    println!("stream_infer bench done");
+}

@@ -7,7 +7,7 @@ pub mod toml;
 use crate::conv1d::{Backend, Partition, PostOps};
 use crate::machine::Precision;
 use crate::model::NetConfig;
-use crate::serve::{BatcherOpts, BucketSet, EngineOpts};
+use crate::serve::{round_up_to_block, BatcherOpts, BucketSet, EngineOpts};
 
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -289,6 +289,19 @@ pub struct ServeConfig {
     pub cache_capacity: usize,
     /// Pre-build every bucket's plans before accepting traffic.
     pub warm: bool,
+    /// TCP listen address (`listen = "127.0.0.1:7878"`; `--listen`).
+    /// `None` keeps the server in-process (load-generator mode).
+    pub listen: Option<String>,
+    /// Route requests wider than every bucket through halo-overlapped
+    /// streaming windows instead of rejecting them (`stream = true`).
+    pub stream: bool,
+    /// Streaming window width in samples; `0` means auto (the largest
+    /// bucket, when it can hold two receptive-field halos — deep
+    /// geometries whose halo exceeds every bucket keep streaming off).
+    pub stream_window: usize,
+    /// Network drain budget at shutdown, milliseconds: connections
+    /// still serving after this long are force-closed.
+    pub drain_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -312,6 +325,10 @@ impl Default for ServeConfig {
             autotune: false,
             cache_capacity: 8,
             warm: true,
+            listen: None,
+            stream: true,
+            stream_window: 0,
+            drain_ms: 5_000.0,
         }
     }
 }
@@ -360,6 +377,16 @@ impl ServeConfig {
         if let Some(b) = toml::get_bool(&doc, "serve", "warm") {
             cfg.warm = b;
         }
+        if let Some(s) = toml::get_str(&doc, "serve", "listen") {
+            cfg.listen = Some(s.to_string());
+        }
+        if let Some(b) = toml::get_bool(&doc, "serve", "stream") {
+            cfg.stream = b;
+        }
+        set_usize(&doc, "serve", "stream_window", &mut cfg.stream_window);
+        if let Some(v) = toml::get_f64(&doc, "serve", "drain_ms") {
+            cfg.drain_ms = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -389,6 +416,14 @@ impl ServeConfig {
             "backend" => self.apply_backend_name(value)?,
             "autotune" => self.autotune = parse_bool_flag(key, value)?,
             "no-warm" => self.warm = !parse_bool_flag(key, value)?,
+            "listen" => self.listen = Some(value.to_string()),
+            "stream" => self.stream = parse_bool_flag(key, value)?,
+            "stream-window" => self.stream_window = uint(value, key)?,
+            "drain-ms" => {
+                self.drain_ms = value
+                    .parse()
+                    .with_context(|| format!("--drain-ms must be a number, got '{value}'"))?
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -429,7 +464,47 @@ impl ServeConfig {
         if self.cache_capacity == 0 {
             return Err(anyhow!("serve.cache_capacity must be at least 1"));
         }
+        if self.drain_ms.is_nan() || self.drain_ms <= 0.0 {
+            return Err(anyhow!(
+                "serve.drain_ms must be positive, got {}",
+                self.drain_ms
+            ));
+        }
+        if self.stream && self.stream_window != 0 {
+            let w = round_up_to_block(self.stream_window);
+            let largest = self.buckets.largest();
+            if w > largest {
+                return Err(anyhow!(
+                    "serve.stream_window {w} exceeds the largest bucket ({largest})"
+                ));
+            }
+            let halo = self.net_config().receptive_field_reach();
+            if w <= 2 * halo {
+                return Err(anyhow!(
+                    "serve.stream_window {w} must exceed twice the receptive-field \
+                     reach (2 x {halo}) of this model geometry"
+                ));
+            }
+        }
         Ok(())
+    }
+
+    /// The streaming window the batcher should run with: `None` when
+    /// streaming is off, the block-rounded explicit width when one was
+    /// given, else the largest bucket — but only when that bucket can
+    /// hold two receptive-field halos (the paper-default geometry's
+    /// 4800-column halo exceeds the default 4096 bucket, so auto keeps
+    /// streaming off there rather than failing startup).
+    pub fn resolved_stream_window(&self) -> Option<usize> {
+        if !self.stream {
+            return None;
+        }
+        let halo = self.net_config().receptive_field_reach();
+        if self.stream_window != 0 {
+            return Some(round_up_to_block(self.stream_window));
+        }
+        let largest = self.buckets.largest();
+        (largest > 2 * halo).then_some(largest)
     }
 
     /// The model geometry this server executes.
@@ -464,6 +539,7 @@ impl ServeConfig {
             queue_depth: self.queue_depth,
             workers: self.workers,
             warm: self.warm,
+            stream_window: self.resolved_stream_window(),
         }
     }
 }
@@ -599,6 +675,7 @@ tune_cache = "tune.json"
 [model]
 channels = 8
 n_blocks = 2
+dilation = 1
 [serve]
 buckets = "500,2048"
 max_batch = 16
@@ -611,6 +688,9 @@ partition = "grid"
 autotune = true
 cache_capacity = 3
 warm = false
+listen = "127.0.0.1:0"
+stream_window = 500
+drain_ms = 250.0
 "#,
         )
         .unwrap();
@@ -641,6 +721,39 @@ warm = false
         assert_eq!(b.workers, 2);
         assert!(!b.warm);
         assert_eq!(c.net_config().channels, 8);
+        // Network/streaming keys: listen address, block-rounded window
+        // (n_blocks 2 / dilation 1 keep the halo at 6·25 = 150, so the
+        // 512 window clears the 2·halo floor), drain budget.
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:0"));
+        assert!(c.stream);
+        assert_eq!(c.drain_ms, 250.0);
+        assert_eq!(c.resolved_stream_window(), Some(512));
+        assert_eq!(b.stream_window, Some(512));
+    }
+
+    #[test]
+    fn stream_window_auto_resolution_respects_the_halo() {
+        // Default geometry: halo 24 * 200 = 4800 > 4096 (largest default
+        // bucket) — auto streaming stays off instead of failing startup.
+        let c = ServeConfig::default();
+        assert!(c.stream);
+        assert_eq!(c.resolved_stream_window(), None);
+        assert_eq!(c.batcher_opts().stream_window, None);
+        // A shallow geometry auto-streams at the largest bucket.
+        let shallow = ServeConfig {
+            channels: 4,
+            n_blocks: 1,
+            filter_size: 9,
+            dilation: 2, // halo 32
+            ..ServeConfig::default()
+        };
+        assert_eq!(shallow.resolved_stream_window(), Some(4096));
+        // `stream = false` switches the route off entirely.
+        let off = ServeConfig {
+            stream: false,
+            ..shallow
+        };
+        assert_eq!(off.resolved_stream_window(), None);
     }
 
     #[test]
@@ -658,6 +771,13 @@ warm = false
             ("partition", "grid"),
             ("autotune", "true"),
             ("no-warm", "true"),
+            ("listen", "0.0.0.0:9000"),
+            // `stream = false`: the default geometry's halo (4800) fits
+            // no 256-wide bucket, so an *active* explicit window would
+            // fail validate below — ownership is what this test checks.
+            ("stream", "false"),
+            ("stream-window", "100"),
+            ("drain-ms", "100"),
         ] {
             assert!(c.apply_flag(k, v).unwrap(), "--{k} must be owned");
         }
@@ -671,6 +791,11 @@ warm = false
         assert_eq!(c.precision, Precision::Bf16);
         assert_eq!(c.partition, Partition::Grid);
         assert!(c.autotune && !c.warm);
+        assert_eq!(c.listen.as_deref(), Some("0.0.0.0:9000"));
+        assert!(!c.stream);
+        assert_eq!(c.stream_window, 100);
+        assert_eq!(c.drain_ms, 100.0);
+        assert_eq!(c.resolved_stream_window(), None, "stream=false wins");
         c.validate().unwrap();
         // Backend names resolve through the registry; "bf16" pins both.
         c.apply_flag("backend", "onednn").unwrap();
@@ -710,6 +835,21 @@ warm = false
             std::fs::write(&p, format!("[serve]\n{key} = 0\n")).unwrap();
             assert!(ServeConfig::from_file(&p).is_err(), "{key} = 0 must fail");
         }
+        // Non-positive drain budget.
+        std::fs::write(&p, "[serve]\ndrain_ms = 0\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        // An active stream window must clear the geometry checks: the
+        // default model's halo is 4800, so 128 (≤ 2·halo) must fail …
+        std::fs::write(&p, "[serve]\nstream_window = 128\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        // … and any window must fit the largest bucket.
+        std::fs::write(
+            &p,
+            "[model]\nchannels = 4\nn_blocks = 1\nfilter_size = 9\ndilation = 2\n\
+             [serve]\nbuckets = \"128\"\nstream_window = 512\n",
+        )
+        .unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
         // A default config validates.
         ServeConfig::default().validate().unwrap();
     }

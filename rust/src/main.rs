@@ -138,6 +138,13 @@ USAGE: dilconv <subcommand> [--flags]
                    [--precision f32|bf16] [--partition batch|grid]
                    [--autotune] [--cache-capacity N] [--no-warm]
                    [--requests N] [--rate F] [--seed N]
+                   [--listen addr:port] serve the TCP wire protocol
+                   instead of synthetic load ([--duration-secs F] then
+                   drain and print stats; default: run until killed)
+                   [--stream true|false] [--stream-window N] route
+                   requests wider than every bucket through halo-
+                   overlapped streaming windows (bit-identical to
+                   whole-sequence evaluation) [--drain-ms F]
   sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
                    --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
                    [--reps N] [--batch N] [--max-q N]
@@ -268,7 +275,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => ServeConfig::default(),
     };
     // Load-driver flags are owned here, everything else by the config.
-    let driver_flags = ["config", "checkpoint", "requests", "rate", "seed"];
+    let driver_flags = ["config", "checkpoint", "requests", "rate", "seed", "duration-secs"];
     for (k, v) in &args.flags {
         if driver_flags.contains(&k.as_str()) {
             continue;
@@ -305,6 +312,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.autotune,
         cfg.warm,
     );
+    match cfg.resolved_stream_window() {
+        Some(w) => println!(
+            "streaming: over-wide requests run in {w}-wide windows overlapping by the \
+             receptive-field halo ({} columns)",
+            net_cfg.receptive_field_reach()
+        ),
+        None => println!("streaming: off (over-wide requests are rejected)"),
+    }
     let t0 = std::time::Instant::now();
     let server = dilconv1d::serve::Server::start(net_cfg, &params, cfg.batcher_opts())
         .map_err(|e| anyhow!(e))?;
@@ -317,6 +332,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "cold plan cache; first requests pay plan builds"
         }
     );
+    if cfg.listen.is_some() {
+        return run_listen(&cfg, server, args);
+    }
 
     // Synthetic open-loop traffic: for each bucket, an exact-fit width
     // and a partial-fill width (exercises the truncation path).
@@ -373,6 +391,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
             &["bucket", "requests", "batches", "fill", "p50 ms", "p99 ms"],
             &rows
         )
+    );
+    Ok(())
+}
+
+/// `dilconv serve --listen`: hand the batcher to the TCP front-end and
+/// serve the wire protocol instead of generating synthetic load.
+fn run_listen(cfg: &ServeConfig, server: dilconv1d::serve::Server, args: &Args) -> Result<()> {
+    let addr = cfg.listen.as_deref().expect("listen mode requires an address");
+    let opts = dilconv1d::serve::NetOpts {
+        drain: std::time::Duration::from_secs_f64(cfg.drain_ms / 1e3),
+        ..dilconv1d::serve::NetOpts::default()
+    };
+    let net = dilconv1d::serve::NetServer::bind(addr, server, opts)
+        .with_context(|| format!("binding {addr}"))?;
+    println!(
+        "listening on {} (wire protocol v{})",
+        net.local_addr(),
+        dilconv1d::serve::net::WIRE_VERSION
+    );
+    match args.get("duration-secs") {
+        Some(_) => {
+            let secs = args.f64("duration-secs", 0.0)?;
+            if secs.is_nan() || secs <= 0.0 {
+                bail!("--duration-secs must be positive, got {secs}");
+            }
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+        None => loop {
+            // Serve until the process is killed (no --duration-secs).
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+    }
+    let (metrics, stats) = net.shutdown();
+    println!(
+        "\nconnections: {} accepted, {} rejected (busy)",
+        stats.connections_accepted, stats.connections_rejected
+    );
+    println!(
+        "requests: {} ok ({} streamed), {} busy, {} error, {} malformed",
+        stats.requests_ok,
+        stats.requests_streamed,
+        stats.requests_backpressure,
+        stats.requests_error,
+        stats.requests_malformed
+    );
+    println!(
+        "wire: {} in, {} out",
+        dilconv1d::util::human_bytes(stats.bytes_in),
+        dilconv1d::util::human_bytes(stats.bytes_out)
+    );
+    println!(
+        "served {} requests in {:.2}s -> {:.1} seq/s; latency p50 {:.2} ms p99 {:.2} ms; \
+         {} streamed ({} windows)",
+        metrics.completed,
+        metrics.elapsed_secs(),
+        metrics.seq_per_sec(),
+        metrics.latency.p50() * 1e3,
+        metrics.latency.p99() * 1e3,
+        metrics.streamed,
+        metrics.stream_windows,
     );
     Ok(())
 }

@@ -63,6 +63,23 @@ impl NetConfig {
         1 + 2 * self.n_blocks + 2
     }
 
+    /// One-sided receptive-field reach of a head output column, in input
+    /// columns: how far left (or right) of output column `j` the input
+    /// can influence it. Each same-padded conv reaches
+    /// `ceil((S-1)/2) · d` columns per side, and the deepest path from
+    /// the input to either head crosses `2·n_blocks + 2` convs (stem,
+    /// two per block, one head — the heads are parallel, not stacked).
+    /// This is the halo a streaming window must overlap so its interior
+    /// columns are bit-identical to whole-sequence evaluation
+    /// ([`crate::serve::StreamingSession`]; DESIGN.md §7b).
+    ///
+    /// Tiny config (S=9, d=2, 1 block): 4 layers × 8 = 32. Paper config
+    /// (S=51, d=8, 11 blocks): 24 layers × 200 = 4800.
+    pub fn receptive_field_reach(&self) -> usize {
+        let per_layer = (self.filter_size - 1).div_ceil(2) * self.dilation;
+        (2 * self.n_blocks + 2) * per_layer
+    }
+
     /// `(K, C, S)` of every conv layer in packing order.
     pub fn layer_shapes(&self) -> Vec<(usize, usize, usize)> {
         let (ch, s) = (self.channels, self.filter_size);
@@ -448,6 +465,23 @@ mod tests {
         let tiny = NetConfig::tiny();
         let net = AtacWorksNet::init(tiny, 1);
         assert_eq!(net.pack_params().len(), tiny.param_count());
+    }
+
+    #[test]
+    fn receptive_field_reach_counts_the_deepest_head_path() {
+        // Tiny: 4 convs deep (stem + 2 + head), each reaching
+        // ((9-1)/2)*2 = 8 columns per side.
+        assert_eq!(NetConfig::tiny().receptive_field_reach(), 32);
+        // Paper: 24 convs deep, ((51-1)/2)*8 = 200 per layer.
+        assert_eq!(NetConfig::default().receptive_field_reach(), 4800);
+        // Even filter widths round the per-layer reach up.
+        let even = NetConfig {
+            channels: 2,
+            n_blocks: 1,
+            filter_size: 4,
+            dilation: 3,
+        };
+        assert_eq!(even.receptive_field_reach(), 4 * 2 * 3);
     }
 
     #[test]

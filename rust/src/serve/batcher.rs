@@ -30,7 +30,9 @@ use crate::dist::PersistentPool;
 use crate::metrics::LatencyHistogram;
 use crate::model::NetConfig;
 
+use super::bucket::round_up_to_block;
 use super::engine::{EngineOpts, InferOutput, InferenceEngine};
+use super::stream::StreamingSession;
 use super::ServeError;
 
 /// Server options: the engine slice plus the batching/queueing policy.
@@ -49,6 +51,12 @@ pub struct BatcherOpts {
     /// Warm every worker's plan cache for every bucket before accepting
     /// traffic (startup cost instead of first-request latency).
     pub warm: bool,
+    /// Streaming window for requests wider than every bucket: `Some(w)`
+    /// routes them through a halo-overlapped [`StreamingSession`] at
+    /// window `w` (rounded up to the block grid; must fit the largest
+    /// bucket and exceed twice the receptive-field reach), `None`
+    /// rejects them with [`ServeError::TooWide`].
+    pub stream_window: Option<usize>,
 }
 
 impl Default for BatcherOpts {
@@ -59,6 +67,7 @@ impl Default for BatcherOpts {
             queue_depth: 256,
             workers: 1,
             warm: true,
+            stream_window: None,
         }
     }
 }
@@ -70,10 +79,14 @@ pub struct Response {
     pub output: InferOutput,
     /// End-to-end latency (submit → response), seconds.
     pub latency_secs: f64,
-    /// Width bucket the request executed in.
+    /// Width bucket the request executed in (for a streamed request:
+    /// the streaming window width).
     pub bucket: usize,
-    /// How many real requests shared the batch (1..=max_batch).
+    /// How many real requests shared the batch (1..=max_batch; always 1
+    /// for a streamed request).
     pub batch_rows: usize,
+    /// Whether the request took the halo-overlapped streaming route.
+    pub streamed: bool,
 }
 
 /// A claim on a submitted request's response.
@@ -109,6 +122,12 @@ pub struct ServeMetrics {
     pub batches: u64,
     /// Sum of real rows over all batches (occupancy numerator).
     pub batch_rows: u64,
+    /// Requests that took the streaming route (these count in
+    /// `completed` and the global latency histogram but not in the
+    /// per-bucket/batch occupancy numbers — a stream is not a batch).
+    pub streamed: u64,
+    /// Halo-overlapped windows executed across all streamed requests.
+    pub stream_windows: u64,
     started: Instant,
     /// Set when this value became a snapshot ([`Server::metrics`] /
     /// [`Server::shutdown`]): freezes `elapsed_secs`, so a stored
@@ -134,6 +153,8 @@ impl ServeMetrics {
             failed: 0,
             batches: 0,
             batch_rows: 0,
+            streamed: 0,
+            stream_windows: 0,
             started: Instant::now(),
             frozen_at: None,
         }
@@ -162,7 +183,10 @@ impl ServeMetrics {
 /// One enqueued request travelling dispatcher → worker.
 struct Pending {
     data: Vec<f32>,
+    /// Execution width: the bucket, or the streaming window when
+    /// `stream` is set.
     bucket: usize,
+    stream: bool,
     enqueued: Instant,
     reply: Sender<Result<Response, ServeError>>,
 }
@@ -170,13 +194,20 @@ struct Pending {
 /// A worker thread's owned state: private engine + shared telemetry.
 struct Worker {
     engine: InferenceEngine,
+    stream_window: Option<usize>,
     metrics: Arc<Mutex<ServeMetrics>>,
     inflight: Arc<AtomicUsize>,
 }
 
 impl Worker {
     /// Execute one same-bucket batch and deliver every response.
-    fn run_batch(&mut self, batch: Vec<Pending>) {
+    /// Streamed requests arrive as singleton groups and divert to
+    /// [`Self::run_stream`].
+    fn run_batch(&mut self, mut batch: Vec<Pending>) {
+        if batch.len() == 1 && batch[0].stream {
+            let p = batch.pop().expect("len checked");
+            return self.run_stream(p);
+        }
         let bucket = batch[0].bucket;
         debug_assert!(batch.iter().all(|p| p.bucket == bucket));
         let refs: Vec<&[f32]> = batch.iter().map(|p| p.data.as_slice()).collect();
@@ -207,6 +238,7 @@ impl Worker {
                         latency_secs,
                         bucket,
                         batch_rows: rows,
+                        streamed: false,
                     }));
                 }
             }
@@ -218,6 +250,46 @@ impl Worker {
                     self.inflight.fetch_sub(1, Ordering::SeqCst);
                     let _ = p.reply.send(Err(e.clone()));
                 }
+            }
+        }
+    }
+
+    /// Stream one over-wide request through halo-overlapped windows and
+    /// deliver the stitched (bit-identical) whole-sequence output.
+    fn run_stream(&mut self, p: Pending) {
+        let window = self
+            .stream_window
+            .expect("stream requests exist only when a window is configured");
+        let mut denoised = Vec::with_capacity(p.data.len());
+        let mut logits = Vec::with_capacity(p.data.len());
+        let result = StreamingSession::new(&mut self.engine, window).and_then(|mut s| {
+            s.infer_with(&p.data, |_, d, l| {
+                denoised.extend_from_slice(d);
+                logits.extend_from_slice(l);
+            })
+        });
+        let done = Instant::now();
+        let mut m = self.metrics.lock().unwrap();
+        match result {
+            Ok(stats) => {
+                let latency_secs = done.duration_since(p.enqueued).as_secs_f64();
+                m.latency.record(latency_secs);
+                m.completed += 1;
+                m.streamed += 1;
+                m.stream_windows += stats.windows as u64;
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = p.reply.send(Ok(Response {
+                    output: InferOutput { denoised, logits },
+                    latency_secs,
+                    bucket: window,
+                    batch_rows: 1,
+                    streamed: true,
+                }));
+            }
+            Err(e) => {
+                m.failed += 1;
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = p.reply.send(Err(e));
             }
         }
     }
@@ -235,6 +307,8 @@ pub struct Server {
     inflight: Arc<AtomicUsize>,
     queue_depth: usize,
     engine_opts: EngineOpts,
+    /// Block-aligned streaming window, when the streaming route is on.
+    stream_window: Option<usize>,
     metrics: Arc<Mutex<ServeMetrics>>,
     dispatcher: Option<JoinHandle<()>>,
 }
@@ -258,6 +332,33 @@ impl Server {
                 "batching window must be positive".into(),
             ));
         }
+        // Validate the streaming geometry once, up front, against the
+        // same rules StreamingSession enforces per construction.
+        let stream_window = match opts.stream_window {
+            None => None,
+            Some(0) => {
+                return Err(ServeError::Config(
+                    "stream window must be positive".into(),
+                ))
+            }
+            Some(w) => {
+                let w = round_up_to_block(w);
+                let largest = opts.engine.buckets.largest();
+                if w > largest {
+                    return Err(ServeError::Config(format!(
+                        "stream window {w} exceeds the largest bucket ({largest})"
+                    )));
+                }
+                let halo = net_cfg.receptive_field_reach();
+                if w <= 2 * halo {
+                    return Err(ServeError::Config(format!(
+                        "stream window {w} must exceed twice the receptive-field \
+                         reach (2 x {halo})"
+                    )));
+                }
+                Some(w)
+            }
+        };
         let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
         let inflight = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(opts.workers);
@@ -268,6 +369,7 @@ impl Server {
             }
             workers.push(Worker {
                 engine,
+                stream_window,
                 metrics: Arc::clone(&metrics),
                 inflight: Arc::clone(&inflight),
             });
@@ -291,27 +393,34 @@ impl Server {
             inflight,
             queue_depth: opts.queue_depth,
             engine_opts: opts.engine,
+            stream_window,
             metrics,
             dispatcher: Some(dispatcher),
         })
     }
 
     /// Submit one request (its length is its width). Fails fast with
-    /// [`ServeError::QueueFull`] when the admission budget is exhausted
-    /// and [`ServeError::TooWide`] when no bucket fits — both before any
-    /// queueing.
+    /// [`ServeError::QueueFull`] when the admission budget is exhausted,
+    /// both before any queueing. Requests wider than every bucket take
+    /// the halo-overlapped streaming route when a
+    /// [`BatcherOpts::stream_window`] is configured, and fail with
+    /// [`ServeError::TooWide`] otherwise.
     pub fn submit(&self, data: Vec<f32>) -> Result<Ticket, ServeError> {
         if data.is_empty() {
             return Err(ServeError::EmptyRequest);
         }
-        let bucket = self
-            .engine_opts
-            .buckets
-            .bucket_for(data.len())
-            .ok_or_else(|| ServeError::TooWide {
-                width: data.len(),
-                largest: self.engine_opts.buckets.largest(),
-            })?;
+        let (bucket, stream) = match self.engine_opts.buckets.bucket_for(data.len()) {
+            Some(b) => (b, false),
+            None => match self.stream_window {
+                Some(w) => (w, true),
+                None => {
+                    return Err(ServeError::TooWide {
+                        width: data.len(),
+                        largest: self.engine_opts.buckets.largest(),
+                    })
+                }
+            },
+        };
         // Admission: reserve an in-flight slot or reject.
         let mut cur = self.inflight.load(Ordering::SeqCst);
         loop {
@@ -335,6 +444,7 @@ impl Server {
         let pending = Pending {
             data,
             bucket,
+            stream,
             enqueued: Instant::now(),
             reply,
         };
@@ -434,6 +544,8 @@ fn dispatch_loop(
 }
 
 /// Add one request to its bucket group; flush the group if it is full.
+/// Streamed requests never batch (each owns a worker for many windows),
+/// so they flush immediately as singleton groups.
 fn enqueue(
     pending: &mut BTreeMap<usize, Group>,
     p: Pending,
@@ -441,6 +553,17 @@ fn enqueue(
     flush: &mut impl FnMut(Group, &mut usize),
     next_rank: &mut usize,
 ) {
+    if p.stream {
+        let oldest = p.enqueued;
+        flush(
+            Group {
+                reqs: vec![p],
+                oldest,
+            },
+            next_rank,
+        );
+        return;
+    }
     // Flushed groups are removed outright, so a resident group is never
     // empty — `oldest` is always the first (oldest) request's enqueue time.
     let group = pending.entry(p.bucket).or_insert_with(|| Group {
@@ -495,6 +618,26 @@ mod tests {
             queue_depth,
             workers: 1,
             warm: true,
+            stream_window: None,
+        };
+        Server::start(cfg, &params, opts).expect("server")
+    }
+
+    fn streaming_server(stream_window: Option<usize>) -> Server {
+        let cfg = NetConfig::tiny(); // receptive-field reach 32
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts {
+            engine: EngineOpts {
+                buckets: BucketSet::new(&[128, 256]).expect("widths"),
+                max_batch: 2,
+                cache_capacity: 2,
+                ..EngineOpts::default()
+            },
+            window: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 1,
+            warm: false,
+            stream_window,
         };
         Server::start(cfg, &params, opts).expect("server")
     }
@@ -570,6 +713,107 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.completed, 3);
         assert_eq!(m.rejected, 5);
+    }
+
+    #[test]
+    fn over_wide_requests_stream_when_a_window_is_configured() {
+        let server = streaming_server(Some(100)); // rounds to 128
+        let signal = track(700, 11); // > largest bucket (256)
+        let r = server
+            .submit(signal.clone())
+            .expect("streams instead of TooWide")
+            .wait()
+            .expect("streamed response");
+        assert!(r.streamed);
+        assert_eq!(r.bucket, 128);
+        assert_eq!(r.batch_rows, 1);
+        assert_eq!(r.output.denoised.len(), 700);
+        assert_eq!(r.output.logits.len(), 700);
+        // Bit-identical to a direct StreamingSession over the same
+        // engine geometry (which the stream tests tie to whole-sequence
+        // evaluation).
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = EngineOpts {
+            buckets: BucketSet::new(&[128, 256]).expect("widths"),
+            max_batch: 2,
+            cache_capacity: 2,
+            ..EngineOpts::default()
+        };
+        let mut engine = InferenceEngine::new(cfg, &params, opts).expect("engine");
+        let want = StreamingSession::new(&mut engine, 128)
+            .expect("session")
+            .infer(&signal)
+            .expect("reference");
+        assert_eq!(r.output, want);
+        // In-bucket traffic still batches normally alongside streams.
+        let small = server.submit(track(100, 12)).expect("submit");
+        let rs = small.wait().expect("batched response");
+        assert!(!rs.streamed);
+        assert_eq!(rs.bucket, 128);
+        let m = server.shutdown();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.streamed, 1);
+        // 700 columns at window 128 / halo 32: spans 96 + 64·k + tail.
+        assert!(m.stream_windows >= 7, "expected >= 7 windows for 700 cols");
+    }
+
+    #[test]
+    fn streaming_stays_off_and_geometry_is_validated() {
+        // Default-off: over-wide still rejects.
+        let server = streaming_server(None);
+        assert!(matches!(
+            server.submit(track(700, 1)),
+            Err(ServeError::TooWide {
+                width: 700,
+                largest: 256
+            })
+        ));
+        drop(server);
+        // A window that cannot hold two halos is a config error.
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts {
+            engine: EngineOpts {
+                buckets: BucketSet::new(&[128]).expect("widths"),
+                max_batch: 1,
+                cache_capacity: 1,
+                ..EngineOpts::default()
+            },
+            window: Duration::from_millis(1),
+            queue_depth: 4,
+            workers: 1,
+            warm: false,
+            stream_window: Some(64), // 64 <= 2 * 32
+        };
+        assert!(matches!(
+            Server::start(cfg, &params, opts.clone()),
+            Err(ServeError::Config(_))
+        ));
+        let over = BatcherOpts {
+            stream_window: Some(512), // exceeds the largest bucket
+            ..opts
+        };
+        assert!(matches!(
+            Server::start(cfg, &params, over),
+            Err(ServeError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn shutdown_drains_streamed_and_batched_requests_together() {
+        // Mixed in-flight work at shutdown: nothing accepted is lost.
+        let server = streaming_server(Some(128));
+        let stream_t = server.submit(track(600, 21)).expect("stream accepted");
+        let batch_t = server.submit(track(90, 22)).expect("batch accepted");
+        let m = server.shutdown();
+        let rs = stream_t.wait().expect("streamed request drained");
+        let rb = batch_t.wait().expect("batched request drained");
+        assert!(rs.streamed && !rb.streamed);
+        assert_eq!(rs.output.denoised.len(), 600);
+        assert_eq!(rb.output.denoised.len(), 90);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.streamed, 1);
     }
 
     #[test]

@@ -144,6 +144,36 @@ mod tests {
     }
 
     #[test]
+    fn single_bucket_set_serves_only_itself() {
+        // The smallest legal vocabulary: one bucket is both the smallest
+        // and largest, and everything over it is a streaming/TooWide
+        // decision for the layer above.
+        let b = BucketSet::new(&[64]).unwrap();
+        assert_eq!(b.widths(), &[64]);
+        assert_eq!((b.len(), b.largest()), (1, 64));
+        assert_eq!(b.bucket_for(1), Some(64));
+        assert_eq!(b.bucket_for(64), Some(64));
+        assert_eq!(b.bucket_for(65), None);
+    }
+
+    #[test]
+    fn width_one_and_exact_block_boundaries() {
+        let b = BucketSet::parse("64,128,192").unwrap();
+        // Width 1 maps to the smallest bucket (63 pad columns are masked
+        // out by the engine, never returned).
+        assert_eq!(b.bucket_for(1), Some(64));
+        // Exactly on a 64-wide block boundary: no spill to the next
+        // bucket — the boundary bucket itself fits.
+        for (w, want) in [(64, 64), (128, 128), (192, 192)] {
+            assert_eq!(b.bucket_for(w), Some(want), "width {w}");
+        }
+        // One past each boundary spills up (or out, at the top).
+        assert_eq!(b.bucket_for(65), Some(128));
+        assert_eq!(b.bucket_for(129), Some(192));
+        assert_eq!(b.bucket_for(193), None);
+    }
+
+    #[test]
     fn display_parse_round_trip() {
         let b = BucketSet::parse("192, 64,1024").unwrap();
         let again = BucketSet::parse(&b.to_string()).unwrap();

@@ -167,6 +167,12 @@ impl InferenceEngine {
         &self.opts
     }
 
+    /// The model geometry this engine executes (the streaming layer
+    /// derives its halo from it).
+    pub fn net_config(&self) -> NetConfig {
+        self.net_cfg
+    }
+
     /// Warm the plan cache: build an entry for every bucket (ascending).
     /// When `cache_capacity < buckets.len()` only the largest-capacity
     /// suffix stays resident — the overflow shows up in

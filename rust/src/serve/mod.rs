@@ -27,6 +27,12 @@
 //!   served alone, bit for bit (per-image kernel loops)
 //! * [`batcher`] — dynamic batcher, admission control, worker pool,
 //!   telemetry
+//! * [`stream`]  — halo-overlapped fixed-memory windows: requests wider
+//!   than every bucket stream through bucket-sized windows and stitch
+//!   bit-identically to whole-sequence evaluation (DESIGN.md §7b)
+//! * [`net`]     — the TCP wire: length-prefixed frames, a
+//!   zero-allocation pull parser, per-connection state machines,
+//!   backpressure on the wire and graceful drain (DESIGN.md §7b)
 //! * [`load`]    — open-loop load generation (benches + `dilconv serve`)
 
 pub mod batcher;
@@ -34,20 +40,26 @@ pub mod bucket;
 pub mod cache;
 pub mod engine;
 pub mod load;
+pub mod net;
+pub mod stream;
 
 pub use batcher::{BatcherOpts, BucketMetrics, Response, ServeMetrics, Server, Ticket};
 pub use bucket::{round_up_to_block, BucketSet};
 pub use cache::PlanCache;
 pub use engine::{EngineOpts, InferOutput, InferenceEngine};
 pub use load::{run_open_loop, LoadReport, WidthMix};
+pub use net::{NetOpts, NetServer, NetStats, WireError, WireEvent, WireParser};
+pub use stream::{StreamStats, StreamingSession};
 
 use crate::conv1d::PlanError;
 
 /// Everything that can go wrong between `submit` and a response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServeError {
-    /// Request wider than the largest configured bucket (padding *down*
-    /// would corrupt it; the caller must reject or re-shard).
+    /// Request wider than the largest configured bucket and streaming is
+    /// disabled (padding *down* would corrupt it; with a
+    /// [`BatcherOpts::stream_window`] configured such requests take the
+    /// halo-overlapped streaming route instead).
     TooWide { width: usize, largest: usize },
     /// Zero-length request.
     EmptyRequest,

@@ -1,0 +1,449 @@
+//! The TCP listener, per-connection state machines and graceful drain
+//! (DESIGN.md §7b).
+//!
+//! A [`NetServer`] owns the batcher [`Server`] and a bounded accept
+//! loop: each accepted connection gets a handler thread with a fixed
+//! read buffer, one persistent [`WireParser`] and a reusable payload
+//! vector, so steady-state request handling performs no per-frame
+//! allocations beyond the submit copy the batcher requires. Admission
+//! pressure surfaces on the wire instead of in latency:
+//!
+//! * over the connection cap → a `BUSY` response at accept, then close;
+//! * [`ServeError::QueueFull`] from the batcher → a `BUSY` response on
+//!   the request, connection stays open (the client may retry);
+//! * protocol violations → a `MALFORMED` response, then close (framing
+//!   cannot be re-synchronized).
+//!
+//! Shutdown drains: the accept loop stops, handlers finish the frame
+//! they are on (every accepted ticket resolves — the batcher flushes
+//! pending groups before its workers stop), and only connections that
+//! outlive the drain budget are force-closed.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::super::batcher::{ServeMetrics, Server};
+use super::super::ServeError;
+use super::wire::{encode_response_header, status, WireEvent, WireParser, RESP_FLAG_STREAMED};
+
+/// Front-end policy knobs.
+#[derive(Debug, Clone)]
+pub struct NetOpts {
+    /// Live-connection cap; connections over it get `BUSY` and close.
+    pub max_connections: usize,
+    /// Largest request width accepted on the wire, in samples (a
+    /// denial-of-service guard applied before any buffer is sized).
+    pub max_width: usize,
+    /// Graceful-drain budget at shutdown: connections still serving
+    /// after this long are force-closed.
+    pub drain: Duration,
+}
+
+impl Default for NetOpts {
+    fn default() -> Self {
+        NetOpts {
+            max_connections: 64,
+            max_width: 1 << 22,
+            drain: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Snapshot of the per-connection / per-request wire counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub connections_accepted: u64,
+    /// Connections refused at accept (over the connection cap).
+    pub connections_rejected: u64,
+    pub requests_ok: u64,
+    /// Requests answered `BUSY` (admission backpressure).
+    pub requests_backpressure: u64,
+    /// Requests that failed server-side (non-backpressure errors).
+    pub requests_error: u64,
+    /// Frames that violated the protocol (connection closed).
+    pub requests_malformed: u64,
+    /// OK responses that took the streaming path.
+    pub requests_streamed: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// State shared between the accept loop, handlers and the owner.
+struct Shared {
+    /// The batcher; taken (and shut down) exactly once, by
+    /// [`NetServer::shutdown`].
+    server: Mutex<Option<Server>>,
+    stop: AtomicBool,
+    live: AtomicUsize,
+    next_id: AtomicU64,
+    /// Clone per live connection, so drain expiry can force-close.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    opts: NetOpts,
+    connections_accepted: AtomicU64,
+    connections_rejected: AtomicU64,
+    requests_ok: AtomicU64,
+    requests_backpressure: AtomicU64,
+    requests_error: AtomicU64,
+    requests_malformed: AtomicU64,
+    requests_streamed: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl Shared {
+    fn snapshot(&self) -> NetStats {
+        NetStats {
+            connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
+            connections_rejected: self.connections_rejected.load(Ordering::Relaxed),
+            requests_ok: self.requests_ok.load(Ordering::Relaxed),
+            requests_backpressure: self.requests_backpressure.load(Ordering::Relaxed),
+            requests_error: self.requests_error.load(Ordering::Relaxed),
+            requests_malformed: self.requests_malformed.load(Ordering::Relaxed),
+            requests_streamed: self.requests_streamed.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The TCP front-end: owns the batcher [`Server`] plus the accept loop.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    local_addr: SocketAddr,
+    done: bool,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port)
+    /// and start accepting wire-protocol traffic for `server`. The
+    /// listener, accept loop and handlers compose with `anyhow` at the
+    /// CLI boundary through plain `io::Error` / [`ServeError`].
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        server: Server,
+        opts: NetOpts,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            server: Mutex::new(Some(server)),
+            stop: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+            handlers: Mutex::new(Vec::new()),
+            opts,
+            connections_accepted: AtomicU64::new(0),
+            connections_rejected: AtomicU64::new(0),
+            requests_ok: AtomicU64::new(0),
+            requests_backpressure: AtomicU64::new(0),
+            requests_error: AtomicU64::new(0),
+            requests_malformed: AtomicU64::new(0),
+            requests_streamed: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || accept_loop(&listener, &accept_shared));
+        Ok(NetServer {
+            shared,
+            accept: Some(accept),
+            local_addr,
+            done: false,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Snapshot of the wire counters.
+    pub fn stats(&self) -> NetStats {
+        self.shared.snapshot()
+    }
+
+    /// Live connections right now.
+    pub fn connections(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain connections (bounded by the drain budget,
+    /// then force-close), shut the batcher down (which drains every
+    /// accepted ticket) and return the final serving + wire telemetry.
+    pub fn shutdown(mut self) -> (ServeMetrics, NetStats) {
+        self.stop_net();
+        self.done = true;
+        let stats = self.shared.snapshot();
+        let server = self.shared.server.lock().unwrap().take();
+        let metrics = server
+            .expect("the batcher is taken only here, once")
+            .shutdown();
+        (metrics, stats)
+    }
+
+    /// Stop the accept loop, wait for live connections to finish (up to
+    /// the drain budget), force-close stragglers, join every thread.
+    fn stop_net(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + self.shared.opts.drain;
+        while self.shared.live.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Anything still live overstayed the drain budget: force-close
+        // its socket so the handler unblocks and exits.
+        for (_, s) in self.shared.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handlers: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if !self.done {
+            self.stop_net();
+            // The batcher (still inside `shared`) stops via its own Drop
+            // when the last Arc goes away.
+        }
+    }
+}
+
+/// Bounded accept loop: non-blocking accept + stop polling, connection
+/// cap enforcement, handler spawning.
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                if shared.live.load(Ordering::SeqCst) >= shared.opts.max_connections {
+                    shared.connections_rejected.fetch_add(1, Ordering::Relaxed);
+                    let hdr = encode_response_header(status::BUSY, 0, 0);
+                    let _ = stream.write_all(&hdr);
+                    continue; // dropped: closed
+                }
+                shared.live.fetch_add(1, Ordering::SeqCst);
+                shared.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().push((id, clone));
+                }
+                let conn_shared = Arc::clone(shared);
+                let handle = std::thread::spawn(move || {
+                    handle_conn(&conn_shared, id, stream);
+                    conn_shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+                    conn_shared.live.fetch_sub(1, Ordering::SeqCst);
+                });
+                shared.handlers.lock().unwrap().push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => {
+                // Transient accept failure (e.g. EMFILE): back off.
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// One connection's state machine: read → pull-parse → submit → reply,
+/// until EOF, a protocol violation, a dead peer, or shutdown observed
+/// at a frame boundary.
+fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
+    // A short read timeout lets the handler observe shutdown between
+    // frames without a dedicated wake-up channel.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut parser = WireParser::new(shared.opts.max_width);
+    let mut buf = vec![0u8; 16 * 1024];
+    let mut payload: Vec<f32> = Vec::new();
+    let mut filled = 0usize;
+    let mut mid_request = false;
+    'conn: loop {
+        // Parse everything buffered. Every NeedMore means the buffered
+        // bytes are fully consumed (the parser always takes what it can),
+        // so the buffer resets to empty afterwards.
+        let mut pos = 0usize;
+        while pos < filled {
+            match parser.pull(&buf[pos..filled]) {
+                Ok((n, ev)) => {
+                    pos += n;
+                    match ev {
+                        WireEvent::NeedMore => break,
+                        WireEvent::Header(h) => {
+                            payload.clear();
+                            payload.reserve(h.width);
+                            mid_request = true;
+                        }
+                        WireEvent::Payload(raw) => {
+                            for c in raw.chunks_exact(4) {
+                                payload.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                            }
+                        }
+                        WireEvent::PayloadSplit(v) => payload.push(v),
+                        WireEvent::End => {
+                            mid_request = false;
+                            if !respond(shared, &mut stream, &payload) {
+                                break 'conn;
+                            }
+                            if shared.stop.load(Ordering::SeqCst) {
+                                break 'conn; // drain: frame boundary
+                            }
+                        }
+                    }
+                }
+                Err(_) => {
+                    shared.requests_malformed.fetch_add(1, Ordering::Relaxed);
+                    let hdr = encode_response_header(status::MALFORMED, 0, 0);
+                    if stream.write_all(&hdr).is_ok() {
+                        shared
+                            .bytes_out
+                            .fetch_add(hdr.len() as u64, Ordering::Relaxed);
+                    }
+                    break 'conn; // framing lost: close
+                }
+            }
+        }
+        filled = 0;
+        match stream.read(&mut buf) {
+            Ok(0) => break, // EOF
+            Ok(n) => {
+                filled = n;
+                shared.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.stop.load(Ordering::SeqCst) && !mid_request {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Submit one parsed request and write the response frame. Returns
+/// false when the connection is no longer writable.
+fn respond(shared: &Shared, stream: &mut TcpStream, payload: &[f32]) -> bool {
+    let submitted = {
+        let guard = shared.server.lock().unwrap();
+        match guard.as_ref() {
+            Some(server) => server.submit(payload.to_vec()),
+            None => Err(ServeError::ShuttingDown),
+        }
+    };
+    // wait() outside the lock: other connections keep submitting while
+    // this one's batch window fills.
+    match submitted.and_then(|t| t.wait()) {
+        Ok(resp) => {
+            shared.requests_ok.fetch_add(1, Ordering::Relaxed);
+            let flags = if resp.streamed {
+                shared.requests_streamed.fetch_add(1, Ordering::Relaxed);
+                RESP_FLAG_STREAMED
+            } else {
+                0
+            };
+            let hdr = encode_response_header(status::OK, flags, payload.len() as u32);
+            if stream.write_all(&hdr).is_err() {
+                return false;
+            }
+            let body = write_samples(stream, &resp.output.denoised)
+                .and_then(|a| write_samples(stream, &resp.output.logits).map(|b| a + b));
+            match body {
+                Ok(n) => {
+                    shared
+                        .bytes_out
+                        .fetch_add((hdr.len() + n) as u64, Ordering::Relaxed);
+                    true
+                }
+                Err(_) => false,
+            }
+        }
+        Err(e) => {
+            if matches!(e, ServeError::QueueFull { .. }) {
+                shared.requests_backpressure.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shared.requests_error.fetch_add(1, Ordering::Relaxed);
+            }
+            let hdr = encode_response_header(e.wire_status(), 0, 0);
+            if stream.write_all(&hdr).is_ok() {
+                shared
+                    .bytes_out
+                    .fetch_add(hdr.len() as u64, Ordering::Relaxed);
+                true
+            } else {
+                false
+            }
+        }
+    }
+}
+
+/// Write `data` as little-endian f32 bytes through a fixed stack
+/// scratch (bounded memory even for streamed, sequence-long outputs).
+fn write_samples(stream: &mut TcpStream, data: &[f32]) -> std::io::Result<usize> {
+    let mut scratch = [0u8; 4096];
+    for chunk in data.chunks(scratch.len() / 4) {
+        for (slot, v) in scratch.chunks_exact_mut(4).zip(chunk) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+        stream.write_all(&scratch[..chunk.len() * 4])?;
+    }
+    Ok(data.len() * 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AtacWorksNet, NetConfig};
+    use crate::serve::{BatcherOpts, BucketSet, EngineOpts};
+
+    fn tiny_batcher() -> Server {
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts {
+            engine: EngineOpts {
+                buckets: BucketSet::new(&[128]).expect("widths"),
+                max_batch: 2,
+                cache_capacity: 1,
+                ..EngineOpts::default()
+            },
+            window: Duration::from_millis(1),
+            queue_depth: 8,
+            workers: 1,
+            warm: false,
+            stream_window: None,
+        };
+        Server::start(cfg, &params, opts).expect("server")
+    }
+
+    #[test]
+    fn binds_reports_its_address_and_shuts_down_clean() {
+        let net = NetServer::bind("127.0.0.1:0", tiny_batcher(), NetOpts::default())
+            .expect("bind loopback");
+        let addr = net.local_addr();
+        assert_ne!(addr.port(), 0, "port 0 resolves to a real port");
+        assert_eq!(net.connections(), 0);
+        let (metrics, stats) = net.shutdown();
+        assert_eq!(metrics.completed, 0);
+        assert_eq!(stats, NetStats::default());
+    }
+}

@@ -1,0 +1,36 @@
+//! The TCP front-end — a length-prefixed binary wire onto the serving
+//! stack (DESIGN.md §7b).
+//!
+//! ```text
+//!  TcpListener (bounded accept loop)
+//!       │  one thread per connection, capped; over the cap → BUSY
+//!       ▼
+//!  WireParser: zero-allocation pull parser over caller buffers
+//!       │  header {magic, version, flags, dtype, width} + f32 payload
+//!       ▼
+//!  Server::submit ──► batcher / streaming route ──► Ticket::wait
+//!       │  QueueFull → BUSY status on the wire (backpressure, retry)
+//!       ▼
+//!  response header {status, flags, width} + denoised ++ logits
+//! ```
+//!
+//! * [`wire`]     — the frame layout, status codes and the pull parser.
+//!   The parser follows the picojson-rs discipline (SNIPPETS.md):
+//!   pull-style, non-recursive, panic-free, zero heap allocations, and
+//!   payload bytes are **borrowed from the caller's read buffer**, never
+//!   copied (`tests/wire_alloc.rs` proves the zero-allocation claim with
+//!   a counting global allocator).
+//! * [`frontend`] — the listener, per-connection state machines, the
+//!   connection cap, per-connection/stream counters ([`NetStats`]) and
+//!   graceful drain on shutdown (in-flight requests finish, stragglers
+//!   past the drain budget are force-closed).
+
+pub mod frontend;
+pub mod wire;
+
+pub use frontend::{NetOpts, NetServer, NetStats};
+pub use wire::{
+    encode_request_header, encode_response_header, parse_response_header, RequestHeader, WireError,
+    WireEvent, WireParser, DTYPE_F32, REQ_HEADER_LEN, RESP_FLAG_STREAMED, RESP_HEADER_LEN,
+    WIRE_MAGIC, WIRE_VERSION,
+};

@@ -1,0 +1,544 @@
+//! Wire format + the zero-allocation pull parser (DESIGN.md §7b).
+//!
+//! ## Frames
+//!
+//! Request (all integers little-endian):
+//!
+//! ```text
+//!  offset  size  field
+//!       0     2  magic "DC"
+//!       2     1  protocol version (= 1)
+//!       3     1  flags (reserved, must-ignore)
+//!       4     1  dtype (0 = f32)
+//!       5     3  reserved
+//!       8     4  width: u32, payload sample count (> 0)
+//!      12  4·width  payload: width f32 samples
+//! ```
+//!
+//! Response:
+//!
+//! ```text
+//!  offset  size  field
+//!       0     1  status (0 = OK; see the status module)
+//!       1     1  flags (bit 0: request took the streaming path)
+//!       2     2  reserved
+//!       4     4  width: u32 (0 on error)
+//!       8  8·width  payload: width f32 denoised ++ width f32 logits
+//! ```
+//!
+//! ## The parser
+//!
+//! [`WireParser`] is pull-style in the picojson-rs sense: the caller
+//! owns the read buffer and calls [`WireParser::pull`] with whatever
+//! bytes it has; the parser consumes a prefix and returns one event.
+//! It is non-recursive (a flat three-state machine), panic-free (every
+//! slice index is bounds-derived), and performs **zero heap
+//! allocations** — its only storage is a fixed header scratch that
+//! doubles as the carry buffer for an f32 split across reads. Payload
+//! bytes are returned as a borrow of the caller's buffer
+//! ([`WireEvent::Payload`]), never copied.
+
+use crate::conv1d::PlanError;
+use crate::serve::ServeError;
+
+/// First two bytes of every request frame.
+pub const WIRE_MAGIC: [u8; 2] = *b"DC";
+/// Protocol version this build speaks.
+pub const WIRE_VERSION: u8 = 1;
+/// Request dtype code for f32 little-endian samples (the only dtype).
+pub const DTYPE_F32: u8 = 0;
+/// Request header length in bytes.
+pub const REQ_HEADER_LEN: usize = 12;
+/// Response header length in bytes.
+pub const RESP_HEADER_LEN: usize = 8;
+/// Response flag bit 0: the request was served by the streaming path.
+pub const RESP_FLAG_STREAMED: u8 = 1;
+
+/// Response status codes — one per [`ServeError`] variant plus OK and
+/// a protocol-level MALFORMED.
+pub mod status {
+    /// Request served; payload follows.
+    pub const OK: u8 = 0;
+    /// Backpressure: admission queue full, retry later.
+    pub const BUSY: u8 = 1;
+    /// Width exceeds the largest bucket and streaming is disabled.
+    pub const TOO_WIDE: u8 = 2;
+    /// Zero-width request.
+    pub const EMPTY: u8 = 3;
+    /// Server is draining; no new work accepted.
+    pub const SHUTTING_DOWN: u8 = 4;
+    /// Plan construction failed server-side.
+    pub const PLAN: u8 = 5;
+    /// Invalid serving configuration.
+    pub const CONFIG: u8 = 6;
+    /// The request frame violated the wire protocol.
+    pub const MALFORMED: u8 = 7;
+}
+
+impl ServeError {
+    /// The wire status code this error maps to.
+    pub fn wire_status(&self) -> u8 {
+        match self {
+            ServeError::TooWide { .. } => status::TOO_WIDE,
+            ServeError::EmptyRequest => status::EMPTY,
+            ServeError::QueueFull { .. } => status::BUSY,
+            ServeError::ShuttingDown => status::SHUTTING_DOWN,
+            ServeError::Plan(_) => status::PLAN,
+            ServeError::Config(_) => status::CONFIG,
+        }
+    }
+
+    /// A representative error for a wire status code (field values are
+    /// not carried on the wire); `None` for OK, MALFORMED and unknown
+    /// codes.
+    pub fn from_wire_status(code: u8) -> Option<ServeError> {
+        match code {
+            status::TOO_WIDE => Some(ServeError::TooWide {
+                width: 0,
+                largest: 0,
+            }),
+            status::EMPTY => Some(ServeError::EmptyRequest),
+            status::BUSY => Some(ServeError::QueueFull { depth: 0 }),
+            status::SHUTTING_DOWN => Some(ServeError::ShuttingDown),
+            status::PLAN => Some(ServeError::Plan(PlanError(String::new()))),
+            status::CONFIG => Some(ServeError::Config(String::new())),
+            _ => None,
+        }
+    }
+}
+
+/// A validated request header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestHeader {
+    pub version: u8,
+    pub flags: u8,
+    pub dtype: u8,
+    /// Payload sample count (validated: non-zero, within the cap).
+    pub width: usize,
+}
+
+/// Protocol violations the parser rejects (the connection cannot be
+/// re-synchronized after any of these — the handler replies MALFORMED
+/// and closes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadDtype(u8),
+    ZeroWidth,
+    /// Width beyond the caller's cap (a denial-of-service guard: the
+    /// header is read before any payload buffer is sized).
+    WidthTooLarge { width: u32, max: usize },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad magic {m:?} (want {WIRE_MAGIC:?})"),
+            WireError::BadVersion(v) => write!(f, "unsupported version {v} (want {WIRE_VERSION})"),
+            WireError::BadDtype(d) => write!(f, "unsupported dtype {d} (want {DTYPE_F32} = f32)"),
+            WireError::ZeroWidth => write!(f, "zero-width request"),
+            WireError::WidthTooLarge { width, max } => {
+                write!(f, "request width {width} exceeds the wire cap ({max})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One parsing step's outcome. `Payload` borrows the caller's buffer —
+/// whole samples are handed back as raw bytes with no copy; only an f32
+/// split across two reads is reassembled in the parser's fixed scratch
+/// and surfaced as `PayloadSplit`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireEvent<'a> {
+    /// Input exhausted mid-frame; feed more bytes.
+    NeedMore,
+    /// A complete, validated request header.
+    Header(RequestHeader),
+    /// A run of whole payload samples (`len % 4 == 0`), borrowed.
+    Payload(&'a [u8]),
+    /// One sample whose four bytes straddled a read boundary.
+    PayloadSplit(f32),
+    /// Frame complete; the parser has reset for the next request.
+    End,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    /// Accumulating the fixed-size header; `have` bytes so far.
+    Header { have: usize },
+    /// Consuming `remaining` payload bytes; `carry` bytes of a split
+    /// sample sit in the scratch.
+    Payload { remaining: usize, carry: usize },
+    /// Frame finished; next pull emits `End` and resets.
+    Done,
+}
+
+/// Zero-allocation, non-recursive, panic-free pull parser for request
+/// frames. One parser per connection; it persists across frames (after
+/// [`WireEvent::End`] it is ready for the next header).
+pub struct WireParser {
+    state: State,
+    /// Header bytes, reused as the ≤ 3-byte split-sample carry.
+    scratch: [u8; REQ_HEADER_LEN],
+    /// Maximum accepted request width, in samples.
+    max_width: usize,
+}
+
+impl WireParser {
+    /// A parser that rejects any request wider than `max_width` samples
+    /// before sizing any payload buffer.
+    pub const fn new(max_width: usize) -> WireParser {
+        WireParser {
+            state: State::Header { have: 0 },
+            scratch: [0u8; REQ_HEADER_LEN],
+            max_width,
+        }
+    }
+
+    /// Abandon the current frame (e.g. after an error) and await a
+    /// fresh header.
+    pub fn reset(&mut self) {
+        self.state = State::Header { have: 0 };
+    }
+
+    /// Consume a prefix of `input` and return `(bytes_consumed, event)`.
+    /// Call in a loop, advancing the input by `bytes_consumed`, until
+    /// [`WireEvent::NeedMore`] (then read more bytes) or an error (then
+    /// close the connection — framing is lost). Errors leave the parser
+    /// mid-header; call [`Self::reset`] to reuse it.
+    pub fn pull<'a>(&mut self, input: &'a [u8]) -> Result<(usize, WireEvent<'a>), WireError> {
+        match self.state {
+            State::Header { have } => {
+                let need = REQ_HEADER_LEN - have;
+                let take = need.min(input.len());
+                self.scratch[have..have + take].copy_from_slice(&input[..take]);
+                if have + take < REQ_HEADER_LEN {
+                    self.state = State::Header { have: have + take };
+                    return Ok((take, WireEvent::NeedMore));
+                }
+                let h = self.scratch;
+                if h[0] != WIRE_MAGIC[0] || h[1] != WIRE_MAGIC[1] {
+                    return Err(WireError::BadMagic([h[0], h[1]]));
+                }
+                if h[2] != WIRE_VERSION {
+                    return Err(WireError::BadVersion(h[2]));
+                }
+                if h[4] != DTYPE_F32 {
+                    return Err(WireError::BadDtype(h[4]));
+                }
+                let width = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+                if width == 0 {
+                    return Err(WireError::ZeroWidth);
+                }
+                if width as usize > self.max_width {
+                    return Err(WireError::WidthTooLarge {
+                        width,
+                        max: self.max_width,
+                    });
+                }
+                self.state = State::Payload {
+                    remaining: width as usize * 4,
+                    carry: 0,
+                };
+                Ok((
+                    take,
+                    WireEvent::Header(RequestHeader {
+                        version: h[2],
+                        flags: h[3],
+                        dtype: h[4],
+                        width: width as usize,
+                    }),
+                ))
+            }
+            State::Payload { remaining, carry } => {
+                if input.is_empty() {
+                    return Ok((0, WireEvent::NeedMore));
+                }
+                if carry > 0 {
+                    // Finish the sample split across the previous read.
+                    // `remaining` is what is still owed from the wire, so
+                    // it covers the rest of this sample.
+                    let need = 4 - carry;
+                    let take = need.min(input.len());
+                    self.scratch[carry..carry + take].copy_from_slice(&input[..take]);
+                    let remaining = remaining - take;
+                    if carry + take < 4 {
+                        self.state = State::Payload {
+                            remaining,
+                            carry: carry + take,
+                        };
+                        return Ok((take, WireEvent::NeedMore));
+                    }
+                    let v = f32::from_le_bytes([
+                        self.scratch[0],
+                        self.scratch[1],
+                        self.scratch[2],
+                        self.scratch[3],
+                    ]);
+                    self.state = if remaining == 0 {
+                        State::Done
+                    } else {
+                        State::Payload {
+                            remaining,
+                            carry: 0,
+                        }
+                    };
+                    return Ok((take, WireEvent::PayloadSplit(v)));
+                }
+                let avail = remaining.min(input.len());
+                let whole = avail - (avail % 4);
+                if whole > 0 {
+                    let remaining = remaining - whole;
+                    self.state = if remaining == 0 {
+                        State::Done
+                    } else {
+                        State::Payload {
+                            remaining,
+                            carry: 0,
+                        }
+                    };
+                    return Ok((whole, WireEvent::Payload(&input[..whole])));
+                }
+                // 1..=3 trailing bytes of a sample: stash them. Payload
+                // lengths are multiples of 4, so `avail < 4` here means
+                // the *input* ran short, never the frame.
+                self.scratch[..avail].copy_from_slice(&input[..avail]);
+                self.state = State::Payload {
+                    remaining: remaining - avail,
+                    carry: avail,
+                };
+                Ok((avail, WireEvent::NeedMore))
+            }
+            State::Done => {
+                self.state = State::Header { have: 0 };
+                Ok((0, WireEvent::End))
+            }
+        }
+    }
+}
+
+/// Encode a request header for `width` f32 samples.
+pub fn encode_request_header(width: u32, flags: u8) -> [u8; REQ_HEADER_LEN] {
+    let w = width.to_le_bytes();
+    [
+        WIRE_MAGIC[0],
+        WIRE_MAGIC[1],
+        WIRE_VERSION,
+        flags,
+        DTYPE_F32,
+        0,
+        0,
+        0,
+        w[0],
+        w[1],
+        w[2],
+        w[3],
+    ]
+}
+
+/// Encode a response header.
+pub fn encode_response_header(status: u8, flags: u8, width: u32) -> [u8; RESP_HEADER_LEN] {
+    let w = width.to_le_bytes();
+    [status, flags, 0, 0, w[0], w[1], w[2], w[3]]
+}
+
+/// Decode a response header into `(status, flags, width)`.
+pub fn parse_response_header(h: &[u8; RESP_HEADER_LEN]) -> (u8, u8, usize) {
+    (
+        h[0],
+        h[1],
+        u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a parser over `bytes` in chunks of `chunk`, decoding the
+    /// payload back into f32s.
+    fn run(parser: &mut WireParser, bytes: &[u8], chunk: usize) -> (RequestHeader, Vec<f32>, bool) {
+        let mut header = None;
+        let mut payload = Vec::new();
+        let mut ended = false;
+        let mut off = 0;
+        while off < bytes.len() || !ended {
+            let end = (off + chunk).min(bytes.len());
+            let mut input = &bytes[off..end];
+            loop {
+                let (n, ev) = parser.pull(input).expect("valid frame");
+                input = &input[n..];
+                off += n;
+                match ev {
+                    WireEvent::NeedMore => break,
+                    WireEvent::Header(h) => header = Some(h),
+                    WireEvent::Payload(raw) => {
+                        for c in raw.chunks_exact(4) {
+                            payload.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                        }
+                    }
+                    WireEvent::PayloadSplit(v) => payload.push(v),
+                    WireEvent::End => {
+                        ended = true;
+                        break;
+                    }
+                }
+            }
+            if ended {
+                break;
+            }
+            assert!(off < bytes.len(), "parser starved before the frame ended");
+        }
+        (header.expect("header seen"), payload, ended)
+    }
+
+    fn frame(samples: &[f32], flags: u8) -> Vec<u8> {
+        let mut out = encode_request_header(samples.len() as u32, flags).to_vec();
+        for s in samples {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_whole_and_fragmented_frames_identically() {
+        let samples: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let bytes = frame(&samples, 0);
+        // Every fragmentation, including ones that split the header and
+        // every f32, must reconstruct the same request.
+        for chunk in [1, 2, 3, 4, 5, 7, 11, 12, 13, 64, bytes.len()] {
+            let mut p = WireParser::new(1 << 20);
+            let (h, payload, ended) = run(&mut p, &bytes, chunk);
+            assert!(ended, "chunk {chunk}");
+            assert_eq!(h.width, samples.len(), "chunk {chunk}");
+            assert_eq!(h.version, WIRE_VERSION);
+            assert_eq!(h.dtype, DTYPE_F32);
+            assert_eq!(payload, samples, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn parser_persists_across_back_to_back_frames() {
+        let a: Vec<f32> = (0..5).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..9).map(|i| -(i as f32)).collect();
+        let mut bytes = frame(&a, 0);
+        bytes.extend_from_slice(&frame(&b, 0));
+        let mut p = WireParser::new(1 << 20);
+        let mut widths = Vec::new();
+        let mut got = Vec::new();
+        let mut input = &bytes[..];
+        let mut frames = 0;
+        while frames < 2 {
+            let (n, ev) = p.pull(input).expect("valid frames");
+            input = &input[n..];
+            match ev {
+                WireEvent::Header(h) => widths.push(h.width),
+                WireEvent::Payload(raw) => {
+                    for c in raw.chunks_exact(4) {
+                        got.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                    }
+                }
+                WireEvent::PayloadSplit(v) => got.push(v),
+                WireEvent::End => frames += 1,
+                WireEvent::NeedMore => panic!("both frames are fully buffered"),
+            }
+        }
+        assert_eq!(widths, vec![5, 9]);
+        let want: Vec<f32> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rejects_protocol_violations() {
+        let good = encode_request_header(8, 0);
+        let mut bad_magic = good;
+        bad_magic[0] = b'X';
+        let mut bad_version = good;
+        bad_version[2] = 9;
+        let mut bad_dtype = good;
+        bad_dtype[4] = 7;
+        let zero_width = encode_request_header(0, 0);
+        let cases: [(&[u8; REQ_HEADER_LEN], WireError); 4] = [
+            (&bad_magic, WireError::BadMagic([b'X', b'C'])),
+            (&bad_version, WireError::BadVersion(9)),
+            (&bad_dtype, WireError::BadDtype(7)),
+            (&zero_width, WireError::ZeroWidth),
+        ];
+        for (bytes, want) in cases {
+            let mut p = WireParser::new(1 << 20);
+            assert_eq!(p.pull(&bytes[..]).unwrap_err(), want);
+            // After reset the parser accepts a good frame again.
+            p.reset();
+            assert!(matches!(
+                p.pull(&good[..]),
+                Ok((REQ_HEADER_LEN, WireEvent::Header(_)))
+            ));
+        }
+        // The width cap guards payload-buffer sizing.
+        let mut p = WireParser::new(16);
+        let wide = encode_request_header(17, 0);
+        assert_eq!(
+            p.pull(&wide[..]).unwrap_err(),
+            WireError::WidthTooLarge { width: 17, max: 16 }
+        );
+    }
+
+    #[test]
+    fn serve_errors_round_trip_through_wire_status_codes() {
+        // Every ServeError variant maps to a distinct non-OK status and
+        // comes back as the same variant.
+        let variants = [
+            ServeError::TooWide {
+                width: 500,
+                largest: 384,
+            },
+            ServeError::EmptyRequest,
+            ServeError::QueueFull { depth: 256 },
+            ServeError::ShuttingDown,
+            ServeError::Plan(PlanError("boom".into())),
+            ServeError::Config("bad".into()),
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &variants {
+            let code = e.wire_status();
+            assert_ne!(code, status::OK);
+            assert_ne!(code, status::MALFORMED);
+            assert!(seen.insert(code), "status {code} assigned twice");
+            let back = ServeError::from_wire_status(code).expect("round-trip");
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(e),
+                "status {code} came back as a different variant"
+            );
+            assert_eq!(back.wire_status(), code);
+        }
+        // OK, MALFORMED and unknown codes do not decode to an error.
+        assert_eq!(ServeError::from_wire_status(status::OK), None);
+        assert_eq!(ServeError::from_wire_status(status::MALFORMED), None);
+        assert_eq!(ServeError::from_wire_status(200), None);
+        // And ServeError composes with anyhow at the net boundary.
+        let any: anyhow::Error = ServeError::ShuttingDown.into();
+        assert!(any.to_string().contains("shutting down"));
+    }
+
+    #[test]
+    fn header_encoding_round_trips() {
+        let h = encode_request_header(12345, 2);
+        let mut p = WireParser::new(1 << 20);
+        match p.pull(&h[..]) {
+            Ok((REQ_HEADER_LEN, WireEvent::Header(got))) => {
+                assert_eq!(got.width, 12345);
+                assert_eq!(got.flags, 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let r = encode_response_header(status::BUSY, RESP_FLAG_STREAMED, 77);
+        assert_eq!(
+            parse_response_header(&r),
+            (status::BUSY, RESP_FLAG_STREAMED, 77)
+        );
+    }
+}

@@ -1,0 +1,263 @@
+//! Halo-overlapped streaming inference — fixed-memory windows over
+//! arbitrarily long signals (DESIGN.md §7b).
+//!
+//! The bucket grid caps request width at the largest configured bucket;
+//! genomics tracks are arbitrarily long. A [`StreamingSession`] closes
+//! that gap: it slides a fixed-width window (on the kernels' 64-wide
+//! block grid) along the signal, runs each window through the existing
+//! per-bucket [`InferenceEngine`], and emits only the columns whose
+//! receptive field lies entirely inside the window. Consecutive windows
+//! overlap by the net's one-sided receptive-field reach
+//! ([`NetConfig::receptive_field_reach`]), so every emitted column saw
+//! exactly the input a whole-sequence evaluation would have shown it —
+//! the stitched output is **bit-identical** (u32-exact) to evaluating
+//! the full signal in one `infer_masked` pass, at O(window) activation
+//! memory regardless of sequence length.
+//!
+//! ## Why the stitch is exact, not approximate
+//!
+//! Output column `j` of the net depends on input columns
+//! `[j - R, j + R]` only, where `R` is the receptive-field reach (each
+//! same-padded conv widens the cone by `ceil((S-1)/2)·d` per side, and
+//! the deepest input→head path is `2·n_blocks + 2` convs). The session
+//! emits a window column only when it is ≥ `R` columns away from every
+//! *artificial* window edge; the true signal boundaries need no margin
+//! because both the window and the whole-sequence evaluation see the
+//! same same-padding zeros there. Per-element FMA order inside the
+//! kernels is width-independent, and `infer_masked` makes the bucket an
+//! execution shape only — so equality holds bit for bit, and the
+//! serving tests assert it with `assert_eq!` on `f32::to_bits`.
+//!
+//! [`NetConfig`]: crate::model::NetConfig
+//! [`NetConfig::receptive_field_reach`]: crate::model::NetConfig::receptive_field_reach
+
+use super::bucket::round_up_to_block;
+use super::engine::{InferOutput, InferenceEngine};
+use super::ServeError;
+
+/// Progress counters of one streamed signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Windows executed through the engine.
+    pub windows: usize,
+    /// Output columns emitted (= the signal length).
+    pub emitted: usize,
+}
+
+/// A fixed-memory streaming evaluator borrowing a bucket-pinned engine.
+///
+/// Construction validates the window geometry once; [`Self::infer_with`]
+/// then streams any number of signals through the same session. The
+/// session holds no per-signal state — memory is bounded by the
+/// engine's bucket staging plus one window's outputs.
+pub struct StreamingSession<'e> {
+    engine: &'e mut InferenceEngine,
+    window: usize,
+    halo: usize,
+}
+
+impl<'e> StreamingSession<'e> {
+    /// Borrow `engine` for streaming with the given window width. The
+    /// window is rounded up to the 64-wide block grid and must fit the
+    /// engine's largest bucket; it must also exceed **twice** the
+    /// receptive-field reach, otherwise no window column is far enough
+    /// from both artificial edges and the stitch cannot advance.
+    pub fn new(
+        engine: &'e mut InferenceEngine,
+        window: usize,
+    ) -> Result<StreamingSession<'e>, ServeError> {
+        if window == 0 {
+            return Err(ServeError::Config(
+                "stream window must be positive".into(),
+            ));
+        }
+        let window = round_up_to_block(window);
+        let largest = engine.opts().buckets.largest();
+        if window > largest {
+            return Err(ServeError::Config(format!(
+                "stream window {window} exceeds the largest bucket ({largest})"
+            )));
+        }
+        let halo = engine.net_config().receptive_field_reach();
+        if window <= 2 * halo {
+            return Err(ServeError::Config(format!(
+                "stream window {window} must exceed twice the receptive-field \
+                 reach (2 x {halo}) so interior columns exist to emit"
+            )));
+        }
+        Ok(StreamingSession {
+            engine,
+            window,
+            halo,
+        })
+    }
+
+    /// The block-aligned window width windows execute at.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// The one-sided receptive-field reach windows overlap by.
+    pub fn halo(&self) -> usize {
+        self.halo
+    }
+
+    /// Columns each interior window contributes (`window - 2·halo`) —
+    /// the stride the stitch advances by in steady state.
+    pub fn core(&self) -> usize {
+        self.window - 2 * self.halo
+    }
+
+    /// Stream `signal` through halo-overlapped windows, handing each
+    /// emitted span to `sink(start_col, denoised, logits)`. Spans are
+    /// contiguous, in order, and cover `0..signal.len()` exactly once;
+    /// concatenated they are bit-identical to whole-sequence
+    /// evaluation. Signals no longer than one window pass through as a
+    /// single full-width span.
+    pub fn infer_with(
+        &mut self,
+        signal: &[f32],
+        mut sink: impl FnMut(usize, &[f32], &[f32]),
+    ) -> Result<StreamStats, ServeError> {
+        if signal.is_empty() {
+            return Err(ServeError::EmptyRequest);
+        }
+        let len = signal.len();
+        let mut emit_from = 0usize; // first column not yet emitted
+        let mut win_start = 0usize;
+        let mut windows = 0usize;
+        loop {
+            let win_end = (win_start + self.window).min(len);
+            let out = self.engine.infer_one(&signal[win_start..win_end])?;
+            windows += 1;
+            // Columns valid in this window: everything ≥ halo from an
+            // *artificial* edge. The left margin is already enforced by
+            // where `emit_from` sits (window 0 starts at the true
+            // boundary; later windows start halo columns before
+            // `emit_from`); on the right, hold back a halo unless this
+            // window reaches the true end of the signal.
+            let win_w = win_end - win_start;
+            let right_valid = if win_end == len {
+                win_w
+            } else {
+                win_w - self.halo
+            };
+            let lo = emit_from - win_start;
+            sink(
+                emit_from,
+                &out.denoised[lo..right_valid],
+                &out.logits[lo..right_valid],
+            );
+            emit_from = win_start + right_valid;
+            if win_end == len {
+                break;
+            }
+            // Overlap: the next window re-computes a halo's worth of
+            // context left of the first unemitted column. Since
+            // window > 2·halo, this always advances (`win_start` grows
+            // by `core()` each interior step).
+            win_start = emit_from - self.halo;
+        }
+        Ok(StreamStats {
+            windows,
+            emitted: len,
+        })
+    }
+
+    /// Convenience: stream `signal` and collect the stitched heads into
+    /// one [`InferOutput`] (lengths = the signal length). Peak memory is
+    /// the output itself plus one window of activations.
+    pub fn infer(&mut self, signal: &[f32]) -> Result<InferOutput, ServeError> {
+        let mut denoised = Vec::with_capacity(signal.len());
+        let mut logits = Vec::with_capacity(signal.len());
+        self.infer_with(signal, |_, d, l| {
+            denoised.extend_from_slice(d);
+            logits.extend_from_slice(l);
+        })?;
+        Ok(InferOutput { denoised, logits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AtacWorksNet, NetConfig};
+    use crate::serve::{BucketSet, EngineOpts};
+    use crate::util::rng::Rng;
+
+    fn engine(buckets: &[usize]) -> InferenceEngine {
+        let cfg = NetConfig::tiny(); // halo 32
+        let params = AtacWorksNet::init(cfg, 9).pack_params();
+        let opts = EngineOpts {
+            buckets: BucketSet::new(buckets).expect("widths"),
+            max_batch: 1,
+            cache_capacity: buckets.len(),
+            ..EngineOpts::default()
+        };
+        InferenceEngine::new(cfg, &params, opts).expect("engine")
+    }
+
+    fn track(w: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..w).map(|_| rng.poisson(0.7) as f32).collect()
+    }
+
+    #[test]
+    fn window_geometry_is_validated() {
+        let mut e = engine(&[128, 256]);
+        // Rounded onto the block grid, halo derived from the config.
+        let s = StreamingSession::new(&mut e, 100).expect("window 100 -> 128");
+        assert_eq!((s.window(), s.halo(), s.core()), (128, 32, 64));
+        // Zero, over-bucket and too-small-for-the-halo windows fail.
+        assert!(matches!(
+            StreamingSession::new(&mut e, 0),
+            Err(ServeError::Config(_))
+        ));
+        assert!(matches!(
+            StreamingSession::new(&mut e, 512),
+            Err(ServeError::Config(_))
+        ));
+        assert!(matches!(
+            StreamingSession::new(&mut e, 64), // 64 <= 2*32
+            Err(ServeError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn short_signals_pass_through_as_one_window() {
+        let mut e = engine(&[128, 256]);
+        let (short, exact) = (track(90, 1), track(128, 2));
+        let want_short = e.infer_one(&short).expect("reference");
+        let want_exact = e.infer_one(&exact).expect("reference");
+        let mut s = StreamingSession::new(&mut e, 128).expect("session");
+        assert_eq!(s.infer(&short).expect("stream"), want_short);
+        assert_eq!(s.infer(&exact).expect("stream"), want_exact);
+        assert!(matches!(s.infer(&[]), Err(ServeError::EmptyRequest)));
+    }
+
+    #[test]
+    fn emitted_spans_are_contiguous_and_windows_overlap_by_the_halo() {
+        let mut e = engine(&[128]);
+        let signal = track(500, 3);
+        let mut s = StreamingSession::new(&mut e, 128).expect("session");
+        let mut next = 0usize;
+        let mut spans = Vec::new();
+        let stats = s
+            .infer_with(&signal, |start, d, l| {
+                assert_eq!(start, next, "spans must be contiguous");
+                assert_eq!(d.len(), l.len());
+                next += d.len();
+                spans.push(d.len());
+            })
+            .expect("stream");
+        assert_eq!(next, signal.len());
+        assert_eq!(stats.emitted, signal.len());
+        assert_eq!(stats.windows, spans.len());
+        // First window keeps its true left boundary (128 - 32 = 96
+        // columns); interior windows emit one core (64) each.
+        assert_eq!(spans[0], 96);
+        for &w in &spans[1..spans.len() - 1] {
+            assert_eq!(w, 64);
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! Integration: the TCP wire front-end (DESIGN.md §7b), loopback
+//! end-to-end.
+//!
+//! Covers ≥100 concurrent mixed requests (in-bucket and over-wide →
+//! streamed) with payload-exact responses against engine references,
+//! backpressure surfacing as a `BUSY` wire status under a full queue,
+//! protocol violations closing the connection with `MALFORMED`, the
+//! connection cap, and graceful drain: a request in flight at shutdown
+//! still gets its response.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use dilconv1d::model::{AtacWorksNet, NetConfig};
+use dilconv1d::serve::net::wire::status;
+use dilconv1d::serve::net::{
+    encode_request_header, parse_response_header, NetOpts, NetServer, RESP_FLAG_STREAMED,
+    RESP_HEADER_LEN,
+};
+use dilconv1d::serve::{
+    round_up_to_block, BatcherOpts, BucketSet, EngineOpts, InferenceEngine, Server,
+};
+use dilconv1d::util::rng::Rng;
+
+fn net_cfg() -> NetConfig {
+    NetConfig::tiny()
+}
+
+fn params() -> Vec<f32> {
+    AtacWorksNet::init(net_cfg(), 42).pack_params()
+}
+
+fn engine_opts(buckets: &[usize], max_batch: usize) -> EngineOpts {
+    EngineOpts {
+        buckets: BucketSet::new(buckets).expect("bucket widths"),
+        max_batch,
+        cache_capacity: buckets.len(),
+        ..EngineOpts::default()
+    }
+}
+
+fn batcher(queue_depth: usize, window: Duration, max_batch: usize, workers: usize) -> Server {
+    Server::start(
+        net_cfg(),
+        &params(),
+        BatcherOpts {
+            engine: engine_opts(&[128, 256], max_batch),
+            window,
+            queue_depth,
+            workers,
+            warm: false,
+            stream_window: Some(128),
+        },
+    )
+    .expect("server")
+}
+
+fn track(w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..w).map(|_| rng.poisson(0.8) as f32).collect()
+}
+
+// ------------------------------------------------------------ wire client
+
+fn send_request(stream: &mut TcpStream, signal: &[f32]) -> std::io::Result<()> {
+    stream.write_all(&encode_request_header(signal.len() as u32, 0))?;
+    let mut bytes = Vec::with_capacity(signal.len() * 4);
+    for v in signal {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&bytes)
+}
+
+fn read_f32s(stream: &mut TcpStream, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    stream.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read one response frame: `(status, flags, payload)` where the payload
+/// (denoised, logits) is present only on `OK`.
+#[allow(clippy::type_complexity)]
+fn read_response(
+    stream: &mut TcpStream,
+) -> std::io::Result<(u8, u8, Option<(Vec<f32>, Vec<f32>)>)> {
+    let mut hdr = [0u8; RESP_HEADER_LEN];
+    stream.read_exact(&mut hdr)?;
+    let (code, flags, width) = parse_response_header(&hdr);
+    if code == status::OK {
+        let den = read_f32s(stream, width)?;
+        let log = read_f32s(stream, width)?;
+        Ok((code, flags, Some((den, log))))
+    } else {
+        Ok((code, flags, None))
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ------------------------------------------------------------------ tests
+
+#[test]
+fn loopback_serves_a_hundred_plus_concurrent_mixed_requests_exactly() {
+    // Widths cycle per request: four in-bucket + one over-wide (400 >
+    // largest bucket 256 → streamed). Seed = width, so every request of
+    // a width shares one reference output.
+    const WIDTHS: [usize; 5] = [90, 128, 200, 256, 400];
+    const CLIENTS: usize = 25;
+    const PER_CLIENT: usize = 5; // 125 requests total
+    let mut references: HashMap<usize, (Vec<u32>, Vec<u32>)> = HashMap::new();
+    for &w in &WIDTHS {
+        // Whole-sequence reference — for the over-wide width this is
+        // exactly what the streamed response must reproduce, bit for bit.
+        let mut whole = InferenceEngine::new(
+            net_cfg(),
+            &params(),
+            engine_opts(&[round_up_to_block(w)], 1),
+        )
+        .expect("reference engine");
+        let out = whole.infer_one(&track(w, w as u64)).expect("reference");
+        references.insert(w, (bits(&out.denoised), bits(&out.logits)));
+    }
+    let references = Arc::new(references);
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        batcher(256, Duration::from_millis(1), 4, 2),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let references = Arc::clone(&references);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                for i in 0..PER_CLIENT {
+                    let w = WIDTHS[(c + i) % WIDTHS.len()];
+                    send_request(&mut stream, &track(w, w as u64)).expect("send");
+                    let (code, flags, payload) = read_response(&mut stream).expect("recv");
+                    assert_eq!(code, status::OK, "client {c} request {i} (w={w})");
+                    let streamed = flags & RESP_FLAG_STREAMED != 0;
+                    assert_eq!(streamed, w > 256, "w={w} streamed flag");
+                    let (den, log) = payload.expect("OK carries a payload");
+                    let (want_den, want_log) = &references[&w];
+                    assert_eq!(&bits(&den), want_den, "w={w} denoised");
+                    assert_eq!(&bits(&log), want_log, "w={w} logits");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client");
+    }
+    let (metrics, stats) = net.shutdown();
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(stats.connections_accepted, CLIENTS as u64);
+    assert_eq!(stats.connections_rejected, 0);
+    assert_eq!(stats.requests_ok, total);
+    assert_eq!(stats.requests_malformed, 0);
+    assert_eq!(stats.requests_backpressure, 0);
+    // Each client cycles all five widths once → one streamed request each.
+    assert_eq!(stats.requests_streamed, CLIENTS as u64);
+    assert_eq!(metrics.completed, total);
+    assert_eq!(metrics.streamed, CLIENTS as u64);
+    assert!(stats.bytes_in > 0 && stats.bytes_out > 0);
+}
+
+#[test]
+fn queue_full_surfaces_as_a_busy_wire_status() {
+    // queue_depth 2 + a long batching window + huge max_batch: accepted
+    // requests park in the dispatcher, so concurrent submits past the
+    // budget must come back BUSY on the wire (connection stays open).
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        batcher(2, Duration::from_millis(500), 64, 1),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    let barrier = Arc::new(Barrier::new(6));
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                barrier.wait();
+                send_request(&mut stream, &track(100, i as u64)).expect("send");
+                let (code, _, payload) = read_response(&mut stream).expect("recv");
+                match code {
+                    c if c == status::OK => {
+                        assert_eq!(payload.expect("payload").0.len(), 100);
+                        true
+                    }
+                    c if c == status::BUSY => {
+                        assert!(payload.is_none(), "BUSY carries no payload");
+                        false
+                    }
+                    other => panic!("unexpected status {other}"),
+                }
+            })
+        })
+        .collect();
+    let oks = handles
+        .into_iter()
+        .map(|h| h.join().expect("client"))
+        .filter(|&ok| ok)
+        .count() as u64;
+    let busy = 6 - oks;
+    assert!(busy >= 1, "a full queue must reject on the wire");
+    assert!(oks >= 1, "accepted requests must still complete");
+    let (metrics, stats) = net.shutdown();
+    assert_eq!(stats.requests_ok, oks);
+    assert_eq!(stats.requests_backpressure, busy);
+    assert_eq!(metrics.completed, oks);
+    assert_eq!(metrics.rejected, busy);
+}
+
+#[test]
+fn malformed_frames_close_the_connection_with_a_malformed_status() {
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        batcher(16, Duration::from_millis(1), 2, 1),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    // Bad magic: the parser cannot resync, so the server answers
+    // MALFORMED and closes.
+    let mut bad = TcpStream::connect(addr).expect("connect");
+    bad.write_all(b"XXXXXXXXXXXX").expect("send garbage");
+    let (code, _, payload) = read_response(&mut bad).expect("recv");
+    assert_eq!(code, status::MALFORMED);
+    assert!(payload.is_none());
+    let mut rest = [0u8; 1];
+    assert_eq!(bad.read(&mut rest).expect("EOF"), 0, "connection closed");
+    // The server survives and serves fresh connections.
+    let mut good = TcpStream::connect(addr).expect("reconnect");
+    send_request(&mut good, &track(80, 3)).expect("send");
+    let (code, _, payload) = read_response(&mut good).expect("recv");
+    assert_eq!(code, status::OK);
+    assert_eq!(payload.expect("payload").1.len(), 80);
+    drop(good);
+    let (_, stats) = net.shutdown();
+    assert_eq!(stats.requests_malformed, 1);
+    assert_eq!(stats.requests_ok, 1);
+}
+
+#[test]
+fn the_connection_cap_rejects_with_busy_at_accept() {
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        batcher(16, Duration::from_millis(1), 2, 1),
+        NetOpts {
+            max_connections: 1,
+            ..NetOpts::default()
+        },
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    let mut first = TcpStream::connect(addr).expect("connect");
+    // A served request proves the accept loop registered the connection.
+    send_request(&mut first, &track(64, 1)).expect("send");
+    assert_eq!(read_response(&mut first).expect("recv").0, status::OK);
+    // Over the cap: BUSY header, then close.
+    let mut second = TcpStream::connect(addr).expect("connect #2");
+    let (code, _, payload) = read_response(&mut second).expect("recv");
+    assert_eq!(code, status::BUSY);
+    assert!(payload.is_none());
+    let mut rest = [0u8; 1];
+    assert_eq!(second.read(&mut rest).expect("EOF"), 0);
+    // Freeing the slot re-opens the door.
+    drop(first);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while net.connections() > 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(net.connections(), 0, "handler must release its slot");
+    let mut third = TcpStream::connect(addr).expect("connect #3");
+    send_request(&mut third, &track(64, 2)).expect("send");
+    assert_eq!(read_response(&mut third).expect("recv").0, status::OK);
+    drop(third);
+    let (_, stats) = net.shutdown();
+    assert_eq!(stats.connections_accepted, 2);
+    assert_eq!(stats.connections_rejected, 1);
+}
+
+#[test]
+fn graceful_drain_answers_requests_in_flight_at_shutdown() {
+    // A long batching window parks the request in the dispatcher; the
+    // shutdown path must flush it and deliver the response before the
+    // connection is torn down — no accepted request is ever lost.
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        batcher(16, Duration::from_millis(300), 8, 1),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        send_request(&mut stream, &track(90, 17)).expect("send");
+        let (code, _, payload) = read_response(&mut stream).expect("recv");
+        (code, payload)
+    });
+    // Let the request reach the dispatcher, then shut down around it.
+    std::thread::sleep(Duration::from_millis(100));
+    let (metrics, stats) = net.shutdown();
+    let (code, payload) = client.join().expect("client");
+    assert_eq!(code, status::OK, "in-flight request answered during drain");
+    assert_eq!(payload.expect("payload").0.len(), 90);
+    assert_eq!(stats.requests_ok, 1);
+    assert_eq!(metrics.completed, 1);
+}

@@ -1,0 +1,188 @@
+//! Integration: halo-overlapped streaming inference (DESIGN.md §7b).
+//!
+//! The load-bearing guarantee is **bit-identity**: stitching fixed-width
+//! windows that overlap by the receptive-field reach must produce
+//! exactly the bits that evaluating the whole sequence in one pass
+//! produces. The matrix here covers signals ≥ 4 windows long ×
+//! {f32, bf16} × {batch, grid} × two dilation schedules, compared as
+//! `f32::to_bits` vectors (no tolerance anywhere), plus the streaming
+//! route end-to-end through the server.
+
+use std::time::Duration;
+
+use dilconv1d::conv1d::Partition;
+use dilconv1d::machine::Precision;
+use dilconv1d::model::{AtacWorksNet, NetConfig};
+use dilconv1d::serve::{
+    round_up_to_block, BatcherOpts, BucketSet, EngineOpts, InferenceEngine, StreamingSession,
+};
+use dilconv1d::util::rng::Rng;
+
+/// The two model geometries under test: the tiny config (S=9, d=2 →
+/// reach 32) and a second dilation schedule (S=5, d=3, deeper → 36).
+fn geometries() -> Vec<(NetConfig, &'static str)> {
+    vec![
+        (NetConfig::tiny(), "tiny S9 d2"),
+        (
+            NetConfig {
+                channels: 3,
+                n_blocks: 2,
+                filter_size: 5,
+                dilation: 3,
+            },
+            "deep S5 d3",
+        ),
+    ]
+}
+
+fn engine_opts(buckets: &[usize], precision: Precision, partition: Partition) -> EngineOpts {
+    EngineOpts {
+        buckets: BucketSet::new(buckets).expect("bucket widths"),
+        max_batch: 1,
+        threads: 2,
+        precision,
+        partition,
+        cache_capacity: buckets.len(),
+        ..EngineOpts::default()
+    }
+}
+
+fn track(w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..w).map(|_| rng.poisson(0.8) as f32).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn streaming_is_bit_identical_to_whole_sequence_evaluation() {
+    const WINDOW: usize = 128;
+    // ≥ 4 windows long, and deliberately not window-aligned.
+    let lens = [700usize, 4 * WINDOW, 5 * WINDOW + 17];
+    for (cfg, name) in geometries() {
+        let reach = cfg.receptive_field_reach();
+        assert!(
+            WINDOW > 2 * reach,
+            "{name}: window {WINDOW} must fit two halos ({reach})"
+        );
+        let params = AtacWorksNet::init(cfg, 42).pack_params();
+        for precision in [Precision::F32, Precision::Bf16] {
+            for partition in [Partition::Batch, Partition::Grid] {
+                for (i, &len) in lens.iter().enumerate() {
+                    let signal = track(len, 1000 + i as u64);
+                    // Whole-sequence reference: one bucket wide enough
+                    // for the entire signal, no streaming involved.
+                    let mut whole = InferenceEngine::new(
+                        cfg,
+                        &params,
+                        engine_opts(&[round_up_to_block(len)], precision, partition),
+                    )
+                    .expect("whole-sequence engine");
+                    let want = whole.infer_one(&signal).expect("reference");
+                    // Streamed: window-sized buckets only.
+                    let mut windowed = InferenceEngine::new(
+                        cfg,
+                        &params,
+                        engine_opts(&[WINDOW], precision, partition),
+                    )
+                    .expect("windowed engine");
+                    let mut session =
+                        StreamingSession::new(&mut windowed, WINDOW).expect("session");
+                    let got = session.infer(&signal).expect("streamed");
+                    assert_eq!(
+                        bits(&got.denoised),
+                        bits(&want.denoised),
+                        "{name}/{precision:?}/{partition}/len {len}: denoised bits diverged"
+                    );
+                    assert_eq!(
+                        bits(&got.logits),
+                        bits(&want.logits),
+                        "{name}/{precision:?}/{partition}/len {len}: logits bits diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_spans_cover_the_signal_once_in_order() {
+    let cfg = NetConfig::tiny();
+    let params = AtacWorksNet::init(cfg, 42).pack_params();
+    let mut engine = InferenceEngine::new(
+        cfg,
+        &params,
+        engine_opts(&[128], Precision::F32, Partition::Batch),
+    )
+    .expect("engine");
+    let mut session = StreamingSession::new(&mut engine, 128).expect("session");
+    let signal = track(903, 7);
+    let mut next = 0usize;
+    let stats = session
+        .infer_with(&signal, |start, d, l| {
+            assert_eq!(start, next, "spans arrive contiguous and in order");
+            assert_eq!(d.len(), l.len());
+            next += d.len();
+        })
+        .expect("stream");
+    assert_eq!(next, signal.len());
+    assert_eq!(stats.emitted, signal.len());
+    // Window k starts at 64·(k-1); the final window is the first whose
+    // end reaches the signal, so 903 columns take ⌈(903−128)/64⌉+1 = 14.
+    assert_eq!(stats.windows, (903usize - 128).div_ceil(64) + 1);
+}
+
+#[test]
+fn server_streams_over_wide_requests_end_to_end() {
+    let cfg = NetConfig::tiny();
+    let params = AtacWorksNet::init(cfg, 42).pack_params();
+    let server = dilconv1d::serve::Server::start(
+        cfg,
+        &params,
+        BatcherOpts {
+            engine: engine_opts(&[128, 256], Precision::F32, Partition::Batch),
+            window: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 2,
+            warm: false,
+            stream_window: Some(128),
+        },
+    )
+    .expect("server");
+    // Mixed traffic: two streamed signals and one in-bucket request.
+    let long_a = track(700, 31);
+    let long_b = track(520, 32);
+    let short = track(200, 33);
+    let ta = server.submit(long_a.clone()).expect("stream a");
+    let tb = server.submit(long_b.clone()).expect("stream b");
+    let ts = server.submit(short.clone()).expect("batched");
+    let ra = ta.wait().expect("a");
+    let rb = tb.wait().expect("b");
+    let rs = ts.wait().expect("s");
+    assert!(ra.streamed && rb.streamed && !rs.streamed);
+    assert_eq!((ra.bucket, ra.batch_rows), (128, 1));
+    assert_eq!(rs.bucket, 256);
+    // Streamed responses equal whole-sequence evaluation, bit for bit.
+    for (signal, resp) in [(&long_a, &ra), (&long_b, &rb)] {
+        let mut whole = InferenceEngine::new(
+            cfg,
+            &params,
+            engine_opts(
+                &[round_up_to_block(signal.len())],
+                Precision::F32,
+                Partition::Batch,
+            ),
+        )
+        .expect("reference engine");
+        let want = whole.infer_one(signal).expect("reference");
+        assert_eq!(bits(&resp.output.denoised), bits(&want.denoised));
+        assert_eq!(bits(&resp.output.logits), bits(&want.logits));
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.streamed, 2);
+    // Windows per stream: ⌈(len−window)/core⌉+1 → 700 takes 10, 520 takes 8.
+    assert_eq!(m.stream_windows, 10 + 8);
+}
