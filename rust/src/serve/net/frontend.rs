@@ -251,7 +251,14 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
                     conn_shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
                     conn_shared.live.fetch_sub(1, Ordering::SeqCst);
                 });
-                shared.handlers.lock().unwrap().push(handle);
+                // Reap handles of handlers that already exited so the
+                // list stays bounded by the live-connection count over a
+                // long-running server's lifetime (finished threads need
+                // no join — dropping their handle detaches nothing that
+                // still runs).
+                let mut handlers = shared.handlers.lock().unwrap();
+                handlers.retain(|h| !h.is_finished());
+                handlers.push(handle);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));
@@ -277,11 +284,16 @@ fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
     let mut filled = 0usize;
     let mut mid_request = false;
     'conn: loop {
-        // Parse everything buffered. Every NeedMore means the buffered
-        // bytes are fully consumed (the parser always takes what it can),
-        // so the buffer resets to empty afterwards.
+        // Parse everything buffered, looping until the parser asks for
+        // more input. The loop must not gate on `pos < filled`: a frame
+        // that ends exactly at the buffered bytes (the normal case for a
+        // send-then-wait client) leaves the parser in its done state,
+        // and only a further pull — legal on empty input — surfaces
+        // `WireEvent::End`. Every NeedMore means the buffered bytes are
+        // fully consumed (the parser always takes what it can), so the
+        // buffer resets to empty afterwards.
         let mut pos = 0usize;
-        while pos < filled {
+        loop {
             match parser.pull(&buf[pos..filled]) {
                 Ok((n, ev)) => {
                     pos += n;
@@ -433,6 +445,40 @@ mod tests {
             stream_window: None,
         };
         Server::start(cfg, &params, opts).expect("server")
+    }
+
+    #[test]
+    fn a_single_send_then_wait_request_gets_its_response() {
+        // Regression: a frame ending exactly at the buffered read
+        // boundary — the normal shape for a client that sends one
+        // request then waits — must still surface `WireEvent::End`
+        // (which takes one pull past the payload bytes) and produce a
+        // response rather than deadlocking both sides.
+        use super::super::wire::{encode_request_header, parse_response_header, RESP_HEADER_LEN};
+        let net = NetServer::bind("127.0.0.1:0", tiny_batcher(), NetOpts::default())
+            .expect("bind loopback");
+        let mut stream = TcpStream::connect(net.local_addr()).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .expect("read timeout");
+        let mut frame = encode_request_header(100, 0).to_vec();
+        for v in 0..100 {
+            frame.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        stream.write_all(&frame).expect("send one exact frame");
+        let mut hdr = [0u8; RESP_HEADER_LEN];
+        stream
+            .read_exact(&mut hdr)
+            .expect("response header arrives (no frame-boundary deadlock)");
+        let (code, _flags, width) = parse_response_header(&hdr);
+        assert_eq!(code, status::OK);
+        assert_eq!(width, 100);
+        let mut payload = vec![0u8; width * 8];
+        stream.read_exact(&mut payload).expect("denoised ++ logits payload");
+        drop(stream);
+        let (metrics, stats) = net.shutdown();
+        assert_eq!(stats.requests_ok, 1);
+        assert_eq!(metrics.completed, 1);
     }
 
     #[test]

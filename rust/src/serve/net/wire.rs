@@ -88,9 +88,14 @@ impl ServeError {
         }
     }
 
-    /// A representative error for a wire status code (field values are
-    /// not carried on the wire); `None` for OK, MALFORMED and unknown
-    /// codes.
+    /// A representative error for a wire status code; `None` for OK,
+    /// MALFORMED and unknown codes.
+    ///
+    /// Field values are **not** carried on the wire, so variants with
+    /// payloads come back zeroed/empty (e.g. `TooWide { width: 0,
+    /// largest: 0 }`): only the *variant* is meaningful to a client,
+    /// never the fabricated field values — do not surface them as
+    /// diagnostics.
     pub fn from_wire_status(code: u8) -> Option<ServeError> {
         match code {
             status::TOO_WIDE => Some(ServeError::TooWide {
@@ -507,6 +512,8 @@ mod tests {
             assert_ne!(code, status::OK);
             assert_ne!(code, status::MALFORMED);
             assert!(seen.insert(code), "status {code} assigned twice");
+            // Only the variant round-trips — field values are fabricated
+            // (zeroed/empty) on the way back, per the from_wire_status doc.
             let back = ServeError::from_wire_status(code).expect("round-trip");
             assert_eq!(
                 std::mem::discriminant(&back),
