@@ -13,6 +13,7 @@ use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
 use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, ExecCtx, Partition, PostOps};
 use dilconv1d::machine::{calibrate_host, project, MachineSpec, Precision, Strategy};
+use dilconv1d::model::{AtacWorksNet, NetConfig, NetPlan, Tensor};
 
 fn main() {
     // BENCH_SMOKE shrinks every shape/rep below "quick" (CI smoke job);
@@ -300,6 +301,77 @@ fn main() {
         );
     }
 
+    // Net-level plan (DESIGN.md §7c): the fused/arena execution of the
+    // whole AtacWorks net vs the per-layer reference pipeline, plus the
+    // arena footprint vs the per-layer activation sum. N=8 under batch
+    // partitioning so both paths parallelize across images.
+    let net_threads = 8usize;
+    let (net_cfg, net_n, net_w) = if smoke {
+        (NetConfig::tiny(), 4usize, 512usize)
+    } else {
+        (NetConfig::default(), 8usize, 4992usize)
+    };
+    println!(
+        "\n# net plan: fused/arena vs per-layer ({} conv layers, N={net_n} W={net_w}, \
+         {net_threads} threads)",
+        net_cfg.n_conv_layers()
+    );
+    let xt = Tensor::from_vec(rnd(net_n * net_w, 0xC1), net_n, 1, net_w);
+    let mut fused_net = AtacWorksNet::init(net_cfg, 11);
+    fused_net.set_backend(Backend::Brgemm, net_threads);
+    fused_net.set_inference(true);
+    fused_net.warm(net_n, net_w).expect("fused net warm");
+    let t_net_fused = time_fn(1, reps, || {
+        let (d, l, _) = fused_net.forward(&xt, false);
+        std::hint::black_box((&d, &l));
+    });
+    let mut layer_net = AtacWorksNet::init(net_cfg, 11);
+    layer_net.set_backend(Backend::Brgemm, net_threads);
+    layer_net.set_inference(true);
+    layer_net.set_netplan(false);
+    layer_net.warm(net_n, net_w).expect("per-layer net warm");
+    let t_net_layer = time_fn(1, reps, || {
+        let (d, l, _) = layer_net.forward(&xt, false);
+        std::hint::black_box((&d, &l));
+    });
+    let net_ratio = t_net_fused.median_secs / t_net_layer.median_secs;
+    let plan = fused_net.netplan().expect("warm built the net plan");
+    let arena_bytes = plan.activation_bytes();
+    let per_layer_bytes = NetPlan::per_layer_activation_bytes(&net_cfg, net_n, net_w);
+    let arena_ratio = arena_bytes as f64 / per_layer_bytes as f64;
+    println!(
+        "per-layer {:>8.2} ms   fused {:>8.2} ms   ratio {net_ratio:.3}",
+        t_net_layer.median_secs * 1e3,
+        t_net_fused.median_secs * 1e3,
+    );
+    println!(
+        "activation memory: arena {} KiB vs per-layer {} KiB ({:.1}%)",
+        arena_bytes / 1024,
+        per_layer_bytes / 1024,
+        arena_ratio * 100.0,
+    );
+    // The arena floor is deterministic arithmetic, not a timing: the
+    // live set must undercut the per-layer sum unconditionally.
+    assert!(
+        arena_bytes < per_layer_bytes,
+        "arena ({arena_bytes} B) must stay below the per-layer activation sum \
+         ({per_layer_bytes} B)"
+    );
+    let net_regressed = t_net_fused.min_secs > t_net_layer.min_secs * 1.05;
+    if net_regressed {
+        eprintln!(
+            "WARN: fused net plan slower than per-layer: {} vs {}",
+            t_net_fused.min_secs, t_net_layer.min_secs
+        );
+    }
+    if bench_harness::strict() && cores >= net_threads {
+        assert!(
+            !net_regressed,
+            "fused net plan must be <= per-layer at {net_threads} threads: {} vs {}",
+            t_net_fused.min_secs, t_net_layer.min_secs
+        );
+    }
+
     // Bench trajectory row (BENCH_*.json at the repo root).
     let json = format!(
         "{{\n  \"bench\": \"conv_forward\",\n  \"shape\": \"C15_K15_S51_d8_W60000\",\n  \
@@ -309,7 +381,11 @@ fn main() {
          \"dispatched_isa\": \"{}\",\n  \"dispatch_speedup_vs_scalar\": {:.4},\n  \
          \"isa_rows\": [\n    {}\n  ],\n  \
          \"partition_n1_batch_ms\": {:.4},\n  \"partition_n1_grid_ms\": {:.4},\n  \
-         \"partition_n1_grid_speedup\": {:.4}\n}}\n",
+         \"partition_n1_grid_speedup\": {:.4},\n  \
+         \"net_per_layer_ms\": {:.4},\n  \"net_fused_ms\": {:.4},\n  \
+         \"net_fused_over_per_layer\": {:.4},\n  \
+         \"net_arena_bytes\": {},\n  \"net_per_layer_activation_bytes\": {},\n  \
+         \"net_arena_over_per_layer\": {:.4}\n}}\n",
         t_eager.median_secs * 1e3,
         t_plan.median_secs * 1e3,
         t_plan.median_secs / t_eager.median_secs,
@@ -324,6 +400,12 @@ fn main() {
         t_batch.median_secs * 1e3,
         t_grid.median_secs * 1e3,
         grid_speedup,
+        t_net_layer.median_secs * 1e3,
+        t_net_fused.median_secs * 1e3,
+        net_ratio,
+        arena_bytes,
+        per_layer_bytes,
+        arena_ratio,
     );
     // Benches run from rust/; place the trajectory file at the repo root
     // when it is visible, else in the working directory.

@@ -287,7 +287,13 @@ pub struct ServeConfig {
     pub autotune: bool,
     /// Maximum resident bucket entries per worker (LRU beyond this).
     pub cache_capacity: usize,
-    /// Pre-build every bucket's plans before accepting traffic.
+    /// Conv→conv fusion inside each bucket's net-level plan
+    /// (`fuse = true|false`; the liveness arena is on either way, and
+    /// the bits are identical either way — DESIGN.md §7c).
+    pub fuse: bool,
+    /// Pre-build the resident bucket suffix's plans before accepting
+    /// traffic (buckets that cannot stay under `cache_capacity` build
+    /// lazily on first use).
     pub warm: bool,
     /// TCP listen address (`listen = "127.0.0.1:7878"`; `--listen`).
     /// `None` keeps the server in-process (load-generator mode).
@@ -324,6 +330,7 @@ impl Default for ServeConfig {
             backend: Backend::Brgemm,
             autotune: false,
             cache_capacity: 8,
+            fuse: true,
             warm: true,
             listen: None,
             stream: true,
@@ -374,6 +381,9 @@ impl ServeConfig {
         if let Some(b) = toml::get_bool(&doc, "serve", "autotune") {
             cfg.autotune = b;
         }
+        if let Some(b) = toml::get_bool(&doc, "serve", "fuse") {
+            cfg.fuse = b;
+        }
         if let Some(b) = toml::get_bool(&doc, "serve", "warm") {
             cfg.warm = b;
         }
@@ -415,6 +425,7 @@ impl ServeConfig {
             "partition" => self.partition = value.parse().map_err(|e: String| anyhow!(e))?,
             "backend" => self.apply_backend_name(value)?,
             "autotune" => self.autotune = parse_bool_flag(key, value)?,
+            "fuse" => self.fuse = parse_bool_flag(key, value)?,
             "no-warm" => self.warm = !parse_bool_flag(key, value)?,
             "listen" => self.listen = Some(value.to_string()),
             "stream" => self.stream = parse_bool_flag(key, value)?,
@@ -528,6 +539,7 @@ impl ServeConfig {
             backend: self.backend,
             autotune: self.autotune,
             cache_capacity: self.cache_capacity,
+            fuse: self.fuse,
         }
     }
 
@@ -687,6 +699,7 @@ precision = "bf16"
 partition = "grid"
 autotune = true
 cache_capacity = 3
+fuse = false
 warm = false
 listen = "127.0.0.1:0"
 stream_window = 500
@@ -708,6 +721,7 @@ drain_ms = 250.0
         assert_eq!(c.partition, Partition::Grid);
         assert!(c.autotune);
         assert_eq!(c.cache_capacity, 3);
+        assert!(!c.fuse);
         assert!(!c.warm);
         // Untouched keys keep defaults.
         assert_eq!(c.filter_size, 51);
@@ -716,6 +730,7 @@ drain_ms = 250.0
         let b = c.batcher_opts();
         assert_eq!(b.engine.max_batch, 16);
         assert_eq!(b.engine.buckets, c.buckets);
+        assert!(!b.engine.fuse);
         assert_eq!(b.window, Duration::from_secs_f64(0.0055));
         assert_eq!(b.queue_depth, 32);
         assert_eq!(b.workers, 2);
@@ -770,6 +785,7 @@ drain_ms = 250.0
             ("precision", "bf16"),
             ("partition", "grid"),
             ("autotune", "true"),
+            ("fuse", "false"),
             ("no-warm", "true"),
             ("listen", "0.0.0.0:9000"),
             // `stream = false`: the default geometry's halo (4800) fits
@@ -790,7 +806,7 @@ drain_ms = 250.0
         assert_eq!(c.cache_capacity, 2);
         assert_eq!(c.precision, Precision::Bf16);
         assert_eq!(c.partition, Partition::Grid);
-        assert!(c.autotune && !c.warm);
+        assert!(c.autotune && !c.warm && !c.fuse);
         assert_eq!(c.listen.as_deref(), Some("0.0.0.0:9000"));
         assert!(!c.stream);
         assert_eq!(c.stream_window, 100);

@@ -327,6 +327,25 @@ impl Conv1dLayer {
         Ok(out)
     }
 
+    /// [`Self::try_forward_post`] into a caller-owned `(N, K, Q)` buffer
+    /// — the net-level plan's per-layer entry point: the output lands
+    /// directly in an arena slot, so the steady state allocates nothing.
+    /// `out` must be zeroed by the caller (kernels that accumulate rely
+    /// on it, exactly as `try_forward_post` zero-initialises its fresh
+    /// output vector).
+    pub fn try_forward_post_into(
+        &self,
+        x: &[f32],
+        residual: Option<&[f32]>,
+        n: usize,
+        w: usize,
+        out: &mut [f32],
+    ) -> Result<(), PlanError> {
+        let p = self.try_params(n, w)?;
+        assert_eq!(out.len(), n * self.k * p.q(), "output buffer shape mismatch");
+        self.with_plan(&p, |plan| plan.execute_forward_post_into(x, residual, out))
+    }
+
     /// Fused backward through the post-op pipeline (adjoint of
     /// [`Self::try_forward_post`]): one prologue sweep folds the
     /// activation gradient (from the saved output `y`), the bias gradient

@@ -137,6 +137,8 @@ USAGE: dilconv <subcommand> [--flags]
                    [--backend brgemm|onednn|direct|bf16]
                    [--precision f32|bf16] [--partition batch|grid]
                    [--autotune] [--cache-capacity N] [--no-warm]
+                   [--fuse true|false] net-level fused/arena plan
+                   (default on; bits identical either way)
                    [--requests N] [--rate F] [--seed N]
                    [--listen addr:port] serve the TCP wire protocol
                    instead of synthetic load ([--duration-secs F] then
@@ -297,7 +299,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "serving AtacWorks-like net: {} conv layers, ch={}, buckets [{}], max_batch {}, \
          window {} ms, queue {}, {} worker(s) x {} thread(s), backend {}, precision {:?}, \
-         partition {}, autotune {}, warm {}",
+         partition {}, autotune {}, warm {}, fuse {}",
         net_cfg.n_conv_layers(),
         net_cfg.channels,
         cfg.buckets,
@@ -311,6 +313,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.partition,
         cfg.autotune,
         cfg.warm,
+        cfg.fuse,
     );
     match cfg.resolved_stream_window() {
         Some(w) => println!(
@@ -327,7 +330,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "server up in {:.2}s ({})",
         t0.elapsed().as_secs_f64(),
         if cfg.warm {
-            "plan cache warmed for every bucket"
+            "plan cache warmed for the resident bucket suffix"
         } else {
             "cold plan cache; first requests pay plan builds"
         }

@@ -7,12 +7,14 @@
 
 pub mod layers;
 pub mod loss;
+pub mod netplan;
 pub mod optimizer;
 pub mod precision;
 pub mod resnet;
 pub mod tensor;
 
 pub use layers::{ConvGrads, ConvSame};
+pub use netplan::NetPlan;
 pub use optimizer::{Adam, Sgd};
 pub use precision::MasterWeights;
 pub use resnet::{AtacWorksNet, Losses, NetConfig};

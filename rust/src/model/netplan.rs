@@ -1,0 +1,1061 @@
+//! Net-level execution plan: cross-layer activation arena + block-wise
+//! conv→conv fusion (DESIGN.md §7c, ROADMAP item 4).
+//!
+//! Per-layer plans ([`crate::conv1d::ConvPlan`]) already keep each conv's
+//! *internal* steady state allocation-free, but the net still
+//! materialised a full `(N, C, W)` tensor between every pair of its
+//! layers — ~25 round-trips to memory per forward pass. A [`NetPlan`]
+//! compiles the whole topology once and executes it out of persistent
+//! buffers:
+//!
+//! * **Arena liveness.** Every inter-layer intermediate is assigned a
+//!   slot in one arena by a linear-scan liveness analysis
+//!   (`assign_slots`): a value's slot is recycled the moment its last
+//!   consumer has run. The residual skip keeps `h` alive across both of
+//!   a block's convs, so the analysis works on the real dataflow reads
+//!   (input *and* residual), not layer adjacency — the same topology
+//!   discipline the training path's `backward_completion_order` relies
+//!   on. The live-set maximum is 3 slots for the resnet topology
+//!   (producer + skip + consumer), independent of depth.
+//!
+//! * **Block-wise fusion.** For the stem→block and intra-block conv
+//!   pairs, a producer's 64-wide output block is consumed by the next
+//!   conv's BRGEMM while it is still hot in L2. The fused executor runs
+//!   a demand-driven schedule per image: the deepest stage pulls output
+//!   blocks left-to-right, and each upstream stage produces exactly the
+//!   halo-extended coverage its consumer's next block reads — the same
+//!   reach arithmetic `NetConfig::receptive_field_reach` encodes per
+//!   layer (`demand = min(W, pos + nb + right_pad)`). The per-layer
+//!   fused [`crate::conv1d::PostOps`] epilogue is the intra-fusion
+//!   boundary case: it runs per block on the hot strip, exactly as the
+//!   per-layer kernels run it per block on the output row.
+//!
+//! ## Why fusion is bit-identical
+//!
+//! The fused executor performs, per output element, the *same* FMA
+//! reduction the per-layer BRGEMM path performs:
+//!
+//! * Each stage's block is computed by the same
+//!   `brgemm_f32_with`/`brgemm_bf16_with` call with the same
+//!   `(m = K, n = nb, k = C, l_br = S)` shape, the same `(S,K,C)` weight
+//!   relayout and the same tap offsets `b_offs[s] = pos + s·d`. Only
+//!   `ldb`/`ldc` differ (padded strips instead of whole tensors), and
+//!   leading dimensions move *stores*, never the accumulation order.
+//! * The epilogue routes through [`crate::conv1d::post::apply_segment`]
+//!   — the identical per-filter primitive `apply_block` uses in the
+//!   per-layer path.
+//! * Under bf16, intermediates are stored as the f32 accumulator and
+//!   narrowed element-wise (`narrow_row_into`) exactly where the
+//!   per-layer path narrows its padded input staging; rounding is
+//!   per-element, so narrowing block-by-block gives the same bits as
+//!   narrowing the whole row.
+//! * Width masking (`infer_masked`'s per-layer tail re-zeroing) happens
+//!   on each producer block *before* any consumer reads it — the fusion
+//!   boundary — so bucket invariance survives fusion unchanged.
+//!
+//! `tests/net_plan.rs` locks fused ≡ per-layer (`f32::to_bits`) across
+//! {f32, bf16} × {batch, grid} × {masked, unmasked}.
+
+use crate::conv1d::bf16::{narrow_row_into, to_bf16_into, Bf16};
+use crate::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32_with};
+use crate::conv1d::layout::{kcs_to_skc_into, pad_width_into};
+use crate::conv1d::post::apply_segment;
+use crate::conv1d::threading::par_batch_chunks_scratch;
+use crate::conv1d::{simd, Backend, ConvParams, PlanError, WIDTH_BLOCK};
+use crate::machine::Precision;
+
+use super::layers::ConvSame;
+use super::resnet::NetConfig;
+use super::tensor::Tensor;
+
+/// Upper bound on arena slots (the resnet live set is 3; 8 leaves room
+/// for deeper topologies without a heap-allocated slot table on the hot
+/// path).
+const MAX_SLOTS: usize = 8;
+
+/// One node of the net-level dataflow graph, for liveness analysis:
+/// which arena values it reads (input + residual) and which it writes.
+/// External tensors (the model input and the head outputs) are not
+/// arena values and appear as `None`/absent.
+#[derive(Debug, Clone)]
+pub(crate) struct OpSpec {
+    pub reads: Vec<usize>,
+    pub write: Option<usize>,
+}
+
+/// Linear-scan liveness: assign every value an arena slot, recycling a
+/// slot the moment the op performing the value's **last read** retires.
+/// The written value's slot is allocated *before* this op's dying reads
+/// are freed, so an op's output can never alias one of its live inputs.
+/// Returns `(slot_of_value, slot_count)`.
+pub(crate) fn assign_slots(n_values: usize, ops: &[OpSpec]) -> (Vec<usize>, usize) {
+    let mut last_read = vec![usize::MAX; n_values];
+    for (i, op) in ops.iter().enumerate() {
+        for &v in &op.reads {
+            last_read[v] = i;
+        }
+    }
+    let mut slot_of = vec![usize::MAX; n_values];
+    let mut free: Vec<usize> = Vec::new();
+    let mut n_slots = 0usize;
+    for (i, op) in ops.iter().enumerate() {
+        if let Some(v) = op.write {
+            // Allocate first (never reuse a slot this op still reads),
+            // preferring the smallest free slot for determinism.
+            let slot = match free.iter().enumerate().min_by_key(|&(_, &s)| s) {
+                Some((at, _)) => free.swap_remove(at),
+                None => {
+                    n_slots += 1;
+                    n_slots - 1
+                }
+            };
+            slot_of[v] = slot;
+            if last_read[v] == usize::MAX {
+                // Dead store (no consumer): the slot frees immediately.
+                free.push(slot);
+            }
+        }
+        for &v in &op.reads {
+            if last_read[v] == i {
+                free.push(slot_of[v]);
+            }
+        }
+    }
+    (slot_of, n_slots)
+}
+
+/// Where an op reads its primary input from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Src {
+    /// The external model input `x` (`(N, 1, W)`).
+    Input,
+    /// An arena value (`(N, ch, W)`).
+    Val(usize),
+}
+
+/// Where an op writes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Dst {
+    Val(usize),
+    Den,
+    Logits,
+}
+
+/// A per-layer op: pad `src`, run the layer's cached
+/// [`crate::conv1d::ConvPlan`] with its fused epilogue, mask the tail.
+/// The conformance-reference path, and the path heads always take.
+#[derive(Debug, Clone, Copy)]
+struct LayerOp {
+    layer: usize,
+    src: Src,
+    /// Arena value supplying the residual (when the layer's post-ops
+    /// carry one).
+    residual: Option<usize>,
+    dst: Dst,
+}
+
+/// One fused stage: a conv consuming the previous stage's padded strip.
+#[derive(Debug, Clone)]
+struct Stage {
+    layer: usize,
+    c: usize,
+    k: usize,
+    /// Offset of this stage's `(S,K,C)` weights in the concatenated
+    /// `w_skc` buffer.
+    w_off: usize,
+    /// Offset of this stage's bias in the concatenated bias buffer.
+    b_off: usize,
+    /// Tap offsets into the stage weights: `a_offs[s] = s·K·C`.
+    a_offs: Vec<usize>,
+}
+
+/// A fused conv→conv chain: `stages` execute block-wise per image, with
+/// intermediates living in per-worker padded strips, never the arena.
+#[derive(Debug, Clone)]
+struct Chain {
+    stages: Vec<Stage>,
+    src: Src,
+    dst: usize,
+}
+
+/// The compiled program: fused chains (referenced by index) plus the
+/// per-layer ops (all layers when unfused; only the heads when fused).
+#[derive(Debug, Clone)]
+enum NetOp {
+    Layer(LayerOp),
+    Chain(usize),
+}
+
+/// Knobs a plan was compiled against (rebuild when any changes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct PlanKey {
+    n: usize,
+    w: usize,
+    fuse: bool,
+    backend: Backend,
+    precision: Precision,
+    threads: usize,
+    autotune: bool,
+    inference: bool,
+}
+
+/// A compiled net-level execution plan for one `(N, W)` shape: the
+/// liveness-analyzed activation arena plus (when active) the fused
+/// chain schedule. Built once per shape by the net's warm-up or first
+/// inference, then executed allocation-free.
+pub struct NetPlan {
+    cfg: NetConfig,
+    key: PlanKey,
+    /// Same-pad geometry shared by every layer (`(S-1)·d` split).
+    left: usize,
+    right: usize,
+    ops: Vec<NetOp>,
+    chains: Vec<Chain>,
+    /// Arena slot of each program value.
+    slot_of: Vec<usize>,
+    n_slots: usize,
+    fused_active: bool,
+    // ---- persistent buffers (allocated at build, reused forever) ----
+    /// The activation arena: `n_slots` slots of `(N, ch, W)` each.
+    arena: Vec<f32>,
+    /// Shared pad staging for per-layer ops: `(N, ch, W + l + r)`.
+    pad: Vec<f32>,
+    /// Per-worker fused strips: `workers × strips_per_chain × ch × wp`.
+    strips: Vec<f32>,
+    /// bf16 operand twins of the strips (empty under f32).
+    twins: Vec<Bf16>,
+    /// Block tap-offset table: `b_offs[blk·S + s] = blk·64 + s·d` —
+    /// read-only at execute time, shared by every worker.
+    b_offs: Vec<usize>,
+    /// Concatenated `(S,K,C)` weights of the fused stages, re-synced
+    /// from the layers on every execute (so weight updates never go
+    /// stale), plus their bf16 twins and biases.
+    w_skc: Vec<f32>,
+    w_bf16: Vec<Bf16>,
+    bias: Vec<f32>,
+    strips_per_chain: usize,
+}
+
+/// Build the per-layer (arena) program for the resnet topology.
+/// Values: `h_0 = 0`, then per block `b`: `r_b = 2b+1`, `h_{b+1} = 2b+2`.
+fn layer_program(cfg: &NetConfig) -> (Vec<LayerOp>, usize) {
+    let nb = cfg.n_blocks;
+    let mut ops = Vec::with_capacity(2 * nb + 3);
+    ops.push(LayerOp {
+        layer: 0,
+        src: Src::Input,
+        residual: None,
+        dst: Dst::Val(0),
+    });
+    for b in 0..nb {
+        let h = 2 * b;
+        ops.push(LayerOp {
+            layer: 1 + 2 * b,
+            src: Src::Val(h),
+            residual: None,
+            dst: Dst::Val(h + 1),
+        });
+        ops.push(LayerOp {
+            layer: 2 + 2 * b,
+            src: Src::Val(h + 1),
+            residual: Some(h),
+            dst: Dst::Val(h + 2),
+        });
+    }
+    let last = 2 * nb;
+    ops.push(LayerOp {
+        layer: 1 + 2 * nb,
+        src: Src::Val(last),
+        residual: None,
+        dst: Dst::Den,
+    });
+    ops.push(LayerOp {
+        layer: 2 + 2 * nb,
+        src: Src::Val(last),
+        residual: None,
+        dst: Dst::Logits,
+    });
+    (ops, 2 * nb + 1)
+}
+
+/// Fused-chain layer groups: `[stem, c1_0, c2_0]` then `[c1_b, c2_b]`
+/// per later block. Heads always stay per-layer (their `K = 1` output
+/// is the external result, not a strip).
+fn chain_groups(cfg: &NetConfig) -> Vec<Vec<usize>> {
+    let nb = cfg.n_blocks;
+    if nb == 0 {
+        return vec![vec![0]];
+    }
+    let mut groups = vec![vec![0, 1, 2]];
+    for b in 1..nb {
+        groups.push(vec![1 + 2 * b, 2 + 2 * b]);
+    }
+    groups
+}
+
+fn op_specs_layers(ops: &[LayerOp]) -> Vec<OpSpec> {
+    ops.iter()
+        .map(|op| {
+            let mut reads = Vec::new();
+            if let Src::Val(v) = op.src {
+                reads.push(v);
+            }
+            if let Some(v) = op.residual {
+                reads.push(v);
+            }
+            OpSpec {
+                reads,
+                write: match op.dst {
+                    Dst::Val(v) => Some(v),
+                    _ => None,
+                },
+            }
+        })
+        .collect()
+}
+
+impl NetPlan {
+    /// Compile the net for shape `(n, w)` against the layers' current
+    /// execution knobs. `fuse` requests block-wise chain fusion; it
+    /// engages only on the pinned BRGEMM backend (f32 or bf16, no
+    /// autotuner — the tuner may pick a non-BRGEMM kernel per layer),
+    /// falling back to the per-layer arena program otherwise.
+    pub fn build(cfg: NetConfig, convs: &[ConvSame], n: usize, w: usize, fuse: bool) -> NetPlan {
+        assert!(n > 0 && w > 0, "net plan needs a nonzero shape");
+        assert_eq!(convs.len(), 2 * cfg.n_blocks + 3, "topology mismatch");
+        let lead = &convs[0].conv;
+        let key = PlanKey {
+            n,
+            w,
+            fuse,
+            backend: lead.backend,
+            precision: lead.precision,
+            threads: lead.threads,
+            autotune: lead.autotune,
+            inference: lead.inference,
+        };
+        let fused_active = fuse
+            && lead.backend == Backend::Brgemm
+            && !lead.autotune
+            && matches!(lead.precision, Precision::F32 | Precision::Bf16);
+        let (left, right) = ConvParams::same_pad(cfg.filter_size, cfg.dilation);
+        let wp = w + left + right;
+        let ch = cfg.channels;
+        let bf16 = fused_active && key.precision == Precision::Bf16;
+
+        let (chains, ops, slot_of, n_slots, strips_per_chain, w_len, b_len) = if fused_active {
+            let groups = chain_groups(&cfg);
+            // Chain value v feeds chain v+1; the last value feeds both
+            // heads. Per-chain intermediates live in strips, not slots.
+            let n_vals = groups.len();
+            let mut w_len = 0usize;
+            let mut b_len = 0usize;
+            let mut chains = Vec::with_capacity(n_vals);
+            for (ci, layers) in groups.iter().enumerate() {
+                let mut stages = Vec::with_capacity(layers.len());
+                for &l in layers {
+                    let lc = &convs[l].conv;
+                    stages.push(Stage {
+                        layer: l,
+                        c: lc.c,
+                        k: lc.k,
+                        w_off: w_len,
+                        b_off: b_len,
+                        a_offs: (0..lc.s).map(|is| is * lc.k * lc.c).collect(),
+                    });
+                    w_len += lc.s * lc.k * lc.c;
+                    b_len += lc.k;
+                }
+                chains.push(Chain {
+                    stages,
+                    src: if ci == 0 { Src::Input } else { Src::Val(ci - 1) },
+                    dst: ci,
+                });
+            }
+            let mut specs: Vec<OpSpec> = chains
+                .iter()
+                .map(|c| OpSpec {
+                    reads: match c.src {
+                        Src::Val(v) => vec![v],
+                        Src::Input => vec![],
+                    },
+                    write: Some(c.dst),
+                })
+                .collect();
+            let last = n_vals - 1;
+            let nb = cfg.n_blocks;
+            let mut ops: Vec<NetOp> = (0..chains.len()).map(NetOp::Chain).collect();
+            for head in [1 + 2 * nb, 2 + 2 * nb] {
+                specs.push(OpSpec {
+                    reads: vec![last],
+                    write: None,
+                });
+                ops.push(NetOp::Layer(LayerOp {
+                    layer: head,
+                    src: Src::Val(last),
+                    residual: None,
+                    dst: if head == 1 + 2 * nb {
+                        Dst::Den
+                    } else {
+                        Dst::Logits
+                    },
+                }));
+            }
+            let (slot_of, n_slots) = assign_slots(n_vals, &specs);
+            let strips = chains.iter().map(|c| c.stages.len()).max().unwrap_or(1);
+            (chains, ops, slot_of, n_slots, strips, w_len, b_len)
+        } else {
+            let (lops, n_vals) = layer_program(&cfg);
+            let specs = op_specs_layers(&lops);
+            let (slot_of, n_slots) = assign_slots(n_vals, &specs);
+            let ops = lops.into_iter().map(NetOp::Layer).collect();
+            (Vec::new(), ops, slot_of, n_slots, 0, 0, 0)
+        };
+        assert!(n_slots <= MAX_SLOTS, "live set exceeds the slot table");
+
+        let workers = key.threads.max(1).min(n.max(1));
+        let strip_elems = workers * strips_per_chain * ch * wp;
+        let blocks = w.div_ceil(WIDTH_BLOCK);
+        let s = cfg.filter_size;
+        let mut b_offs = vec![0usize; blocks * s];
+        for blk in 0..blocks {
+            for is in 0..s {
+                b_offs[blk * s + is] = blk * WIDTH_BLOCK + is * cfg.dilation;
+            }
+        }
+        NetPlan {
+            cfg,
+            key,
+            left,
+            right,
+            ops,
+            chains,
+            slot_of,
+            n_slots,
+            fused_active,
+            arena: vec![0.0; n_slots * n * ch * w],
+            pad: vec![0.0; n * ch * wp],
+            strips: vec![0.0; strip_elems],
+            twins: vec![Bf16::ZERO; if bf16 { strip_elems } else { 0 }],
+            b_offs,
+            w_skc: vec![0.0; w_len],
+            w_bf16: vec![Bf16::ZERO; if bf16 { w_len } else { 0 }],
+            bias: vec![0.0; b_len],
+            strips_per_chain,
+        }
+    }
+
+    /// Does this plan still match the shape and the layers' knobs?
+    pub fn matches(&self, convs: &[ConvSame], n: usize, w: usize, fuse: bool) -> bool {
+        let lead = &convs[0].conv;
+        self.key
+            == PlanKey {
+                n,
+                w,
+                fuse,
+                backend: lead.backend,
+                precision: lead.precision,
+                threads: lead.threads,
+                autotune: lead.autotune,
+                inference: lead.inference,
+            }
+    }
+
+    /// Is block-wise chain fusion engaged (vs the per-layer arena
+    /// program)?
+    pub fn fused_active(&self) -> bool {
+        self.fused_active
+    }
+
+    /// Arena slots the liveness analysis settled on (3 for the resnet
+    /// per-layer program, ≤ 2 for the fused program).
+    pub fn slot_count(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Bytes of persistent activation storage this plan holds: arena
+    /// slots + pad staging + fused strips (and their bf16 twins). The
+    /// quantity the bench compares against
+    /// [`Self::per_layer_activation_bytes`].
+    pub fn activation_bytes(&self) -> usize {
+        4 * (self.arena.len() + self.pad.len() + self.strips.len()) + 2 * self.twins.len()
+    }
+
+    /// Activation bytes the pre-arena design held resident for the same
+    /// shape: every layer's private pad staging `(N, C, wp)` plus its
+    /// output tensor `(N, K, W)`.
+    pub fn per_layer_activation_bytes(cfg: &NetConfig, n: usize, w: usize) -> usize {
+        let (l, r) = ConvParams::same_pad(cfg.filter_size, cfg.dilation);
+        let wp = w + l + r;
+        let ch = cfg.channels;
+        let layer = |c: usize, k: usize| n * (c * wp + k * w) * 4;
+        let mut total = layer(1, ch); // stem
+        for _ in 0..cfg.n_blocks {
+            total += 2 * layer(ch, ch);
+        }
+        total + 2 * layer(ch, 1) // heads
+    }
+
+    /// Which per-layer plans the net still needs under this program —
+    /// every layer when unfused, only the heads when fused (fused-chain
+    /// layers never build a [`crate::conv1d::ConvPlan`]).
+    pub fn per_layer_indices(&self) -> Vec<usize> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                NetOp::Layer(l) => Some(l.layer),
+                NetOp::Chain(_) => None,
+            })
+            .collect()
+    }
+
+    /// Execute the compiled program. `x` is `(N, 1, W)`; `den`/`logits`
+    /// are overwritten `(N, 1, W)` head outputs. `widths` enables
+    /// per-row tail masking (bucket invariance): each row's columns
+    /// `widths[i]..W` are re-zeroed at every producer boundary, exactly
+    /// like the per-layer `infer_masked`. Heads are never masked.
+    ///
+    /// Zero heap allocations in the steady state (with `threads ≤ 1`
+    /// end-to-end; thread spawns are the only exception, same as every
+    /// kernel path).
+    pub fn execute(
+        &mut self,
+        convs: &[ConvSame],
+        x: &Tensor,
+        widths: Option<&[usize]>,
+        den: &mut Tensor,
+        logits: &mut Tensor,
+    ) -> Result<(), PlanError> {
+        let (n, w) = (self.key.n, self.key.w);
+        let ch = self.cfg.channels;
+        assert_eq!((x.n, x.c, x.w), (n, 1, w), "input shape vs plan");
+        assert_eq!((den.n, den.c, den.w), (n, 1, w), "denoised shape vs plan");
+        assert_eq!(
+            (logits.n, logits.c, logits.w),
+            (n, 1, w),
+            "logits shape vs plan"
+        );
+        if let Some(ws) = widths {
+            assert_eq!(ws.len(), n, "one native width per row");
+            assert!(ws.iter().all(|&v| v <= w), "native width exceeds plan width");
+        }
+        self.sync_fused_weights(convs);
+
+        // Split the borrows: arena slots are handed out as disjoint
+        // `&mut` chunks while the chain scratch stays independently
+        // reachable.
+        let NetPlan {
+            ref cfg,
+            ref key,
+            left,
+            right,
+            ref ops,
+            ref chains,
+            ref slot_of,
+            n_slots,
+            ref mut arena,
+            ref mut pad,
+            ref mut strips,
+            ref mut twins,
+            ref b_offs,
+            ref w_skc,
+            ref w_bf16,
+            ref bias,
+            strips_per_chain,
+            ..
+        } = *self;
+        let wp = w + left + right;
+        let slot_sz = n * ch * w;
+        let mut chunks = arena.chunks_mut(slot_sz.max(1));
+        let mut slots: [Option<&mut [f32]>; MAX_SLOTS] = [const { None }; MAX_SLOTS];
+        for slot in slots.iter_mut().take(n_slots) {
+            *slot = chunks.next();
+        }
+
+        for op in ops {
+            match op {
+                NetOp::Layer(op) => {
+                    let op = *op;
+                    let lc = &convs[op.layer].conv;
+                    let (c, k) = (lc.c, lc.k);
+                    {
+                        let src: &[f32] = match op.src {
+                            Src::Input => &x.data,
+                            Src::Val(v) => slots[slot_of[v]]
+                                .as_deref()
+                                .expect("source slot resident"),
+                        };
+                        pad_width_into(src, n, c, w, left, right, &mut pad[..n * c * wp]);
+                    }
+                    let res_slot = op.residual.map(|v| slot_of[v]);
+                    match op.dst {
+                        Dst::Val(v) => {
+                            let ds = slot_of[v];
+                            let out = slots[ds].take().expect("dst slot resident");
+                            {
+                                let res = res_slot.map(|s| {
+                                    slots[s].as_deref().expect("residual slot resident")
+                                });
+                                out.fill(0.0);
+                                lc.try_forward_post_into(&pad[..n * c * wp], res, n, wp, out)?;
+                            }
+                            if let Some(ws) = widths {
+                                mask_rows(out, n, k, w, ws);
+                            }
+                            slots[ds] = Some(out);
+                        }
+                        Dst::Den | Dst::Logits => {
+                            let out: &mut [f32] = if matches!(op.dst, Dst::Den) {
+                                &mut den.data
+                            } else {
+                                &mut logits.data
+                            };
+                            let res = res_slot
+                                .map(|s| slots[s].as_deref().expect("residual slot resident"));
+                            out.fill(0.0);
+                            lc.try_forward_post_into(&pad[..n * c * wp], res, n, wp, out)?;
+                        }
+                    }
+                }
+                NetOp::Chain(ci) => {
+                    let chain = &chains[*ci];
+                    let ds = slot_of[chain.dst];
+                    let out = slots[ds].take().expect("chain dst slot resident");
+                    {
+                        let src: &[f32] = match chain.src {
+                            Src::Input => &x.data,
+                            Src::Val(v) => slots[slot_of[v]]
+                                .as_deref()
+                                .expect("chain source resident"),
+                        };
+                        run_chain(
+                            convs,
+                            chain,
+                            ChainGeom {
+                                n,
+                                w,
+                                left,
+                                right,
+                                ch,
+                                threads: key.threads,
+                                strips_per_chain,
+                                s: cfg.filter_size,
+                            },
+                            src,
+                            widths,
+                            out,
+                            strips,
+                            twins,
+                            b_offs,
+                            w_skc,
+                            w_bf16,
+                            bias,
+                        );
+                    }
+                    slots[ds] = Some(out);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Refresh the fused stages' packed weights/biases from the layers
+    /// (a relayout copy — no allocation), so optimiser steps or direct
+    /// bias mutation can never serve stale parameters.
+    fn sync_fused_weights(&mut self, convs: &[ConvSame]) {
+        let bf16 = !self.w_bf16.is_empty();
+        for chain in &self.chains {
+            for st in &chain.stages {
+                let lc = &convs[st.layer].conv;
+                let len = lc.s * st.k * st.c;
+                kcs_to_skc_into(
+                    lc.weights(),
+                    st.k,
+                    st.c,
+                    lc.s,
+                    &mut self.w_skc[st.w_off..st.w_off + len],
+                );
+                self.bias[st.b_off..st.b_off + st.k].copy_from_slice(&lc.bias);
+                if bf16 {
+                    to_bf16_into(
+                        &self.w_skc[st.w_off..st.w_off + len],
+                        &mut self.w_bf16[st.w_off..st.w_off + len],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Geometry a fused chain executes under (hoisted out of [`NetPlan`] so
+/// the executor borrows only the buffers it needs).
+#[derive(Clone, Copy)]
+struct ChainGeom {
+    n: usize,
+    w: usize,
+    left: usize,
+    right: usize,
+    ch: usize,
+    threads: usize,
+    strips_per_chain: usize,
+    s: usize,
+}
+
+/// Execute one fused chain for every image: `src` is the chain input
+/// `(N, c0, W)` (unpadded), `out` the destination slot `(N, k_last, W)`.
+/// Each worker owns `strips_per_chain` padded strips (plus bf16 twins);
+/// the per-image demand-driven schedule keeps every stage at most a
+/// block-plus-halo ahead of its consumer.
+#[allow(clippy::too_many_arguments)]
+fn run_chain(
+    convs: &[ConvSame],
+    chain: &Chain,
+    g: ChainGeom,
+    src: &[f32],
+    widths: Option<&[usize]>,
+    out: &mut [f32],
+    strips: &mut [f32],
+    twins: &mut [Bf16],
+    b_table: &[usize],
+    w_skc: &[f32],
+    w_bf16: &[Bf16],
+    bias: &[f32],
+) {
+    let (n, w, l, r) = (g.n, g.w, g.left, g.right);
+    let wp = w + l + r;
+    let strip_sz = g.ch * wp;
+    let worker_sz = g.strips_per_chain * strip_sz;
+    let m = chain.stages.len();
+    let c0 = chain.stages[0].c;
+    let k_last = chain.stages[m - 1].k;
+    let bf16 = !twins.is_empty();
+    let uks = simd::active();
+    debug_assert_eq!(out.len(), n * k_last * w);
+    debug_assert_eq!(src.len(), n * c0 * w);
+
+    par_batch_chunks_scratch(
+        out,
+        k_last * w,
+        strips,
+        worker_sz,
+        twins,
+        if bf16 { worker_sz } else { 0 },
+        g.threads,
+        |i, out_row, strips, twins| {
+            // Stage 0 input: this image's chain source, padded. The
+            // deeper strips' pad columns are structurally zero (never
+            // written, zero since allocation).
+            pad_width_into(
+                &src[i * c0 * w..(i + 1) * c0 * w],
+                1,
+                c0,
+                w,
+                l,
+                r,
+                &mut strips[..c0 * wp],
+            );
+            if bf16 {
+                to_bf16_into(&strips[..c0 * wp], &mut twins[..c0 * wp]);
+            }
+            let native = widths.map_or(w, |ws| ws[i]);
+            // Demand-driven schedule: `done[j]` = output columns stage
+            // j has produced. The deepest stage pulls; each producer
+            // covers its consumer's next block plus the right halo
+            // (`min(W, pos + nb + r)` — the same reach arithmetic as
+            // `receptive_field_reach`). Left-halo columns were produced
+            // by earlier blocks (left-to-right order) or are structural
+            // pad zeros.
+            let mut done = [0usize; 4];
+            debug_assert!(m <= 4);
+            loop {
+                let mut demand = [0usize; 4];
+                demand[m - 1] = w;
+                for j in (0..m - 1).rev() {
+                    demand[j] = if done[j + 1] >= w {
+                        done[j] // consumer finished: stop producing
+                    } else {
+                        let nb = WIDTH_BLOCK.min(w - done[j + 1]);
+                        (done[j + 1] + nb + r).min(w)
+                    };
+                }
+                // Advance the shallowest lagging stage by one block.
+                let Some(j) = (0..m).find(|&j| done[j] < demand[j]) else {
+                    break;
+                };
+                let pos = done[j];
+                let nb = WIDTH_BLOCK.min(w - pos);
+                let st = &chain.stages[j];
+                let ops = convs[st.layer].conv.post_ops;
+                let bo = &b_table[(pos / WIDTH_BLOCK) * g.s..(pos / WIDTH_BLOCK) * g.s + g.s];
+                // Split the strip stack: stages 0..=j readable, stage
+                // j+1 writable.
+                let (lo, hi) = strips.split_at_mut((j + 1) * strip_sz);
+                let in_f32 = &lo[j * strip_sz..j * strip_sz + st.c * wp];
+                let res_strip: Option<&[f32]> = if ops.residual {
+                    debug_assert!(j >= 1, "residual stage needs an upstream strip");
+                    Some(&lo[(j - 1) * strip_sz..(j - 1) * strip_sz + st.k * wp])
+                } else {
+                    None
+                };
+                // The same (m=K, n=nb, k=C, l_br=S) BRGEMM call as the
+                // per-layer kernels; ldb/ldc only move loads/stores.
+                if j == m - 1 {
+                    if bf16 {
+                        let tin = &twins[j * strip_sz..j * strip_sz + st.c * wp];
+                        brgemm_bf16_with(
+                            uks,
+                            &w_bf16[st.w_off..],
+                            &st.a_offs,
+                            st.c,
+                            tin,
+                            bo,
+                            wp,
+                            &mut out_row[pos..],
+                            w,
+                            st.k,
+                            nb,
+                            st.c,
+                            true,
+                        );
+                    } else {
+                        brgemm_f32_with(
+                            uks,
+                            &w_skc[st.w_off..],
+                            &st.a_offs,
+                            st.c,
+                            in_f32,
+                            bo,
+                            wp,
+                            &mut out_row[pos..],
+                            w,
+                            st.k,
+                            nb,
+                            st.c,
+                            true,
+                        );
+                    }
+                    for ik in 0..st.k {
+                        // Same is_none gate as the per-layer
+                        // `apply_block`: a no-op epilogue must not even
+                        // rewrite the block (1.0·v + 0.0 flips -0.0).
+                        if !ops.is_none() {
+                            let bias_k = bias[st.b_off + ik];
+                            let res =
+                                res_strip.map(|rs| &rs[ik * wp + l + pos..ik * wp + l + pos + nb]);
+                            apply_segment(
+                                &ops,
+                                bias_k,
+                                res,
+                                &mut out_row[ik * w + pos..ik * w + pos + nb],
+                            );
+                        }
+                        // Fusion-boundary tail masking (bucket
+                        // invariance): re-zero the pad tail before
+                        // anything downstream reads it.
+                        if native < pos + nb {
+                            let from = native.max(pos);
+                            out_row[ik * w + from..ik * w + pos + nb].fill(0.0);
+                        }
+                    }
+                } else {
+                    let out_strip = &mut hi[..strip_sz];
+                    if bf16 {
+                        let tin = &twins[j * strip_sz..j * strip_sz + st.c * wp];
+                        brgemm_bf16_with(
+                            uks,
+                            &w_bf16[st.w_off..],
+                            &st.a_offs,
+                            st.c,
+                            tin,
+                            bo,
+                            wp,
+                            &mut out_strip[l + pos..],
+                            wp,
+                            st.k,
+                            nb,
+                            st.c,
+                            true,
+                        );
+                    } else {
+                        brgemm_f32_with(
+                            uks,
+                            &w_skc[st.w_off..],
+                            &st.a_offs,
+                            st.c,
+                            in_f32,
+                            bo,
+                            wp,
+                            &mut out_strip[l + pos..],
+                            wp,
+                            st.k,
+                            nb,
+                            st.c,
+                            true,
+                        );
+                    }
+                    for ik in 0..st.k {
+                        if !ops.is_none() {
+                            let bias_k = bias[st.b_off + ik];
+                            let at = ik * wp + l + pos;
+                            let res = res_strip.map(|rs| &rs[at..at + nb]);
+                            apply_segment(&ops, bias_k, res, &mut out_strip[at..at + nb]);
+                        }
+                        if native < pos + nb {
+                            let from = native.max(pos);
+                            out_strip[ik * wp + l + from..ik * wp + l + pos + nb].fill(0.0);
+                        }
+                    }
+                    if bf16 {
+                        // Narrow the freshly-produced (masked) block
+                        // into the consumer's bf16 operand twin —
+                        // element-wise rounding, so block-wise
+                        // narrowing is bit-equal to the per-layer
+                        // whole-row narrowing.
+                        let twin_out = &mut twins[(j + 1) * strip_sz..(j + 2) * strip_sz];
+                        for ik in 0..st.k {
+                            let at = ik * wp + l + pos;
+                            narrow_row_into(&out_strip[at..at + nb], &mut twin_out[at..at + nb]);
+                        }
+                    }
+                }
+                done[j] = pos + nb;
+            }
+        },
+    );
+}
+
+/// Zero columns `widths[i]..w` of every `(row i, filter)` — the
+/// per-layer tail re-zeroing of `infer_masked`, applied to an arena
+/// slot.
+fn mask_rows(t: &mut [f32], n: usize, k: usize, w: usize, widths: &[usize]) {
+    for i in 0..n {
+        let wv = widths[i];
+        if wv >= w {
+            continue;
+        }
+        for ik in 0..k {
+            let base = (i * k + ik) * w;
+            t[base + wv..base + w].fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn liveness_resnet_topology_needs_three_slots() {
+        // stem → h0; c1 reads h0 → r0; c2 reads {r0, h0} → h1;
+        // heads read h1. The residual read keeps h0 alive across c1.
+        let (ops, n_vals) = layer_program(&NetConfig::tiny());
+        let specs = op_specs_layers(&ops);
+        let (slot_of, n_slots) = assign_slots(n_vals, &specs);
+        assert_eq!(n_slots, 3);
+        // h0 and r0 both die at c2; h1 must not alias either while they
+        // are read.
+        assert_eq!(slot_of[0], 0);
+        assert_eq!(slot_of[1], 1);
+        assert_eq!(slot_of[2], 2);
+    }
+
+    #[test]
+    fn liveness_deeper_resnet_stays_at_three_slots() {
+        let cfg = NetConfig {
+            n_blocks: 5,
+            ..NetConfig::tiny()
+        };
+        let (ops, n_vals) = layer_program(&cfg);
+        let specs = op_specs_layers(&ops);
+        let (slot_of, n_slots) = assign_slots(n_vals, &specs);
+        assert_eq!(n_slots, 3, "live set is depth-independent");
+        // Slots recycle: later blocks reuse the slots earlier values
+        // vacated.
+        assert!(slot_of[4] < 3 && slot_of[8] < 3);
+    }
+
+    #[test]
+    fn liveness_without_residual_needs_two_slots() {
+        // A plain chain a→b→c→out: each value dies as soon as the next
+        // conv has consumed it, so two slots ping-pong.
+        let specs = vec![
+            OpSpec {
+                reads: vec![],
+                write: Some(0),
+            },
+            OpSpec {
+                reads: vec![0],
+                write: Some(1),
+            },
+            OpSpec {
+                reads: vec![1],
+                write: Some(2),
+            },
+            OpSpec {
+                reads: vec![2],
+                write: None,
+            },
+        ];
+        let (slot_of, n_slots) = assign_slots(3, &specs);
+        assert_eq!(n_slots, 2);
+        assert_eq!(slot_of, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn liveness_never_aliases_an_ops_output_with_its_live_inputs() {
+        // The write is allocated before the dying reads free: b = f(a)
+        // with a dying at that op still gets a distinct slot.
+        let specs = vec![
+            OpSpec {
+                reads: vec![],
+                write: Some(0),
+            },
+            OpSpec {
+                reads: vec![0],
+                write: Some(1),
+            },
+            OpSpec {
+                reads: vec![1],
+                write: None,
+            },
+        ];
+        let (slot_of, n_slots) = assign_slots(2, &specs);
+        assert_eq!(n_slots, 2);
+        assert_ne!(slot_of[0], slot_of[1]);
+    }
+
+    #[test]
+    fn fused_program_uses_fewer_slots_and_only_head_layer_plans() {
+        use crate::model::AtacWorksNet;
+        let cfg = NetConfig::tiny();
+        let net = AtacWorksNet::init(cfg, 3);
+        let plan = NetPlan::build(cfg, &net.convs, 2, 128, true);
+        assert!(plan.fused_active());
+        assert_eq!(plan.slot_count(), 1, "single chain output for nb=1");
+        assert_eq!(
+            plan.per_layer_indices(),
+            vec![3, 4],
+            "only the heads stay per-layer under fusion"
+        );
+        let unfused = NetPlan::build(cfg, &net.convs, 2, 128, false);
+        assert!(!unfused.fused_active());
+        assert_eq!(unfused.slot_count(), 3);
+        assert_eq!(unfused.per_layer_indices().len(), 5);
+        let per_layer = NetPlan::per_layer_activation_bytes(&cfg, 2, 128);
+        assert!(plan.activation_bytes() < per_layer);
+        assert!(unfused.activation_bytes() < per_layer);
+    }
+
+    #[test]
+    fn plan_key_tracks_shape_and_knobs() {
+        use crate::model::AtacWorksNet;
+        let cfg = NetConfig::tiny();
+        let mut net = AtacWorksNet::init(cfg, 3);
+        let plan = NetPlan::build(cfg, &net.convs, 2, 128, true);
+        assert!(plan.matches(&net.convs, 2, 128, true));
+        assert!(!plan.matches(&net.convs, 2, 192, true));
+        assert!(!plan.matches(&net.convs, 2, 128, false));
+        net.set_backend(Backend::Im2col, 1);
+        assert!(!plan.matches(&net.convs, 2, 128, true));
+    }
+}

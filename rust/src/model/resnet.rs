@@ -22,6 +22,7 @@ use crate::util::rng::Rng;
 
 use super::layers::{ConvGrads, ConvSame};
 use super::loss::{bce_with_grad, mse_with_grad};
+use super::netplan::NetPlan;
 use super::tensor::Tensor;
 
 /// Network hyperparameters (mirror of python ModelConfig).
@@ -142,24 +143,53 @@ pub struct Losses {
 pub struct AtacWorksNet {
     pub cfg: NetConfig,
     pub convs: Vec<ConvSame>,
+    /// Net-level execution plan (liveness arena + conv→conv fusion,
+    /// DESIGN.md §7c). Built lazily on the first eval-mode pass and
+    /// rebuilt whenever the input shape or a layer knob stops matching.
+    netplan: Option<NetPlan>,
+    /// Routing switch for the eval paths (`forward(x, false)`, `infer`,
+    /// `infer_masked`): `true` (default) executes through the
+    /// [`NetPlan`]; `false` keeps the per-layer pipeline — the
+    /// conformance reference the plan is bit-identical to.
+    netplan_enabled: bool,
+    /// Conv→conv fusion inside the netplan. Off, the plan still runs the
+    /// per-layer kernels out of the shared arena.
+    fuse: bool,
 }
 
 impl AtacWorksNet {
-    /// He-initialised network (same scheme as the L2 model).
-    pub fn init(cfg: NetConfig, seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
+    /// All-zero parameters — the constructor for callers that overwrite
+    /// the weights immediately (e.g. [`Self::unpack_params`] from a
+    /// checkpoint or a parameter server): no He-init RNG fill is paid
+    /// for values that never get read.
+    pub fn zeros(cfg: NetConfig) -> Self {
         let convs = cfg
             .layer_shapes()
             .into_iter()
-            .map(|(k, c, s)| {
-                let std = (2.0 / (c * s) as f64).sqrt() as f32;
-                let mut w = vec![0.0f32; k * c * s];
-                rng.fill_normal_f32(&mut w, std);
-                ConvSame::new(c, k, s, cfg.dilation, w)
-            })
+            .map(|(k, c, s)| ConvSame::new(c, k, s, cfg.dilation, vec![0.0f32; k * c * s]))
             .collect();
-        let mut net = AtacWorksNet { cfg, convs };
+        let mut net = AtacWorksNet {
+            cfg,
+            convs,
+            netplan: None,
+            netplan_enabled: true,
+            fuse: true,
+        };
         net.set_activation(Activation::Relu);
+        net
+    }
+
+    /// He-initialised network (same scheme as the L2 model).
+    pub fn init(cfg: NetConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut net = Self::zeros(cfg);
+        for c in &mut net.convs {
+            let (k, ch, s) = (c.k(), c.conv.c, c.conv.s);
+            let std = (2.0 / (ch * s) as f64).sqrt() as f32;
+            let mut w = vec![0.0f32; k * ch * s];
+            rng.fill_normal_f32(&mut w, std);
+            c.conv.set_weights(w);
+        }
         net
     }
 
@@ -206,12 +236,71 @@ impl AtacWorksNet {
         }
     }
 
-    /// Eagerly build every layer's plan for a batch of `n` unpadded
+    /// Route the eval paths (`forward(x, false)`, [`Self::infer`],
+    /// [`Self::infer_masked`]) through the net-level [`NetPlan`]
+    /// (default) or through the per-layer reference pipeline. Training
+    /// (`forward(x, true)`) always uses the per-layer path — backward
+    /// needs each layer's cached activations.
+    pub fn set_netplan(&mut self, on: bool) {
+        self.netplan_enabled = on;
+        if !on {
+            self.netplan = None;
+        }
+    }
+
+    /// Enable/disable conv→conv fusion inside the net-level plan. With
+    /// fusion off the plan still single-buffers intermediates through
+    /// the liveness arena. Takes effect on the next eval pass (the plan
+    /// key tracks this knob).
+    pub fn set_fuse(&mut self, on: bool) {
+        self.fuse = on;
+    }
+
+    /// Whether eval passes currently execute through the net-level plan.
+    pub fn netplan_enabled(&self) -> bool {
+        self.netplan_enabled
+    }
+
+    /// The currently built net-level plan, if any eval pass (or
+    /// [`Self::warm`]) has run.
+    pub fn netplan(&self) -> Option<&NetPlan> {
+        self.netplan.as_ref()
+    }
+
+    /// Build (or rebuild) the net plan so it matches the convs' knobs
+    /// and the `(n, w)` shape. Rebuilds are detected via the plan key —
+    /// see [`NetPlan::matches`].
+    fn ensure_netplan(&mut self, n: usize, w: usize) {
+        let stale = match &self.netplan {
+            Some(p) => !p.matches(&self.convs, n, w, self.fuse),
+            None => true,
+        };
+        if stale {
+            self.netplan = Some(NetPlan::build(self.cfg, &self.convs, n, w, self.fuse));
+        }
+    }
+
+    /// Eagerly build every plan needed to serve a batch of `n` unpadded
     /// width-`w` tracks — the serving plan cache warms each width bucket
-    /// this way at startup (DESIGN.md §7).
+    /// this way at startup (DESIGN.md §7). With the netplan routing
+    /// active this builds the net-level plan plus the per-layer plans it
+    /// still dispatches (all of them unfused; only the heads when
+    /// fusion folds the body chains into BRGEMM strips).
     pub fn warm(&mut self, n: usize, w: usize) -> Result<(), crate::conv1d::PlanError> {
-        for c in &mut self.convs {
-            c.warm(n, w)?;
+        if self.netplan_enabled {
+            self.ensure_netplan(n, w);
+            let idxs = self
+                .netplan
+                .as_ref()
+                .expect("ensure_netplan just built the plan")
+                .per_layer_indices();
+            for l in idxs {
+                self.convs[l].warm(n, w)?;
+            }
+        } else {
+            for c in &mut self.convs {
+                c.warm(n, w)?;
+            }
         }
         Ok(())
     }
@@ -232,6 +321,39 @@ impl AtacWorksNet {
         (denoised, logits)
     }
 
+    /// Zero-allocation inference core: run the net-level plan into
+    /// caller-owned `(N, 1, W)` output tensors, with optional per-row
+    /// width masking (`widths: None` ≡ every row at full width). This is
+    /// the serving steady-state entry point — the engine's bucket
+    /// entries own `den`/`logits` and the plan's arena, so a warmed call
+    /// touches the heap not at all. Panics if `netplan` routing was
+    /// switched off via [`Self::set_netplan`].
+    pub fn infer_masked_into(
+        &mut self,
+        x: &Tensor,
+        widths: Option<&[usize]>,
+        den: &mut Tensor,
+        logits: &mut Tensor,
+    ) -> Result<(), crate::conv1d::PlanError> {
+        assert!(
+            self.netplan_enabled,
+            "infer_masked_into requires netplan routing (set_netplan(true))"
+        );
+        if let Some(ws) = widths {
+            assert_eq!(ws.len(), x.n, "one width per batch row");
+            assert!(
+                ws.iter().all(|&wv| wv <= x.w),
+                "row widths cannot exceed the padded tensor width"
+            );
+        }
+        self.ensure_netplan(x.n, x.w);
+        let plan = self
+            .netplan
+            .as_mut()
+            .expect("ensure_netplan just built the plan");
+        plan.execute(&self.convs, x, widths, den, logits)
+    }
+
     /// Width-masked forward-only inference for zero-padded rows: row `r`
     /// of `x` carries a real track in columns `0..widths[r]` and zeros
     /// beyond. After every body layer the pad tail of each row is
@@ -250,6 +372,13 @@ impl AtacWorksNet {
             widths.iter().all(|&wv| wv <= x.w),
             "row widths cannot exceed the padded tensor width"
         );
+        if self.netplan_enabled {
+            let mut den = Tensor::zeros(x.n, 1, x.w);
+            let mut logits = Tensor::zeros(x.n, 1, x.w);
+            self.infer_masked_into(x, Some(widths), &mut den, &mut logits)
+                .unwrap_or_else(|e| panic!("net plan rejected the shape: {e}"));
+            return (den, logits);
+        }
         fn mask_tail(t: &mut Tensor, widths: &[usize]) {
             for (row, &wv) in widths.iter().enumerate() {
                 for ch in 0..t.c {
@@ -301,6 +430,13 @@ impl AtacWorksNet {
     /// (`relu(conv(r) + bias + h)`), so no separate add/relu sweeps run.
     pub fn forward(&mut self, x: &Tensor, train: bool) -> (Tensor, Tensor, ForwardCache) {
         assert_eq!(x.c, 1, "input must be single-channel");
+        if !train && self.netplan_enabled {
+            let mut den = Tensor::zeros(x.n, 1, x.w);
+            let mut logits = Tensor::zeros(x.n, 1, x.w);
+            self.infer_masked_into(x, None, &mut den, &mut logits)
+                .unwrap_or_else(|e| panic!("net plan rejected the shape: {e}"));
+            return (den, logits, ForwardCache::default());
+        }
         let nb = self.cfg.n_blocks;
 
         let mut h = self.convs[0].forward_fused(x, None, train); // stem: bias+act
@@ -598,9 +734,13 @@ mod tests {
     fn infer_matches_eval_forward_and_inference_mode_is_bit_identical() {
         let cfg = NetConfig::tiny();
         let mut net = AtacWorksNet::init(cfg, 3);
+        // Per-layer reference pipeline (netplan routing off) — the bits
+        // the fused/arena plan must reproduce.
+        net.set_netplan(false);
         let (x, _, _) = batch(&cfg, 2, 96, 4);
         let (den_want, log_want, _) = net.forward(&x, false);
-        // Forward-only mode with warmed plans computes the same bits.
+        // Forward-only mode with warmed plans computes the same bits
+        // through the net-level plan (fusion + arena on by default).
         let mut serve = AtacWorksNet::init(cfg, 3);
         serve.set_inference(true);
         serve.warm(2, 96).unwrap();
@@ -624,6 +764,8 @@ mod tests {
         let (w_native, w_padded) = (90usize, 160usize);
         let (x, _, _) = batch(&cfg, 1, w_native, 21);
         let mut native = AtacWorksNet::init(cfg, 13);
+        // Per-layer reference: the masked fused plan must match it.
+        native.set_netplan(false);
         let (den_want, log_want, _) = native.forward(&x, false);
         let mut padded = vec![0.0f32; w_padded];
         padded[..w_native].copy_from_slice(&x.data);

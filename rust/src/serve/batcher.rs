@@ -349,6 +349,13 @@ impl Server {
                         "stream window {w} exceeds the largest bucket ({largest})"
                     )));
                 }
+                // Snap to the bucket the session will execute in, so the
+                // server's window metadata matches the actual plan.
+                let w = opts
+                    .engine
+                    .buckets
+                    .bucket_for(w)
+                    .expect("window fits the largest bucket");
                 let halo = net_cfg.receptive_field_reach();
                 if w <= 2 * halo {
                     return Err(ServeError::Config(format!(
@@ -770,12 +777,14 @@ mod tests {
             })
         ));
         drop(server);
-        // A window that cannot hold two halos is a config error.
+        // A window that cannot hold two halos is a config error. (The
+        // bucket snap means the window to test against is the bucket
+        // itself: with a 128 bucket a 64 request would legally snap up.)
         let cfg = NetConfig::tiny();
         let params = AtacWorksNet::init(cfg, 5).pack_params();
         let opts = BatcherOpts {
             engine: EngineOpts {
-                buckets: BucketSet::new(&[128]).expect("widths"),
+                buckets: BucketSet::new(&[64]).expect("widths"),
                 max_batch: 1,
                 cache_capacity: 1,
                 ..EngineOpts::default()
@@ -784,7 +793,7 @@ mod tests {
             queue_depth: 4,
             workers: 1,
             warm: false,
-            stream_window: Some(64), // 64 <= 2 * 32
+            stream_window: Some(64), // snapped window 64 <= 2 * 32
         };
         assert!(matches!(
             Server::start(cfg, &params, opts.clone()),

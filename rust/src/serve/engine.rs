@@ -31,8 +31,6 @@
 //! numerics ones. `tests/integration_serve.rs` locks both across
 //! buckets × precisions × partitions.
 
-use std::collections::BTreeMap;
-
 use crate::conv1d::{Backend, Partition};
 use crate::machine::Precision;
 use crate::model::{AtacWorksNet, MasterWeights, NetConfig, Tensor};
@@ -64,6 +62,11 @@ pub struct EngineOpts {
     pub autotune: bool,
     /// Maximum resident bucket entries (LRU beyond this).
     pub cache_capacity: usize,
+    /// Conv→conv fusion inside each bucket's net-level plan
+    /// ([`crate::model::NetPlan`]). Off, the plan still runs per-layer
+    /// kernels out of the shared liveness arena; either way the output
+    /// bits are identical.
+    pub fuse: bool,
 }
 
 impl Default for EngineOpts {
@@ -77,15 +80,24 @@ impl Default for EngineOpts {
             backend: Backend::Brgemm,
             autotune: false,
             cache_capacity: 8,
+            fuse: true,
         }
     }
 }
 
-/// One cache entry: a forward-only replica pinned to a bucket, plus its
-/// persistent input staging tensor `(max_batch, 1, bucket)`.
+/// One cache entry: a forward-only replica pinned to a bucket (its
+/// net-level plan owns the single activation arena), plus the
+/// persistent per-chunk buffers — input staging `(max_batch, 1,
+/// bucket)`, the row-width vector, and both head outputs. Everything a
+/// chunk touches lives here, so the serving steady state allocates
+/// nothing beyond the returned [`InferOutput`]s
+/// (`tests/serve_alloc.rs`).
 struct BucketEntry {
     net: AtacWorksNet,
     x: Tensor,
+    widths: Vec<usize>,
+    den: Tensor,
+    logits: Tensor,
 }
 
 /// Output of one request: the two head tensors truncated back to the
@@ -105,26 +117,39 @@ pub struct InferenceEngine {
     working: Vec<f32>,
     opts: EngineOpts,
     cache: PlanCache<BucketEntry>,
+    /// Buckets [`Self::warm`] declined to build because they could never
+    /// stay resident under `cache_capacity`.
+    warm_skipped: usize,
+    /// Reusable request-index scratch for [`Self::infer_batch`] grouping
+    /// (no per-call BTreeMap/Vec churn on the steady-state path).
+    group_scratch: Vec<usize>,
 }
 
 /// Build one bucket entry: replica + pinned, warmed, forward-only plans.
+/// The replica starts from [`AtacWorksNet::zeros`] — `unpack_params`
+/// overwrites every value, so the He-init RNG fill `init` would pay is
+/// skipped.
 fn build_entry(
     net_cfg: NetConfig,
     working: &[f32],
     opts: &EngineOpts,
     bucket: usize,
 ) -> Result<BucketEntry, ServeError> {
-    let mut net = AtacWorksNet::init(net_cfg, 0);
+    let mut net = AtacWorksNet::zeros(net_cfg);
     net.unpack_params(working);
     net.set_backend(opts.backend, opts.threads);
     net.set_partition(opts.partition);
     net.set_precision(opts.precision);
     net.set_autotune(opts.autotune);
     net.set_inference(true);
+    net.set_fuse(opts.fuse);
     net.warm(opts.max_batch, bucket).map_err(ServeError::Plan)?;
     Ok(BucketEntry {
         net,
         x: Tensor::zeros(opts.max_batch, 1, bucket),
+        widths: vec![0; opts.max_batch],
+        den: Tensor::zeros(opts.max_batch, 1, bucket),
+        logits: Tensor::zeros(opts.max_batch, 1, bucket),
     })
 }
 
@@ -159,6 +184,8 @@ impl InferenceEngine {
             working: MasterWeights::working_copy(params, opts.precision),
             cache: PlanCache::new(opts.cache_capacity),
             opts,
+            warm_skipped: 0,
+            group_scratch: Vec::new(),
         })
     }
 
@@ -173,18 +200,32 @@ impl InferenceEngine {
         self.net_cfg
     }
 
-    /// Warm the plan cache: build an entry for every bucket (ascending).
-    /// When `cache_capacity < buckets.len()` only the largest-capacity
-    /// suffix stays resident — the overflow shows up in
-    /// [`Self::cache_evictions`] rather than hiding.
+    /// Warm the plan cache: build an entry for every bucket that can
+    /// stay resident. When `cache_capacity < buckets.len()` only the
+    /// **largest `cache_capacity` buckets** (the MRU-surviving suffix)
+    /// are built, ascending — constructing the smaller ones would pay
+    /// full plan builds for entries evicted before any request arrives,
+    /// and would pollute [`Self::cache_evictions`] with phantom churn.
+    /// The number of buckets skipped is reported by
+    /// [`Self::warm_skipped`]; they build lazily on first use like any
+    /// cold bucket.
     pub fn warm(&mut self) -> Result<(), ServeError> {
-        let widths = self.opts.buckets.widths().to_vec();
-        for b in widths {
+        let n = self.opts.buckets.widths().len();
+        let skip = n.saturating_sub(self.opts.cache_capacity);
+        self.warm_skipped = skip;
+        for bi in skip..n {
+            let b = self.opts.buckets.widths()[bi];
             let (cfg, working, opts) = (self.net_cfg, &self.working, &self.opts);
             self.cache
                 .try_get_or_insert_with(b, || build_entry(cfg, working, opts, b))?;
         }
         Ok(())
+    }
+
+    /// Buckets the last [`Self::warm`] call skipped because they could
+    /// not stay resident under `cache_capacity`.
+    pub fn warm_skipped(&self) -> usize {
+        self.warm_skipped
     }
 
     /// Resident bucket entries.
@@ -234,17 +275,33 @@ impl InferenceEngine {
     pub fn infer_batch(&mut self, reqs: &[&[f32]]) -> Result<Vec<InferOutput>, ServeError> {
         // Validate everything up front: one bad request fails the call
         // before any compute runs.
-        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for (i, r) in reqs.iter().enumerate() {
-            let bucket = self.bucket_for(r.len())?;
-            groups.entry(bucket).or_default().push(i);
+        for r in reqs {
+            self.bucket_for(r.len())?;
         }
         let mut out: Vec<Option<InferOutput>> = reqs.iter().map(|_| None).collect();
-        for (bucket, idxs) in groups {
-            for chunk in idxs.chunks(self.opts.max_batch) {
-                self.run_chunk(bucket, chunk, reqs, &mut out)?;
+        // Group by bucket (ascending) without building per-call maps:
+        // one pass over the requests per configured bucket, indices
+        // collected into the engine's reusable scratch.
+        let mut scratch = std::mem::take(&mut self.group_scratch);
+        let mut result = Ok(());
+        let n_buckets = self.opts.buckets.widths().len();
+        'buckets: for bi in 0..n_buckets {
+            let bucket = self.opts.buckets.widths()[bi];
+            scratch.clear();
+            for (i, r) in reqs.iter().enumerate() {
+                if self.opts.buckets.bucket_for(r.len()) == Some(bucket) {
+                    scratch.push(i);
+                }
+            }
+            for chunk in scratch.chunks(self.opts.max_batch) {
+                if let Err(e) = self.run_chunk(bucket, chunk, reqs, &mut out) {
+                    result = Err(e);
+                    break 'buckets;
+                }
             }
         }
+        self.group_scratch = scratch;
+        result?;
         Ok(out
             .into_iter()
             .map(|o| o.expect("every request was grouped"))
@@ -258,6 +315,37 @@ impl InferenceEngine {
             .infer_batch(&[req])?
             .pop()
             .expect("one request, one output"))
+    }
+
+    /// Single request through a **caller-chosen** bucket instead of
+    /// `bucket_for(req.len())`. Bucket invariance makes the bits
+    /// identical either way; what changes is *which plan executes* —
+    /// [`crate::serve::StreamingSession`] pins every window of a stream
+    /// (including the short tail) to the session bucket so a whole
+    /// stream touches exactly one cache entry. `bucket` must be one of
+    /// the configured bucket widths and at least as wide as the request.
+    pub fn infer_one_pinned(
+        &mut self,
+        req: &[f32],
+        bucket: usize,
+    ) -> Result<InferOutput, ServeError> {
+        if req.is_empty() {
+            return Err(ServeError::EmptyRequest);
+        }
+        if !self.opts.buckets.widths().contains(&bucket) {
+            return Err(ServeError::Config(format!(
+                "pinned bucket {bucket} is not a configured bucket width"
+            )));
+        }
+        if req.len() > bucket {
+            return Err(ServeError::Config(format!(
+                "request of width {} cannot be pinned to bucket {bucket}",
+                req.len()
+            )));
+        }
+        let mut out = [None];
+        self.run_chunk(bucket, &[0], &[req], &mut out)?;
+        Ok(out[0].take().expect("one request, one output"))
     }
 
     fn run_chunk(
@@ -275,16 +363,25 @@ impl InferenceEngine {
         // Zero-pad the staging tensor: row r carries request chunk[r],
         // rows beyond the chunk stay zero (their outputs are discarded).
         entry.x.data.fill(0.0);
-        let mut widths = vec![0usize; self.opts.max_batch];
+        entry.widths.fill(0);
         for (row, &i) in chunk.iter().enumerate() {
             entry.x.data[row * bucket..row * bucket + reqs[i].len()].copy_from_slice(reqs[i]);
-            widths[row] = reqs[i].len();
+            entry.widths[row] = reqs[i].len();
         }
-        // Width-masked inference: each row's pad tail is re-zeroed
-        // between layers, so its output is bit-identical to native-width
-        // execution — the bucket is an execution shape, not model input
-        // (see AtacWorksNet::infer_masked).
-        let (den, logits) = entry.net.infer_masked(&entry.x, &widths);
+        // Width-masked inference: each row's pad tail is re-zeroed at
+        // every layer (fusion-boundary masking inside the net plan), so
+        // its output is bit-identical to native-width execution — the
+        // bucket is an execution shape, not model input. All buffers are
+        // entry-owned: the call touches the heap not at all.
+        let BucketEntry {
+            net,
+            x,
+            widths,
+            den,
+            logits,
+        } = entry;
+        net.infer_masked_into(x, Some(widths.as_slice()), den, logits)
+            .map_err(ServeError::Plan)?;
         for (row, &i) in chunk.iter().enumerate() {
             let w = reqs[i].len();
             out[i] = Some(InferOutput {
@@ -367,6 +464,48 @@ mod tests {
         let (hits, misses) = e.cache_stats();
         assert_eq!(misses, misses_after_warm, "no build after warming");
         assert!(hits >= 1);
+    }
+
+    #[test]
+    fn warm_builds_only_the_resident_suffix() {
+        let mut e = tiny_engine(EngineOpts {
+            buckets: BucketSet::new(&[64, 128, 256]).expect("widths"),
+            cache_capacity: 1,
+            max_batch: 1,
+            ..EngineOpts::default()
+        });
+        e.warm().expect("warm");
+        // Only the largest bucket can stay resident; building 64 and 128
+        // would be wasted work immediately evicted.
+        assert_eq!(e.cache_len(), 1);
+        assert_eq!(e.warm_skipped(), 2);
+        assert!(e.cache_evictions().is_empty(), "warming must not evict");
+        // Serving the resident bucket after warm is a pure hit.
+        let r = track(200, 50);
+        let (_, misses_after_warm) = e.cache_stats();
+        e.infer_one(&r).expect("infer");
+        assert_eq!(e.cache_stats().1, misses_after_warm);
+        // A skipped bucket still builds lazily on first use.
+        e.infer_one(&track(60, 51)).expect("cold 64 bucket");
+        assert_eq!(e.cache_stats().1, misses_after_warm + 1);
+    }
+
+    #[test]
+    fn pinned_bucket_execution_is_bit_identical_and_validated() {
+        let mut e = tiny_engine(tiny_opts());
+        let r = track(100, 60);
+        let natural = e.infer_one(&r).expect("natural 128 bucket");
+        let pinned = e.infer_one_pinned(&r, 256).expect("pinned 256 bucket");
+        assert_eq!(natural, pinned, "bucket invariance under pinning");
+        assert!(
+            e.infer_one_pinned(&r, 100).is_err(),
+            "100 is not a configured bucket"
+        );
+        assert!(
+            e.infer_one_pinned(&track(200, 61), 128).is_err(),
+            "request wider than the pinned bucket"
+        );
+        assert!(e.infer_one_pinned(&[], 128).is_err());
     }
 
     #[test]

@@ -58,10 +58,16 @@ pub struct StreamingSession<'e> {
 
 impl<'e> StreamingSession<'e> {
     /// Borrow `engine` for streaming with the given window width. The
-    /// window is rounded up to the 64-wide block grid and must fit the
-    /// engine's largest bucket; it must also exceed **twice** the
-    /// receptive-field reach, otherwise no window column is far enough
-    /// from both artificial edges and the stitch cannot advance.
+    /// window is rounded up to the 64-wide block grid, must fit the
+    /// engine's largest bucket, and is then **snapped to the bucket
+    /// that will actually serve it** (`bucket_for(window)`): a window
+    /// strictly between two buckets would otherwise execute zero-padded
+    /// inside the larger bucket on every step — with buckets
+    /// `[1024, 4096]` and a requested window of 2048, each window would
+    /// silently pay for 4096 columns of compute. After the snap the
+    /// window must still exceed **twice** the receptive-field reach,
+    /// otherwise no window column is far enough from both artificial
+    /// edges and the stitch cannot advance.
     pub fn new(
         engine: &'e mut InferenceEngine,
         window: usize,
@@ -78,6 +84,11 @@ impl<'e> StreamingSession<'e> {
                 "stream window {window} exceeds the largest bucket ({largest})"
             )));
         }
+        let window = engine
+            .opts()
+            .buckets
+            .bucket_for(window)
+            .expect("window fits the largest bucket");
         let halo = engine.net_config().receptive_field_reach();
         if window <= 2 * halo {
             return Err(ServeError::Config(format!(
@@ -92,7 +103,8 @@ impl<'e> StreamingSession<'e> {
         })
     }
 
-    /// The block-aligned window width windows execute at.
+    /// The window width windows execute at — always one of the engine's
+    /// configured bucket widths (`bucket_for(window()) == window()`).
     pub fn window(&self) -> usize {
         self.window
     }
@@ -128,7 +140,16 @@ impl<'e> StreamingSession<'e> {
         let mut windows = 0usize;
         loop {
             let win_end = (win_start + self.window).min(len);
-            let out = self.engine.infer_one(&signal[win_start..win_end])?;
+            // Every window — including the short final one — executes
+            // pinned to the session bucket. Routing the tail through
+            // `bucket_for(win_w)` could land it in a *smaller* bucket:
+            // a mid-stream plan build, and at `cache_capacity = 1` an
+            // eviction of the streaming bucket itself on every signal.
+            // Bit-identity is bucket-invariant, so pinning only changes
+            // which plan runs, never the emitted bits.
+            let out = self
+                .engine
+                .infer_one_pinned(&signal[win_start..win_end], self.window)?;
             windows += 1;
             // Columns valid in this window: everything ≥ halo from an
             // *artificial* edge. The left margin is already enforced by
@@ -205,10 +226,16 @@ mod tests {
     #[test]
     fn window_geometry_is_validated() {
         let mut e = engine(&[128, 256]);
-        // Rounded onto the block grid, halo derived from the config.
+        // Rounded onto the block grid, snapped to its serving bucket,
+        // halo derived from the config.
         let s = StreamingSession::new(&mut e, 100).expect("window 100 -> 128");
         assert_eq!((s.window(), s.halo(), s.core()), (128, 32, 64));
-        // Zero, over-bucket and too-small-for-the-halo windows fail.
+        // A sub-bucket window snaps *up* to the smallest bucket that
+        // serves it — 64 would pass the halo check on its own, but its
+        // windows would execute inside the 128 bucket anyway.
+        let s = StreamingSession::new(&mut e, 64).expect("window 64 -> 128");
+        assert_eq!(s.window(), 128);
+        // Zero and over-bucket windows fail.
         assert!(matches!(
             StreamingSession::new(&mut e, 0),
             Err(ServeError::Config(_))
@@ -217,10 +244,63 @@ mod tests {
             StreamingSession::new(&mut e, 512),
             Err(ServeError::Config(_))
         ));
+        // Too small for the halo: with a 64-wide bucket the snapped
+        // window is 64 <= 2*32 — no interior columns to emit.
+        let mut tiny = engine(&[64]);
         assert!(matches!(
-            StreamingSession::new(&mut e, 64), // 64 <= 2*32
+            StreamingSession::new(&mut tiny, 64),
             Err(ServeError::Config(_))
         ));
+    }
+
+    #[test]
+    fn session_window_snaps_to_its_serving_bucket() {
+        let mut e = engine(&[128, 512]);
+        // 200 rounds to 256 on the block grid; without the snap every
+        // window would execute zero-padded inside the 512 bucket while
+        // the session believed its window was 256 (~2x wasted compute
+        // per window). The invariant: the window IS a bucket width.
+        let s = StreamingSession::new(&mut e, 200).expect("session");
+        assert_eq!(s.window(), 512);
+        let w = s.window();
+        drop(s);
+        assert_eq!(e.bucket_for(w).expect("bucket"), w);
+    }
+
+    #[test]
+    fn streaming_never_leaves_the_session_bucket() {
+        // Tight cache: capacity 1 with two buckets. Every window —
+        // including the short tail — must execute in the session
+        // bucket. Before the tail was pinned, the final 124-wide window
+        // routed to the 128 bucket: a mid-stream plan build that
+        // evicted the streaming bucket itself on every signal.
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 9).pack_params();
+        let opts = EngineOpts {
+            buckets: BucketSet::new(&[128, 256]).expect("widths"),
+            max_batch: 1,
+            cache_capacity: 1,
+            ..EngineOpts::default()
+        };
+        let mut e = InferenceEngine::new(cfg, &params, opts).expect("engine");
+        e.warm().expect("warm");
+        let (_, misses_after_warm) = e.cache_stats();
+        let signal = track(700, 7); // final window: 700 - 576 = 124 < 256
+        let mut s = StreamingSession::new(&mut e, 256).expect("session");
+        let got = s.infer(&signal).expect("stream");
+        drop(s);
+        assert!(e.cache_evictions().is_empty(), "no build/evict thrash");
+        assert_eq!(
+            e.cache_stats().1,
+            misses_after_warm,
+            "no post-warm plan builds"
+        );
+        assert_eq!(e.cache_len(), 1);
+        // Pinning changes which plan runs, never the bits: a
+        // single-bucket engine streaming the same signal agrees exactly.
+        let mut ref_e = engine(&[256]);
+        let mut ref_s = StreamingSession::new(&mut ref_e, 256).expect("ref session");
+        assert_eq!(ref_s.infer(&signal).expect("ref stream"), got);
     }
 
     #[test]

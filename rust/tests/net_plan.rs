@@ -1,0 +1,171 @@
+//! Net-level plan conformance (DESIGN.md §7c): fused/arena execution is
+//! **bit-identical** (`f32::to_bits`) to the per-layer reference
+//! pipeline across {f32, bf16} × {batch, grid} × {1, 4 threads} ×
+//! {masked, unmasked}, both directly on [`AtacWorksNet`] and through the
+//! serving engine's `fuse` knob — and the arena holds strictly less
+//! activation memory than the per-layer pipeline for both the tiny and
+//! paper configs. Runs under `CONV1D_FORCE_ISA` in the isa-conformance
+//! CI job, so the fused strips are exercised on every SIMD tier.
+
+use dilconv1d::conv1d::{Backend, Partition};
+use dilconv1d::machine::Precision;
+use dilconv1d::model::{AtacWorksNet, NetConfig, NetPlan, Tensor};
+use dilconv1d::serve::{BucketSet, EngineOpts, InferenceEngine, StreamingSession};
+use dilconv1d::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn track(w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..w).map(|_| rng.poisson(0.7) as f32).collect()
+}
+
+fn batch(n: usize, w: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data = (0..n * w).map(|_| rng.poisson(0.3) as f32).collect();
+    Tensor::from_vec(data, n, 1, w)
+}
+
+fn configured(
+    cfg: NetConfig,
+    precision: Precision,
+    partition: Partition,
+    threads: usize,
+) -> AtacWorksNet {
+    let mut net = AtacWorksNet::init(cfg, 7);
+    net.set_backend(Backend::Brgemm, threads);
+    net.set_precision(precision);
+    net.set_partition(partition);
+    net
+}
+
+#[test]
+fn netplan_matches_per_layer_reference_across_the_matrix() {
+    let cfg = NetConfig::tiny();
+    let (n, w) = (3usize, 160usize);
+    let x = batch(n, w, 3);
+    let widths = [150usize, 96, 133];
+    for precision in [Precision::F32, Precision::Bf16] {
+        for partition in [Partition::Batch, Partition::Grid] {
+            for threads in [1usize, 4] {
+                let tag = format!("{precision:?}/{partition:?}/t{threads}");
+                let mut reference = configured(cfg, precision, partition, threads);
+                reference.set_netplan(false);
+                let (den_want, log_want, _) = reference.forward(&x, false);
+                let (mden_want, mlog_want) = reference.infer_masked(&x, &widths);
+                for fuse in [true, false] {
+                    let mut planned = configured(cfg, precision, partition, threads);
+                    planned.set_fuse(fuse);
+                    let (den, log, _) = planned.forward(&x, false);
+                    assert_eq!(
+                        bits(&den.data),
+                        bits(&den_want.data),
+                        "{tag} fuse={fuse}: denoised"
+                    );
+                    assert_eq!(
+                        bits(&log.data),
+                        bits(&log_want.data),
+                        "{tag} fuse={fuse}: logits"
+                    );
+                    let (mden, mlog) = planned.infer_masked(&x, &widths);
+                    assert_eq!(
+                        bits(&mden.data),
+                        bits(&mden_want.data),
+                        "{tag} fuse={fuse}: masked denoised"
+                    );
+                    assert_eq!(
+                        bits(&mlog.data),
+                        bits(&mlog_want.data),
+                        "{tag} fuse={fuse}: masked logits"
+                    );
+                    if fuse {
+                        assert!(
+                            planned.netplan().expect("plan built").fused_active(),
+                            "{tag}: fusion should engage on the BRGEMM backend"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn engine(params: &[f32], precision: Precision, fuse: bool) -> InferenceEngine {
+    InferenceEngine::new(
+        NetConfig::tiny(),
+        params,
+        EngineOpts {
+            buckets: BucketSet::new(&[128, 256]).expect("widths"),
+            max_batch: 2,
+            cache_capacity: 2,
+            precision,
+            fuse,
+            ..EngineOpts::default()
+        },
+    )
+    .expect("engine")
+}
+
+#[test]
+fn engine_bits_are_identical_with_fusion_on_and_off() {
+    let params = AtacWorksNet::init(NetConfig::tiny(), 5).pack_params();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let mut fused = engine(&params, precision, true);
+        let mut unfused = engine(&params, precision, false);
+        for (i, w) in [100usize, 128, 200, 61].into_iter().enumerate() {
+            let r = track(w, 40 + i as u64);
+            let a = fused.infer_one(&r).expect("fused");
+            let b = unfused.infer_one(&r).expect("unfused");
+            assert_eq!(a, b, "{precision:?} width {w}: fuse knob changed bits");
+        }
+    }
+}
+
+#[test]
+fn streamed_bits_are_identical_with_fusion_on_and_off() {
+    let params = AtacWorksNet::init(NetConfig::tiny(), 5).pack_params();
+    let signal = track(700, 9);
+    let mut outs = Vec::new();
+    for fuse in [true, false] {
+        let mut e = engine(&params, Precision::F32, fuse);
+        let mut s = StreamingSession::new(&mut e, 256).expect("session");
+        outs.push(s.infer(&signal).expect("stream"));
+    }
+    assert_eq!(outs[0], outs[1], "stream-level fuse knob changed bits");
+}
+
+#[test]
+fn arena_activation_bytes_stay_below_the_per_layer_sum() {
+    // Tiny config, serving shape: warm builds the plan.
+    let cfg = NetConfig::tiny();
+    let mut net = AtacWorksNet::init(cfg, 1);
+    net.set_inference(true);
+    net.warm(4, 256).expect("warm");
+    let plan = net.netplan().expect("warm built the net plan");
+    assert!(plan.fused_active());
+    let (arena, per_layer) = (
+        plan.activation_bytes(),
+        NetPlan::per_layer_activation_bytes(&cfg, 4, 256),
+    );
+    assert!(
+        arena < per_layer,
+        "tiny: arena {arena} B must stay below the per-layer sum {per_layer} B"
+    );
+    // Paper config (25 layers): the gap is the whole point — the live
+    // set never exceeds 3 values while the per-layer pipeline holds 25.
+    let paper = NetConfig::default();
+    let pnet = AtacWorksNet::zeros(paper);
+    for fuse in [true, false] {
+        let plan = NetPlan::build(paper, &pnet.convs, 1, 4992, fuse);
+        let (arena, per_layer) = (
+            plan.activation_bytes(),
+            NetPlan::per_layer_activation_bytes(&paper, 1, 4992),
+        );
+        assert!(
+            arena < per_layer,
+            "paper fuse={fuse}: arena {arena} B vs per-layer {per_layer} B"
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Zero-allocation guarantee of the serving steady state (ISSUE 7): a
+//! **warmed** `infer_batch` call performs no heap allocations beyond the
+//! returned [`InferOutput`]s. Every buffer a chunk touches is owned by
+//! the bucket entry — input staging, the row-width vector, both head
+//! tensors, and the net plan's activation arena — and request grouping
+//! reuses an engine-held scratch instead of per-call maps.
+//!
+//! Verified with a counting `#[global_allocator]` (the
+//! `plan_alloc.rs` / `wire_alloc.rs` pattern). One `#[test]` per file so
+//! no concurrent test allocates inside a measurement window; the MINIMUM
+//! over retries absorbs stray runtime allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dilconv1d::model::{AtacWorksNet, NetConfig};
+use dilconv1d::serve::{BucketSet, EngineOpts, InferenceEngine};
+use dilconv1d::util::rng::Rng;
+
+struct CountingAllocator;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Allocation count of `f`, minimum over retries (see `plan_alloc.rs`).
+fn allocs_during(mut f: impl FnMut()) -> usize {
+    let mut min = usize::MAX;
+    for _ in 0..3 {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        f();
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        min = min.min(delta);
+        if min == 0 {
+            break;
+        }
+    }
+    min
+}
+
+#[test]
+fn warmed_infer_batch_allocates_only_the_returned_outputs() {
+    let cfg = NetConfig::tiny();
+    let params = AtacWorksNet::init(cfg, 5).pack_params();
+    let mut engine = InferenceEngine::new(
+        cfg,
+        &params,
+        EngineOpts {
+            buckets: BucketSet::new(&[128, 256]).expect("widths"),
+            max_batch: 2,
+            threads: 1, // single worker: the strictly bounded configuration
+            cache_capacity: 2,
+            ..EngineOpts::default()
+        },
+    )
+    .expect("engine");
+    engine.warm().expect("warm");
+
+    let mut rng = Rng::new(9);
+    let reqs: Vec<Vec<f32>> = [100usize, 128, 200, 60]
+        .iter()
+        .map(|&w| (0..w).map(|_| rng.poisson(0.7) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = reqs.iter().map(|r| r.as_slice()).collect();
+
+    // Warm-up call: grows the engine's grouping scratch to this batch
+    // size and proves the warmed buckets serve without plan builds.
+    let first = engine.infer_batch(&refs).expect("warm-up call");
+    assert_eq!(first.len(), refs.len());
+    drop(first);
+
+    // Allowed allocations: the result vector, its Option staging twin,
+    // and the two per-request output vectors — nothing else. The model
+    // execution itself (arena, staging, widths, strips) is entirely
+    // entry-owned and must contribute zero.
+    let budget = 2 + 2 * refs.len();
+    let allocs = allocs_during(|| {
+        let out = engine.infer_batch(&refs).expect("warmed infer_batch");
+        std::hint::black_box(&out);
+    });
+    assert!(
+        allocs <= budget,
+        "warmed infer_batch performed {allocs} heap allocations; only the \
+         returned outputs (<= {budget}) are allowed"
+    );
+    // No plan was built or rebuilt while measuring.
+    let (_, misses) = engine.cache_stats();
+    assert_eq!(misses, 2, "both buckets built exactly once, at warm time");
+}
