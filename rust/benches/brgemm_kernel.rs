@@ -6,10 +6,16 @@
 
 use dilconv1d::bench_harness::{self, time_auto};
 use dilconv1d::conv1d::bf16::to_bf16;
-use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32, brgemm_f32_with};
+use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32, brgemm_f32_with, brgemm_i8_with};
 use dilconv1d::conv1d::gemm::gemm_f32;
 use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
+
+/// Quantize a bench operand onto the full i8 range (inputs are in
+/// `[-0.5, 0.5)`, so ×254 spans `[-127, 127]`).
+fn to_i8(v: &[f32]) -> Vec<i8> {
+    v.iter().map(|x| (x * 254.0).round() as i8).collect()
+}
 
 fn main() {
     let smoke = bench_harness::smoke();
@@ -65,18 +71,21 @@ fn main() {
         );
     }
     // Per-ISA rows: the explicit SIMD row kernels at the AtacWorks and
-    // Fig. 5 block shapes, f32 and bf16. The dispatched ISA (env
-    // CONV1D_FORCE_ISA honoured) is marked with '*'.
+    // Fig. 5 block shapes, across the precision ladder (f32 / bf16 /
+    // i8·i32-accumulate). The dispatched ISA (env CONV1D_FORCE_ISA
+    // honoured) is marked with '*'.
     println!("\n# per-ISA BRGEMM micro-kernels (n=64 width block)");
     println!(
-        "{:>8} {:>4} {:>4} {:>5} | {:>10} | {:>8} | {:>10}",
-        "isa", "m", "k", "l_br", "f32 GF/s", "vs scal", "bf16 GF/s"
+        "{:>8} {:>4} {:>4} {:>5} | {:>10} | {:>8} | {:>10} | {:>10}",
+        "isa", "m", "k", "l_br", "f32 GF/s", "vs scal", "bf16 GF/s", "i8 GOP/s"
     );
+    let mut rows = String::new();
     for &(m, k, lbr) in &[(15usize, 15usize, 51usize), (64, 64, 5)] {
         let n = 64usize;
         let a = rnd(lbr * m * k, 5);
         let b = rnd(lbr * k * n, 6);
         let (a16, b16) = (to_bf16(&a), to_bf16(&b));
+        let (a8, b8) = (to_i8(&a), to_i8(&b));
         let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
         let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
         let fl = 2.0 * (m * n * k * lbr) as f64;
@@ -106,15 +115,42 @@ fn main() {
                 );
                 std::hint::black_box(&cb);
             });
+            let mut ci = vec![0i32; m * n];
+            let ti = time_auto(budget, min_reps, || {
+                brgemm_i8_with(set, &a8, &a_offs, k, &b8, &b_offs, n, &mut ci, n, m, n, k, true);
+                std::hint::black_box(&ci);
+            });
+            let (bf_gf, i8_gf) = (fl / tb.median_secs / 1e9, fl / ti.median_secs / 1e9);
             println!(
-                "{:>7}{} {m:>4} {k:>4} {lbr:>5} | {gf:>10.2} | {:>7.2}x | {:>10.2}",
+                "{:>7}{} {m:>4} {k:>4} {lbr:>5} | {gf:>10.2} | {:>7.2}x | {bf_gf:>10.2} | {i8_gf:>10.2}",
                 isa.name(),
                 if active().isa() == isa { '*' } else { ' ' },
                 gf / scalar_gf.max(1e-12),
-                fl / tb.median_secs / 1e9,
             );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"isa\": \"{}\", \"m\": {m}, \"k\": {k}, \"l_br\": {lbr}, \
+                 \"f32_gflops\": {gf:.2}, \"bf16_gflops\": {bf_gf:.2}, \"i8_gops\": {i8_gf:.2}}}",
+                isa.name()
+            ));
         }
     }
 
+    // Bench trajectory rows (BENCH_*.json at the repo root): one row per
+    // (ISA, shape) with all three precision tiers side by side.
+    let json = format!(
+        "{{\n  \"bench\": \"brgemm_kernel\",\n  \"smoke\": {smoke},\n  \"rows\": [\n{rows}\n  ]\n}}\n"
+    );
+    let out_path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_brgemm.json"
+    } else {
+        "BENCH_brgemm.json"
+    };
+    match std::fs::write(out_path, &json) {
+        Ok(()) => println!("bench rows written to {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
+    }
     println!("\nbrgemm_kernel bench done");
 }

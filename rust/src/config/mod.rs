@@ -19,20 +19,23 @@ fn parse_precision(s: &str) -> Result<Precision> {
     match s.to_ascii_lowercase().as_str() {
         "f32" | "fp32" => Ok(Precision::F32),
         "bf16" | "bfloat16" => Ok(Precision::Bf16),
-        other => Err(anyhow!("unknown precision '{other}' (f32|bf16)")),
+        "i8" | "int8" => Ok(Precision::I8),
+        other => Err(anyhow!("unknown precision '{other}' (f32|bf16|i8)")),
     }
 }
 
 /// Shared `backend` vocabulary: resolve a registry kernel name (any
 /// [`crate::conv1d::lookup_kernel`] alias) to the `(Backend, Precision)`
-/// pair it implies — `"bf16"` means the BRGEMM backend at bf16, every
-/// other kernel pins f32. One resolver, so `train` and `serve` can
-/// never drift on what a backend name selects.
+/// pair it implies — `"bf16"` means the BRGEMM backend at bf16, `"i8"`
+/// the BRGEMM backend at the int8 quantized tier, every other kernel
+/// pins f32. One resolver, so `train` and `serve` can never drift on
+/// what a backend name selects.
 fn resolve_backend_name(name: &str) -> Result<(Backend, Precision), String> {
     let kernel = crate::conv1d::lookup_kernel(name)
         .ok_or_else(|| format!("unknown backend '{name}'"))?;
     Ok(match kernel.name() {
         "bf16" => (Backend::Brgemm, Precision::Bf16),
+        "i8" => (Backend::Brgemm, Precision::I8),
         canonical => (canonical.parse::<Backend>()?, Precision::F32),
     })
 }
@@ -645,7 +648,26 @@ tune_cache = "tune.json"
         c.apply_backend_name("onednn").unwrap();
         assert_eq!(c.backend, Backend::Im2col);
         assert_eq!(c.precision, Precision::F32);
+        // The i8 kernel name pins the quantized tier, alias included.
+        c.apply_backend_name("int8").unwrap();
+        assert_eq!(c.backend, Backend::Brgemm);
+        assert_eq!(c.precision, Precision::I8);
         assert!(c.apply_backend_name("cuda").is_err());
+    }
+
+    #[test]
+    fn precision_key_parses_i8() {
+        let dir = std::env::temp_dir().join("dilconv_cfg_i8");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(&p, "[serve]\nprecision = \"i8\"\n").unwrap();
+        let c = ServeConfig::from_file(&p).unwrap();
+        assert_eq!(c.precision, Precision::I8);
+        assert_eq!(c.backend, Backend::Brgemm);
+        // And the error message names the full vocabulary.
+        std::fs::write(&p, "[serve]\nprecision = \"fp8\"\n").unwrap();
+        let err = ServeConfig::from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("f32|bf16|i8"), "got: {err}");
     }
 
     #[test]

@@ -231,6 +231,106 @@ pub fn brgemm_bf16_with(
     }
 }
 
+/// int8 BRGEMM with i32 accumulation (VNNI semantics), i32 output,
+/// through the process-active SIMD micro-kernel set. Integer arithmetic
+/// is exact, so the result is independent of ISA, blocking and
+/// accumulation order — the quantized tier's bit-identity contract costs
+/// nothing here.
+#[allow(clippy::too_many_arguments)]
+pub fn brgemm_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    c: &mut [i32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    beta_zero: bool,
+) {
+    brgemm_i8_with(simd::active(), a, a_offs, lda, b, b_offs, ldb, c, ldc, m, n, k, beta_zero);
+}
+
+/// [`brgemm_i8`] with an explicit micro-kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn brgemm_i8_with(
+    uks: &MicroKernelSet,
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    c: &mut [i32],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    beta_zero: bool,
+) {
+    assert_eq!(
+        a_offs.len(),
+        b_offs.len(),
+        "brgemm_i8: batch length mismatch ({} A offsets vs {} B offsets, m={m} n={n} k={k})",
+        a_offs.len(),
+        b_offs.len()
+    );
+    assert!(
+        n <= MAX_N,
+        "brgemm_i8: n={n} exceeds MAX_N={MAX_N} (m={m}, k={k}, l_br={}) — \
+         width blocks must fit the stack accumulator",
+        a_offs.len()
+    );
+    if n == 64 {
+        let mut im = 0;
+        while im + 4 <= m {
+            (uks.row4_i8)(a, a_offs, lda, b, b_offs, ldb, im, k, c, ldc, beta_zero);
+            im += 4;
+        }
+        while im < m {
+            (uks.row_i8)(
+                a,
+                a_offs,
+                lda,
+                b,
+                b_offs,
+                ldb,
+                im,
+                k,
+                &mut c[im * ldc..im * ldc + 64],
+                beta_zero,
+            );
+            im += 1;
+        }
+        return;
+    }
+    // Remainder blocks (n < 64): generic scalar loop on every ISA.
+    for im in 0..m {
+        let mut acc = [0i32; MAX_N];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + im * lda..ao + im * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let av = av as i32;
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + n];
+                for j in 0..n {
+                    acc[j] += av * brow[j] as i32;
+                }
+            }
+        }
+        let crow = &mut c[im * ldc..im * ldc + n];
+        if beta_zero {
+            crow[..n].copy_from_slice(&acc[..n]);
+        } else {
+            for j in 0..n {
+                crow[j] += acc[j];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,6 +460,36 @@ mod tests {
         );
         for (x, y) in cb.iter().zip(&cf) {
             assert!((x - y).abs() < 2e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn i8_equals_exact_integer_oracle() {
+        // i8 BRGEMM (both the n=64 fast path and the generic remainder)
+        // against a plain nested-loop i32 oracle — exact equality.
+        for (m, n) in [(7usize, 64usize), (5, 48)] {
+            let (k, lbr) = (9usize, 4usize);
+            let quant = |v: &[f32]| -> Vec<i8> {
+                v.iter().map(|&x| (x * 254.0).round() as i8).collect()
+            };
+            let a = quant(&rnd(lbr * m * k, 31));
+            let b = quant(&rnd(lbr * k * n, 32));
+            let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+            let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+            let mut c1 = vec![7i32; m * n];
+            brgemm_i8(&a, &a_offs, k, &b, &b_offs, n, &mut c1, n, m, n, k, false);
+            let mut c2 = vec![7i32; m * n];
+            for i in 0..lbr {
+                for im in 0..m {
+                    for ik in 0..k {
+                        let av = a[a_offs[i] + im * k + ik] as i32;
+                        for j in 0..n {
+                            c2[im * n + j] += av * b[b_offs[i] + ik * n + j] as i32;
+                        }
+                    }
+                }
+            }
+            assert_eq!(c1, c2, "m={m} n={n}");
         }
     }
 

@@ -21,7 +21,7 @@
 //! micro-kernel set the BRGEMM blocks dispatch to.
 
 use super::bf16::{narrow_row_into, Bf16};
-use super::brgemm::{brgemm_bf16_with, brgemm_f32_with};
+use super::brgemm::{brgemm_bf16_with, brgemm_f32_with, brgemm_i8_with};
 use super::params::{ConvParams, WIDTH_BLOCK};
 use super::post::{apply_block, apply_block_staged, PostOps};
 use super::simd::{self, MicroKernelSet};
@@ -584,6 +584,183 @@ pub fn forward_bf16_f32out_post_with_scratch(
     }
 }
 
+/// Reinterpret an i32 scratch window as f32 storage — the grid arm of the
+/// i8 kernel stages its dequantized block in the upper half of its single
+/// typed scratch window (the partitioning substrate hands out exactly two
+/// typed scratch slots per worker, and the offset table takes one).
+fn as_f32_mut(v: &mut [i32]) -> &mut [f32] {
+    // SAFETY: i32 and f32 have identical size and alignment and every bit
+    // pattern is a valid value of either type; the exclusive borrow is
+    // passed through unchanged, so no aliasing is introduced.
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut f32, v.len()) }
+}
+
+/// One i8-operand `(K, nb)` output block with f32 output — the unit of
+/// work of the plan's i8 kernel under [`Partition::Batch`]. The BRGEMM
+/// accumulates exactly in the worker's private i32 staging block
+/// (`ldc = nb`), each accumulator row is dequantized into the output row
+/// with its channel's combined scale `deq[k] = scale_x · scale_w[k]`, and
+/// the f32 post-op epilogue runs on the freshly-stored block — the
+/// "requantize at the fusion boundary" contract: everything downstream of
+/// the integer GEMM is ordinary f32.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn forward_block_i8_f32out(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    x: &[i8],
+    w_skc: &[i8],
+    deq: &[f32],
+    out_row: &mut [f32],
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    iacc: &mut [i32],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d;
+    }
+    let iacc = &mut iacc[..k * nb];
+    brgemm_i8_with(uks, w_skc, a_offs, c, x, b_offs, w, iacc, nb, k, nb, c, true);
+    for ik in 0..k {
+        let dq = deq[ik];
+        let src = &iacc[ik * nb..(ik + 1) * nb];
+        let dst = &mut out_row[ik * q + pos..ik * q + pos + nb];
+        for (o, &acc) in dst.iter_mut().zip(src) {
+            *o = acc as f32 * dq;
+        }
+    }
+    apply_block(ops, bias, res_row, out_row, k, q, pos, nb);
+}
+
+/// [`forward_block_i8_f32out`] for a grid worker: the worker's single i32
+/// scratch window is split in half — BRGEMM accumulates into the lower
+/// `K·nb` i32 block, the upper half (viewed as f32) receives the
+/// dequantized block, the epilogue runs on that hot f32 block, and only
+/// the worker's own column stripe is stored through the [`GridStripe`]
+/// handle. Integer accumulation is exact, so grid output is bit-identical
+/// to batch for free — no `ldc` caveat even applies.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn forward_block_grid_i8_f32out(
+    uks: &MicroKernelSet,
+    p: &ConvParams,
+    x: &[i8],
+    w_skc: &[i8],
+    deq: &[f32],
+    stripe: &mut GridStripe<'_, f32>,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    iacc2: &mut [i32],
+    ops: &PostOps,
+    bias: &[f32],
+    res_row: Option<&[f32]>,
+    pos: usize,
+    nb: usize,
+) {
+    let (c, k, d, w, q) = (p.c, p.k, p.d, p.w, p.q());
+    for (is, bo) in b_offs.iter_mut().enumerate() {
+        *bo = pos + is * d;
+    }
+    let (iacc, fraw) = iacc2.split_at_mut(k * WIDTH_BLOCK);
+    let iacc = &mut iacc[..k * nb];
+    let stage = &mut as_f32_mut(fraw)[..k * nb];
+    brgemm_i8_with(uks, w_skc, a_offs, c, x, b_offs, w, iacc, nb, k, nb, c, true);
+    for ik in 0..k {
+        let dq = deq[ik];
+        for (o, &acc) in stage[ik * nb..(ik + 1) * nb].iter_mut().zip(&iacc[ik * nb..]) {
+            *o = acc as f32 * dq;
+        }
+    }
+    apply_block_staged(ops, bias, res_row, stage, k, q, pos, nb);
+    stripe.store_block(stage);
+}
+
+/// Batched i8 forward with **f32 output** and the post-op epilogue fused
+/// into the width-block loop — the plan executor's i8 kernel. Operands are
+/// already quantized (`x` per-tensor, `w_skc` per-output-channel — the
+/// plan stages both); `deq[k] = scale_x · scale_w[k]` is the combined
+/// dequantization scale per output channel. `iacc` must hold
+/// `K·WIDTH_BLOCK` i32 per effective worker under [`Partition::Batch`]
+/// and `2·K·WIDTH_BLOCK` under [`Partition::Grid`] (accumulator + staged
+/// f32 halves). Zero heap allocations with `ctx.threads <= 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_i8_f32out_post_with_scratch(
+    p: &ConvParams,
+    x: &[i8],
+    w_skc: &[i8],
+    deq: &[f32],
+    out: &mut [f32],
+    ctx: ExecCtx,
+    a_offs: &[usize],
+    b_offs: &mut [usize],
+    iacc: &mut [i32],
+    ops: &PostOps,
+    bias: &[f32],
+    residual: Option<&[f32]>,
+) {
+    let (n, c, k, s, w, q) = (p.n, p.c, p.k, p.s, p.w, p.q());
+    debug_assert_eq!(p.stride, 1, "kernels compute at stride 1");
+    assert_eq!(x.len(), n * c * w, "input shape mismatch for {p}");
+    assert_eq!(w_skc.len(), s * k * c, "weight shape mismatch for {p}");
+    assert_eq!(out.len(), n * k * q, "output shape mismatch for {p}");
+    assert_eq!(deq.len(), k, "one dequantization scale per output channel");
+    super::post::validate_args(ops, bias, residual, n, k, q);
+    let uks = ctx.uks;
+    let res_of = |i: usize| {
+        residual
+            .filter(|_| ops.residual)
+            .map(|r| &r[i * k * q..(i + 1) * k * q])
+    };
+    match ctx.partition {
+        Partition::Batch => par_batch_chunks_scratch(
+            out,
+            k * q,
+            b_offs,
+            s,
+            iacc,
+            k * WIDTH_BLOCK,
+            ctx.threads,
+            |i, out_row, bo, ia| {
+                let xrow = &x[i * c * w..(i + 1) * c * w];
+                let res_row = res_of(i);
+                let mut pos = 0;
+                while pos < q {
+                    let nb = WIDTH_BLOCK.min(q - pos);
+                    forward_block_i8_f32out(
+                        uks, p, xrow, w_skc, deq, out_row, a_offs, bo, ia, ops, bias, res_row,
+                        pos, nb,
+                    );
+                    pos += nb;
+                }
+            },
+        ),
+        Partition::Grid => par_grid_chunks_scratch(
+            out,
+            k * q,
+            q,
+            WIDTH_BLOCK,
+            b_offs,
+            s,
+            iacc,
+            2 * k * WIDTH_BLOCK,
+            ctx.threads,
+            |i, pos, nb, stripe, bo, ia| {
+                let xrow = &x[i * c * w..(i + 1) * c * w];
+                let res_row = res_of(i);
+                forward_block_grid_i8_f32out(
+                    uks, p, xrow, w_skc, deq, stripe, a_offs, bo, ia, ops, bias, res_row, pos, nb,
+                );
+            },
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -657,6 +834,73 @@ mod tests {
                 run(Partition::Grid),
                 "N={n} threads={threads}: grid must be bit-exact vs batch"
             );
+        }
+    }
+
+    #[test]
+    fn i8_grid_equals_batch_bit_exact_and_matches_dequant_oracle() {
+        use crate::conv1d::layout::kcs_to_skc_i8;
+        use crate::conv1d::quant::{absmax, channel_scales_kcs, quantize_into, scale_from_absmax};
+        for &(n, threads) in &[(1usize, 8usize), (3, 4), (2, 1)] {
+            let p = ConvParams::new(n, 6, 7, 400, 9, 3).unwrap();
+            let x = rnd(p.n * p.c * p.w, 57);
+            let wt = rnd(p.k * p.c * p.s, 58);
+            let sx = scale_from_absmax(absmax(&x));
+            let w_scales = channel_scales_kcs(&wt, p.k, p.c, p.s);
+            let mut xq = vec![0i8; x.len()];
+            quantize_into(&x, sx, &mut xq);
+            let mut wq = vec![0i8; wt.len()];
+            for k in 0..p.k {
+                quantize_into(
+                    &wt[k * p.c * p.s..(k + 1) * p.c * p.s],
+                    w_scales[k],
+                    &mut wq[k * p.c * p.s..(k + 1) * p.c * p.s],
+                );
+            }
+            let skc_q = kcs_to_skc_i8(&wq, p.k, p.c, p.s);
+            let deq: Vec<f32> = w_scales.iter().map(|&ws| sx * ws).collect();
+            let a_offs = forward_a_offs(&p);
+            let run = |partition| {
+                let ctx = ExecCtx::new(threads, partition);
+                let workers = threads.max(1);
+                let mut b_offs = vec![0usize; workers * p.s];
+                let mut iacc = vec![0i32; workers * 2 * p.k * WIDTH_BLOCK];
+                let mut out = vec![0.0f32; p.n * p.k * p.q()];
+                forward_i8_f32out_post_with_scratch(
+                    &p,
+                    &xq,
+                    &skc_q,
+                    &deq,
+                    &mut out,
+                    ctx,
+                    &a_offs,
+                    &mut b_offs,
+                    &mut iacc,
+                    &PostOps::none(),
+                    &[],
+                    None,
+                );
+                out
+            };
+            let batch = run(Partition::Batch);
+            assert_eq!(
+                batch.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                run(Partition::Grid).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "N={n} threads={threads}: i8 grid must be bit-exact vs batch"
+            );
+            // Exact dequantization oracle: direct conv over the *dequantized*
+            // operands must match within f32 rounding of the dequant multiply.
+            let xdq: Vec<f32> = xq.iter().map(|&v| v as f32 * sx).collect();
+            let wdq: Vec<f32> = wq
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v as f32 * w_scales[i / (p.c * p.s)])
+                .collect();
+            let mut want = vec![0.0f32; p.n * p.k * p.q()];
+            forward_direct(&p, &xdq, &wdq, &mut want);
+            for (g, w_) in batch.iter().zip(&want) {
+                assert!((g - w_).abs() < 1e-3 * (1.0 + w_.abs()), "{g} vs {w_}");
+            }
         }
     }
 

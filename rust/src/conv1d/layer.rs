@@ -143,6 +143,10 @@ pub struct Conv1dLayer {
     /// [`ConvPlan::with_inference`] (no backward scratch, backward calls
     /// panic) — the serving path (DESIGN.md §7).
     pub inference: bool,
+    /// Calibrated per-tensor activation scale for the i8 precision tier
+    /// (absmax/127 over a warm-up batch); 1.0 = uncalibrated. Ignored by
+    /// the f32/bf16 kernels.
+    pub input_scale: f32,
     w_kcs: Vec<f32>,
     /// Per-filter bias (added by `forward_same` and the fused post-op
     /// pipeline, framework-style).
@@ -169,6 +173,7 @@ impl Clone for Conv1dLayer {
             post_ops: self.post_ops,
             autotune: self.autotune,
             inference: self.inference,
+            input_scale: self.input_scale,
             w_kcs: self.w_kcs.clone(),
             bias: self.bias.clone(),
             plan: Mutex::new(None), // the clone rebuilds its plan lazily
@@ -193,6 +198,7 @@ impl Conv1dLayer {
             post_ops: PostOps::none(),
             autotune: false,
             inference: false,
+            input_scale: 1.0,
             w_kcs,
             bias: vec![0.0; k],
             plan: Mutex::new(None),
@@ -235,8 +241,9 @@ impl Conv1dLayer {
         self.try_params(n, w).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Effective plan precision: bf16 is only meaningful on the BRGEMM
-    /// backend (paper Sec. 4.3); everything else runs f32.
+    /// Effective plan precision: bf16 (paper Sec. 4.3) and the i8
+    /// quantized tier are only meaningful on the BRGEMM backend;
+    /// everything else runs f32.
     fn plan_precision(&self) -> Precision {
         if self.backend == Backend::Brgemm || self.autotune {
             self.precision
@@ -290,6 +297,7 @@ impl Conv1dLayer {
         }
         let (plan, _) = guard.as_mut().expect("plan just ensured");
         plan.set_bias(&self.bias);
+        plan.set_input_scale(self.input_scale);
         Ok(f(plan))
     }
 
@@ -612,6 +620,28 @@ mod tests {
         assert_ne!(f32_out, bf_out, "bf16 path must actually quantise");
         for (a, b) in bf_out.iter().zip(&f32_out) {
             assert!((a - b).abs() < 5e-2 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // Non-BRGEMM backends gracefully fall back to f32.
+        l.backend = Backend::Direct;
+        let direct_out = l.forward(&x, n, w);
+        for (a, b) in direct_out.iter().zip(&f32_out) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn i8_precision_selects_the_i8_kernel() {
+        use crate::conv1d::quant::{absmax, scale_from_absmax};
+        let (n, w) = (1, 200);
+        let mut l = layer(4, 4, 5, 2);
+        let x = rnd(n * 4 * w, 37);
+        let f32_out = l.forward(&x, n, w);
+        l.precision = Precision::I8;
+        l.input_scale = scale_from_absmax(absmax(&x));
+        let i8_out = l.forward(&x, n, w);
+        assert_ne!(f32_out, i8_out, "i8 path must actually quantise");
+        for (a, b) in i8_out.iter().zip(&f32_out) {
+            assert!((a - b).abs() < 1.5e-1 * (1.0 + b.abs()), "{a} vs {b}");
         }
         // Non-BRGEMM backends gracefully fall back to f32.
         l.backend = Backend::Direct;

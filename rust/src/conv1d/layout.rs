@@ -28,6 +28,29 @@ pub fn kcs_to_skc(w: &[f32], k: usize, c: usize, s: usize) -> Vec<f32> {
     out
 }
 
+/// `(K, C, S) → (S, K, C)` for i8 weights, into a caller-owned buffer —
+/// the quantized forward layout (i8 tier quantizes in the framework-native
+/// `(K, C, S)` layout, where per-output-channel rows are contiguous, then
+/// relays out like f32).
+pub fn kcs_to_skc_i8_into(w: &[i8], k: usize, c: usize, s: usize, out: &mut [i8]) {
+    assert_eq!(w.len(), k * c * s, "weight length mismatch");
+    assert_eq!(out.len(), k * c * s, "layout buffer length mismatch");
+    for ik in 0..k {
+        for ic in 0..c {
+            for is in 0..s {
+                out[(is * k + ik) * c + ic] = w[(ik * c + ic) * s + is];
+            }
+        }
+    }
+}
+
+/// `(K, C, S) → (S, K, C)` for i8 weights.
+pub fn kcs_to_skc_i8(w: &[i8], k: usize, c: usize, s: usize) -> Vec<i8> {
+    let mut out = vec![0i8; k * c * s];
+    kcs_to_skc_i8_into(w, k, c, s, &mut out);
+    out
+}
+
 /// `(K, C, S) → (S, C, K)` with the tap axis reversed, into a caller-owned
 /// buffer.
 pub fn kcs_to_sck_flipped_into(w: &[f32], k: usize, c: usize, s: usize, out: &mut [f32]) {

@@ -11,6 +11,8 @@
 //! * [`bf16`]    — BFloat16 storage + `VDPBF16PS`-semantics kernels
 //! * [`im2col`]  — the library baseline (oneDNN-analog)
 //! * [`direct`]  — naive oracle / unoptimised floor
+//! * [`quant`]   — int8 symmetric quantization helpers (per-channel weight
+//!   scales with all-zero guard, round-and-clamp ±127, staging quantize)
 //! * [`post`]    — the fused post-op pipeline (bias/activation/residual/
 //!   scale epilogues applied inside each kernel's output-block loop,
 //!   DESIGN.md §5b)
@@ -39,6 +41,7 @@ pub mod layout;
 pub mod params;
 pub mod plan;
 pub mod post;
+pub mod quant;
 pub mod simd;
 pub mod threading;
 pub mod tune;

@@ -23,8 +23,8 @@ use super::backward_weight::backward_weight_with_scratch;
 use super::bf16::{to_bf16, to_bf16_into, Bf16};
 use super::direct::{backward_data_direct, backward_weight_direct_into, forward_direct_post};
 use super::forward::{
-    forward_a_offs, forward_bf16_f32out_post_with_scratch, forward_post_with_scratch,
-    forward_with_scratch,
+    forward_a_offs, forward_bf16_f32out_post_with_scratch, forward_i8_f32out_post_with_scratch,
+    forward_post_with_scratch, forward_with_scratch,
 };
 use super::im2col::forward_im2col_post_with_scratch;
 use super::layer::Backend;
@@ -33,6 +33,7 @@ use super::layout::{
 };
 use super::params::{ConvParams, WIDTH_BLOCK};
 use super::post::{self, PostOps};
+use super::quant;
 use super::simd::{self, Isa, MicroKernelSet};
 use super::threading::{ExecCtx, Partition};
 use crate::machine::Precision;
@@ -61,6 +62,18 @@ pub struct PlanWeights {
     pub sck_flip: Vec<f32>,
     /// bf16 copy of the forward layout (bf16 plans only, else empty).
     pub skc_bf16: Vec<Bf16>,
+    /// Per-output-channel symmetric int8 quantized forward layout
+    /// (i8 plans only, else empty).
+    pub skc_i8: Vec<i8>,
+    /// Per-output-channel weight scales `absmax(K-row)/127`, all-zero
+    /// rows guarded to 1.0 (i8 plans only, else empty).
+    pub w_scales: Vec<f32>,
+    /// Combined dequantization scales `input_scale · w_scales[k]` —
+    /// what the i8 forward multiplies each i32 accumulator row by.
+    pub deq: Vec<f32>,
+    /// Per-tensor symmetric activation scale (calibrated absmax/127;
+    /// 1.0 until [`ConvPlan::set_input_scale`] installs a calibration).
+    pub input_scale: f32,
 }
 
 /// Element counts of every workspace buffer a kernel needs for a problem;
@@ -83,6 +96,12 @@ pub struct WorkspaceSpec {
     pub stage: usize,
     /// bf16 staging copy of the input (`N·C·W`, bf16 kernel only).
     pub xb: usize,
+    /// i8 staging copy of the quantized input (`N·C·W`, i8 kernel only).
+    pub xq: usize,
+    /// Per-worker i32 accumulator windows (`workers·2·K·WIDTH_BLOCK`,
+    /// i8 kernel only): the i8 grid arm splits its window into an i32
+    /// accumulator half and a dequantized-f32 staging half.
+    pub iacc: usize,
     /// Padded-input scratch for same-padding execution (`N·C·W`). Zero in
     /// kernel specs — grown lazily on first `execute_forward_same_into`.
     pub padded_in: usize,
@@ -104,9 +123,11 @@ impl WorkspaceSpec {
                 + self.stage
                 + self.padded_in
                 + self.gx_padded
-                + self.out)
+                + self.out
+                + self.iacc)
                 * 4
             + self.xb * 2
+            + self.xq
     }
 }
 
@@ -124,6 +145,10 @@ pub struct Workspace {
     /// Per-worker grid staging blocks (see [`WorkspaceSpec::stage`]).
     stage: Vec<f32>,
     xb: Vec<Bf16>,
+    /// i8 staging copy of the quantized input (see [`WorkspaceSpec::xq`]).
+    xq: Vec<i8>,
+    /// Per-worker i32 accumulator windows (see [`WorkspaceSpec::iacc`]).
+    iacc: Vec<i32>,
     padded_in: Vec<f32>,
     gx_padded: Vec<f32>,
     out: Vec<f32>,
@@ -147,6 +172,8 @@ impl Workspace {
             gw_partials: vec![0.0; spec.gw_partials],
             stage: vec![0.0; spec.stage],
             xb: vec![Bf16::ZERO; spec.xb],
+            xq: vec![0; spec.xq],
+            iacc: vec![0; spec.iacc],
             padded_in: vec![0.0; spec.padded_in],
             gx_padded: vec![0.0; spec.gx_padded],
             out: vec![0.0; spec.out],
@@ -167,9 +194,11 @@ impl Workspace {
                 + self.gx_padded.len()
                 + self.out.len()
                 + self.gpre.len()
-                + self.full.len())
+                + self.full.len()
+                + self.iacc.len())
                 * 4
             + self.xb.len() * 2
+            + self.xq.len()
     }
 }
 
@@ -223,7 +252,7 @@ pub struct PostOpArgs<'a> {
 /// use dilconv1d::conv1d::{kernels, lookup_kernel};
 ///
 /// let names: Vec<&str> = kernels().iter().map(|k| k.name()).collect();
-/// assert_eq!(names, ["brgemm", "im2col", "direct", "bf16"]);
+/// assert_eq!(names, ["brgemm", "im2col", "direct", "bf16", "i8"]);
 /// // Historical aliases resolve to their canonical kernels.
 /// assert_eq!(lookup_kernel("onednn").unwrap().name(), "im2col");
 /// assert!(lookup_kernel("cuda").is_none());
@@ -693,8 +722,116 @@ impl ConvKernel for Bf16Kernel {
     }
 }
 
+/// BRGEMM with int8 per-channel symmetric quantized storage (VNNI-style
+/// i32-accumulate semantics): the input is quantized into the workspace
+/// with the plan's calibrated per-tensor activation scale, the weight is
+/// quantized per output channel at layout-derivation time, the integer
+/// BRGEMM accumulates **exactly** in i32 and each accumulator row is
+/// dequantized with `deq[k] = scale_x · scale_w[k]` before the f32
+/// post-op epilogue — the requantize-at-the-fusion-boundary contract.
+/// Exact integer accumulation makes every ISA level, partitioning and
+/// thread count bit-identical by construction. Inference-only numerics:
+/// backward passes run the f32 BRGEMM kernels on the full-precision
+/// layouts the plan keeps alongside.
+pub struct I8Kernel;
+
+impl ConvKernel for I8Kernel {
+    fn name(&self) -> &'static str {
+        "i8"
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::I8
+    }
+
+    fn workspace_spec(&self, p: &ConvParams, threads: usize) -> WorkspaceSpec {
+        let t = workers_grid(p, threads);
+        WorkspaceSpec {
+            b_offs: t * p.s,
+            gout_padded: gout_padded_len(p),
+            gw_partials: t * p.s * p.c * p.k,
+            // Only the delegated f32 BRGEMM backward-data grids (C lines);
+            // the i8 forward stages in `iacc` instead.
+            stage: t * p.c * WIDTH_BLOCK,
+            xq: p.n * p.c * p.w,
+            iacc: t * 2 * p.k * WIDTH_BLOCK,
+            ..WorkspaceSpec::default()
+        }
+    }
+
+    fn forward(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        out: &mut [f32],
+        ctx: ExecCtx,
+    ) {
+        let args = PostOpArgs {
+            ops: &PostOps::none(),
+            bias: &[],
+            residual: None,
+        };
+        self.forward_post(p, w, ws, x, &args, out, ctx);
+    }
+
+    fn forward_post(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        x: &[f32],
+        args: &PostOpArgs<'_>,
+        out: &mut [f32],
+        ctx: ExecCtx,
+    ) {
+        quant::quantize_into(x, w.input_scale, &mut ws.xq);
+        forward_i8_f32out_post_with_scratch(
+            p,
+            &ws.xq,
+            &w.skc_i8,
+            &w.deq,
+            out,
+            ctx,
+            &ws.a_offs_fwd,
+            &mut ws.b_offs,
+            &mut ws.iacc,
+            args.ops,
+            args.bias,
+            args.residual,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        gin: &mut [f32],
+        ctx: ExecCtx,
+    ) {
+        BrgemmKernel.backward_data(p, w, ws, gout, gin, ctx);
+    }
+
+    fn backward_weight(
+        &self,
+        p: &ConvParams,
+        w: &PlanWeights,
+        ws: &mut Workspace,
+        gout: &[f32],
+        x: &[f32],
+        gw: &mut [f32],
+        ctx: ExecCtx,
+    ) {
+        BrgemmKernel.backward_weight(p, w, ws, gout, x, gw, ctx);
+    }
+}
+
 /// The backend registry: every kernel the plan builder can select.
-static KERNELS: [&(dyn ConvKernel); 4] = [&BrgemmKernel, &Im2colKernel, &DirectKernel, &Bf16Kernel];
+static KERNELS: [&(dyn ConvKernel); 5] =
+    [&BrgemmKernel, &Im2colKernel, &DirectKernel, &Bf16Kernel, &I8Kernel];
 
 /// All registered kernels, in preference order.
 pub fn kernels() -> &'static [&'static dyn ConvKernel] {
@@ -702,14 +839,16 @@ pub fn kernels() -> &'static [&'static dyn ConvKernel] {
 }
 
 /// Look a kernel up by name. Accepts the same aliases as
-/// `Backend::from_str` plus `"bf16"`/`"bfloat16"` — configs and benches
-/// select backends by string without touching the enum.
+/// `Backend::from_str` plus `"bf16"`/`"bfloat16"` and `"i8"`/`"int8"` —
+/// configs and benches select backends by string without touching the
+/// enum.
 pub fn lookup_kernel(name: &str) -> Option<&'static dyn ConvKernel> {
     let canonical = match name.to_ascii_lowercase().as_str() {
         "brgemm" | "libxsmm" | "ours" => "brgemm",
         "im2col" | "onednn" | "baseline" => "im2col",
         "direct" | "naive" => "direct",
         "bf16" | "bfloat16" => "bf16",
+        "i8" | "int8" => "i8",
         _ => return None,
     };
     kernels().iter().copied().find(|k| k.name() == canonical)
@@ -779,8 +918,9 @@ impl std::fmt::Debug for ConvPlan {
 
 impl ConvPlan {
     /// Build a plan from a problem descriptor, an enum backend and a
-    /// precision. `Precision::Bf16` is served by the bf16 kernel and is
-    /// only available on the BRGEMM backend (as in the paper).
+    /// precision. `Precision::Bf16` is served by the bf16 kernel and
+    /// `Precision::I8` by the int8 kernel; both are only available on the
+    /// BRGEMM backend (as in the paper).
     pub fn new(
         p: ConvParams,
         backend: Backend,
@@ -790,9 +930,15 @@ impl ConvPlan {
     ) -> Result<ConvPlan, PlanError> {
         let name = match (backend, precision) {
             (Backend::Brgemm, Precision::Bf16) => "bf16",
+            (Backend::Brgemm, Precision::I8) => "i8",
             (_, Precision::Bf16) => {
                 return Err(PlanError(format!(
                     "precision bf16 requires the brgemm backend, got {backend}"
+                )))
+            }
+            (_, Precision::I8) => {
+                return Err(PlanError(format!(
+                    "precision i8 requires the brgemm backend, got {backend}"
                 )))
             }
             (b, Precision::F32) => b.as_str(),
@@ -867,6 +1013,10 @@ impl ConvPlan {
             skc: vec![0.0; w_kcs.len()],
             sck_flip: vec![0.0; w_kcs.len()],
             skc_bf16: Vec::new(),
+            skc_i8: Vec::new(),
+            w_scales: Vec::new(),
+            deq: Vec::new(),
+            input_scale: 1.0,
             kcs: w_kcs,
         };
         derive_layouts(&p, &mut weights, precision);
@@ -1000,7 +1150,8 @@ impl ConvPlan {
     ) -> bool {
         let name = match (backend, precision) {
             (Backend::Brgemm, Precision::Bf16) => "bf16",
-            (_, Precision::Bf16) => return false,
+            (Backend::Brgemm, Precision::I8) => "i8",
+            (_, Precision::Bf16 | Precision::I8) => return false,
             (b, Precision::F32) => b.as_str(),
         };
         self.p == *p && self.kernel.name() == name && self.threads == threads.max(1)
@@ -1022,6 +1173,29 @@ impl ConvPlan {
     /// Framework-layout weights `(K, C, S)`.
     pub fn weights(&self) -> &[f32] {
         &self.weights.kcs
+    }
+
+    /// Install a calibrated per-tensor activation scale (absmax/127 over
+    /// a warm-up batch, [`super::quant::scale_from_absmax`]). Only the
+    /// combined dequantization scales are refreshed, so repeated calls
+    /// with an unchanged scale are free. A no-op in effect for non-i8
+    /// plans (their `deq` table is empty).
+    pub fn set_input_scale(&mut self, scale: f32) {
+        assert!(
+            scale.is_finite() && scale > 0.0,
+            "input scale must be positive and finite, got {scale}"
+        );
+        if self.weights.input_scale != scale {
+            self.weights.input_scale = scale;
+            for (d, &ws) in self.weights.deq.iter_mut().zip(&self.weights.w_scales) {
+                *d = scale * ws;
+            }
+        }
+    }
+
+    /// The per-tensor activation scale the i8 forward quantizes with.
+    pub fn input_scale(&self) -> f32 {
+        self.weights.input_scale
     }
 
     /// Set the per-filter bias added by the same-padding forward and the
@@ -1457,6 +1631,35 @@ fn derive_layouts(p: &ConvParams, weights: &mut PlanWeights, precision: Precisio
             weights.skc_bf16 = to_bf16(&weights.skc);
         }
     }
+    if precision == Precision::I8 {
+        // Per-output-channel symmetric quantization: channel k's K-row is
+        // the contiguous `[k·C·S, (k+1)·C·S)` block of the framework
+        // layout; quantize straight into the `(S, K, C)` forward layout
+        // so steady-state `set_weights` stays allocation-free.
+        if weights.w_scales.len() != p.k {
+            weights.w_scales = vec![0.0; p.k];
+            weights.deq = vec![0.0; p.k];
+        }
+        if weights.skc_i8.len() != weights.kcs.len() {
+            weights.skc_i8 = vec![0; weights.kcs.len()];
+        }
+        for ik in 0..p.k {
+            let row = &weights.kcs[ik * p.c * p.s..(ik + 1) * p.c * p.s];
+            weights.w_scales[ik] = quant::scale_from_absmax(quant::absmax(row));
+        }
+        for ik in 0..p.k {
+            let sc = weights.w_scales[ik];
+            for ic in 0..p.c {
+                for is in 0..p.s {
+                    weights.skc_i8[(is * p.k + ik) * p.c + ic] =
+                        quant::quantize(weights.kcs[(ik * p.c + ic) * p.s + is], sc);
+                }
+            }
+        }
+        for (d, &ws) in weights.deq.iter_mut().zip(&weights.w_scales) {
+            *d = weights.input_scale * ws;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1475,8 +1678,8 @@ mod tests {
     #[test]
     fn registry_has_all_kernels() {
         let names: Vec<&str> = kernels().iter().map(|k| k.name()).collect();
-        assert_eq!(names, vec!["brgemm", "im2col", "direct", "bf16"]);
-        for alias in ["libxsmm", "onednn", "naive", "bfloat16", "OURS"] {
+        assert_eq!(names, vec!["brgemm", "im2col", "direct", "bf16", "i8"]);
+        for alias in ["libxsmm", "onednn", "naive", "bfloat16", "OURS", "int8"] {
             assert!(lookup_kernel(alias).is_some(), "{alias}");
         }
         assert!(lookup_kernel("cuda").is_none());
@@ -1510,11 +1713,18 @@ mod tests {
         ConvPlan::by_name(p, "direct", 1, wt.clone())
             .unwrap()
             .execute_forward_into(&x, &mut reference);
-        for name in ["brgemm", "im2col", "bf16"] {
+        for name in ["brgemm", "im2col", "bf16", "i8"] {
             let mut plan = ConvPlan::by_name(p, name, 1, wt.clone()).unwrap();
+            plan.set_input_scale(quant::scale_from_absmax(quant::absmax(&x)));
             let mut got = vec![0.0; p.n * p.k * p.q()];
             plan.execute_forward_into(&x, &mut got);
-            let tol = if name == "bf16" { 4e-2 } else { 1e-3 };
+            // i8's bound is the additive quantization error:
+            // C·S·(Ax·sw/2 + Aw·sx/2) ≈ 45·2·0.5·(0.5/254) ≈ 0.09.
+            let tol = match name {
+                "bf16" => 4e-2,
+                "i8" => 1.5e-1,
+                _ => 1e-3,
+            };
             for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
                 assert!(
                     (g - r).abs() < tol * (1.0 + r.abs()),
@@ -1628,15 +1838,18 @@ mod tests {
         // (same per-block computation, different owners) — including the
         // N=1 case where only the grid actually fans out. Mirrors
         // `multithreaded_plan_is_bit_exact`.
-        for name in ["brgemm", "bf16"] {
+        for name in ["brgemm", "bf16", "i8"] {
             let p = ConvParams::new(1, 5, 7, 300, 9, 4).unwrap();
             let wt = rnd(p.k * p.c * p.s, 3);
             let x = rnd(p.n * p.c * p.w, 4);
             let gout = rnd(p.n * p.k * p.q(), 5);
+            let sx = quant::scale_from_absmax(quant::absmax(&x));
             let mut batch = ConvPlan::by_name(p, name, 8, wt.clone()).unwrap();
             let mut grid = ConvPlan::by_name(p, name, 8, wt.clone())
                 .unwrap()
                 .with_partition(Partition::Grid);
+            batch.set_input_scale(sx);
+            grid.set_input_scale(sx);
             assert_eq!(batch.partition(), Partition::Batch);
             assert_eq!(grid.partition(), Partition::Grid);
             assert_eq!(batch.isa(), grid.isa());
@@ -1698,12 +1911,13 @@ mod tests {
             PostOps::parse("bias_sigmoid").unwrap(),
             PostOps::bias_relu_residual().with_scale(0.5),
         ];
-        for name in ["brgemm", "im2col", "direct", "bf16"] {
+        for name in ["brgemm", "im2col", "direct", "bf16", "i8"] {
             for &ops in combos.iter() {
                 let mut plan = ConvPlan::by_name(p, name, 1, wt.clone())
                     .unwrap()
                     .with_post_ops(ops);
                 plan.set_bias(&bias);
+                plan.set_input_scale(quant::scale_from_absmax(quant::absmax(&x)));
                 let residual = if ops.residual { Some(&res[..]) } else { None };
                 let mut fused = vec![0.0; p.n * p.k * p.q()];
                 plan.execute_forward_post_into(&x, residual, &mut fused);
@@ -1728,12 +1942,17 @@ mod tests {
         ConvPlan::by_name(p1, "brgemm", 1, wt.clone())
             .unwrap()
             .execute_forward_into(&x, &mut full);
-        for name in ["brgemm", "im2col", "direct", "bf16"] {
+        for name in ["brgemm", "im2col", "direct", "bf16", "i8"] {
             let mut plan = ConvPlan::by_name(p2, name, 1, wt.clone()).unwrap();
+            plan.set_input_scale(quant::scale_from_absmax(quant::absmax(&x)));
             assert_eq!(plan.params().q(), 21);
             let mut out = vec![0.0; 2 * 4 * p2.q()];
             plan.execute_forward_into(&x, &mut out);
-            let tol = if name == "bf16" { 4e-2 } else { 1e-4 };
+            let tol = match name {
+                "bf16" => 4e-2,
+                "i8" => 1e-1,
+                _ => 1e-4,
+            };
             for row in 0..2 * 4 {
                 for j in 0..p2.q() {
                     let want = full[row * p1.q() + j * 2];
@@ -1750,11 +1969,14 @@ mod tests {
     #[test]
     fn inference_plan_trims_backward_scratch_and_keeps_forward_bits() {
         let (p, wt, x) = problem();
-        for name in ["brgemm", "im2col", "bf16"] {
+        for name in ["brgemm", "im2col", "bf16", "i8"] {
+            let sx = quant::scale_from_absmax(quant::absmax(&x));
             let mut full = ConvPlan::by_name(p, name, 4, wt.clone()).unwrap();
             let mut inf = ConvPlan::by_name(p, name, 4, wt.clone())
                 .unwrap()
                 .with_inference();
+            full.set_input_scale(sx);
+            inf.set_input_scale(sx);
             assert!(inf.is_inference() && !full.is_inference());
             assert!(
                 inf.workspace_bytes() < full.workspace_bytes(),
@@ -1798,6 +2020,46 @@ mod tests {
         let wt = rnd(3 * 2 * 5, 1);
         assert!(ConvPlan::by_name(p, "no-such-kernel", 1, wt.clone()).is_err());
         assert!(ConvPlan::new(p, Backend::Im2col, Precision::Bf16, 1, wt.clone()).is_err());
+        assert!(ConvPlan::new(p, Backend::Im2col, Precision::I8, 1, wt.clone()).is_err());
+        assert!(ConvPlan::new(p, Backend::Direct, Precision::I8, 1, wt.clone()).is_err());
         assert!(ConvPlan::by_name(p, "brgemm", 1, wt[1..].to_vec()).is_err());
+    }
+
+    #[test]
+    fn i8_plan_set_input_scale_refreshes_deq_and_changes_output() {
+        let (p, wt, x) = problem();
+        let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::I8, 1, wt).unwrap();
+        assert_eq!(plan.precision(), Precision::I8);
+        assert_eq!(plan.input_scale(), 1.0);
+        let mut coarse = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut coarse);
+        // Calibrate to the actual input range: with scale 1.0, rnd inputs
+        // in [-0.5, 0.5) all quantize to 0 — calibration is load-bearing.
+        assert!(coarse.iter().all(|&v| v == 0.0));
+        let sx = quant::scale_from_absmax(quant::absmax(&x));
+        plan.set_input_scale(sx);
+        assert_eq!(plan.input_scale(), sx);
+        let mut calibrated = vec![0.0; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut calibrated);
+        assert!(calibrated.iter().any(|&v| v != 0.0));
+        // Oracle: direct conv over the dequantized operands.
+        let mut want = vec![0.0; p.n * p.k * p.q()];
+        let xdq: Vec<f32> = x
+            .iter()
+            .map(|&v| quant::quantize(v, sx) as f32 * sx)
+            .collect();
+        let wdq: Vec<f32> = plan
+            .weights()
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let sc = plan.weights.w_scales[i / (p.c * p.s)];
+                quant::quantize(v, sc) as f32 * sc
+            })
+            .collect();
+        crate::conv1d::direct::forward_direct(&p, &xdq, &wdq, &mut want);
+        for (g, w_) in calibrated.iter().zip(&want) {
+            assert!((g - w_).abs() < 1e-3 * (1.0 + w_.abs()), "{g} vs {w_}");
+        }
     }
 }

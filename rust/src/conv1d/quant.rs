@@ -1,0 +1,107 @@
+//! Int8 symmetric quantization helpers for the i8 inference tier.
+//!
+//! Scheme (DESIGN.md §"Precision ladder"): per-output-channel symmetric
+//! weight quantization — one f32 scale per K-row, `scale = absmax / 127`
+//! with an all-zero-channel guard — plus a single per-tensor activation
+//! scale calibrated from a warm-up batch (absmax / 127). Values map as
+//! `q = round(v / scale)` clamped to `[-127, 127]`; the i8 BRGEMM
+//! accumulates exactly in i32 and the output is dequantized with
+//! `y = acc · (scale_x · scale_w[k])`.
+//!
+//! The clamp is symmetric at ±127 (not −128) so `|q·q| ≤ 16129` and
+//! negation round-trips, matching the VNNI-style kernel contract in
+//! [`super::simd`].
+
+/// Symmetric quantization ceiling: quantized values live in `[-127, 127]`.
+pub const QMAX: f32 = 127.0;
+
+/// Per-tensor symmetric scale from an absolute maximum: `absmax / 127`,
+/// guarded so an all-zero tensor gets scale 1.0 (any scale dequantizes
+/// zeros to zeros; 1.0 keeps downstream divisions finite).
+pub fn scale_from_absmax(absmax: f32) -> f32 {
+    if absmax > 0.0 {
+        absmax / QMAX
+    } else {
+        1.0
+    }
+}
+
+/// Absolute maximum of a slice (0.0 for an empty slice).
+pub fn absmax(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Quantize one value: `round(v / scale)` clamped to `[-127, 127]`.
+#[inline]
+pub fn quantize(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-QMAX, QMAX) as i8
+}
+
+/// Quantize a slice into a pre-sized i8 staging buffer.
+pub fn quantize_into(src: &[f32], scale: f32, dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / scale;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s * inv).round().clamp(-QMAX, QMAX) as i8;
+    }
+}
+
+/// Per-output-channel symmetric weight scales for a `(K, C, S)` weight
+/// tensor laid out K-major (`w[k*C*S ..][c*S ..][s]`): one scale per
+/// K-row, `absmax(row) / 127`, all-zero rows guarded to 1.0.
+pub fn channel_scales_kcs(w: &[f32], kk: usize, c: usize, s: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), kk * c * s);
+    (0..kk)
+        .map(|k| scale_from_absmax(absmax(&w[k * c * s..(k + 1) * c * s])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv1d::test_util::rnd;
+
+    #[test]
+    fn round_trip_error_bounded_by_half_scale() {
+        let v = rnd(256, 11);
+        let scale = scale_from_absmax(absmax(&v));
+        for &x in &v {
+            let q = quantize(x, scale);
+            let back = q as f32 * scale;
+            assert!(
+                (x - back).abs() <= scale / 2.0 + 1e-7,
+                "x={x} back={back} scale={scale}"
+            );
+        }
+    }
+
+    #[test]
+    fn clamp_saturates_at_plus_minus_127() {
+        let scale = 0.01;
+        assert_eq!(quantize(1e9, scale), 127);
+        assert_eq!(quantize(-1e9, scale), -127);
+        assert_eq!(quantize(0.0, scale), 0);
+    }
+
+    #[test]
+    fn all_zero_channel_gets_unit_scale() {
+        let (kk, c, s) = (3usize, 2usize, 4usize);
+        let mut w = rnd(kk * c * s, 5);
+        w[c * s..2 * c * s].fill(0.0);
+        let scales = channel_scales_kcs(&w, kk, c, s);
+        assert_eq!(scales[1], 1.0);
+        assert!(scales[0] > 0.0 && scales[2] > 0.0);
+        for &x in &w[c * s..2 * c * s] {
+            assert_eq!(quantize(x, scales[1]), 0);
+        }
+    }
+
+    #[test]
+    fn channel_scales_are_per_row_absmax() {
+        let (kk, c, s) = (2usize, 1usize, 3usize);
+        let w = [0.5f32, -2.0, 1.0, 0.25, 0.1, -0.3];
+        let scales = channel_scales_kcs(&w, kk, c, s);
+        assert_eq!(scales[0], 2.0 / QMAX);
+        assert_eq!(scales[1], 0.3 / QMAX);
+    }
+}

@@ -39,6 +39,8 @@ pub static SET: MicroKernelSet = MicroKernelSet {
     row4_f32,
     row_bf16,
     row4_bf16,
+    row_i8,
+    row4_i8,
 };
 
 fn row_f32(
@@ -105,6 +107,39 @@ fn row4_bf16(
 ) {
     // SAFETY: this entry is only installed when AVX2+FMA were detected.
     unsafe { row4_bf16_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
+}
+
+fn row_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [i32],
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX2+FMA were detected.
+    unsafe { row_i8_impl(a, a_offs, lda, b, b_offs, ldb, row, k, crow, beta_zero) }
+}
+
+fn row4_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [i32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX2+FMA were detected.
+    unsafe { row4_i8_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
 }
 
 /// Widen 8 bf16 lanes to f32 (exact: bits `<< 16`, the inverse of bf16
@@ -292,6 +327,145 @@ unsafe fn row4_bf16_impl(
                 }
             }
             store_chunk4(&acc, c, ldc, row0, col, beta_zero);
+        }
+    }
+}
+
+/// Widen 8 i8 lanes to i32 (exact sign extension, identical to `as i32`
+/// per lane). `p` must point at 8 readable `i8`s. Same ABI note as
+/// [`widen8_bf16`]: every caller is `#[target_feature(enable =
+/// "avx2,fma")]`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn widen8_i8(p: *const i8) -> __m256i {
+    unsafe { _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row_i8_impl(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [i32],
+    beta_zero: bool,
+) {
+    unsafe {
+        // The `maddubs`-shaped blocking (broadcast A, stream B panels),
+        // but with exact sign-extended i32 multiplies instead of the
+        // u8×s8 i16-saturating `_mm256_maddubs_epi16` pair — i32
+        // arithmetic is exact, which is what makes every ISA level
+        // bit-identical by construction.
+        let mut acc = [_mm256_setzero_si256(); 8];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + row * lda..ao + row * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let av = _mm256_set1_epi32(av as i32);
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let bv = widen8_i8(bp.add(l * 8));
+                    *accl = _mm256_add_epi32(*accl, _mm256_mullo_epi32(av, bv));
+                }
+            }
+        }
+        store_row_i32(&acc, &mut crow[..N64], beta_zero);
+    }
+}
+
+/// Store a 64-column i32 accumulator into its output row (overwrite or
+/// lane-wise add — exact either way).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn store_row_i32(acc: &[__m256i; 8], crow: &mut [i32], beta_zero: bool) {
+    unsafe {
+        let cp = crow.as_mut_ptr();
+        for (l, accl) in acc.iter().enumerate() {
+            let at = cp.add(l * 8) as *mut __m256i;
+            if beta_zero {
+                _mm256_storeu_si256(at, *accl);
+            } else {
+                let cv = _mm256_loadu_si256(at as *const __m256i);
+                _mm256_storeu_si256(at, _mm256_add_epi32(cv, *accl));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row4_i8_impl(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [i32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        for chunk in 0..4usize {
+            let col = chunk * 16;
+            let mut acc = [_mm256_setzero_si256(); 8]; // [row*2 + half]
+            for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+                let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+                let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+                let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+                let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+                for ik in 0..k {
+                    let base = bo + ik * ldb + col;
+                    let bp = b[base..base + 16].as_ptr();
+                    let b0 = widen8_i8(bp);
+                    let b1 = widen8_i8(bp.add(8));
+                    let v0 = _mm256_set1_epi32(a0[ik] as i32);
+                    acc[0] = _mm256_add_epi32(acc[0], _mm256_mullo_epi32(v0, b0));
+                    acc[1] = _mm256_add_epi32(acc[1], _mm256_mullo_epi32(v0, b1));
+                    let v1 = _mm256_set1_epi32(a1[ik] as i32);
+                    acc[2] = _mm256_add_epi32(acc[2], _mm256_mullo_epi32(v1, b0));
+                    acc[3] = _mm256_add_epi32(acc[3], _mm256_mullo_epi32(v1, b1));
+                    let v2 = _mm256_set1_epi32(a2[ik] as i32);
+                    acc[4] = _mm256_add_epi32(acc[4], _mm256_mullo_epi32(v2, b0));
+                    acc[5] = _mm256_add_epi32(acc[5], _mm256_mullo_epi32(v2, b1));
+                    let v3 = _mm256_set1_epi32(a3[ik] as i32);
+                    acc[6] = _mm256_add_epi32(acc[6], _mm256_mullo_epi32(v3, b0));
+                    acc[7] = _mm256_add_epi32(acc[7], _mm256_mullo_epi32(v3, b1));
+                }
+            }
+            store_chunk4_i32(&acc, c, ldc, row0, col, beta_zero);
+        }
+    }
+}
+
+/// Store one 4-row × 16-column i32 accumulator chunk at column `col`.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn store_chunk4_i32(
+    acc: &[__m256i; 8],
+    c: &mut [i32],
+    ldc: usize,
+    row0: usize,
+    col: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        for r in 0..4usize {
+            let at = (row0 + r) * ldc + col;
+            let cp = c[at..at + 16].as_mut_ptr();
+            for half in 0..2usize {
+                let dst = cp.add(half * 8) as *mut __m256i;
+                let v = acc[r * 2 + half];
+                if beta_zero {
+                    _mm256_storeu_si256(dst, v);
+                } else {
+                    let cv = _mm256_loadu_si256(dst as *const __m256i);
+                    _mm256_storeu_si256(dst, _mm256_add_epi32(cv, v));
+                }
+            }
         }
     }
 }

@@ -30,6 +30,8 @@ pub static SET: MicroKernelSet = MicroKernelSet {
     row4_f32,
     row_bf16,
     row4_bf16,
+    row_i8,
+    row4_i8,
 };
 
 fn row_f32(
@@ -96,6 +98,39 @@ fn row4_bf16(
 ) {
     // SAFETY: this entry is only installed when AVX-512F was detected.
     unsafe { row4_bf16_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
+}
+
+fn row_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [i32],
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX-512F was detected.
+    unsafe { row_i8_impl(a, a_offs, lda, b, b_offs, ldb, row, k, crow, beta_zero) }
+}
+
+fn row4_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [i32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    // SAFETY: this entry is only installed when AVX-512F was detected.
+    unsafe { row4_i8_impl(a, a_offs, lda, b, b_offs, ldb, row0, k, c, ldc, beta_zero) }
 }
 
 /// Widen 16 bf16 lanes to f32 (exact `<< 16`, identical to
@@ -186,6 +221,117 @@ unsafe fn store_row(acc: &[__m512; 4], crow: &mut [f32], beta_zero: bool) {
                 let cv = _mm512_loadu_ps(cp.add(l * 16));
                 _mm512_storeu_ps(cp.add(l * 16), _mm512_add_ps(cv, *accl));
             }
+        }
+    }
+}
+
+/// Widen 16 i8 lanes to i32 (exact sign extension, identical to
+/// `as i32` per lane). `p` must point at 16 readable `i8`s. Same ABI
+/// note as [`widen16_bf16`].
+#[target_feature(enable = "avx512f")]
+#[inline]
+unsafe fn widen16_i8(p: *const i8) -> __m512i {
+    unsafe { _mm512_cvtepi8_epi32(_mm_loadu_si128(p as *const __m128i)) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn row_i8_impl(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [i32],
+    beta_zero: bool,
+) {
+    unsafe {
+        // VNNI-shaped blocking (broadcast A, stream 64-column B panels),
+        // with exact widened i32 multiply-adds in place of `vpdpbusd` —
+        // integer arithmetic is exact, so this is bit-identical to the
+        // scalar and AVX2 levels whatever the lane width.
+        let mut acc = [_mm512_setzero_si512(); 4];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let arow = &a[ao + row * lda..ao + row * lda + k];
+            for (ik, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let av = _mm512_set1_epi32(av as i32);
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let bv = widen16_i8(bp.add(l * 16));
+                    *accl = _mm512_add_epi32(*accl, _mm512_mullo_epi32(av, bv));
+                }
+            }
+        }
+        store_row_i32(&acc, &mut crow[..N64], beta_zero);
+    }
+}
+
+/// Store a 64-column i32 accumulator into its output row.
+#[target_feature(enable = "avx512f")]
+unsafe fn store_row_i32(acc: &[__m512i; 4], crow: &mut [i32], beta_zero: bool) {
+    unsafe {
+        let cp = crow.as_mut_ptr();
+        for (l, accl) in acc.iter().enumerate() {
+            let at = cp.add(l * 16);
+            if beta_zero {
+                _mm512_storeu_epi32(at, *accl);
+            } else {
+                let cv = _mm512_loadu_epi32(at as *const i32);
+                _mm512_storeu_epi32(at, _mm512_add_epi32(cv, *accl));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn row4_i8_impl(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [i32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    unsafe {
+        // Full 4-row × 64-column register block: 16 zmm accumulators.
+        let mut acc = [[_mm512_setzero_si512(); 4]; 4];
+        for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+            let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+            let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+            let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+            let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+            for ik in 0..k {
+                let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+                let bp = brow.as_ptr();
+                let bv = [
+                    widen16_i8(bp),
+                    widen16_i8(bp.add(16)),
+                    widen16_i8(bp.add(32)),
+                    widen16_i8(bp.add(48)),
+                ];
+                for (r, &av) in [a0[ik], a1[ik], a2[ik], a3[ik]].iter().enumerate() {
+                    let av = _mm512_set1_epi32(av as i32);
+                    for l in 0..4 {
+                        acc[r][l] =
+                            _mm512_add_epi32(acc[r][l], _mm512_mullo_epi32(av, bv[l]));
+                    }
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            store_row_i32(
+                accr,
+                &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64],
+                beta_zero,
+            );
         }
     }
 }

@@ -195,6 +195,40 @@ pub type Row4Bf16 = fn(
     beta_zero: bool,
 );
 
+/// One-row `n = 64` int8 kernel (VNNI semantics): i8 operands, exact
+/// widening multiplies, **i32 accumulate**, i32 output row. Integer
+/// arithmetic is exact, so every ISA level is bit-identical regardless
+/// of lane width — the remaining contract is only that nothing
+/// saturates before the i32 accumulator (|i8 × i8| ≤ 16129 fits i16;
+/// the vector paths widen to i32 before any add).
+pub type RowI8 = fn(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [i32],
+    beta_zero: bool,
+);
+
+/// Four-row register-blocked `n = 64` int8 kernel (i32 output).
+pub type Row4I8 = fn(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [i32],
+    ldc: usize,
+    beta_zero: bool,
+);
+
 /// The resolved micro-kernel dispatch table: one function pointer per
 /// inner kernel, selected once (per process via [`active`], or explicitly
 /// via [`MicroKernelSet::for_isa`] for benches and the bit-identity
@@ -210,6 +244,10 @@ pub struct MicroKernelSet {
     pub row_bf16: RowBf16,
     /// bf16 four-row register-blocked n=64 kernel (f32 output).
     pub row4_bf16: Row4Bf16,
+    /// int8 one-row n=64 kernel (i32 output).
+    pub row_i8: RowI8,
+    /// int8 four-row register-blocked n=64 kernel (i32 output).
+    pub row4_i8: Row4I8,
 }
 
 impl MicroKernelSet {
@@ -245,6 +283,8 @@ static SCALAR_SET: MicroKernelSet = MicroKernelSet {
     row4_f32: scalar::row4_n64_f32,
     row_bf16: scalar::row_n64_bf16,
     row4_bf16: scalar::row4_n64_bf16,
+    row_i8: scalar::row_n64_i8,
+    row4_i8: scalar::row4_n64_i8,
 };
 
 /// The table entry for one ISA, `None` when the host or build cannot

@@ -130,6 +130,98 @@ pub fn row_n64_bf16(
     }
 }
 
+/// One-row int8 kernel (VNNI semantics): i8 operands, exact widening
+/// multiplies, i32 accumulation, i32 output row. Every product
+/// `i8 × i8` and every partial sum is exact in i32 (≤ S·C·K terms of
+/// magnitude ≤ 16129 each stay far from overflow for any plannable
+/// shape), so accumulation order cannot change the result — the vector
+/// ISAs are bit-identical to this loop by arithmetic, not by ordering
+/// discipline.
+pub fn row_n64_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row: usize,
+    k: usize,
+    crow: &mut [i32],
+    beta_zero: bool,
+) {
+    let mut acc = [0i32; N64];
+    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+        let arow = &a[ao + row * lda..ao + row * lda + k];
+        for (ik, &av) in arow.iter().enumerate() {
+            let av = av as i32;
+            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+            for j in 0..N64 {
+                acc[j] += av * brow[j] as i32;
+            }
+        }
+    }
+    let crow = &mut crow[..N64];
+    if beta_zero {
+        crow.copy_from_slice(&acc);
+    } else {
+        for j in 0..N64 {
+            crow[j] += acc[j];
+        }
+    }
+}
+
+/// Four-row register-blocked int8 kernel (i32 output).
+pub fn row4_n64_i8(
+    a: &[i8],
+    a_offs: &[usize],
+    lda: usize,
+    b: &[i8],
+    b_offs: &[usize],
+    ldb: usize,
+    row0: usize,
+    k: usize,
+    c: &mut [i32],
+    ldc: usize,
+    beta_zero: bool,
+) {
+    let mut acc0 = [0i32; N64];
+    let mut acc1 = [0i32; N64];
+    let mut acc2 = [0i32; N64];
+    let mut acc3 = [0i32; N64];
+    for (&ao, &bo) in a_offs.iter().zip(b_offs) {
+        let a0 = &a[ao + row0 * lda..ao + row0 * lda + k];
+        let a1 = &a[ao + (row0 + 1) * lda..ao + (row0 + 1) * lda + k];
+        let a2 = &a[ao + (row0 + 2) * lda..ao + (row0 + 2) * lda + k];
+        let a3 = &a[ao + (row0 + 3) * lda..ao + (row0 + 3) * lda + k];
+        for ik in 0..k {
+            let brow = &b[bo + ik * ldb..bo + ik * ldb + N64];
+            let (v0, v1, v2, v3) = (
+                a0[ik] as i32,
+                a1[ik] as i32,
+                a2[ik] as i32,
+                a3[ik] as i32,
+            );
+            for j in 0..N64 {
+                let bj = brow[j] as i32;
+                acc0[j] += v0 * bj;
+                acc1[j] += v1 * bj;
+                acc2[j] += v2 * bj;
+                acc3[j] += v3 * bj;
+            }
+        }
+    }
+    for (r, acc) in [acc0, acc1, acc2, acc3].iter().enumerate() {
+        let crow = &mut c[(row0 + r) * ldc..(row0 + r) * ldc + N64];
+        if beta_zero {
+            crow.copy_from_slice(acc);
+        } else {
+            for j in 0..N64 {
+                crow[j] += acc[j];
+            }
+        }
+    }
+}
+
 /// Four-row register-blocked bf16 kernel (f32 output) — brings the bf16
 /// path's blocking to parity with f32.
 pub fn row4_n64_bf16(

@@ -86,6 +86,7 @@ impl Autotuner {
         let prec = match precision {
             Precision::F32 => "f32",
             Precision::Bf16 => "bf16",
+            Precision::I8 => "i8",
         };
         format!(
             "n{}c{}k{}w{}s{}d{}st{}t{}p{}i{}pt{}",
@@ -140,8 +141,8 @@ impl Autotuner {
 
     /// Pick the kernel for a problem: table hit → memoized winner with
     /// **zero** re-measurement; miss → micro-benchmark every candidate
-    /// once and memoize. `Precision::Bf16` has exactly one candidate (the
-    /// bf16 kernel), so it never measures.
+    /// once and memoize. Reduced precisions (`Bf16`, `I8`) have exactly
+    /// one candidate each, so they never measure.
     pub fn choose(
         &self,
         p: &ConvParams,
@@ -149,12 +150,12 @@ impl Autotuner {
         precision: Precision,
         partition: Partition,
     ) -> &'static dyn ConvKernel {
-        if precision == Precision::Bf16 {
+        if precision != Precision::F32 {
             return kernels()
                 .iter()
                 .copied()
-                .find(|k| k.precision() == Precision::Bf16)
-                .expect("a bf16-precision kernel is registered");
+                .find(|k| k.precision() == precision)
+                .expect("every reduced-precision tier has a registered kernel");
         }
         let key = Self::key(p, threads, precision, partition);
         if let Some(k) = self.hit(&key) {
@@ -251,8 +252,12 @@ impl Autotuner {
     }
 
     /// Merge a persisted table into this one (persisted entries win).
-    /// Returns the number of entries loaded. Unknown kernels are skipped
-    /// — a table written by a newer build must not poison this one.
+    /// Returns the number of entries loaded. Unknown kernels, keys whose
+    /// precision tag this build doesn't recognize, and entries whose
+    /// kernel disagrees with the key's precision tag are all skipped — a
+    /// table written by a newer build (or hand-edited) must not poison
+    /// this one, and must never cause a wrong-precision kernel to be
+    /// served from the cache.
     pub fn load_json(&self, src: &str) -> Result<usize, String> {
         let doc = Json::parse(src).map_err(|e| e.to_string())?;
         match doc.get("version").and_then(Json::as_usize) {
@@ -271,11 +276,29 @@ impl Autotuner {
         let mut table = self.table.lock().unwrap();
         for (key, v) in entries {
             let kernel = match v.get("kernel").and_then(Json::as_str) {
-                Some(name) if lookup_kernel(name).is_some() => name.to_string(),
-                _ => continue,
+                Some(name) => match lookup_kernel(name) {
+                    Some(k) => k,
+                    None => continue,
+                },
+                None => continue,
             };
+            // A key with an unrecognized precision tag can never be
+            // *generated* by this build, so it would sit inert — but an
+            // entry whose kernel disagrees with the key's tag WOULD be
+            // served (e.g. a bf16 kernel answering an f32-keyed lookup).
+            // Skip both classes.
+            match key_precision(key) {
+                Some(prec) if kernel.precision() == prec => {}
+                _ => continue,
+            }
             let micros = v.get("micros").and_then(Json::as_f64).unwrap_or(0.0);
-            table.insert(key.clone(), TuneEntry { kernel, micros });
+            table.insert(
+                key.clone(),
+                TuneEntry {
+                    kernel: kernel.name().to_string(),
+                    micros,
+                },
+            );
             loaded += 1;
         }
         Ok(loaded)
@@ -292,6 +315,21 @@ impl Autotuner {
         let src = std::fs::read_to_string(path.as_ref())
             .map_err(|e| format!("reading tune table {:?}: {e}", path.as_ref()))?;
         self.load_json(&src)
+    }
+}
+
+/// The precision tag embedded in a cache key, if this build recognizes
+/// it. Every other key field is digits, so the `p<tag>i` marker can only
+/// occur at the precision spot — a substring test is exact.
+fn key_precision(key: &str) -> Option<Precision> {
+    if key.contains("pf32i") {
+        Some(Precision::F32)
+    } else if key.contains("pbf16i") {
+        Some(Precision::Bf16)
+    } else if key.contains("pi8i") {
+        Some(Precision::I8)
+    } else {
+        None
     }
 }
 
@@ -407,5 +445,41 @@ mod tests {
         let k = t.choose(&p, 1, Precision::Bf16, Partition::Batch);
         assert_eq!(k.name(), "bf16");
         assert_eq!(t.measurement_count(), 0);
+    }
+
+    #[test]
+    fn i8_precision_short_circuits() {
+        let t = Autotuner::new();
+        let p = ConvParams::new(1, 4, 4, 200, 5, 2).unwrap();
+        let k = t.choose(&p, 1, Precision::I8, Partition::Batch);
+        assert_eq!(k.name(), "i8");
+        assert_eq!(t.measurement_count(), 0);
+    }
+
+    #[test]
+    fn load_skips_unknown_precision_tags_and_mismatched_kernels() {
+        let t = Autotuner::new();
+        let p = ConvParams::new(1, 4, 4, 200, 5, 2).unwrap();
+        let good = Autotuner::key(&p, 1, Precision::F32, Partition::Batch);
+        let quant = Autotuner::key(&p, 1, Precision::I8, Partition::Batch);
+        // A cache written by a *newer* build, keyed under a precision tag
+        // this build has never heard of.
+        let future = good.replace("pf32i", "pfp4i");
+        // A corrupted/hand-edited entry: f32-keyed but naming a bf16
+        // kernel — serving it would silently change the output dtype.
+        let mismatched = Autotuner::key(&p, 2, Precision::F32, Partition::Batch);
+        let src = format!(
+            "{{\"version\": 1, \"entries\": {{\n  \
+             \"{good}\": {{\"kernel\": \"brgemm\", \"micros\": 1.0}},\n  \
+             \"{quant}\": {{\"kernel\": \"i8\", \"micros\": 1.0}},\n  \
+             \"{future}\": {{\"kernel\": \"brgemm\", \"micros\": 1.0}},\n  \
+             \"{mismatched}\": {{\"kernel\": \"bf16\", \"micros\": 1.0}}\n}}}}"
+        );
+        assert_eq!(t.load_json(&src), Ok(2));
+        let e = t.entry(&p, 1, Precision::F32, Partition::Batch).unwrap();
+        assert_eq!(e.kernel, "brgemm");
+        let e = t.entry(&p, 1, Precision::I8, Partition::Batch).unwrap();
+        assert_eq!(e.kernel, "i8");
+        assert!(t.entry(&p, 2, Precision::F32, Partition::Batch).is_none());
     }
 }

@@ -92,6 +92,7 @@ pub fn project(
     let elem = match prec {
         Precision::F32 => 4,
         Precision::Bf16 => 2,
+        Precision::I8 => 1,
     };
     let cores = threads.min(p.n.max(1)).min(spec.cores).max(1);
     let peak = spec.peak_per_core(prec) * cores as f64;

@@ -1,11 +1,14 @@
 //! Machine models of the paper's testbeds (Sec. 4.1) — the hardware
 //! substitution substrate (DESIGN.md §4, substitution 3).
 
-/// Floating-point precision of a kernel run.
+/// Numeric precision of a kernel run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     F32,
     Bf16,
+    /// Int8 per-channel symmetric quantized inference (i32 accumulate,
+    /// f32 dequantized output). Inference-only: gradients stay f32.
+    I8,
 }
 
 /// A CPU-socket (or GPU) performance description.
@@ -98,11 +101,16 @@ impl MachineSpec {
         }
     }
 
-    /// Peak FLOP/s for a precision.
+    /// Peak FLOP/s for a precision. Int8 is modelled as 2× the bf16
+    /// rate — the VNNI dot-product pipeline doubles MACs per cycle over
+    /// the bf16 FMA path on the same hardware generation (and degrades
+    /// to the bf16 rate where neither instruction set exists, since
+    /// `peak_bf16 == peak_f32` on those specs).
     pub fn peak(&self, prec: Precision) -> f64 {
         match prec {
             Precision::F32 => self.peak_f32,
             Precision::Bf16 => self.peak_bf16,
+            Precision::I8 => 2.0 * self.peak_bf16,
         }
     }
 

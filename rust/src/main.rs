@@ -118,14 +118,14 @@ USAGE: dilconv <subcommand> [--flags]
   train            train the AtacWorks-like network on synthetic ATAC-seq
                    [--config cfg.toml] [--epochs N] [--batch N] [--sockets N]
                    [--width N] [--pad N] [--segments N] [--channels N]
-                   [--blocks N] [--backend brgemm|onednn|direct|bf16] [--lr F]
-                   [--threads N] [--seed N] [--checkpoint out.ckpt]
+                   [--blocks N] [--backend brgemm|onednn|direct|bf16|i8]
+                   [--lr F] [--threads N] [--seed N] [--checkpoint out.ckpt]
                    [--autotune] [--tune-cache tune.json]
                    [--partition batch|grid] (grid: split the N x ceil(Q/64)
                    width-block grid, so N=1 still uses every thread)
                    [--post-ops bias_relu|bias_sigmoid|bias]
-                   [--precision f32|bf16] (bf16 = split Adam: fp32 master
-                   weights, bf16 working copies + kernels)
+                   [--precision f32|bf16|i8] (bf16 = split Adam: fp32
+                   master weights, bf16 working copies + kernels)
                    [--overlap] [--bucket-mb F] (bucketed all-reduce fired
                    as each layer's backward completes)
   serve            batched inference serving: dynamic batcher + shape-
@@ -134,8 +134,10 @@ USAGE: dilconv <subcommand> [--flags]
                    [--config cfg.toml] [--checkpoint ckpt]
                    [--buckets 1024,2048,4096] [--max-batch N]
                    [--window-ms F] [--queue N] [--workers N] [--threads N]
-                   [--backend brgemm|onednn|direct|bf16]
-                   [--precision f32|bf16] [--partition batch|grid]
+                   [--backend brgemm|onednn|direct|bf16|i8]
+                   [--precision f32|bf16|i8] (i8 = per-channel symmetric
+                   weights + one-time calibrated activation scales)
+                   [--partition batch|grid]
                    [--autotune] [--cache-capacity N] [--no-warm]
                    [--fuse true|false] net-level fused/arena plan
                    (default on; bits identical either way)
@@ -188,7 +190,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.precision = match p.to_ascii_lowercase().as_str() {
             "f32" | "fp32" => Precision::F32,
             "bf16" | "bfloat16" => Precision::Bf16,
-            other => bail!("unknown precision '{other}' (f32|bf16)"),
+            "i8" | "int8" => Precision::I8,
+            other => bail!("unknown precision '{other}' (f32|bf16|i8)"),
         };
     }
     if let Some(s) = args.get("partition") {

@@ -80,6 +80,14 @@ impl ConvSame {
         self.conv.post_ops = ops;
     }
 
+    /// Set the static activation quantization scale the i8 tier uses for
+    /// this layer's input (calibrated absmax / 127; ignored under
+    /// f32/bf16). Cheap: refreshes the plan's dequant row without a plan
+    /// rebuild.
+    pub fn set_input_scale(&mut self, scale: f32) {
+        self.conv.input_scale = scale;
+    }
+
     /// Route kernel selection through the process-wide autotuner.
     pub fn set_autotune(&mut self, on: bool) {
         self.conv.autotune = on;

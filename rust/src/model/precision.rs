@@ -109,12 +109,17 @@ impl MasterWeights {
                 .iter()
                 .map(|&p| Bf16::from_f32(p).to_f32())
                 .collect(),
+            // Int8 quantization is per-output-channel, which needs each
+            // layer's (K, C, S) geometry — the flat vector has none. The
+            // working copy stays f32; each plan quantizes its own weight
+            // relayout in `derive_layouts` (conv1d/plan.rs).
+            Precision::I8 => params.to_vec(),
         }
     }
 
     fn refresh(&mut self) {
         match self.precision {
-            Precision::F32 => self.working.copy_from_slice(&self.master),
+            Precision::F32 | Precision::I8 => self.working.copy_from_slice(&self.master),
             Precision::Bf16 => {
                 for (w, &m) in self.working.iter_mut().zip(&self.master) {
                     *w = Bf16::from_f32(m).to_f32();

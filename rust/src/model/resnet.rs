@@ -216,6 +216,50 @@ impl AtacWorksNet {
         }
     }
 
+    /// Set the per-layer static activation quantization scales the i8
+    /// tier consumes, in packing order — one per conv layer, as returned
+    /// by [`Self::calibrate_input_scales`]. Ignored under f32/bf16.
+    pub fn set_input_scales(&mut self, scales: &[f32]) {
+        assert_eq!(
+            scales.len(),
+            self.convs.len(),
+            "one input scale per conv layer"
+        );
+        for (c, &s) in self.convs.iter_mut().zip(scales) {
+            c.set_input_scale(s);
+        }
+    }
+
+    /// Activation calibration for the i8 tier: run one f32 eval forward
+    /// over a warm-up batch and record, per conv layer in packing order,
+    /// the quantization scale (`absmax / 127`) of the tensor that layer
+    /// consumes. Call this on an **f32-precision** net (the serving
+    /// engine calibrates on a temporary f32 net before switching the
+    /// production net to i8); the scales are static afterwards, so every
+    /// later request — any batch size, bucket, or streamed window — sees
+    /// identical quantization and the bit-identity matrices hold.
+    pub fn calibrate_input_scales(&mut self, x: &Tensor) -> Vec<f32> {
+        use crate::conv1d::quant::{absmax, scale_from_absmax};
+        assert_eq!(x.c, 1, "input must be single-channel");
+        let nb = self.cfg.n_blocks;
+        let mut scales = vec![1.0f32; self.cfg.n_conv_layers()];
+        scales[0] = scale_from_absmax(absmax(&x.data));
+        let mut h = self.convs[0].forward_fused(x, None, false);
+        for b in 0..nb {
+            let c1 = 1 + 2 * b;
+            let c2 = c1 + 1;
+            scales[c1] = scale_from_absmax(absmax(&h.data));
+            let r = self.convs[c1].forward_fused(&h, None, false);
+            scales[c2] = scale_from_absmax(absmax(&r.data));
+            h = self.convs[c2].forward_fused(&r, Some(&h), false);
+        }
+        // Both heads consume the same body output.
+        let sh = scale_from_absmax(absmax(&h.data));
+        scales[1 + 2 * nb] = sh;
+        scales[2 + 2 * nb] = sh;
+        scales
+    }
+
     /// Route every layer's kernel selection through the process-wide
     /// autotuner.
     pub fn set_autotune(&mut self, on: bool) {
@@ -784,6 +828,35 @@ mod tests {
             &den_want.data[..],
             "without masking the bucket width would leak into the output"
         );
+    }
+
+    #[test]
+    fn i8_calibration_tracks_f32_within_budget() {
+        // Calibrate on an f32 net, switch to the i8 tier, and check the
+        // quantized forward stays within the multi-layer error budget
+        // (per layer |Δ| ≲ C·S·(Ax·s_w/2 + Aw·s_x/2), compounding
+        // through the 4-conv tiny topology).
+        let cfg = NetConfig::tiny();
+        let mut net = AtacWorksNet::init(cfg, 17);
+        net.set_netplan(false);
+        let (x, _, _) = batch(&cfg, 2, 80, 18);
+        let (den_f32, _, _) = net.forward(&x, false);
+        let scales = net.calibrate_input_scales(&x);
+        assert_eq!(scales.len(), cfg.n_conv_layers());
+        assert!(scales.iter().all(|s| s.is_finite() && *s > 0.0));
+        net.set_precision(crate::machine::Precision::I8);
+        net.set_input_scales(&scales);
+        let (den_i8, _, _) = net.forward(&x, false);
+        assert_ne!(den_i8.data, den_f32.data, "i8 tier did not engage");
+        let err: f32 = den_i8
+            .data
+            .iter()
+            .zip(&den_f32.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let mag: f32 = den_f32.data.iter().map(|v| v * v).sum();
+        let rel = err.sqrt() / mag.sqrt().max(1.0);
+        assert!(rel < 0.25, "i8 relative L2 error {rel} exceeds budget");
     }
 
     #[test]

@@ -123,16 +123,40 @@ pub struct InferenceEngine {
     /// Reusable request-index scratch for [`Self::infer_batch`] grouping
     /// (no per-call BTreeMap/Vec churn on the steady-state path).
     group_scratch: Vec<usize>,
+    /// Per-layer activation quantization scales for i8 serving,
+    /// calibrated **once** at engine construction (`None` under
+    /// f32/bf16). Static by design: were scales per-batch or
+    /// per-bucket, the same request would quantize differently
+    /// depending on its neighbours and the bit-identity contract
+    /// above would break.
+    calib_scales: Option<Vec<f32>>,
+}
+
+/// One-time activation calibration for i8 serving: run a deterministic
+/// synthetic warm-up batch (fixed seed, fixed shape — independent of
+/// the engine's buckets) through a temporary **f32** net and record
+/// each conv layer's input absmax scale
+/// ([`AtacWorksNet::calibrate_input_scales`]).
+fn calibrate_scales(net_cfg: NetConfig, params: &[f32]) -> Vec<f32> {
+    let mut net = AtacWorksNet::zeros(net_cfg);
+    net.unpack_params(params);
+    net.set_netplan(false);
+    let (n, w) = (2usize, 256usize);
+    let mut rng = crate::util::rng::Rng::new(0xCA11B);
+    let data: Vec<f32> = (0..n * w).map(|_| rng.poisson(1.0) as f32).collect();
+    net.calibrate_input_scales(&Tensor::from_vec(data, n, 1, w))
 }
 
 /// Build one bucket entry: replica + pinned, warmed, forward-only plans.
 /// The replica starts from [`AtacWorksNet::zeros`] — `unpack_params`
 /// overwrites every value, so the He-init RNG fill `init` would pay is
-/// skipped.
+/// skipped. Under i8 serving the engine's one-time calibration scales
+/// are applied to every replica, so all buckets quantize identically.
 fn build_entry(
     net_cfg: NetConfig,
     working: &[f32],
     opts: &EngineOpts,
+    calib: Option<&[f32]>,
     bucket: usize,
 ) -> Result<BucketEntry, ServeError> {
     let mut net = AtacWorksNet::zeros(net_cfg);
@@ -140,6 +164,9 @@ fn build_entry(
     net.set_backend(opts.backend, opts.threads);
     net.set_partition(opts.partition);
     net.set_precision(opts.precision);
+    if let Some(scales) = calib {
+        net.set_input_scales(scales);
+    }
     net.set_autotune(opts.autotune);
     net.set_inference(true);
     net.set_fuse(opts.fuse);
@@ -179,6 +206,11 @@ impl InferenceEngine {
                 "plan cache capacity must be at least 1".into(),
             ));
         }
+        // i8 serving calibrates activation scales once, here, on the f32
+        // parameters — every bucket replica then shares the same static
+        // quantization (see `calib_scales`).
+        let calib_scales = (opts.precision == Precision::I8)
+            .then(|| calibrate_scales(net_cfg, params));
         Ok(InferenceEngine {
             net_cfg,
             working: MasterWeights::working_copy(params, opts.precision),
@@ -186,6 +218,7 @@ impl InferenceEngine {
             opts,
             warm_skipped: 0,
             group_scratch: Vec::new(),
+            calib_scales,
         })
     }
 
@@ -216,8 +249,9 @@ impl InferenceEngine {
         for bi in skip..n {
             let b = self.opts.buckets.widths()[bi];
             let (cfg, working, opts) = (self.net_cfg, &self.working, &self.opts);
+            let calib = self.calib_scales.as_deref();
             self.cache
-                .try_get_or_insert_with(b, || build_entry(cfg, working, opts, b))?;
+                .try_get_or_insert_with(b, || build_entry(cfg, working, opts, calib, b))?;
         }
         Ok(())
     }
@@ -357,9 +391,10 @@ impl InferenceEngine {
     ) -> Result<(), ServeError> {
         debug_assert!(chunk.len() <= self.opts.max_batch);
         let (cfg, working, opts) = (self.net_cfg, &self.working, &self.opts);
+        let calib = self.calib_scales.as_deref();
         let entry = self
             .cache
-            .try_get_or_insert_with(bucket, || build_entry(cfg, working, opts, bucket))?;
+            .try_get_or_insert_with(bucket, || build_entry(cfg, working, opts, calib, bucket))?;
         // Zero-pad the staging tensor: row r carries request chunk[r],
         // rows beyond the chunk stay zero (their outputs are discarded).
         entry.x.data.fill(0.0);
@@ -506,6 +541,32 @@ mod tests {
             "request wider than the pinned bucket"
         );
         assert!(e.infer_one_pinned(&[], 128).is_err());
+    }
+
+    #[test]
+    fn i8_engine_batched_matches_single_and_engages_the_tier() {
+        let mut batched = tiny_engine(EngineOpts {
+            precision: Precision::I8,
+            ..tiny_opts()
+        });
+        let mut single = tiny_engine(EngineOpts {
+            precision: Precision::I8,
+            max_batch: 1,
+            ..tiny_opts()
+        });
+        let reqs = [track(90, 70), track(128, 71)];
+        let got = batched.infer_batch(&[&reqs[0], &reqs[1]]).expect("batched");
+        // Both engines calibrate from the same params on the same fixed
+        // synthetic batch, so batched rows are bit-identical to
+        // one-at-a-time serving under i8 exactly as under f32.
+        for (g, r) in got.iter().zip(&reqs) {
+            let alone = single.infer_one(r).expect("single");
+            assert_eq!(g, &alone, "i8 batched row must be bit-identical");
+        }
+        // And the tier actually engaged: i8 output differs from f32.
+        let mut f32e = tiny_engine(tiny_opts());
+        let f = f32e.infer_one(&reqs[0]).expect("f32");
+        assert_ne!(got[0].denoised, f.denoised, "i8 tier did not engage");
     }
 
     #[test]

@@ -85,6 +85,56 @@ fn persisted_entry_overrides_measurement_even_for_a_slow_kernel() {
 }
 
 #[test]
+fn unknown_precision_tags_are_skipped_not_fatal() {
+    // Forward compat: a cache persisted by a FUTURE build with a
+    // precision tier this binary doesn't know (`pfp4i...`) must be
+    // skipped entry-by-entry — load succeeds, known entries survive.
+    let tuner = Autotuner::new();
+    let p = shape();
+    tuner.choose(&p, 1, Precision::F32, Partition::Batch);
+    let f32_key = Autotuner::key(&p, 1, Precision::F32, Partition::Batch);
+    let i8_key = Autotuner::key(&p, 1, Precision::I8, Partition::Batch);
+    let future_key = f32_key.replace("pf32i", "pfp4i");
+    assert_ne!(future_key, f32_key, "key must carry a precision tag");
+    let json = format!(
+        "{{\"version\": 1, \"entries\": {{\
+         \"{f32_key}\": {{\"kernel\": \"brgemm\", \"micros\": 1.0}}, \
+         \"{i8_key}\": {{\"kernel\": \"i8\", \"micros\": 1.0}}, \
+         \"{future_key}\": {{\"kernel\": \"fp4\", \"micros\": 1.0}}}}}}"
+    );
+    let fresh = Autotuner::new();
+    // Two entries load (f32 + i8); the future-precision one is dropped.
+    assert_eq!(fresh.load_json(&json).unwrap(), 2);
+    assert_eq!(fresh.choose(&p, 1, Precision::F32, Partition::Batch).name(), "brgemm");
+    assert_eq!(fresh.choose(&p, 1, Precision::I8, Partition::Batch).name(), "i8");
+    assert_eq!(fresh.measurement_count(), 0);
+
+    // A tampered table that maps an f32 key to a reduced-precision
+    // kernel is also skipped: entries must be self-consistent.
+    let crossed = format!(
+        "{{\"version\": 1, \"entries\": {{\"{f32_key}\": {{\"kernel\": \"i8\", \"micros\": 1.0}}}}}}"
+    );
+    let t2 = Autotuner::new();
+    assert_eq!(t2.load_json(&crossed).unwrap(), 0);
+}
+
+#[test]
+fn i8_precision_short_circuits_to_the_i8_kernel() {
+    // Like bf16: exactly one i8 candidate exists, so choose() never
+    // spends a measurement on it.
+    let tuner = Autotuner::new();
+    let k = tuner.choose(&shape(), 1, Precision::I8, Partition::Batch);
+    assert_eq!(k.name(), "i8");
+    assert_eq!(tuner.measurement_count(), 0);
+    // And the plan front door agrees.
+    let p = shape();
+    let wt = rnd(p.k * p.c * p.s, 14);
+    let plan = ConvPlan::tuned(p, Precision::I8, 1, Partition::Batch, wt).unwrap();
+    assert_eq!(plan.kernel_name(), "i8");
+    assert_eq!(plan.precision(), Precision::I8);
+}
+
+#[test]
 fn file_round_trip_and_plan_integration() {
     let tuner = Autotuner::new();
     let p = shape();

@@ -7,10 +7,23 @@
 //! reporting on failure.
 //!
 //! Tolerances are the acceptance bounds: 1e-4 max abs error for f32
-//! kernels, 2e-2 for the bf16 kernel.
+//! kernels, 2e-2 for the bf16 kernel, and a **shape-derived budget** for
+//! the int8 kernel — per-product quantization error is at most
+//! `Ax·s_w/2 + Aw·s_x/2` (with `s = absmax/127`), summed over the `C·S`
+//! taps of one output, with 2× headroom. The i8 tier runs the same shape
+//! grid and the same fused post-op combos as the f32/bf16 tiers.
 
+use dilconv1d::conv1d::quant::{absmax, scale_from_absmax};
 use dilconv1d::conv1d::test_util::rnd;
 use dilconv1d::conv1d::{kernels, Activation, ConvParams, ConvPlan, PostOps};
+
+/// The int8 acceptance budget for one output element at shape `p`:
+/// inputs are `rnd()` (|x| ≤ 0.5), weights are `rnd() × 0.25`
+/// (|w| ≤ 0.125), so each of the `C·S` products carries at most
+/// `Ax·s_w/2 + Aw·s_x/2 = Ax·Aw/127` of rounding error. 2× headroom.
+fn i8_budget(p: &ConvParams) -> f64 {
+    (p.c * p.s) as f64 * (0.5 * 0.125 / 127.0) * 2.0
+}
 
 /// Scalar f64 reference of the raw convolution (valid, strided):
 /// `out[n,k,j] = Σ_c Σ_s x[n,c,j·stride + s·d] · w[k,c,s]`.
@@ -147,13 +160,22 @@ fn run_forward_case(p: &ConvParams, cases: &mut usize) {
         let mut plan = ConvPlan::with_kernel(*p, *kernel, 1, wt.clone())
             .unwrap_or_else(|e| panic!("{p} {}: {e}", kernel.name()));
         plan.set_bias(&bias);
+        if kernel.name() == "i8" {
+            // Calibrate the activation scale: the default (1.0) would
+            // quantize the rnd() inputs (|x| < 0.5) to all zeros.
+            plan.set_input_scale(scale_from_absmax(absmax(&x)));
+        }
         let mut out = vec![0.0f32; p.n * p.k * p.q()];
         for ops in post_combos() {
             plan.set_post_ops(ops);
             let residual = if ops.residual { Some(&res[..]) } else { None };
             plan.execute_forward_post_into(&x, residual, &mut out);
             let want = reference_post(&conv_ref, &ops, &bias, residual, p.n, p.k, p.q());
-            let tol = if kernel.name() == "bf16" { 2e-2 } else { 1e-4 };
+            let tol = match kernel.name() {
+                "bf16" => 2e-2,
+                "i8" => i8_budget(p),
+                _ => 1e-4,
+            };
             let case = format!("{p} kernel={} post={}", kernel.name(), ops);
             assert_close(&case, &out, &want, tol);
             *cases += 1;
@@ -233,6 +255,9 @@ fn fused_backward_matrix_subgrid() {
                         .unwrap()
                         .with_post_ops(ops);
                     plan.set_bias(&bias);
+                    if kernel.name() == "i8" {
+                        plan.set_input_scale(scale_from_absmax(absmax(&x)));
+                    }
                     let residual = if ops.residual { Some(&res[..]) } else { None };
                     let mut y = vec![0.0f32; p.n * p.k * p.q()];
                     plan.execute_forward_post_into(&x, residual, &mut y);

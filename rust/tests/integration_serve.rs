@@ -6,8 +6,11 @@
 //! the same FMA reduction in the same order per image, for any batch
 //! size and either work partition — so this is an `assert_eq!` on f32
 //! vectors, not a tolerance. The matrix here covers ≥3 width buckets ×
-//! {f32, bf16} × {batch, grid}, at the engine level and end-to-end
+//! {f32, bf16, i8} × {batch, grid}, at the engine level and end-to-end
 //! through the server (dispatcher + worker pool + admission control).
+//! The i8 column holds because activation scales are calibrated ONCE at
+//! engine construction (never per batch), so batching cannot perturb
+//! quantization.
 
 use std::time::Duration;
 
@@ -55,7 +58,7 @@ fn request_widths() -> Vec<usize> {
 #[test]
 fn batched_serving_is_bit_identical_to_sequential_across_the_matrix() {
     let p = params();
-    for precision in [Precision::F32, Precision::Bf16] {
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
         for partition in [Partition::Batch, Partition::Grid] {
             let mut batched =
                 InferenceEngine::new(net_cfg(), &p, opts(4, precision, partition))
@@ -98,7 +101,7 @@ fn grid_and_batch_partitions_serve_identical_bits() {
     // same engine config under batch vs grid partitioning returns
     // identical responses.
     let p = params();
-    for precision in [Precision::F32, Precision::Bf16] {
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
         let mut a = InferenceEngine::new(net_cfg(), &p, opts(4, precision, Partition::Batch))
             .expect("batch engine");
         let mut b = InferenceEngine::new(net_cfg(), &p, opts(4, precision, Partition::Grid))
@@ -118,7 +121,7 @@ fn serving_is_bucket_invariant_and_matches_native_width_evaluation() {
     // identical bits, and both equal evaluating the model directly at
     // the request's native width (no serving stack at all).
     let p = params();
-    for precision in [Precision::F32, Precision::Bf16] {
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
         let mut coarse = InferenceEngine::new(
             net_cfg(),
             &p,
@@ -143,7 +146,14 @@ fn serving_is_bucket_invariant_and_matches_native_width_evaluation() {
         assert_eq!(a, b, "{precision:?}: the bucket must never change the answer");
         // Native-width reference: the bare model, no serving stack. It
         // loads the same working copy the engines serve (bf16 rounds
-        // biases too, which the f32 epilogue consumes directly).
+        // biases too, which the f32 epilogue consumes directly). The i8
+        // tier is excluded here only because its activation scales come
+        // from the engine's one-time calibration pass, which the bare
+        // model does not perform; engine-vs-engine identity above is the
+        // i8 guarantee.
+        if precision == Precision::I8 {
+            continue;
+        }
         let mut net = AtacWorksNet::init(net_cfg(), 0);
         net.unpack_params(&MasterWeights::working_copy(&p, precision));
         net.set_precision(precision);
@@ -157,7 +167,7 @@ fn serving_is_bucket_invariant_and_matches_native_width_evaluation() {
 #[test]
 fn server_end_to_end_matches_the_sequential_reference() {
     let p = params();
-    for precision in [Precision::F32, Precision::Bf16] {
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
         for partition in [Partition::Batch, Partition::Grid] {
             let server = Server::start(
                 net_cfg(),
@@ -302,4 +312,37 @@ fn bf16_serving_actually_rounds_and_differs_from_f32() {
     for (x, y) in a.denoised.iter().zip(&b.denoised) {
         assert!((x - y).abs() < 4e-2 * (1.0 + x.abs()), "{x} vs {y}");
     }
+}
+
+#[test]
+fn i8_serving_engages_the_quantized_tier_and_tracks_f32() {
+    // Same guard for the int8 tier: it must not be f32 in disguise, and
+    // the quantization error through the whole net stays small in a
+    // relative-L2 sense (per-element budgets compound across layers, so
+    // an aggregate norm is the right lock here).
+    let p = params();
+    let mut f32e = InferenceEngine::new(
+        net_cfg(),
+        &p,
+        opts(1, Precision::F32, Partition::Batch),
+    )
+    .expect("f32 engine");
+    let mut i8e = InferenceEngine::new(
+        net_cfg(),
+        &p,
+        opts(1, Precision::I8, Partition::Batch),
+    )
+    .expect("i8 engine");
+    let r = track(200, 7);
+    let a = f32e.infer_one(&r).expect("f32");
+    let b = i8e.infer_one(&r).expect("i8");
+    assert_ne!(a.denoised, b.denoised, "i8 path must not be f32 in disguise");
+    let (mut err, mut norm) = (0.0f64, 0.0f64);
+    for (x, y) in a.denoised.iter().zip(&b.denoised) {
+        err += ((x - y) as f64).powi(2);
+        norm += (*x as f64).powi(2);
+    }
+    assert!(norm > 0.0, "degenerate reference output");
+    let rel = (err / norm).sqrt();
+    assert!(rel < 0.25, "i8 drifted too far from f32: rel L2 = {rel}");
 }

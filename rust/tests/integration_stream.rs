@@ -4,9 +4,11 @@
 //! windows that overlap by the receptive-field reach must produce
 //! exactly the bits that evaluating the whole sequence in one pass
 //! produces. The matrix here covers signals ≥ 4 windows long ×
-//! {f32, bf16} × {batch, grid} × two dilation schedules, compared as
+//! {f32, bf16, i8} × {batch, grid} × two dilation schedules, compared as
 //! `f32::to_bits` vectors (no tolerance anywhere), plus the streaming
-//! route end-to-end through the server.
+//! route end-to-end through the server. The i8 column holds because
+//! activation scales are fixed at engine construction, so a halo window
+//! quantizes exactly like the whole sequence.
 
 use std::time::Duration;
 
@@ -68,7 +70,7 @@ fn streaming_is_bit_identical_to_whole_sequence_evaluation() {
             "{name}: window {WINDOW} must fit two halos ({reach})"
         );
         let params = AtacWorksNet::init(cfg, 42).pack_params();
-        for precision in [Precision::F32, Precision::Bf16] {
+        for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
             for partition in [Partition::Batch, Partition::Grid] {
                 for (i, &len) in lens.iter().enumerate() {
                     let signal = track(len, 1000 + i as u64);

@@ -1,0 +1,164 @@
+//! Property tests of the int8 quantization tier (DESIGN.md §5d).
+//!
+//! Offline build, no proptest: properties are checked over many
+//! deterministically-random cases from a seeded PRNG, like
+//! `prop_conv.rs`. The four locked invariants:
+//!
+//! * round-trip: `|v − scale·quantize(v)| ≤ scale/2` for unsaturated `v`
+//! * saturation: the clamp lands exactly on ±127, never wraps
+//! * all-zero channels get the unit-scale guard (no 0/0 in dequant)
+//! * i8 plan outputs are **bit-identical** across `Partition::{Batch,
+//!   Grid}` and thread counts — exact i32 accumulation makes the
+//!   reduction order irrelevant, so this holds by construction.
+
+use dilconv1d::conv1d::quant::{absmax, channel_scales_kcs, quantize, scale_from_absmax};
+use dilconv1d::conv1d::test_util::rnd;
+use dilconv1d::conv1d::{ConvParams, ConvPlan, Partition, PostOps};
+use dilconv1d::util::rng::Rng;
+
+#[test]
+fn prop_round_trip_error_at_most_half_scale() {
+    let mut rng = Rng::new(0x18);
+    for case in 0..200u64 {
+        let scale = 1e-3 + rng.below(1000) as f32 * 1e-3;
+        // Any value inside the representable range round-trips to
+        // within half a quantization step.
+        let v = (rnd(1, case)[0] * 2.0) * scale * 127.0;
+        let q = quantize(v, scale);
+        assert!((-127..=127).contains(&(q as i32)), "case {case}: q={q}");
+        if v.abs() <= scale * 127.0 {
+            let back = scale * q as f32;
+            assert!(
+                (v - back).abs() <= scale / 2.0 + 1e-6,
+                "case {case}: v={v} scale={scale} back={back}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_clamp_saturates_at_plus_minus_127() {
+    for v in [1e6f32, 300.0, 127.6] {
+        assert_eq!(quantize(v, 1.0), 127);
+        assert_eq!(quantize(-v, 1.0), -127);
+    }
+    // The i8 value -128 is never produced: symmetric range only.
+    assert_eq!(quantize(f32::MAX, 1e-3), 127);
+    assert_eq!(quantize(-f32::MAX, 1e-3), -127);
+}
+
+#[test]
+fn prop_all_zero_channel_gets_the_unit_scale_guard() {
+    let mut rng = Rng::new(0x19);
+    for case in 0..30u64 {
+        let k = 1 + rng.below(8);
+        let c = 1 + rng.below(6);
+        let s = 1 + rng.below(9);
+        let mut w = rnd(k * c * s, case);
+        // Zero out a random output channel's whole K-row.
+        let dead = rng.below(k);
+        w[dead * c * s..(dead + 1) * c * s].fill(0.0);
+        let scales = channel_scales_kcs(&w, k, c, s);
+        assert_eq!(scales.len(), k);
+        for (ik, &sc) in scales.iter().enumerate() {
+            assert!(sc.is_finite() && sc > 0.0, "case {case}: scale[{ik}]={sc}");
+            if ik == dead {
+                assert_eq!(sc, 1.0, "case {case}: dead channel must guard to 1.0");
+            } else {
+                let row_absmax = absmax(&w[ik * c * s..(ik + 1) * c * s]);
+                assert_eq!(sc, scale_from_absmax(row_absmax), "case {case}");
+            }
+        }
+    }
+}
+
+/// Draw a random valid conv problem (small enough for many cases).
+fn arb_problem(rng: &mut Rng) -> ConvParams {
+    loop {
+        let n = 1 + rng.below(3);
+        let c = 1 + rng.below(12);
+        let k = 1 + rng.below(12);
+        let s = 1 + rng.below(9);
+        let d = 1 + rng.below(6);
+        let q = 1 + rng.below(200);
+        if let Some(p) = ConvParams::new(n, c, k, q + (s - 1) * d, s, d) {
+            return p;
+        }
+    }
+}
+
+#[test]
+fn prop_i8_bit_identical_across_partitions_and_threads() {
+    // The i32 accumulator is exact, so no (partition, threads) split can
+    // change a single bit of the dequantized output — including through
+    // the fused bias+relu epilogue.
+    let mut rng = Rng::new(0x1A);
+    for case in 0..12u64 {
+        let p = arb_problem(&mut rng);
+        let wt = rnd(p.k * p.c * p.s, 2000 + case);
+        let x = rnd(p.n * p.c * p.w, 2100 + case);
+        let bias = rnd(p.k, 2200 + case);
+        let sx = scale_from_absmax(absmax(&x));
+        let mut want: Option<Vec<f32>> = None;
+        for partition in [Partition::Batch, Partition::Grid] {
+            for threads in [1usize, 2, 5] {
+                let mut plan = ConvPlan::by_name(p, "i8", threads, wt.clone())
+                    .unwrap()
+                    .with_partition(partition)
+                    .with_post_ops(PostOps::bias_relu());
+                plan.set_bias(&bias);
+                plan.set_input_scale(sx);
+                let mut out = vec![0.0f32; p.n * p.k * p.q()];
+                plan.execute_forward_post_into(&x, None, &mut out);
+                match &want {
+                    None => {
+                        assert!(
+                            out.iter().any(|&v| v != 0.0),
+                            "case {case}: i8 output must not be trivially zero"
+                        );
+                        want = Some(out);
+                    }
+                    Some(w) => {
+                        let same = out.iter().zip(w).all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(
+                            same,
+                            "case {case} {p}: {partition:?} t={threads} diverges bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_i8_plan_is_deterministic_and_tracks_f32() {
+    // Twin of the bf16 property: repeated executions are bit-stable, and
+    // the dequantized result stays within the derived error budget of
+    // the f32 BRGEMM output (per-tap error ≤ Ax·s_w/2 + Aw·s_x/2).
+    let mut rng = Rng::new(0x1B);
+    for case in 0..10u64 {
+        let p = arb_problem(&mut rng);
+        let wt = rnd(p.k * p.c * p.s, 3000 + case);
+        let x = rnd(p.n * p.c * p.w, 3100 + case);
+        let sx = scale_from_absmax(absmax(&x));
+        let mut plan = ConvPlan::by_name(p, "i8", 1, wt.clone()).unwrap();
+        plan.set_input_scale(sx);
+        let mut o1 = vec![0.0f32; p.n * p.k * p.q()];
+        let mut o2 = vec![0.0f32; p.n * p.k * p.q()];
+        plan.execute_forward_into(&x, &mut o1);
+        plan.execute_forward_into(&x, &mut o2);
+        assert_eq!(o1, o2, "case {case}: i8 plan must be deterministic");
+        let mut f32_out = vec![0.0f32; p.n * p.k * p.q()];
+        ConvPlan::by_name(p, "brgemm", 1, wt).unwrap().execute_forward_into(&x, &mut f32_out);
+        // rnd() bounds: |x| ≤ 0.5, |w| ≤ 0.5 → per-tap ≤ 0.5·0.5/127,
+        // summed over C·S taps, 2× headroom.
+        let budget = (p.c * p.s) as f32 * (0.25 / 127.0) * 2.0;
+        for (i, (a, b)) in o1.iter().zip(&f32_out).enumerate() {
+            assert!(
+                (a - b).abs() <= budget,
+                "case {case} {p} idx {i}: i8 {a} vs f32 {b} (budget {budget})"
+            );
+        }
+    }
+}

@@ -3,9 +3,10 @@
 //! * Every available micro-kernel ISA (scalar / AVX2+FMA / AVX-512F) must
 //!   produce **bit-identical** BRGEMM outputs — across the n = 64 fast
 //!   path, remainder widths (n < 64), odd k, row-4 tails (m % 4 ≠ 0),
-//!   empty batch reductions and both β values. The kernels all issue the
-//!   same fused multiply-add per element in the same order; this suite is
-//!   what keeps that true.
+//!   empty batch reductions and both β values. The f32/bf16 kernels all
+//!   issue the same fused multiply-add per element in the same order, and
+//!   the int8 kernels accumulate exactly in i32; this suite is what keeps
+//!   that true.
 //! * Grid (2D batch × width-block) partitioning must be bit-exact against
 //!   batch partitioning through the full plan API, mirroring
 //!   `multithreaded_equals_single`.
@@ -13,7 +14,8 @@
 //!   recorded under one ISA are never served under another.
 
 use dilconv1d::conv1d::bf16::to_bf16;
-use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32_with};
+use dilconv1d::conv1d::brgemm::{brgemm_bf16_with, brgemm_f32_with, brgemm_i8_with};
+use dilconv1d::conv1d::quant::{absmax, scale_from_absmax};
 use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
 use dilconv1d::conv1d::{Autotuner, ConvParams, ConvPlan, Partition, PostOps};
@@ -58,6 +60,22 @@ fn run_bf16(
     let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
     let mut c = rnd(m * n, 0xF0 + k as u64);
     brgemm_bf16_with(set, &a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, beta_zero);
+    c
+}
+
+fn run_i8(
+    set: &MicroKernelSet,
+    (m, n, k, lbr): (usize, usize, usize, usize),
+    beta_zero: bool,
+) -> Vec<i32> {
+    // rnd() is in [-0.5, 0.5): ×254 spans the full i8 range.
+    let q = |v: Vec<f32>| -> Vec<i8> { v.iter().map(|x| (x * 254.0).round() as i8).collect() };
+    let a = q(rnd(lbr.max(1) * m * k, 0x10 + m as u64));
+    let b = q(rnd(lbr.max(1) * k * n, 0x20 + n as u64));
+    let a_offs: Vec<usize> = (0..lbr).map(|i| i * m * k).collect();
+    let b_offs: Vec<usize> = (0..lbr).map(|i| i * k * n).collect();
+    let mut c: Vec<i32> = (0..m * n).map(|i| i as i32 % 13 - 6).collect();
+    brgemm_i8_with(set, &a, &a_offs, k, &b, &b_offs, n, &mut c, n, m, n, k, beta_zero);
     c
 }
 
@@ -114,6 +132,29 @@ fn bf16_kernels_bit_identical_across_isas() {
 }
 
 #[test]
+fn i8_kernels_bit_identical_across_isas() {
+    // Int8 accumulates exactly in i32, so every ISA level must agree not
+    // just bit-for-bit but *by construction* — any difference is a bug in
+    // a widened-multiply lane path.
+    let scalar = MicroKernelSet::for_isa(Isa::Scalar);
+    let vectors = available_vector_isas();
+    for &shape in SHAPES {
+        for beta_zero in [true, false] {
+            let want = run_i8(scalar, shape, beta_zero);
+            for set in &vectors {
+                let got = run_i8(set, shape, beta_zero);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} vs scalar at {shape:?} beta_zero={beta_zero}",
+                    set.isa()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn dispatched_process_set_matches_scalar_bit_exact() {
     // Whatever `active()` resolved to (env override or detection), the
     // production entry points must agree with the scalar floor.
@@ -134,19 +175,25 @@ fn grid_partition_plan_bit_exact_vs_batch() {
     // every kernel that supports the grid, N ∈ {1, 3}, ragged Q, fused
     // post-ops included. Forward and backward-data are bit-exact;
     // backward-weight (re-associated reduction) agrees to tolerance.
-    for name in ["brgemm", "bf16"] {
+    for name in ["brgemm", "bf16", "i8"] {
         for &(n, threads) in &[(1usize, 8usize), (3, 4)] {
             let p = ConvParams::new(n, 5, 7, 500, 9, 4).unwrap(); // Q % 64 != 0
             let wt = rnd(p.k * p.c * p.s, 1);
             let x = rnd(p.n * p.c * p.w, 2);
             let bias = rnd(p.k, 3);
             let gout = rnd(p.n * p.k * p.q(), 4);
+            let sx = scale_from_absmax(absmax(&x));
             let build = |partition| {
                 let mut plan = ConvPlan::by_name(p, name, threads, wt.clone())
                     .unwrap()
                     .with_partition(partition)
                     .with_post_ops(PostOps::bias_relu());
                 plan.set_bias(&bias);
+                if name == "i8" {
+                    // Without a calibrated activation scale the default
+                    // (1.0) would quantize rnd() inputs to all zeros.
+                    plan.set_input_scale(sx);
+                }
                 plan
             };
             let mut batch = build(Partition::Batch);
