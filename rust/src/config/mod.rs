@@ -7,7 +7,7 @@ pub mod toml;
 use crate::conv1d::{Backend, Partition, PostOps};
 use crate::machine::Precision;
 use crate::model::NetConfig;
-use crate::serve::{round_up_to_block, BatcherOpts, BucketSet, EngineOpts};
+use crate::serve::{round_up_to_block, BatcherOpts, BucketSet, EngineOpts, NetOpts};
 
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -311,6 +311,19 @@ pub struct ServeConfig {
     /// Network drain budget at shutdown, milliseconds: connections
     /// still serving after this long are force-closed.
     pub drain_ms: f64,
+    /// Default per-request deadline, milliseconds: a request still
+    /// queued when its deadline passes is shed with a
+    /// `DEADLINE_EXCEEDED` response before any compute runs. `0`
+    /// disables the default (wire requests may still carry their own).
+    pub deadline_ms: f64,
+    /// Idle-connection reaper, milliseconds: a connection that has sent
+    /// nothing for this long is closed so dead clients stop pinning
+    /// connection slots. `0` disables the reaper.
+    pub idle_timeout_ms: f64,
+    /// Supervisor restart budget per worker rank: how many times a dead
+    /// worker is respawned (with exponential backoff) before the rank
+    /// is retired.
+    pub max_restarts: usize,
 }
 
 impl Default for ServeConfig {
@@ -339,6 +352,9 @@ impl Default for ServeConfig {
             stream: true,
             stream_window: 0,
             drain_ms: 5_000.0,
+            deadline_ms: 0.0,
+            idle_timeout_ms: 60_000.0,
+            max_restarts: 3,
         }
     }
 }
@@ -400,6 +416,13 @@ impl ServeConfig {
         if let Some(v) = toml::get_f64(&doc, "serve", "drain_ms") {
             cfg.drain_ms = v;
         }
+        if let Some(v) = toml::get_f64(&doc, "serve", "deadline_ms") {
+            cfg.deadline_ms = v;
+        }
+        if let Some(v) = toml::get_f64(&doc, "serve", "idle_timeout_ms") {
+            cfg.idle_timeout_ms = v;
+        }
+        set_usize(&doc, "serve", "max_restarts", &mut cfg.max_restarts);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -438,6 +461,17 @@ impl ServeConfig {
                     .parse()
                     .with_context(|| format!("--drain-ms must be a number, got '{value}'"))?
             }
+            "deadline-ms" => {
+                self.deadline_ms = value
+                    .parse()
+                    .with_context(|| format!("--deadline-ms must be a number, got '{value}'"))?
+            }
+            "idle-timeout-ms" => {
+                self.idle_timeout_ms = value.parse().with_context(|| {
+                    format!("--idle-timeout-ms must be a number, got '{value}'")
+                })?
+            }
+            "max-restarts" => self.max_restarts = uint(value, key)?,
             _ => return Ok(false),
         }
         Ok(true)
@@ -482,6 +516,18 @@ impl ServeConfig {
             return Err(anyhow!(
                 "serve.drain_ms must be positive, got {}",
                 self.drain_ms
+            ));
+        }
+        if !self.deadline_ms.is_finite() || self.deadline_ms < 0.0 {
+            return Err(anyhow!(
+                "serve.deadline_ms must be zero (off) or positive, got {}",
+                self.deadline_ms
+            ));
+        }
+        if !self.idle_timeout_ms.is_finite() || self.idle_timeout_ms < 0.0 {
+            return Err(anyhow!(
+                "serve.idle_timeout_ms must be zero (off) or positive, got {}",
+                self.idle_timeout_ms
             ));
         }
         if self.stream && self.stream_window != 0 {
@@ -555,6 +601,20 @@ impl ServeConfig {
             workers: self.workers,
             warm: self.warm,
             stream_window: self.resolved_stream_window(),
+            deadline: (self.deadline_ms > 0.0)
+                .then(|| Duration::from_secs_f64(self.deadline_ms / 1e3)),
+            max_restarts: self.max_restarts,
+            #[cfg(any(test, feature = "fault"))]
+            fault: None,
+        }
+    }
+
+    /// The network front-end options of this config.
+    pub fn net_opts(&self) -> NetOpts {
+        NetOpts {
+            drain: Duration::from_secs_f64(self.drain_ms / 1e3),
+            idle_timeout: Duration::from_secs_f64(self.idle_timeout_ms / 1e3),
+            ..NetOpts::default()
         }
     }
 }
@@ -726,6 +786,9 @@ warm = false
 listen = "127.0.0.1:0"
 stream_window = 500
 drain_ms = 250.0
+deadline_ms = 40.0
+idle_timeout_ms = 1500.0
+max_restarts = 5
 "#,
         )
         .unwrap();
@@ -766,6 +829,17 @@ drain_ms = 250.0
         assert_eq!(c.drain_ms, 250.0);
         assert_eq!(c.resolved_stream_window(), Some(512));
         assert_eq!(b.stream_window, Some(512));
+        // Robustness keys (DESIGN.md §7d) flow into the option structs.
+        assert_eq!(c.deadline_ms, 40.0);
+        assert_eq!(c.idle_timeout_ms, 1500.0);
+        assert_eq!(c.max_restarts, 5);
+        assert_eq!(b.deadline, Some(Duration::from_secs_f64(0.040)));
+        assert_eq!(b.max_restarts, 5);
+        let n = c.net_opts();
+        assert_eq!(n.drain, Duration::from_secs_f64(0.250));
+        assert_eq!(n.idle_timeout, Duration::from_secs_f64(1.5));
+        // deadline_ms = 0 (the default) means no default deadline.
+        assert_eq!(ServeConfig::default().batcher_opts().deadline, None);
     }
 
     #[test]
@@ -816,6 +890,9 @@ drain_ms = 250.0
             ("stream", "false"),
             ("stream-window", "100"),
             ("drain-ms", "100"),
+            ("deadline-ms", "25"),
+            ("idle-timeout-ms", "0"),
+            ("max-restarts", "2"),
         ] {
             assert!(c.apply_flag(k, v).unwrap(), "--{k} must be owned");
         }
@@ -833,6 +910,14 @@ drain_ms = 250.0
         assert!(!c.stream);
         assert_eq!(c.stream_window, 100);
         assert_eq!(c.drain_ms, 100.0);
+        assert_eq!(c.deadline_ms, 25.0);
+        assert_eq!(c.idle_timeout_ms, 0.0);
+        assert_eq!(c.max_restarts, 2);
+        assert_eq!(
+            c.net_opts().idle_timeout,
+            Duration::ZERO,
+            "0 disables the idle reaper"
+        );
         assert_eq!(c.resolved_stream_window(), None, "stream=false wins");
         c.validate().unwrap();
         // Backend names resolve through the registry; "bf16" pins both.
@@ -868,6 +953,13 @@ drain_ms = 250.0
         assert!(ServeConfig::from_file(&p).is_err());
         std::fs::write(&p, "[serve]\nbuckets = \"1024,0\"\n").unwrap();
         assert!(ServeConfig::from_file(&p).is_err());
+        // Negative robustness knobs (0 is legal: it means "off").
+        std::fs::write(&p, "[serve]\ndeadline_ms = -1.0\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        std::fs::write(&p, "[serve]\nidle_timeout_ms = -5.0\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_err());
+        std::fs::write(&p, "[serve]\ndeadline_ms = 0.0\nidle_timeout_ms = 0.0\n").unwrap();
+        assert!(ServeConfig::from_file(&p).is_ok());
         // Zero sizes.
         for key in ["max_batch", "queue_depth", "workers", "threads", "cache_capacity"] {
             std::fs::write(&p, format!("[serve]\n{key} = 0\n")).unwrap();

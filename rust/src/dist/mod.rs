@@ -29,4 +29,4 @@ pub mod worker;
 pub use bucket::{Bucket, BucketPlan};
 pub use comm_model::{CommModel, OverlapReport};
 pub use topology::Topology;
-pub use worker::{PersistentPool, StepResult, WorkerPool};
+pub use worker::{Job, PersistentPool, StepResult, WorkerPool};

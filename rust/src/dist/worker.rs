@@ -11,18 +11,40 @@
 //! [`WorkerPool`] is the older scoped-thread convenience (one spawn per
 //! step) kept for the simple fork-join collectives in tests and benches.
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use super::allreduce::ring_allreduce;
 
-/// A job executed on a rank's thread against its owned state.
-type Job<W> = Box<dyn FnOnce(&mut W) + Send + 'static>;
+/// A job executed on a rank's thread against its owned state. Public so
+/// callers that supervise ranks (the serving dispatcher) can hold a job
+/// as a value and re-route it when a rank dies ([`PersistentPool::try_exec`]).
+pub type Job<W> = Box<dyn FnOnce(&mut W) + Send + 'static>;
 
 enum Msg<W> {
     Job(Job<W>),
     Sync(Sender<()>),
     Stop,
+}
+
+/// Spawn one rank thread: owns `state`, runs jobs from `rx` in
+/// submission order, hands the state back when stopped. The receiver is
+/// dropped if a job unwinds the thread, which is exactly how a dead rank
+/// is detected: subsequent sends to it fail.
+fn spawn_rank<W: Send + 'static>(state: W, rx: Receiver<Msg<W>>) -> JoinHandle<W> {
+    std::thread::spawn(move || {
+        let mut state = state;
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                Msg::Job(job) => job(&mut state),
+                Msg::Sync(ack) => {
+                    let _ = ack.send(());
+                }
+                Msg::Stop => break,
+            }
+        }
+        state
+    })
 }
 
 /// A pool of long-lived rank threads, each owning a state `W` (e.g. a
@@ -61,19 +83,7 @@ impl<W: Send + 'static> PersistentPool<W> {
         for state in states {
             let (tx, rx) = channel::<Msg<W>>();
             txs.push(tx);
-            handles.push(std::thread::spawn(move || {
-                let mut state = state;
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Job(job) => job(&mut state),
-                        Msg::Sync(ack) => {
-                            let _ = ack.send(());
-                        }
-                        Msg::Stop => break,
-                    }
-                }
-                state
-            }));
+            handles.push(spawn_rank(state, rx));
         }
         PersistentPool { txs, handles }
     }
@@ -90,6 +100,33 @@ impl<W: Send + 'static> PersistentPool<W> {
         self.txs[rank]
             .send(Msg::Job(Box::new(job)))
             .unwrap_or_else(|_| panic!("rank {rank} worker thread died"));
+    }
+
+    /// Like [`Self::exec`], but hands the boxed job back instead of
+    /// panicking when the rank's thread has died, so a supervisor can
+    /// re-route the work or [`Self::respawn`] the rank. Jobs that were
+    /// already queued on the dead rank are gone — their closures were
+    /// dropped when the rank's channel receiver unwound — so any
+    /// cleanup they carry must live in the closure's captured values'
+    /// `Drop` impls.
+    pub fn try_exec(&self, rank: usize, job: Job<W>) -> Result<(), Job<W>> {
+        match self.txs[rank].send(Msg::Job(job)) {
+            Ok(()) => Ok(()),
+            Err(std::sync::mpsc::SendError(Msg::Job(job))) => Err(job),
+            Err(_) => unreachable!("send bounced a message this call never sent"),
+        }
+    }
+
+    /// Replace a dead rank's thread with a fresh one owning `state`.
+    /// The old thread's handle is reaped and its panic payload, if any,
+    /// discarded — the caller has already observed the death via a
+    /// bounced [`Self::try_exec`] and decided on a restart policy.
+    pub fn respawn(&mut self, rank: usize, state: W) {
+        let (tx, rx) = channel::<Msg<W>>();
+        let handle = spawn_rank(state, rx);
+        self.txs[rank] = tx;
+        let old = std::mem::replace(&mut self.handles[rank], handle);
+        let _ = old.join();
     }
 
     /// Block until every rank has drained its job queue.
@@ -109,6 +146,22 @@ impl<W: Send + 'static> PersistentPool<W> {
             rx.recv()
                 .unwrap_or_else(|_| panic!("rank {rank} worker thread died"));
         }
+    }
+
+    /// Like [`Self::sync`], but skips dead ranks instead of panicking —
+    /// the serving supervisor owns their restart policy, and a drain
+    /// must still wait out every *live* rank's queue. Returns how many
+    /// ranks acknowledged.
+    pub fn sync_lossy(&self) -> usize {
+        let acks: Vec<_> = self
+            .txs
+            .iter()
+            .filter_map(|tx| {
+                let (ack, ack_rx) = channel();
+                tx.send(Msg::Sync(ack)).ok().map(|()| ack_rx)
+            })
+            .collect();
+        acks.into_iter().filter(|rx| rx.recv().is_ok()).count()
     }
 
     /// Stop every thread and return the rank states in rank order.
@@ -256,5 +309,47 @@ mod tests {
         let pool = PersistentPool::new(vec![0u8]);
         pool.exec(0, |s| *s += 1);
         drop(pool); // must not hang
+    }
+
+    /// Silence the panic-handler backtrace for a deliberately killed
+    /// rank without disturbing other tests' hooks.
+    fn kill_rank_quietly(pool: &PersistentPool<u32>, rank: usize) {
+        pool.exec(rank, |_| {
+            std::panic::panic_any("rank killed by test");
+        });
+        // Wait until the thread has actually unwound: a sync ack channel
+        // dropped without a reply means the rank is dead.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while pool.sync_lossy() > pool.ranks() - 1 {
+            assert!(std::time::Instant::now() < deadline, "rank never died");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn try_exec_returns_the_job_when_a_rank_is_dead_and_respawn_revives_it() {
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let mut pool = PersistentPool::new(vec![10u32]);
+        kill_rank_quietly(&pool, 0);
+        std::panic::set_hook(hook);
+
+        // The bounced job comes back intact and can be re-routed.
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        let job: Job<u32> = Box::new(move |s| {
+            *s += 1;
+            let _ = tx.send(*s);
+        });
+        let job = match pool.try_exec(0, job) {
+            Err(job) => job,
+            Ok(()) => panic!("dead rank must bounce the job"),
+        };
+        assert_eq!(pool.sync_lossy(), 0);
+
+        pool.respawn(0, 20u32);
+        assert!(pool.try_exec(0, job).is_ok(), "respawned rank accepts jobs");
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)), Ok(21));
+        assert_eq!(pool.sync_lossy(), 1);
+        assert_eq!(pool.join(), vec![21]);
     }
 }

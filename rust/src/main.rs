@@ -149,6 +149,11 @@ USAGE: dilconv <subcommand> [--flags]
                    requests wider than every bucket through halo-
                    overlapped streaming windows (bit-identical to
                    whole-sequence evaluation) [--drain-ms F]
+                   [--deadline-ms F] default per-request deadline
+                   (0 = off; expired requests shed before compute)
+                   [--idle-timeout-ms F] close silent connections
+                   (0 = off) [--max-restarts N] supervisor respawn
+                   budget per worker rank
   sweep            efficiency sweeps (Figs. 4/5/6, eq. 4 grid)
                    --figure fig4|fig5|fig6|eq4 [--quick] [--csv out.csv]
                    [--reps N] [--batch N] [--max-q N]
@@ -405,10 +410,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// serve the wire protocol instead of generating synthetic load.
 fn run_listen(cfg: &ServeConfig, server: dilconv1d::serve::Server, args: &Args) -> Result<()> {
     let addr = cfg.listen.as_deref().expect("listen mode requires an address");
-    let opts = dilconv1d::serve::NetOpts {
-        drain: std::time::Duration::from_secs_f64(cfg.drain_ms / 1e3),
-        ..dilconv1d::serve::NetOpts::default()
-    };
+    let opts = cfg.net_opts();
     let net = dilconv1d::serve::NetServer::bind(addr, server, opts)
         .with_context(|| format!("binding {addr}"))?;
     println!(
@@ -431,16 +433,21 @@ fn run_listen(cfg: &ServeConfig, server: dilconv1d::serve::Server, args: &Args) 
     }
     let (metrics, stats) = net.shutdown();
     println!(
-        "\nconnections: {} accepted, {} rejected (busy)",
-        stats.connections_accepted, stats.connections_rejected
+        "\nconnections: {} accepted, {} rejected (busy), {} idle-closed",
+        stats.connections_accepted, stats.connections_rejected, stats.connections_idle_closed
     );
     println!(
-        "requests: {} ok ({} streamed), {} busy, {} error, {} malformed",
+        "requests: {} ok ({} streamed), {} busy, {} deadline, {} error, {} malformed",
         stats.requests_ok,
         stats.requests_streamed,
         stats.requests_backpressure,
+        stats.requests_deadline,
         stats.requests_error,
         stats.requests_malformed
+    );
+    println!(
+        "recovery: {} worker panics, {} restarts, {} deadline-shed, {} handler panics",
+        metrics.worker_panics, metrics.restarts, metrics.deadline_shed, stats.handler_panics
     );
     println!(
         "wire: {} in, {} out",

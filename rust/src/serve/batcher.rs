@@ -1,5 +1,5 @@
 //! The dynamic batcher — request-oriented serving over the bucket-pinned
-//! engines (DESIGN.md §7).
+//! engines (DESIGN.md §7), supervised and deadline-aware (§7d).
 //!
 //! Topology: callers [`Server::submit`] single requests; a **dispatcher
 //! thread** groups them by width bucket and flushes a group to a worker
@@ -13,27 +13,50 @@
 //! [`ServeError::QueueFull`] instead of growing an unbounded queue —
 //! callers see backpressure, latency stays bounded.
 //!
+//! Fault model (DESIGN.md §7d): a worker's forward pass runs under
+//! `catch_unwind`, and a panicking replica is rebuilt from the retained
+//! parameters before the rank takes another batch — the affected
+//! requests answer [`ServeError::WorkerPanic`], nothing else notices. A
+//! panic that escapes the guard (or kills the rank thread outright) is
+//! handled by the dispatcher's **supervisor**: dead ranks are respawned
+//! with a fresh engine under a bounded restart budget with exponential
+//! backoff, and a fully-retired pool degrades to fast
+//! [`ServeError::WorkerPanic`] answers instead of wedging the queue.
+//! Requests may carry a **deadline**; one that expires while queued is
+//! shed with [`ServeError::DeadlineExceeded`] before any compute runs.
+//!
 //! Telemetry: every completed request records its end-to-end latency
 //! (enqueue → response) in a global and a per-bucket
 //! [`LatencyHistogram`]; batches record their occupancy so an
 //! over-generous window or an over-wide bucket grid shows up as
-//! underfilled batches, not just as mysterious latency.
+//! underfilled batches, not just as mysterious latency. Recovery events
+//! count in [`ServeMetrics::worker_panics`], [`ServeMetrics::restarts`]
+//! and [`ServeMetrics::deadline_shed`].
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::dist::PersistentPool;
+use crate::dist::{Job, PersistentPool};
 use crate::metrics::LatencyHistogram;
 use crate::model::NetConfig;
 
 use super::bucket::round_up_to_block;
 use super::engine::{EngineOpts, InferOutput, InferenceEngine};
+#[cfg(any(test, feature = "fault"))]
+use super::fault::{FaultAction, FaultPlan, FaultSite};
 use super::stream::StreamingSession;
-use super::ServeError;
+use super::{lock_unpoisoned, ServeError};
+
+/// First-restart backoff; doubles per consumed restart on the rank.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(25);
+/// Backoff ceiling — a crash-looping rank retries at most this slowly
+/// until its restart budget runs out.
+const RESTART_BACKOFF_CAP: Duration = Duration::from_secs(2);
 
 /// Server options: the engine slice plus the batching/queueing policy.
 #[derive(Debug, Clone)]
@@ -57,6 +80,21 @@ pub struct BatcherOpts {
     /// bucket and exceed twice the receptive-field reach), `None`
     /// rejects them with [`ServeError::TooWide`].
     pub stream_window: Option<usize>,
+    /// Default per-request deadline. A request still queued when its
+    /// deadline passes is shed with [`ServeError::DeadlineExceeded`]
+    /// before any compute runs; a request already executing completes.
+    /// [`Server::submit_with_deadline`] overrides per request; `None`
+    /// means no default deadline.
+    pub deadline: Option<Duration>,
+    /// Restart budget per worker rank: how many times the supervisor
+    /// respawns a dead rank (exponential backoff between attempts)
+    /// before retiring it. With every rank retired the server answers
+    /// [`ServeError::WorkerPanic`] instead of wedging.
+    pub max_restarts: usize,
+    /// Deterministic fault-injection plan (chaos tests and the
+    /// fault-rate bench column only; absent from production builds).
+    #[cfg(any(test, feature = "fault"))]
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for BatcherOpts {
@@ -68,6 +106,10 @@ impl Default for BatcherOpts {
             workers: 1,
             warm: true,
             stream_window: None,
+            deadline: None,
+            max_restarts: 3,
+            #[cfg(any(test, feature = "fault"))]
+            fault: None,
         }
     }
 }
@@ -95,8 +137,10 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the response arrives (or the server drops the
-    /// request during shutdown).
+    /// Block until the response arrives. Every admitted request is
+    /// answered — even one caught on a dying worker comes back as
+    /// [`ServeError::WorkerPanic`] (see [`Reply`]'s drop contract) — so
+    /// the channel closing without a reply is a defensive fallback.
     pub fn wait(self) -> Result<Response, ServeError> {
         match self.rx.recv() {
             Ok(r) => r,
@@ -116,7 +160,9 @@ pub struct ServeMetrics {
     pub completed: u64,
     /// Requests refused at admission (queue full).
     pub rejected: u64,
-    /// Requests that failed inside the engine (plan errors).
+    /// Requests that failed inside the engine (plan errors, and rows
+    /// answered `WorkerPanic` by a worker that caught its engine's
+    /// unwind or by a fully-retired pool).
     pub failed: u64,
     /// Batches executed.
     pub batches: u64,
@@ -128,6 +174,14 @@ pub struct ServeMetrics {
     pub streamed: u64,
     /// Halo-overlapped windows executed across all streamed requests.
     pub stream_windows: u64,
+    /// Engine forward passes that panicked and were caught (each one
+    /// rebuilt the rank's replica; the affected requests answered
+    /// [`ServeError::WorkerPanic`]).
+    pub worker_panics: u64,
+    /// Dead worker ranks respawned by the supervisor.
+    pub restarts: u64,
+    /// Requests shed because their deadline expired while queued.
+    pub deadline_shed: u64,
     started: Instant,
     /// Set when this value became a snapshot ([`Server::metrics`] /
     /// [`Server::shutdown`]): freezes `elapsed_secs`, so a stored
@@ -155,6 +209,9 @@ impl ServeMetrics {
             batch_rows: 0,
             streamed: 0,
             stream_windows: 0,
+            worker_panics: 0,
+            restarts: 0,
+            deadline_shed: 0,
             started: Instant::now(),
             frozen_at: None,
         }
@@ -180,6 +237,64 @@ impl ServeMetrics {
     }
 }
 
+/// RAII admission slot: decrements the in-flight budget exactly once —
+/// explicitly via [`Self::release`] right before the reply is sent (so
+/// a caller that `wait()`s and immediately resubmits never sees
+/// `QueueFull` for capacity its own completed request still holds), or
+/// on drop. The drop path is what keeps the budget honest under
+/// faults: jobs queued on a rank that dies are dropped with the rank's
+/// channel receiver, and without the guard their slots would leak
+/// forever.
+struct SlotGuard {
+    inflight: Arc<AtomicUsize>,
+    released: bool,
+}
+
+impl SlotGuard {
+    fn new(inflight: Arc<AtomicUsize>) -> SlotGuard {
+        SlotGuard {
+            inflight,
+            released: false,
+        }
+    }
+
+    fn release(&mut self) {
+        if !self.released {
+            self.released = true;
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+/// Reply channel that answers [`ServeError::WorkerPanic`] if dropped
+/// before any reply was sent. A request can only be dropped unreplied
+/// by a dying worker (mid-unwind, or sitting in a dead rank's queue)
+/// or by a fully-retired pool — every admitted request therefore gets
+/// an answer, whatever happens to the thread holding it.
+struct Reply(Option<Sender<Result<Response, ServeError>>>);
+
+impl Reply {
+    fn send(&mut self, r: Result<Response, ServeError>) {
+        if let Some(tx) = self.0.take() {
+            let _ = tx.send(r);
+        }
+    }
+}
+
+impl Drop for Reply {
+    fn drop(&mut self) {
+        if let Some(tx) = self.0.take() {
+            let _ = tx.send(Err(ServeError::WorkerPanic));
+        }
+    }
+}
+
 /// One enqueued request travelling dispatcher → worker.
 struct Pending {
     data: Vec<f32>,
@@ -187,23 +302,55 @@ struct Pending {
     /// `stream` is set.
     bucket: usize,
     stream: bool,
+    /// Shed with [`ServeError::DeadlineExceeded`] if still queued past
+    /// this instant.
+    deadline: Option<Instant>,
     enqueued: Instant,
-    reply: Sender<Result<Response, ServeError>>,
+    reply: Reply,
+    slot: SlotGuard,
 }
 
-/// A worker thread's owned state: private engine + shared telemetry.
+impl Pending {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
+}
+
+/// A worker thread's owned state: private engine + shared telemetry,
+/// plus everything needed to rebuild the engine after a caught panic.
 struct Worker {
+    rank: usize,
     engine: InferenceEngine,
+    net_cfg: NetConfig,
+    params: Arc<Vec<f32>>,
+    warm: bool,
     stream_window: Option<usize>,
     metrics: Arc<Mutex<ServeMetrics>>,
-    inflight: Arc<AtomicUsize>,
+    #[cfg(any(test, feature = "fault"))]
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Worker {
     /// Execute one same-bucket batch and deliver every response.
     /// Streamed requests arrive as singleton groups and divert to
-    /// [`Self::run_stream`].
-    fn run_batch(&mut self, mut batch: Vec<Pending>) {
+    /// [`Self::run_stream`]. Expired deadlines are shed first — this is
+    /// the last pre-compute checkpoint, catching requests whose
+    /// deadline ran out while they waited in the batch window or behind
+    /// a slow batch on this rank.
+    fn run_batch(&mut self, batch: Vec<Pending>) {
+        // Injection point `WorkerJob`: outside the catch_unwind guard
+        // below, so a `Panic` here unwinds the rank thread for real and
+        // exercises the supervisor (chaos tests only).
+        #[cfg(any(test, feature = "fault"))]
+        if let Some(plan) = &self.fault {
+            if let Some(FaultAction::Panic) = plan.check(FaultSite::WorkerJob, self.rank) {
+                panic!("fault-injected worker kill (rank {})", self.rank);
+            }
+        }
+        let mut batch = self.shed_expired(batch);
+        if batch.is_empty() {
+            return;
+        }
         if batch.len() == 1 && batch[0].stream {
             let p = batch.pop().expect("len checked");
             return self.run_stream(p);
@@ -211,17 +358,22 @@ impl Worker {
         let bucket = batch[0].bucket;
         debug_assert!(batch.iter().all(|p| p.bucket == bucket));
         let refs: Vec<&[f32]> = batch.iter().map(|p| p.data.as_slice()).collect();
-        let result = self.engine.infer_batch(&refs);
+        // The engine's internals are not unwind-safe in the type-system
+        // sense (caches, staging buffers), which is fine: a panicked
+        // replica is discarded and rebuilt below, never reused.
+        let engine = &mut self.engine;
+        let result = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(&refs)));
+        drop(refs);
         let rows = batch.len();
         let done = Instant::now();
-        let mut m = self.metrics.lock().unwrap();
         match result {
-            Ok(outputs) => {
+            Ok(Ok(outputs)) => {
+                let mut m = lock_unpoisoned(&self.metrics);
                 m.batches += 1;
                 m.batch_rows += rows as u64;
                 let pb = m.per_bucket.entry(bucket).or_default();
                 pb.batches += 1;
-                for (p, output) in batch.into_iter().zip(outputs) {
+                for (mut p, output) in batch.into_iter().zip(outputs) {
                     let latency_secs = done.duration_since(p.enqueued).as_secs_f64();
                     m.latency.record(latency_secs);
                     m.completed += 1;
@@ -232,8 +384,8 @@ impl Worker {
                     // reply: a caller that wait()s and immediately
                     // resubmits must never see QueueFull for capacity
                     // its own completed request still holds.
-                    self.inflight.fetch_sub(1, Ordering::SeqCst);
-                    let _ = p.reply.send(Ok(Response {
+                    p.slot.release();
+                    p.reply.send(Ok(Response {
                         output,
                         latency_secs,
                         bucket,
@@ -242,43 +394,80 @@ impl Worker {
                     }));
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 // Requests are bucket-validated at submit, so this is a
                 // plan-level failure; every caller learns why.
+                let mut m = lock_unpoisoned(&self.metrics);
                 m.failed += rows as u64;
-                for p in batch {
-                    self.inflight.fetch_sub(1, Ordering::SeqCst);
-                    let _ = p.reply.send(Err(e.clone()));
+                drop(m);
+                for mut p in batch {
+                    p.slot.release();
+                    p.reply.send(Err(e.clone()));
                 }
+            }
+            Err(_) => {
+                let mut m = lock_unpoisoned(&self.metrics);
+                m.worker_panics += 1;
+                m.failed += rows as u64;
+                drop(m);
+                for mut p in batch {
+                    p.slot.release();
+                    p.reply.send(Err(ServeError::WorkerPanic));
+                }
+                self.rebuild_engine();
             }
         }
     }
 
+    /// Shed every request whose deadline passed while it was queued —
+    /// before any compute — and return the survivors. Shedding rows
+    /// from a batch cannot change the survivors' bits: batch and bucket
+    /// invariance (DESIGN.md §7) make every row independent of its
+    /// neighbours.
+    fn shed_expired(&self, batch: Vec<Pending>) -> Vec<Pending> {
+        let now = Instant::now();
+        let (expired, live): (Vec<Pending>, Vec<Pending>) =
+            batch.into_iter().partition(|p| p.expired(now));
+        if !expired.is_empty() {
+            lock_unpoisoned(&self.metrics).deadline_shed += expired.len() as u64;
+            for mut p in expired {
+                p.slot.release();
+                p.reply.send(Err(ServeError::DeadlineExceeded));
+            }
+        }
+        live
+    }
+
     /// Stream one over-wide request through halo-overlapped windows and
     /// deliver the stitched (bit-identical) whole-sequence output.
-    fn run_stream(&mut self, p: Pending) {
+    fn run_stream(&mut self, mut p: Pending) {
         let window = self
             .stream_window
             .expect("stream requests exist only when a window is configured");
-        let mut denoised = Vec::with_capacity(p.data.len());
-        let mut logits = Vec::with_capacity(p.data.len());
-        let result = StreamingSession::new(&mut self.engine, window).and_then(|mut s| {
-            s.infer_with(&p.data, |_, d, l| {
-                denoised.extend_from_slice(d);
-                logits.extend_from_slice(l);
-            })
-        });
+        let engine = &mut self.engine;
+        let data = &p.data;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut denoised = Vec::with_capacity(data.len());
+            let mut logits = Vec::with_capacity(data.len());
+            let stats = StreamingSession::new(engine, window).and_then(|mut s| {
+                s.infer_with(data, |_, d, l| {
+                    denoised.extend_from_slice(d);
+                    logits.extend_from_slice(l);
+                })
+            })?;
+            Ok::<_, ServeError>((stats, denoised, logits))
+        }));
         let done = Instant::now();
-        let mut m = self.metrics.lock().unwrap();
         match result {
-            Ok(stats) => {
+            Ok(Ok((stats, denoised, logits))) => {
+                let mut m = lock_unpoisoned(&self.metrics);
                 let latency_secs = done.duration_since(p.enqueued).as_secs_f64();
                 m.latency.record(latency_secs);
                 m.completed += 1;
                 m.streamed += 1;
                 m.stream_windows += stats.windows as u64;
-                self.inflight.fetch_sub(1, Ordering::SeqCst);
-                let _ = p.reply.send(Ok(Response {
+                p.slot.release();
+                p.reply.send(Ok(Response {
                     output: InferOutput { denoised, logits },
                     latency_secs,
                     bucket: window,
@@ -286,11 +475,44 @@ impl Worker {
                     streamed: true,
                 }));
             }
-            Err(e) => {
-                m.failed += 1;
-                self.inflight.fetch_sub(1, Ordering::SeqCst);
-                let _ = p.reply.send(Err(e));
+            Ok(Err(e)) => {
+                lock_unpoisoned(&self.metrics).failed += 1;
+                p.slot.release();
+                p.reply.send(Err(e));
             }
+            Err(_) => {
+                let mut m = lock_unpoisoned(&self.metrics);
+                m.worker_panics += 1;
+                m.failed += 1;
+                drop(m);
+                p.slot.release();
+                p.reply.send(Err(ServeError::WorkerPanic));
+                self.rebuild_engine();
+            }
+        }
+    }
+
+    /// Replace a replica whose forward pass unwound: caches and staging
+    /// buffers are in an unknown state after a panic, and the
+    /// bit-identity contract forbids serving from one. A failed rebuild
+    /// panics out of the job — the rank dies and the dispatcher's
+    /// supervisor takes over (restart budget + backoff).
+    fn rebuild_engine(&mut self) {
+        let opts = self.engine.opts().clone();
+        match InferenceEngine::new(self.net_cfg, &self.params, opts) {
+            Ok(mut engine) => {
+                if self.warm {
+                    if let Err(e) = engine.warm() {
+                        panic!("engine re-warm failed after a worker panic: {e}");
+                    }
+                }
+                #[cfg(any(test, feature = "fault"))]
+                if let Some(plan) = &self.fault {
+                    engine.set_fault(Arc::clone(plan), self.rank);
+                }
+                self.engine = engine;
+            }
+            Err(e) => panic!("engine rebuild failed after a worker panic: {e}"),
         }
     }
 }
@@ -301,6 +523,157 @@ struct Group {
     oldest: Instant,
 }
 
+/// Per-rank supervision state (DESIGN.md §7d):
+/// `Live → Backoff → Live` per consumed restart, `→ Retired` when the
+/// budget runs out.
+enum RankHealth {
+    Live,
+    /// Dead; eligible to respawn once `until` passes.
+    Backoff { until: Instant },
+    /// Restart budget exhausted: never dispatched to again.
+    Retired,
+}
+
+/// The dispatcher's supervisor: owns everything needed to build a fresh
+/// [`Worker`] for a rank, plus each rank's health and restart budget.
+struct Supervisor {
+    net_cfg: NetConfig,
+    params: Arc<Vec<f32>>,
+    engine_opts: EngineOpts,
+    warm: bool,
+    stream_window: Option<usize>,
+    max_restarts: usize,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    health: Vec<RankHealth>,
+    /// Restarts consumed per rank.
+    used: Vec<usize>,
+    next_rank: usize,
+    #[cfg(any(test, feature = "fault"))]
+    fault: Option<Arc<FaultPlan>>,
+}
+
+impl Supervisor {
+    /// Exponential backoff before the rank's next restart:
+    /// `base · 2^used`, capped.
+    fn backoff(&self, rank: usize) -> Duration {
+        let exp = self.used[rank].min(16) as u32;
+        RESTART_BACKOFF_BASE
+            .saturating_mul(1u32 << exp)
+            .min(RESTART_BACKOFF_CAP)
+    }
+
+    /// Build one rank's worker: fresh engine (warmed when configured)
+    /// plus the rebuild ingredients it retains for panic recovery.
+    fn build_worker(&self, rank: usize) -> Result<Worker, ServeError> {
+        let mut engine = InferenceEngine::new(self.net_cfg, &self.params, self.engine_opts.clone())?;
+        if self.warm {
+            engine.warm()?;
+        }
+        #[cfg(any(test, feature = "fault"))]
+        if let Some(plan) = &self.fault {
+            engine.set_fault(Arc::clone(plan), rank);
+        }
+        Ok(Worker {
+            rank,
+            engine,
+            net_cfg: self.net_cfg,
+            params: Arc::clone(&self.params),
+            warm: self.warm,
+            stream_window: self.stream_window,
+            metrics: Arc::clone(&self.metrics),
+            #[cfg(any(test, feature = "fault"))]
+            fault: self.fault.clone(),
+        })
+    }
+
+    /// A dispatch to `rank` bounced — its thread is dead. Start (or
+    /// keep) its backoff clock, or retire it if the budget is spent.
+    fn note_death(&mut self, rank: usize) {
+        if matches!(self.health[rank], RankHealth::Live) {
+            self.health[rank] = if self.used[rank] >= self.max_restarts {
+                RankHealth::Retired
+            } else {
+                RankHealth::Backoff {
+                    until: Instant::now() + self.backoff(rank),
+                }
+            };
+        }
+    }
+
+    /// Respawn `rank` with a fresh worker. On build failure the rank is
+    /// retired outright: the parameters and geometry are unchanged, so
+    /// a failed build would fail identically on every retry.
+    fn respawn(&mut self, pool: &mut PersistentPool<Worker>, rank: usize) {
+        match self.build_worker(rank) {
+            Ok(w) => {
+                pool.respawn(rank, w);
+                self.used[rank] += 1;
+                self.health[rank] = RankHealth::Live;
+                lock_unpoisoned(&self.metrics).restarts += 1;
+            }
+            Err(_) => self.health[rank] = RankHealth::Retired,
+        }
+    }
+
+    /// Dispatch one flushed group, supervising: offer it to live ranks
+    /// round-robin; a bounce marks the rank dead and moves on; with no
+    /// rank live, wait out the earliest backoff and respawn; with every
+    /// rank retired, answer the group `WorkerPanic` instead of wedging
+    /// the queue.
+    fn dispatch(&mut self, pool: &mut PersistentPool<Worker>, group: Group) {
+        let n = pool.ranks();
+        let rows = group.reqs.len() as u64;
+        let reqs = group.reqs;
+        let mut job: Job<Worker> = Box::new(move |w: &mut Worker| w.run_batch(reqs));
+        loop {
+            for _ in 0..n {
+                let rank = self.next_rank % n;
+                self.next_rank = self.next_rank.wrapping_add(1);
+                if !matches!(self.health[rank], RankHealth::Live) {
+                    continue;
+                }
+                match pool.try_exec(rank, job) {
+                    Ok(()) => return,
+                    Err(bounced) => {
+                        job = bounced;
+                        self.note_death(rank);
+                    }
+                }
+            }
+            // No rank is live. Respawn the one whose backoff expires
+            // soonest — under total worker failure the dispatcher has
+            // nothing more useful to do than wait for it.
+            let mut soonest: Option<(usize, Instant)> = None;
+            for rank in 0..n {
+                if let RankHealth::Backoff { until } = self.health[rank] {
+                    if soonest.is_none_or(|(_, u)| until < u) {
+                        soonest = Some((rank, until));
+                    }
+                }
+            }
+            match soonest {
+                Some((rank, until)) => {
+                    let now = Instant::now();
+                    if until > now {
+                        std::thread::sleep(until - now);
+                    }
+                    self.respawn(pool, rank);
+                    // Loop back: the freshly live rank takes the job
+                    // (or bounces again and re-enters backoff).
+                }
+                None => {
+                    // Every rank retired: degrade gracefully. Dropping
+                    // the job releases the admission slots (SlotGuard)
+                    // and answers every caller (Reply's drop contract).
+                    drop(job);
+                    lock_unpoisoned(&self.metrics).failed += rows;
+                    return;
+                }
+            }
+        }
+    }
+}
+
 /// The serving front end: dynamic batching over a warmed worker pool.
 pub struct Server {
     tx: Option<Sender<Pending>>,
@@ -309,6 +682,7 @@ pub struct Server {
     engine_opts: EngineOpts,
     /// Block-aligned streaming window, when the streaming route is on.
     stream_window: Option<usize>,
+    default_deadline: Option<Duration>,
     metrics: Arc<Mutex<ServeMetrics>>,
     dispatcher: Option<JoinHandle<()>>,
 }
@@ -368,32 +742,38 @@ impl Server {
         };
         let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
         let inflight = Arc::new(AtomicUsize::new(0));
+        let mut sup = Supervisor {
+            net_cfg,
+            params: Arc::new(params.to_vec()),
+            engine_opts: opts.engine.clone(),
+            warm: opts.warm,
+            stream_window,
+            max_restarts: opts.max_restarts,
+            metrics: Arc::clone(&metrics),
+            health: (0..opts.workers).map(|_| RankHealth::Live).collect(),
+            used: vec![0; opts.workers],
+            next_rank: 0,
+            #[cfg(any(test, feature = "fault"))]
+            fault: opts.fault.clone(),
+        };
         let mut workers = Vec::with_capacity(opts.workers);
-        for _ in 0..opts.workers {
-            let mut engine = InferenceEngine::new(net_cfg, params, opts.engine.clone())?;
-            if opts.warm {
-                engine.warm()?;
-            }
-            workers.push(Worker {
-                engine,
-                stream_window,
-                metrics: Arc::clone(&metrics),
-                inflight: Arc::clone(&inflight),
-            });
+        for rank in 0..opts.workers {
+            workers.push(sup.build_worker(rank)?);
         }
         let (tx, rx) = channel::<Pending>();
         let max_batch = opts.engine.max_batch;
         let window = opts.window;
-        let n_workers = opts.workers;
         // Serving starts now — warming must not count against uptime
         // throughput (seq_per_sec), so re-stamp after the builds above.
-        metrics.lock().unwrap().started = Instant::now();
+        lock_unpoisoned(&metrics).started = Instant::now();
         let dispatcher = std::thread::spawn(move || {
-            let pool = PersistentPool::new(workers);
-            dispatch_loop(rx, &pool, max_batch, window, n_workers);
+            let mut pool = PersistentPool::new(workers);
+            dispatch_loop(rx, &mut pool, &mut sup, max_batch, window);
             // Drain: every queued job runs before the pool's Stop
-            // message, so dropping the pool here completes all work.
-            pool.sync();
+            // message, so waiting out every live rank completes all
+            // accepted work — including jobs a respawned rank took
+            // during the drain itself.
+            pool.sync_lossy();
         });
         Ok(Server {
             tx: Some(tx),
@@ -401,18 +781,33 @@ impl Server {
             queue_depth: opts.queue_depth,
             engine_opts: opts.engine,
             stream_window,
+            default_deadline: opts.deadline,
             metrics,
             dispatcher: Some(dispatcher),
         })
     }
 
-    /// Submit one request (its length is its width). Fails fast with
+    /// Submit one request (its length is its width) under the
+    /// configured default deadline, if any. Fails fast with
     /// [`ServeError::QueueFull`] when the admission budget is exhausted,
     /// both before any queueing. Requests wider than every bucket take
     /// the halo-overlapped streaming route when a
     /// [`BatcherOpts::stream_window`] is configured, and fail with
     /// [`ServeError::TooWide`] otherwise.
     pub fn submit(&self, data: Vec<f32>) -> Result<Ticket, ServeError> {
+        self.submit_with_deadline(data, None)
+    }
+
+    /// [`Self::submit`] with an explicit per-request deadline
+    /// (`None` falls back to [`BatcherOpts::deadline`]). The clock
+    /// starts now: a request still queued when the deadline passes is
+    /// shed with [`ServeError::DeadlineExceeded`] before any compute
+    /// runs; one already executing completes normally.
+    pub fn submit_with_deadline(
+        &self,
+        data: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, ServeError> {
         if data.is_empty() {
             return Err(ServeError::EmptyRequest);
         }
@@ -432,7 +827,7 @@ impl Server {
         let mut cur = self.inflight.load(Ordering::SeqCst);
         loop {
             if cur >= self.queue_depth {
-                self.metrics.lock().unwrap().rejected += 1;
+                lock_unpoisoned(&self.metrics).rejected += 1;
                 return Err(ServeError::QueueFull {
                     depth: self.queue_depth,
                 });
@@ -447,17 +842,22 @@ impl Server {
                 Err(seen) => cur = seen,
             }
         }
+        let now = Instant::now();
+        let deadline = deadline.or(self.default_deadline).map(|d| now + d);
         let (reply, rx) = channel();
         let pending = Pending {
             data,
             bucket,
             stream,
-            enqueued: Instant::now(),
-            reply,
+            deadline,
+            enqueued: now,
+            reply: Reply(Some(reply)),
+            slot: SlotGuard::new(Arc::clone(&self.inflight)),
         };
+        // A failed send drops `pending` inside the error: the slot
+        // frees via SlotGuard and the reply channel closes.
         let sent = self.tx.as_ref().is_some_and(|tx| tx.send(pending).is_ok());
         if !sent {
-            self.inflight.fetch_sub(1, Ordering::SeqCst);
             return Err(ServeError::ShuttingDown);
         }
         Ok(Ticket { rx })
@@ -471,7 +871,7 @@ impl Server {
     /// Snapshot of the serving telemetry (elapsed time frozen at the
     /// moment of the snapshot).
     pub fn metrics(&self) -> ServeMetrics {
-        let mut m = self.metrics.lock().unwrap().clone();
+        let mut m = lock_unpoisoned(&self.metrics).clone();
         m.frozen_at = Some(Instant::now());
         m
     }
@@ -481,7 +881,7 @@ impl Server {
     /// time frozen at shutdown).
     pub fn shutdown(mut self) -> ServeMetrics {
         self.stop();
-        let mut m = self.metrics.lock().unwrap().clone();
+        let mut m = lock_unpoisoned(&self.metrics).clone();
         m.frozen_at = Some(Instant::now());
         m
     }
@@ -501,26 +901,21 @@ impl Drop for Server {
 }
 
 /// Dispatcher: accumulate per-bucket groups, flush on full or window
-/// expiry, round-robin flushed batches across the worker ranks.
+/// expiry, hand flushed batches to the supervisor for (re-routed,
+/// respawn-backed) round-robin dispatch.
 fn dispatch_loop(
     rx: Receiver<Pending>,
-    pool: &PersistentPool<Worker>,
+    pool: &mut PersistentPool<Worker>,
+    sup: &mut Supervisor,
     max_batch: usize,
     window: Duration,
-    n_workers: usize,
 ) {
     let mut pending: BTreeMap<usize, Group> = BTreeMap::new();
-    let mut next_rank = 0usize;
-    let mut flush = |group: Group, next_rank: &mut usize| {
-        let rank = *next_rank % n_workers;
-        *next_rank += 1;
-        pool.exec(rank, move |w| w.run_batch(group.reqs));
-    };
     loop {
         if pending.is_empty() {
             // Nothing waiting: block until traffic or shutdown.
             match rx.recv() {
-                Ok(p) => enqueue(&mut pending, p, max_batch, &mut flush, &mut next_rank),
+                Ok(p) => enqueue(&mut pending, p, max_batch, pool, sup),
                 Err(_) => break,
             }
             continue;
@@ -533,41 +928,47 @@ fn dispatch_loop(
             .expect("pending is non-empty");
         let now = Instant::now();
         if deadline <= now {
-            flush_expired(&mut pending, window, &mut flush, &mut next_rank);
+            flush_expired(&mut pending, window, pool, sup);
             continue;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(p) => enqueue(&mut pending, p, max_batch, &mut flush, &mut next_rank),
-            Err(RecvTimeoutError::Timeout) => {
-                flush_expired(&mut pending, window, &mut flush, &mut next_rank)
-            }
+            Ok(p) => enqueue(&mut pending, p, max_batch, pool, sup),
+            Err(RecvTimeoutError::Timeout) => flush_expired(&mut pending, window, pool, sup),
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     // Shutdown: flush whatever is still pending.
     for (_, group) in std::mem::take(&mut pending) {
-        flush(group, &mut next_rank);
+        sup.dispatch(pool, group);
     }
 }
 
 /// Add one request to its bucket group; flush the group if it is full.
 /// Streamed requests never batch (each owns a worker for many windows),
-/// so they flush immediately as singleton groups.
+/// so they flush immediately as singleton groups. Requests arriving
+/// already past their deadline shed here, before occupying any batch
+/// slot.
 fn enqueue(
     pending: &mut BTreeMap<usize, Group>,
-    p: Pending,
+    mut p: Pending,
     max_batch: usize,
-    flush: &mut impl FnMut(Group, &mut usize),
-    next_rank: &mut usize,
+    pool: &mut PersistentPool<Worker>,
+    sup: &mut Supervisor,
 ) {
+    if p.expired(Instant::now()) {
+        lock_unpoisoned(&sup.metrics).deadline_shed += 1;
+        p.slot.release();
+        p.reply.send(Err(ServeError::DeadlineExceeded));
+        return;
+    }
     if p.stream {
         let oldest = p.enqueued;
-        flush(
+        sup.dispatch(
+            pool,
             Group {
                 reqs: vec![p],
                 oldest,
             },
-            next_rank,
         );
         return;
     }
@@ -581,7 +982,7 @@ fn enqueue(
     group.reqs.push(p);
     if group.reqs.len() >= max_batch {
         let group = pending.remove(&bucket).expect("group just filled");
-        flush(group, next_rank);
+        sup.dispatch(pool, group);
     }
 }
 
@@ -589,8 +990,8 @@ fn enqueue(
 fn flush_expired(
     pending: &mut BTreeMap<usize, Group>,
     window: Duration,
-    flush: &mut impl FnMut(Group, &mut usize),
-    next_rank: &mut usize,
+    pool: &mut PersistentPool<Worker>,
+    sup: &mut Supervisor,
 ) {
     let now = Instant::now();
     let expired: Vec<usize> = pending
@@ -600,7 +1001,7 @@ fn flush_expired(
         .collect();
     for b in expired {
         let group = pending.remove(&b).expect("listed as expired");
-        flush(group, next_rank);
+        sup.dispatch(pool, group);
     }
 }
 
@@ -608,6 +1009,7 @@ fn flush_expired(
 mod tests {
     use super::*;
     use crate::model::AtacWorksNet;
+    use crate::serve::fault::silence_fault_panics;
     use crate::serve::BucketSet;
     use crate::util::rng::Rng;
 
@@ -626,6 +1028,7 @@ mod tests {
             workers: 1,
             warm: true,
             stream_window: None,
+            ..BatcherOpts::default()
         };
         Server::start(cfg, &params, opts).expect("server")
     }
@@ -645,6 +1048,32 @@ mod tests {
             workers: 1,
             warm: false,
             stream_window,
+            ..BatcherOpts::default()
+        };
+        Server::start(cfg, &params, opts).expect("server")
+    }
+
+    /// Single-worker, batch-of-1 server with a fault plan attached:
+    /// each request is exactly one engine-forward visit, so plan `nth`
+    /// indices line up with request submission order.
+    fn faulty_server(plan: Arc<FaultPlan>, max_restarts: usize) -> Server {
+        silence_fault_panics();
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts {
+            engine: EngineOpts {
+                buckets: BucketSet::new(&[128, 256]).expect("widths"),
+                max_batch: 1,
+                cache_capacity: 2,
+                ..EngineOpts::default()
+            },
+            window: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 1,
+            warm: true,
+            max_restarts,
+            fault: Some(plan),
+            ..BatcherOpts::default()
         };
         Server::start(cfg, &params, opts).expect("server")
     }
@@ -652,6 +1081,20 @@ mod tests {
     fn track(w: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::new(seed);
         (0..w).map(|_| rng.poisson(0.7) as f32).collect()
+    }
+
+    /// Fault-free reference bits for one request.
+    fn reference(req: &[f32]) -> InferOutput {
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = EngineOpts {
+            buckets: BucketSet::new(&[128, 256]).expect("widths"),
+            max_batch: 1,
+            cache_capacity: 2,
+            ..EngineOpts::default()
+        };
+        let mut engine = InferenceEngine::new(cfg, &params, opts).expect("engine");
+        engine.infer_one(req).expect("reference")
     }
 
     #[test]
@@ -670,6 +1113,9 @@ mod tests {
         assert_eq!(m.completed, 6);
         assert_eq!(m.rejected, 0);
         assert_eq!(m.failed, 0);
+        assert_eq!(m.worker_panics, 0);
+        assert_eq!(m.restarts, 0);
+        assert_eq!(m.deadline_shed, 0);
         assert_eq!(m.latency.count(), 6);
         assert!(m.batches >= 2, "two buckets cannot share a batch");
         assert!(m.mean_batch_occupancy() >= 1.0);
@@ -720,6 +1166,127 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.completed, 3);
         assert_eq!(m.rejected, 5);
+    }
+
+    #[test]
+    fn expired_deadlines_are_shed_before_compute_and_free_their_slots() {
+        // A long window parks the batch, so a short per-request deadline
+        // expires while queued and the worker sheds it pre-compute.
+        let server = tiny_server(4, 64, Duration::from_millis(100));
+        let doomed = server
+            .submit_with_deadline(track(100, 1), Some(Duration::from_millis(5)))
+            .expect("admitted");
+        let alive = server
+            .submit_with_deadline(track(100, 2), Some(Duration::from_secs(30)))
+            .expect("admitted");
+        assert!(matches!(
+            doomed.wait(),
+            Err(ServeError::DeadlineExceeded)
+        ));
+        let r = alive.wait().expect("generous deadline completes");
+        assert_eq!(r.output, reference(&track(100, 2)), "survivor bits intact");
+        // The shed request's admission slot came back.
+        assert_eq!(server.inflight(), 0);
+        let m = server.shutdown();
+        assert_eq!(m.deadline_shed, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0, "a shed request is not an engine failure");
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_submits() {
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts {
+            engine: EngineOpts {
+                buckets: BucketSet::new(&[128]).expect("widths"),
+                max_batch: 64,
+                cache_capacity: 1,
+                ..EngineOpts::default()
+            },
+            window: Duration::from_millis(100),
+            queue_depth: 4,
+            workers: 1,
+            warm: false,
+            deadline: Some(Duration::from_millis(5)),
+            ..BatcherOpts::default()
+        };
+        let server = Server::start(cfg, &params, opts).expect("server");
+        let t = server.submit(track(100, 3)).expect("admitted");
+        assert!(matches!(t.wait(), Err(ServeError::DeadlineExceeded)));
+        // An explicit deadline overrides the tight default.
+        let t = server
+            .submit_with_deadline(track(100, 4), Some(Duration::from_secs(30)))
+            .expect("admitted");
+        t.wait().expect("explicit deadline overrides the default");
+        let m = server.shutdown();
+        assert_eq!(m.deadline_shed, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn engine_panic_is_isolated_and_the_replica_rebuilt() {
+        let plan = Arc::new(FaultPlan::new().panic_in_forward(0, 0));
+        let server = faulty_server(Arc::clone(&plan), 3);
+        let req = track(100, 7);
+        // Request 0 hits the injected panic: its caller learns, the
+        // worker thread survives.
+        let t0 = server.submit(req.clone()).expect("admitted");
+        assert!(matches!(t0.wait(), Err(ServeError::WorkerPanic)));
+        // Request 1 runs on the rebuilt replica, bit-identical to the
+        // fault-free reference.
+        let t1 = server.submit(req.clone()).expect("still serving");
+        let r1 = t1.wait().expect("rebuilt replica serves");
+        assert_eq!(r1.output, reference(&req));
+        assert_eq!(server.inflight(), 0);
+        let m = server.shutdown();
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.worker_panics, plan.panics_fired());
+        assert_eq!(m.restarts, 0, "a caught panic needs no thread restart");
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn killed_worker_is_respawned_and_serving_resumes() {
+        let plan = Arc::new(FaultPlan::new().kill_worker(0, 0));
+        let server = faulty_server(Arc::clone(&plan), 3);
+        let req = track(100, 8);
+        // Request 0's job kills the rank thread outright; the Reply
+        // drop contract still answers the caller.
+        let t0 = server.submit(req.clone()).expect("admitted");
+        assert!(matches!(t0.wait(), Err(ServeError::WorkerPanic)));
+        // Request 1 bounces off the dead rank, waits out the backoff,
+        // and lands on the respawned worker.
+        let t1 = server.submit(req.clone()).expect("still serving");
+        let r1 = t1.wait().expect("respawned worker serves");
+        assert_eq!(r1.output, reference(&req));
+        let m = server.shutdown();
+        assert_eq!(m.restarts, 1);
+        assert_eq!(m.worker_panics, 0, "the unwind escaped the guard");
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_degrades_to_fast_errors() {
+        let plan = Arc::new(FaultPlan::new().kill_worker(0, 0).kill_worker(0, 1));
+        let server = faulty_server(plan, 1);
+        let req = track(100, 9);
+        // Kill 1 consumes the rank; kill 2 consumes its only restart.
+        for _ in 0..2 {
+            let t = server.submit(req.clone()).expect("admitted");
+            assert!(matches!(t.wait(), Err(ServeError::WorkerPanic)));
+        }
+        // The pool is (or is about to be) fully retired: the server
+        // keeps answering — with errors, promptly — instead of wedging.
+        for _ in 0..2 {
+            let t = server.submit(req.clone()).expect("admission still works");
+            assert!(matches!(t.wait(), Err(ServeError::WorkerPanic)));
+        }
+        assert_eq!(server.inflight(), 0, "no slot leaks through retirement");
+        let m = server.shutdown();
+        assert_eq!(m.restarts, 1, "budget of 1 allows exactly one respawn");
+        assert_eq!(m.completed, 0);
     }
 
     #[test]
@@ -794,6 +1361,7 @@ mod tests {
             workers: 1,
             warm: false,
             stream_window: Some(64), // snapped window 64 <= 2 * 32
+            ..BatcherOpts::default()
         };
         assert!(matches!(
             Server::start(cfg, &params, opts.clone()),

@@ -113,6 +113,8 @@ impl std::fmt::Display for BucketSet {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]

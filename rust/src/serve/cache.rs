@@ -134,6 +134,8 @@ impl<V> PlanCache<V> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]

@@ -130,6 +130,10 @@ pub struct InferenceEngine {
     /// depending on its neighbours and the bit-identity contract
     /// above would break.
     calib_scales: Option<Vec<f32>>,
+    /// Fault-injection plan + the rank identity keying its counters
+    /// (chaos tests only; see [`super::fault`]).
+    #[cfg(any(test, feature = "fault"))]
+    fault: Option<(std::sync::Arc<super::fault::FaultPlan>, usize)>,
 }
 
 /// One-time activation calibration for i8 serving: run a deterministic
@@ -219,7 +223,18 @@ impl InferenceEngine {
             warm_skipped: 0,
             group_scratch: Vec::new(),
             calib_scales,
+            #[cfg(any(test, feature = "fault"))]
+            fault: None,
         })
+    }
+
+    /// Attach a deterministic fault-injection plan (chaos tests only).
+    /// `rank` keys this engine's injection-point counters; a rebuilt
+    /// replica re-attaches the same plan, so counters continue across
+    /// the rebuild.
+    #[cfg(any(test, feature = "fault"))]
+    pub fn set_fault(&mut self, plan: std::sync::Arc<super::fault::FaultPlan>, rank: usize) {
+        self.fault = Some((plan, rank));
     }
 
     /// The engine's options (what the plans are pinned to).
@@ -390,6 +405,26 @@ impl InferenceEngine {
         out: &mut [Option<InferOutput>],
     ) -> Result<(), ServeError> {
         debug_assert!(chunk.len() <= self.opts.max_batch);
+        // Injection point `EngineForward`: one visit per chunk, before
+        // any state is touched, so a `Panic` leaves the previous entry
+        // intact (the worker rebuilds the replica regardless — its state
+        // is untrusted after an unwind) and an `Error` runs no compute.
+        #[cfg(any(test, feature = "fault"))]
+        if let Some((plan, rank)) = &self.fault {
+            use super::fault::{FaultAction, FaultSite};
+            match plan.check(FaultSite::EngineForward, *rank) {
+                Some(FaultAction::Panic) => {
+                    panic!("fault-injected engine panic (rank {rank}, bucket {bucket})")
+                }
+                Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                Some(FaultAction::Error) => {
+                    return Err(ServeError::Plan(crate::conv1d::PlanError(
+                        "fault-injected engine error".into(),
+                    )));
+                }
+                Some(FaultAction::DropConn) | None => {}
+            }
+        }
         let (cfg, working, opts) = (self.net_cfg, &self.working, &self.opts);
         let calib = self.calib_scales.as_deref();
         let entry = self

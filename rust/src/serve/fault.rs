@@ -1,0 +1,301 @@
+//! Deterministic fault injection for the serve stack (DESIGN.md §7d).
+//!
+//! A [`FaultPlan`] is a scripted set of failures — "panic in worker `k`'s
+//! forward pass on its `n`-th chunk", "delay rank 0 by 150 ms", "drop the
+//! connection instead of answering request 2" — shared as an
+//! `Arc<FaultPlan>` between the chaos test and the components it attacks
+//! (engine, batcher worker, net handler). Each injection *site* keeps a
+//! per-rank sequence counter, so a plan describes failures by position in
+//! the deterministic execution order, and the test can assert afterwards
+//! that the stack's recovery counters (`ServeMetrics::{worker_panics,
+//! restarts, deadline_shed}`, `NetStats::handler_panics`) equal what was
+//! injected — exactly, not approximately.
+//!
+//! The module is test-only: compiled under `cfg(any(test, feature =
+//! "fault"))` so production builds carry no injection branches. The
+//! `fault` feature exists for the integration chaos suite
+//! (`tests/chaos_serve.rs`) and the fault-rate column of the
+//! `serve_load` bench, which run against the release library.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::lock_unpoisoned;
+
+/// Where a fault can fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// Inside [`super::InferenceEngine`] chunk execution — guarded by the
+    /// worker's `catch_unwind`, so a `Panic` here exercises replica
+    /// rebuild, not the supervisor.
+    EngineForward,
+    /// In the worker job prologue, *outside* the `catch_unwind` guard —
+    /// a `Panic` here kills the rank thread for real and exercises the
+    /// dispatcher's supervised restart path.
+    WorkerJob,
+    /// In the net handler while it holds the server lock — a `Panic`
+    /// here poisons the lock and kills the handler thread, exercising
+    /// poison recovery and handler cleanup.
+    NetRespond,
+}
+
+/// What happens when an injection point fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Panic with a payload containing `"fault-injected"` (chaos tests
+    /// filter the default panic hook on that marker).
+    Panic,
+    /// Sleep this long before continuing (slow worker / stalled engine).
+    Delay(Duration),
+    /// Return a deterministic engine error instead of computing.
+    Error,
+    /// Close the connection without answering (`NetRespond` only).
+    DropConn,
+}
+
+#[derive(Debug)]
+struct Point {
+    site: FaultSite,
+    /// `None` matches every rank.
+    rank: Option<usize>,
+    /// Fires on the `nth` visit (0-based) of `(site, rank)`.
+    nth: u64,
+    action: FaultAction,
+}
+
+/// A deterministic, seed-driven fault schedule. See the module docs.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    points: Vec<Point>,
+    /// Seeded rate mode: fire `Panic` at `EngineForward` with this
+    /// probability per visit, decided by a pure hash of
+    /// `(seed, rank, seq)` — reproducible across runs and threads.
+    seeded: Option<(u64, f64)>,
+    /// Per-`(site, rank)` visit counters.
+    seq: Mutex<BTreeMap<(FaultSite, usize), u64>>,
+    fired_panics: AtomicU64,
+    fired_delays: AtomicU64,
+    fired_errors: AtomicU64,
+    fired_drops: AtomicU64,
+}
+
+/// splitmix64 finalizer — a cheap, well-mixed pure hash.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Seeded rate mode for the `serve_load` bench: each
+    /// `EngineForward` visit panics with probability `rate`, decided
+    /// deterministically from `seed` and the visit's `(rank, seq)`.
+    pub fn seeded_forward_panics(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan {
+            seeded: Some((seed, rate.clamp(0.0, 1.0))),
+            ..FaultPlan::default()
+        }
+    }
+
+    fn point(mut self, site: FaultSite, rank: Option<usize>, nth: u64, action: FaultAction) -> Self {
+        self.points.push(Point {
+            site,
+            rank,
+            nth,
+            action,
+        });
+        self
+    }
+
+    /// Panic inside rank `rank`'s engine on its `nth` forward chunk
+    /// (caught by the worker; the replica is rebuilt).
+    pub fn panic_in_forward(self, rank: usize, nth: u64) -> Self {
+        self.point(FaultSite::EngineForward, Some(rank), nth, FaultAction::Panic)
+    }
+
+    /// Delay rank `rank`'s `nth` forward chunk by `d` (slow worker).
+    pub fn delay_forward(self, rank: usize, nth: u64, d: Duration) -> Self {
+        self.point(FaultSite::EngineForward, Some(rank), nth, FaultAction::Delay(d))
+    }
+
+    /// Make rank `rank`'s `nth` forward chunk fail with an engine error.
+    pub fn error_forward(self, rank: usize, nth: u64) -> Self {
+        self.point(FaultSite::EngineForward, Some(rank), nth, FaultAction::Error)
+    }
+
+    /// Kill rank `rank`'s worker thread on its `nth` job (panics outside
+    /// the worker's `catch_unwind`; the supervisor must respawn).
+    pub fn kill_worker(self, rank: usize, nth: u64) -> Self {
+        self.point(FaultSite::WorkerJob, Some(rank), nth, FaultAction::Panic)
+    }
+
+    /// Panic the `nth` net-handler response while it holds the server
+    /// lock (poisons it; rank is ignored at this site).
+    pub fn panic_handler(self, nth: u64) -> Self {
+        self.point(FaultSite::NetRespond, None, nth, FaultAction::Panic)
+    }
+
+    /// Drop the connection instead of answering the `nth` response.
+    pub fn drop_conn(self, nth: u64) -> Self {
+        self.point(FaultSite::NetRespond, None, nth, FaultAction::DropConn)
+    }
+
+    /// Consult the plan at an injection point. Increments the
+    /// `(site, rank)` visit counter and returns the scheduled action,
+    /// if any. Sites with no rank identity pass `rank = 0`.
+    pub fn check(&self, site: FaultSite, rank: usize) -> Option<FaultAction> {
+        let n = {
+            let mut seq = lock_unpoisoned(&self.seq);
+            let c = seq.entry((site, rank)).or_insert(0);
+            let n = *c;
+            *c += 1;
+            n
+        };
+        let action = self
+            .points
+            .iter()
+            .find(|p| p.site == site && p.rank.is_none_or(|r| r == rank) && p.nth == n)
+            .map(|p| p.action)
+            .or_else(|| {
+                let (seed, rate) = self.seeded?;
+                if site != FaultSite::EngineForward {
+                    return None;
+                }
+                let h = mix64(seed ^ mix64(((rank as u64) << 32) | n));
+                // Top 53 bits → uniform in [0, 1).
+                let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+                (u < rate).then_some(FaultAction::Panic)
+            });
+        match action {
+            Some(FaultAction::Panic) => self.fired_panics.fetch_add(1, Ordering::SeqCst),
+            Some(FaultAction::Delay(_)) => self.fired_delays.fetch_add(1, Ordering::SeqCst),
+            Some(FaultAction::Error) => self.fired_errors.fetch_add(1, Ordering::SeqCst),
+            Some(FaultAction::DropConn) => self.fired_drops.fetch_add(1, Ordering::SeqCst),
+            None => 0,
+        };
+        action
+    }
+
+    /// How many `Panic` actions have fired so far.
+    pub fn panics_fired(&self) -> u64 {
+        self.fired_panics.load(Ordering::SeqCst)
+    }
+
+    /// How many `Delay` actions have fired so far.
+    pub fn delays_fired(&self) -> u64 {
+        self.fired_delays.load(Ordering::SeqCst)
+    }
+
+    /// How many `Error` actions have fired so far.
+    pub fn errors_fired(&self) -> u64 {
+        self.fired_errors.load(Ordering::SeqCst)
+    }
+
+    /// How many `DropConn` actions have fired so far.
+    pub fn drops_fired(&self) -> u64 {
+        self.fired_drops.load(Ordering::SeqCst)
+    }
+}
+
+/// Install (once, process-wide) a panic hook that suppresses the default
+/// backtrace noise for deliberately injected panics — payloads containing
+/// `"fault-injected"` — and defers to the previous hook for everything
+/// else. Chaos tests call this so a green run's output isn't a wall of
+/// expected panic reports; a *real* panic still prints normally.
+pub fn silence_fault_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("fault-injected") {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    #[test]
+    fn points_fire_on_their_exact_visit_and_count() {
+        let plan = FaultPlan::new()
+            .panic_in_forward(1, 2)
+            .delay_forward(0, 0, Duration::from_millis(5))
+            .kill_worker(1, 0);
+        // Rank 0 forward: delay on visit 0, nothing after.
+        assert_eq!(
+            plan.check(FaultSite::EngineForward, 0),
+            Some(FaultAction::Delay(Duration::from_millis(5)))
+        );
+        assert_eq!(plan.check(FaultSite::EngineForward, 0), None);
+        // Rank 1 forward: visits 0 and 1 clean, 2 panics — its counter
+        // is independent of rank 0's.
+        assert_eq!(plan.check(FaultSite::EngineForward, 1), None);
+        assert_eq!(plan.check(FaultSite::EngineForward, 1), None);
+        assert_eq!(
+            plan.check(FaultSite::EngineForward, 1),
+            Some(FaultAction::Panic)
+        );
+        // WorkerJob counts separately from EngineForward.
+        assert_eq!(
+            plan.check(FaultSite::WorkerJob, 1),
+            Some(FaultAction::Panic)
+        );
+        assert_eq!(plan.panics_fired(), 2);
+        assert_eq!(plan.delays_fired(), 1);
+        assert_eq!(plan.errors_fired(), 0);
+    }
+
+    #[test]
+    fn rankless_sites_match_any_rank() {
+        let plan = FaultPlan::new().drop_conn(1).panic_handler(2);
+        assert_eq!(plan.check(FaultSite::NetRespond, 0), None);
+        assert_eq!(
+            plan.check(FaultSite::NetRespond, 0),
+            Some(FaultAction::DropConn)
+        );
+        assert_eq!(
+            plan.check(FaultSite::NetRespond, 0),
+            Some(FaultAction::Panic)
+        );
+        assert_eq!(plan.drops_fired(), 1);
+    }
+
+    #[test]
+    fn seeded_rate_is_deterministic_and_roughly_calibrated() {
+        let a = FaultPlan::seeded_forward_panics(7, 0.05);
+        let b = FaultPlan::seeded_forward_panics(7, 0.05);
+        let fire_a: Vec<bool> = (0..2000)
+            .map(|_| a.check(FaultSite::EngineForward, 0).is_some())
+            .collect();
+        let fire_b: Vec<bool> = (0..2000)
+            .map(|_| b.check(FaultSite::EngineForward, 0).is_some())
+            .collect();
+        assert_eq!(fire_a, fire_b, "same seed must fire identically");
+        let hits = fire_a.iter().filter(|&&f| f).count();
+        assert!(
+            (50..=150).contains(&hits),
+            "5% rate over 2000 visits fired {hits} times"
+        );
+        // Other sites are untouched by rate mode.
+        assert_eq!(a.check(FaultSite::WorkerJob, 0), None);
+    }
+}

@@ -168,6 +168,8 @@ pub fn run_open_loop(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]

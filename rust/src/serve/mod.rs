@@ -34,16 +34,29 @@
 //!   zero-allocation pull parser, per-connection state machines,
 //!   backpressure on the wire and graceful drain (DESIGN.md §7b)
 //! * [`load`]    — open-loop load generation (benches + `dilconv serve`)
+//! * `fault`     — deterministic fault injection (chaos tests only;
+//!   compiled under `cfg(any(test, feature = "fault"))`, so plain doc
+//!   builds do not carry it)
+//!
+//! Serving is the crate's always-on surface, so the whole module tree
+//! denies raw unwraps: a poisoned mutex or a stray `unwrap()` must never
+//! take the process down (DESIGN.md §7d). Lock through
+//! [`lock_unpoisoned`]; test modules opt back in locally.
+#![deny(clippy::unwrap_used)]
 
 pub mod batcher;
 pub mod bucket;
 pub mod cache;
 pub mod engine;
+#[cfg(any(test, feature = "fault"))]
+pub mod fault;
 pub mod load;
 pub mod net;
 pub mod stream;
 
 pub use batcher::{BatcherOpts, BucketMetrics, Response, ServeMetrics, Server, Ticket};
+#[cfg(any(test, feature = "fault"))]
+pub use fault::{FaultAction, FaultPlan, FaultSite};
 pub use bucket::{round_up_to_block, BucketSet};
 pub use cache::PlanCache;
 pub use engine::{EngineOpts, InferOutput, InferenceEngine};
@@ -51,7 +64,25 @@ pub use load::{run_open_loop, LoadReport, WidthMix};
 pub use net::{NetOpts, NetServer, NetStats, WireError, WireEvent, WireParser};
 pub use stream::{StreamStats, StreamingSession};
 
+use std::sync::{Mutex, MutexGuard};
+
 use crate::conv1d::PlanError;
+
+/// Lock `m`, recovering the data if a panicking holder poisoned it.
+///
+/// Serving mutexes guard telemetry counters, connection lists and the
+/// server handle — values that stay internally consistent even when a
+/// holder panicked mid-update (worst case: one counter increment is
+/// lost). Propagating the poison instead would cascade a single worker
+/// or handler panic into every thread that later touches the lock,
+/// which is exactly what the self-healing contract (DESIGN.md §7d)
+/// forbids.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Everything that can go wrong between `submit` and a response.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +99,14 @@ pub enum ServeError {
     QueueFull { depth: usize },
     /// The server dropped the request while shutting down.
     ShuttingDown,
+    /// The request's deadline expired while it was queued; it was shed
+    /// before any compute ran (DESIGN.md §7d).
+    DeadlineExceeded,
+    /// A worker panicked while this request was on it — either mid
+    /// forward pass (the replica was rebuilt before the next batch) or
+    /// while the request sat in a dead rank's queue. The request itself
+    /// is not retried; the caller decides.
+    WorkerPanic,
     /// Plan construction failed for a bucket entry.
     Plan(PlanError),
     /// Invalid serving configuration.
@@ -86,6 +125,12 @@ impl std::fmt::Display for ServeError {
                 write!(f, "queue full ({depth} requests in flight)")
             }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::DeadlineExceeded => {
+                write!(f, "request deadline exceeded (shed before dispatch)")
+            }
+            ServeError::WorkerPanic => {
+                write!(f, "worker panicked while holding the request")
+            }
             ServeError::Plan(e) => write!(f, "{e}"),
             ServeError::Config(msg) => write!(f, "serve config error: {msg}"),
         }

@@ -18,16 +18,28 @@
 //! they are on (every accepted ticket resolves — the batcher flushes
 //! pending groups before its workers stop), and only connections that
 //! outlive the drain budget are force-closed.
+//!
+//! Robustness (DESIGN.md §7d): handler threads run under
+//! `catch_unwind`, so a panic mid-connection closes that connection —
+//! cleanup still runs — and never takes the accept loop or another
+//! handler with it; every shared lock is acquired poison-recovering. An
+//! **idle reaper** closes connections that have sent nothing for
+//! [`NetOpts::idle_timeout`], so dead clients stop pinning
+//! `max_connections` slots. Version-2 request frames may carry a
+//! deadline, forwarded to the batcher's deadline-aware admission.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::super::batcher::{ServeMetrics, Server};
-use super::super::ServeError;
+#[cfg(any(test, feature = "fault"))]
+use super::super::fault::{FaultAction, FaultPlan, FaultSite};
+use super::super::{lock_unpoisoned, ServeError};
 use super::wire::{encode_response_header, status, WireEvent, WireParser, RESP_FLAG_STREAMED};
 
 /// Front-end policy knobs.
@@ -41,6 +53,13 @@ pub struct NetOpts {
     /// Graceful-drain budget at shutdown: connections still serving
     /// after this long are force-closed.
     pub drain: Duration,
+    /// Idle reaper: a connection that has sent nothing for this long
+    /// (and is between frames) is closed, so dead clients stop pinning
+    /// connection slots. `Duration::ZERO` disables the reaper.
+    pub idle_timeout: Duration,
+    /// Deterministic fault-injection plan (chaos tests only).
+    #[cfg(any(test, feature = "fault"))]
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for NetOpts {
@@ -49,6 +68,9 @@ impl Default for NetOpts {
             max_connections: 64,
             max_width: 1 << 22,
             drain: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(60),
+            #[cfg(any(test, feature = "fault"))]
+            fault: None,
         }
     }
 }
@@ -68,6 +90,13 @@ pub struct NetStats {
     pub requests_malformed: u64,
     /// OK responses that took the streaming path.
     pub requests_streamed: u64,
+    /// Requests shed with `DEADLINE_EXCEEDED` (expired while queued).
+    pub requests_deadline: u64,
+    /// Handler threads that panicked (their connection closed; the
+    /// server kept serving).
+    pub handler_panics: u64,
+    /// Connections closed by the idle reaper.
+    pub connections_idle_closed: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
 }
@@ -91,6 +120,9 @@ struct Shared {
     requests_error: AtomicU64,
     requests_malformed: AtomicU64,
     requests_streamed: AtomicU64,
+    requests_deadline: AtomicU64,
+    handler_panics: AtomicU64,
+    connections_idle_closed: AtomicU64,
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
 }
@@ -105,6 +137,9 @@ impl Shared {
             requests_error: self.requests_error.load(Ordering::Relaxed),
             requests_malformed: self.requests_malformed.load(Ordering::Relaxed),
             requests_streamed: self.requests_streamed.load(Ordering::Relaxed),
+            requests_deadline: self.requests_deadline.load(Ordering::Relaxed),
+            handler_panics: self.handler_panics.load(Ordering::Relaxed),
+            connections_idle_closed: self.connections_idle_closed.load(Ordering::Relaxed),
             bytes_in: self.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
         }
@@ -147,6 +182,9 @@ impl NetServer {
             requests_error: AtomicU64::new(0),
             requests_malformed: AtomicU64::new(0),
             requests_streamed: AtomicU64::new(0),
+            requests_deadline: AtomicU64::new(0),
+            handler_panics: AtomicU64::new(0),
+            connections_idle_closed: AtomicU64::new(0),
             bytes_in: AtomicU64::new(0),
             bytes_out: AtomicU64::new(0),
         });
@@ -182,7 +220,7 @@ impl NetServer {
         self.stop_net();
         self.done = true;
         let stats = self.shared.snapshot();
-        let server = self.shared.server.lock().unwrap().take();
+        let server = lock_unpoisoned(&self.shared.server).take();
         let metrics = server
             .expect("the batcher is taken only here, once")
             .shutdown();
@@ -201,12 +239,15 @@ impl NetServer {
             std::thread::sleep(Duration::from_millis(5));
         }
         // Anything still live overstayed the drain budget: force-close
-        // its socket so the handler unblocks and exits.
-        for (_, s) in self.shared.conns.lock().unwrap().drain(..) {
+        // its socket so the handler unblocks and exits. Poison-recovering
+        // locks keep this drain working even after a handler panicked
+        // while holding `conns` or `handlers` (the self-healing contract:
+        // one panic must never deadlock shutdown).
+        for (_, s) in lock_unpoisoned(&self.shared.conns).drain(..) {
             let _ = s.shutdown(Shutdown::Both);
         }
         let handlers: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+            std::mem::take(&mut *lock_unpoisoned(&self.shared.handlers));
         for h in handlers {
             let _ = h.join();
         }
@@ -243,12 +284,21 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
                 shared.connections_accepted.fetch_add(1, Ordering::Relaxed);
                 let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
                 if let Ok(clone) = stream.try_clone() {
-                    shared.conns.lock().unwrap().push((id, clone));
+                    lock_unpoisoned(&shared.conns).push((id, clone));
                 }
                 let conn_shared = Arc::clone(shared);
                 let handle = std::thread::spawn(move || {
-                    handle_conn(&conn_shared, id, stream);
-                    conn_shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+                    // Panic isolation: a handler that unwinds (a bug, or
+                    // an injected NetRespond fault) closes only its own
+                    // connection — the cleanup below still runs, so the
+                    // connection slot and the force-close list stay
+                    // consistent and the rest of the server is untouched.
+                    let outcome =
+                        catch_unwind(AssertUnwindSafe(|| handle_conn(&conn_shared, id, stream)));
+                    if outcome.is_err() {
+                        conn_shared.handler_panics.fetch_add(1, Ordering::Relaxed);
+                    }
+                    lock_unpoisoned(&conn_shared.conns).retain(|(cid, _)| *cid != id);
                     conn_shared.live.fetch_sub(1, Ordering::SeqCst);
                 });
                 // Reap handles of handlers that already exited so the
@@ -256,7 +306,7 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
                 // long-running server's lifetime (finished threads need
                 // no join — dropping their handle detaches nothing that
                 // still runs).
-                let mut handlers = shared.handlers.lock().unwrap();
+                let mut handlers = lock_unpoisoned(&shared.handlers);
                 handlers.retain(|h| !h.is_finished());
                 handlers.push(handle);
             }
@@ -275,14 +325,17 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
 /// until EOF, a protocol violation, a dead peer, or shutdown observed
 /// at a frame boundary.
 fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
-    // A short read timeout lets the handler observe shutdown between
-    // frames without a dedicated wake-up channel.
+    // A short read timeout lets the handler observe shutdown (and count
+    // idle time) between frames without a dedicated wake-up channel.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     let mut parser = WireParser::new(shared.opts.max_width);
     let mut buf = vec![0u8; 16 * 1024];
     let mut payload: Vec<f32> = Vec::new();
     let mut filled = 0usize;
     let mut mid_request = false;
+    let mut deadline_ms: u16 = 0;
+    let idle_timeout = shared.opts.idle_timeout;
+    let mut last_activity = Instant::now();
     'conn: loop {
         // Parse everything buffered, looping until the parser asks for
         // more input. The loop must not gate on `pos < filled`: a frame
@@ -303,6 +356,7 @@ fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
                             payload.clear();
                             payload.reserve(h.width);
                             mid_request = true;
+                            deadline_ms = h.deadline_ms;
                         }
                         WireEvent::Payload(raw) => {
                             for c in raw.chunks_exact(4) {
@@ -312,7 +366,7 @@ fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
                         WireEvent::PayloadSplit(v) => payload.push(v),
                         WireEvent::End => {
                             mid_request = false;
-                            if !respond(shared, &mut stream, &payload) {
+                            if !respond(shared, &mut stream, &payload, deadline_ms) {
                                 break 'conn;
                             }
                             if shared.stop.load(Ordering::SeqCst) {
@@ -338,6 +392,7 @@ fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
             Ok(0) => break, // EOF
             Ok(n) => {
                 filled = n;
+                last_activity = Instant::now();
                 shared.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
             }
             Err(e)
@@ -347,19 +402,45 @@ fn handle_conn(shared: &Shared, _id: u64, mut stream: TcpStream) {
                 if shared.stop.load(Ordering::SeqCst) && !mid_request {
                     break;
                 }
+                // Idle reaper: a silent peer (even one that went dark
+                // mid-frame) stops pinning a connection slot. The reply
+                // to its unfinished frame is simply never written.
+                if !idle_timeout.is_zero() && last_activity.elapsed() >= idle_timeout {
+                    shared
+                        .connections_idle_closed
+                        .fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
             }
             Err(_) => break,
         }
     }
 }
 
-/// Submit one parsed request and write the response frame. Returns
-/// false when the connection is no longer writable.
-fn respond(shared: &Shared, stream: &mut TcpStream, payload: &[f32]) -> bool {
+/// Submit one parsed request (forwarding its wire deadline, if any) and
+/// write the response frame. Returns false when the connection is no
+/// longer writable (or an injected fault dropped it).
+fn respond(shared: &Shared, stream: &mut TcpStream, payload: &[f32], deadline_ms: u16) -> bool {
+    // Injection point `NetRespond`: a `Panic` here unwinds the handler
+    // while it holds the server lock — poisoning it — to prove the
+    // poison-recovering accessors and handler cleanup; `DropConn`
+    // closes the connection without answering (chaos tests only).
+    #[cfg(any(test, feature = "fault"))]
+    if let Some(plan) = &shared.opts.fault {
+        match plan.check(FaultSite::NetRespond, 0) {
+            Some(FaultAction::Panic) => {
+                let _guard = lock_unpoisoned(&shared.server);
+                panic!("fault-injected handler panic (holding the server lock)");
+            }
+            Some(FaultAction::DropConn) => return false,
+            _ => {}
+        }
+    }
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(u64::from(deadline_ms)));
     let submitted = {
-        let guard = shared.server.lock().unwrap();
+        let guard = lock_unpoisoned(&shared.server);
         match guard.as_ref() {
-            Some(server) => server.submit(payload.to_vec()),
+            Some(server) => server.submit_with_deadline(payload.to_vec(), deadline),
             None => Err(ServeError::ShuttingDown),
         }
     };
@@ -391,10 +472,16 @@ fn respond(shared: &Shared, stream: &mut TcpStream, payload: &[f32]) -> bool {
             }
         }
         Err(e) => {
-            if matches!(e, ServeError::QueueFull { .. }) {
-                shared.requests_backpressure.fetch_add(1, Ordering::Relaxed);
-            } else {
-                shared.requests_error.fetch_add(1, Ordering::Relaxed);
+            match e {
+                ServeError::QueueFull { .. } => {
+                    shared.requests_backpressure.fetch_add(1, Ordering::Relaxed);
+                }
+                ServeError::DeadlineExceeded => {
+                    shared.requests_deadline.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    shared.requests_error.fetch_add(1, Ordering::Relaxed);
+                }
             }
             let hdr = encode_response_header(e.wire_status(), 0, 0);
             if stream.write_all(&hdr).is_ok() {
@@ -442,7 +529,7 @@ mod tests {
             queue_depth: 8,
             workers: 1,
             warm: false,
-            stream_window: None,
+            ..BatcherOpts::default()
         };
         Server::start(cfg, &params, opts).expect("server")
     }

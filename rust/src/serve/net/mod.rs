@@ -21,16 +21,21 @@
 //!   copied (`tests/wire_alloc.rs` proves the zero-allocation claim with
 //!   a counting global allocator).
 //! * [`frontend`] — the listener, per-connection state machines, the
-//!   connection cap, per-connection/stream counters ([`NetStats`]) and
+//!   connection cap, the idle-connection reaper, handler panic
+//!   isolation, per-connection/stream counters ([`NetStats`]) and
 //!   graceful drain on shutdown (in-flight requests finish, stragglers
 //!   past the drain budget are force-closed).
+//!
+//! Protocol version 2 adds an optional per-request deadline (ms) to the
+//! request header; v1 frames are still accepted (no deadline).
 
 pub mod frontend;
 pub mod wire;
 
 pub use frontend::{NetOpts, NetServer, NetStats};
 pub use wire::{
-    encode_request_header, encode_response_header, parse_response_header, RequestHeader, WireError,
-    WireEvent, WireParser, DTYPE_F32, REQ_HEADER_LEN, RESP_FLAG_STREAMED, RESP_HEADER_LEN,
-    WIRE_MAGIC, WIRE_VERSION,
+    encode_request_header, encode_request_header_with_deadline, encode_response_header,
+    parse_response_header, RequestHeader, WireError, WireEvent, WireParser, DTYPE_F32,
+    REQ_HEADER_LEN, RESP_FLAG_STREAMED, RESP_HEADER_LEN, WIRE_MAGIC, WIRE_VERSION,
+    WIRE_VERSION_MIN,
 };

@@ -7,13 +7,20 @@
 //! ```text
 //!  offset  size  field
 //!       0     2  magic "DC"
-//!       2     1  protocol version (= 1)
+//!       2     1  protocol version (= 2; version 1 still accepted)
 //!       3     1  flags (reserved, must-ignore)
 //!       4     1  dtype (0 = f32)
-//!       5     3  reserved
+//!       5     1  reserved
+//!       6     2  deadline_ms: u16 (v2; 0 = no deadline. Reserved in v1)
 //!       8     4  width: u32, payload sample count (> 0)
 //!      12  4·width  payload: width f32 samples
 //! ```
+//!
+//! Version 2 adds the request deadline in milliseconds at offsets 6–7 —
+//! bytes that were reserved-zero in v1, so a v1 frame parses under the
+//! v2 rules as "no deadline" and the version bump is backward
+//! compatible: the parser accepts both versions and zeroes the deadline
+//! for v1.
 //!
 //! Response:
 //!
@@ -43,8 +50,11 @@ use crate::serve::ServeError;
 
 /// First two bytes of every request frame.
 pub const WIRE_MAGIC: [u8; 2] = *b"DC";
-/// Protocol version this build speaks.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version this build emits (it accepts
+/// [`WIRE_VERSION_MIN`]`..=`[`WIRE_VERSION`]).
+pub const WIRE_VERSION: u8 = 2;
+/// Oldest protocol version still accepted.
+pub const WIRE_VERSION_MIN: u8 = 1;
 /// Request dtype code for f32 little-endian samples (the only dtype).
 pub const DTYPE_F32: u8 = 0;
 /// Request header length in bytes.
@@ -73,6 +83,12 @@ pub mod status {
     pub const CONFIG: u8 = 6;
     /// The request frame violated the wire protocol.
     pub const MALFORMED: u8 = 7;
+    /// The request's deadline expired while it was queued; it was shed
+    /// before any compute ran (v2).
+    pub const DEADLINE_EXCEEDED: u8 = 8;
+    /// A worker panicked while holding the request; the replica was
+    /// rebuilt or the rank respawned, but this request was lost (v2).
+    pub const INTERNAL: u8 = 9;
 }
 
 impl ServeError {
@@ -83,6 +99,8 @@ impl ServeError {
             ServeError::EmptyRequest => status::EMPTY,
             ServeError::QueueFull { .. } => status::BUSY,
             ServeError::ShuttingDown => status::SHUTTING_DOWN,
+            ServeError::DeadlineExceeded => status::DEADLINE_EXCEEDED,
+            ServeError::WorkerPanic => status::INTERNAL,
             ServeError::Plan(_) => status::PLAN,
             ServeError::Config(_) => status::CONFIG,
         }
@@ -105,6 +123,8 @@ impl ServeError {
             status::EMPTY => Some(ServeError::EmptyRequest),
             status::BUSY => Some(ServeError::QueueFull { depth: 0 }),
             status::SHUTTING_DOWN => Some(ServeError::ShuttingDown),
+            status::DEADLINE_EXCEEDED => Some(ServeError::DeadlineExceeded),
+            status::INTERNAL => Some(ServeError::WorkerPanic),
             status::PLAN => Some(ServeError::Plan(PlanError(String::new()))),
             status::CONFIG => Some(ServeError::Config(String::new())),
             _ => None,
@@ -118,6 +138,9 @@ pub struct RequestHeader {
     pub version: u8,
     pub flags: u8,
     pub dtype: u8,
+    /// Request deadline in milliseconds (0 = none; always 0 for a v1
+    /// frame, whose bytes 6–7 are reserved-zero).
+    pub deadline_ms: u16,
     /// Payload sample count (validated: non-zero, within the cap).
     pub width: usize,
 }
@@ -140,7 +163,10 @@ impl std::fmt::Display for WireError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             WireError::BadMagic(m) => write!(f, "bad magic {m:?} (want {WIRE_MAGIC:?})"),
-            WireError::BadVersion(v) => write!(f, "unsupported version {v} (want {WIRE_VERSION})"),
+            WireError::BadVersion(v) => write!(
+                f,
+                "unsupported version {v} (want {WIRE_VERSION_MIN}..={WIRE_VERSION})"
+            ),
             WireError::BadDtype(d) => write!(f, "unsupported dtype {d} (want {DTYPE_F32} = f32)"),
             WireError::ZeroWidth => write!(f, "zero-width request"),
             WireError::WidthTooLarge { width, max } => {
@@ -228,7 +254,7 @@ impl WireParser {
                 if h[0] != WIRE_MAGIC[0] || h[1] != WIRE_MAGIC[1] {
                     return Err(WireError::BadMagic([h[0], h[1]]));
                 }
-                if h[2] != WIRE_VERSION {
+                if !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&h[2]) {
                     return Err(WireError::BadVersion(h[2]));
                 }
                 if h[4] != DTYPE_F32 {
@@ -254,6 +280,13 @@ impl WireParser {
                         version: h[2],
                         flags: h[3],
                         dtype: h[4],
+                        // v1 reserves bytes 6–7 (must be sent zero, but
+                        // robustness demands we not trust that).
+                        deadline_ms: if h[2] >= 2 {
+                            u16::from_le_bytes([h[6], h[7]])
+                        } else {
+                            0
+                        },
                         width: width as usize,
                     }),
                 ))
@@ -325,9 +358,20 @@ impl WireParser {
     }
 }
 
-/// Encode a request header for `width` f32 samples.
+/// Encode a request header for `width` f32 samples (no deadline).
 pub fn encode_request_header(width: u32, flags: u8) -> [u8; REQ_HEADER_LEN] {
+    encode_request_header_with_deadline(width, flags, 0)
+}
+
+/// Encode a request header carrying a deadline in milliseconds
+/// (0 = none). Always emits the current protocol version.
+pub fn encode_request_header_with_deadline(
+    width: u32,
+    flags: u8,
+    deadline_ms: u16,
+) -> [u8; REQ_HEADER_LEN] {
     let w = width.to_le_bytes();
+    let d = deadline_ms.to_le_bytes();
     [
         WIRE_MAGIC[0],
         WIRE_MAGIC[1],
@@ -335,8 +379,8 @@ pub fn encode_request_header(width: u32, flags: u8) -> [u8; REQ_HEADER_LEN] {
         flags,
         DTYPE_F32,
         0,
-        0,
-        0,
+        d[0],
+        d[1],
         w[0],
         w[1],
         w[2],
@@ -361,6 +405,8 @@ pub fn parse_response_header(h: &[u8; RESP_HEADER_LEN]) -> (u8, u8, usize) {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     /// Drive a parser over `bytes` in chunks of `chunk`, decoding the
@@ -503,6 +549,8 @@ mod tests {
             ServeError::EmptyRequest,
             ServeError::QueueFull { depth: 256 },
             ServeError::ShuttingDown,
+            ServeError::DeadlineExceeded,
+            ServeError::WorkerPanic,
             ServeError::Plan(PlanError("boom".into())),
             ServeError::Config("bad".into()),
         ];
@@ -532,6 +580,32 @@ mod tests {
     }
 
     #[test]
+    fn v1_frames_still_parse_with_no_deadline() {
+        // A v1 client's frame: version byte 1, bytes 5..8 reserved-zero.
+        let samples: Vec<f32> = (0..7).map(|i| i as f32 * 1.5).collect();
+        let mut bytes = frame(&samples, 3);
+        bytes[2] = 1;
+        for chunk in [1, 5, bytes.len()] {
+            let mut p = WireParser::new(1 << 20);
+            let (h, payload, ended) = run(&mut p, &bytes, chunk);
+            assert!(ended, "chunk {chunk}");
+            assert_eq!(h.version, 1);
+            assert_eq!(h.flags, 3);
+            assert_eq!(h.deadline_ms, 0, "v1 carries no deadline");
+            assert_eq!(payload, samples);
+        }
+        // Stale garbage in a v1 frame's reserved deadline bytes must be
+        // ignored, not misread as a deadline.
+        let mut dirty = frame(&samples, 0);
+        dirty[2] = 1;
+        dirty[6] = 0xff;
+        dirty[7] = 0xff;
+        let mut p = WireParser::new(1 << 20);
+        let (h, _, _) = run(&mut p, &dirty, dirty.len());
+        assert_eq!(h.deadline_ms, 0);
+    }
+
+    #[test]
     fn header_encoding_round_trips() {
         let h = encode_request_header(12345, 2);
         let mut p = WireParser::new(1 << 20);
@@ -539,6 +613,17 @@ mod tests {
             Ok((REQ_HEADER_LEN, WireEvent::Header(got))) => {
                 assert_eq!(got.width, 12345);
                 assert_eq!(got.flags, 2);
+                assert_eq!(got.version, WIRE_VERSION);
+                assert_eq!(got.deadline_ms, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let hd = encode_request_header_with_deadline(99, 0, 1500);
+        let mut p = WireParser::new(1 << 20);
+        match p.pull(&hd[..]) {
+            Ok((REQ_HEADER_LEN, WireEvent::Header(got))) => {
+                assert_eq!(got.width, 99);
+                assert_eq!(got.deadline_ms, 1500);
             }
             other => panic!("unexpected {other:?}"),
         }

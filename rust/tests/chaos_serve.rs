@@ -1,0 +1,486 @@
+//! Chaos suite: deterministic fault injection driven end-to-end over
+//! TCP (DESIGN.md §7d). Requires the `fault` feature (Cargo skips this
+//! target without it):
+//!
+//! ```text
+//! cargo test --release --features fault --test chaos_serve
+//! ```
+//!
+//! Every scenario scripts an exact [`FaultPlan`], drives real traffic
+//! through the full stack (wire parser → handler → batcher → worker →
+//! engine), and then holds the recovery telemetry to the plan — the
+//! stack must report exactly the faults that were injected, nothing
+//! more, and every surviving response must be bit-identical to a
+//! fault-free run:
+//!
+//! * panic-storm: engine panics mid-forward across {f32, bf16, i8};
+//!   victims get `INTERNAL`, survivors keep their bits, replicas rebuild
+//! * kill + respawn: a worker thread dies outright; the supervisor
+//!   respawns it and serving resumes over the same connection
+//! * kill mid-stream: the panic lands inside a halo-overlapped
+//!   streaming session; the next streamed request stitches perfectly
+//! * slow worker + deadline: a delayed rank makes a queued request
+//!   expire; it is shed with `DEADLINE_EXCEEDED` before any compute
+//! * dropped/garbled connections: `DropConn` injection and protocol
+//!   garbage both leave the server healthy for the next client
+//! * handler panic while holding the server lock: poison recovery,
+//!   handler cleanup, and shutdown still drains promptly
+//!   (regression: the drain loop used to `lock().unwrap()` and deadlock)
+//! * shutdown racing a worker restart with a streamed session in
+//!   flight: drain waits for the respawned rank's tickets
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dilconv1d::machine::Precision;
+use dilconv1d::model::{AtacWorksNet, NetConfig};
+use dilconv1d::serve::fault::silence_fault_panics;
+use dilconv1d::serve::net::wire::status;
+use dilconv1d::serve::net::{
+    encode_request_header, encode_request_header_with_deadline, parse_response_header, NetOpts,
+    NetServer, RESP_FLAG_STREAMED, RESP_HEADER_LEN,
+};
+use dilconv1d::serve::{
+    round_up_to_block, BatcherOpts, BucketSet, EngineOpts, FaultPlan, InferenceEngine, ServeError,
+    Server,
+};
+use dilconv1d::util::rng::Rng;
+
+fn net_cfg() -> NetConfig {
+    NetConfig::tiny()
+}
+
+fn params() -> Vec<f32> {
+    AtacWorksNet::init(net_cfg(), 42).pack_params()
+}
+
+fn engine_opts(precision: Precision) -> EngineOpts {
+    EngineOpts {
+        buckets: BucketSet::new(&[128, 256]).expect("bucket widths"),
+        max_batch: 1,
+        cache_capacity: 2,
+        precision,
+        ..EngineOpts::default()
+    }
+}
+
+/// Single-worker, batch-of-1 server with a fault plan attached: each
+/// in-bucket request is exactly one `EngineForward` visit, so plan
+/// `nth` indices line up with request arrival order on a serial
+/// connection. The streaming route is on (window 128) for the
+/// mid-stream scenarios.
+fn faulty_batcher(plan: &Arc<FaultPlan>, precision: Precision, max_restarts: usize) -> Server {
+    silence_fault_panics();
+    Server::start(
+        net_cfg(),
+        &params(),
+        BatcherOpts {
+            engine: engine_opts(precision),
+            window: Duration::from_millis(1),
+            queue_depth: 16,
+            workers: 1,
+            warm: true,
+            stream_window: Some(128),
+            max_restarts,
+            fault: Some(Arc::clone(plan)),
+            ..BatcherOpts::default()
+        },
+    )
+    .expect("server")
+}
+
+/// Fault-free reference bits for one in-bucket request.
+fn reference(req: &[f32], precision: Precision) -> (Vec<f32>, Vec<f32>) {
+    let mut engine =
+        InferenceEngine::new(net_cfg(), &params(), engine_opts(precision)).expect("engine");
+    let out = engine.infer_one(req).expect("reference");
+    (out.denoised, out.logits)
+}
+
+/// Fault-free reference for an over-wide (streamed) request:
+/// whole-sequence evaluation, which the streaming tests tie
+/// bit-identically to the halo-overlapped route.
+fn stream_reference(req: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let opts = EngineOpts {
+        buckets: BucketSet::new(&[round_up_to_block(req.len())]).expect("bucket widths"),
+        max_batch: 1,
+        cache_capacity: 1,
+        ..EngineOpts::default()
+    };
+    let mut engine = InferenceEngine::new(net_cfg(), &params(), opts).expect("engine");
+    let out = engine.infer_one(req).expect("reference");
+    (out.denoised, out.logits)
+}
+
+fn track(w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..w).map(|_| rng.poisson(0.8) as f32).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ------------------------------------------------------------ wire client
+
+fn send_request(stream: &mut TcpStream, signal: &[f32]) -> std::io::Result<()> {
+    stream.write_all(&encode_request_header(signal.len() as u32, 0))?;
+    let mut bytes = Vec::with_capacity(signal.len() * 4);
+    for v in signal {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&bytes)
+}
+
+/// v2 frame carrying a per-request deadline in the header.
+fn send_request_with_deadline(
+    stream: &mut TcpStream,
+    signal: &[f32],
+    deadline_ms: u16,
+) -> std::io::Result<()> {
+    stream.write_all(&encode_request_header_with_deadline(
+        signal.len() as u32,
+        0,
+        deadline_ms,
+    ))?;
+    let mut bytes = Vec::with_capacity(signal.len() * 4);
+    for v in signal {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&bytes)
+}
+
+fn read_f32s(stream: &mut TcpStream, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    stream.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read one response frame: `(status, flags, payload)` where the payload
+/// (denoised, logits) is present only on `OK`.
+#[allow(clippy::type_complexity)]
+fn read_response(
+    stream: &mut TcpStream,
+) -> std::io::Result<(u8, u8, Option<(Vec<f32>, Vec<f32>)>)> {
+    let mut hdr = [0u8; RESP_HEADER_LEN];
+    stream.read_exact(&mut hdr)?;
+    let (code, flags, width) = parse_response_header(&hdr);
+    if code == status::OK {
+        let den = read_f32s(stream, width)?;
+        let log = read_f32s(stream, width)?;
+        Ok((code, flags, Some((den, log))))
+    } else {
+        Ok((code, flags, None))
+    }
+}
+
+fn wait_for_drain(net: &NetServer) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while net.connections() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(net.connections(), 0, "handlers released their slots");
+}
+
+// ------------------------------------------------------------------ tests
+
+/// Panic-storm: scripted engine panics on forward visits 1 and 4. The
+/// victims get `INTERNAL` on the wire, the survivors are bit-identical
+/// to a fault-free engine at the same precision, and the recovery
+/// counters equal the plan — across all three serving precisions.
+#[test]
+fn panic_storm_isolates_victims_and_keeps_survivor_bits() {
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
+        let plan = Arc::new(FaultPlan::new().panic_in_forward(0, 1).panic_in_forward(0, 4));
+        let net = NetServer::bind(
+            "127.0.0.1:0",
+            faulty_batcher(&plan, precision, 3),
+            NetOpts::default(),
+        )
+        .expect("bind");
+        let mut conn = TcpStream::connect(net.local_addr()).expect("connect");
+        let reqs: Vec<Vec<f32>> = [100usize, 140, 200, 90, 250, 128]
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| track(w, 300 + i as u64))
+            .collect();
+        // Serial requests on one connection: arrival order == forward
+        // visit order, so requests 1 and 4 are the victims.
+        for (i, req) in reqs.iter().enumerate() {
+            send_request(&mut conn, req).expect("send");
+            let (code, _, payload) = read_response(&mut conn).expect("recv");
+            if i == 1 || i == 4 {
+                assert_eq!(code, status::INTERNAL, "{precision:?}: victim {i}");
+                assert!(payload.is_none());
+            } else {
+                assert_eq!(code, status::OK, "{precision:?}: survivor {i}");
+                let (den, log) = payload.expect("payload on OK");
+                let (want_den, want_log) = reference(req, precision);
+                assert_eq!(bits(&den), bits(&want_den), "{precision:?}: survivor {i}");
+                assert_eq!(bits(&log), bits(&want_log), "{precision:?}: survivor {i}");
+            }
+        }
+        drop(conn);
+        wait_for_drain(&net);
+        let (m, stats) = net.shutdown();
+        assert_eq!(m.worker_panics, 2, "{precision:?}");
+        assert_eq!(m.worker_panics, plan.panics_fired(), "{precision:?}");
+        assert_eq!(m.restarts, 0, "{precision:?}: caught panics need no respawn");
+        assert_eq!((m.completed, m.failed), (4, 2), "{precision:?}");
+        assert_eq!(stats.requests_ok, 4, "{precision:?}");
+        assert_eq!(stats.requests_error, 2, "{precision:?}");
+        assert_eq!(stats.handler_panics, 0, "{precision:?}");
+    }
+}
+
+/// A worker thread killed outright (panic outside the engine guard):
+/// the victim still gets an answer (`INTERNAL`), the supervisor
+/// respawns the rank, and the same connection keeps being served with
+/// intact bits.
+#[test]
+fn killed_worker_is_respawned_and_the_connection_keeps_serving() {
+    let plan = Arc::new(FaultPlan::new().kill_worker(0, 0));
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        faulty_batcher(&plan, Precision::F32, 3),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let mut conn = TcpStream::connect(net.local_addr()).expect("connect");
+    let req = track(120, 17);
+    send_request(&mut conn, &req).expect("send victim");
+    let (code, _, _) = read_response(&mut conn).expect("recv victim");
+    assert_eq!(code, status::INTERNAL, "the killed rank's job is answered");
+    send_request(&mut conn, &req).expect("send survivor");
+    let (code, _, payload) = read_response(&mut conn).expect("recv survivor");
+    assert_eq!(code, status::OK);
+    let (den, log) = payload.expect("payload");
+    let (want_den, want_log) = reference(&req, Precision::F32);
+    assert_eq!(bits(&den), bits(&want_den));
+    assert_eq!(bits(&log), bits(&want_log));
+    drop(conn);
+    wait_for_drain(&net);
+    let (m, stats) = net.shutdown();
+    assert_eq!(m.restarts, 1);
+    assert_eq!(m.worker_panics, 0, "the unwind escaped the engine guard");
+    assert_eq!(stats.requests_ok, 1);
+    assert_eq!(stats.requests_error, 1);
+}
+
+/// The panic lands mid-stream — on the third window of a
+/// halo-overlapped streaming session. The streamed request fails as a
+/// unit, the replica rebuilds, and the next streamed request stitches
+/// bit-identically to whole-sequence evaluation.
+#[test]
+fn mid_stream_panic_fails_the_stream_and_the_next_one_stitches_clean() {
+    let plan = Arc::new(FaultPlan::new().panic_in_forward(0, 2));
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        faulty_batcher(&plan, Precision::F32, 3),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let mut conn = TcpStream::connect(net.local_addr()).expect("connect");
+    let signal = track(700, 23); // > largest bucket (256) → streamed
+    send_request(&mut conn, &signal).expect("send victim");
+    let (code, _, _) = read_response(&mut conn).expect("recv victim");
+    assert_eq!(code, status::INTERNAL, "window 2 of the stream panicked");
+    send_request(&mut conn, &signal).expect("send survivor");
+    let (code, flags, payload) = read_response(&mut conn).expect("recv survivor");
+    assert_eq!(code, status::OK);
+    assert_ne!(flags & RESP_FLAG_STREAMED, 0, "took the streaming route");
+    let (den, log) = payload.expect("payload");
+    let (want_den, want_log) = stream_reference(&signal);
+    assert_eq!(bits(&den), bits(&want_den), "stitched bits after rebuild");
+    assert_eq!(bits(&log), bits(&want_log));
+    drop(conn);
+    wait_for_drain(&net);
+    let (m, stats) = net.shutdown();
+    assert_eq!(m.worker_panics, 1);
+    assert_eq!(m.worker_panics, plan.panics_fired());
+    assert_eq!(m.restarts, 0);
+    assert_eq!((m.streamed, stats.requests_streamed), (1, 1));
+}
+
+/// Slow worker + deadline: rank 0's first forward stalls 400 ms, so a
+/// second request with a 30 ms wire deadline expires while queued. It
+/// is shed with `DEADLINE_EXCEEDED` before any compute; the slow
+/// request itself completes with intact bits.
+#[test]
+fn queued_requests_past_their_wire_deadline_are_shed_not_computed() {
+    let plan = Arc::new(FaultPlan::new().delay_forward(0, 0, Duration::from_millis(400)));
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        faulty_batcher(&plan, Precision::F32, 3),
+        NetOpts::default(),
+    )
+    .expect("bind");
+    let slow_req = track(100, 31);
+    let doomed_req = track(130, 32);
+    let mut slow = TcpStream::connect(net.local_addr()).expect("connect slow");
+    send_request(&mut slow, &slow_req).expect("send slow");
+    // Let the slow request reach the (single) worker and start its
+    // 400 ms stall before the doomed one is even submitted.
+    std::thread::sleep(Duration::from_millis(100));
+    let mut doomed = TcpStream::connect(net.local_addr()).expect("connect doomed");
+    send_request_with_deadline(&mut doomed, &doomed_req, 30).expect("send doomed");
+    let (code, _, payload) = read_response(&mut slow).expect("recv slow");
+    assert_eq!(code, status::OK, "the stalled request still completes");
+    let (den, log) = payload.expect("payload");
+    let (want_den, want_log) = reference(&slow_req, Precision::F32);
+    assert_eq!(bits(&den), bits(&want_den), "a shed neighbour changes no bits");
+    assert_eq!(bits(&log), bits(&want_log));
+    let (code, _, payload) = read_response(&mut doomed).expect("recv doomed");
+    assert_eq!(code, status::DEADLINE_EXCEEDED);
+    assert!(payload.is_none());
+    drop(slow);
+    drop(doomed);
+    wait_for_drain(&net);
+    let (m, stats) = net.shutdown();
+    assert_eq!(m.deadline_shed, 1);
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0, "a shed request is not an engine failure");
+    assert_eq!(plan.delays_fired(), 1);
+    assert_eq!(stats.requests_deadline, 1);
+    assert_eq!(stats.requests_ok, 1);
+}
+
+/// Connection hygiene under abuse: a `DropConn` injection closes one
+/// client without an answer, a second client sends protocol garbage
+/// and gets `MALFORMED`, and a third, well-behaved client is served
+/// normally. Afterwards every connection slot is back.
+#[test]
+fn dropped_and_garbled_connections_leave_the_server_healthy() {
+    let plan = Arc::new(FaultPlan::new().drop_conn(0));
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        faulty_batcher(&plan, Precision::F32, 3),
+        NetOpts {
+            fault: Some(Arc::clone(&plan)),
+            ..NetOpts::default()
+        },
+    )
+    .expect("bind");
+    let req = track(100, 41);
+    // Victim: the server hangs up instead of answering.
+    let mut victim = TcpStream::connect(net.local_addr()).expect("connect victim");
+    send_request(&mut victim, &req).expect("send victim");
+    let mut byte = [0u8; 1];
+    assert_eq!(
+        victim.read(&mut byte).expect("EOF, not data"),
+        0,
+        "DropConn closes without a response frame"
+    );
+    assert_eq!(plan.drops_fired(), 1);
+    // Vandal: garbage where a frame header belongs.
+    let mut vandal = TcpStream::connect(net.local_addr()).expect("connect vandal");
+    vandal.write_all(b"this is not a frame").expect("send junk");
+    let (code, _, _) = read_response(&mut vandal).expect("recv malformed");
+    assert_eq!(code, status::MALFORMED);
+    assert_eq!(vandal.read(&mut byte).expect("closed"), 0);
+    // Citizen: served exactly as if the other two never happened.
+    let mut citizen = TcpStream::connect(net.local_addr()).expect("connect citizen");
+    send_request(&mut citizen, &req).expect("send");
+    let (code, _, payload) = read_response(&mut citizen).expect("recv");
+    assert_eq!(code, status::OK);
+    let (den, log) = payload.expect("payload");
+    let (want_den, want_log) = reference(&req, Precision::F32);
+    assert_eq!(bits(&den), bits(&want_den));
+    assert_eq!(bits(&log), bits(&want_log));
+    drop(victim);
+    drop(vandal);
+    drop(citizen);
+    wait_for_drain(&net);
+    let (m, stats) = net.shutdown();
+    assert_eq!(stats.requests_malformed, 1);
+    assert_eq!(stats.requests_ok, 1);
+    assert_eq!(m.worker_panics, 0);
+}
+
+/// Regression (satellite 2): a handler that panics while holding the
+/// server lock used to poison it and deadlock `NetServer::shutdown`'s
+/// drain loop (`lock().unwrap()` on `conns`/`handlers`). Now: the
+/// panic is counted, the connection cleaned up, the next client served
+/// through the recovered lock, and shutdown drains promptly.
+#[test]
+fn handler_panic_poisons_nothing_and_shutdown_still_drains() {
+    silence_fault_panics();
+    let plan = Arc::new(FaultPlan::new().panic_handler(0));
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        faulty_batcher(&plan, Precision::F32, 3),
+        NetOpts {
+            drain: Duration::from_secs(5),
+            fault: Some(Arc::clone(&plan)),
+            ..NetOpts::default()
+        },
+    )
+    .expect("bind");
+    let req = track(100, 53);
+    // Victim: the handler panics holding the server lock; the client
+    // sees the connection close with no response frame.
+    let mut victim = TcpStream::connect(net.local_addr()).expect("connect victim");
+    send_request(&mut victim, &req).expect("send victim");
+    let mut byte = [0u8; 1];
+    assert_eq!(victim.read(&mut byte).expect("EOF"), 0);
+    // Survivor: the poisoned lock is recovered, serving continues.
+    let mut survivor = TcpStream::connect(net.local_addr()).expect("connect survivor");
+    send_request(&mut survivor, &req).expect("send survivor");
+    let (code, _, payload) = read_response(&mut survivor).expect("recv");
+    assert_eq!(code, status::OK);
+    let (den, log) = payload.expect("payload");
+    let (want_den, want_log) = reference(&req, Precision::F32);
+    assert_eq!(bits(&den), bits(&want_den));
+    assert_eq!(bits(&log), bits(&want_log));
+    drop(victim);
+    drop(survivor);
+    wait_for_drain(&net);
+    let begin = Instant::now();
+    let (_, stats) = net.shutdown();
+    assert!(
+        begin.elapsed() < Duration::from_secs(10),
+        "shutdown drained instead of deadlocking on the poisoned lock"
+    );
+    assert_eq!(stats.handler_panics, 1);
+    assert_eq!(plan.panics_fired(), 1);
+    assert_eq!(stats.requests_ok, 1);
+}
+
+/// Satellite 3, direct server API: `Server::shutdown` races a worker
+/// restart with a streamed session and a batched request in flight.
+/// The drain must wait for the *respawned* rank's tickets — both
+/// resolve with correct bits after shutdown returns.
+#[test]
+fn shutdown_drain_waits_for_the_respawned_workers_inflight_tickets() {
+    let plan = Arc::new(FaultPlan::new().kill_worker(0, 0));
+    let server = faulty_batcher(&plan, Precision::F32, 3);
+    // Job 0 kills the only rank; the Reply-on-drop contract answers.
+    let victim = server.submit(track(100, 61)).expect("admitted");
+    assert!(matches!(victim.wait(), Err(ServeError::WorkerPanic)));
+    // Queue a streamed session and a batched request against the dead
+    // rank, then shut down immediately: the drain must respawn the
+    // rank and wait out both tickets rather than dropping them.
+    let wide = track(700, 62);
+    let narrow = track(120, 63);
+    let streamed = server.submit(wide.clone()).expect("streamed admitted");
+    let batched = server.submit(narrow.clone()).expect("batched admitted");
+    let m = server.shutdown();
+    let rs = streamed.wait().expect("streamed ticket resolved by drain");
+    let rb = batched.wait().expect("batched ticket resolved by drain");
+    assert!(rs.streamed && !rb.streamed);
+    let (want_den, want_log) = stream_reference(&wide);
+    assert_eq!(bits(&rs.output.denoised), bits(&want_den));
+    assert_eq!(bits(&rs.output.logits), bits(&want_log));
+    let (want_den, want_log) = reference(&narrow, Precision::F32);
+    assert_eq!(bits(&rb.output.denoised), bits(&want_den));
+    assert_eq!(bits(&rb.output.logits), bits(&want_log));
+    assert_eq!(m.restarts, 1, "the drain respawned the killed rank");
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.streamed, 1);
+    assert_eq!(m.worker_panics, 0);
+}

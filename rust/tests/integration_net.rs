@@ -53,6 +53,7 @@ fn batcher(queue_depth: usize, window: Duration, max_batch: usize, workers: usiz
             workers,
             warm: false,
             stream_window: Some(128),
+            ..BatcherOpts::default()
         },
     )
     .expect("server")
@@ -290,6 +291,52 @@ fn the_connection_cap_rejects_with_busy_at_accept() {
     let (_, stats) = net.shutdown();
     assert_eq!(stats.connections_accepted, 2);
     assert_eq!(stats.connections_rejected, 1);
+}
+
+#[test]
+fn idle_connections_are_reaped_and_stop_pinning_slots() {
+    // A dead client (connected, then silent) must be closed by the idle
+    // reaper so it stops pinning a max_connections slot — here the cap
+    // is 1, so the reaper is the only thing letting the next client in.
+    let net = NetServer::bind(
+        "127.0.0.1:0",
+        batcher(16, Duration::from_millis(1), 2, 1),
+        NetOpts {
+            max_connections: 1,
+            idle_timeout: Duration::from_millis(100),
+            ..NetOpts::default()
+        },
+    )
+    .expect("bind");
+    let addr = net.local_addr();
+    let mut dead = TcpStream::connect(addr).expect("connect");
+    // A served request proves the connection is registered (and that
+    // activity resets the idle clock rather than counting from accept).
+    send_request(&mut dead, &track(64, 5)).expect("send");
+    assert_eq!(read_response(&mut dead).expect("recv").0, status::OK);
+    // Go silent. The reaper closes the connection from the server side.
+    dead.set_read_timeout(Some(Duration::from_secs(5)))
+        .expect("timeout");
+    let mut rest = [0u8; 1];
+    assert_eq!(
+        dead.read(&mut rest).expect("server closes the idle conn"),
+        0,
+        "reaper sends EOF, not data"
+    );
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while net.connections() > 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(net.connections(), 0, "idle connection released its slot");
+    // The freed slot admits a live client.
+    let mut live = TcpStream::connect(addr).expect("connect #2");
+    send_request(&mut live, &track(64, 6)).expect("send");
+    assert_eq!(read_response(&mut live).expect("recv").0, status::OK);
+    drop(live);
+    let (_, stats) = net.shutdown();
+    assert_eq!(stats.connections_idle_closed, 1);
+    assert_eq!(stats.connections_rejected, 0, "nobody hit the cap");
+    assert_eq!(stats.requests_ok, 2);
 }
 
 #[test]

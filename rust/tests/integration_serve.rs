@@ -178,7 +178,7 @@ fn server_end_to_end_matches_the_sequential_reference() {
                     queue_depth: 64,
                     workers: 2,
                     warm: true,
-                    stream_window: None,
+                    ..BatcherOpts::default()
                 },
             )
             .expect("server");
@@ -232,7 +232,7 @@ fn admission_control_backpressure_and_recovery() {
             queue_depth: 4,
             workers: 1,
             warm: false,
-            stream_window: None,
+            ..BatcherOpts::default()
         },
     )
     .expect("server");
@@ -273,7 +273,7 @@ fn oversized_requests_are_rejected_not_truncated() {
             queue_depth: 8,
             workers: 1,
             warm: false,
-            stream_window: None,
+            ..BatcherOpts::default()
         },
     )
     .expect("server");

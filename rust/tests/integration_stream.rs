@@ -150,6 +150,7 @@ fn server_streams_over_wide_requests_end_to_end() {
             workers: 2,
             warm: false,
             stream_window: Some(128),
+            ..BatcherOpts::default()
         },
     )
     .expect("server");

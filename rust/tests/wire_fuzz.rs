@@ -1,0 +1,303 @@
+//! Fuzz-style property tests for [`WireParser`] (DESIGN.md §7b/§7d).
+//!
+//! The parser sits directly on attacker-controlled bytes, so its
+//! contract is tested adversarially: for *arbitrary* byte streams —
+//! seeded-random storms, junk biased to get deep into header
+//! validation, and valid frames — delivered at *every* fragmentation,
+//! the parser must
+//!
+//! * never panic (it is the process's first line of defence),
+//! * always make progress (each step consumes input, or is a
+//!   frame-`End`, or is an error the caller handles by `reset()`),
+//! * never claim to consume more bytes than it was offered,
+//! * only report `NeedMore` once the offered chunk is fully drained,
+//! * and reassemble valid frames bit-exactly regardless of how the
+//!   bytes were split across reads.
+//!
+//! No external fuzzer: the in-tree seeded [`Rng`] drives generation, so
+//! every failure is reproducible from the printed seed.
+
+use dilconv1d::serve::net::wire::{
+    encode_request_header, encode_request_header_with_deadline, RequestHeader, WireError,
+    WireEvent, WireParser, REQ_HEADER_LEN,
+};
+use dilconv1d::util::rng::Rng;
+
+/// Feed `bytes` to a fresh parser in `frag`-byte reads, enforcing the
+/// safety invariants on every step. Errors are handled the way the
+/// frontend handles them — `reset()`, then resync by skipping one byte.
+/// Returns `(events, errors)` seen.
+fn drive(bytes: &[u8], frag: usize, max_width: usize) -> (usize, usize) {
+    let mut parser = WireParser::new(max_width);
+    let mut pos = 0usize;
+    let mut steps = 0usize;
+    let cap = 8 * bytes.len() + 1024;
+    let (mut events, mut errors) = (0usize, 0usize);
+    while pos < bytes.len() {
+        let end = pos.saturating_add(frag).min(bytes.len());
+        let mut chunk = &bytes[pos..end];
+        loop {
+            steps += 1;
+            assert!(
+                steps <= cap,
+                "no termination: {steps} steps over {} bytes (frag {frag})",
+                bytes.len()
+            );
+            match parser.pull(chunk) {
+                Ok((n, ev)) => {
+                    assert!(
+                        n <= chunk.len(),
+                        "consumed {n} of a {}-byte chunk",
+                        chunk.len()
+                    );
+                    events += 1;
+                    chunk = &chunk[n..];
+                    match ev {
+                        WireEvent::NeedMore => {
+                            assert!(
+                                chunk.is_empty(),
+                                "NeedMore left {} bytes unread",
+                                chunk.len()
+                            );
+                            break;
+                        }
+                        WireEvent::Payload(b) => {
+                            assert!(!b.is_empty() && b.len() % 4 == 0);
+                        }
+                        WireEvent::Header(h) => {
+                            assert!(h.width > 0 && h.width <= max_width);
+                        }
+                        WireEvent::PayloadSplit(_) | WireEvent::End => {}
+                    }
+                    if chunk.is_empty() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    errors += 1;
+                    parser.reset();
+                    // Framing is lost; skip one byte and rescan.
+                    match chunk.split_first() {
+                        Some((_, rest)) => chunk = rest,
+                        None => break,
+                    }
+                    if chunk.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+        pos = end;
+    }
+    (events, errors)
+}
+
+const FRAGMENTATIONS: [usize; 8] = [1, 2, 3, 5, 8, 13, 64, usize::MAX];
+
+fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+/// A valid frame (header + payload bytes), plus its expected parse.
+fn valid_frame(rng: &mut Rng) -> (Vec<u8>, RequestHeader, Vec<u8>) {
+    let width = 1 + rng.below(64);
+    let flags = (rng.next_u64() & 0xff) as u8;
+    // Finite payload values so the f32 round trip through
+    // `PayloadSplit` is trivially bit-stable.
+    let payload: Vec<u8> = (0..width)
+        .flat_map(|_| (rng.poisson(1.3) as f32).to_le_bytes())
+        .collect();
+    let (hdr, deadline_ms) = if rng.chance(0.5) {
+        let d = (rng.next_u64() & 0xffff) as u16;
+        (encode_request_header_with_deadline(width as u32, flags, d), d)
+    } else {
+        (encode_request_header(width as u32, flags), 0)
+    };
+    let mut bytes = hdr.to_vec();
+    bytes.extend_from_slice(&payload);
+    let want = RequestHeader {
+        version: hdr[2],
+        flags,
+        dtype: hdr[4],
+        deadline_ms,
+        width,
+    };
+    (bytes, want, payload)
+}
+
+#[test]
+fn arbitrary_byte_storms_never_panic_and_always_terminate() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(0xF0_22 + seed);
+        let len = 64 + rng.below(3000);
+        let bytes = random_bytes(&mut rng, len);
+        for &frag in &FRAGMENTATIONS {
+            drive(&bytes, frag, 1 << 12);
+        }
+    }
+}
+
+/// Junk biased to survive the early header checks (magic, then magic +
+/// version, …) drives the parser deep into validation and, sometimes,
+/// into bogus-but-legal payload states. Same invariants must hold.
+#[test]
+fn adversarial_near_miss_headers_never_panic() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(0xBAD_C0DE + seed);
+        let mut bytes = Vec::new();
+        for _ in 0..40 {
+            match rng.below(4) {
+                0 => bytes.extend_from_slice(&valid_frame(&mut rng).0),
+                1 => {
+                    // Magic + random remainder of a header.
+                    bytes.extend_from_slice(b"DC");
+                    let tail = random_bytes(&mut rng, REQ_HEADER_LEN - 2);
+                    bytes.extend_from_slice(&tail);
+                }
+                2 => {
+                    // Magic + valid version + random remainder — gets
+                    // past version into dtype/width validation.
+                    bytes.extend_from_slice(b"DC");
+                    bytes.push(if rng.chance(0.5) { 1 } else { 2 });
+                    let tail = random_bytes(&mut rng, REQ_HEADER_LEN - 3);
+                    bytes.extend_from_slice(&tail);
+                }
+                _ => {
+                    let n = 1 + rng.below(40);
+                    let junk = random_bytes(&mut rng, n);
+                    bytes.extend_from_slice(&junk);
+                }
+            }
+        }
+        for &frag in &FRAGMENTATIONS {
+            drive(&bytes, frag, 1 << 12);
+        }
+    }
+}
+
+/// A stream of only valid frames parses with zero errors at every
+/// fragmentation, and the reassembled headers + payload bytes are
+/// exactly what was encoded — whether a sample arrived whole
+/// (`Payload`) or split across reads (`PayloadSplit`).
+#[test]
+fn valid_streams_reassemble_bit_exactly_at_every_fragmentation() {
+    let mut rng = Rng::new(0x60_0D);
+    let mut bytes = Vec::new();
+    let mut want: Vec<(RequestHeader, Vec<u8>)> = Vec::new();
+    for _ in 0..12 {
+        let (frame, hdr, payload) = valid_frame(&mut rng);
+        bytes.extend_from_slice(&frame);
+        want.push((hdr, payload));
+    }
+    for &frag in &FRAGMENTATIONS {
+        let mut parser = WireParser::new(1 << 12);
+        let mut got: Vec<(RequestHeader, Vec<u8>)> = Vec::new();
+        let mut cur: Option<(RequestHeader, Vec<u8>)> = None;
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            let end = pos.saturating_add(frag).min(bytes.len());
+            let mut chunk = &bytes[pos..end];
+            loop {
+                let (n, ev) = parser.pull(chunk).expect("valid stream must not error");
+                chunk = &chunk[n..];
+                match ev {
+                    WireEvent::NeedMore => break,
+                    WireEvent::Header(h) => cur = Some((h, Vec::new())),
+                    WireEvent::Payload(b) => {
+                        cur.as_mut().expect("payload after header").1.extend(b)
+                    }
+                    WireEvent::PayloadSplit(v) => cur
+                        .as_mut()
+                        .expect("split after header")
+                        .1
+                        .extend(v.to_le_bytes()),
+                    WireEvent::End => got.push(cur.take().expect("end after header")),
+                }
+                if chunk.is_empty() {
+                    break;
+                }
+            }
+            pos = end;
+        }
+        // The final End may still be pending (it is emitted on the pull
+        // *after* the last payload byte).
+        if let (0, WireEvent::End) = parser.pull(&[]).expect("trailing end") {
+            if let Some(frame) = cur.take() {
+                got.push(frame);
+            }
+        }
+        assert_eq!(got.len(), want.len(), "frag {frag}: frame count");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.0, w.0, "frag {frag}: header of frame {i}");
+            assert_eq!(g.1, w.1, "frag {frag}: payload bytes of frame {i}");
+        }
+    }
+}
+
+/// Every rejection is a typed, terminal error: the parser refuses the
+/// frame, `reset()` restores it, and the very next valid frame parses
+/// to completion.
+#[test]
+fn every_error_class_is_terminal_and_reset_recovers() {
+    let cases: Vec<(Vec<u8>, WireError)> = vec![
+        (
+            {
+                let mut h = encode_request_header(4, 0).to_vec();
+                h[0] = b'X';
+                h
+            },
+            WireError::BadMagic([b'X', b'C']),
+        ),
+        (
+            {
+                let mut h = encode_request_header(4, 0).to_vec();
+                h[2] = 0;
+                h
+            },
+            WireError::BadVersion(0),
+        ),
+        (
+            {
+                let mut h = encode_request_header(4, 0).to_vec();
+                h[2] = 77;
+                h
+            },
+            WireError::BadVersion(77),
+        ),
+        (
+            {
+                let mut h = encode_request_header(4, 0).to_vec();
+                h[4] = 9;
+                h
+            },
+            WireError::BadDtype(9),
+        ),
+        (
+            encode_request_header(0, 0).to_vec(),
+            WireError::ZeroWidth,
+        ),
+        (
+            encode_request_header(5000, 0).to_vec(),
+            WireError::WidthTooLarge {
+                width: 5000,
+                max: 4096,
+            },
+        ),
+    ];
+    for (bad, want) in cases {
+        let mut parser = WireParser::new(4096);
+        let got = parser.pull(&bad).expect_err("must reject");
+        assert_eq!(got, want);
+        parser.reset();
+        // Recovery: a full valid frame parses cleanly after the reset.
+        let mut rng = Rng::new(1);
+        let (frame, hdr, _) = valid_frame(&mut rng);
+        let (n, ev) = parser.pull(&frame).expect("header after reset");
+        assert_eq!(n, REQ_HEADER_LEN);
+        assert_eq!(ev, WireEvent::Header(hdr));
+        let (n, ev) = parser.pull(&frame[REQ_HEADER_LEN..]).expect("payload");
+        assert_eq!(n, frame.len() - REQ_HEADER_LEN);
+        assert!(matches!(ev, WireEvent::Payload(_)));
+        assert!(matches!(parser.pull(&[]), Ok((0, WireEvent::End))));
+    }
+}
