@@ -11,7 +11,7 @@ use dilconv1d::conv1d::forward::{forward, forward_a_offs, forward_with_scratch};
 use dilconv1d::conv1d::layout::kcs_to_skc;
 use dilconv1d::conv1d::simd::{active, Isa, MicroKernelSet};
 use dilconv1d::conv1d::test_util::rnd;
-use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, ExecCtx, Partition, PostOps};
+use dilconv1d::conv1d::{Backend, ConvParams, ConvPlan, ExecCtx, Partition, PlanOptions, PostOps};
 use dilconv1d::machine::{calibrate_host, project, MachineSpec, Precision, Strategy};
 use dilconv1d::model::{AtacWorksNet, NetConfig, NetPlan, Tensor};
 
@@ -99,7 +99,8 @@ fn main() {
         forward(&p, &x, &skc, &mut out, 1);
         std::hint::black_box(&out);
     });
-    let mut plan = ConvPlan::new(p, Backend::Brgemm, Precision::F32, 1, wt).expect("plan");
+    let mut plan =
+        ConvPlan::build(p, wt, PlanOptions::new().backend(Backend::Brgemm)).expect("plan");
     let mut out = vec![0.0f32; n * k * p.q()];
     let t_plan = time_fn(1, reps, || {
         plan.execute_forward_into(&x, &mut out);
@@ -272,15 +273,25 @@ fn main() {
     let wg = rnd(pg.k * pg.c * pg.s, 0xB1);
     let xg = rnd(pg.n * pg.c * pg.w, 0xB2);
     let mut out_g = vec![0.0f32; pg.n * pg.k * pg.q()];
-    let mut plan_batch = ConvPlan::new(pg, Backend::Brgemm, Precision::F32, threads, wg.clone())
-        .expect("plan");
+    let mut plan_batch = ConvPlan::build(
+        pg,
+        wg.clone(),
+        PlanOptions::new().backend(Backend::Brgemm).threads(threads),
+    )
+    .expect("plan");
     let t_batch = time_fn(1, reps, || {
         plan_batch.execute_forward_into(&xg, &mut out_g);
         std::hint::black_box(&out_g);
     });
-    let mut plan_grid = ConvPlan::new(pg, Backend::Brgemm, Precision::F32, threads, wg)
-        .expect("plan")
-        .with_partition(Partition::Grid);
+    let mut plan_grid = ConvPlan::build(
+        pg,
+        wg,
+        PlanOptions::new()
+            .backend(Backend::Brgemm)
+            .threads(threads)
+            .partition(Partition::Grid),
+    )
+    .expect("plan");
     let t_grid = time_fn(1, reps, || {
         plan_grid.execute_forward_into(&xg, &mut out_g);
         std::hint::black_box(&out_g);

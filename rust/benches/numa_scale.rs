@@ -1,0 +1,193 @@
+//! BENCH — NUMA scale-out (DESIGN.md §6b): the hierarchical all-reduce
+//! vs the monolithic global ring at the AtacWorks gradient size across
+//! emulated socket shapes (8 ranks split 1/2/4 ways), and the
+//! socket-sharded serve dispatcher vs the flat pool in sequences/second
+//! — both paths are bit-identical to their flat counterparts, so the
+//! only question this bench answers is time. Written to
+//! `BENCH_numa.json`; under `BENCH_STRICT` the hierarchical reduction
+//! must not be slower than the monolithic ring at ≥2 emulated sockets.
+
+use dilconv1d::bench_harness::{self, time_auto};
+use dilconv1d::dist::allreduce::ring_allreduce;
+use dilconv1d::dist::{hierarchical_allreduce, CommModel, Placement, Topology};
+use dilconv1d::machine::workload::{model_epoch, Workload};
+use dilconv1d::machine::{MachineSpec, Precision, Strategy};
+use dilconv1d::model::{AtacWorksNet, NetConfig};
+use dilconv1d::serve::{BatcherOpts, BucketSet, EngineOpts, Server, WidthMix};
+use dilconv1d::util::rng::Rng;
+
+fn bufs(p: usize, len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(13);
+    (0..p)
+        .map(|_| (0..len).map(|_| rng.normal(0.0, 1.0) as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let smoke = bench_harness::smoke();
+    let budget = if smoke { 0.02 } else { 0.3 };
+    let reps = if smoke { 1 } else { 5 };
+
+    // ---- hierarchical vs monolithic reduction ----
+    const RANKS: usize = 8;
+    let grad_len = NetConfig::default().param_count();
+    println!(
+        "numa_scale bench: {RANKS} ranks at gradient length {grad_len} \
+         (the 25-layer AtacWorks model)"
+    );
+    println!(
+        "{:>8} | {:>14} | {:>14} | note",
+        "sockets", "monolithic", "hierarchical"
+    );
+    let base = bufs(RANKS, grad_len);
+    let mut b = base.clone();
+    let t_mono = time_auto(budget, reps, || {
+        b.clone_from(&base);
+        ring_allreduce(&mut b);
+        std::hint::black_box(&b);
+    });
+    let mut want = base.clone();
+    ring_allreduce(&mut want);
+    let mut reduce_rows = Vec::new();
+    for sockets in [1usize, 2, 4] {
+        let placement = Placement::new(RANKS, sockets);
+        let mut h = base.clone();
+        let t_hier = time_auto(budget, reps, || {
+            h.clone_from(&base);
+            hierarchical_allreduce(&mut h, placement);
+            std::hint::black_box(&h);
+        });
+        // Bit-identity spot check before trusting the timing.
+        for (rank, (got, exp)) in h.iter().zip(&want).enumerate() {
+            for (i, (g, e)) in got.iter().zip(exp).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    e.to_bits(),
+                    "hierarchical diverged at {sockets} sockets (rank {rank}, elem {i})"
+                );
+            }
+        }
+        let slower = t_hier.median_secs > t_mono.median_secs;
+        println!(
+            "{sockets:>8} | {:>12.2}ms | {:>12.2}ms | {}",
+            t_mono.median_secs * 1e3,
+            t_hier.median_secs * 1e3,
+            if sockets == 1 {
+                "flat placement: degenerates to the ring"
+            } else if slower {
+                "slower than the monolithic ring"
+            } else {
+                "per-socket threads pipeline the chunks"
+            }
+        );
+        if sockets >= 2 && slower {
+            eprintln!(
+                "WARN: hierarchical all-reduce slower than monolithic at {sockets} sockets: \
+                 {:.3}ms vs {:.3}ms",
+                t_hier.median_secs * 1e3,
+                t_mono.median_secs * 1e3
+            );
+            if bench_harness::strict() {
+                panic!(
+                    "hierarchical all-reduce must not lose to the monolithic ring at \
+                     {sockets} emulated sockets / {RANKS} ranks"
+                );
+            }
+        }
+        reduce_rows.push((sockets, t_mono.median_secs, t_hier.median_secs));
+    }
+
+    // ---- socket-sharded vs flat serving ----
+    let net_cfg = NetConfig::tiny();
+    let params = AtacWorksNet::init(net_cfg, 42).pack_params();
+    let buckets = BucketSet::new(&[128, 256]).expect("bucket widths");
+    let requests = if smoke { 32 } else { 256 };
+    let rate = 2_000.0;
+    println!("\nserve: {requests} open-loop requests at {rate}/s, 4 workers");
+    println!(
+        "{:>8} | {:>9} | {:>9} | {:>9}",
+        "sockets", "seq/s", "p50 ms", "p99 ms"
+    );
+    let mut serve_rows = Vec::new();
+    for sockets in [1usize, 2, 4] {
+        let server = Server::start(
+            net_cfg,
+            &params,
+            BatcherOpts::default()
+                .with_engine(
+                    EngineOpts::default()
+                        .with_buckets(buckets.clone())
+                        .with_max_batch(4)
+                        .with_cache_capacity(2),
+                )
+                .with_window(std::time::Duration::from_millis(1))
+                .with_queue_depth(256)
+                .with_workers(4)
+                .with_sockets(sockets),
+        )
+        .expect("server");
+        let mix = WidthMix::bucket_mix(&buckets).expect("width mix");
+        let report = dilconv1d::serve::run_open_loop(&server, &mix, rate, requests, 5);
+        let m = server.shutdown();
+        assert_eq!(m.per_socket.len(), sockets, "per-socket telemetry rows");
+        println!(
+            "{sockets:>8} | {:>9.1} | {:>9.2} | {:>9.2}",
+            report.seq_per_sec(),
+            report.latency.p50() * 1e3,
+            report.latency.p99() * 1e3,
+        );
+        serve_rows.push((sockets, report.seq_per_sec(), report.latency.p50() * 1e3));
+    }
+
+    // ---- modeled roofline: per-socket vs whole-node efficiency ----
+    // The per-socket column divides by one socket's peak, the node
+    // column by `MachineSpec::peak_node` — the gap is the communication
+    // + reserved-core cost of scaling out (paper Sec. 4.5).
+    let spec = MachineSpec::cooper_lake();
+    let w = Workload::paper();
+    let comm = CommModel::fabric();
+    let flops = w.train_flops_per_sample() as f64 * w.train_segments as f64;
+    println!("\nmodeled CPX f32 epoch: per-socket vs whole-node efficiency");
+    for s in [1usize, 8] {
+        let t = model_epoch(&w, &spec, Precision::F32, Strategy::Brgemm, &Topology::xeon(s), &comm);
+        let socket_eff = flops / s as f64 / t.compute_secs / spec.peak(Precision::F32);
+        let node_eff = flops / (t.compute_secs + t.comm_secs) / spec.peak_node(Precision::F32, s);
+        println!(
+            "{s:>2} socket(s): socket eff {:>5.1}%  node eff {:>5.1}%",
+            socket_eff * 100.0,
+            node_eff * 100.0
+        );
+    }
+
+    // ---- trajectory rows (BENCH_numa.json at the repo root) ----
+    let mut json = String::from(
+        "{\n  \"bench\": \"numa_scale\",\n  \"ranks\": 8,\n  \"grad_len\": ",
+    );
+    json.push_str(&format!("{grad_len},\n  \"reduce\": [\n"));
+    for (i, (s, mono, hier)) in reduce_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"sockets\": {s}, \"monolithic_ms\": {:.4}, \"hierarchical_ms\": {:.4}}}{}\n",
+            mono * 1e3,
+            hier * 1e3,
+            if i + 1 < reduce_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"serve\": [\n");
+    for (i, (s, sps, p50)) in serve_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"sockets\": {s}, \"seq_per_sec\": {sps:.2}, \"p50_ms\": {p50:.3}}}{}\n",
+            if i + 1 < serve_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out_path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_numa.json"
+    } else {
+        "BENCH_numa.json"
+    };
+    match std::fs::write(out_path, &json) {
+        Ok(()) => println!("\nbench rows written to {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
+    }
+    println!("numa_scale bench done");
+}

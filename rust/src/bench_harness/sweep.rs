@@ -4,7 +4,7 @@
 //! DESIGN.md §4).
 
 use crate::conv1d::test_util::rnd;
-use crate::conv1d::{Backend, ConvParams, ConvPlan, Partition, PostOps};
+use crate::conv1d::{Backend, ConvParams, ConvPlan, Partition, PlanOptions, PostOps};
 use crate::machine::{project, Measurement, Precision, Strategy};
 use crate::machine::spec::MachineSpec;
 
@@ -100,8 +100,15 @@ pub fn run_point(
     } else {
         Precision::F32
     };
-    let mut plan = ConvPlan::new(p, backend, plan_precision, cfg.threads, wt)
-        .expect("sweep plan construction");
+    let mut plan = ConvPlan::build(
+        p,
+        wt,
+        PlanOptions::new()
+            .backend(backend)
+            .precision(plan_precision)
+            .threads(cfg.threads),
+    )
+    .expect("sweep plan construction");
     let timing = match pass {
         Pass::Forward => {
             let mut out = vec![0.0f32; p.n * p.k * p.q()];
@@ -175,9 +182,16 @@ pub fn run_point_tuned(
         .expect("invalid sweep point");
     let x = rnd(p.n * p.c * p.w, 0xC0 + q as u64);
     let wt = rnd(p.k * p.c * p.s, 0xF1 + s as u64);
-    let mut plan = ConvPlan::tuned(p, Precision::F32, cfg.threads, Partition::default(), wt)
-        .expect("tuned plan construction")
-        .with_post_ops(post);
+    let mut plan = ConvPlan::build(
+        p,
+        wt,
+        PlanOptions::new()
+            .tuned()
+            .threads(cfg.threads)
+            .partition(Partition::default())
+            .post_ops(post),
+    )
+    .expect("tuned plan construction");
     if post.bias {
         plan.set_bias(&rnd(k, 0xB1A5));
     }

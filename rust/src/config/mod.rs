@@ -276,6 +276,13 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Worker threads, each owning a private engine + warmed plan cache.
     pub workers: usize,
+    /// NUMA sockets to shard the worker pool across (`sockets = 2`;
+    /// DESIGN.md §6b): worker ranks are split into per-socket groups,
+    /// replica state is first-touched on the owning group's threads and
+    /// the dispatcher routes each bucket to its home socket. `1` keeps
+    /// the flat single-socket pool; `0` detects the machine topology
+    /// (`CONV1D_TOPOLOGY`, then sysfs). Sharding never changes bits.
+    pub sockets: usize,
     /// Kernel-level threads per forward pass.
     pub threads: usize,
     /// Forward precision (`bf16` serves bf16-rounded weights on the bf16
@@ -340,6 +347,7 @@ impl Default for ServeConfig {
             window_ms: 2.0,
             queue_depth: 256,
             workers: 1,
+            sockets: 1,
             threads: 1,
             precision: Precision::F32,
             partition: Partition::Batch,
@@ -380,6 +388,7 @@ impl ServeConfig {
         set_usize(&doc, "serve", "max_batch", &mut cfg.max_batch);
         set_usize(&doc, "serve", "queue_depth", &mut cfg.queue_depth);
         set_usize(&doc, "serve", "workers", &mut cfg.workers);
+        set_usize(&doc, "serve", "sockets", &mut cfg.sockets);
         set_usize(&doc, "serve", "threads", &mut cfg.threads);
         set_usize(&doc, "serve", "cache_capacity", &mut cfg.cache_capacity);
         if let Some(s) = toml::get_str(&doc, "serve", "buckets") {
@@ -445,6 +454,7 @@ impl ServeConfig {
             }
             "queue" => self.queue_depth = uint(value, key)?,
             "workers" => self.workers = uint(value, key)?,
+            "sockets" => self.sockets = uint(value, key)?,
             "threads" => self.threads = uint(value, key)?,
             "cache-capacity" => self.cache_capacity = uint(value, key)?,
             "precision" => self.precision = parse_precision(value)?,
@@ -579,34 +589,41 @@ impl ServeConfig {
 
     /// The per-worker engine slice of this config.
     pub fn engine_opts(&self) -> EngineOpts {
-        EngineOpts {
-            buckets: self.buckets.clone(),
-            max_batch: self.max_batch,
-            threads: self.threads,
-            precision: self.precision,
-            partition: self.partition,
-            backend: self.backend,
-            autotune: self.autotune,
-            cache_capacity: self.cache_capacity,
-            fuse: self.fuse,
-        }
+        EngineOpts::default()
+            .with_buckets(self.buckets.clone())
+            .with_max_batch(self.max_batch)
+            .with_threads(self.threads)
+            .with_precision(self.precision)
+            .with_partition(self.partition)
+            .with_backend(self.backend)
+            .with_autotune(self.autotune)
+            .with_cache_capacity(self.cache_capacity)
+            .with_fuse(self.fuse)
     }
 
-    /// The full batcher options of this config.
+    /// The one config → options mapping: everything the batcher (and the
+    /// per-worker engines inside it) runs with, stated through the
+    /// [`BatcherOpts`]/[`EngineOpts`] builders so a new option added with
+    /// a `Default` never needs a copy-site edit here.
+    pub fn into_opts(self) -> BatcherOpts {
+        BatcherOpts::default()
+            .with_engine(self.engine_opts())
+            .with_window(Duration::from_secs_f64(self.window_ms / 1e3))
+            .with_queue_depth(self.queue_depth)
+            .with_workers(self.workers)
+            .with_sockets(self.sockets)
+            .with_warm(self.warm)
+            .with_stream_window(self.resolved_stream_window())
+            .with_deadline(
+                (self.deadline_ms > 0.0).then(|| Duration::from_secs_f64(self.deadline_ms / 1e3)),
+            )
+            .with_max_restarts(self.max_restarts)
+    }
+
+    /// The full batcher options of this config (alias of
+    /// [`Self::into_opts`] kept for existing call sites).
     pub fn batcher_opts(&self) -> BatcherOpts {
-        BatcherOpts {
-            engine: self.engine_opts(),
-            window: Duration::from_secs_f64(self.window_ms / 1e3),
-            queue_depth: self.queue_depth,
-            workers: self.workers,
-            warm: self.warm,
-            stream_window: self.resolved_stream_window(),
-            deadline: (self.deadline_ms > 0.0)
-                .then(|| Duration::from_secs_f64(self.deadline_ms / 1e3)),
-            max_restarts: self.max_restarts,
-            #[cfg(any(test, feature = "fault"))]
-            fault: None,
-        }
+        self.clone().into_opts()
     }
 
     /// The network front-end options of this config.
@@ -776,6 +793,7 @@ max_batch = 16
 window_ms = 5.5
 queue_depth = 32
 workers = 2
+sockets = 2
 threads = 4
 precision = "bf16"
 partition = "grid"
@@ -801,6 +819,7 @@ max_restarts = 5
         assert_eq!(c.window_ms, 5.5);
         assert_eq!(c.queue_depth, 32);
         assert_eq!(c.workers, 2);
+        assert_eq!(c.sockets, 2);
         assert_eq!(c.threads, 4);
         assert_eq!(c.precision, Precision::Bf16);
         assert_eq!(c.partition, Partition::Grid);
@@ -819,6 +838,7 @@ max_restarts = 5
         assert_eq!(b.window, Duration::from_secs_f64(0.0055));
         assert_eq!(b.queue_depth, 32);
         assert_eq!(b.workers, 2);
+        assert_eq!(b.sockets, 2);
         assert!(!b.warm);
         assert_eq!(c.net_config().channels, 8);
         // Network/streaming keys: listen address, block-rounded window
@@ -876,6 +896,7 @@ max_restarts = 5
             ("window-ms", "1.5"),
             ("queue", "10"),
             ("workers", "3"),
+            ("sockets", "2"),
             ("threads", "2"),
             ("cache-capacity", "2"),
             ("precision", "bf16"),
@@ -901,6 +922,7 @@ max_restarts = 5
         assert_eq!(c.window_ms, 1.5);
         assert_eq!(c.queue_depth, 10);
         assert_eq!(c.workers, 3);
+        assert_eq!(c.sockets, 2);
         assert_eq!(c.threads, 2);
         assert_eq!(c.cache_capacity, 2);
         assert_eq!(c.precision, Precision::Bf16);

@@ -14,7 +14,7 @@ use super::bf16::{to_bf16, Bf16};
 use super::forward::forward_bf16;
 use super::layout::{kcs_to_skc, pad_width};
 use super::params::ConvParams;
-use super::plan::{ConvPlan, PlanError};
+use super::plan::{ConvPlan, PlanError, PlanOptions};
 use super::post::PostOps;
 use super::threading::Partition;
 use crate::machine::Precision;
@@ -283,16 +283,18 @@ impl Conv1dLayer {
                 && plan.is_inference() == self.inference
         });
         if !reuse {
-            let mut plan = if self.autotune {
-                ConvPlan::tuned(*p, precision, self.threads, self.partition, self.w_kcs.clone())?
+            let opts = PlanOptions::new()
+                .precision(precision)
+                .threads(self.threads)
+                .partition(self.partition)
+                .inference(self.inference)
+                .post_ops(self.post_ops);
+            let opts = if self.autotune {
+                opts.tuned()
             } else {
-                ConvPlan::new(*p, self.backend, precision, self.threads, self.w_kcs.clone())?
+                opts.backend(self.backend)
             };
-            if self.inference {
-                plan = plan.with_inference();
-            }
-            plan.set_post_ops(self.post_ops);
-            plan.set_partition(self.partition);
+            let plan = ConvPlan::build(*p, self.w_kcs.clone(), opts)?;
             *guard = Some((plan, self.autotune));
         }
         let (plan, _) = guard.as_mut().expect("plan just ensured");

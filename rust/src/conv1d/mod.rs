@@ -48,7 +48,9 @@ pub mod tune;
 
 pub use layer::{Backend, Conv1dLayer, FusedGrads};
 pub use params::{ConvParams, WIDTH_BLOCK};
-pub use plan::{kernels, lookup_kernel, ConvKernel, ConvPlan, PlanError, PostOpArgs, Workspace};
+pub use plan::{
+    kernels, lookup_kernel, ConvKernel, ConvPlan, PlanError, PlanOptions, PostOpArgs, Workspace,
+};
 pub use post::{Activation, PostOps};
 pub use simd::{Isa, MicroKernelSet};
 pub use threading::{ExecCtx, Partition};

@@ -36,6 +36,7 @@ use super::post::{self, PostOps};
 use super::quant;
 use super::simd::{self, Isa, MicroKernelSet};
 use super::threading::{ExecCtx, Partition};
+use crate::dist::Placement;
 use crate::machine::Precision;
 
 /// Plan construction failure (invalid shape, unknown backend, or a
@@ -854,6 +855,162 @@ pub fn lookup_kernel(name: &str) -> Option<&'static dyn ConvKernel> {
     kernels().iter().copied().find(|k| k.name() == canonical)
 }
 
+/// How a [`PlanOptions`] build selects its kernel.
+#[derive(Clone)]
+enum KernelSel {
+    /// Enum backend + requested precision (the [`ConvPlan::new`] rule:
+    /// bf16/i8 require the BRGEMM backend).
+    Backend(Backend),
+    /// Registry name / alias; the kernel's own precision wins.
+    Name(String),
+    /// Let the in-process autotuner pick.
+    Tuned,
+    /// Explicit kernel instance (registry or caller-owned).
+    Explicit(&'static dyn ConvKernel),
+}
+
+/// Everything configurable about a plan, gathered into one builder —
+/// the single entry [`ConvPlan::build`] takes instead of the historical
+/// constructor/setter sprawl (`new` / `by_name` / `tuned` /
+/// `with_partition` / `with_inference` / `with_post_ops`, all of which
+/// now delegate here).
+///
+/// ```
+/// use dilconv1d::conv1d::{ConvParams, ConvPlan, Partition, PlanOptions};
+///
+/// let p = ConvParams::new(1, 2, 3, 32, 5, 2).unwrap();
+/// let plan = ConvPlan::build(
+///     p,
+///     vec![0.1f32; 3 * 2 * 5],
+///     PlanOptions::new()
+///         .backend_name("brgemm")
+///         .threads(2)
+///         .partition(Partition::Grid)
+///         .inference(true),
+/// )
+/// .unwrap();
+/// assert_eq!(plan.kernel_name(), "brgemm");
+/// assert!(plan.is_inference());
+/// ```
+#[derive(Clone)]
+pub struct PlanOptions {
+    kernel: KernelSel,
+    precision: Precision,
+    threads: usize,
+    partition: Partition,
+    inference: bool,
+    post: PostOps,
+    placement: Option<Placement>,
+}
+
+impl Default for PlanOptions {
+    /// Single-threaded f32 BRGEMM, batch partition, trainable, no
+    /// post-ops, flat placement.
+    fn default() -> PlanOptions {
+        PlanOptions {
+            kernel: KernelSel::Backend(Backend::Brgemm),
+            precision: Precision::F32,
+            threads: 1,
+            partition: Partition::Batch,
+            inference: false,
+            post: PostOps::none(),
+            placement: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for PlanOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kernel = match &self.kernel {
+            KernelSel::Backend(b) => b.as_str(),
+            KernelSel::Name(n) => n.as_str(),
+            KernelSel::Tuned => "<tuned>",
+            KernelSel::Explicit(k) => k.name(),
+        };
+        f.debug_struct("PlanOptions")
+            .field("kernel", &kernel)
+            .field("precision", &self.precision)
+            .field("threads", &self.threads)
+            .field("partition", &self.partition)
+            .field("inference", &self.inference)
+            .finish()
+    }
+}
+
+impl PlanOptions {
+    pub fn new() -> PlanOptions {
+        PlanOptions::default()
+    }
+
+    /// Select by enum backend; combined with [`Self::precision`] exactly
+    /// as [`ConvPlan::new`] always did (bf16/i8 need BRGEMM).
+    pub fn backend(mut self, backend: Backend) -> PlanOptions {
+        self.kernel = KernelSel::Backend(backend);
+        self
+    }
+
+    /// Select by registry name or alias (`"brgemm"`, `"onednn"`, …);
+    /// the named kernel's own precision wins.
+    pub fn backend_name(mut self, name: impl Into<String>) -> PlanOptions {
+        self.kernel = KernelSel::Name(name.into());
+        self
+    }
+
+    /// Let the in-process autotuner choose the kernel (the
+    /// [`ConvPlan::tuned`] path): the first call for a shape
+    /// micro-benchmarks the candidates under the requested partition,
+    /// later calls reuse the memoized winner.
+    pub fn tuned(mut self) -> PlanOptions {
+        self.kernel = KernelSel::Tuned;
+        self
+    }
+
+    /// Select an explicit kernel instance (registry or caller-owned).
+    pub fn kernel(mut self, kernel: &'static dyn ConvKernel) -> PlanOptions {
+        self.kernel = KernelSel::Explicit(kernel);
+        self
+    }
+
+    /// Forward-pass storage precision (with [`Self::backend`] /
+    /// [`Self::tuned`] selection).
+    pub fn precision(mut self, precision: Precision) -> PlanOptions {
+        self.precision = precision;
+        self
+    }
+
+    /// Worker threads the workspace is sized for.
+    pub fn threads(mut self, threads: usize) -> PlanOptions {
+        self.threads = threads;
+        self
+    }
+
+    /// Batch vs 2D-grid work splitting.
+    pub fn partition(mut self, partition: Partition) -> PlanOptions {
+        self.partition = partition;
+        self
+    }
+
+    /// Forward-only plan: backward scratch is never allocated and
+    /// `execute_backward_*` panics (the serving path).
+    pub fn inference(mut self, inference: bool) -> PlanOptions {
+        self.inference = inference;
+        self
+    }
+
+    /// Post-op epilogue fused into the forward/backward passes.
+    pub fn post_ops(mut self, ops: PostOps) -> PlanOptions {
+        self.post = ops;
+        self
+    }
+
+    /// Thread→socket layout carried in the plan's [`ExecCtx`] (flat over
+    /// `threads` unless set).
+    pub fn placement(mut self, placement: Placement) -> PlanOptions {
+        self.placement = Some(placement);
+        self
+    }
+}
+
 /// A fully-prepared convolution: kernel choice, derived weight layouts,
 /// padding geometry and workspace, built once and executed many times.
 ///
@@ -896,6 +1053,9 @@ pub struct ConvPlan {
     /// `execute_backward_*` family panics (the serving path, DESIGN.md
     /// §7 — a silent backward on a trimmed workspace would be a bug).
     inference: bool,
+    /// Thread→socket layout carried in the [`ExecCtx`] (flat unless a
+    /// NUMA-aware caller placed the workers via [`PlanOptions::placement`]).
+    placement: Placement,
     /// Whether `ws.padded_in` holds a valid input from
     /// `execute_forward_same_into` (guards the cached backward-weight).
     same_cached: bool,
@@ -917,10 +1077,52 @@ impl std::fmt::Debug for ConvPlan {
 }
 
 impl ConvPlan {
+    /// Build a plan from a [`PlanOptions`] bundle — the one constructor
+    /// every historical entry point delegates to.
+    pub fn build(p: ConvParams, w_kcs: Vec<f32>, opts: PlanOptions) -> Result<ConvPlan, PlanError> {
+        let kernel: &'static dyn ConvKernel = match &opts.kernel {
+            KernelSel::Backend(backend) => {
+                let name = match (*backend, opts.precision) {
+                    (Backend::Brgemm, Precision::Bf16) => "bf16",
+                    (Backend::Brgemm, Precision::I8) => "i8",
+                    (b, Precision::Bf16) => {
+                        return Err(PlanError(format!(
+                            "precision bf16 requires the brgemm backend, got {b}"
+                        )))
+                    }
+                    (b, Precision::I8) => {
+                        return Err(PlanError(format!(
+                            "precision i8 requires the brgemm backend, got {b}"
+                        )))
+                    }
+                    (b, Precision::F32) => b.as_str(),
+                };
+                lookup_kernel(name).ok_or_else(|| PlanError(format!("unknown kernel '{name}'")))?
+            }
+            KernelSel::Name(name) => lookup_kernel(name)
+                .ok_or_else(|| PlanError(format!("unknown kernel '{name}'")))?,
+            KernelSel::Tuned => {
+                super::tune::autotuner().choose(&p, opts.threads, opts.precision, opts.partition)
+            }
+            KernelSel::Explicit(k) => *k,
+        };
+        let mut plan = Self::with_kernel(p, kernel, opts.threads, w_kcs)?;
+        plan.partition = opts.partition;
+        plan.post = opts.post;
+        if let Some(placement) = opts.placement {
+            plan.placement = placement;
+        }
+        if opts.inference {
+            plan = plan.with_inference();
+        }
+        Ok(plan)
+    }
+
     /// Build a plan from a problem descriptor, an enum backend and a
     /// precision. `Precision::Bf16` is served by the bf16 kernel and
     /// `Precision::I8` by the int8 kernel; both are only available on the
-    /// BRGEMM backend (as in the paper).
+    /// BRGEMM backend (as in the paper). Thin wrapper over
+    /// [`Self::build`].
     pub fn new(
         p: ConvParams,
         backend: Backend,
@@ -928,35 +1130,30 @@ impl ConvPlan {
         threads: usize,
         w_kcs: Vec<f32>,
     ) -> Result<ConvPlan, PlanError> {
-        let name = match (backend, precision) {
-            (Backend::Brgemm, Precision::Bf16) => "bf16",
-            (Backend::Brgemm, Precision::I8) => "i8",
-            (_, Precision::Bf16) => {
-                return Err(PlanError(format!(
-                    "precision bf16 requires the brgemm backend, got {backend}"
-                )))
-            }
-            (_, Precision::I8) => {
-                return Err(PlanError(format!(
-                    "precision i8 requires the brgemm backend, got {backend}"
-                )))
-            }
-            (b, Precision::F32) => b.as_str(),
-        };
-        Self::by_name(p, name, threads, w_kcs)
+        Self::build(
+            p,
+            w_kcs,
+            PlanOptions::new()
+                .backend(backend)
+                .precision(precision)
+                .threads(threads),
+        )
     }
 
     /// Build a plan from a registry kernel name (`"brgemm"`, `"im2col"`,
-    /// `"direct"`, `"bf16"` or any `Backend::from_str` alias).
+    /// `"direct"`, `"bf16"` or any `Backend::from_str` alias). Thin
+    /// wrapper over [`Self::build`].
     pub fn by_name(
         p: ConvParams,
         kernel: &str,
         threads: usize,
         w_kcs: Vec<f32>,
     ) -> Result<ConvPlan, PlanError> {
-        let k = lookup_kernel(kernel)
-            .ok_or_else(|| PlanError(format!("unknown kernel '{kernel}'")))?;
-        Self::with_kernel(p, k, threads, w_kcs)
+        Self::build(
+            p,
+            w_kcs,
+            PlanOptions::new().backend_name(kernel).threads(threads),
+        )
     }
 
     /// Build a plan whose kernel is chosen by the in-process autotuner
@@ -964,7 +1161,7 @@ impl ConvPlan {
     /// micro-benchmarks the candidates (under the requested partition —
     /// grid rankings differ from batch ones at N < threads), later calls
     /// reuse the memoized winner. The returned plan already runs under
-    /// `partition`.
+    /// `partition`. Thin wrapper over [`Self::build`].
     pub fn tuned(
         p: ConvParams,
         precision: Precision,
@@ -972,8 +1169,15 @@ impl ConvPlan {
         partition: Partition,
         w_kcs: Vec<f32>,
     ) -> Result<ConvPlan, PlanError> {
-        let kernel = super::tune::autotuner().choose(&p, threads, precision, partition);
-        Ok(Self::with_kernel(p, kernel, threads, w_kcs)?.with_partition(partition))
+        Self::build(
+            p,
+            w_kcs,
+            PlanOptions::new()
+                .tuned()
+                .precision(precision)
+                .threads(threads)
+                .partition(partition),
+        )
     }
 
     /// Build a plan for an explicit kernel (registry or caller-owned).
@@ -1033,6 +1237,7 @@ impl ConvPlan {
             bias: Vec::new(),
             post: PostOps::none(),
             inference: false,
+            placement: Placement::flat(threads),
             same_cached: false,
             ws,
         })
@@ -1074,6 +1279,7 @@ impl ConvPlan {
             threads: self.threads,
             partition: self.partition,
             uks: self.uks,
+            placement: self.placement,
         }
     }
 
@@ -1100,6 +1306,11 @@ impl ConvPlan {
     /// Work-partitioning strategy the kernels run under.
     pub fn partition(&self) -> Partition {
         self.partition
+    }
+
+    /// Thread→socket layout the kernels' [`ExecCtx`] carries.
+    pub fn placement(&self) -> Placement {
+        self.placement
     }
 
     /// Builder: select the work partitioning at construction time.

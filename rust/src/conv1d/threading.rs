@@ -22,6 +22,7 @@
 //! allocations.
 
 use super::simd::{self, MicroKernelSet};
+use crate::dist::Placement;
 
 /// Work-partitioning strategy for the batched conv kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -77,6 +78,11 @@ pub struct ExecCtx {
     pub partition: Partition,
     /// Resolved micro-kernel dispatch table (ISA).
     pub uks: &'static MicroKernelSet,
+    /// Thread→socket layout (flat unless a NUMA-aware caller placed the
+    /// workers). Carried next to `threads` so placement-aware consumers
+    /// (socket-sharded pools, the hierarchical all-reduce) see the same
+    /// shape the kernels were planned for.
+    pub placement: Placement,
 }
 
 impl ExecCtx {
@@ -96,12 +102,19 @@ impl ExecCtx {
             threads,
             partition,
             uks: simd::active(),
+            placement: Placement::flat(threads.max(1)),
         }
     }
 
     /// Builder: pin a specific micro-kernel set (per-ISA benches/tests).
     pub fn with_uks(mut self, uks: &'static MicroKernelSet) -> ExecCtx {
         self.uks = uks;
+        self
+    }
+
+    /// Builder: pin a thread→socket layout (NUMA-aware callers).
+    pub fn with_placement(mut self, placement: Placement) -> ExecCtx {
+        self.placement = placement;
         self
     }
 }

@@ -8,11 +8,15 @@
 //!   3. each replica computes gradients on its shard — on a **persistent
 //!      worker pool** (one long-lived thread per socket owning its
 //!      replica; no per-step thread spawns),
-//!   4. gradients are ring-all-reduced — either monolithically after the
+//!   4. gradients are all-reduced — either monolithically after the
 //!      whole backward, or (with `overlap = true`) **bucket by bucket as
 //!      each layer's backward completes**, overlapping communication with
 //!      compute; the bucketed reduction is bit-identical to the
-//!      monolithic one (chunking follows the global grid),
+//!      monolithic one (chunking follows the global grid). On a
+//!      multi-socket machine ([`Topology::detect`]) the collective takes
+//!      the NUMA-hierarchical path, which reproduces the flat ring's
+//!      accumulation order exactly (DESIGN.md §6b) — placement is a
+//!      performance knob, never a numerics one,
 //!   5. the split Adam step updates the FP32 master weights and the
 //!      replicas reload the (bf16-rounded under `precision = bf16`)
 //!      working copy at the start of the next step.
@@ -30,9 +34,9 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::data::atacseq::{Batch, TrackConfig};
 use crate::data::{Dataset, Loader};
-use crate::dist::allreduce::{ring_allreduce, ring_allreduce_aligned};
+use crate::dist::allreduce::{hierarchical_allreduce, hierarchical_allreduce_aligned};
 use crate::dist::comm_model::CommModel;
-use crate::dist::{BucketPlan, PersistentPool};
+use crate::dist::{BucketPlan, PersistentPool, Topology};
 use crate::metrics::auroc::AurocAccumulator;
 use crate::metrics::regression::MseAccumulator;
 use crate::metrics::timing::{EpochTiming, Timer};
@@ -118,7 +122,19 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Build a trainer on the detected machine shape: replicas are
+    /// placed across the NUMA sockets [`Topology::detect`] reports
+    /// (`CONV1D_TOPOLOGY` override) and gradient collectives take the
+    /// hierarchical path when there is more than one.
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let topo = Topology::detect();
+        Self::with_topology(cfg, topo)
+    }
+
+    /// [`Self::new`] with an explicit machine shape — what tests and the
+    /// benches use to pin the placement without touching the
+    /// environment.
+    pub fn with_topology(cfg: TrainConfig, topo: Topology) -> Result<Trainer> {
         let net_cfg = NetConfig {
             channels: cfg.channels,
             n_blocks: cfg.n_blocks,
@@ -156,18 +172,35 @@ impl Trainer {
                 }
             }
         }
-        let mut replicas: Vec<AtacWorksNet> = (0..cfg.sockets.max(1))
-            .map(|_| AtacWorksNet::init(net_cfg, cfg.seed))
-            .collect();
-        for r in &mut replicas {
-            r.set_backend(cfg.backend, cfg.threads_per_socket);
-            r.set_partition(cfg.partition);
-            r.set_precision(cfg.precision);
-            r.set_autotune(cfg.autotune);
-            r.set_activation(cfg.post_ops.activation);
-        }
-        let weights = MasterWeights::new(replicas[0].pack_params(), cfg.precision);
+        // Replica construction is deterministic in `(net_cfg, seed)`, so
+        // a local prototype supplies the initial master weights while the
+        // pool builds each replica **on its own rank thread** — placed
+        // across the machine's sockets, its state first-touched by the
+        // socket group that computes with it.
+        let weights = MasterWeights::new(
+            AtacWorksNet::init(net_cfg, cfg.seed).pack_params(),
+            cfg.precision,
+        );
         let opt = Adam::new(weights.len(), cfg.lr as f32);
+        let placement = topo.placement(cfg.sockets.max(1));
+        let (backend, threads, partition, precision, autotune, activation, seed) = (
+            cfg.backend,
+            cfg.threads_per_socket,
+            cfg.partition,
+            cfg.precision,
+            cfg.autotune,
+            cfg.post_ops.activation,
+            cfg.seed,
+        );
+        let pool = PersistentPool::new_placed(placement, move |_rank, _socket| {
+            let mut net = AtacWorksNet::init(net_cfg, seed);
+            net.set_backend(backend, threads);
+            net.set_partition(partition);
+            net.set_precision(precision);
+            net.set_autotune(autotune);
+            net.set_activation(activation);
+            net
+        });
         let buckets = cfg.overlap.then(|| {
             Arc::new(BucketPlan::new(
                 &net_cfg.layer_param_counts(),
@@ -180,7 +213,7 @@ impl Trainer {
             cfg,
             track_cfg,
             dataset,
-            pool: PersistentPool::new(replicas),
+            pool,
             opt,
             weights,
             buckets,
@@ -256,7 +289,10 @@ impl Trainer {
             .into_iter()
             .map(|s| s.expect("every rank reports"))
             .collect();
-        ring_allreduce(&mut grads);
+        // NUMA-hierarchical on a placed pool, plain ring on a flat one —
+        // bit-identical either way (the hierarchical path reproduces the
+        // ring's per-chunk accumulation order, DESIGN.md §6b).
+        hierarchical_allreduce(&mut grads, self.pool.placement());
         let comm = self.comm.ring_allreduce_secs(self.weights.len(), sockets);
         StepOutcome {
             grad: grads.swap_remove(0),
@@ -337,7 +373,12 @@ impl Trainer {
                     .iter_mut()
                     .map(|s| s.take().expect("every rank shipped bucket"))
                     .collect();
-                ring_allreduce_aligned(&mut bufs, &plan.bucket(b).regions, total);
+                hierarchical_allreduce_aligned(
+                    &mut bufs,
+                    &plan.bucket(b).regions,
+                    total,
+                    self.pool.placement(),
+                );
                 plan.scatter(b, &bufs[0], &mut flat);
                 reduced += 1;
             }
@@ -557,6 +598,34 @@ mod tests {
         assert_eq!(r1.modeled_comm_secs, 0.0);
         // Monolithic path: nothing overlaps, all of it is exposed.
         assert_eq!(r2.exposed_comm_secs, r2.modeled_comm_secs);
+    }
+
+    #[test]
+    fn numa_placed_training_is_bit_identical_to_flat() {
+        // The hierarchical all-reduce reproduces the flat ring's
+        // accumulation order, so the parameter trajectory must match
+        // bit for bit at every emulated machine shape — monolithic and
+        // bucketed/overlapped alike.
+        for overlap in [false, true] {
+            let mut base = tiny_cfg();
+            base.epochs = 1;
+            base.sockets = 4;
+            base.overlap = overlap;
+            let mut flat = Trainer::with_topology(base.clone(), Topology::shape(1, 8)).unwrap();
+            let r_flat = flat.run_epoch(0);
+            for topo in [Topology::shape(2, 4), Topology::shape(4, 2)] {
+                let mut placed = Trainer::with_topology(base.clone(), topo).unwrap();
+                let r = placed.run_epoch(0);
+                assert_eq!(r.steps, r_flat.steps);
+                for (i, (a, b)) in flat.params().iter().zip(placed.params()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "param {i} diverged under {topo} (overlap={overlap}): {a} vs {b}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

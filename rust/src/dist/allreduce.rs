@@ -7,6 +7,16 @@
 //! runs the same ring with real message passing: one OS thread per rank,
 //! chunks travelling over mpsc channels — the in-process analog of the
 //! paper's inter-socket collective.
+//!
+//! [`hierarchical_allreduce`] is the NUMA-aware path (DESIGN.md §6b):
+//! one thread per socket, each chunk's accumulator built socket-locally
+//! and handed around a socket-leader ring, then broadcast back — with
+//! the adds applied in *exactly* the monolithic ring's per-chunk order,
+//! so the result is bit-identical to [`ring_allreduce`] at every
+//! `(sockets, cores)` shape while touching remote memory only
+//! `O(sockets)` times per chunk instead of `O(ranks)`.
+
+use super::topology::Placement;
 
 /// Per-rank chunk boundaries: rank/chunk `i` owns `[i·⌈len/P⌉, …)`.
 fn chunk_bounds(len: usize, ranks: usize) -> Vec<(usize, usize)> {
@@ -129,26 +139,7 @@ pub fn ring_allreduce_aligned(
         bufs.iter().all(|b| b.len() == local_len),
         "ragged rank buffers"
     );
-    // Local ranges covered by each *global* chunk. A region may straddle
-    // chunk boundaries; a chunk may receive ranges from several regions.
-    let chunk = global_len.div_ceil(p);
-    let mut bounds: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
-    let mut local = 0usize;
-    for &(goff, glen) in regions {
-        assert!(
-            goff + glen <= global_len,
-            "region ({goff}, {glen}) outside the global vector of {global_len}"
-        );
-        let gend = goff + glen;
-        let mut g = goff;
-        while g < gend {
-            let ci = g / chunk;
-            let cend = ((ci + 1) * chunk).min(gend);
-            bounds[ci].push((local, local + (cend - g)));
-            local += cend - g;
-            g = cend;
-        }
-    }
+    let bounds = chunk_local_ranges(regions, global_len, p);
     // Reduce-scatter, then all-gather — the same schedule as
     // [`ring_allreduce`], restricted to the bucket's ranges.
     for step in 0..p - 1 {
@@ -177,6 +168,208 @@ pub fn ring_allreduce_aligned(
             }
         }
     }
+}
+
+/// Local ranges covered by each *global* chunk: `out[c]` lists the
+/// `(lo, hi)` spans of the packed local buffer that fall under global
+/// chunk `c` of a `global_len`-element vector split `p` ways. A region
+/// may straddle chunk boundaries; a chunk may receive ranges from
+/// several regions. Shared by the aligned ring and the hierarchical
+/// path, so both walk the identical global grid.
+fn chunk_local_ranges(
+    regions: &[(usize, usize)],
+    global_len: usize,
+    p: usize,
+) -> Vec<Vec<(usize, usize)>> {
+    let chunk = global_len.div_ceil(p);
+    let mut bounds: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
+    let mut local = 0usize;
+    for &(goff, glen) in regions {
+        assert!(
+            goff + glen <= global_len,
+            "region ({goff}, {glen}) outside the global vector of {global_len}"
+        );
+        let gend = goff + glen;
+        let mut g = goff;
+        while g < gend {
+            let ci = g / chunk;
+            let cend = ((ci + 1) * chunk).min(gend);
+            bounds[ci].push((local, local + (cend - g)));
+            local += cend - g;
+            g = cend;
+        }
+    }
+    bounds
+}
+
+/// NUMA-aware all-reduce: [`hierarchical_allreduce_aligned`] over the
+/// whole vector (one region spanning everything).
+pub fn hierarchical_allreduce(bufs: &mut [Vec<f32>], placement: Placement) {
+    let len = bufs.first().map_or(0, |b| b.len());
+    hierarchical_allreduce_aligned(bufs, &[(0, len)], len, placement);
+}
+
+/// NUMA-aware all-reduce, **bit-identical** to the monolithic
+/// [`ring_allreduce_aligned`] at every placement shape.
+///
+/// The monolithic ring reduces global chunk `c` as a left fold over
+/// ranks in ring-visit order `c, c+1, …, p−1, 0, …, c−1`, each step
+/// computing `acc = x_r + acc`. With contiguous socket groups that visit
+/// order decomposes cleanly by socket: the origin socket (the one owning
+/// rank `c`) contributes its suffix `[c, hi)`, every other socket its
+/// full range in increasing rank order, and the origin finally its
+/// prefix `[lo, c)`. This function executes exactly that fold with one
+/// thread per socket: the accumulator is gathered socket-locally, handed
+/// around a socket ring over channels (each leg folding in that socket's
+/// ranks), and on completion circulates once more as a broadcast that
+/// each socket scatters into its own members' buffers. Different chunks
+/// pipeline through different sockets concurrently, so the span is
+/// `O((p/S)·len/p)` per socket rather than the ring's `O(len)` on one
+/// thread — while every f32 add happens in the monolithic order, which
+/// is the whole bit-identity argument (DESIGN.md §6b).
+///
+/// Degenerates to [`ring_allreduce_aligned`] on a flat placement.
+pub fn hierarchical_allreduce_aligned(
+    bufs: &mut [Vec<f32>],
+    regions: &[(usize, usize)],
+    global_len: usize,
+    placement: Placement,
+) {
+    let p = bufs.len();
+    if p <= 1 || global_len == 0 {
+        return;
+    }
+    assert_eq!(
+        placement.n_ranks(),
+        p,
+        "placement ranks must match buffer count"
+    );
+    let sockets = placement.n_sockets();
+    if sockets <= 1 {
+        ring_allreduce_aligned(bufs, regions, global_len);
+        return;
+    }
+    let local_len: usize = regions.iter().map(|&(_, l)| l).sum();
+    assert!(
+        bufs.iter().all(|b| b.len() == local_len),
+        "ragged rank buffers"
+    );
+    let bounds = chunk_local_ranges(regions, global_len, p);
+
+    enum HierMsg {
+        /// A chunk accumulator on its reduce cycle.
+        Reduce(usize, Vec<f32>),
+        /// A finished chunk on its broadcast cycle.
+        Bcast(usize, Vec<f32>),
+    }
+
+    // Channel s carries messages socket s−1 → socket s. Unbounded sends
+    // mean a socket can kick off all its chunks before draining its
+    // inbox — no deadlock, and the pipeline fills itself.
+    let mut txs = Vec::with_capacity(sockets);
+    let mut rxs = Vec::with_capacity(sockets);
+    for _ in 0..sockets {
+        let (tx, rx) = std::sync::mpsc::channel::<HierMsg>();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+
+    // Per-socket exclusive views of the rank buffers: socket threads
+    // only ever touch their own members' memory (plus the travelling
+    // accumulator), which is the NUMA point of the exercise.
+    let mut parts: Vec<&mut [Vec<f32>]> = Vec::with_capacity(sockets);
+    let mut rest = bufs;
+    for s in 0..sockets {
+        let (head, tail) = rest.split_at_mut(placement.ranks_of(s).len());
+        parts.push(head);
+        rest = tail;
+    }
+
+    let bounds = &bounds;
+    std::thread::scope(|scope| {
+        for (s, part) in parts.into_iter().enumerate() {
+            let tx_next = txs[(s + 1) % sockets].clone();
+            let rx = rxs[s].take().expect("receiver taken twice");
+            let my = placement.ranks_of(s);
+            scope.spawn(move || {
+                let mut part = part;
+                // `acc[i] = x_r[i] + acc[i]` over chunk c's ranges — the
+                // exact operand order of the monolithic ring's
+                // `dst += src` step (the incoming rank's value on the
+                // left, the travelling accumulator on the right).
+                let add = |part: &[Vec<f32>], r: usize, c: usize, acc: &mut [f32]| {
+                    let buf = &part[r - my.start];
+                    let mut i = 0usize;
+                    for &(lo, hi) in &bounds[c] {
+                        for j in lo..hi {
+                            acc[i] = buf[j] + acc[i];
+                            i += 1;
+                        }
+                    }
+                };
+                let write = |part: &mut [Vec<f32>], c: usize, data: &[f32]| {
+                    for buf in part.iter_mut() {
+                        let mut i = 0usize;
+                        for &(lo, hi) in &bounds[c] {
+                            buf[lo..hi].copy_from_slice(&data[i..i + (hi - lo)]);
+                            i += hi - lo;
+                        }
+                    }
+                };
+                // Kick off every chunk whose chain starts here: copy the
+                // head rank's values, fold in the rest of this socket's
+                // ranks in increasing order, send the accumulator on.
+                for c in my.clone() {
+                    let csize: usize = bounds[c].iter().map(|&(lo, hi)| hi - lo).sum();
+                    let mut acc = Vec::with_capacity(csize);
+                    for &(lo, hi) in &bounds[c] {
+                        acc.extend_from_slice(&part[c - my.start][lo..hi]);
+                    }
+                    for r in c + 1..my.end {
+                        add(part, r, c, &mut acc);
+                    }
+                    tx_next.send(HierMsg::Reduce(c, acc)).expect("ring send");
+                }
+                // Every chunk's accumulator passes through every socket
+                // exactly once on the reduce cycle (the origin receives
+                // it last and closes the chain); finished chunks pass
+                // through every socket except their origin on the
+                // broadcast cycle. Empty chunks circulate too, so the
+                // counts stay uniform.
+                let mut reduce_left = p;
+                let mut bcast_left = p - my.len();
+                while reduce_left > 0 || bcast_left > 0 {
+                    match rx.recv().expect("ring recv") {
+                        HierMsg::Reduce(c, mut acc) => {
+                            reduce_left -= 1;
+                            if placement.socket_of(c) == s {
+                                // The cycle closed: fold in this socket's
+                                // prefix (the ranks before the chain
+                                // head), then start the broadcast.
+                                for r in my.start..c {
+                                    add(part, r, c, &mut acc);
+                                }
+                                write(&mut part, c, &acc);
+                                tx_next.send(HierMsg::Bcast(c, acc)).expect("ring send");
+                            } else {
+                                for r in my.clone() {
+                                    add(part, r, c, &mut acc);
+                                }
+                                tx_next.send(HierMsg::Reduce(c, acc)).expect("ring send");
+                            }
+                        }
+                        HierMsg::Bcast(c, data) => {
+                            bcast_left -= 1;
+                            write(&mut part, c, &data);
+                            if placement.socket_of(c) != (s + 1) % sockets {
+                                tx_next.send(HierMsg::Bcast(c, data)).expect("ring send");
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
 }
 
 /// Ring all-reduce with real message passing: one thread per rank, chunk
@@ -353,6 +546,81 @@ mod tests {
         let mut got = base;
         ring_allreduce_aligned(&mut got, &[(0, 97)], 97);
         assert_eq!(got, want);
+    }
+
+    fn bits(bufs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        bufs.iter()
+            .map(|b| b.iter().map(|x| x.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn hierarchical_is_bitwise_identical_to_ring() {
+        // Every (ranks, sockets) shape — even splits, ragged splits,
+        // one rank per socket — must reproduce the monolithic ring's
+        // f32 accumulation chain exactly.
+        for &(p, s) in &[(8usize, 2usize), (8, 4), (8, 8), (4, 2), (5, 2), (6, 3), (7, 3)] {
+            for len in [1usize, 5, 97, 130] {
+                let base = ranks(p, len);
+                let mut want = base.clone();
+                ring_allreduce(&mut want);
+                let mut got = base.clone();
+                hierarchical_allreduce(&mut got, Placement::new(p, s));
+                assert_eq!(bits(&got), bits(&want), "p={p} s={s} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_aligned_is_bitwise_identical_to_aligned_ring() {
+        // Bucket-by-bucket reduction on the global grid, hierarchically:
+        // must match the aligned ring (itself bit-identical to the
+        // monolithic full-vector ring) region for region.
+        for &(p, s) in &[(4usize, 2usize), (8, 2), (8, 4), (7, 3)] {
+            let len = 103usize;
+            let base = ranks(p, len);
+            let mut want = base.clone();
+            ring_allreduce(&mut want);
+            let a = len / 5;
+            let b = len / 2;
+            let regions = vec![(a, b - a), (b + 3, len - b - 3)];
+            let mut bufs: Vec<Vec<f32>> = base
+                .iter()
+                .map(|full| {
+                    let mut v = Vec::new();
+                    for &(off, l) in &regions {
+                        v.extend_from_slice(&full[off..off + l]);
+                    }
+                    v
+                })
+                .collect();
+            hierarchical_allreduce_aligned(&mut bufs, &regions, len, Placement::new(p, s));
+            for r in 0..p {
+                let mut local = 0;
+                for &(off, l) in &regions {
+                    let got: Vec<u32> = bufs[r][local..local + l]
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    let exp: Vec<u32> = want[r][off..off + l]
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    assert_eq!(got, exp, "p={p} s={s} rank {r} region ({off},{l})");
+                    local += l;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_flat_placement_degenerates_to_ring() {
+        let base = ranks(6, 64);
+        let mut want = base.clone();
+        ring_allreduce(&mut want);
+        let mut got = base;
+        hierarchical_allreduce(&mut got, Placement::flat(6));
+        assert_eq!(bits(&got), bits(&want));
     }
 
     #[test]

@@ -3,15 +3,19 @@
 //! them onto the paper's UPI / fabric links.
 //!
 //! * [`allreduce`]  — ring + naive all-reduce (in-place, message-passing,
-//!   and the bucket-aligned variant whose per-element accumulation order
-//!   matches the monolithic ring bit for bit)
+//!   the bucket-aligned variant whose per-element accumulation order
+//!   matches the monolithic ring bit for bit, and the NUMA-aware
+//!   hierarchical path that reproduces that order socket-by-socket)
 //! * [`bucket`]     — fixed-byte-budget gradient buckets in backward
 //!   completion order, the unit of communication/compute overlap
 //! * [`comm_model`] — α–β (latency–bandwidth) collective cost model,
 //!   including the bucketed-overlap timeline ([`OverlapReport`])
-//! * [`topology`]   — socket/core accounting of the paper's Xeon testbeds
+//! * [`topology`]   — the unified machine-shape API: paper accounting,
+//!   real NUMA detection ([`Topology::detect`]) and the rank→socket
+//!   [`Placement`] descriptor every placed consumer shares
 //! * [`worker`]     — persistent data-parallel worker pool (one long-lived
-//!   thread per "socket", each owning its model replica)
+//!   thread per rank, each owning its model replica; socket-placed
+//!   first-touch spawning via [`PersistentPool::new_placed`])
 //!
 //! The coordinator runs the *real* ring all-reduce over replica gradients
 //! each step — monolithically after backward, or bucket-by-bucket
@@ -26,7 +30,8 @@ pub mod comm_model;
 pub mod topology;
 pub mod worker;
 
+pub use allreduce::{hierarchical_allreduce, hierarchical_allreduce_aligned};
 pub use bucket::{Bucket, BucketPlan};
 pub use comm_model::{CommModel, OverlapReport};
-pub use topology::Topology;
+pub use topology::{Placement, Topology, TOPOLOGY_ENV};
 pub use worker::{Job, PersistentPool, StepResult, WorkerPool};

@@ -1,7 +1,28 @@
-//! Socket/core accounting of the paper's Xeon testbeds (Sec. 4.4/4.5):
-//! 28-core sockets, one core reserved for the data loader on a single
-//! socket, two (loader + communication proxy) when scaling out, and the
-//! per-topology global batch sizes of Sec. 4.5.1.
+//! The unified machine-shape API: one [`Topology`] type serves both
+//! roles that used to be separate —
+//!
+//! * **paper accounting** (Sec. 4.4/4.5): 28-core Xeon sockets, one core
+//!   reserved for the data loader on a single socket, two (loader +
+//!   communication proxy) when scaling out, and the per-topology global
+//!   batch sizes of Sec. 4.5.1 ([`Topology::xeon`] and friends);
+//! * **real placement**: [`Topology::detect`] reads the host's NUMA
+//!   layout from `/sys/devices/system/node/node*/cpulist` (Linux),
+//!   honours the `CONV1D_TOPOLOGY=SxC` override so any layout is
+//!   testable on any host, and falls back to a single socket.
+//!
+//! A [`Placement`] maps worker ranks onto sockets (contiguous near-even
+//! groups) and is the descriptor every placement-aware consumer shares:
+//! socket-sharded worker pools ([`super::PersistentPool::new_placed`]),
+//! the hierarchical all-reduce
+//! ([`super::allreduce::hierarchical_allreduce`]), the serving
+//! dispatcher's bucket→socket routing, and the kernel-level
+//! [`crate::conv1d::ExecCtx`].
+
+use std::ops::Range;
+
+/// Environment override for [`Topology::detect`]: `"SxC"` = `S` sockets
+/// of `C` cores each (e.g. `CONV1D_TOPOLOGY=2x4`).
+pub const TOPOLOGY_ENV: &str = "CONV1D_TOPOLOGY";
 
 /// A multi-socket machine shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -11,8 +32,28 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Paper-accounting constructor: shapes with at least 3 cores per
+    /// socket, so the reserved-core arithmetic of
+    /// [`Self::compute_cores`] stays meaningful.
     pub fn new(sockets: usize, cores_per_socket: usize) -> Topology {
         assert!(sockets > 0 && cores_per_socket > 2);
+        Topology {
+            sockets,
+            cores_per_socket,
+        }
+    }
+
+    /// General placement constructor: any positive shape, including the
+    /// tiny emulated layouts the topology test matrix uses (`2x4`,
+    /// `4x2`). The paper-accounting helpers ([`Self::compute_cores`],
+    /// [`Self::paper_batch_size`]) describe the Xeon testbeds and
+    /// assume a [`Self::new`]-legal shape; placement consumers only
+    /// need [`Self::placement`].
+    pub fn shape(sockets: usize, cores_per_socket: usize) -> Topology {
+        assert!(
+            sockets > 0 && cores_per_socket > 0,
+            "topology needs at least one socket and one core"
+        );
         Topology {
             sockets,
             cores_per_socket,
@@ -22,6 +63,64 @@ impl Topology {
     /// The paper's 28-core Xeon sockets (CLX-AP / CPX).
     pub fn xeon(sockets: usize) -> Topology {
         Topology::new(sockets, 28)
+    }
+
+    /// The machine shape this process runs on.
+    ///
+    /// Resolution order:
+    /// 1. the [`TOPOLOGY_ENV`] (`CONV1D_TOPOLOGY=SxC`) override — how
+    ///    the CI matrix emulates any layout on any host; malformed
+    ///    values are a hard error, because a typo silently falling back
+    ///    to the host shape would invalidate the run;
+    /// 2. the Linux NUMA sysfs (`/sys/devices/system/node`);
+    /// 3. a single socket spanning the available parallelism.
+    pub fn detect() -> Topology {
+        if let Ok(spec) = std::env::var(TOPOLOGY_ENV) {
+            return spec
+                .parse()
+                .unwrap_or_else(|e| panic!("{TOPOLOGY_ENV}={spec}: {e}"));
+        }
+        if let Some(t) = Self::detect_sysfs("/sys/devices/system/node") {
+            return t;
+        }
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Topology {
+            sockets: 1,
+            cores_per_socket: cores.max(1),
+        }
+    }
+
+    /// Parse the NUMA sysfs tree: one socket per `node<N>` directory
+    /// with a non-empty `cpulist`, cores per socket = the smallest
+    /// node's CPU count (conservative for asymmetric layouts).
+    fn detect_sysfs(root: &str) -> Option<Topology> {
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut nodes = 0usize;
+        let mut min_cores = usize::MAX;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let is_node = matches!(
+                name.strip_prefix("node"),
+                Some(d) if !d.is_empty() && d.bytes().all(|b| b.is_ascii_digit())
+            );
+            if !is_node {
+                continue;
+            }
+            let cpulist = match std::fs::read_to_string(entry.path().join("cpulist")) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let cores = count_cpulist(cpulist.trim());
+            if cores > 0 {
+                nodes += 1;
+                min_cores = min_cores.min(cores);
+            }
+        }
+        (nodes > 0).then(|| Topology {
+            sockets: nodes,
+            cores_per_socket: min_cores.max(1),
+        })
     }
 
     /// Compute cores per socket: 27 on a single socket (1 reserved for
@@ -50,6 +149,154 @@ impl Topology {
             self.compute_cores() * self.sockets
         }
     }
+
+    /// Total cores across the machine (no reservation accounting).
+    pub fn total_cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Place `ranks` workers onto this topology's sockets: contiguous
+    /// near-even groups, never more sockets than ranks.
+    pub fn placement(&self, ranks: usize) -> Placement {
+        Placement::new(ranks, self.sockets)
+    }
+}
+
+/// Number of CPUs in a sysfs `cpulist` string (`"0-3,8,10-11"` → 6).
+/// Malformed fragments count zero rather than failing detection.
+fn count_cpulist(list: &str) -> usize {
+    if list.is_empty() {
+        return 0;
+    }
+    list.split(',')
+        .map(|part| {
+            let part = part.trim();
+            match part.split_once('-') {
+                Some((lo, hi)) => match (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                    (Ok(lo), Ok(hi)) if hi >= lo => hi - lo + 1,
+                    _ => 0,
+                },
+                None => usize::from(part.parse::<usize>().is_ok()),
+            }
+        })
+        .sum()
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.sockets, self.cores_per_socket)
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = String;
+
+    /// `"SxC"` — sockets × cores per socket, both positive.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (sockets, cores) = s
+            .trim()
+            .split_once(['x', 'X'])
+            .ok_or_else(|| format!("expected SxC (e.g. 2x4), got '{s}'"))?;
+        let sockets: usize = sockets
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad socket count in '{s}'"))?;
+        let cores: usize = cores
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad core count in '{s}'"))?;
+        if sockets == 0 || cores == 0 {
+            return Err(format!("'{s}' names an empty topology"));
+        }
+        Ok(Topology::shape(sockets, cores))
+    }
+}
+
+/// Socket id → worker ranks: `ranks` workers split into `sockets`
+/// contiguous near-even groups (sizes differ by at most one, lower
+/// socket ids take the extras). Compact and `Copy`, so it travels
+/// inside [`crate::conv1d::ExecCtx`] next to `threads`/`partition`.
+///
+/// ```
+/// use dilconv1d::dist::Placement;
+///
+/// let p = Placement::new(8, 2);
+/// assert_eq!(p.ranks_of(0), 0..4);
+/// assert_eq!(p.ranks_of(1), 4..8);
+/// assert_eq!(p.socket_of(5), 1);
+/// assert_eq!(p.leader(1), 4);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    ranks: usize,
+    sockets: usize,
+}
+
+impl Placement {
+    /// Place `ranks` workers on `sockets` sockets. Sockets are clamped
+    /// to `1..=ranks`, so every socket owns at least one rank.
+    pub fn new(ranks: usize, sockets: usize) -> Placement {
+        assert!(ranks > 0, "placement needs at least one rank");
+        Placement {
+            ranks,
+            sockets: sockets.clamp(1, ranks),
+        }
+    }
+
+    /// Everything on one socket — the topology-blind layout every
+    /// placed code path degenerates to.
+    pub fn flat(ranks: usize) -> Placement {
+        Placement::new(ranks, 1)
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.ranks
+    }
+
+    pub fn n_sockets(&self) -> usize {
+        self.sockets
+    }
+
+    /// Whether this is the single-socket (flat) layout.
+    pub fn is_flat(&self) -> bool {
+        self.sockets <= 1
+    }
+
+    /// The contiguous rank range socket `socket` owns.
+    pub fn ranks_of(&self, socket: usize) -> Range<usize> {
+        assert!(socket < self.sockets, "socket {socket} out of range");
+        let base = self.ranks / self.sockets;
+        let extra = self.ranks % self.sockets;
+        let start = socket * base + socket.min(extra);
+        let len = base + usize::from(socket < extra);
+        start..start + len
+    }
+
+    /// The socket owning `rank`.
+    pub fn socket_of(&self, rank: usize) -> usize {
+        assert!(rank < self.ranks, "rank {rank} out of range");
+        let base = self.ranks / self.sockets;
+        let extra = self.ranks % self.sockets;
+        let fat = extra * (base + 1);
+        if rank < fat {
+            rank / (base + 1)
+        } else {
+            extra + (rank - fat) / base
+        }
+    }
+
+    /// The socket's leader rank (its first rank) — the rank whose
+    /// thread carries the inter-socket legs of the hierarchical
+    /// all-reduce.
+    pub fn leader(&self, socket: usize) -> usize {
+        self.ranks_of(socket).start
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ranks / {} sockets", self.ranks, self.sockets)
+    }
 }
 
 #[cfg(test)]
@@ -70,5 +317,88 @@ mod tests {
             .map(|&s| Topology::xeon(s).paper_batch_size())
             .collect();
         assert_eq!(got, vec![54, 52, 104, 208, 416]);
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let t: Topology = "2x4".parse().expect("parse");
+        assert_eq!((t.sockets, t.cores_per_socket), (2, 4));
+        assert_eq!(t.to_string(), "2x4");
+        assert_eq!(" 4X2 ".parse::<Topology>().expect("parse").total_cores(), 8);
+        for bad in ["", "2", "x4", "2x", "0x4", "2x0", "axb"] {
+            assert!(bad.parse::<Topology>().is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn shape_allows_tiny_layouts_for_placement() {
+        let t = Topology::shape(4, 2);
+        assert_eq!(t.total_cores(), 8);
+        let p = t.placement(8);
+        assert_eq!(p.n_sockets(), 4);
+        assert_eq!(p.ranks_of(3), 6..8);
+    }
+
+    #[test]
+    fn detect_returns_a_positive_shape() {
+        // Whatever the host (or the env override in a CI matrix run)
+        // says, the result must be usable for placement.
+        let t = Topology::detect();
+        assert!(t.sockets >= 1 && t.cores_per_socket >= 1);
+        assert_eq!(t.placement(4).n_ranks(), 4);
+    }
+
+    #[test]
+    fn sysfs_parser_handles_real_and_missing_trees() {
+        // The real sysfs may or may not exist in the test environment;
+        // when it does, detection must produce a positive shape.
+        if let Some(t) = Topology::detect_sysfs("/sys/devices/system/node") {
+            assert!(t.sockets >= 1 && t.cores_per_socket >= 1);
+        }
+        assert_eq!(Topology::detect_sysfs("/nonexistent/path"), None);
+    }
+
+    #[test]
+    fn cpulist_counting() {
+        assert_eq!(count_cpulist("0-3,8,10-11"), 6);
+        assert_eq!(count_cpulist("0"), 1);
+        assert_eq!(count_cpulist("0-27"), 28);
+        assert_eq!(count_cpulist(""), 0);
+        assert_eq!(count_cpulist("garbage"), 0);
+    }
+
+    #[test]
+    fn placement_groups_are_contiguous_and_near_even() {
+        for ranks in 1..=9 {
+            for sockets in 1..=6 {
+                let p = Placement::new(ranks, sockets);
+                let mut covered = 0usize;
+                let mut sizes = Vec::new();
+                for s in 0..p.n_sockets() {
+                    let r = p.ranks_of(s);
+                    assert_eq!(r.start, covered, "groups must be contiguous");
+                    assert_eq!(p.leader(s), r.start);
+                    for rank in r.clone() {
+                        assert_eq!(p.socket_of(rank), s);
+                    }
+                    sizes.push(r.len());
+                    covered = r.end;
+                }
+                assert_eq!(covered, ranks, "every rank placed exactly once");
+                let (min, max) = (
+                    *sizes.iter().min().expect("non-empty"),
+                    *sizes.iter().max().expect("non-empty"),
+                );
+                assert!(min >= 1 && max - min <= 1, "near-even split");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_placement_is_one_socket() {
+        let p = Placement::flat(5);
+        assert!(p.is_flat());
+        assert_eq!(p.n_sockets(), 1);
+        assert_eq!(p.ranks_of(0), 0..5);
     }
 }

@@ -8,13 +8,22 @@
 //! jobs execute in submission order, which is what lets the bucketed
 //! all-reduce overlap with a still-running backward pass.
 //!
+//! [`PersistentPool::new_placed`] is the NUMA-aware constructor: rank
+//! states are built *on the rank's own thread*, so the pages backing a
+//! replica's weights, workspaces and staging buffers are first-touched
+//! by the thread that will run its jobs. Under the default Linux
+//! first-touch policy that keeps each replica's memory on the socket the
+//! [`Placement`] assigns it to.
+//!
 //! [`WorkerPool`] is the older scoped-thread convenience (one spawn per
 //! step) kept for the simple fork-join collectives in tests and benches.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::allreduce::ring_allreduce;
+use super::topology::Placement;
 
 /// A job executed on a rank's thread against its owned state. Public so
 /// callers that supervise ranks (the serving dispatcher) can hold a job
@@ -27,24 +36,28 @@ enum Msg<W> {
     Stop,
 }
 
-/// Spawn one rank thread: owns `state`, runs jobs from `rx` in
-/// submission order, hands the state back when stopped. The receiver is
+/// A rank's job loop: run jobs from `rx` in submission order against the
+/// owned state, hand the state back when stopped. The receiver is
 /// dropped if a job unwinds the thread, which is exactly how a dead rank
 /// is detected: subsequent sends to it fail.
-fn spawn_rank<W: Send + 'static>(state: W, rx: Receiver<Msg<W>>) -> JoinHandle<W> {
-    std::thread::spawn(move || {
-        let mut state = state;
-        while let Ok(msg) = rx.recv() {
-            match msg {
-                Msg::Job(job) => job(&mut state),
-                Msg::Sync(ack) => {
-                    let _ = ack.send(());
-                }
-                Msg::Stop => break,
+fn run_rank<W>(mut state: W, rx: Receiver<Msg<W>>) -> W {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Job(job) => job(&mut state),
+            Msg::Sync(ack) => {
+                let _ = ack.send(());
             }
+            Msg::Stop => break,
         }
-        state
-    })
+    }
+    state
+}
+
+/// Spawn one rank thread owning an already-built `state`. The `Option`
+/// in the handle type matches the placed spawn path, where a thread
+/// whose builder failed has no state to hand back.
+fn spawn_rank<W: Send + 'static>(state: W, rx: Receiver<Msg<W>>) -> JoinHandle<Option<W>> {
+    std::thread::spawn(move || Some(run_rank(state, rx)))
 }
 
 /// A pool of long-lived rank threads, each owning a state `W` (e.g. a
@@ -70,14 +83,19 @@ fn spawn_rank<W: Send + 'static>(state: W, rx: Receiver<Msg<W>>) -> JoinHandle<W
 /// ```
 pub struct PersistentPool<W> {
     txs: Vec<Sender<Msg<W>>>,
-    handles: Vec<JoinHandle<W>>,
+    handles: Vec<JoinHandle<Option<W>>>,
+    placement: Placement,
 }
 
 impl<W: Send + 'static> PersistentPool<W> {
     /// Spawn one thread per state; thread `r` owns `states[r]` for the
-    /// pool's lifetime and hands it back at [`Self::join`].
+    /// pool's lifetime and hands it back at [`Self::join`]. States were
+    /// built by the caller's thread, so this is the topology-blind
+    /// (flat placement) constructor — see [`Self::new_placed`] for the
+    /// first-touch path.
     pub fn new(states: Vec<W>) -> PersistentPool<W> {
         assert!(!states.is_empty(), "pool needs at least one rank");
+        let placement = Placement::flat(states.len());
         let mut txs = Vec::with_capacity(states.len());
         let mut handles = Vec::with_capacity(states.len());
         for state in states {
@@ -85,11 +103,97 @@ impl<W: Send + 'static> PersistentPool<W> {
             txs.push(tx);
             handles.push(spawn_rank(state, rx));
         }
-        PersistentPool { txs, handles }
+        PersistentPool {
+            txs,
+            handles,
+            placement,
+        }
+    }
+
+    /// Spawn `placement.n_ranks()` threads, each building its own state
+    /// with `build(rank, socket)` **on the rank's thread** — the
+    /// first-touch rule that keeps replica memory socket-local. Blocks
+    /// until every rank has finished building.
+    pub fn new_placed<F>(placement: Placement, build: F) -> PersistentPool<W>
+    where
+        F: Fn(usize, usize) -> W + Send + Sync + 'static,
+    {
+        let result = Self::try_new_placed::<std::convert::Infallible, _>(placement, move |r, s| {
+            Ok(build(r, s))
+        });
+        match result {
+            Ok(pool) => pool,
+            Err(never) => match never {},
+        }
+    }
+
+    /// Fallible [`Self::new_placed`]: if any rank's builder returns an
+    /// error, every already-spawned thread is stopped and joined and the
+    /// lowest-ranked error is returned (deterministic regardless of
+    /// which builder finished first).
+    pub fn try_new_placed<E, F>(placement: Placement, build: F) -> Result<PersistentPool<W>, E>
+    where
+        E: Send + 'static,
+        F: Fn(usize, usize) -> Result<W, E> + Send + Sync + 'static,
+    {
+        let build = Arc::new(build);
+        let ranks = placement.n_ranks();
+        let (status_tx, status_rx) = channel::<(usize, Option<E>)>();
+        let mut txs = Vec::with_capacity(ranks);
+        let mut handles = Vec::with_capacity(ranks);
+        for rank in 0..ranks {
+            let socket = placement.socket_of(rank);
+            let (tx, rx) = channel::<Msg<W>>();
+            txs.push(tx);
+            let build = Arc::clone(&build);
+            let status = status_tx.clone();
+            handles.push(std::thread::spawn(move || match build(rank, socket) {
+                Ok(state) => {
+                    let _ = status.send((rank, None));
+                    Some(run_rank(state, rx))
+                }
+                Err(e) => {
+                    let _ = status.send((rank, Some(e)));
+                    None
+                }
+            }));
+        }
+        drop(status_tx);
+        let mut errors: Vec<(usize, E)> = Vec::new();
+        for _ in 0..ranks {
+            match status_rx.recv() {
+                Ok((_, None)) => {}
+                Ok((rank, Some(e))) => errors.push((rank, e)),
+                // A builder thread panicked before reporting; surface it
+                // the same way a dead rank is surfaced everywhere else —
+                // via bounced sends — rather than blocking here forever.
+                Err(_) => break,
+            }
+        }
+        if let Some((_, first)) = errors.into_iter().min_by_key(|e| e.0) {
+            for tx in &txs {
+                let _ = tx.send(Msg::Stop);
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(first);
+        }
+        Ok(PersistentPool {
+            txs,
+            handles,
+            placement,
+        })
     }
 
     pub fn ranks(&self) -> usize {
         self.handles.len()
+    }
+
+    /// The rank→socket layout this pool was spawned with (flat for
+    /// [`Self::new`]).
+    pub fn placement(&self) -> Placement {
+        self.placement
     }
 
     /// Queue `job` on rank `rank`'s thread. Jobs on one rank run in
@@ -121,6 +225,12 @@ impl<W: Send + 'static> PersistentPool<W> {
     /// The old thread's handle is reaped and its panic payload, if any,
     /// discarded — the caller has already observed the death via a
     /// bounced [`Self::try_exec`] and decided on a restart policy.
+    ///
+    /// `state` was built by the supervising thread, not the rank's own,
+    /// so a respawned replica loses the first-touch guarantee of
+    /// [`Self::new_placed`] — an accepted cost on this rare recovery
+    /// path (the alternative, building inside the new thread, would
+    /// leave the supervisor unable to report build errors synchronously).
     pub fn respawn(&mut self, rank: usize, state: W) {
         let (tx, rx) = channel::<Msg<W>>();
         let handle = spawn_rank(state, rx);
@@ -169,7 +279,11 @@ impl<W: Send + 'static> PersistentPool<W> {
         self.send_stop();
         self.handles
             .drain(..)
-            .map(|h| h.join().expect("worker thread panicked"))
+            .map(|h| {
+                h.join()
+                    .expect("worker thread panicked")
+                    .expect("a constructed pool's ranks all hold state")
+            })
             .collect()
     }
 }
@@ -309,6 +423,44 @@ mod tests {
         let pool = PersistentPool::new(vec![0u8]);
         pool.exec(0, |s| *s += 1);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn placed_pool_builds_state_on_rank_threads() {
+        let placement = Placement::new(4, 2);
+        let main = std::thread::current().id();
+        let pool = PersistentPool::new_placed(placement, move |rank, socket| {
+            // First-touch contract: the builder runs off the spawning
+            // thread, on the rank's own.
+            assert_ne!(std::thread::current().id(), main);
+            (rank, socket)
+        });
+        assert_eq!(pool.ranks(), 4);
+        assert_eq!(pool.placement().n_sockets(), 2);
+        pool.sync();
+        assert_eq!(pool.join(), vec![(0, 0), (1, 0), (2, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn flat_pool_reports_flat_placement() {
+        let pool = PersistentPool::new(vec![0u8, 0]);
+        assert!(pool.placement().is_flat());
+        assert_eq!(pool.placement().n_ranks(), 2);
+    }
+
+    #[test]
+    fn placed_pool_surfaces_the_lowest_rank_build_error() {
+        let err = PersistentPool::<u32>::try_new_placed(Placement::new(3, 3), |rank, _| {
+            if rank == 0 {
+                Ok(1u32)
+            } else {
+                Err(format!("rank {rank} refused"))
+            }
+        })
+        .err()
+        .expect("build must fail");
+        // Two ranks errored; the lowest rank's error wins, deterministically.
+        assert_eq!(err, "rank 1 refused");
     }
 
     /// Silence the panic-handler backtrace for a deliberately killed

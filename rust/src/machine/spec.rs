@@ -119,6 +119,15 @@ impl MachineSpec {
         self.peak(prec) / self.cores as f64
     }
 
+    /// Whole-node peak: `sockets` sockets of this spec. [`Self::peak`]
+    /// stays per-socket, so multi-socket roofline rows must divide by
+    /// this — not the per-socket peak — when they quote node
+    /// efficiency; quoting both makes the communication loss visible
+    /// (per-socket efficiency holds up while node efficiency drops).
+    pub fn peak_node(&self, prec: Precision, sockets: usize) -> f64 {
+        self.peak(prec) * sockets.max(1) as f64
+    }
+
     /// Parse a spec by name ("clx", "cpx", "v100").
     pub fn by_name(name: &str) -> Option<MachineSpec> {
         match name.to_ascii_lowercase().as_str() {
@@ -149,6 +158,18 @@ mod tests {
         assert_eq!(MachineSpec::by_name("CLX").unwrap().name, "CLX");
         assert_eq!(MachineSpec::by_name("cooper").unwrap().name, "CPX");
         assert!(MachineSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn node_peak_scales_with_sockets() {
+        let cpx = MachineSpec::cooper_lake();
+        assert_eq!(cpx.peak_node(Precision::F32, 1), cpx.peak(Precision::F32));
+        assert_eq!(
+            cpx.peak_node(Precision::Bf16, 16),
+            16.0 * cpx.peak(Precision::Bf16)
+        );
+        // Degenerate socket counts clamp to one socket.
+        assert_eq!(cpx.peak_node(Precision::F32, 0), cpx.peak(Precision::F32));
     }
 
     #[test]

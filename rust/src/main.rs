@@ -134,6 +134,10 @@ USAGE: dilconv <subcommand> [--flags]
                    [--config cfg.toml] [--checkpoint ckpt]
                    [--buckets 1024,2048,4096] [--max-batch N]
                    [--window-ms F] [--queue N] [--workers N] [--threads N]
+                   [--sockets N] shard the worker pool across N NUMA
+                   sockets: first-touch replica placement + bucket-home
+                   routing (0 = detect via CONV1D_TOPOLOGY / sysfs;
+                   bits identical either way)
                    [--backend brgemm|onednn|direct|bf16|i8]
                    [--precision f32|bf16|i8] (i8 = per-channel symmetric
                    weights + one-time calibrated activation scales)
@@ -306,8 +310,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!(
         "serving AtacWorks-like net: {} conv layers, ch={}, buckets [{}], max_batch {}, \
-         window {} ms, queue {}, {} worker(s) x {} thread(s), backend {}, precision {:?}, \
-         partition {}, autotune {}, warm {}, fuse {}",
+         window {} ms, queue {}, {} worker(s) x {} thread(s) on {}, backend {}, \
+         precision {:?}, partition {}, autotune {}, warm {}, fuse {}",
         net_cfg.n_conv_layers(),
         net_cfg.channels,
         cfg.buckets,
@@ -316,6 +320,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.queue_depth,
         cfg.workers,
         cfg.threads,
+        match cfg.sockets {
+            0 => "auto-detected sockets".to_string(),
+            1 => "1 socket (flat pool)".to_string(),
+            s => format!("{s} sockets"),
+        },
         cfg.backend,
         cfg.precision,
         cfg.partition,
@@ -546,10 +555,19 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     println!(
         "# Figs. 8/9: modeled AtacWorks epoch time on CPX sockets ({prec:?})"
     );
-    let t1 = model_epoch(&w, &MachineSpec::cooper_lake(), prec, Strategy::Brgemm, &Topology::xeon(1), &comm);
+    let spec = MachineSpec::cooper_lake();
+    let t1 = model_epoch(&w, &spec, prec, Strategy::Brgemm, &Topology::xeon(1), &comm);
+    let total_flops = w.train_flops_per_sample() as f64 * w.train_segments as f64;
     let mut rows = Vec::new();
     for &s in &[1usize, 2, 4, 8, 16] {
-        let t = model_epoch(&w, &MachineSpec::cooper_lake(), prec, Strategy::Brgemm, &Topology::xeon(s), &comm);
+        let t = model_epoch(&w, &spec, prec, Strategy::Brgemm, &Topology::xeon(s), &comm);
+        // Per-socket efficiency rates the kernels against one socket's
+        // peak; node efficiency divides by `peak_node` and includes the
+        // collective, so the gap between the two columns is exactly the
+        // communication + reserved-core loss of scaling out.
+        let socket_eff = total_flops / s as f64 / t.compute_secs / spec.peak(prec);
+        let node_eff =
+            total_flops / (t.compute_secs + t.comm_secs) / spec.peak_node(prec, s);
         rows.push(vec![
             s.to_string(),
             Topology::xeon(s).paper_batch_size().to_string(),
@@ -559,12 +577,14 @@ fn cmd_scaling(args: &Args) -> Result<()> {
             secs(t.total()),
             speedup(t1.total() / t.total()),
             speedup((t1.compute_secs + t1.comm_secs) / (t.compute_secs + t.comm_secs)),
+            pct(socket_eff),
+            pct(node_eff),
         ]);
     }
     println!(
         "{}",
         markdown(
-            &["sockets", "batch", "compute", "comm", "eval", "total", "speedup", "train-only speedup"],
+            &["sockets", "batch", "compute", "comm", "eval", "total", "speedup", "train-only speedup", "socket eff", "node eff"],
             &rows
         )
     );

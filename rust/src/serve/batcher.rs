@@ -32,6 +32,20 @@
 //! underfilled batches, not just as mysterious latency. Recovery events
 //! count in [`ServeMetrics::worker_panics`], [`ServeMetrics::restarts`]
 //! and [`ServeMetrics::deadline_shed`].
+//!
+//! NUMA sharding (DESIGN.md §6b): with [`BatcherOpts::sockets`] > 1 the
+//! worker ranks are spawned in socket groups — each rank's engine is
+//! built **on its own thread** ([`PersistentPool::try_new_placed`]), so
+//! replica state is first-touched by the socket that serves from it —
+//! and the bucket vocabulary is sharded across sockets: every bucket
+//! has a *home socket* (its index in the bucket list, modulo sockets),
+//! and a flushed group goes to its home socket (round-robin within the
+//! group) unless the home is dead or saturated, in which case it spills
+//! to the least-loaded live socket. [`ServeMetrics::per_socket`]
+//! accounts every batch as routed or spilled, so the policy is
+//! observable. Sharding is a placement transform only: which socket
+//! executes a batch can never change its bits (batch/bucket invariance,
+//! DESIGN.md §7).
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -41,7 +55,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::dist::{Job, PersistentPool};
+use crate::dist::{Job, PersistentPool, Placement, Topology};
 use crate::metrics::LatencyHistogram;
 use crate::model::NetConfig;
 
@@ -91,6 +105,11 @@ pub struct BatcherOpts {
     /// before retiring it. With every rank retired the server answers
     /// [`ServeError::WorkerPanic`] instead of wedging.
     pub max_restarts: usize,
+    /// Socket groups the worker ranks are sharded into. `1` (default)
+    /// is the flat pool; `0` detects the machine shape
+    /// ([`Topology::detect`], `CONV1D_TOPOLOGY` override). Clamped to
+    /// the worker count. See the module docs for the routing policy.
+    pub sockets: usize,
     /// Deterministic fault-injection plan (chaos tests and the
     /// fault-rate bench column only; absent from production builds).
     #[cfg(any(test, feature = "fault"))]
@@ -108,9 +127,68 @@ impl Default for BatcherOpts {
             stream_window: None,
             deadline: None,
             max_restarts: 3,
+            sockets: 1,
             #[cfg(any(test, feature = "fault"))]
             fault: None,
         }
+    }
+}
+
+/// Builder-style setters so call sites (and [`crate::config::ServeConfig`])
+/// state only what differs from [`Default`].
+impl BatcherOpts {
+    /// Replace the per-worker engine options.
+    pub fn with_engine(mut self, engine: EngineOpts) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Batching window.
+    pub fn with_window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Admission budget (queued or executing requests).
+    pub fn with_queue_depth(mut self, queue_depth: usize) -> Self {
+        self.queue_depth = queue_depth;
+        self
+    }
+
+    /// Worker threads.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Warm every worker's plan cache before accepting traffic.
+    pub fn with_warm(mut self, warm: bool) -> Self {
+        self.warm = warm;
+        self
+    }
+
+    /// Streaming window for over-wide requests (`None` rejects them).
+    pub fn with_stream_window(mut self, stream_window: Option<usize>) -> Self {
+        self.stream_window = stream_window;
+        self
+    }
+
+    /// Default per-request deadline (`None` = no default).
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Restart budget per worker rank.
+    pub fn with_max_restarts(mut self, max_restarts: usize) -> Self {
+        self.max_restarts = max_restarts;
+        self
+    }
+
+    /// Socket groups for the worker pool (`0` = detect).
+    pub fn with_sockets(mut self, sockets: usize) -> Self {
+        self.sockets = sockets;
+        self
     }
 }
 
@@ -182,6 +260,11 @@ pub struct ServeMetrics {
     pub restarts: u64,
     /// Requests shed because their deadline expired while queued.
     pub deadline_shed: u64,
+    /// Per-socket routing/occupancy counters (one entry per socket
+    /// group; a single entry for the flat pool). Every dispatched batch
+    /// counts exactly once, as routed or spilled, on the socket that
+    /// executed it.
+    pub per_socket: Vec<SocketMetrics>,
     started: Instant,
     /// Set when this value became a snapshot ([`Server::metrics`] /
     /// [`Server::shutdown`]): freezes `elapsed_secs`, so a stored
@@ -197,8 +280,24 @@ pub struct BucketMetrics {
     pub latency: LatencyHistogram,
 }
 
+/// Per-socket slice of the serving telemetry (NUMA sharding).
+#[derive(Debug, Clone, Default)]
+pub struct SocketMetrics {
+    /// Batches this socket executed as their home socket.
+    pub routed: u64,
+    /// Batches this socket executed for another socket (its home was
+    /// dead or saturated).
+    pub spilled_in: u64,
+    /// Batches homed here but executed elsewhere.
+    pub spilled_out: u64,
+    /// Request rows dispatched to this socket (routed + spilled-in).
+    pub rows: u64,
+    /// Highest number of batches in flight on this socket at once.
+    pub peak_inflight: u64,
+}
+
 impl ServeMetrics {
-    fn new() -> ServeMetrics {
+    fn new(sockets: usize) -> ServeMetrics {
         ServeMetrics {
             latency: LatencyHistogram::new(),
             per_bucket: BTreeMap::new(),
@@ -212,6 +311,7 @@ impl ServeMetrics {
             worker_panics: 0,
             restarts: 0,
             deadline_shed: 0,
+            per_socket: vec![SocketMetrics::default(); sockets.max(1)],
             started: Instant::now(),
             frozen_at: None,
         }
@@ -534,37 +634,26 @@ enum RankHealth {
     Retired,
 }
 
-/// The dispatcher's supervisor: owns everything needed to build a fresh
-/// [`Worker`] for a rank, plus each rank's health and restart budget.
-struct Supervisor {
+/// Everything needed to build one rank's [`Worker`]: shared between the
+/// placed pool spawner (which builds each engine **on the rank's own
+/// thread**, so replica state is first-touched by the socket serving
+/// from it) and the supervisor's respawn path.
+#[derive(Clone)]
+struct WorkerFactory {
     net_cfg: NetConfig,
     params: Arc<Vec<f32>>,
     engine_opts: EngineOpts,
     warm: bool,
     stream_window: Option<usize>,
-    max_restarts: usize,
     metrics: Arc<Mutex<ServeMetrics>>,
-    health: Vec<RankHealth>,
-    /// Restarts consumed per rank.
-    used: Vec<usize>,
-    next_rank: usize,
     #[cfg(any(test, feature = "fault"))]
     fault: Option<Arc<FaultPlan>>,
 }
 
-impl Supervisor {
-    /// Exponential backoff before the rank's next restart:
-    /// `base · 2^used`, capped.
-    fn backoff(&self, rank: usize) -> Duration {
-        let exp = self.used[rank].min(16) as u32;
-        RESTART_BACKOFF_BASE
-            .saturating_mul(1u32 << exp)
-            .min(RESTART_BACKOFF_CAP)
-    }
-
+impl WorkerFactory {
     /// Build one rank's worker: fresh engine (warmed when configured)
     /// plus the rebuild ingredients it retains for panic recovery.
-    fn build_worker(&self, rank: usize) -> Result<Worker, ServeError> {
+    fn build(&self, rank: usize) -> Result<Worker, ServeError> {
         let mut engine = InferenceEngine::new(self.net_cfg, &self.params, self.engine_opts.clone())?;
         if self.warm {
             engine.warm()?;
@@ -585,6 +674,62 @@ impl Supervisor {
             fault: self.fault.clone(),
         })
     }
+}
+
+/// RAII in-flight counter for one socket's dispatch load: incremented
+/// when a batch is offered to the socket, decremented when the job
+/// finishes — or is dropped anywhere along the way (bounced dispatch,
+/// dead rank's queue), so the spill policy never reads a leaked count.
+struct LoadGuard {
+    load: Arc<AtomicUsize>,
+}
+
+impl LoadGuard {
+    /// Increment `load` and return the guard plus the new depth.
+    fn acquire(load: &Arc<AtomicUsize>) -> (LoadGuard, usize) {
+        let depth = load.fetch_add(1, Ordering::SeqCst) + 1;
+        (
+            LoadGuard {
+                load: Arc::clone(load),
+            },
+            depth,
+        )
+    }
+}
+
+impl Drop for LoadGuard {
+    fn drop(&mut self) {
+        self.load.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The dispatcher's supervisor: rank health and restart budgets, plus
+/// the socket-sharded routing state (home-socket map, per-socket
+/// round-robin cursors and in-flight load).
+struct Supervisor {
+    factory: WorkerFactory,
+    max_restarts: usize,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    /// Rank → socket layout of the worker pool.
+    placement: Placement,
+    health: Vec<RankHealth>,
+    /// Restarts consumed per rank.
+    used: Vec<usize>,
+    /// Per-socket round-robin cursor.
+    cursors: Vec<usize>,
+    /// Per-socket batches in flight (shared with the job closures).
+    load: Vec<Arc<AtomicUsize>>,
+}
+
+impl Supervisor {
+    /// Exponential backoff before the rank's next restart:
+    /// `base · 2^used`, capped.
+    fn backoff(&self, rank: usize) -> Duration {
+        let exp = self.used[rank].min(16) as u32;
+        RESTART_BACKOFF_BASE
+            .saturating_mul(1u32 << exp)
+            .min(RESTART_BACKOFF_CAP)
+    }
 
     /// A dispatch to `rank` bounced — its thread is dead. Start (or
     /// keep) its backoff clock, or retire it if the budget is spent.
@@ -602,9 +747,11 @@ impl Supervisor {
 
     /// Respawn `rank` with a fresh worker. On build failure the rank is
     /// retired outright: the parameters and geometry are unchanged, so
-    /// a failed build would fail identically on every retry.
+    /// a failed build would fail identically on every retry. (The
+    /// respawned replica is built on this thread, not the rank's — the
+    /// first-touch exception documented on [`PersistentPool::respawn`].)
     fn respawn(&mut self, pool: &mut PersistentPool<Worker>, rank: usize) {
-        match self.build_worker(rank) {
+        match self.factory.build(rank) {
             Ok(w) => {
                 pool.respawn(rank, w);
                 self.used[rank] += 1;
@@ -615,61 +762,149 @@ impl Supervisor {
         }
     }
 
-    /// Dispatch one flushed group, supervising: offer it to live ranks
-    /// round-robin; a bounce marks the rank dead and moves on; with no
-    /// rank live, wait out the earliest backoff and respawn; with every
-    /// rank retired, answer the group `WorkerPanic` instead of wedging
-    /// the queue.
+    /// Live ranks in socket `s`'s group.
+    fn live_ranks_on(&self, s: usize) -> usize {
+        self.placement
+            .ranks_of(s)
+            .filter(|&r| matches!(self.health[r], RankHealth::Live))
+            .count()
+    }
+
+    /// The socket owning `bucket`: its index in the bucket vocabulary,
+    /// modulo sockets. A streamed request's execution width is snapped
+    /// to a real bucket at startup, so it shards like any other.
+    fn home_socket(&self, bucket: usize) -> usize {
+        let idx = self
+            .factory
+            .engine_opts
+            .buckets
+            .widths()
+            .iter()
+            .position(|&w| w == bucket)
+            .unwrap_or(0);
+        idx % self.placement.n_sockets()
+    }
+
+    /// Target socket for a group homed on `home`: the home socket,
+    /// unless it has no live rank or is saturated (≥ 2 batches in
+    /// flight per live rank) — then the least-loaded live socket
+    /// (ties → lowest id), provided it is actually less loaded. `None`
+    /// when no socket has a live rank.
+    fn choose_socket(&self, home: usize) -> Option<usize> {
+        let live_home = self.live_ranks_on(home);
+        let load_home = self.load[home].load(Ordering::SeqCst);
+        if live_home > 0 && load_home < 2 * live_home {
+            return Some(home);
+        }
+        let mut best: Option<(usize, usize)> = None; // (load, socket)
+        for s in 0..self.placement.n_sockets() {
+            if s == home || self.live_ranks_on(s) == 0 {
+                continue;
+            }
+            let l = self.load[s].load(Ordering::SeqCst);
+            if best.is_none_or(|(bl, _)| l < bl) {
+                best = Some((l, s));
+            }
+        }
+        match best {
+            // A saturated home keeps its batch when every spill target
+            // is at least as loaded.
+            Some((l, _)) if live_home > 0 && l >= load_home => Some(home),
+            Some((_, s)) => Some(s),
+            None => (live_home > 0).then_some(home),
+        }
+    }
+
+    /// Dispatch one flushed group, supervising and routing: pick the
+    /// target socket ([`Self::choose_socket`]), offer the batch to its
+    /// live ranks round-robin; a bounce marks the rank dead and moves
+    /// on (re-choosing the socket once the group is exhausted); with no
+    /// rank live anywhere, wait out the earliest backoff and respawn;
+    /// with every rank retired, answer the group `WorkerPanic` instead
+    /// of wedging the queue. The requests travel in a shared cell so a
+    /// bounced offer (whose job closure died with its guard) can be
+    /// re-offered elsewhere without cloning the data.
     fn dispatch(&mut self, pool: &mut PersistentPool<Worker>, group: Group) {
-        let n = pool.ranks();
         let rows = group.reqs.len() as u64;
-        let reqs = group.reqs;
-        let mut job: Job<Worker> = Box::new(move |w: &mut Worker| w.run_batch(reqs));
+        let Some(bucket) = group.reqs.first().map(|p| p.bucket) else {
+            return;
+        };
+        let home = self.home_socket(bucket);
+        let cell: Arc<Mutex<Option<Vec<Pending>>>> = Arc::new(Mutex::new(Some(group.reqs)));
         loop {
+            let Some(target) = self.choose_socket(home) else {
+                // No rank is live anywhere. Respawn the one whose
+                // backoff expires soonest — under total worker failure
+                // the dispatcher has nothing more useful to do than
+                // wait for it.
+                let mut soonest: Option<(usize, Instant)> = None;
+                for rank in 0..self.health.len() {
+                    if let RankHealth::Backoff { until } = self.health[rank] {
+                        if soonest.is_none_or(|(_, u)| until < u) {
+                            soonest = Some((rank, until));
+                        }
+                    }
+                }
+                match soonest {
+                    Some((rank, until)) => {
+                        let now = Instant::now();
+                        if until > now {
+                            std::thread::sleep(until - now);
+                        }
+                        self.respawn(pool, rank);
+                        continue;
+                    }
+                    None => {
+                        // Every rank retired: degrade gracefully.
+                        // Dropping the cell releases the admission
+                        // slots (SlotGuard) and answers every caller
+                        // (Reply's drop contract).
+                        drop(cell);
+                        lock_unpoisoned(&self.metrics).failed += rows;
+                        return;
+                    }
+                }
+            };
+            let ranks = self.placement.ranks_of(target);
+            let n = ranks.len();
             for _ in 0..n {
-                let rank = self.next_rank % n;
-                self.next_rank = self.next_rank.wrapping_add(1);
+                let rank = ranks.start + self.cursors[target] % n;
+                self.cursors[target] = self.cursors[target].wrapping_add(1);
                 if !matches!(self.health[rank], RankHealth::Live) {
                     continue;
                 }
+                let (guard, depth) = LoadGuard::acquire(&self.load[target]);
+                let cell_ref = Arc::clone(&cell);
+                let job: Job<Worker> = Box::new(move |w: &mut Worker| {
+                    let _inflight = guard;
+                    if let Some(reqs) = lock_unpoisoned(&cell_ref).take() {
+                        w.run_batch(reqs);
+                    }
+                });
                 match pool.try_exec(rank, job) {
-                    Ok(()) => return,
+                    Ok(()) => {
+                        let mut m = lock_unpoisoned(&self.metrics);
+                        let sm = &mut m.per_socket[target];
+                        sm.rows += rows;
+                        sm.peak_inflight = sm.peak_inflight.max(depth as u64);
+                        if target == home {
+                            sm.routed += 1;
+                        } else {
+                            sm.spilled_in += 1;
+                            m.per_socket[home].spilled_out += 1;
+                        }
+                        return;
+                    }
                     Err(bounced) => {
-                        job = bounced;
+                        // Dropping the bounced job frees its load slot;
+                        // the requests stay in the cell for the retry.
+                        drop(bounced);
                         self.note_death(rank);
                     }
                 }
             }
-            // No rank is live. Respawn the one whose backoff expires
-            // soonest — under total worker failure the dispatcher has
-            // nothing more useful to do than wait for it.
-            let mut soonest: Option<(usize, Instant)> = None;
-            for rank in 0..n {
-                if let RankHealth::Backoff { until } = self.health[rank] {
-                    if soonest.is_none_or(|(_, u)| until < u) {
-                        soonest = Some((rank, until));
-                    }
-                }
-            }
-            match soonest {
-                Some((rank, until)) => {
-                    let now = Instant::now();
-                    if until > now {
-                        std::thread::sleep(until - now);
-                    }
-                    self.respawn(pool, rank);
-                    // Loop back: the freshly live rank takes the job
-                    // (or bounces again and re-enters backoff).
-                }
-                None => {
-                    // Every rank retired: degrade gracefully. Dropping
-                    // the job releases the admission slots (SlotGuard)
-                    // and answers every caller (Reply's drop contract).
-                    drop(job);
-                    lock_unpoisoned(&self.metrics).failed += rows;
-                    return;
-                }
-            }
+            // Every rank on the chosen socket died during the offers:
+            // loop back and re-choose (possibly a spill target).
         }
     }
 }
@@ -683,6 +918,8 @@ pub struct Server {
     /// Block-aligned streaming window, when the streaming route is on.
     stream_window: Option<usize>,
     default_deadline: Option<Duration>,
+    /// Rank → socket layout the worker pool was spawned with.
+    placement: Placement,
     metrics: Arc<Mutex<ServeMetrics>>,
     dispatcher: Option<JoinHandle<()>>,
 }
@@ -740,26 +977,43 @@ impl Server {
                 Some(w)
             }
         };
-        let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
+        // Socket layout: explicit, or detected from the machine
+        // (`sockets: 0`); either way clamped to the worker count by
+        // `Placement::new`.
+        let sockets = match opts.sockets {
+            0 => Topology::detect().sockets,
+            s => s,
+        };
+        let placement = Placement::new(opts.workers, sockets);
+        let metrics = Arc::new(Mutex::new(ServeMetrics::new(placement.n_sockets())));
         let inflight = Arc::new(AtomicUsize::new(0));
-        let mut sup = Supervisor {
+        let factory = WorkerFactory {
             net_cfg,
             params: Arc::new(params.to_vec()),
             engine_opts: opts.engine.clone(),
             warm: opts.warm,
             stream_window,
-            max_restarts: opts.max_restarts,
             metrics: Arc::clone(&metrics),
-            health: (0..opts.workers).map(|_| RankHealth::Live).collect(),
-            used: vec![0; opts.workers],
-            next_rank: 0,
             #[cfg(any(test, feature = "fault"))]
             fault: opts.fault.clone(),
         };
-        let mut workers = Vec::with_capacity(opts.workers);
-        for rank in 0..opts.workers {
-            workers.push(sup.build_worker(rank)?);
-        }
+        let mut sup = Supervisor {
+            factory: factory.clone(),
+            max_restarts: opts.max_restarts,
+            metrics: Arc::clone(&metrics),
+            placement,
+            health: (0..opts.workers).map(|_| RankHealth::Live).collect(),
+            used: vec![0; opts.workers],
+            cursors: vec![0; placement.n_sockets()],
+            load: (0..placement.n_sockets())
+                .map(|_| Arc::new(AtomicUsize::new(0)))
+                .collect(),
+        };
+        // Spawn the pool socket-placed: each rank's engine builds on its
+        // own thread (first-touch on the owning socket group). A build
+        // error — the lowest rank's — surfaces here, before any traffic.
+        let mut pool =
+            PersistentPool::try_new_placed(placement, move |rank, _socket| factory.build(rank))?;
         let (tx, rx) = channel::<Pending>();
         let max_batch = opts.engine.max_batch;
         let window = opts.window;
@@ -767,7 +1021,6 @@ impl Server {
         // throughput (seq_per_sec), so re-stamp after the builds above.
         lock_unpoisoned(&metrics).started = Instant::now();
         let dispatcher = std::thread::spawn(move || {
-            let mut pool = PersistentPool::new(workers);
             dispatch_loop(rx, &mut pool, &mut sup, max_batch, window);
             // Drain: every queued job runs before the pool's Stop
             // message, so waiting out every live rank completes all
@@ -782,9 +1035,15 @@ impl Server {
             engine_opts: opts.engine,
             stream_window,
             default_deadline: opts.deadline,
+            placement,
             metrics,
             dispatcher: Some(dispatcher),
         })
+    }
+
+    /// The rank → socket layout the worker pool was spawned with.
+    pub fn placement(&self) -> Placement {
+        self.placement
     }
 
     /// Submit one request (its length is its width) under the
@@ -1391,6 +1650,67 @@ mod tests {
         assert_eq!(rb.output.denoised.len(), 90);
         assert_eq!(m.completed, 2);
         assert_eq!(m.streamed, 1);
+    }
+
+    #[test]
+    fn socket_sharded_serving_is_bit_identical_and_accounted() {
+        let cfg = NetConfig::tiny();
+        let params = AtacWorksNet::init(cfg, 5).pack_params();
+        let opts = BatcherOpts::default()
+            .with_engine(
+                EngineOpts::default()
+                    .with_buckets(BucketSet::new(&[128, 256]).expect("widths"))
+                    .with_max_batch(2)
+                    .with_cache_capacity(2),
+            )
+            .with_window(Duration::from_millis(1))
+            .with_queue_depth(64)
+            .with_workers(4)
+            .with_sockets(2);
+        let server = Server::start(cfg, &params, opts).expect("server");
+        assert_eq!(server.placement().n_sockets(), 2);
+        assert_eq!(server.placement().n_ranks(), 4);
+        // Alternate between the two buckets so both home sockets see
+        // traffic.
+        let reqs: Vec<Vec<f32>> = (0..8)
+            .map(|i| track(100 + (i % 2) * 100, i as u64))
+            .collect();
+        let tickets: Vec<Ticket> = reqs
+            .iter()
+            .map(|r| server.submit(r.clone()).expect("submit"))
+            .collect();
+        for (t, r) in tickets.into_iter().zip(&reqs) {
+            let got = t.wait().expect("response");
+            assert_eq!(
+                got.output,
+                reference(r),
+                "socket sharding must not change the bits"
+            );
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.per_socket.len(), 2);
+        let rows: u64 = m.per_socket.iter().map(|s| s.rows).sum();
+        assert_eq!(rows, 8, "every request row accounted to a socket");
+        let dispatched: u64 = m.per_socket.iter().map(|s| s.routed + s.spilled_in).sum();
+        assert_eq!(dispatched, m.batches, "every batch routed or spilled");
+        let spills_out: u64 = m.per_socket.iter().map(|s| s.spilled_out).sum();
+        let spills_in: u64 = m.per_socket.iter().map(|s| s.spilled_in).sum();
+        assert_eq!(spills_out, spills_in, "spill books must balance");
+        assert!(m.per_socket.iter().any(|s| s.peak_inflight >= 1));
+    }
+
+    #[test]
+    fn flat_pool_keeps_single_socket_metrics() {
+        let server = tiny_server(16, 2, Duration::from_millis(1));
+        assert!(server.placement().is_flat());
+        let t = server.submit(track(80, 33)).expect("submit");
+        t.wait().expect("response");
+        let m = server.shutdown();
+        assert_eq!(m.per_socket.len(), 1);
+        assert_eq!(m.per_socket[0].routed, m.batches);
+        assert_eq!(m.per_socket[0].spilled_in, 0);
+        assert_eq!(m.per_socket[0].spilled_out, 0);
     }
 
     #[test]

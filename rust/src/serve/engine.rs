@@ -85,6 +85,64 @@ impl Default for EngineOpts {
     }
 }
 
+/// Builder-style setters so call sites (and [`crate::config::ServeConfig`])
+/// state only what differs from [`Default`].
+impl EngineOpts {
+    /// Replace the width-bucket vocabulary.
+    pub fn with_buckets(mut self, buckets: BucketSet) -> Self {
+        self.buckets = buckets;
+        self
+    }
+
+    /// Pin every bucket's plans at this batch capacity.
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Kernel-level threads per forward pass.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Forward precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Work partitioning.
+    pub fn with_partition(mut self, partition: Partition) -> Self {
+        self.partition = partition;
+        self
+    }
+
+    /// Kernel backend (ignored when autotune is set).
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Per-bucket autotuned kernel selection.
+    pub fn with_autotune(mut self, autotune: bool) -> Self {
+        self.autotune = autotune;
+        self
+    }
+
+    /// Maximum resident bucket entries.
+    pub fn with_cache_capacity(mut self, cache_capacity: usize) -> Self {
+        self.cache_capacity = cache_capacity;
+        self
+    }
+
+    /// Conv→conv fusion inside each bucket's net plan.
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
+    }
+}
+
 /// One cache entry: a forward-only replica pinned to a bucket (its
 /// net-level plan owns the single activation arena), plus the
 /// persistent per-chunk buffers — input staging `(max_batch, 1,

@@ -54,7 +54,9 @@ pub mod load;
 pub mod net;
 pub mod stream;
 
-pub use batcher::{BatcherOpts, BucketMetrics, Response, ServeMetrics, Server, Ticket};
+pub use batcher::{
+    BatcherOpts, BucketMetrics, Response, ServeMetrics, Server, SocketMetrics, Ticket,
+};
 #[cfg(any(test, feature = "fault"))]
 pub use fault::{FaultAction, FaultPlan, FaultSite};
 pub use bucket::{round_up_to_block, BucketSet};

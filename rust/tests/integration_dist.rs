@@ -11,7 +11,10 @@ use dilconv1d::dist::allreduce::{
     naive_allreduce, ring_allreduce, ring_allreduce_aligned, ring_allreduce_threaded,
     ring_bytes_per_rank,
 };
-use dilconv1d::dist::{BucketPlan, CommModel, Topology, WorkerPool};
+use dilconv1d::dist::{
+    hierarchical_allreduce, hierarchical_allreduce_aligned, BucketPlan, CommModel, Topology,
+    WorkerPool,
+};
 use dilconv1d::machine::Precision;
 use dilconv1d::model::NetConfig;
 use dilconv1d::util::rng::Rng;
@@ -168,6 +171,98 @@ fn bucket_plan_covers_the_atacworks_gradient() {
                 plan.gather(b, &want[rank]),
                 "bucket {b} rank {rank} diverged"
             );
+        }
+    }
+}
+
+/// The topology matrix the CI runs this binary under via
+/// `CONV1D_TOPOLOGY` — exercised here explicitly as well, so a plain
+/// `cargo test` covers every shape without relying on the environment
+/// (env mutation in tests is racy; CI layers the env override on top).
+const TOPOLOGY_MATRIX: [Topology; 3] = [
+    Topology {
+        sockets: 1,
+        cores_per_socket: 8,
+    },
+    Topology {
+        sockets: 2,
+        cores_per_socket: 4,
+    },
+    Topology {
+        sockets: 4,
+        cores_per_socket: 2,
+    },
+];
+
+#[test]
+fn hierarchical_allreduce_is_bit_identical_at_model_gradient_size() {
+    // The NUMA-hierarchical reduction must be indistinguishable — at the
+    // f32 bit level — from the monolithic global ring at the real
+    // gradient length, for every CI-matrix shape, monolithic and
+    // bucket-aligned alike.
+    let net = NetConfig::default();
+    let len = net.param_count();
+    let mut rng = Rng::new(11);
+    let base: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..len).map(|_| rng.normal(0.0, 0.1) as f32).collect())
+        .collect();
+    let mut want = base.clone();
+    ring_allreduce(&mut want);
+    let plan = BucketPlan::new(
+        &net.layer_param_counts(),
+        &net.backward_completion_order(),
+        256 * 1024,
+    );
+    for topo in TOPOLOGY_MATRIX {
+        let placement = topo.placement(base.len());
+        // Monolithic gradient.
+        let mut bufs = base.clone();
+        hierarchical_allreduce(&mut bufs, placement);
+        for (rank, (got, exp)) in bufs.iter().zip(&want).enumerate() {
+            for (i, (g, e)) in got.iter().zip(exp).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    e.to_bits(),
+                    "monolithic: rank {rank} elem {i} diverged under {topo}"
+                );
+            }
+        }
+        // Bucketed gradients on the same global grid.
+        for b in 0..plan.n_buckets() {
+            let mut bufs: Vec<Vec<f32>> = base.iter().map(|full| plan.gather(b, full)).collect();
+            hierarchical_allreduce_aligned(&mut bufs, &plan.bucket(b).regions, len, placement);
+            for (rank, buf) in bufs.iter().enumerate() {
+                assert_eq!(
+                    *buf,
+                    plan.gather(b, &want[rank]),
+                    "bucket {b} rank {rank} diverged under {topo}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn numa_placed_training_matches_flat_at_every_matrix_shape() {
+    // End-to-end: a trainer whose replicas are socket-placed and whose
+    // gradients take the hierarchical path must produce the exact same
+    // parameter bits as the flat single-socket layout — for both the
+    // monolithic and the bucketed+overlapped all-reduce.
+    for overlap in [false, true] {
+        let cfg = dist_cfg(4, overlap, Precision::F32);
+        let mut flat = Trainer::with_topology(cfg.clone(), TOPOLOGY_MATRIX[0]).unwrap();
+        let r_flat = flat.run_epoch(0);
+        assert!(r_flat.steps > 0);
+        for topo in &TOPOLOGY_MATRIX[1..] {
+            let mut placed = Trainer::with_topology(cfg.clone(), *topo).unwrap();
+            let r = placed.run_epoch(0);
+            assert_eq!(r.steps, r_flat.steps);
+            assert_eq!(
+                flat.params(),
+                placed.params(),
+                "placed params diverged from flat under {topo} (overlap={overlap})"
+            );
+            assert_eq!(r.train_loss, r_flat.train_loss);
         }
     }
 }

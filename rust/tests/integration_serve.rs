@@ -219,6 +219,74 @@ fn server_end_to_end_matches_the_sequential_reference() {
 }
 
 #[test]
+fn socket_sharded_serving_matches_flat_and_accounts_every_request() {
+    // NUMA sharding is a placement policy, never a numerics one: the
+    // same traffic through a flat pool and through socket-sharded pools
+    // (2 and 4 emulated sockets) returns bit-identical responses, and
+    // the per-socket routing counters account for every batch and row.
+    let p = params();
+    let reqs: Vec<Vec<f32>> = request_widths()
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| track(w, 4_000 + i as u64))
+        .collect();
+    let mut reference = InferenceEngine::new(
+        net_cfg(),
+        &p,
+        opts(1, Precision::F32, Partition::Batch),
+    )
+    .expect("reference engine");
+    let want: Vec<_> = reqs
+        .iter()
+        .map(|r| reference.infer_one(r).expect("reference"))
+        .collect();
+    for sockets in [1usize, 2, 4] {
+        let server = Server::start(
+            net_cfg(),
+            &p,
+            BatcherOpts::default()
+                .with_engine(opts(4, Precision::F32, Partition::Batch))
+                .with_window(Duration::from_millis(2))
+                .with_queue_depth(64)
+                .with_workers(4)
+                .with_sockets(sockets),
+        )
+        .expect("server");
+        assert_eq!(server.placement().n_sockets(), sockets);
+        assert_eq!(server.placement().is_flat(), sockets == 1);
+        let tickets: Vec<_> = reqs
+            .iter()
+            .map(|r| server.submit(r.clone()).expect("submit"))
+            .collect();
+        for (i, (t, w)) in tickets.into_iter().zip(&want).enumerate() {
+            let resp = t.wait().expect("response");
+            assert_eq!(
+                resp.output, *w,
+                "sockets={sockets}: request {i} diverged from the sequential reference"
+            );
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, reqs.len() as u64);
+        assert_eq!(m.rejected + m.failed, 0);
+        // Routing accounting: every row and every batch lands on exactly
+        // one socket, and spills balance (a batch spilled out of its home
+        // socket is spilled into exactly one other).
+        assert_eq!(m.per_socket.len(), sockets);
+        let rows: u64 = m.per_socket.iter().map(|s| s.rows).sum();
+        assert_eq!(rows, reqs.len() as u64);
+        let dispatched: u64 = m.per_socket.iter().map(|s| s.routed + s.spilled_in).sum();
+        assert_eq!(dispatched, m.batches);
+        let spilled_out: u64 = m.per_socket.iter().map(|s| s.spilled_out).sum();
+        let spilled_in: u64 = m.per_socket.iter().map(|s| s.spilled_in).sum();
+        assert_eq!(spilled_out, spilled_in);
+        assert!(
+            m.per_socket.iter().any(|s| s.peak_inflight >= 1),
+            "sockets={sockets}: no socket ever saw an in-flight batch"
+        );
+    }
+}
+
+#[test]
 fn admission_control_backpressure_and_recovery() {
     // Park requests behind a long window so the in-flight budget fills
     // deterministically, assert QueueFull, then confirm the accepted
